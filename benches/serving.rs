@@ -1,0 +1,51 @@
+//! Multi-stream serving throughput (the end-to-end bench of the
+//! coordinator: worker pool + scheduler + PJRT execution).
+//!
+//! Run: `cargo bench --bench serving`
+
+use std::sync::Arc;
+
+use soi::coordinator::Server;
+use soi::dsp::{frames, siggen};
+use soi::runtime::{CompiledVariant, Runtime};
+use soi::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("stmc").exists() {
+        eprintln!("SKIP serving: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Arc::new(Runtime::cpu()?);
+    let feat = 16;
+    let fps = siggen::FS / feat as f64;
+    let n_streams = 8;
+    let n_frames = 300;
+    let mut rng = Rng::new(11);
+    let streams: Vec<Vec<Vec<f32>>> = (0..n_streams)
+        .map(|_| {
+            let (noisy, _) = siggen::denoise_pair(&mut rng, feat * n_frames, siggen::FS);
+            frames(&noisy, feat).0
+        })
+        .collect();
+
+    println!("# serving — {n_streams} streams x {n_frames} frames");
+    for workers in [1usize, 2, 4] {
+        for name in ["stmc", "scc2", "sscc5"] {
+            if !root.join(name).exists() {
+                continue;
+            }
+            let cv = Arc::new(CompiledVariant::load(rt.clone(), &root.join(name))?);
+            let server = Server::new(cv, workers);
+            let report = server.run(&streams)?;
+            println!(
+                "serve[{name} w={workers}]  {:>9.0} frames/s  {:>6.1}x realtime  p99 {:>9}  retain {:>5.1}%",
+                report.throughput_fps(),
+                report.throughput_fps() / fps,
+                soi::util::bench::fmt_ns(report.metrics.arrival_latency.p99() as f64),
+                report.metrics.retain_pct(),
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Per-frame step latency across SOI variants (the hot path behind the
+//! paper's Table 6 / Fig. 8 timing columns).  criterion is unavailable
+//! offline; this uses the in-repo harness (`util::bench`) with
+//! `harness = false`.
+//!
+//! Run: `cargo bench --bench step_latency`
+
+use std::sync::Arc;
+
+use soi::dsp::{frames, siggen};
+use soi::runtime::{CompiledVariant, Runtime};
+use soi::util::bench::bench;
+use soi::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("stmc").exists() {
+        eprintln!("SKIP step_latency: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Arc::new(Runtime::cpu()?);
+    let feat = 16;
+    let mut rng = Rng::new(3);
+    let (noisy, _) = siggen::denoise_pair(&mut rng, feat * 64, siggen::FS);
+    let (cols, _) = frames(&noisy, feat);
+
+    println!("# step_latency — single-stream per-frame inference");
+    for name in ["stmc", "scc1", "scc2", "scc5", "scc7", "scc2_5", "sscc5"] {
+        let dir = root.join(name);
+        if !dir.exists() {
+            continue;
+        }
+        let cv = Arc::new(CompiledVariant::load(rt.clone(), &dir)?);
+        let dw = Arc::new(cv.device_weights()?);
+        let mut sess = soi::coordinator::StreamSession::new(0, cv.clone(), dw.clone());
+        let mut i = 0usize;
+        let r = bench(&format!("step[{name}]"), || {
+            sess.on_frame(&cols[i % cols.len()]).unwrap();
+            i += 1;
+        });
+        println!("{}  ({:.0} frames/s)", r.report(), r.throughput_per_sec());
+
+        if cv.manifest.has_fp_split() {
+            let mut sess2 = soi::coordinator::StreamSession::new(1, cv, dw);
+            let mut j = 0usize;
+            let r2 = bench(&format!("step[{name}] rest-only (FP overlap)"), || {
+                sess2.idle().unwrap();
+                sess2.on_frame(&cols[j % cols.len()]).unwrap();
+                j += 1;
+            });
+            println!(
+                "{}  (arrival work only: p50 {})",
+                r2.report(),
+                soi::util::bench::fmt_ns(sess2.metrics.arrival_latency.p50() as f64)
+            );
+        }
+    }
+    Ok(())
+}

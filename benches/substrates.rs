@@ -1,0 +1,64 @@
+//! Micro-benchmarks of the in-repo substrates: resamplers, synthetic
+//! signal generators, SI-SNR, JSON parsing, complexity engine, pruning —
+//! guards against the coordinator's support code becoming the bottleneck
+//! (EXPERIMENTS.md §Perf budget: L3 support < 5% of frame budget).
+//!
+//! Run: `cargo bench --bench substrates`
+
+use soi::complexity::unet;
+use soi::dsp::{metrics, resample, siggen};
+use soi::util::bench::{bench, black_box};
+use soi::util::rng::Rng;
+
+fn main() {
+    println!("# substrates");
+    let mut rng = Rng::new(1);
+    let wave = siggen::speech(&mut rng, 16_000, siggen::FS);
+
+    for m in resample::Method::ALL {
+        let r = bench(&format!("resample roundtrip 1s [{}]", m.name()), || {
+            black_box(resample::roundtrip(&wave, m));
+        });
+        println!("{}", r.report());
+    }
+
+    let est = wave.clone();
+    let r = bench("si_snr 1s", || {
+        black_box(metrics::si_snr(&est, &wave));
+    });
+    println!("{}", r.report());
+
+    let r = bench("siggen speech 1s", || {
+        let mut rng = Rng::new(2);
+        black_box(siggen::speech(&mut rng, 16_000, siggen::FS));
+    });
+    println!("{}", r.report());
+
+    let cfg = unet::default_config(vec![2, 5], Some(5));
+    let r = bench("complexity network build+sum", || {
+        let n = unet::network(&cfg, 256, 1000.0);
+        black_box(n.soi_macs_per_frame());
+    });
+    println!("{}", r.report());
+
+    let manifest = std::fs::read_to_string("artifacts/stmc/manifest.json").ok();
+    if let Some(text) = manifest {
+        let r = bench("json parse manifest", || {
+            black_box(soi::util::json::parse(&text).unwrap());
+        });
+        println!("{}", r.report());
+    }
+
+    let mut rng = Rng::new(3);
+    let weights = soi::runtime::Weights {
+        tensors: vec![soi::util::tensor::Tensor::new(
+            vec![32_000],
+            (0..32_000).map(|_| rng.normal() as f32).collect(),
+        )],
+    };
+    let r = bench("prune 1k of 32k weights", || {
+        let mut w = weights.clone();
+        black_box(soi::pruning::prune_global_magnitude(&mut w, 1000));
+    });
+    println!("{}", r.report());
+}

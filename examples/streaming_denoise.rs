@@ -1,0 +1,84 @@
+//! End-to-end serving driver (DESIGN.md §deliverable (b)/E2E): serve many
+//! concurrent synthetic-speech streams through the full stack — rust
+//! coordinator → PJRT CPU → AOT'd JAX/Pallas U-Net — and report quality,
+//! latency percentiles and throughput for STMC vs SOI variants.
+//!
+//! This is the run recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example streaming_denoise -- [streams] [frames]`
+
+use std::sync::Arc;
+
+use soi::coordinator::Server;
+use soi::dsp::{frames, metrics, siggen};
+use soi::experiments::eval::mean_std;
+use soi::runtime::{CompiledVariant, Runtime};
+use soi::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_streams: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let n_frames: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(750);
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+
+    let rt = Arc::new(Runtime::cpu()?);
+    let feat = 16;
+    let fps = siggen::FS / feat as f64;
+
+    // Shared synthetic workload: n_streams utterances.
+    let mut rng = Rng::new(1234);
+    let mut streams = Vec::new();
+    let mut cleans = Vec::new();
+    let mut noisys = Vec::new();
+    for _ in 0..n_streams {
+        let (noisy, clean) = siggen::denoise_pair(&mut rng, feat * n_frames, siggen::FS);
+        let (cols, _) = frames(&noisy, feat);
+        streams.push(cols);
+        cleans.push(clean);
+        noisys.push(noisy);
+    }
+    println!(
+        "E2E serving: {n_streams} streams x {n_frames} frames ({:.1} s audio each), {workers} workers\n",
+        n_frames as f64 / fps
+    );
+    println!(
+        "{:<8} {:>9} {:>9} {:>9} {:>8} {:>10} {:>9} {:>8}",
+        "variant", "SI-SNRi", "p50 µs", "p99 µs", "retain%", "frames/s", "xRT", "hidden%"
+    );
+
+    for name in ["stmc", "scc2", "scc5", "scc2_5", "sscc5"] {
+        let dir = std::path::Path::new("artifacts").join(name);
+        if !dir.exists() {
+            continue;
+        }
+        let cv = Arc::new(CompiledVariant::load(rt.clone(), &dir)?);
+        let server = Server::new(cv, workers);
+        let report = server.run(&streams)?;
+
+        let mut imps = Vec::new();
+        for (sid, outs) in &report.outputs {
+            let est: Vec<f32> = outs.iter().flatten().copied().collect();
+            let n = est.len();
+            imps.push(metrics::si_snr_improvement(
+                &noisys[*sid as usize][..n],
+                &est,
+                &cleans[*sid as usize][..n],
+            ));
+        }
+        let (snr, _) = mean_std(&imps);
+        println!(
+            "{:<8} {:>9.2} {:>9.1} {:>9.1} {:>8.1} {:>10.0} {:>9.1} {:>8.1}",
+            name,
+            snr,
+            report.metrics.arrival_latency.p50() as f64 / 1e3,
+            report.metrics.arrival_latency.p99() as f64 / 1e3,
+            report.metrics.retain_pct(),
+            report.throughput_fps(),
+            report.throughput_fps() / fps,
+            100.0 * report.metrics.hidden_fraction(),
+        );
+    }
+    println!("\nSOI rows must keep ~STMC quality at materially lower retain% and");
+    println!("higher throughput; the FP row (sscc5) additionally hides work in idle gaps.");
+    Ok(())
+}

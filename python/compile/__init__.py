@@ -1,0 +1,5 @@
+"""Build-time compile package: L1 kernels, L2 models, trainer, AOT pipeline.
+
+Nothing in here runs on the request path — `make artifacts` invokes it once
+and the rust coordinator consumes the emitted HLO text + manifests.
+"""

@@ -1,0 +1,409 @@
+"""AOT pipeline: train each SOI variant and lower it to HLO-text artifacts.
+
+Usage (from python/):
+
+    python -m compile.aot --out-dir ../artifacts --variants core
+    python -m compile.aot --out-dir ../artifacts --variants all
+    python -m compile.aot --out-dir ../artifacts --variants stmc,scc5,sscc5
+
+For every variant this emits ``artifacts/<name>/``:
+
+    manifest.json     — config, state/param specs, phase → executable map,
+                        training metrics, per-layer MAC counts
+    weights.bin       — trained parameters, concatenated little-endian f32
+                        in manifest param order
+    step_p<k>.hlo.txt — the streaming step for schedule phase k
+                        (deduped: phases with identical graphs share a file)
+    pre_p<k>.hlo.txt / rest_p<k>.hlo.txt — the FP precompute split
+    offline.hlo.txt   — full-sequence network (T=OFFLINE_T) for batch eval
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts are cached: a variant is skipped when its manifest exists and
+``--force`` is not given.  Training effort is tunable via SOI_TRAIN_STEPS
+(default 400) so CI can run with SOI_TRAIN_STEPS=30.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+OFFLINE_T = 256  # frames per offline-artifact invocation
+
+# Bumped whenever the lowering pipeline changes; cached variants whose
+# manifest carries an older stamp are re-lowered (weights are reused).
+LOWERING_VERSION = 4
+
+# Default model scale for all speech-separation variants (tiny channels:
+# the paper's 14-hour P40 runs are substituted by minutes of CPU Adam —
+# DESIGN.md §5).
+FEAT = 16
+CHANNELS = (12, 16, 20, 24, 28, 32, 40)
+
+
+def _cfg(**kw) -> M.UNetConfig:
+    return M.UNetConfig(feat=FEAT, channels=CHANNELS, **kw)
+
+
+def variant_registry() -> Dict[str, M.UNetConfig]:
+    """Every named variant used by the experiment harness (paper rows)."""
+    v: Dict[str, M.UNetConfig] = {}
+    v["stmc"] = _cfg()
+    # Predictive N baselines (Tables 1/2/5, App. B)
+    for n in (1, 2, 3, 4):
+        v[f"pred{n}"] = _cfg(shift_pos=1, shift=n)
+    # Strided-predictive (App. B): S-CC 4 + whole-input shift N
+    for n in (1, 2, 3, 4):
+        v[f"spred{n}"] = _cfg(scc=(4,), shift_pos=1, shift=n)
+    # PP, single S-CC (Table 1 / 6 / Fig 4)
+    for p in range(1, 8):
+        v[f"scc{p}"] = _cfg(scc=(p,))
+    # PP, two S-CC pairs (Table 1 / Fig 4)
+    for pq in [(1, 3), (1, 6), (2, 5), (3, 6), (4, 6), (5, 7), (6, 7)]:
+        v[f"scc{pq[0]}_{pq[1]}"] = _cfg(scc=pq)
+    # FP: SS-CC (Table 2 / Fig 5)
+    for p in (2, 5, 7):
+        v[f"sscc{p}"] = _cfg(scc=(p,), shift_pos=p)
+    # FP hybrids "S-CC p s" (Table 2)
+    for ps in [(1, 3), (1, 6), (2, 5), (3, 6), (4, 6), (5, 6), (6, 7)]:
+        v[f"fp{ps[0]}_{ps[1]}"] = _cfg(scc=(ps[0],), shift_pos=ps[1])
+    # Interpolation variants (Table 7 / Fig 9) — offline-only evaluation
+    for p in (2, 5):
+        for kind in ("nearest", "linear", "cubic"):
+            v[f"scc{p}_i{kind}"] = _cfg(scc=(p,), interp=kind)
+    # Transposed-conv extrapolation (Tables 8/9, App. E)
+    for p in (2, 5):
+        v[f"scc{p}_tconv"] = _cfg(scc=(p,), extrap="tconv")
+    v["scc2_5_tconv"] = _cfg(scc=(2, 5), extrap=("duplicate", "tconv"))
+    for p in (2, 5):
+        v[f"sscc{p}_tconv"] = _cfg(scc=(p,), shift_pos=p, extrap="tconv")
+    return v
+
+
+CORE_VARIANTS = [
+    "stmc", "pred1", "pred2",
+    "scc1", "scc2", "scc5", "scc7",
+    "scc2_5", "scc1_6",
+    "sscc2", "sscc5", "sscc7",
+    "fp1_3", "fp2_5",
+]
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(shapes: List[Tuple[int, ...]]):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+
+
+def state_total(cfg: M.UNetConfig) -> int:
+    return sum(int(np.prod(s.shape)) for s in M.state_specs(cfg))
+
+
+def lower_step(cfg: M.UNetConfig, phase: int, part: str) -> str:
+    """Lower one streaming step executable to HLO text.
+
+    All partial states travel as ONE flat f32 vector (packed in manifest
+    state-spec order): the rust hot path then uploads a single state
+    buffer per inference instead of ~20, which removes the dominant
+    per-call PJRT overhead (EXPERIMENTS.md §Perf, iteration 1).
+
+    Signatures (all f32, S = packed state length):
+      part="all"/"rest": (frame (feat,1), states (S,), *params) -> (out, states')
+      part="pre":        (states (S,), *params)                 -> (states',)
+    """
+    sspecs = M.state_specs(cfg)
+    pnames = M.param_names(cfg)
+    pshapes = [tuple(v.shape) for v in M.init_params(cfg).values()]
+    total = state_total(cfg)
+
+    def unpack(vec):
+        states, off = {}, 0
+        for s in sspecs:
+            n = int(np.prod(s.shape))
+            states[s.name] = vec[off : off + n].reshape(s.shape)
+            off += n
+        return states
+
+    def pack(states):
+        return jnp.concatenate([states[s.name].reshape(-1) for s in sspecs])
+
+    def fn(*args):
+        i = 0
+        if part != "pre":
+            frame = args[0]
+            i = 1
+        else:
+            frame = None
+        states = unpack(args[i])
+        params = {n: args[i + 1 + j] for j, n in enumerate(pnames)}
+        out, new_states = M.streaming_step(
+            cfg, params, phase, frame, states, use_pallas=True, part=part
+        )
+        if part == "pre":
+            return (pack(new_states),)
+        return (out, pack(new_states))
+
+    arg_specs = []
+    if part != "pre":
+        arg_specs.append(jax.ShapeDtypeStruct((cfg.feat, 1), jnp.float32))
+    arg_specs.append(jax.ShapeDtypeStruct((total,), jnp.float32))
+    arg_specs += _specs(pshapes)
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_offline(cfg: M.UNetConfig, t: int = OFFLINE_T) -> str:
+    """Lower the full-sequence network: (x (feat,T), *params) -> (out,)."""
+    pnames = M.param_names(cfg)
+    pshapes = [tuple(v.shape) for v in M.init_params(cfg).values()]
+
+    def fn(x, *pvals):
+        params = dict(zip(pnames, pvals))
+        return (M.offline_forward(cfg, params, x, use_pallas=False),)
+
+    arg_specs = [jax.ShapeDtypeStruct((cfg.feat, t), jnp.float32)] + _specs(pshapes)
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*arg_specs))
+
+
+# ---------------------------------------------------------------------------
+# MAC accounting (cross-checked against rust/src/complexity in cargo tests)
+# ---------------------------------------------------------------------------
+
+
+def layer_macs(cfg: M.UNetConfig) -> List[dict]:
+    """Per-layer MACs per *output frame* in that layer's own rate domain,
+    plus the layer's rate divisor — enough for the rust engine cross-check."""
+    out = []
+    for l in range(1, cfg.depth + 1):
+        out.append(
+            {
+                "name": f"enc{l}",
+                "macs": cfg.enc_in_ch(l) * cfg.enc_out_ch(l) * cfg.kernel,
+                "rate_div": cfg.r_out(l),
+            }
+        )
+    for l in range(cfg.depth, 0, -1):
+        out.append(
+            {
+                "name": f"dec{l}",
+                "macs": cfg.dec_in_ch(l) * cfg.dec_out_ch(l) * cfg.kernel,
+                "rate_div": cfg.r_out(l),
+            }
+        )
+    for p in cfg.scc:
+        if cfg.extrap_of(p) == "tconv":
+            out.append(
+                {
+                    "name": f"up{p}",
+                    "macs": cfg.dec_out_ch(p) * cfg.dec_out_ch(p) * 2,
+                    "rate_div": cfg.r_out(p),
+                }
+            )
+    out.append({"name": "head", "macs": cfg.dec_out_ch(1) * cfg.feat, "rate_div": 1})
+    return out
+
+
+def macs_per_frame(cfg: M.UNetConfig) -> float:
+    """Average MACs per input frame under the SOI schedule."""
+    return sum(e["macs"] / e["rate_div"] for e in layer_macs(cfg))
+
+
+def precomputed_fraction(cfg: M.UNetConfig) -> float:
+    """The paper's "Precomputed %" (as a fraction): the share of the
+    *full-rate* network cost that depends only on past data — Table 2's
+    published rows equal h(shift_pos) under exactly this definition."""
+    if cfg.shift_pos is None:
+        return 0.0
+    d_enc, d_dec = cfg.delayed_layers()
+    total = pre = 0.0
+    for e in layer_macs(cfg):
+        cost = e["macs"]
+        total += cost
+        name = e["name"]
+        delayed = False
+        if name.startswith("enc"):
+            delayed = int(name[3:]) in d_enc
+        elif name.startswith("dec"):
+            delayed = int(name[3:]) in d_dec
+        elif name.startswith("up"):
+            delayed = int(name[2:]) in d_dec
+        elif name == "head":
+            delayed = cfg.shift_pos == 1
+        pre += cost if delayed else 0.0
+    return pre / total
+
+
+# ---------------------------------------------------------------------------
+# Artifact bundle
+# ---------------------------------------------------------------------------
+
+
+def build_variant(
+    name: str,
+    cfg: M.UNetConfig,
+    out_dir: str,
+    steps: int,
+    force: bool = False,
+    progress=print,
+) -> dict:
+    vdir = os.path.join(out_dir, name)
+    man_path = os.path.join(vdir, "manifest.json")
+    wpath = os.path.join(vdir, "weights.bin")
+    old_manifest = None
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            old_manifest = json.load(f)
+        if old_manifest.get("lowering_version") == LOWERING_VERSION and not force:
+            progress(f"[aot] {name}: cached, skipping")
+            return old_manifest
+    os.makedirs(vdir, exist_ok=True)
+
+    t0 = time.time()
+    pnames = M.param_names(cfg)
+    reuse = old_manifest is not None and os.path.exists(wpath) and not force
+    if reuse:
+        # weights already trained under an older lowering — reuse them
+        progress(f"[aot] {name}: reusing trained weights, re-lowering")
+        raw = np.fromfile(wpath, dtype="<f4")
+        params, off = {}, 0
+        for n, ref_v in M.init_params(cfg).items():
+            k = int(np.prod(ref_v.shape))
+            params[n] = jnp.asarray(raw[off : off + k].reshape(ref_v.shape))
+            off += k
+        assert off == raw.size, f"{name}: weights.bin size mismatch"
+        metrics = old_manifest.get("train_metrics", {})
+    else:
+        progress(f"[aot] {name}: training ({steps} steps) ...")
+        params, metrics = T.train_variant(cfg, steps=steps, progress=progress)
+        with open(wpath, "wb") as f:
+            for n in pnames:
+                f.write(np.asarray(params[n], np.float32).tobytes())
+
+    # executables
+    executables = {}
+    streamable = cfg.interp is None
+    if streamable:
+        seen: Dict[tuple, str] = {}
+        for phase in range(cfg.period):
+            parts = ["all"] if cfg.shift_pos is None else ["all", "pre", "rest"]
+            for part in parts:
+                sig = M.phase_signature(cfg, phase, part)
+                key = {"all": "step", "pre": "pre", "rest": "rest"}[part]
+                if sig in seen:
+                    executables[f"{key}_p{phase}"] = seen[sig]
+                    continue
+                fname = f"{key}_p{phase}.hlo.txt"
+                progress(f"[aot] {name}: lowering {fname}")
+                hlo = lower_step(cfg, phase, part)
+                with open(os.path.join(vdir, fname), "w") as f:
+                    f.write(hlo)
+                seen[sig] = fname
+                executables[f"{key}_p{phase}"] = fname
+    progress(f"[aot] {name}: lowering offline.hlo.txt")
+    with open(os.path.join(vdir, "offline.hlo.txt"), "w") as f:
+        f.write(lower_offline(cfg))
+    executables["offline"] = "offline.hlo.txt"
+
+    manifest = {
+        "name": name,
+        "lowering_version": LOWERING_VERSION,
+        "config": {
+            "feat": cfg.feat,
+            "channels": list(cfg.channels),
+            "kernel": cfg.kernel,
+            "scc": list(cfg.scc),
+            "shift_pos": cfg.shift_pos,
+            "shift": cfg.shift,
+            "extrap": list(cfg.extrap),
+            "interp": cfg.interp,
+        },
+        "period": cfg.period,
+        "streamable": streamable,
+        "offline_t": OFFLINE_T,
+        "packed_states": state_total(cfg),
+        "states": [{"name": s.name, "shape": list(s.shape)} for s in M.state_specs(cfg)],
+        "params": [
+            {"name": n, "shape": list(np.asarray(params[n]).shape)} for n in pnames
+        ],
+        "executables": executables,
+        "layer_macs": layer_macs(cfg),
+        "macs_per_frame": macs_per_frame(cfg),
+        "precomputed_fraction": precomputed_fraction(cfg),
+        "param_count": int(M.param_count(cfg)),
+        "state_bytes": int(M.state_bytes(cfg)),
+        "train_metrics": metrics,
+        "build_seconds": round(time.time() - t0, 1),
+    }
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    progress(f"[aot] {name}: done in {manifest['build_seconds']}s "
+             f"(SI-SNRi {metrics['si_snri']:+.2f} dB)")
+    return manifest
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="core",
+        help="'core', 'all', or comma-separated variant names",
+    )
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("SOI_TRAIN_STEPS", "500")))
+    args = ap.parse_args(argv)
+
+    reg = variant_registry()
+    if args.variants == "all":
+        names = list(reg)
+    elif args.variants == "core":
+        names = CORE_VARIANTS
+    else:
+        names = [n.strip() for n in args.variants.split(",") if n.strip()]
+    unknown = [n for n in names if n not in reg]
+    if unknown:
+        sys.exit(f"unknown variants: {unknown}; known: {sorted(reg)}")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+    for i, n in enumerate(names):
+        print(f"[aot] ===== {n} ({i + 1}/{len(names)}) =====", flush=True)
+        build_variant(n, reg[n], args.out_dir, steps=args.steps, force=args.force)
+    # top-level index
+    index = {"variants": names, "registry": sorted(reg)}
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] all done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

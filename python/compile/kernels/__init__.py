@@ -1,0 +1,3 @@
+"""L1 kernels: Pallas implementations + pure-jnp reference oracles."""
+from . import ref  # noqa: F401
+from .stmc_conv import conv_full, conv_step, dense, vmem_footprint_bytes  # noqa: F401

@@ -1,0 +1,163 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything in this module is the *ground truth* the Pallas kernels and the
+streaming (STMC/SOI) inference patterns are tested against.  The layout
+convention throughout the compile package is channels-first time series:
+
+    x : (C_in, T)      -- feature sequence, time is the last axis
+    w : (C_out, C_in, K) -- 1-D convolution kernel over the time axis
+    b : (C_out,)
+
+All convolutions are *causal*: the output at time ``t`` depends only on
+inputs at times ``<= t`` (left zero-padding of ``K - 1``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def causal_pad(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Left-pad the time axis with ``k - 1`` zeros (causal conv padding)."""
+    if k <= 1:
+        return x
+    return jnp.pad(x, ((0, 0), (k - 1, 0)))
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Causal 1-D convolution, stride 1.
+
+    Args:
+      x: (C_in, T) input sequence.
+      w: (C_out, C_in, K) kernel.
+      b: (C_out,) bias.
+
+    Returns:
+      (C_out, T) output; ``out[:, t]`` depends on ``x[:, t-K+1 : t+1]``.
+    """
+    c_out, c_in, k = w.shape
+    xp = causal_pad(x, k)  # (C_in, T + K - 1)
+    t = x.shape[1]
+    # im2col: cols[ci, j, t] = xp[ci, t + j]
+    cols = jnp.stack([xp[:, j : j + t] for j in range(k)], axis=1)  # (C_in, K, T)
+    w_flat = w.reshape(c_out, c_in * k)
+    col_flat = cols.reshape(c_in * k, t)
+    return w_flat @ col_flat + b[:, None]
+
+
+def strided_causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Causal conv with stride 2 over time.
+
+    Keeps the *even*-time outputs of the stride-1 causal conv:
+    ``out[:, s] = conv(x)[:, 2 s]`` — the window ends at input time ``2 s``,
+    matching the SOI streaming schedule where the compression layer fires
+    on even inferences.
+    """
+    return causal_conv1d(x, w, b)[:, ::2]
+
+
+def duplicate_upsample(y: jnp.ndarray, t_out: int, shift: int = 0) -> jnp.ndarray:
+    """Duplication extrapolation (the paper's S-CC second stage).
+
+    ``up[:, t] = y[:, (t - shift) // 2]`` with zeros for negative indices.
+
+    * ``shift=0`` — partially-predictive (PP) alignment: the value computed
+      at even time ``2 s`` is used at times ``2 s`` and ``2 s + 1``
+      (eq. 5 of the paper; note X'_{2s} == X'_{2s+1}).
+    * ``shift=1`` — fully-predictive (FP) alignment: the value computed at
+      ``2 s`` is used at times ``2 s + 1`` and ``2 s + 2`` (eq. 7); every
+      use is a *pure prediction* from past data.
+    """
+    t_idx = jnp.arange(t_out)
+    src = (t_idx - shift) // 2
+    valid = src >= 0
+    src_c = jnp.clip(src, 0, y.shape[1] - 1)
+    up = y[:, src_c]
+    return jnp.where(valid[None, :], up, 0.0)
+
+
+def transposed_conv_upsample(
+    y: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, t_out: int, shift: int = 0
+) -> jnp.ndarray:
+    """Learned extrapolation: stride-2 transposed conv over time (App. E).
+
+    ``w`` has shape (C_out, C_in, 2): two output phases per input frame.
+    Phase 0 lands on even output times, phase 1 on odd ones, then the whole
+    signal is shifted right by ``shift`` like :func:`duplicate_upsample`.
+    """
+    c_out = w.shape[0]
+    s = y.shape[1]
+    ph0 = w[:, :, 0] @ y + b[:, None]  # (C_out, S) -> even slots
+    ph1 = w[:, :, 1] @ y + b[:, None]  # -> odd slots
+    up = jnp.zeros((c_out, 2 * s), dtype=y.dtype)
+    up = up.at[:, 0::2].set(ph0)
+    up = up.at[:, 1::2].set(ph1)
+    if shift > 0:
+        up = jnp.pad(up, ((0, 0), (shift, 0)))[:, : 2 * s]
+    return up[:, :t_out]
+
+
+def interp_upsample(y: jnp.ndarray, t_out: int, kind: str = "nearest") -> jnp.ndarray:
+    """Interpolation variants of the reconstruction stage (Appendix D).
+
+    Unlike extrapolation these *wait* for the next compressed frame, so the
+    odd-time output interpolates between ``y[s]`` and ``y[s+1]`` — better
+    quality, one extra frame of latency.
+
+    kinds: ``nearest`` (== duplication of the *later* frame at odd times),
+    ``linear`` (paper calls the 1-D case "bilinear"), ``cubic``
+    (Catmull-Rom, the 1-D analogue of bicubic).
+    """
+    t_idx = jnp.arange(t_out)
+    s0 = t_idx // 2
+    frac = (t_idx % 2).astype(y.dtype) * 0.5
+    last = y.shape[1] - 1
+
+    def tap(i):
+        return y[:, jnp.clip(i, 0, last)]
+
+    if kind == "nearest":
+        # Round half up: odd times take the next frame.
+        return tap(s0 + (t_idx % 2))
+    if kind == "linear":
+        return tap(s0) * (1.0 - frac)[None, :] + tap(s0 + 1) * frac[None, :]
+    if kind == "cubic":
+        # Catmull-Rom with u = frac
+        p0, p1, p2, p3 = tap(s0 - 1), tap(s0), tap(s0 + 1), tap(s0 + 2)
+        u = frac[None, :]
+        return 0.5 * (
+            (2.0 * p1)
+            + (-p0 + p2) * u
+            + (2.0 * p0 - 5.0 * p1 + 4.0 * p2 - p3) * u**2
+            + (-p0 + 3.0 * p1 - 3.0 * p2 + p3) * u**3
+        )
+    raise ValueError(f"unknown interpolation kind: {kind}")
+
+
+# ----------------------------------------------------------------------------
+# Streaming (single-step) references — the STMC state-carry contract.
+# ----------------------------------------------------------------------------
+
+
+def conv_step(x_t: jnp.ndarray, state: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """One STMC streaming step of :func:`causal_conv1d`.
+
+    Args:
+      x_t:   (C_in, 1) the newly arrived frame.
+      state: (C_in, K-1) the previous K-1 input frames (zeros initially).
+      w, b:  kernel and bias.
+
+    Returns:
+      (out, new_state): out (C_out, 1); new_state (C_in, K-1) — the window
+      shifted by one.  Feeding a sequence frame-by-frame reproduces
+      ``causal_conv1d`` exactly (STMC's core guarantee).
+    """
+    window = jnp.concatenate([state, x_t], axis=1)  # (C_in, K)
+    c_out, c_in, k = w.shape
+    out = w.reshape(c_out, c_in * k) @ window.reshape(c_in * k, 1) + b[:, None]
+    return out, window[:, 1:]
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Row-major dense layer: x (N,) @ w (M, N) -> (M,)."""
+    return w @ x + b

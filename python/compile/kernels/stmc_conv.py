@@ -1,0 +1,183 @@
+"""L1 Pallas kernels: streaming (STMC) and offline causal 1-D convolution.
+
+Hardware adaptation (DESIGN.md §4): the paper targets MCU/CPU streaming, so
+the TPU mapping is about making the conv MXU-shaped rather than porting CUDA
+concepts.  Both kernels phrase the convolution as a single matmul
+
+    out = W_flat (C_out × C_in·K)  @  im2col(window) (C_in·K × T_tile)
+
+which is exactly the systolic-array-friendly contraction.  Weights are small
+(≤ a few hundred KB for every variant in this repo) and live in VMEM for the
+whole kernel; the input window is the streamed HBM→VMEM operand, tiled along
+time by ``BlockSpec``-style dynamic slices.
+
+All kernels are built with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers the kernel body to plain HLO
+that the rust runtime executes.  Real-TPU numbers are estimated analytically
+(EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Time-tile for the offline kernel.  128 matches the MXU lane width; the
+# im2col block for C_in=64, K=3 is 64·3×128 f32 = 96 KB — comfortably VMEM
+# resident together with the weight tile.
+DEFAULT_TILE_T = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ----------------------------------------------------------------------------
+# Streaming step kernel (the request-path hot spot)
+# ----------------------------------------------------------------------------
+
+
+def _conv_step_kernel(win_ref, w_ref, b_ref, o_ref):
+    """out[b, :] = W_flat @ win[b, :] + b  for every stream in the batch.
+
+    win_ref: (B, C_in·K)  — per-stream conv windows (state ‖ new frame)
+    w_ref:   (C_out, C_in·K)
+    b_ref:   (C_out,)
+    o_ref:   (B, C_out)
+    """
+    win = win_ref[...]
+    w = w_ref[...]
+    o_ref[...] = (
+        jax.lax.dot_general(
+            win,
+            w,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b_ref[...][None, :]
+    )
+
+
+def conv_step(window: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """One streaming conv step over a batch of prepared windows.
+
+    Args:
+      window: (B, C_in, K) — per-stream window: previous ``K-1`` input
+        frames (the STMC state) concatenated with the new frame.
+      w: (C_out, C_in, K) kernel.
+      b: (C_out,) bias.
+
+    Returns:
+      (B, C_out) — one output frame per stream.
+    """
+    bsz, c_in, k = window.shape
+    c_out = w.shape[0]
+    win_flat = window.reshape(bsz, c_in * k)
+    w_flat = w.reshape(c_out, c_in * k)
+    return pl.pallas_call(
+        _conv_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((bsz, c_out), window.dtype),
+        interpret=True,
+    )(win_flat, w_flat, b)
+
+
+# ----------------------------------------------------------------------------
+# Offline (full-sequence) kernel — used by the `offline` artifacts and as
+# the training-time forward pass, so train == serve numerics.
+# ----------------------------------------------------------------------------
+
+
+def _conv_full_kernel(xp_ref, w_ref, b_ref, o_ref, *, k: int, tile_t: int):
+    """Grid over time tiles; each program computes a (C_out, tile_t) block.
+
+    xp_ref: (C_in, T_pad + K - 1) causally padded input (full, HBM-resident;
+            each program slices its overlapping window — overlap of K-1
+            columns is why we index manually instead of a disjoint BlockSpec)
+    w_ref:  (C_out, C_in·K) flattened weights (VMEM-resident)
+    o_ref:  (C_out, T_pad)
+    """
+    i = pl.program_id(0)
+    xw = xp_ref[:, pl.dslice(i * tile_t, tile_t + k - 1)]  # (C_in, tile_t + K - 1)
+    # im2col with the (ci, j) -> ci*K + j ordering that matches w.reshape().
+    cols = jnp.stack([xw[:, j : j + tile_t] for j in range(k)], axis=1)
+    cols = cols.reshape(xw.shape[0] * k, tile_t)
+    out = (
+        jax.lax.dot_general(
+            w_ref[...],
+            cols,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b_ref[...][:, None]
+    )
+    o_ref[:, pl.dslice(i * tile_t, tile_t)] = out
+
+
+def conv_full(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, tile_t: int = DEFAULT_TILE_T
+) -> jnp.ndarray:
+    """Causal conv over a full sequence: x (C_in, T) -> (C_out, T)."""
+    c_out, c_in, k = w.shape
+    t = x.shape[1]
+    t_pad = _ceil_to(max(t, 1), tile_t)
+    # causal left pad (K-1) + right pad up to the tile multiple
+    xp = jnp.pad(x, ((0, 0), (k - 1, t_pad - t)))
+    w_flat = w.reshape(c_out, c_in * k)
+    kern = functools.partial(_conv_full_kernel, k=k, tile_t=tile_t)
+    out = pl.pallas_call(
+        kern,
+        grid=(t_pad // tile_t,),
+        out_shape=jax.ShapeDtypeStruct((c_out, t_pad), x.dtype),
+        interpret=True,
+    )(xp, w_flat, b)
+    return out[:, :t]
+
+
+# ----------------------------------------------------------------------------
+# Dense kernel (classifier heads)
+# ----------------------------------------------------------------------------
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = (
+        jax.lax.dot_general(
+            x_ref[...],
+            w_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b_ref[...][None, :]
+    )
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Batched dense layer: x (B, N) @ w (M, N)^T + b -> (B, M)."""
+    bsz = x.shape[0]
+    m = w.shape[0]
+    return pl.pallas_call(
+        _dense_kernel,
+        out_shape=jax.ShapeDtypeStruct((bsz, m), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(c_in: int, c_out: int, k: int, tile_t: int = DEFAULT_TILE_T) -> dict:
+    """Analytic VMEM footprint of one `conv_full` program (f32).
+
+    Used by the §Perf tables: weights + im2col block + output block must fit
+    the ~16 MB/core VMEM budget with double-buffering headroom.
+    """
+    w_bytes = c_out * c_in * k * 4
+    col_bytes = c_in * k * tile_t * 4
+    in_bytes = c_in * (tile_t + k - 1) * 4
+    out_bytes = c_out * tile_t * 4
+    return {
+        "weights": w_bytes,
+        "input_window": in_bytes,
+        "im2col": col_bytes,
+        "output": out_bytes,
+        "total": w_bytes + col_bytes + in_bytes + out_bytes,
+    }

@@ -1,0 +1,500 @@
+"""L2: the causal streaming U-Net and its SOI variants.
+
+This module is the paper's §2 in executable form.  One `UNetConfig`
+describes a variant (S-CC positions, shift placement for FP, extrapolation
+kind); from it we derive
+
+* `offline_forward`   — the full-sequence network (training + the
+  equivalence oracle + the `offline` artifact),
+* `init_states`       — the STMC partial-state pytree,
+* `streaming_step`    — one single-frame inference for a given phase of the
+  SOI schedule (the `step_*` artifacts),
+* the FP split (``part="pre"`` / ``part="rest"``): the portion of an
+  inference that only depends on past data (runnable before the frame
+  arrives) and the remainder (DESIGN.md §6).
+
+Layout: frames are channels-first, (C, T) offline and (C, 1) streaming.
+
+Scheduling model (matches the paper's eq. 3–7):
+
+* Encoder layer ``l`` has input-rate divisor ``R_in(l) = 2^|{p ∈ scc : p < l}|``
+  and *ticks* (receives a new input frame) when ``t % R_in(l) == 0``.
+* A compression layer ``p ∈ scc`` additionally *fires* (computes) only when
+  ``t % 2·R_in(p) == 0`` — on other ticks it just pushes the frame into its
+  STMC window state (the paper's eq. 4 "odd inference" branch).
+* Decoder layer ``l`` lives in the same rate domain as encoder output ``l``
+  (``R_out(l)``); for ``l ∈ scc`` its activation is duplicated back to the
+  ``R_in(l)`` domain (eq. 5; an FP shift moves this to eq. 7 semantics).
+* An FP shift at position ``s`` inserts a `shift`-frame delay line at the
+  input of encoder layer ``s``: everything from encoder ``s`` through
+  decoder ``s`` then depends only on strictly-past data and is
+  *precomputable*; skip connections below ``s`` re-inject current data
+  (this is exactly why the paper's "Precomputed %" column equals the cost
+  fraction of the region ``s..mirror(s)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.stmc_conv import conv_full as pallas_conv_full
+from .kernels.stmc_conv import conv_step as pallas_conv_step
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    """One SOI variant of the speech-separation U-Net.
+
+    Attributes:
+      feat: input frame size (raw samples per frame == input channels).
+      channels: encoder output channels, one per encoder layer.
+      kernel: causal conv kernel size along time.
+      scc: sorted encoder positions (1-based) carrying an S-CC pair
+        (strided compression + mirrored extrapolation).  Empty = pure STMC.
+      shift_pos: FP shift position ``s`` (1-based encoder layer index); the
+        delay line sits at that layer's input.  ``None`` = PP / plain STMC.
+        ``s == p`` for some ``p ∈ scc`` is the paper's SS-CC; ``s == 1``
+        with empty scc is the paper's "Predictive N" baseline.
+      shift: delay length in layer-``s``-input-rate frames (paper App. B
+        tests 1..4).
+      extrap: extrapolation kind per scc position: "duplicate" or "tconv"
+        (learned transposed conv, App. E).  A single string applies to all.
+      interp: if set, replaces extrapolation by interpolation (App. D,
+        offline evaluation only — costs one frame of latency online):
+        "nearest" | "linear" | "cubic".
+    """
+
+    feat: int = 32
+    channels: Tuple[int, ...] = (24, 32, 40, 48, 56, 64, 80)
+    kernel: int = 3
+    scc: Tuple[int, ...] = ()
+    shift_pos: Optional[int] = None
+    shift: int = 1
+    extrap: Tuple[str, ...] | str = "duplicate"
+    interp: Optional[str] = None
+
+    def __post_init__(self):
+        assert tuple(sorted(self.scc)) == tuple(self.scc), "scc must be sorted"
+        assert all(1 <= p <= self.depth for p in self.scc)
+        if self.shift_pos is not None:
+            assert 1 <= self.shift_pos <= self.depth
+            assert self.shift >= 1
+        if isinstance(self.extrap, str):
+            object.__setattr__(self, "extrap", (self.extrap,) * len(self.scc))
+        assert len(self.extrap) == len(self.scc)
+
+    # ---- topology helpers -------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        return len(self.channels)
+
+    @property
+    def period(self) -> int:
+        """Length of the repeating inference pattern."""
+        return 2 ** len(self.scc)
+
+    def r_in(self, l: int) -> int:
+        """Rate divisor of encoder layer l's input domain (l is 1-based)."""
+        return 2 ** sum(1 for p in self.scc if p < l)
+
+    def r_out(self, l: int) -> int:
+        """Rate divisor of encoder layer l's output domain."""
+        return 2 ** sum(1 for p in self.scc if p <= l)
+
+    def enc_in_ch(self, l: int) -> int:
+        return self.feat if l == 1 else self.channels[l - 2]
+
+    def enc_out_ch(self, l: int) -> int:
+        return self.channels[l - 1]
+
+    def dec_out_ch(self, l: int) -> int:
+        return self.channels[max(l - 2, 0)]
+
+    def dec_in_ch(self, l: int) -> int:
+        d = self.depth
+        if l == d:
+            return self.channels[d - 1]
+        return self.dec_out_ch(l + 1) + self.channels[l - 1]
+
+    def extrap_of(self, p: int) -> str:
+        return self.extrap[self.scc.index(p)]
+
+    def delayed_layers(self) -> Tuple[set, set]:
+        """(encoder layers, decoder layers) inside the FP-delayed region."""
+        if self.shift_pos is None:
+            return set(), set()
+        s = self.shift_pos
+        return set(range(s, self.depth + 1)), set(range(s, self.depth + 1))
+
+
+# ----------------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------------
+
+
+def init_params(cfg: UNetConfig, seed: int = 0) -> Params:
+    """He-initialised parameter dict; key order is the manifest order."""
+    rng = np.random.default_rng(seed)
+    params: Params = {}
+
+    def mk_conv(name, c_out, c_in, k):
+        scale = float(np.sqrt(2.0 / (c_in * k)))
+        params[f"{name}.w"] = jnp.asarray(
+            rng.standard_normal((c_out, c_in, k)) * scale, jnp.float32
+        )
+        params[f"{name}.b"] = jnp.zeros((c_out,), jnp.float32)
+
+    for l in range(1, cfg.depth + 1):
+        mk_conv(f"enc{l}", cfg.enc_out_ch(l), cfg.enc_in_ch(l), cfg.kernel)
+    for l in range(cfg.depth, 0, -1):
+        mk_conv(f"dec{l}", cfg.dec_out_ch(l), cfg.dec_in_ch(l), cfg.kernel)
+    for p in cfg.scc:
+        if cfg.extrap_of(p) == "tconv":
+            mk_conv(f"up{p}", cfg.dec_out_ch(p), cfg.dec_out_ch(p), 2)
+    mk_conv("head", cfg.feat, cfg.dec_out_ch(1), 1)
+    return params
+
+
+def param_names(cfg: UNetConfig) -> List[str]:
+    return list(init_params(cfg).keys())
+
+
+def param_count(cfg: UNetConfig) -> int:
+    return sum(int(np.prod(v.shape)) for v in init_params(cfg).values())
+
+
+# ----------------------------------------------------------------------------
+# Offline forward (training / oracle / `offline` artifact)
+# ----------------------------------------------------------------------------
+
+
+def _delay(x: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Right-shift along time by d frames (zeros in front)."""
+    return jnp.pad(x, ((0, 0), (d, 0)))[:, : x.shape[1]]
+
+
+def offline_forward(
+    cfg: UNetConfig, params: Params, x: jnp.ndarray, use_pallas: bool = False
+) -> jnp.ndarray:
+    """Full-sequence forward pass.
+
+    Args:
+      cfg: variant config.  ``x.shape[1]`` must be divisible by cfg.period.
+      params: parameter dict from :func:`init_params`.
+      x: (feat, T) input frames.
+      use_pallas: route convs through the L1 Pallas kernel (used when
+        lowering the `offline` artifact so the kernel is in the HLO).
+
+    Returns:
+      (feat, T) — the denoised frames.
+    """
+    assert x.shape[1] % cfg.period == 0, "T must be a multiple of cfg.period"
+    conv = pallas_conv_full if use_pallas else ref.causal_conv1d
+
+    enc: List[jnp.ndarray] = [x]
+    cur = x
+    for l in range(1, cfg.depth + 1):
+        if cfg.shift_pos == l:
+            cur = _delay(cur, cfg.shift)
+        w, b = params[f"enc{l}.w"], params[f"enc{l}.b"]
+        y = conv(cur, w, b)
+        if l in cfg.scc:
+            y = y[:, ::2]
+        cur = jax.nn.elu(y)
+        enc.append(cur)
+
+    d = None
+    for l in range(cfg.depth, 0, -1):
+        inp = enc[cfg.depth] if l == cfg.depth else jnp.concatenate([d, enc[l]], axis=0)
+        w, b = params[f"dec{l}.w"], params[f"dec{l}.b"]
+        d = jax.nn.elu(conv(inp, w, b))
+        if l in cfg.scc:
+            t_out = enc[l - 1].shape[1]
+            if cfg.interp is not None:
+                d = ref.interp_upsample(d, t_out, cfg.interp)
+            elif cfg.extrap_of(l) == "tconv":
+                d = ref.transposed_conv_upsample(
+                    d, params[f"up{l}.w"], params[f"up{l}.b"], t_out
+                )
+            else:
+                d = ref.duplicate_upsample(d, t_out)
+    return conv(d, params["head.w"], params["head.b"])
+
+
+# ----------------------------------------------------------------------------
+# Streaming states
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpec:
+    name: str
+    shape: Tuple[int, ...]
+
+
+def state_specs(cfg: UNetConfig) -> List[StateSpec]:
+    """Ordered partial-state inventory for one stream (the manifest order).
+
+    * ``enc{l}.win`` / ``dec{l}.win`` — STMC conv windows, (C_in, K-1).
+    * ``up{p}.cache`` — last extrapolated decoder-p activation, (C, 1)
+      (for "tconv" extrapolation the cache holds both phases, (C, 2)).
+    * ``shift.fifo`` — FP delay line at encoder ``shift_pos``, (C, shift).
+    * ``fp.handoff`` — FP boundary value from the precompute pass to the
+      rest pass (only when ``shift_pos`` is set and not an SS-CC position).
+    """
+    specs: List[StateSpec] = []
+    k = cfg.kernel
+    for l in range(1, cfg.depth + 1):
+        specs.append(StateSpec(f"enc{l}.win", (cfg.enc_in_ch(l), k - 1)))
+    for l in range(cfg.depth, 0, -1):
+        specs.append(StateSpec(f"dec{l}.win", (cfg.dec_in_ch(l), k - 1)))
+    for p in cfg.scc:
+        width = 2 if cfg.extrap_of(p) == "tconv" else 1
+        specs.append(StateSpec(f"up{p}.cache", (cfg.dec_out_ch(p), width)))
+    if cfg.shift_pos is not None:
+        s = cfg.shift_pos
+        specs.append(StateSpec("shift.fifo", (cfg.enc_in_ch(s), cfg.shift)))
+        if s not in cfg.scc:
+            ho = cfg.feat if s == 1 else cfg.dec_out_ch(s)
+            specs.append(StateSpec("fp.handoff", (ho, 1)))
+    return specs
+
+
+def init_states(cfg: UNetConfig) -> Dict[str, jnp.ndarray]:
+    return {s.name: jnp.zeros(s.shape, jnp.float32) for s in state_specs(cfg)}
+
+
+def state_bytes(cfg: UNetConfig) -> int:
+    """Peak per-stream partial-state memory (f32)."""
+    return sum(int(np.prod(s.shape)) * 4 for s in state_specs(cfg))
+
+
+# ----------------------------------------------------------------------------
+# Streaming step
+# ----------------------------------------------------------------------------
+
+
+def _conv_step(window: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, use_pallas: bool):
+    if use_pallas:
+        return pallas_conv_step(window[None], w, b)[0][:, None]
+    c_out, c_in, k = w.shape
+    return w.reshape(c_out, c_in * k) @ window.reshape(c_in * k, 1) + b[:, None]
+
+
+def _layer_tick(
+    name: str,
+    cur: jnp.ndarray,
+    states: Dict[str, jnp.ndarray],
+    params: Params,
+    compute: bool,
+    use_pallas: bool,
+):
+    """Push `cur` into the layer's STMC window; optionally compute."""
+    win = jnp.concatenate([states[f"{name}.win"], cur], axis=1)
+    states[f"{name}.win"] = win[:, 1:]
+    if not compute:
+        return None
+    return _conv_step(win, params[f"{name}.w"], params[f"{name}.b"], use_pallas)
+
+
+def streaming_step(
+    cfg: UNetConfig,
+    params: Params,
+    phase: int,
+    frame: Optional[jnp.ndarray],
+    states: Dict[str, jnp.ndarray],
+    use_pallas: bool = False,
+    part: str = "all",
+) -> Tuple[Optional[jnp.ndarray], Dict[str, jnp.ndarray]]:
+    """One single-frame SOI inference at schedule position ``phase``.
+
+    Args:
+      phase: ``t % cfg.period`` — selects which layers tick/fire.
+      frame: (feat, 1) the newly arrived frame (None allowed for
+        part="pre", which must not touch it).
+      states: state dict (not mutated; an updated copy is returned).
+      part: "all" = the whole inference; "pre" = only the FP-delayed region
+        (depends exclusively on past data; callable before the frame
+        arrives); "rest" = the complement, consuming the fresh frame and
+        the handoff produced by "pre".  ``pre ∘ rest == all`` exactly.
+
+    Returns:
+      (out, new_states): out (feat, 1), or None for part="pre".
+    """
+    assert part in ("all", "pre", "rest")
+    if cfg.interp is not None:
+        raise NotImplementedError(
+            "interpolation variants are evaluated offline (App. D adds a "
+            "frame of latency online); use offline_forward"
+        )
+    states = dict(states)
+    d_enc, d_dec = cfg.delayed_layers()
+    if part == "pre":
+        assert cfg.shift_pos is not None, "precompute only exists for FP variants"
+
+    def in_part(enc: bool, l: int) -> bool:
+        if part == "all":
+            return True
+        delayed = l in (d_enc if enc else d_dec)
+        return delayed if part == "pre" else not delayed
+
+    s = cfg.shift_pos
+    depth = cfg.depth
+
+    # ---- encoder ----
+    enc_out: Dict[int, Optional[jnp.ndarray]] = {}
+    cur: Optional[jnp.ndarray] = frame if part != "pre" else None
+    for l in range(1, depth + 1):
+        if phase % cfg.r_in(l) != 0:
+            cur = None
+            enc_out[l] = None
+            continue
+        # FP delay line at the input of layer s: read the oldest entry
+        # *before* pushing (the pre pass reads, the rest pass pushes).
+        if s == l:
+            delayed_in = states["shift.fifo"][:, :1]
+            if part != "pre":
+                assert cur is not None
+                states["shift.fifo"] = jnp.concatenate(
+                    [states["shift.fifo"][:, 1:], cur], axis=1
+                )
+            cur = delayed_in if in_part(True, l) else None
+        if not in_part(True, l):
+            cur = None
+            enc_out[l] = None
+            continue
+        assert cur is not None, f"enc{l}: no input frame at phase {phase}"
+        fires = (phase % (2 * cfg.r_in(l)) == 0) if l in cfg.scc else True
+        out = _layer_tick(f"enc{l}", cur, states, params, fires, use_pallas)
+        cur = jax.nn.elu(out) if out is not None else None
+        enc_out[l] = cur
+
+    # ---- decoder ----
+    d: Optional[jnp.ndarray] = None
+    for l in range(depth, 0, -1):
+        computed_here = False
+        if phase % cfg.r_out(l) == 0:
+            if not in_part(False, l):
+                d = None
+            else:
+                if l == depth:
+                    inp = enc_out[l]
+                else:
+                    upper = d
+                    if part == "rest" and (l + 1 in d_dec) and (l + 1) not in cfg.scc:
+                        # boundary: the delayed d_{l+1} was produced by the
+                        # pre pass and parked in the handoff slot.
+                        upper = states["fp.handoff"]
+                    assert upper is not None, f"dec{l}: missing deep input"
+                    assert enc_out[l] is not None, f"dec{l}: missing skip"
+                    inp = jnp.concatenate([upper, enc_out[l]], axis=0)
+                y = _layer_tick(f"dec{l}", inp, states, params, True, use_pallas)
+                d = jax.nn.elu(y)
+                computed_here = True
+        # extrapolation back to the R_in(l) domain.  The *write* belongs to
+        # whichever pass computed the fresh d_l; the *read* belongs to the
+        # pass that computes d_{l-1} (or the head, for l == 1).
+        if l in cfg.scc and phase % cfg.r_in(l) == 0:
+            cache = f"up{l}.cache"
+            fresh = phase % cfg.r_out(l) == 0
+            if fresh and computed_here:  # write
+                assert d is not None
+                if cfg.extrap_of(l) == "tconv":
+                    w, b = params[f"up{l}.w"], params[f"up{l}.b"]
+                    ph0 = w[:, :, 0] @ d + b[:, None]
+                    ph1 = w[:, :, 1] @ d + b[:, None]
+                    states[cache] = jnp.concatenate([ph0, ph1], axis=1)
+                else:
+                    states[cache] = d
+            reader_delayed = (l - 1 >= 1 and (l - 1) in d_dec) or (l == 1 and s == 1)
+            reads_here = part == "all" or (
+                part == "pre" if reader_delayed else part == "rest"
+            )
+            if reads_here:
+                if cfg.extrap_of(l) == "tconv":
+                    d = states[cache][:, 0:1] if fresh else states[cache][:, 1:2]
+                else:
+                    d = states[cache]
+            else:
+                d = None
+        # FP boundary handoff (pre pass writes; rest pass reads above)
+        if (
+            part == "pre"
+            and s is not None
+            and s not in cfg.scc
+            and l == s
+            and phase % cfg.r_out(l) == 0
+            and s != 1
+            and d is not None
+        ):
+            states["fp.handoff"] = d
+
+    if part == "pre":
+        if s == 1:
+            # whole network delayed: the head output itself is the handoff
+            assert d is not None
+            states["fp.handoff"] = _conv_step(
+                d, params["head.w"], params["head.b"], use_pallas
+            )
+        return None, states
+
+    if s == 1 and part == "rest":
+        out_frame = states["fp.handoff"]
+    else:
+        assert d is not None
+        out_frame = _conv_step(d, params["head.w"], params["head.b"], use_pallas)
+    return out_frame, states
+
+
+def run_streaming(
+    cfg: UNetConfig,
+    params: Params,
+    x: jnp.ndarray,
+    use_pallas: bool = False,
+    split_fp: bool = False,
+) -> jnp.ndarray:
+    """Drive the streaming model over a whole sequence (python loop).
+
+    With ``split_fp`` the FP pre/rest split is exercised instead of the
+    monolithic step — outputs must be identical.
+    """
+    t = x.shape[1]
+    states = init_states(cfg)
+    outs = []
+    for tt in range(t):
+        phase = tt % cfg.period
+        frame = x[:, tt : tt + 1]
+        if split_fp and cfg.shift_pos is not None:
+            _, states = streaming_step(
+                cfg, params, phase, None, states, use_pallas, part="pre"
+            )
+            out, states = streaming_step(
+                cfg, params, phase, frame, states, use_pallas, part="rest"
+            )
+        else:
+            out, states = streaming_step(cfg, params, phase, frame, states, use_pallas)
+        outs.append(out)
+    return jnp.concatenate(outs, axis=1)
+
+
+def phase_signature(cfg: UNetConfig, phase: int, part: str = "all") -> Tuple:
+    """Canonical key of a phase's computation graph, for deduping identical
+    step executables across phases (e.g. phases 1 and 3 of 2×S-CC)."""
+    ticks = tuple(
+        (
+            phase % cfg.r_in(l) == 0,
+            (phase % (2 * cfg.r_in(l)) == 0) if l in cfg.scc else None,
+            phase % cfg.r_out(l) == 0,
+        )
+        for l in range(1, cfg.depth + 1)
+    )
+    return (part, ticks)

@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes/dtypes; every property here is the contract the
+AOT artifacts (and therefore the rust hot path) rely on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import conv_full, conv_step, dense, ref, vmem_footprint_bytes
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@given(
+    c_in=st.integers(1, 9),
+    c_out=st.integers(1, 9),
+    k=st.integers(1, 5),
+    t=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_full_matches_ref(c_in, c_out, k, t, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, c_in, t), _rand(rng, c_out, c_in, k), _rand(rng, c_out)
+    got = conv_full(x, w, b, tile_t=8)
+    want = ref.causal_conv1d(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    c_in=st.integers(1, 8),
+    c_out=st.integers(1, 8),
+    k=st.integers(1, 4),
+    bsz=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_step_matches_ref(c_in, c_out, k, bsz, seed):
+    rng = np.random.default_rng(seed)
+    win = _rand(rng, bsz, c_in, k)
+    w, b = _rand(rng, c_out, c_in, k), _rand(rng, c_out)
+    got = conv_step(win, w, b)
+    for i in range(bsz):
+        want, _ = ref.conv_step(win[i, :, -1:], win[i, :, :-1], w, b)
+        np.testing.assert_allclose(got[i], want[:, 0], rtol=1e-5, atol=1e-5)
+
+
+@given(t=st.integers(1, 50), seed=st.integers(0, 2**31 - 1))
+def test_streaming_conv_state_carry(t, seed):
+    """Feeding frames one at a time through conv_step == offline conv_full."""
+    rng = np.random.default_rng(seed)
+    c_in, c_out, k = 4, 6, 3
+    x = _rand(rng, c_in, t)
+    w, b = _rand(rng, c_out, c_in, k), _rand(rng, c_out)
+    state = jnp.zeros((c_in, k - 1))
+    outs = []
+    for tt in range(t):
+        win = jnp.concatenate([state, x[:, tt : tt + 1]], axis=1)
+        outs.append(conv_step(win[None], w, b)[0])
+        state = win[:, 1:]
+    got = jnp.stack(outs, axis=1)
+    want = ref.causal_conv1d(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_conv_full_kernel_one():
+    """K=1 conv == per-frame dense layer."""
+    rng = np.random.default_rng(0)
+    x, w, b = _rand(rng, 5, 12), _rand(rng, 3, 5, 1), _rand(rng, 3)
+    got = conv_full(x, w, b, tile_t=4)
+    want = w[:, :, 0] @ x + b[:, None]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_conv_full_tile_independence():
+    """Result must not depend on the time tile size."""
+    rng = np.random.default_rng(7)
+    x, w, b = _rand(rng, 6, 37), _rand(rng, 4, 6, 3), _rand(rng, 4)
+    a = conv_full(x, w, b, tile_t=8)
+    c = conv_full(x, w, b, tile_t=64)
+    np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-6)
+
+
+@given(
+    n=st.integers(1, 16), m=st.integers(1, 16), bsz=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(n, m, bsz, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, bsz, n), _rand(rng, m, n), _rand(rng, m)
+    got = dense(x, w, b)
+    for i in range(bsz):
+        np.testing.assert_allclose(got[i], ref.dense(x[i], w, b), rtol=1e-5, atol=1e-5)
+
+
+def test_causality():
+    """Future inputs must not influence past outputs."""
+    rng = np.random.default_rng(3)
+    c_in, c_out, k, t = 3, 4, 3, 20
+    x = _rand(rng, c_in, t)
+    w, b = _rand(rng, c_out, c_in, k), _rand(rng, c_out)
+    y0 = conv_full(x, w, b, tile_t=8)
+    x2 = x.at[:, 10:].set(99.0)
+    y2 = conv_full(x2, w, b, tile_t=8)
+    np.testing.assert_allclose(y0[:, :10], y2[:, :10], rtol=1e-6, atol=1e-6)
+
+
+# ---- extrapolation / interpolation oracles -------------------------------
+
+
+def test_duplicate_upsample_pp_alignment():
+    y = jnp.arange(1.0, 5.0)[None, :]  # 1 2 3 4
+    up = ref.duplicate_upsample(y, 8, shift=0)
+    np.testing.assert_allclose(up[0], [1, 1, 2, 2, 3, 3, 4, 4])
+
+
+def test_duplicate_upsample_fp_alignment():
+    y = jnp.arange(1.0, 5.0)[None, :]
+    up = ref.duplicate_upsample(y, 8, shift=1)
+    # eq. 7: value computed at 2s is used at 2s+1 and 2s+2; t=0 has nothing
+    np.testing.assert_allclose(up[0], [0, 1, 1, 2, 2, 3, 3, 4])
+
+
+def test_interp_linear_midpoints():
+    y = jnp.asarray([[0.0, 2.0, 4.0]])
+    up = ref.interp_upsample(y, 6, "linear")
+    np.testing.assert_allclose(up[0], [0, 1, 2, 3, 4, 4])
+
+
+def test_interp_nearest_rounds_up():
+    y = jnp.asarray([[0.0, 2.0, 4.0]])
+    up = ref.interp_upsample(y, 6, "nearest")
+    np.testing.assert_allclose(up[0], [0, 2, 2, 4, 4, 4])
+
+
+def test_interp_cubic_passes_through_knots():
+    rng = np.random.default_rng(11)
+    y = _rand(rng, 2, 6)
+    up = ref.interp_upsample(y, 12, "cubic")
+    np.testing.assert_allclose(up[:, 0::2], y, rtol=1e-5, atol=1e-5)
+
+
+def test_interp_unknown_kind_raises():
+    with pytest.raises(ValueError):
+        ref.interp_upsample(jnp.zeros((1, 4)), 8, "quintic")
+
+
+def test_tconv_upsample_shapes_and_shift():
+    rng = np.random.default_rng(5)
+    y = _rand(rng, 3, 4)
+    w, b = _rand(rng, 2, 3, 2), _rand(rng, 2)
+    up0 = ref.transposed_conv_upsample(y, w, b, 8, shift=0)
+    up1 = ref.transposed_conv_upsample(y, w, b, 8, shift=1)
+    assert up0.shape == (2, 8)
+    np.testing.assert_allclose(up1[:, 1:], up0[:, :-1], rtol=1e-6)
+    np.testing.assert_allclose(up1[:, 0], 0.0)
+
+
+def test_vmem_footprint_within_budget():
+    """Every layer shape used in this repo fits VMEM comfortably (§Perf)."""
+    worst = vmem_footprint_bytes(c_in=160, c_out=96, k=3, tile_t=128)
+    assert worst["total"] < 2 * 1024 * 1024  # far under the ~16 MB budget

@@ -1,0 +1,212 @@
+"""L2 correctness: the SOI streaming inference pattern.
+
+The central theorem of STMC/SOI — and of this repo — is that single-frame
+streaming inference with cached partial states reproduces the offline
+(full-sequence) network *exactly*:
+
+  * pure STMC: streaming == offline causal U-Net (paper eq. 3),
+  * SOI PP:    streaming == offline strided-cloned network (eq. 4–6),
+  * SOI FP:    streaming == offline shifted network (eq. 7), and the
+               pre/rest split == the monolithic step.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+FEAT = 8
+CH = (8, 10, 12, 14, 16, 18, 20)
+BASE = dict(feat=FEAT, channels=CH)
+
+
+def _x(t, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((FEAT, t)), jnp.float32)
+
+
+def _assert_equiv(cfg, t=16, split=False, seed=1):
+    params = M.init_params(cfg, seed=seed)
+    x = _x(t, seed)
+    off = M.offline_forward(cfg, params, x)
+    st = M.run_streaming(cfg, params, x, split_fp=split)
+    np.testing.assert_allclose(st, off, rtol=1e-4, atol=1e-5)
+
+
+# ---- STMC baseline --------------------------------------------------------
+
+
+def test_stmc_streaming_equals_offline():
+    _assert_equiv(M.UNetConfig(**BASE))
+
+
+def test_stmc_kernel4():
+    _assert_equiv(M.UNetConfig(feat=FEAT, channels=CH[:5], kernel=4), t=12)
+
+
+def test_shallow_depth3():
+    _assert_equiv(M.UNetConfig(feat=FEAT, channels=(8, 12, 16), scc=(2,)), t=12)
+
+
+# ---- SOI PP ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4, 5, 6, 7])
+def test_pp_single_scc(p):
+    _assert_equiv(M.UNetConfig(**BASE, scc=(p,)))
+
+
+@pytest.mark.parametrize("pq", [(1, 3), (1, 6), (2, 5), (3, 6), (5, 7), (6, 7)])
+def test_pp_double_scc(pq):
+    _assert_equiv(M.UNetConfig(**BASE, scc=pq), t=16)
+
+
+@pytest.mark.parametrize("p", [1, 4, 7])
+def test_pp_tconv_extrap(p):
+    _assert_equiv(M.UNetConfig(**BASE, scc=(p,), extrap="tconv"))
+
+
+def test_pp_hybrid_extrap():
+    _assert_equiv(M.UNetConfig(**BASE, scc=(2, 6), extrap=("duplicate", "tconv")))
+
+
+# ---- SOI FP ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [1, 2, 5, 7])
+def test_fp_sscc(p):
+    """SS-CC p: stride + shift at the same position."""
+    _assert_equiv(M.UNetConfig(**BASE, scc=(p,), shift_pos=p))
+
+
+@pytest.mark.parametrize("ps", [(1, 3), (2, 5), (4, 6), (6, 7)])
+def test_fp_hybrid(ps):
+    """S-CC p with the shift at a deeper layer s (Table 2 'S-CC p s')."""
+    p, s = ps
+    _assert_equiv(M.UNetConfig(**BASE, scc=(p,), shift_pos=s))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4])
+def test_predictive_n(n):
+    """'Predictive N' baseline: whole-input delay of N frames (App. B)."""
+    _assert_equiv(M.UNetConfig(**BASE, shift_pos=1, shift=n), split=True)
+
+
+def test_strided_predictive():
+    _assert_equiv(M.UNetConfig(**BASE, scc=(4,), shift_pos=1, shift=2), split=True)
+
+
+# ---- FP pre/rest split ----------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "cfg",
+    [
+        M.UNetConfig(**BASE, scc=(2,), shift_pos=2),
+        M.UNetConfig(**BASE, scc=(5,), shift_pos=5),
+        M.UNetConfig(**BASE, scc=(7,), shift_pos=7),
+        M.UNetConfig(**BASE, scc=(2,), shift_pos=5),
+        M.UNetConfig(**BASE, scc=(1,), shift_pos=3),
+        M.UNetConfig(**BASE, shift_pos=1, shift=1),
+        M.UNetConfig(**BASE, scc=(5,), shift_pos=5, extrap="tconv"),
+    ],
+    ids=["sscc2", "sscc5", "sscc7", "hybrid2-5", "hybrid1-3", "pred1", "sscc5-tconv"],
+)
+def test_fp_split_equals_monolithic(cfg):
+    params = M.init_params(cfg, seed=2)
+    x = _x(16, 4)
+    mono = M.run_streaming(cfg, params, x, split_fp=False)
+    split = M.run_streaming(cfg, params, x, split_fp=True)
+    np.testing.assert_allclose(split, mono, rtol=1e-5, atol=1e-6)
+
+
+def test_fp_pre_ignores_current_frame():
+    """The precompute pass must not read the incoming frame at all."""
+    cfg = M.UNetConfig(**BASE, scc=(2,), shift_pos=2)
+    params = M.init_params(cfg, seed=2)
+    states = M.init_states(cfg)
+    # warm up with a few frames
+    x = _x(8, 9)
+    for t in range(8):
+        _, states = M.streaming_step(cfg, params, t % cfg.period, x[:, t : t + 1], states)
+    _, s_a = M.streaming_step(cfg, params, 0, None, states, part="pre")
+    _, s_b = M.streaming_step(cfg, params, 0, None, states, part="pre")
+    for k in s_a:
+        np.testing.assert_array_equal(s_a[k], s_b[k])
+
+
+# ---- streaming with the Pallas kernels ------------------------------------
+
+
+def test_streaming_with_pallas_kernels():
+    cfg = M.UNetConfig(feat=FEAT, channels=CH[:4], scc=(2,))
+    params = M.init_params(cfg, seed=5)
+    x = _x(8, 5)
+    a = M.run_streaming(cfg, params, x, use_pallas=False)
+    b = M.run_streaming(cfg, params, x, use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_offline_with_pallas_kernels():
+    cfg = M.UNetConfig(feat=FEAT, channels=CH[:4], scc=(2,))
+    params = M.init_params(cfg, seed=5)
+    x = _x(16, 6)
+    a = M.offline_forward(cfg, params, x, use_pallas=False)
+    b = M.offline_forward(cfg, params, x, use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+# ---- structural properties -------------------------------------------------
+
+
+def test_state_specs_match_init_states():
+    cfg = M.UNetConfig(**BASE, scc=(2, 5), shift_pos=5, shift=2)
+    specs = M.state_specs(cfg)
+    states = M.init_states(cfg)
+    assert [s.name for s in specs] == list(states.keys())
+    for s in specs:
+        assert states[s.name].shape == s.shape
+
+
+def test_period():
+    assert M.UNetConfig(**BASE).period == 1
+    assert M.UNetConfig(**BASE, scc=(3,)).period == 2
+    assert M.UNetConfig(**BASE, scc=(3, 5)).period == 4
+
+
+def test_phase_signature_dedupes_shallow_phases():
+    """Phases 1 and 3 of a 2×S-CC variant run the same graph."""
+    cfg = M.UNetConfig(**BASE, scc=(2, 5))
+    assert M.phase_signature(cfg, 1) == M.phase_signature(cfg, 3)
+    assert M.phase_signature(cfg, 0) != M.phase_signature(cfg, 2)
+
+
+def test_param_count_soi_adds_skip_params():
+    """SOI variants keep the U-Net parameter inventory (skips are native);
+    tconv extrapolation adds the learned upsample kernel."""
+    n_stmc = M.param_count(M.UNetConfig(**BASE))
+    n_dup = M.param_count(M.UNetConfig(**BASE, scc=(3,)))
+    n_tconv = M.param_count(M.UNetConfig(**BASE, scc=(3,), extrap="tconv"))
+    assert n_dup == n_stmc
+    assert n_tconv > n_dup
+
+
+def test_interp_variants_offline_only():
+    cfg = M.UNetConfig(**BASE, scc=(3,), interp="linear")
+    params = M.init_params(cfg)
+    out = M.offline_forward(cfg, params, _x(16))
+    assert out.shape == (FEAT, 16)
+    with pytest.raises(NotImplementedError):
+        M.streaming_step(cfg, params, 0, _x(2)[:, :1], M.init_states(cfg))
+
+
+def test_causality_of_streaming():
+    """Changing future frames cannot change past outputs (online property)."""
+    cfg = M.UNetConfig(**BASE, scc=(2,), shift_pos=2)
+    params = M.init_params(cfg, seed=8)
+    x = _x(12, 3)
+    y1 = M.run_streaming(cfg, params, x)
+    x2 = x.at[:, 8:].set(5.0)
+    y2 = M.run_streaming(cfg, params, x2)
+    np.testing.assert_allclose(y1[:, :8], y2[:, :8], rtol=1e-6, atol=1e-7)

@@ -1,0 +1,166 @@
+//! Analytic computational-complexity engine (MAC accounting).
+//!
+//! Reproduces the complexity columns of every table in the paper.  A
+//! network is a list of [`LayerCost`] entries; the three inference methods
+//! of the paper map to three ways of accumulating them:
+//!
+//! * **Baseline** — the offline model is re-run over its whole input
+//!   window at every inference (the paper's GhostNet "Baseline" rows):
+//!   each layer recomputes `window_len` output frames per inference.
+//! * **STMC** — incremental inference: every layer computes exactly one
+//!   new output frame per inference (window cost 1).
+//! * **SOI** — STMC plus the scattered schedule: a layer below `k`
+//!   compression stages computes a new frame only every `2^k` inferences,
+//!   so its average cost is divided by `rate_div`.
+//!
+//! The engine is validated two ways (DESIGN.md §3): against the paper's
+//! own closed-form identities (`paper::` module) and against the
+//! `layer_macs` tables the python side embeds in every artifact manifest.
+
+pub mod ghostnet;
+pub mod paper;
+pub mod resnet;
+pub mod unet;
+
+/// Cost of one layer of a streaming network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerCost {
+    pub name: String,
+    /// MACs to produce one output frame in the layer's own rate domain.
+    pub macs_per_out: u64,
+    /// SOI rate divisor: the layer computes a new frame every `rate_div`
+    /// input frames (1 for layers above the first compression stage).
+    pub rate_div: u64,
+    /// Output frames recomputed per inference under Baseline (offline
+    /// re-run) — the length of the layer's output window.
+    pub window_len: u64,
+    /// True when the layer belongs to the FP-delayed region (depends only
+    /// on past data and is precomputable).
+    pub delayed: bool,
+}
+
+/// A whole network plus its inference rate.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<LayerCost>,
+    /// Inferences per second (frame rate of the input).
+    pub frame_rate: f64,
+}
+
+impl Network {
+    /// Average MACs per inference under STMC (every layer incremental).
+    pub fn stmc_macs_per_frame(&self) -> f64 {
+        self.layers.iter().map(|l| l.macs_per_out as f64).sum()
+    }
+
+    /// Average MACs per inference under the SOI schedule.
+    pub fn soi_macs_per_frame(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.macs_per_out as f64 / l.rate_div as f64)
+            .sum()
+    }
+
+    /// MACs per inference when the offline model recomputes its window.
+    pub fn baseline_macs_per_frame(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| (l.macs_per_out * l.window_len) as f64)
+            .sum()
+    }
+
+    /// Convert MACs/frame to the paper's MMAC/s unit.
+    pub fn mmac_per_s(&self, macs_per_frame: f64) -> f64 {
+        macs_per_frame * self.frame_rate / 1e6
+    }
+
+    /// SOI complexity retention vs STMC, in percent (the paper's
+    /// "Complexity retain" column).
+    pub fn soi_retain_pct(&self) -> f64 {
+        100.0 * self.soi_macs_per_frame() / self.stmc_macs_per_frame()
+    }
+
+    /// The paper's "Precomputed %": the fraction of the *network* (at full
+    /// rate, i.e. of the original STMC cost) that depends on past data
+    /// only.  Table 2's published rows equal the halved-cost fraction
+    /// `h(shift_pos)`, which is exactly this full-rate definition — not a
+    /// fraction of the reduced SOI average.
+    pub fn precomputed_pct(&self) -> f64 {
+        let total = self.stmc_macs_per_frame();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let pre: f64 = self
+            .layers
+            .iter()
+            .filter(|l| l.delayed)
+            .map(|l| l.macs_per_out as f64)
+            .sum();
+        100.0 * pre / total
+    }
+
+    pub fn total_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Network {
+        Network {
+            name: "toy".into(),
+            frame_rate: 100.0,
+            layers: vec![
+                LayerCost {
+                    name: "a".into(),
+                    macs_per_out: 100,
+                    rate_div: 1,
+                    window_len: 10,
+                    delayed: false,
+                },
+                LayerCost {
+                    name: "b".into(),
+                    macs_per_out: 300,
+                    rate_div: 2,
+                    window_len: 10,
+                    delayed: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn stmc_sums_all_layers() {
+        assert_eq!(toy().stmc_macs_per_frame(), 400.0);
+    }
+
+    #[test]
+    fn soi_divides_by_rate() {
+        assert_eq!(toy().soi_macs_per_frame(), 100.0 + 150.0);
+    }
+
+    #[test]
+    fn baseline_multiplies_by_window() {
+        assert_eq!(toy().baseline_macs_per_frame(), 4000.0);
+    }
+
+    #[test]
+    fn retain_pct() {
+        assert!((toy().soi_retain_pct() - 62.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn precomputed_pct_is_full_rate_fraction() {
+        // layer b (300 of 400 full-rate MACs) is delayed -> 75%
+        assert!((toy().precomputed_pct() - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mmac_per_s() {
+        let n = toy();
+        assert!((n.mmac_per_s(n.stmc_macs_per_frame()) - 0.04).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,235 @@
+//! ResNet / MoViNet cost descriptors (paper App. F Table 10 and App. G
+//! Table 11).
+//!
+//! * `resnet_asc` — 1-D streaming adaptations of ResNet-18/34/50/101 for
+//!   acoustic scene classification (Table 11).  Basic blocks for 18/34,
+//!   bottlenecks for 50/101.
+//! * `resnet10_video` / `movinet` — 3-D (2+1D-style) video descriptors for
+//!   Table 10; the time axis is the streaming axis, spatial convs count
+//!   into `macs_per_out`.
+//!
+//! SOI placement follows the paper: ResNet ASC optimizes the middle stage;
+//! video ResNet-10 optimizes block 3; MoViNets optimize blocks 4 and 5.
+
+use super::{LayerCost, Network};
+
+/// Stage widths of the classic ResNets.
+const STAGE_CH: [usize; 4] = [64, 128, 256, 512];
+
+/// Blocks per stage for each depth.
+fn stage_blocks(depth: usize) -> ([usize; 4], bool) {
+    match depth {
+        18 => ([2, 2, 2, 2], false),
+        34 => ([3, 4, 6, 3], false),
+        50 => ([3, 4, 6, 3], true),
+        101 => ([3, 4, 23, 3], true),
+        _ => panic!("unsupported resnet depth {depth}"),
+    }
+}
+
+/// MACs of one residual block producing one output frame with stage width
+/// `c` (1-D over time, kernel 3).  Basic blocks are two 3-convs at width
+/// `c`; bottlenecks follow the standard 4x expansion (block I/O channels
+/// are `4c`, the 3-conv runs at `c`): 1x1 reduce + 3 conv + 1x1 expand.
+fn block_macs(c: usize, bottleneck: bool) -> u64 {
+    if bottleneck {
+        ((4 * c * c) + (c * c * 3) + (c * 4 * c)) as u64
+    } else {
+        (c * c * 3 + c * c * 3) as u64
+    }
+}
+
+/// Table 11 networks: 1-D streaming ResNet for ASC.
+///
+/// `soi`: compress before stage 3, extrapolate after it (the middle-stage
+/// optimization the paper applies).
+pub fn resnet_asc(depth: usize, soi: bool, window_frames: u64, fps: f64) -> Network {
+    let (blocks, bottleneck) = stage_blocks(depth);
+    let mut layers = Vec::new();
+    // stem
+    layers.push(LayerCost {
+        name: "stem".into(),
+        macs_per_out: (20 * 64 * 7) as u64,
+        rate_div: 1,
+        window_len: window_frames,
+        delayed: false,
+    });
+    for (s, &nb) in blocks.iter().enumerate() {
+        let c = STAGE_CH[s];
+        // paper optimizes the 3rd stage (index 2)
+        let compressed = soi && s == 2;
+        let rate_div = if compressed { 2 } else { 1 };
+        for b in 0..nb {
+            layers.push(LayerCost {
+                name: format!("s{s}b{b}"),
+                macs_per_out: block_macs(c, bottleneck),
+                rate_div,
+                window_len: window_frames / rate_div,
+                delayed: false,
+            });
+        }
+    }
+    layers.push(LayerCost {
+        name: "head".into(),
+        macs_per_out: (512 * 10) as u64,
+        rate_div: 1,
+        window_len: 1,
+        delayed: false,
+    });
+    Network {
+        name: format!("resnet{depth}{}", if soi { "-soi" } else { "" }),
+        layers,
+        frame_rate: fps,
+    }
+}
+
+/// Table 11 parameter counts (from the paper; architecture-determined, not
+/// affected by SOI there).
+pub fn resnet_params(depth: usize) -> u64 {
+    match depth {
+        18 => 11_700_000,
+        34 => 21_800_000,
+        50 => 25_600_000,
+        101 => 44_500_000,
+        _ => panic!("unsupported resnet depth {depth}"),
+    }
+}
+
+/// Table 10: 3-D ResNet-10 for video (channel multiplier 1.0 / 0.5 / 0.25
+/// for regular / small / tiny).  `macs_per_out` counts a whole spatial
+/// feature map per time step (112x112 input, halving per stage).
+pub fn resnet10_video(ch_mult: f64, soi: bool, window_frames: u64, fps: f64) -> Network {
+    let widths = [64usize, 128, 256, 512];
+    let spatial = [784usize, 196, 49, 16]; // (112/4)^2 etc. per stage
+    let mut layers = Vec::new();
+    layers.push(LayerCost {
+        name: "stem".into(),
+        macs_per_out: (3 * 64 * 49) as u64 * 3136,
+        rate_div: 1,
+        window_len: window_frames,
+        delayed: false,
+    });
+    for s in 0..4 {
+        let c = ((widths[s] as f64 * ch_mult) as usize).max(4);
+        // SOI optimizes block 3 (stage index 2)
+        let compressed = soi && s == 2;
+        let rate_div = if compressed { 2 } else { 1 };
+        // one basic block (two 3x3x3 convs) per stage in ResNet-10
+        layers.push(LayerCost {
+            name: format!("block{}", s + 1),
+            macs_per_out: (2 * c * c * 27) as u64 * spatial[s] as u64,
+            rate_div,
+            window_len: window_frames / rate_div,
+            delayed: false,
+        });
+    }
+    layers.push(LayerCost {
+        name: "head".into(),
+        macs_per_out: (512.0 * ch_mult) as u64 * 51,
+        rate_div: 1,
+        window_len: 1,
+        delayed: false,
+    });
+    Network {
+        name: format!("resnet10-video x{ch_mult}"),
+        layers,
+        frame_rate: fps,
+    }
+}
+
+/// Table 10: MoViNet A0/A1 approximation (5 block groups; SOI optimizes
+/// groups 4 and 5, giving the paper's larger 23-30% reduction).
+pub fn movinet(variant: usize, soi: bool, window_frames: u64, fps: f64) -> Network {
+    let (widths, spatial): (&[usize], &[usize]) = match variant {
+        0 => (&[16, 24, 48, 88, 144], &[3136, 784, 196, 196, 49]),
+        1 => (&[24, 40, 64, 112, 184], &[3136, 784, 196, 196, 49]),
+        _ => panic!("unsupported movinet variant A{variant}"),
+    };
+    let mut layers = Vec::new();
+    let mut c_in = 3;
+    for (g, (&c, &sp)) in widths.iter().zip(spatial).enumerate() {
+        let compressed = soi && g >= 3; // blocks 4 and 5
+        let rate_div = if compressed { 2 } else { 1 };
+        layers.push(LayerCost {
+            name: format!("g{}", g + 1),
+            macs_per_out: (c_in * c * 9 + c * c * 9) as u64 * sp as u64,
+            rate_div,
+            window_len: window_frames / rate_div,
+            delayed: false,
+        });
+        c_in = c;
+    }
+    layers.push(LayerCost {
+        name: "head".into(),
+        macs_per_out: (c_in * 51) as u64,
+        rate_div: 1,
+        window_len: 1,
+        delayed: false,
+    });
+    Network {
+        name: format!("movinet-a{variant}"),
+        layers,
+        frame_rate: fps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_asc_soi_saves_10_to_25_pct() {
+        for depth in [18usize, 34, 50, 101] {
+            let stmc = resnet_asc(depth, false, 100, 100.0);
+            let soi = resnet_asc(depth, true, 100, 100.0);
+            let ratio = soi.soi_macs_per_frame() / stmc.stmc_macs_per_frame();
+            assert!(
+                (0.60..0.95).contains(&ratio),
+                "resnet{depth}: ratio {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn resnet_depths_monotone() {
+        let mut prev = 0.0;
+        for depth in [18usize, 34, 50, 101] {
+            let c = resnet_asc(depth, false, 100, 100.0).stmc_macs_per_frame();
+            assert!(c > prev, "resnet{depth}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn video_soi_reduction_matches_paper_band() {
+        // paper: 10-17% for ResNet-10 family
+        for m in [1.0, 0.5, 0.25] {
+            let reg = resnet10_video(m, false, 24, 24.0);
+            let soi = resnet10_video(m, true, 24, 24.0);
+            let red = 1.0 - soi.soi_macs_per_frame() / reg.stmc_macs_per_frame();
+            assert!((0.05..0.30).contains(&red), "x{m}: reduction {red}");
+        }
+    }
+
+    #[test]
+    fn movinet_soi_reduction_larger_than_resnet10() {
+        let r_red = {
+            let reg = resnet10_video(1.0, false, 24, 24.0);
+            let soi = resnet10_video(1.0, true, 24, 24.0);
+            1.0 - soi.soi_macs_per_frame() / reg.stmc_macs_per_frame()
+        };
+        let m_red = {
+            let reg = movinet(0, false, 24, 24.0);
+            let soi = movinet(0, true, 24, 24.0);
+            1.0 - soi.soi_macs_per_frame() / reg.stmc_macs_per_frame()
+        };
+        assert!(m_red > r_red, "movinet {m_red} vs resnet {r_red}");
+    }
+
+    #[test]
+    fn movinet_a1_bigger_than_a0() {
+        let a0 = movinet(0, false, 24, 24.0).stmc_macs_per_frame();
+        let a1 = movinet(1, false, 24, 24.0).stmc_macs_per_frame();
+        assert!(a1 > a0);
+    }
+}

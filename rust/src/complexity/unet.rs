@@ -1,0 +1,211 @@
+//! U-Net architecture descriptor — mirrors `python/compile/model.py`'s
+//! topology exactly (cross-checked against the `layer_macs` table every
+//! artifact manifest embeds; see `tests/complexity_cross_check.rs`).
+
+use super::{LayerCost, Network};
+use crate::runtime::ModelConfig;
+
+/// Frames per second at 16 kHz with `feat` samples per frame.
+pub fn frame_rate(feat: usize, sample_rate: f64) -> f64 {
+    sample_rate / feat as f64
+}
+
+fn r_out(cfg: &ModelConfig, l: usize) -> u64 {
+    1u64 << cfg.scc.iter().filter(|&&p| p <= l).count()
+}
+
+fn enc_in_ch(cfg: &ModelConfig, l: usize) -> usize {
+    if l == 1 {
+        cfg.feat
+    } else {
+        cfg.channels[l - 2]
+    }
+}
+
+fn enc_out_ch(cfg: &ModelConfig, l: usize) -> usize {
+    cfg.channels[l - 1]
+}
+
+fn dec_out_ch(cfg: &ModelConfig, l: usize) -> usize {
+    cfg.channels[l.saturating_sub(2).max(0)]
+}
+
+fn dec_in_ch(cfg: &ModelConfig, l: usize) -> usize {
+    let d = cfg.depth();
+    if l == d {
+        cfg.channels[d - 1]
+    } else {
+        dec_out_ch(cfg, l + 1) + cfg.channels[l - 1]
+    }
+}
+
+fn extrap_of(cfg: &ModelConfig, p: usize) -> &str {
+    cfg.scc
+        .iter()
+        .position(|&q| q == p)
+        .map(|i| cfg.extrap[i].as_str())
+        .unwrap_or("duplicate")
+}
+
+/// Build the cost model for one SOI U-Net variant.
+///
+/// `window_len` (Baseline recompute length) is the layer's output-domain
+/// length for a `window_frames`-frame input buffer.
+pub fn network(cfg: &ModelConfig, window_frames: u64, fps: f64) -> Network {
+    let depth = cfg.depth();
+    let s = cfg.shift_pos;
+    let delayed_enc = |l: usize| s.map_or(false, |sp| l >= sp);
+    let delayed_dec = |l: usize| s.map_or(false, |sp| l >= sp);
+    let mut layers = Vec::new();
+
+    for l in 1..=depth {
+        layers.push(LayerCost {
+            name: format!("enc{l}"),
+            macs_per_out: (enc_in_ch(cfg, l) * enc_out_ch(cfg, l) * cfg.kernel) as u64,
+            rate_div: r_out(cfg, l),
+            window_len: window_frames / r_out(cfg, l),
+            delayed: delayed_enc(l),
+        });
+    }
+    for l in (1..=depth).rev() {
+        layers.push(LayerCost {
+            name: format!("dec{l}"),
+            macs_per_out: (dec_in_ch(cfg, l) * dec_out_ch(cfg, l) * cfg.kernel) as u64,
+            rate_div: r_out(cfg, l),
+            window_len: window_frames / r_out(cfg, l),
+            delayed: delayed_dec(l),
+        });
+    }
+    for &p in &cfg.scc {
+        if extrap_of(cfg, p) == "tconv" {
+            layers.push(LayerCost {
+                name: format!("up{p}"),
+                macs_per_out: (dec_out_ch(cfg, p) * dec_out_ch(cfg, p) * 2) as u64,
+                rate_div: r_out(cfg, p),
+                window_len: window_frames / r_out(cfg, p),
+                delayed: delayed_dec(p),
+            });
+        }
+    }
+    layers.push(LayerCost {
+        name: "head".into(),
+        macs_per_out: (dec_out_ch(cfg, 1) * cfg.feat) as u64,
+        rate_div: 1,
+        window_len: window_frames,
+        delayed: s == Some(1),
+    });
+
+    Network {
+        name: "unet".into(),
+        layers,
+        frame_rate: fps,
+    }
+}
+
+/// Convenience: the default artifact config (feat 16, 7 layers, 16 kHz).
+pub fn default_config(scc: Vec<usize>, shift_pos: Option<usize>) -> ModelConfig {
+    ModelConfig {
+        feat: 16,
+        channels: vec![12, 16, 20, 24, 28, 32, 40],
+        kernel: 3,
+        extrap: vec!["duplicate".into(); scc.len()],
+        scc,
+        shift_pos,
+        shift: 1,
+        interp: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fps() -> f64 {
+        frame_rate(16, 16_000.0)
+    }
+
+    #[test]
+    fn stmc_equals_soi_without_scc() {
+        let n = network(&default_config(vec![], None), 256, fps());
+        assert_eq!(n.stmc_macs_per_frame(), n.soi_macs_per_frame());
+    }
+
+    #[test]
+    fn scc_halves_deep_layers() {
+        let n0 = network(&default_config(vec![], None), 256, fps());
+        let n1 = network(&default_config(vec![1], None), 256, fps());
+        // S-CC 1 halves everything except the head
+        let head: f64 = 12.0 * 16.0;
+        let expected = (n0.stmc_macs_per_frame() - head) / 2.0 + head;
+        assert!((n1.soi_macs_per_frame() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deeper_scc_retains_more() {
+        let fps = fps();
+        let mut prev = 0.0;
+        for p in 1..=7 {
+            let n = network(&default_config(vec![p], None), 256, fps);
+            let r = n.soi_retain_pct();
+            assert!(r > prev, "retain must grow with p: {r} at {p}");
+            assert!(r < 100.0);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn double_scc_compounds() {
+        // retain(p, q) == 1 - (h(p) - h(q))/2 - 3 h(q)/4  (DESIGN.md §3)
+        let fps = fps();
+        let h = |p: usize| {
+            let n = network(&default_config(vec![p], None), 256, fps);
+            2.0 * (1.0 - n.soi_retain_pct() / 100.0)
+        };
+        for (p, q) in [(1usize, 3usize), (2, 5), (5, 7)] {
+            let n = network(&default_config(vec![p, q], None), 256, fps);
+            let got = n.soi_retain_pct() / 100.0;
+            let want = 1.0 - (h(p) - h(q)) / 2.0 - 0.75 * h(q);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "compound rule broken at ({p},{q}): {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn sscc_precomputed_matches_h() {
+        // Precomputed % of SS-CC p == h(p) of the same S-CC position
+        let fps = fps();
+        for p in [2usize, 5, 7] {
+            let pp = network(&default_config(vec![p], None), 256, fps);
+            let h = 2.0 * (1.0 - pp.soi_retain_pct() / 100.0);
+            let f = network(&default_config(vec![p], Some(p)), 256, fps);
+            assert!(
+                (f.precomputed_pct() / 100.0 - h).abs() < 1e-9,
+                "SS-CC {p}: precomp {} vs h {h}",
+                f.precomputed_pct() / 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn predictive_is_fully_precomputed() {
+        let n = network(&default_config(vec![], Some(1)), 256, fps());
+        assert!((n.precomputed_pct() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_dominates_stmc() {
+        let n = network(&default_config(vec![], None), 256, fps());
+        assert!(n.baseline_macs_per_frame() > 100.0 * n.stmc_macs_per_frame());
+    }
+
+    #[test]
+    fn tconv_adds_cost() {
+        let mut cfg = default_config(vec![3], None);
+        let dup = network(&cfg, 256, fps());
+        cfg.extrap = vec!["tconv".into()];
+        let tc = network(&cfg, 256, fps());
+        assert!(tc.soi_macs_per_frame() > dup.soi_macs_per_frame());
+    }
+}

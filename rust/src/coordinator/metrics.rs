@@ -1,0 +1,124 @@
+//! Serving metrics: latency histograms, throughput, executed-MAC
+//! accounting, and the measured precompute overlap (which the Table 2
+//! driver checks against the analytic "Precomputed %").
+
+use std::time::Instant;
+
+use crate::util::stats::{Histogram, Summary};
+
+/// Metrics for one stream (or aggregated across streams via `merge`).
+#[derive(Debug, Clone, Default)]
+pub struct StreamMetrics {
+    /// Wall latency of the on-arrival work (step or rest pass), ns.
+    pub arrival_latency: Histogram,
+    /// Wall time of the precompute pass (hidden from arrival latency), ns.
+    pub precompute_time: Histogram,
+    /// Frames processed.
+    pub frames: u64,
+    /// MACs actually executed (scheduler-aware analytic count).
+    pub macs_executed: f64,
+    /// MACs a pure STMC model would have executed.
+    pub macs_stmc: f64,
+    /// Output quality accumulator (SI-SNR segments), if tracked.
+    pub si_snr: Summary,
+}
+
+impl StreamMetrics {
+    pub fn new() -> Self {
+        Self {
+            si_snr: Summary::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record_arrival(&mut self, start: Instant) {
+        self.arrival_latency
+            .record(start.elapsed().as_nanos() as u64);
+    }
+
+    pub fn record_precompute(&mut self, start: Instant) {
+        self.precompute_time
+            .record(start.elapsed().as_nanos() as u64);
+    }
+
+    pub fn record_frame(&mut self, macs_executed: f64, macs_stmc: f64) {
+        self.frames += 1;
+        self.macs_executed += macs_executed;
+        self.macs_stmc += macs_stmc;
+    }
+
+    /// Measured complexity retention vs STMC, percent.
+    pub fn retain_pct(&self) -> f64 {
+        if self.macs_stmc == 0.0 {
+            return 100.0;
+        }
+        100.0 * self.macs_executed / self.macs_stmc
+    }
+
+    /// Fraction of total inference work hidden in the precompute slot.
+    pub fn hidden_fraction(&self) -> f64 {
+        let pre = self.precompute_time.mean() * self.precompute_time.count() as f64;
+        let arr = self.arrival_latency.mean() * self.arrival_latency.count() as f64;
+        if pre + arr == 0.0 {
+            return 0.0;
+        }
+        pre / (pre + arr)
+    }
+
+    pub fn merge(&mut self, other: &StreamMetrics) {
+        self.arrival_latency.merge(&other.arrival_latency);
+        self.precompute_time.merge(&other.precompute_time);
+        self.frames += other.frames;
+        self.macs_executed += other.macs_executed;
+        self.macs_stmc += other.macs_stmc;
+        if other.si_snr.count > 0 {
+            self.si_snr.count += other.si_snr.count;
+            self.si_snr.sum += other.si_snr.sum;
+            self.si_snr.min = self.si_snr.min.min(other.si_snr.min);
+            self.si_snr.max = self.si_snr.max.max(other.si_snr.max);
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "frames {:>7}  p50 {:>9}  p95 {:>9}  p99 {:>9}  retain {:>5.1}%  hidden {:>4.1}%",
+            self.frames,
+            crate::util::bench::fmt_ns(self.arrival_latency.p50() as f64),
+            crate::util::bench::fmt_ns(self.arrival_latency.p95() as f64),
+            crate::util::bench::fmt_ns(self.arrival_latency.p99() as f64),
+            self.retain_pct(),
+            100.0 * self.hidden_fraction(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retain_tracks_ratio() {
+        let mut m = StreamMetrics::new();
+        m.record_frame(50.0, 100.0);
+        m.record_frame(100.0, 100.0);
+        assert!((m.retain_pct() - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = StreamMetrics::new();
+        let mut b = StreamMetrics::new();
+        a.record_frame(1.0, 2.0);
+        b.record_frame(3.0, 4.0);
+        a.merge(&b);
+        assert_eq!(a.frames, 2);
+        assert_eq!(a.macs_executed, 4.0);
+    }
+
+    #[test]
+    fn hidden_fraction_zero_without_precompute() {
+        let mut m = StreamMetrics::new();
+        m.record_arrival(Instant::now());
+        assert_eq!(m.hidden_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator — the paper's system contribution as a serving runtime.
+//!
+//! * [`scheduler`] — the SOI inference pattern (which executable per
+//!   phase, FP precompute placement) as pure, testable logic.
+//! * [`stream`] — per-stream session: partial-state cache, schedule
+//!   execution, idle-time FP precompute, per-stream metrics.
+//! * [`server`] — multi-stream worker pool with id-sharding, bounded
+//!   queues (backpressure) and aggregated metrics.
+//! * [`metrics`] — latency histograms, executed-MAC accounting, measured
+//!   precompute overlap.
+
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+pub mod stream;
+
+pub use metrics::StreamMetrics;
+pub use scheduler::{Scheduler, StepPlan};
+pub use server::{ServeReport, Server, SharedEngine};
+pub use stream::StreamSession;

@@ -1,0 +1,137 @@
+//! The SOI inference-pattern scheduler (pure logic, no PJRT).
+//!
+//! The paper's contribution is an *inference pattern*: a repeating
+//! schedule that decides, per incoming frame, which executable runs and
+//! what may be precomputed while waiting for the frame.  This module is
+//! the table-driven encoding of that pattern; the executor
+//! (`coordinator::stream`) merely follows the plan.
+
+/// What to run for one inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepPlan {
+    /// Schedule phase `t mod period` — selects `step_p<phase>` etc.
+    pub phase: usize,
+    /// Whether the FP split applies: run `pre_p<phase>` *before* the frame
+    /// arrives, then `rest_p<phase>` on arrival.  When false, run
+    /// `step_p<phase>` on arrival.
+    pub split: bool,
+}
+
+/// Scheduler for one stream.
+///
+/// Period-2^k SOI patterns: phase 0 is the "full" inference updating every
+/// partial state (the paper's even inference); other phases skip the
+/// compressed regions (the paper's eq. 4 odd branch).
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    period: usize,
+    fp_split: bool,
+    t: u64,
+}
+
+impl Scheduler {
+    pub fn new(period: usize, fp_split: bool) -> Scheduler {
+        assert!(period.is_power_of_two() && period > 0);
+        Scheduler {
+            period,
+            fp_split,
+            t: 0,
+        }
+    }
+
+    pub fn period(&self) -> usize {
+        self.period
+    }
+
+    /// Inference counter (frames consumed so far).
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// The plan for the *next* inference (does not advance).
+    pub fn peek(&self) -> StepPlan {
+        StepPlan {
+            phase: (self.t % self.period as u64) as usize,
+            split: self.fp_split,
+        }
+    }
+
+    /// Advance to the next inference and return its plan.
+    pub fn next(&mut self) -> StepPlan {
+        let plan = self.peek();
+        self.t += 1;
+        plan
+    }
+
+    /// Reset (stream restart).
+    pub fn reset(&mut self) {
+        self.t = 0;
+    }
+
+    /// Whether precompute for the upcoming inference may start now
+    /// (FP variants only; callable as soon as the previous inference
+    /// finished, i.e. always true between frames).
+    pub fn can_precompute(&self) -> bool {
+        self.fp_split
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn phases_cycle() {
+        let mut s = Scheduler::new(4, false);
+        let phases: Vec<usize> = (0..10).map(|_| s.next().phase).collect();
+        assert_eq!(phases, vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn period_one_is_always_phase_zero() {
+        let mut s = Scheduler::new(1, false);
+        for _ in 0..5 {
+            assert_eq!(s.next().phase, 0);
+        }
+    }
+
+    #[test]
+    fn split_flag_propagates() {
+        let mut s = Scheduler::new(2, true);
+        assert!(s.next().split);
+        assert!(s.can_precompute());
+        let mut s2 = Scheduler::new(2, false);
+        assert!(!s2.next().split);
+    }
+
+    #[test]
+    fn reset_restarts_pattern() {
+        let mut s = Scheduler::new(2, false);
+        s.next();
+        s.reset();
+        assert_eq!(s.next().phase, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        Scheduler::new(3, false);
+    }
+
+    #[test]
+    fn property_phase_matches_counter() {
+        prop::check("phase == t mod period", 50, 0xC0FFEE, |rng, _| {
+            let period = 1usize << rng.below(4);
+            let mut s = Scheduler::new(period, rng.chance(0.5));
+            let steps = rng.below(40) + 1;
+            for t in 0..steps {
+                let plan = s.next();
+                if plan.phase != t % period {
+                    return Err(format!("phase {} at t {t} period {period}", plan.phase));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,222 @@
+//! Multi-stream serving: a worker pool sharding streams by id, with
+//! bounded queues for backpressure and aggregated metrics.
+//!
+//! tokio is unavailable offline (DESIGN.md §5); the pool uses std threads
+//! and mpsc channels, which is a good fit anyway — PJRT CPU execution is
+//! synchronous, so one OS thread per worker with its own stream shard is
+//! the natural topology (the vLLM-router-style design scaled down to
+//! frame-level requests).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::StreamMetrics;
+use super::stream::StreamSession;
+use crate::runtime::CompiledVariant;
+
+/// PJRT's C API guarantees thread-safe `Execute`/buffer operations, but
+/// the `xla` crate wrappers hold raw pointers and are not marked Send.
+/// This wrapper asserts what the PJRT contract provides.  All mutation on
+/// the rust side (states, metrics) stays worker-local.
+pub struct SharedEngine(pub Arc<CompiledVariant>);
+
+// SAFETY: PJRT requires clients/executables to be usable from multiple
+// threads concurrently (the CPU plugin uses an internal thread pool
+// itself); the only non-Sync state in CompiledVariant is behind the PJRT
+// C API.  Streams never share StateSets.
+unsafe impl Send for SharedEngine {}
+unsafe impl Sync for SharedEngine {}
+
+/// One frame of work for a stream.
+pub struct FrameJob {
+    pub stream_id: u64,
+    pub frame: Vec<f32>,
+    /// Marks the last frame of the stream (flush + report).
+    pub last: bool,
+}
+
+/// Output frame handed back to the caller.
+pub struct FrameOut {
+    pub stream_id: u64,
+    pub seq: u64,
+    pub data: Vec<f32>,
+}
+
+/// Serving summary returned by [`Server::run`].
+pub struct ServeReport {
+    pub metrics: StreamMetrics,
+    pub outputs: HashMap<u64, Vec<Vec<f32>>>,
+    pub wall_seconds: f64,
+    pub frames: u64,
+}
+
+impl ServeReport {
+    pub fn throughput_fps(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            0.0
+        } else {
+            self.frames as f64 / self.wall_seconds
+        }
+    }
+}
+
+/// Multi-stream server over one compiled SOI variant.
+pub struct Server {
+    engine: Arc<SharedEngine>,
+    workers: usize,
+    queue_depth: usize,
+    /// Run the FP idle/precompute pass between frames (on by default;
+    /// turning it off measures the non-overlapped latency for Table 2).
+    pub idle_precompute: bool,
+}
+
+impl Server {
+    pub fn new(engine: Arc<CompiledVariant>, workers: usize) -> Server {
+        Server {
+            engine: Arc::new(SharedEngine(engine)),
+            workers: workers.max(1),
+            queue_depth: 64,
+            idle_precompute: true,
+        }
+    }
+
+    /// Serve a fixed set of streams to completion (throughput mode): every
+    /// stream's frames are queued as fast as workers drain them.
+    ///
+    /// Streams are sharded across workers by `stream_id % workers`; each
+    /// worker owns its sessions exclusively (no locks on the hot path).
+    pub fn run(&self, streams: &[Vec<Vec<f32>>]) -> Result<ServeReport> {
+        let t0 = std::time::Instant::now();
+        let mut senders: Vec<SyncSender<FrameJob>> = Vec::new();
+        let mut handles = Vec::new();
+        let (out_tx, out_rx) = sync_channel::<Result<(u64, StreamMetrics, Vec<Vec<f32>>)>>(
+            self.workers * 4,
+        );
+
+        for w in 0..self.workers {
+            let (tx, rx): (SyncSender<FrameJob>, Receiver<FrameJob>) =
+                sync_channel(self.queue_depth);
+            senders.push(tx);
+            let engine = self.engine.clone();
+            let out_tx = out_tx.clone();
+            let idle = self.idle_precompute;
+            handles.push(thread::spawn(move || {
+                worker_loop(w, engine, rx, out_tx, idle);
+            }));
+        }
+        drop(out_tx);
+
+        // Dispatch: interleave streams round-robin frame by frame so
+        // workers see concurrent traffic (not stream-after-stream).
+        let max_len = streams.iter().map(|s| s.len()).max().unwrap_or(0);
+        for t in 0..max_len {
+            for (sid, frames) in streams.iter().enumerate() {
+                if t < frames.len() {
+                    let job = FrameJob {
+                        stream_id: sid as u64,
+                        frame: frames[t].clone(),
+                        last: t + 1 == frames.len(),
+                    };
+                    senders[sid % self.workers]
+                        .send(job)
+                        .map_err(|_| anyhow!("worker {} died", sid % self.workers))?;
+                }
+            }
+        }
+        drop(senders);
+
+        let mut metrics = StreamMetrics::new();
+        let mut outputs = HashMap::new();
+        let mut frames = 0u64;
+        for res in out_rx {
+            let (sid, m, outs) = res?;
+            frames += m.frames;
+            metrics.merge(&m);
+            outputs.insert(sid, outs);
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow!("worker panicked"))?;
+        }
+        Ok(ServeReport {
+            metrics,
+            outputs,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            frames,
+        })
+    }
+}
+
+fn worker_loop(
+    _worker_id: usize,
+    engine: Arc<SharedEngine>,
+    rx: Receiver<FrameJob>,
+    out_tx: SyncSender<Result<(u64, StreamMetrics, Vec<Vec<f32>>)>>,
+    idle_precompute: bool,
+) {
+    let cv: Arc<CompiledVariant> = engine.0.clone();
+    let weights = match cv.device_weights() {
+        Ok(w) => Arc::new(w),
+        Err(e) => {
+            let _ = out_tx.send(Err(e));
+            return;
+        }
+    };
+    let mut sessions: HashMap<u64, (StreamSession, Vec<Vec<f32>>)> = HashMap::new();
+
+    loop {
+        // Idle gap: run FP precompute for any session that is waiting.
+        // try_recv first so a ready frame always wins over idle work.
+        let job = match rx.try_recv() {
+            Ok(j) => j,
+            Err(std::sync::mpsc::TryRecvError::Empty) => {
+                if idle_precompute {
+                    let mut did = false;
+                    for (sess, _) in sessions.values_mut() {
+                        match sess.idle() {
+                            Ok(worked) => did |= worked,
+                            Err(e) => {
+                                let _ = out_tx.send(Err(e));
+                                return;
+                            }
+                        }
+                    }
+                    if did {
+                        continue; // re-poll the queue after useful work
+                    }
+                }
+                match rx.recv() {
+                    Ok(j) => j,
+                    Err(_) => break, // channel closed: all frames dispatched
+                }
+            }
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
+        };
+
+        let sid = job.stream_id;
+        let entry = sessions.entry(sid).or_insert_with(|| {
+            (
+                StreamSession::new(sid, cv.clone(), weights.clone()),
+                Vec::new(),
+            )
+        });
+        match entry.0.on_frame(&job.frame) {
+            Ok(out) => entry.1.push(out),
+            Err(e) => {
+                let _ = out_tx.send(Err(e));
+                return;
+            }
+        }
+        if job.last {
+            let (sess, outs) = sessions.remove(&sid).unwrap();
+            let _ = out_tx.send(Ok((sid, sess.metrics.clone(), outs)));
+        }
+    }
+    // flush any sessions that never saw a `last` marker
+    for (sid, (sess, outs)) in sessions {
+        let _ = out_tx.send(Ok((sid, sess.metrics.clone(), outs)));
+    }
+}

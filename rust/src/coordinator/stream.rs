@@ -1,0 +1,183 @@
+//! Per-stream session: owns the partial-state cache, follows the SOI
+//! schedule, tracks metrics, and (for FP variants) runs the precompute
+//! pass in the idle gap between frames.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::StreamMetrics;
+use super::scheduler::Scheduler;
+use crate::runtime::{CompiledVariant, DeviceWeights, StateSet};
+
+/// MACs executed by `step_p<phase>` (layers whose rate domain ticks).
+pub fn macs_at_phase(manifest: &crate::runtime::Manifest, phase: usize) -> f64 {
+    manifest
+        .layer_macs
+        .iter()
+        .filter(|l| phase as u64 % l.rate_div == 0)
+        .map(|l| l.macs as f64)
+        .sum()
+}
+
+/// MACs of one pure-STMC inference (every layer fires).
+pub fn macs_stmc(manifest: &crate::runtime::Manifest) -> f64 {
+    manifest.layer_macs.iter().map(|l| l.macs as f64).sum()
+}
+
+/// A live stream being served by one SOI variant.
+pub struct StreamSession {
+    pub id: u64,
+    engine: Arc<CompiledVariant>,
+    weights: Arc<DeviceWeights>,
+    states: StateSet,
+    scheduler: Scheduler,
+    pub metrics: StreamMetrics,
+    /// FP: has the precompute pass already run for the upcoming inference?
+    precomputed: bool,
+}
+
+impl StreamSession {
+    pub fn new(id: u64, engine: Arc<CompiledVariant>, weights: Arc<DeviceWeights>) -> Self {
+        let period = engine.manifest.period;
+        let fp = engine.manifest.has_fp_split();
+        let states = engine.init_states();
+        StreamSession {
+            id,
+            engine,
+            weights,
+            states,
+            scheduler: Scheduler::new(period, fp),
+            metrics: StreamMetrics::new(),
+            precomputed: false,
+        }
+    }
+
+    /// Idle-time work: for FP variants, run the precompute pass for the
+    /// *next* inference if it has not run yet.  Call whenever the stream
+    /// is waiting for data.  Returns true if work was done.
+    pub fn idle(&mut self) -> Result<bool> {
+        if !self.scheduler.can_precompute() || self.precomputed {
+            return Ok(false);
+        }
+        let plan = self.scheduler.peek();
+        let start = Instant::now();
+        self.engine
+            .precompute(plan.phase, &mut self.states, &self.weights)?;
+        self.metrics.record_precompute(start);
+        self.precomputed = true;
+        Ok(true)
+    }
+
+    /// A frame arrived: run the on-arrival work and return the output.
+    ///
+    /// For FP variants this is only the `rest` pass when `idle()` got to
+    /// run beforehand (the serving loop guarantees it between frames); if
+    /// the frame arrived before any idle time, the precompute runs inline
+    /// first (counted in arrival latency — exactly the behaviour the paper
+    /// describes for back-to-back arrivals).
+    pub fn on_frame(&mut self, frame: &[f32]) -> Result<Vec<f32>> {
+        let plan = self.scheduler.next();
+        let start = Instant::now();
+        let out = if plan.split {
+            if !self.precomputed {
+                self.engine
+                    .precompute(plan.phase, &mut self.states, &self.weights)?;
+            }
+            self.precomputed = false;
+            self.engine
+                .step_rest(plan.phase, frame, &mut self.states, &self.weights)?
+        } else {
+            self.engine
+                .step(plan.phase, frame, &mut self.states, &self.weights)?
+        };
+        self.metrics.record_arrival(start);
+        self.metrics.record_frame(
+            macs_at_phase(&self.engine.manifest, plan.phase),
+            macs_stmc(&self.engine.manifest),
+        );
+        Ok(out)
+    }
+
+    /// Frames consumed so far.
+    pub fn frames_seen(&self) -> u64 {
+        self.scheduler.t()
+    }
+
+    /// Reset stream state (e.g. utterance boundary).
+    pub fn reset(&mut self) {
+        self.states = self.engine.init_states();
+        self.scheduler.reset();
+        self.precomputed = false;
+    }
+
+    /// Peak partial-state memory for this stream, bytes.
+    pub fn state_bytes(&self) -> usize {
+        self.states.tensors.iter().map(|t| t.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{LayerMacs, Manifest, ModelConfig};
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn manifest(period: usize) -> Manifest {
+        Manifest {
+            name: "t".into(),
+            config: ModelConfig {
+                feat: 4,
+                channels: vec![4],
+                kernel: 3,
+                scc: vec![],
+                shift_pos: None,
+                shift: 1,
+                extrap: vec![],
+                interp: None,
+            },
+            period,
+            streamable: true,
+            offline_t: 16,
+            packed_states: 0,
+            states: vec![],
+            params: vec![],
+            executables: BTreeMap::new(),
+            layer_macs: vec![
+                LayerMacs {
+                    name: "a".into(),
+                    macs: 100,
+                    rate_div: 1,
+                },
+                LayerMacs {
+                    name: "b".into(),
+                    macs: 300,
+                    rate_div: 2,
+                },
+            ],
+            macs_per_frame: 250.0,
+            precomputed_fraction: 0.0,
+            param_count: 0,
+            state_bytes: 0,
+            train_metrics: BTreeMap::new(),
+            dir: PathBuf::from("/nonexistent"),
+        }
+    }
+
+    #[test]
+    fn phase_macs() {
+        let m = manifest(2);
+        assert_eq!(macs_at_phase(&m, 0), 400.0); // both layers fire
+        assert_eq!(macs_at_phase(&m, 1), 100.0); // only rate-1 layer
+        assert_eq!(macs_stmc(&m), 400.0);
+    }
+
+    #[test]
+    fn average_over_period_matches_manifest() {
+        let m = manifest(2);
+        let avg = (macs_at_phase(&m, 0) + macs_at_phase(&m, 1)) / 2.0;
+        assert_eq!(avg, m.macs_per_frame);
+    }
+}

@@ -1,0 +1,98 @@
+//! Quality metrics: SI-SNR / SI-SNRi (speech separation) and top-1
+//! accuracy (classification) — the paper's evaluation metrics.
+
+/// Scale-invariant SNR in dB (both signals are mean-removed; the target
+/// projection removes any global gain difference).
+pub fn si_snr(est: &[f32], target: &[f32]) -> f64 {
+    assert_eq!(est.len(), target.len(), "si_snr: length mismatch");
+    let n = est.len() as f64;
+    let me: f64 = est.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mt: f64 = target.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mut dot = 0.0f64;
+    let mut tt = 0.0f64;
+    for (&e, &t) in est.iter().zip(target) {
+        let (e, t) = (e as f64 - me, t as f64 - mt);
+        dot += e * t;
+        tt += t * t;
+    }
+    let eps = 1e-8;
+    let scale = dot / (tt + eps);
+    let mut ps = 0.0f64;
+    let mut pn = 0.0f64;
+    for (&e, &t) in est.iter().zip(target) {
+        let (e, t) = (e as f64 - me, t as f64 - mt);
+        let s = scale * t;
+        ps += s * s;
+        pn += (e - s) * (e - s);
+    }
+    10.0 * ((ps + eps) / (pn + eps)).log10()
+}
+
+/// SI-SNR improvement: si_snr(est, clean) - si_snr(noisy, clean).
+pub fn si_snr_improvement(noisy: &[f32], est: &[f32], clean: &[f32]) -> f64 {
+    si_snr(est, clean) - si_snr(noisy, clean)
+}
+
+/// Top-1 accuracy over (prediction, label) pairs.
+pub fn top1_accuracy(pred: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(labels).filter(|(p, l)| p == l).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Argmax helper for logits.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn perfect_estimate_is_very_high() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        assert!(si_snr(&x, &x) > 60.0);
+    }
+
+    #[test]
+    fn scale_invariance() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let scaled: Vec<f32> = x.iter().map(|&v| v * 3.7).collect();
+        assert!(si_snr(&scaled, &x) > 60.0);
+    }
+
+    #[test]
+    fn noise_lowers_si_snr() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let noisy: Vec<f32> = x.iter().map(|&v| v + rng.normal() as f32).collect();
+        let s = si_snr(&noisy, &x);
+        assert!((-2.0..2.0).contains(&s), "0 dB-ish expected, got {s}");
+    }
+
+    #[test]
+    fn improvement_of_identity_denoiser_is_zero() {
+        let mut rng = Rng::new(4);
+        let clean: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        let noisy: Vec<f32> = clean.iter().map(|&v| v + 0.3 * rng.normal() as f32).collect();
+        let imp = si_snr_improvement(&noisy, &noisy, &clean);
+        assert!(imp.abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_and_argmax() {
+        assert_eq!(top1_accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+}

@@ -1,0 +1,49 @@
+//! Signal-processing substrates: synthetic data generation (the DNS/TAU
+//! substitution of DESIGN.md §5), quality metrics, resampler bank
+//! (Table 3 baselines) and framing helpers.
+
+pub mod metrics;
+pub mod resample;
+pub mod siggen;
+
+/// Slice a waveform into non-overlapping frames of `feat` samples,
+/// returning (frames-as-columns data, n_frames): column t holds samples
+/// `x[t*feat .. (t+1)*feat]` — the layout the U-Net artifacts expect.
+pub fn frames(x: &[f32], feat: usize) -> (Vec<Vec<f32>>, usize) {
+    let t = x.len() / feat;
+    let mut out = Vec::with_capacity(t);
+    for i in 0..t {
+        out.push(x[i * feat..(i + 1) * feat].to_vec());
+    }
+    (out, t)
+}
+
+/// Reassemble frames back into a waveform.
+pub fn deframe(frames: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(frames.len() * frames.first().map_or(0, |f| f.len()));
+    for f in frames {
+        out.extend_from_slice(f);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let (fr, t) = frames(&x, 16);
+        assert_eq!(t, 4);
+        assert_eq!(deframe(&fr), x);
+    }
+
+    #[test]
+    fn frame_truncates_tail() {
+        let x = vec![0.0f32; 70];
+        let (fr, t) = frames(&x, 16);
+        assert_eq!(t, 4);
+        assert_eq!(fr.len(), 4);
+    }
+}

@@ -1,0 +1,235 @@
+//! Synthetic signal generators — the rust twin of `python/compile/data.py`
+//! (same family/parameters so both layers evaluate the same distribution;
+//! see DESIGN.md §5 for the DNS/TAU substitution rationale).
+
+use crate::util::rng::Rng;
+
+pub const FS: f64 = 16_000.0;
+
+/// Speech-like clean source: harmonic stack with a log-domain pitch random
+/// walk, two formant-like resonators, and a smoothed voicing gate.
+pub fn speech(rng: &mut Rng, n: usize, fs: f64) -> Vec<f32> {
+    // pitch contour
+    let mut logf0 = 120.0f64.ln();
+    let (lo, hi) = (80.0f64.ln(), 300.0f64.ln());
+    let mut phase = 0.0f64;
+    let mut harm_phase = [0.0f64; 12];
+    let mut amps = [0.0f64; 12];
+    for (h, a) in amps.iter_mut().enumerate() {
+        *a = (1.0 / (h + 1) as f64) * (0.5 + rng.uniform());
+    }
+    for (h, p) in harm_phase.iter_mut().enumerate() {
+        let _ = h;
+        *p = rng.uniform() * std::f64::consts::TAU;
+    }
+    let mut sig = vec![0.0f64; n];
+    for (i, s) in sig.iter_mut().enumerate() {
+        logf0 = (logf0 + rng.normal() * 0.0006).clamp(lo, hi);
+        let f0 = logf0.exp();
+        phase += std::f64::consts::TAU * f0 / fs;
+        let mut v = 0.0;
+        for h in 0..12 {
+            v += amps[h] * ((h + 1) as f64 * phase + harm_phase[h]).sin();
+        }
+        let _ = i;
+        *s = v;
+    }
+    // two fixed-frequency resonators (biquad two-pole, like the python side)
+    for (fc, bw) in [(500.0f64, 120.0f64), (1500.0, 200.0)] {
+        let r = (-std::f64::consts::PI * bw / fs).exp();
+        let w = std::f64::consts::TAU * fc / fs;
+        let (a1, a2) = (-2.0 * r * w.cos(), r * r);
+        let b0 = 1.0 - r;
+        let (mut y1, mut y2) = (0.0f64, 0.0f64);
+        for s in sig.iter_mut() {
+            let y0 = b0 * *s - a1 * y1 - a2 * y2;
+            y2 = y1;
+            y1 = y0;
+            *s = 0.5 * *s + 0.5 * y0;
+        }
+    }
+    // voicing gate: 100 ms segments on/off, smoothed by a 50 ms ramp
+    let seg = (fs * 0.1) as usize;
+    let ramp = (fs * 0.05) as usize;
+    let n_seg = n / seg + 2;
+    let gates: Vec<f64> = (0..n_seg)
+        .map(|_| if rng.chance(0.7) { 1.0 } else { 0.0 })
+        .collect();
+    let mut env = vec![0.0f64; n];
+    for (i, e) in env.iter_mut().enumerate() {
+        *e = gates[i / seg];
+    }
+    // moving-average smoothing
+    let mut smooth = vec![0.0f64; n];
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += env[i];
+        if i >= ramp {
+            acc -= env[i - ramp];
+        }
+        smooth[i] = acc / ramp.min(i + 1) as f64;
+    }
+    let mut peak = 1e-9f64;
+    for i in 0..n {
+        sig[i] *= smooth[i];
+        peak = peak.max(sig[i].abs());
+    }
+    sig.iter().map(|&v| (v / peak * 0.7) as f32).collect()
+}
+
+/// Colored noise: white noise shaped by a one-pole tilt filter plus slow
+/// amplitude modulation (street/babble-like energy fluctuation).
+pub fn noise(rng: &mut Rng, n: usize, fs: f64) -> Vec<f32> {
+    let tilt = rng.range(-1.2, 0.2);
+    // approximate the python FFT tilt with a one-pole lowpass/highpass mix
+    let alpha = 0.98f64.powf(-tilt); // more tilt -> heavier lowpass
+    let a = alpha.clamp(0.5, 0.999);
+    let mut state = 0.0f64;
+    let mod_rate = rng.range(0.3, 2.0);
+    let mod_phase = rng.uniform() * std::f64::consts::TAU;
+    let mut out = vec![0.0f64; n];
+    let mut peak = 1e-9f64;
+    for (i, o) in out.iter_mut().enumerate() {
+        let w = rng.normal();
+        state = a * state + (1.0 - a) * w;
+        let lp = state;
+        let hp = w - lp;
+        // tilt in [-1.2, .2]: negative -> favour lowpass
+        let mix = ((tilt + 1.2) / 1.4).clamp(0.0, 1.0);
+        let mut v = lp * (1.0 - mix) + (0.3 * hp + 0.7 * w) * mix;
+        let t = i as f64 / fs;
+        v *= 1.0 + 0.5 * (std::f64::consts::TAU * mod_rate * t + mod_phase).sin();
+        *o = v;
+        peak = peak.max(v.abs());
+    }
+    out.iter().map(|&v| (v / peak * 0.7) as f32).collect()
+}
+
+/// Scale `noise` to the requested SNR (dB) against `clean` and mix.
+pub fn mix(clean: &[f32], nse: &[f32], snr_db: f64) -> Vec<f32> {
+    let pc: f64 = clean.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        / clean.len() as f64
+        + 1e-12;
+    let pn: f64 =
+        nse.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / nse.len() as f64 + 1e-12;
+    let g = (pc / pn / 10f64.powf(snr_db / 10.0)).sqrt();
+    clean
+        .iter()
+        .zip(nse)
+        .map(|(&c, &w)| c + (g * w as f64) as f32)
+        .collect()
+}
+
+/// One (noisy, clean) evaluation utterance at a random SNR in [-5, 10] dB.
+pub fn denoise_pair(rng: &mut Rng, n: usize, fs: f64) -> (Vec<f32>, Vec<f32>) {
+    let clean = speech(rng, n, fs);
+    let nse = noise(rng, n, fs);
+    let snr = rng.range(-5.0, 10.0);
+    (mix(&clean, &nse, snr), clean)
+}
+
+/// Number of synthetic ASC classes (TAU Urban has 10).
+pub const N_SCENES: usize = 10;
+
+/// One synthetic acoustic scene of class `label`: class-specific band
+/// emphasis (resonator at a class center frequency) + class-specific
+/// impulsive event train.
+pub fn scene(rng: &mut Rng, label: usize, n: usize, fs: f64) -> Vec<f32> {
+    assert!(label < N_SCENES);
+    let base = noise(rng, n, fs);
+    let fc = 200.0 + (6000.0 - 200.0) * label as f64 / (N_SCENES - 1) as f64;
+    let bw = 0.35 * fc + 200.0;
+    let r = (-std::f64::consts::PI * bw / fs).exp();
+    let w = std::f64::consts::TAU * fc / fs;
+    let (a1, a2) = (-2.0 * r * w.cos(), r * r);
+    let b0 = 1.0 - r;
+    let (mut y1, mut y2) = (0.0f64, 0.0f64);
+    let mut sig = vec![0.0f64; n];
+    for i in 0..n {
+        let x = base[i] as f64;
+        let y0 = b0 * x - a1 * y1 - a2 * y2;
+        y2 = y1;
+        y1 = y0;
+        sig[i] = x + 2.5 * y0;
+    }
+    // impulsive events
+    let n_events = 1 + (label * 3) / 2;
+    for _ in 0..n_events {
+        if n < 500 {
+            break;
+        }
+        let pos = rng.below(n - 400);
+        let len = 100 + rng.below(300);
+        for j in 0..len {
+            let hann = 0.5 - 0.5 * (std::f64::consts::TAU * j as f64 / len as f64).cos();
+            let tone = (std::f64::consts::TAU * fc * 1.5 * j as f64 / fs).sin();
+            sig[pos + j] += 1.5 * rng.normal() * hann * tone;
+        }
+    }
+    let peak = sig.iter().fold(1e-9f64, |m, &v| m.max(v.abs()));
+    sig.iter().map(|&v| (v / peak * 0.7) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speech_is_bounded_and_nonzero() {
+        let mut rng = Rng::new(1);
+        let s = speech(&mut rng, 8000, FS);
+        assert_eq!(s.len(), 8000);
+        let peak = s.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(peak > 0.3 && peak <= 0.71, "peak {peak}");
+    }
+
+    #[test]
+    fn noise_is_bounded() {
+        let mut rng = Rng::new(2);
+        let s = noise(&mut rng, 4000, FS);
+        let peak = s.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(peak > 0.3 && peak <= 0.71);
+    }
+
+    #[test]
+    fn mix_hits_requested_snr() {
+        let mut rng = Rng::new(3);
+        let c = speech(&mut rng, 16000, FS);
+        let w = noise(&mut rng, 16000, FS);
+        for snr in [-5.0, 0.0, 10.0] {
+            let m = mix(&c, &w, snr);
+            let e: Vec<f32> = m.iter().zip(&c).map(|(a, b)| a - b).collect();
+            let pc: f64 = c.iter().map(|&v| v as f64 * v as f64).sum();
+            let pe: f64 = e.iter().map(|&v| v as f64 * v as f64).sum();
+            let got = 10.0 * (pc / pe).log10();
+            assert!((got - snr).abs() < 0.1, "snr {snr} got {got}");
+        }
+    }
+
+    #[test]
+    fn scenes_are_distinguishable_by_spectrum() {
+        // class 0 (low band) should carry more low-frequency energy than
+        // class 9 (high band): compare lag-1 autocorrelation.
+        let ac = |xs: &[f32]| {
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for i in 1..xs.len() {
+                num += xs[i] as f64 * xs[i - 1] as f64;
+                den += xs[i] as f64 * xs[i] as f64;
+            }
+            num / den
+        };
+        let mut r0 = Rng::new(4);
+        let mut r9 = Rng::new(4);
+        let s0 = scene(&mut r0, 0, 16000, FS);
+        let s9 = scene(&mut r9, 9, 16000, FS);
+        assert!(ac(&s0) > ac(&s9) + 0.1, "{} vs {}", ac(&s0), ac(&s9));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = speech(&mut Rng::new(7), 1000, FS);
+        let b = speech(&mut Rng::new(7), 1000, FS);
+        assert_eq!(a, b);
+    }
+}

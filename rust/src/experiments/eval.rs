@@ -1,0 +1,137 @@
+//! Shared evaluation helpers: load a variant, run it over rust-generated
+//! synthetic utterances, and report SI-SNRi — the measured quality column
+//! of every speech table.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::dsp::{frames, metrics, siggen};
+use crate::runtime::{CompiledVariant, DeviceWeights, Weights};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+use super::Ctx;
+
+/// Load + compile one artifact variant by name.
+pub fn load_variant(ctx: &Ctx, name: &str) -> Result<CompiledVariant> {
+    CompiledVariant::load(ctx.rt.clone(), &ctx.artifacts.join(name))
+        .with_context(|| format!("loading variant '{name}'"))
+}
+
+/// A (noisy, clean) evaluation utterance shaped for the offline artifact:
+/// exactly `offline_t` frames of `feat` samples.
+pub fn eval_utterance(
+    rng: &mut Rng,
+    feat: usize,
+    t_frames: usize,
+) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let n = feat * t_frames;
+    let (noisy, clean) = siggen::denoise_pair(rng, n, siggen::FS);
+    let (cols, _) = frames(&noisy, feat);
+    // (feat, T) column-major frames -> row-major tensor
+    let mut data = vec![0.0f32; feat * t_frames];
+    for (t, col) in cols.iter().enumerate() {
+        for (i, &v) in col.iter().enumerate() {
+            data[i * t_frames + t] = v;
+        }
+    }
+    (Tensor::new(vec![feat, t_frames], data), noisy, clean)
+}
+
+/// Flatten an offline output (feat, T) back to a waveform.
+pub fn output_to_wave(out: &Tensor) -> Vec<f32> {
+    let (feat, t) = (out.shape[0], out.shape[1]);
+    let mut wave = vec![0.0f32; feat * t];
+    for tt in 0..t {
+        for i in 0..feat {
+            wave[tt * feat + i] = out.at2(i, tt);
+        }
+    }
+    wave
+}
+
+/// Measured SI-SNRi of a variant over `n` synthetic utterances, using the
+/// offline executable (identical numerics to streaming; proven by the
+/// integration tests).  Returns (mean, std).
+pub fn si_snri_offline(
+    cv: &CompiledVariant,
+    dw: &DeviceWeights,
+    n: usize,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let feat = cv.manifest.config.feat;
+    let t = cv.manifest.offline_t;
+    let mut rng = Rng::new(seed);
+    let mut imps = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (x, noisy, clean) = eval_utterance(&mut rng, feat, t);
+        let out = cv.offline(&x, dw)?;
+        let est = output_to_wave(&out);
+        let n_samp = est.len();
+        imps.push(metrics::si_snr_improvement(
+            &noisy[..n_samp],
+            &est,
+            &clean[..n_samp],
+        ));
+    }
+    Ok(mean_std(&imps))
+}
+
+/// Same measurement but with custom (possibly pruned) weights.
+pub fn si_snri_with_weights(
+    ctx: &Ctx,
+    cv: &CompiledVariant,
+    weights: &Weights,
+    n: usize,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let dw = weights.to_device(&ctx.rt)?;
+    si_snri_offline(cv, &dw, n, seed)
+}
+
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (m, v.sqrt())
+}
+
+/// Arc-wrap a loaded variant for the serving APIs.
+pub fn arced(cv: CompiledVariant) -> Arc<CompiledVariant> {
+    Arc::new(cv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn eval_utterance_shapes() {
+        let mut rng = Rng::new(1);
+        let (x, noisy, clean) = eval_utterance(&mut rng, 8, 32);
+        assert_eq!(x.shape, vec![8, 32]);
+        assert_eq!(noisy.len(), 256);
+        assert_eq!(clean.len(), 256);
+        // column layout: x[:, 0] == noisy[0..8]
+        for i in 0..8 {
+            assert_eq!(x.at2(i, 0), noisy[i]);
+        }
+    }
+
+    #[test]
+    fn wave_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        // columns: [1,4], [2,5], [3,6]
+        assert_eq!(output_to_wave(&t), vec![1., 4., 2., 5., 3., 6.]);
+    }
+}

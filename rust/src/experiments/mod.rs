@@ -1,0 +1,174 @@
+//! Experiment harness: one driver per table/figure of the paper
+//! (DESIGN.md §3 experiment index).  Every driver prints a markdown table
+//! (paper numbers side-by-side with ours) and writes it under `results/`.
+//!
+//! Conventions:
+//! * Complexity columns are analytic (`complexity::*`), quality columns
+//!   are measured on the synthetic substitution tasks, timing/memory
+//!   columns are real measurements of this implementation.
+//! * "paper" columns quote `complexity::paper` for shape comparison; we
+//!   reproduce *orderings and ratios*, not absolute dB (DESIGN.md §5).
+
+pub mod asc;
+pub mod eval;
+pub mod prune;
+pub mod speech;
+pub mod video;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Runtime;
+
+/// Execution context shared by all drivers.
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    pub rt: Arc<Runtime>,
+    /// Evaluation effort (number of utterances per variant).
+    pub n_eval: usize,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(artifacts: &Path, results: &Path, n_eval: usize, seed: u64) -> Result<Ctx> {
+        if !artifacts.exists() {
+            bail!(
+                "artifacts directory {} not found — run `make artifacts` first",
+                artifacts.display()
+            );
+        }
+        std::fs::create_dir_all(results)
+            .with_context(|| format!("creating {}", results.display()))?;
+        Ok(Ctx {
+            artifacts: artifacts.to_path_buf(),
+            results: results.to_path_buf(),
+            rt: Arc::new(Runtime::cpu()?),
+            n_eval,
+            seed,
+        })
+    }
+
+    /// Write a result table to `results/<name>.md` and echo it to stdout.
+    pub fn emit(&self, name: &str, body: &str) -> Result<()> {
+        let path = self.results.join(format!("{name}.md"));
+        std::fs::write(&path, body).with_context(|| format!("writing {}", path.display()))?;
+        println!("{body}");
+        println!("[written to {}]", path.display());
+        Ok(())
+    }
+}
+
+/// All experiments in paper order.
+pub const ALL: [&str; 11] = [
+    "table1", "table2", "table3", "fig6", "table4", "table5", "table6", "table7",
+    "table8", "table9", "table10",
+];
+
+/// Run one experiment by name ("table11" is an alias within table10's
+/// family; "all" runs everything).
+pub fn run(ctx: &Ctx, name: &str) -> Result<()> {
+    match name {
+        "table1" | "fig4" => speech::table1(ctx),
+        "table2" | "fig5" => speech::table2(ctx),
+        "table3" => speech::table3(ctx),
+        "fig6" => prune::fig6(ctx),
+        "table4" => asc::table4(ctx),
+        "table5" | "fig7" => speech::table5(ctx),
+        "table6" | "fig8" => speech::table6(ctx),
+        "table7" | "fig9" => speech::table7(ctx),
+        "table8" | "fig10" => speech::table8(ctx),
+        "table9" | "fig11" => speech::table9(ctx),
+        "table10" | "table11" => video::table10_11(ctx),
+        "all" => {
+            for n in ALL {
+                println!("\n===== {n} =====");
+                run(ctx, n)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}'; known: {ALL:?} or 'all'"),
+    }
+}
+
+/// Markdown table builder.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = format!("## {}\n\n", self.title);
+        let line = |cells: &[String], w: &[usize]| {
+            let mut s = String::from("|");
+            for (c, width) in cells.iter().zip(w) {
+                s.push_str(&format!(" {c:<width$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &w));
+        out.push('|');
+        for width in &w {
+            out.push_str(&format!("{}|", "-".repeat(width + 2)));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+        }
+        out
+    }
+}
+
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned_markdown() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["x".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("## T"));
+        assert!(s.contains("| a "));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_checks_arity() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["x".into(), "y".into()]);
+    }
+}

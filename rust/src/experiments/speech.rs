@@ -1,0 +1,465 @@
+//! Speech-separation experiment drivers: Tables 1/2/3/5/6/7/8/9 and the
+//! corresponding figures (4/5/7/8/9/10/11) — the paper's §4.1 + App. B–E.
+
+use anyhow::Result;
+
+use super::eval::{arced, load_variant, si_snri_offline};
+use super::{f1, f2, Ctx, Table};
+use crate::complexity::paper;
+use crate::coordinator::StreamSession;
+use crate::dsp::{frames, metrics, resample, siggen};
+use crate::util::rng::Rng;
+
+/// Measured row for one variant: SI-SNRi (mean±std), retain %, MMAC/s.
+struct Row {
+    label: String,
+    si_snri: f64,
+    si_std: f64,
+    retain: f64,
+    mmacs: f64,
+    precomp: f64,
+}
+
+fn measure(ctx: &Ctx, name: &str, label: &str, stmc_macs: f64) -> Result<Row> {
+    let cv = load_variant(ctx, name)?;
+    let dw = cv.device_weights()?;
+    let (m, s) = si_snri_offline(&cv, &dw, ctx.n_eval, ctx.seed)?;
+    let fps = siggen::FS / cv.manifest.config.feat as f64;
+    // recompute precomputed % analytically via the complexity engine
+    let net = crate::complexity::unet::network(&cv.manifest.config, 256, fps);
+    Ok(Row {
+        label: label.to_string(),
+        si_snri: m,
+        si_std: s,
+        retain: 100.0 * cv.manifest.macs_per_frame / stmc_macs,
+        mmacs: cv.manifest.macs_per_frame * fps / 1e6,
+        precomp: net.precomputed_pct(),
+    })
+}
+
+fn stmc_macs_per_frame(ctx: &Ctx) -> Result<f64> {
+    Ok(load_variant(ctx, "stmc")?.manifest.macs_per_frame)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 / Figure 4 — PP SOI
+// ---------------------------------------------------------------------------
+
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    let base = stmc_macs_per_frame(ctx)?;
+    let mut t = Table::new(
+        "Table 1 — Partially predictive SOI (speech separation)",
+        &[
+            "Model", "SI-SNRi (dB)", "±", "retain %", "MMAC/s", "paper SI-SNRi",
+            "paper retain %",
+        ],
+    );
+    let spec: Vec<(&str, String, Option<(f64, f64)>)> = vec![
+        ("stmc", "STMC".into(), Some((paper::STMC_SISNRI, 100.0))),
+        ("pred1", "Predictive 1".into(), Some((7.41, 100.0))),
+        ("pred2", "Predictive 2".into(), Some((6.51, 100.0))),
+        ("scc1", "S-CC 1".into(), Some((7.15, 50.1))),
+        ("scc2", "S-CC 2".into(), Some((7.23, 51.4))),
+        ("scc3", "S-CC 3".into(), Some((7.28, 58.1))),
+        ("scc4", "S-CC 4".into(), Some((7.43, 61.5))),
+        ("scc5", "S-CC 5".into(), Some((7.47, 64.8))),
+        ("scc6", "S-CC 6".into(), Some((7.56, 71.3))),
+        ("scc7", "S-CC 7".into(), Some((7.55, 83.8))),
+    ];
+    let mut rows = Vec::new();
+    for (name, label, paper_ref) in &spec {
+        let r = measure(ctx, name, label, base)?;
+        let (psnr, pret) = paper_ref.unwrap_or((f64::NAN, f64::NAN));
+        t.row(vec![
+            r.label.clone(),
+            f2(r.si_snri),
+            f2(r.si_std),
+            f1(r.retain),
+            f1(r.mmacs),
+            f2(psnr),
+            f1(pret),
+        ]);
+        rows.push(r);
+    }
+    for &(p, q, psnr, pret) in &paper::TABLE1_2SCC {
+        let name = format!("scc{p}_{q}");
+        if !ctx.artifacts.join(&name).exists() {
+            continue;
+        }
+        let r = measure(ctx, &name, &format!("2xS-CC {p}|{q}"), base)?;
+        t.row(vec![
+            r.label.clone(),
+            f2(r.si_snri),
+            f2(r.si_std),
+            f1(r.retain),
+            f1(r.mmacs),
+            f2(psnr),
+            f1(pret),
+        ]);
+        rows.push(r);
+    }
+    let mut body = t.render();
+    body.push_str(&shape_checks_pp(&rows));
+    ctx.emit("table1", &body)
+}
+
+/// The qualitative claims Table 1 makes, asserted on our measurements.
+fn shape_checks_pp(rows: &[Row]) -> String {
+    let find = |l: &str| rows.iter().find(|r| r.label == l);
+    let mut out = String::from("\nShape checks (paper's qualitative claims on our data):\n");
+    let mut check = |name: &str, ok: bool| {
+        out.push_str(&format!("- [{}] {}\n", if ok { "x" } else { " " }, name));
+    };
+    if let (Some(stmc), Some(s1), Some(s5), Some(s7)) =
+        (find("STMC"), find("S-CC 1"), find("S-CC 5"), find("S-CC 7"))
+    {
+        check("earlier S-CC ⇒ lower quality (S-CC1 < S-CC5)", s1.si_snri < s5.si_snri);
+        check("earlier S-CC ⇒ bigger savings (retain1 < retain5)", s1.retain < s5.retain);
+        check("late S-CC ~ STMC quality (S-CC7 ≥ STMC − 1 dB)", s7.si_snri >= stmc.si_snri - 1.0);
+        check("all SOI variants cheaper than STMC", rows.iter().all(|r| r.retain <= 100.01));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 / Figure 5 — FP SOI
+// ---------------------------------------------------------------------------
+
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    let base = stmc_macs_per_frame(ctx)?;
+    let mut t = Table::new(
+        "Table 2 — Fully predictive SOI (speech separation)",
+        &[
+            "Model", "SI-SNRi (dB)", "±", "retain %", "MMAC/s", "Precomp %",
+            "measured hidden %", "paper SI-SNRi", "paper precomp %",
+        ],
+    );
+    let spec: Vec<(String, String, f64, f64)> = vec![
+        ("stmc".into(), "STMC".into(), paper::STMC_SISNRI, 0.0),
+        ("pred1".into(), "Predictive 1".into(), 7.41, 100.0),
+        ("pred2".into(), "Predictive 2".into(), 6.51, 100.0),
+        ("sscc2".into(), "SS-CC 2".into(), 6.64, 97.2),
+        ("sscc5".into(), "SS-CC 5".into(), 7.24, 70.4),
+        ("sscc7".into(), "SS-CC 7".into(), 7.52, 32.4),
+        ("fp1_3".into(), "S-CC 1|3".into(), 6.82, 83.7),
+        ("fp1_6".into(), "S-CC 1|6".into(), 7.06, 57.4),
+        ("fp2_5".into(), "S-CC 2|5".into(), 6.93, 70.4),
+        ("fp3_6".into(), "S-CC 3|6".into(), 7.10, 57.4),
+        ("fp4_6".into(), "S-CC 4|6".into(), 7.30, 57.4),
+        ("fp5_6".into(), "S-CC 5|6".into(), 7.23, 57.4),
+        ("fp6_7".into(), "S-CC 6|7".into(), 7.39, 32.4),
+    ];
+    for (name, label, psnr, ppre) in &spec {
+        if !ctx.artifacts.join(name).exists() {
+            continue;
+        }
+        let r = measure(ctx, name, label, base)?;
+        let hidden = measured_hidden_pct(ctx, name)?;
+        t.row(vec![
+            r.label.clone(),
+            f2(r.si_snri),
+            f2(r.si_std),
+            f1(r.retain),
+            f1(r.mmacs),
+            f1(r.precomp),
+            f1(hidden),
+            f2(*psnr),
+            f1(*ppre),
+        ]);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\n'Precomp %' is analytic (fraction of full-rate MACs depending on past \
+         data only); 'measured hidden %' is the wall-clock share of each inference \
+         actually executed in the idle gap by the coordinator's FP scheduler.\n",
+    );
+    ctx.emit("table2", &body)
+}
+
+/// Run a short stream through the coordinator and report the fraction of
+/// inference wall time hidden in the precompute slot.
+fn measured_hidden_pct(ctx: &Ctx, name: &str) -> Result<f64> {
+    let cv = arced(load_variant(ctx, name)?);
+    if !cv.manifest.has_fp_split() {
+        return Ok(0.0);
+    }
+    let dw = std::sync::Arc::new(cv.device_weights()?);
+    let feat = cv.manifest.config.feat;
+    let mut sess = StreamSession::new(0, cv, dw);
+    let mut rng = Rng::new(ctx.seed ^ 0x51de);
+    let (noisy, _) = siggen::denoise_pair(&mut rng, feat * 256, siggen::FS);
+    let (cols, _) = frames(&noisy, feat);
+    for col in &cols {
+        sess.idle()?; // the idle gap between frames
+        sess.on_frame(col)?;
+    }
+    Ok(100.0 * sess.metrics.hidden_fraction())
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — resampling baselines
+// ---------------------------------------------------------------------------
+
+pub fn table3(ctx: &Ctx) -> Result<()> {
+    let base = stmc_macs_per_frame(ctx)?;
+    let cv = load_variant(ctx, "stmc")?;
+    let dw = cv.device_weights()?;
+    let feat = cv.manifest.config.feat;
+    let t_frames = cv.manifest.offline_t;
+    let fps = siggen::FS / feat as f64;
+    let stmc_mmacs = base * fps / 1e6;
+
+    let mut t = Table::new(
+        "Table 3 — SOI vs resampling (denoising through a 16k→8k→16k round trip)",
+        &["Method", "SI-SNRi (dB)", "MMAC/s", "paper SI-SNRi", "paper MMAC/s"],
+    );
+    // STMC reference
+    let (m0, _) = si_snri_offline(&cv, &dw, ctx.n_eval, ctx.seed)?;
+    t.row(vec![
+        "STMC".into(),
+        f2(m0),
+        f1(stmc_mmacs),
+        f2(paper::STMC_SISNRI),
+        f1(paper::STMC_MMACS),
+    ]);
+
+    // Resampling baselines: model runs on the 8 kHz stream (half the
+    // frames per second => half the MMAC/s), output upsampled back.
+    for (method, (plabel, psnr, pmm)) in resample::Method::ALL.iter().zip([
+        ("Linear", 3.49, 909.6),
+        ("Polyphase", 5.69, 909.6),
+        ("Kaiser", 5.83, 909.6),
+        ("SoX", 5.77, 909.6),
+    ]) {
+        let mut rng = Rng::new(ctx.seed);
+        let mut imps = Vec::new();
+        for _ in 0..ctx.n_eval {
+            let n = feat * t_frames * 2; // 2x samples so 8 kHz yields t_frames
+            let (noisy, clean) = siggen::denoise_pair(&mut rng, n, siggen::FS);
+            let down = resample::downsample2(&noisy, *method);
+            let (cols, nt) = frames(&down, feat);
+            let nt = nt.min(t_frames);
+            let mut data = vec![0.0f32; feat * t_frames];
+            for (tt, col) in cols.iter().take(nt).enumerate() {
+                for (i, &v) in col.iter().enumerate() {
+                    data[i * t_frames + tt] = v;
+                }
+            }
+            let x = crate::util::tensor::Tensor::new(vec![feat, t_frames], data);
+            let out = cv.offline(&x, &dw)?;
+            let est8 = super::eval::output_to_wave(&out);
+            let est16 = resample::upsample2(&est8[..nt * feat], *method);
+            let n_s = est16.len().min(clean.len());
+            imps.push(metrics::si_snr_improvement(
+                &noisy[..n_s],
+                &est16[..n_s],
+                &clean[..n_s],
+            ));
+        }
+        let (m, _) = super::eval::mean_std(&imps);
+        t.row(vec![
+            method.name().into(),
+            f2(m),
+            f1(stmc_mmacs / 2.0),
+            f2(psnr),
+            f1(pmm),
+        ]);
+        let _ = plabel;
+    }
+
+    // SOI comparison points (same rows the paper lists)
+    for (name, label, psnr, pmm) in [
+        ("scc5", "S-CC 5", 7.47, 1178.7),
+        ("scc2", "S-CC 2", 7.23, 935.2),
+        ("scc1_3", "S-CC 1|3", 6.27, 528.8),
+    ] {
+        if !ctx.artifacts.join(name).exists() {
+            continue;
+        }
+        let r = measure(ctx, name, label, base)?;
+        t.row(vec![label.into(), f2(r.si_snri), f1(r.mmacs), f2(psnr), f1(pmm)]);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nShape check: SOI variants must dominate resampling at comparable \
+         complexity (the paper's headline for Table 3).\n",
+    );
+    ctx.emit("table3", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 / Figure 7 — prediction length (App. B)
+// ---------------------------------------------------------------------------
+
+pub fn table5(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 5 — Strided convolutions are better for longer predictions",
+        &[
+            "Len", "Predictive (dB)", "±", "Strided pred (dB)", "±",
+            "paper pred", "paper strided",
+        ],
+    );
+    let base = stmc_macs_per_frame(ctx)?;
+    let mut ours: Vec<(f64, f64)> = Vec::new();
+    for (n, ppred, pstr) in paper::TABLE5_PREDICTION {
+        let p = measure(ctx, &format!("pred{n}"), "p", base)?;
+        let s = measure(ctx, &format!("spred{n}"), "s", base)?;
+        t.row(vec![
+            n.to_string(),
+            f2(p.si_snri),
+            f2(p.si_std),
+            f2(s.si_snri),
+            f2(s.si_std),
+            f2(ppred),
+            f2(pstr),
+        ]);
+        ours.push((p.si_snri, s.si_snri));
+    }
+    let mut body = t.render();
+    let degrades = ours.windows(2).all(|w| w[1].0 <= w[0].0 + 0.3);
+    body.push_str(&format!(
+        "\nShape checks:\n- [{}] longer prediction degrades quality (monotone trend)\n- [{}] strided catches up or wins at longer predictions (paper's App. B claim)\n",
+        if degrades { "x" } else { " " },
+        if ours.last().map_or(false, |l| l.1 >= l.0 - 0.3) { "x" } else { " " },
+    ));
+    ctx.emit("table5", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 / Figure 8 — inference time + peak memory (REAL measurements)
+// ---------------------------------------------------------------------------
+
+pub fn table6(ctx: &Ctx) -> Result<()> {
+    let base = stmc_macs_per_frame(ctx)?;
+    let mut t = Table::new(
+        "Table 6 — measured average inference time and peak state memory",
+        &[
+            "Model", "SI-SNRi (dB)", "retain %", "avg step (µs)", "p95 (µs)",
+            "state KB", "paper ms", "paper MB",
+        ],
+    );
+    let names: Vec<(String, String)> = std::iter::once(("stmc".into(), "STMC".into()))
+        .chain((1..=7).map(|p| (format!("scc{p}"), format!("S-CC {p}"))))
+        .collect();
+    for ((name, label), (plabel, pms, pmb)) in names.iter().zip(paper::TABLE6_TIME_MEM) {
+        let _ = plabel;
+        let r = measure(ctx, name, label, base)?;
+        let cv = arced(load_variant(ctx, name)?);
+        let dw = std::sync::Arc::new(cv.device_weights()?);
+        let feat = cv.manifest.config.feat;
+        let mut sess = StreamSession::new(0, cv, dw);
+        let mut rng = Rng::new(ctx.seed ^ 0xBEEF);
+        let (noisy, _) = siggen::denoise_pair(&mut rng, feat * 512, siggen::FS);
+        let (cols, _) = frames(&noisy, feat);
+        for col in &cols {
+            sess.on_frame(col)?;
+        }
+        let mean_us = sess.metrics.arrival_latency.mean() / 1e3;
+        let p95_us = sess.metrics.arrival_latency.p95() as f64 / 1e3;
+        let state_kb = sess.state_bytes() as f64 / 1024.0;
+        t.row(vec![
+            label.clone(),
+            f2(r.si_snri),
+            f1(r.retain),
+            f1(mean_us),
+            f1(p95_us),
+            f2(state_kb),
+            f2(pms),
+            f1(pmb),
+        ]);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nTiming is the measured on-arrival wall time per frame through the \
+         coordinator + PJRT CPU path (µs here vs the paper's ms on an MCU-class \
+         target); 'state KB' is the per-stream partial-state cache — the memory \
+         the paper's Table 6 tracks.\n",
+    );
+    ctx.emit("table6", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Table 7 / Figure 9 — interpolation (App. D)
+// ---------------------------------------------------------------------------
+
+pub fn table7(ctx: &Ctx) -> Result<()> {
+    let base = stmc_macs_per_frame(ctx)?;
+    let mut t = Table::new(
+        "Table 7 — duplication vs interpolation for PP SOI (App. D)",
+        &["Model", "Duplication", "Nearest", "Linear", "Cubic", "paper dup", "paper bilinear"],
+    );
+    for (p, pdup, pbil) in [(2usize, 7.23, 7.42), (5usize, 7.47, 7.63)] {
+        let dup = measure(ctx, &format!("scc{p}"), "d", base)?;
+        let near = measure(ctx, &format!("scc{p}_inearest"), "n", base)?;
+        let lin = measure(ctx, &format!("scc{p}_ilinear"), "l", base)?;
+        let cub = measure(ctx, &format!("scc{p}_icubic"), "c", base)?;
+        t.row(vec![
+            format!("S-CC {p}"),
+            f2(dup.si_snri),
+            f2(near.si_snri),
+            f2(lin.si_snri),
+            f2(cub.si_snri),
+            f2(pdup),
+            f2(pbil),
+        ]);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nInterpolation waits one extra compressed frame (higher latency) — \
+         evaluated through the offline artifacts, matching App. D's setup.\n",
+    );
+    ctx.emit("table7", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Tables 8/9 / Figures 10/11 — duplication vs transposed conv (App. E)
+// ---------------------------------------------------------------------------
+
+pub fn table8(ctx: &Ctx) -> Result<()> {
+    let base = stmc_macs_per_frame(ctx)?;
+    let mut t = Table::new(
+        "Table 8 — extrapolation: duplication vs transposed conv (PP)",
+        &["Model", "Duplication", "Tconv", "Hybrid", "paper dup", "paper tconv"],
+    );
+    for (p, pdup, ptc) in [(2usize, 6.25, 6.29), (5usize, 7.14, 7.15)] {
+        let dup = measure(ctx, &format!("scc{p}"), "d", base)?;
+        let tc = measure(ctx, &format!("scc{p}_tconv"), "t", base)?;
+        let hybrid = if p == 2 && ctx.artifacts.join("scc2_5_tconv").exists() {
+            let h = measure(ctx, "scc2_5_tconv", "h", base)?;
+            f2(h.si_snri)
+        } else {
+            "-".into()
+        };
+        t.row(vec![
+            format!("S-CC {p}"),
+            f2(dup.si_snri),
+            f2(tc.si_snri),
+            hybrid,
+            f2(pdup),
+            f2(ptc),
+        ]);
+    }
+    let mut body = t.render();
+    body.push_str("\nPaper's conclusion (App. E): neither method dominates; duplication wins on simplicity.\n");
+    ctx.emit("table8", &body)
+}
+
+pub fn table9(ctx: &Ctx) -> Result<()> {
+    let base = stmc_macs_per_frame(ctx)?;
+    let mut t = Table::new(
+        "Table 9 — extrapolation: duplication vs transposed conv (FP)",
+        &["Model", "Duplication", "Tconv", "paper dup", "paper tconv"],
+    );
+    for (p, pdup, ptc) in [(2usize, 6.64, 6.73), (5usize, 7.24, 7.15)] {
+        let dup = measure(ctx, &format!("sscc{p}"), "d", base)?;
+        let tc = measure(ctx, &format!("sscc{p}_tconv"), "t", base)?;
+        t.row(vec![
+            format!("SS-CC {p}"),
+            f2(dup.si_snri),
+            f2(tc.si_snri),
+            f2(pdup),
+            f2(ptc),
+        ]);
+    }
+    ctx.emit("table9", &t.render())
+}

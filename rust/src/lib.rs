@@ -1,0 +1,24 @@
+//! # SOI: Scattered Online Inference
+//!
+//! Production-quality reproduction of *"SOI: Scaling Down Computational
+//! Complexity by Estimating Partial States of the Model"* (NeurIPS 2024)
+//! as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas streaming-conv kernels,
+//! * **L2** (`python/compile/model.py`) — the causal U-Net and its SOI
+//!   variants, AOT-lowered to HLO text at build time,
+//! * **L3** (this crate) — the streaming serving coordinator: SOI phase
+//!   scheduling, FP precompute overlap, per-stream partial-state caches,
+//!   multi-stream workers, metrics, plus every substrate the paper's
+//!   evaluation needs (complexity accounting, resamplers, pruning,
+//!   synthetic signal generation, SI-SNR).
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod complexity;
+pub mod coordinator;
+pub mod dsp;
+pub mod experiments;
+pub mod pruning;
+pub mod runtime;
+pub mod util;

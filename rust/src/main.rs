@@ -1,0 +1,211 @@
+//! `soi` — the SOI streaming-inference coordinator CLI.
+//!
+//! Subcommands:
+//!   list                         list built artifact variants
+//!   info     <variant>           manifest summary for one variant
+//!   exp      <table|fig|all>     regenerate a paper table/figure (results/)
+//!   serve    <variant> [opts]    multi-stream serving benchmark
+//!   denoise  <variant> [opts]    stream one synthetic utterance, report SI-SNRi
+//!
+//! Common options: --artifacts DIR (default ./artifacts), --results DIR
+//! (default ./results), --n-eval N (default 6), --seed S, --streams N,
+//! --frames N, --workers N.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use soi::coordinator::Server;
+use soi::dsp::{frames, metrics, siggen};
+use soi::experiments::{self, Ctx};
+use soi::runtime::{list_variants, CompiledVariant, Manifest, Runtime};
+use soi::util::cli::Args;
+use soi::util::rng::Rng;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["help", "no-idle-precompute"]).map_err(anyhow::Error::msg)?;
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+
+    match cmd {
+        "help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "list" => {
+            let names = list_variants(&artifacts)
+                .with_context(|| format!("listing {}", artifacts.display()))?;
+            println!("{:<16} {:>9} {:>10} {:>8} {:>9} {:>8}", "variant", "period",
+                     "MAC/frame", "retain%", "SI-SNRi", "FP");
+            let base = Manifest::load(&artifacts.join("stmc")).ok();
+            for n in names {
+                let m = Manifest::load(&artifacts.join(&n))?;
+                let retain = base
+                    .as_ref()
+                    .map(|b| 100.0 * m.macs_per_frame / b.macs_per_frame)
+                    .unwrap_or(f64::NAN);
+                println!(
+                    "{:<16} {:>9} {:>10.0} {:>8.1} {:>9.2} {:>8}",
+                    m.name,
+                    m.period,
+                    m.macs_per_frame,
+                    retain,
+                    m.si_snri().unwrap_or(f64::NAN),
+                    if m.has_fp_split() { "yes" } else { "-" },
+                );
+            }
+            Ok(())
+        }
+        "info" => {
+            let name = args.positional().get(1).context("info needs a variant name")?;
+            let m = Manifest::load(&artifacts.join(name))?;
+            println!("name            {}", m.name);
+            println!("config          feat={} channels={:?} k={}", m.config.feat,
+                     m.config.channels, m.config.kernel);
+            println!("scc             {:?}  shift_pos={:?} shift={}", m.config.scc,
+                     m.config.shift_pos, m.config.shift);
+            println!("period          {}", m.period);
+            println!("macs/frame      {:.0}", m.macs_per_frame);
+            println!("precomputed     {:.1}%", 100.0 * m.precomputed_fraction);
+            println!("params          {}", m.param_count);
+            println!("state bytes     {}", m.state_bytes);
+            println!("states          {}", m.states.len());
+            println!("executables     {:?}", m.executables.keys().collect::<Vec<_>>());
+            println!("train SI-SNRi   {:?}", m.si_snri());
+            Ok(())
+        }
+        "exp" => {
+            let what = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
+            let results = PathBuf::from(args.str_or("results", "results"));
+            let ctx = Ctx::new(
+                &artifacts,
+                &results,
+                args.usize_or("n-eval", 6).map_err(anyhow::Error::msg)?,
+                args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+            )?;
+            experiments::run(&ctx, what)
+        }
+        "serve" => {
+            let name = args.positional().get(1).context("serve needs a variant name")?;
+            let n_streams = args.usize_or("streams", 8).map_err(anyhow::Error::msg)?;
+            let n_frames = args.usize_or("frames", 500).map_err(anyhow::Error::msg)?;
+            let workers = args.usize_or("workers", 4).map_err(anyhow::Error::msg)?;
+            let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+            serve_bench(&artifacts, name, n_streams, n_frames, workers, seed,
+                        !args.flag("no-idle-precompute"))
+        }
+        "denoise" => {
+            let name = args.positional().get(1).context("denoise needs a variant name")?;
+            let n_frames = args.usize_or("frames", 1000).map_err(anyhow::Error::msg)?;
+            let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+            denoise_once(&artifacts, name, n_frames, seed)
+        }
+        other => bail!("unknown command '{other}'\n{HELP}"),
+    }
+}
+
+/// Multi-stream serving benchmark over synthetic utterances.
+fn serve_bench(
+    artifacts: &std::path::Path,
+    name: &str,
+    n_streams: usize,
+    n_frames: usize,
+    workers: usize,
+    seed: u64,
+    idle_precompute: bool,
+) -> Result<()> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let cv = Arc::new(CompiledVariant::load(rt, &artifacts.join(name))?);
+    let feat = cv.manifest.config.feat;
+    println!(
+        "serving '{name}': {n_streams} streams x {n_frames} frames, {workers} workers, \
+         period {}, FP split: {}",
+        cv.manifest.period,
+        cv.manifest.has_fp_split()
+    );
+    let mut rng = Rng::new(seed);
+    let mut streams = Vec::with_capacity(n_streams);
+    let mut cleans = Vec::with_capacity(n_streams);
+    let mut noisys = Vec::with_capacity(n_streams);
+    for _ in 0..n_streams {
+        let (noisy, clean) = siggen::denoise_pair(&mut rng, feat * n_frames, siggen::FS);
+        let (cols, _) = frames(&noisy, feat);
+        streams.push(cols);
+        cleans.push(clean);
+        noisys.push(noisy);
+    }
+    let mut server = Server::new(cv, workers);
+    server.idle_precompute = idle_precompute;
+    let report = server.run(&streams)?;
+    println!("{}", report.metrics.report());
+    println!(
+        "throughput: {:.0} frames/s ({:.1}x realtime across streams)",
+        report.throughput_fps(),
+        report.throughput_fps() / (siggen::FS / feat as f64)
+    );
+    // quality check over served outputs
+    let mut imps = Vec::new();
+    for (sid, outs) in &report.outputs {
+        let est: Vec<f32> = outs.iter().flatten().copied().collect();
+        let n = est.len();
+        imps.push(metrics::si_snr_improvement(
+            &noisys[*sid as usize][..n],
+            &est,
+            &cleans[*sid as usize][..n],
+        ));
+    }
+    let (m, s) = soi::experiments::eval::mean_std(&imps);
+    println!("served SI-SNRi: {m:.2} ± {s:.2} dB over {} streams", imps.len());
+    Ok(())
+}
+
+/// Stream one utterance through a single session and report quality.
+fn denoise_once(
+    artifacts: &std::path::Path,
+    name: &str,
+    n_frames: usize,
+    seed: u64,
+) -> Result<()> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let cv = Arc::new(CompiledVariant::load(rt, &artifacts.join(name))?);
+    let feat = cv.manifest.config.feat;
+    let dw = Arc::new(cv.device_weights()?);
+    let mut sess = soi::coordinator::StreamSession::new(0, cv, dw);
+    let mut rng = Rng::new(seed);
+    let (noisy, clean) = siggen::denoise_pair(&mut rng, feat * n_frames, siggen::FS);
+    let (cols, _) = frames(&noisy, feat);
+    let mut est = Vec::with_capacity(noisy.len());
+    for col in &cols {
+        sess.idle()?;
+        est.extend(sess.on_frame(col)?);
+    }
+    let n = est.len();
+    println!(
+        "SI-SNRi {:.2} dB | {}",
+        metrics::si_snr_improvement(&noisy[..n], &est, &clean[..n]),
+        sess.metrics.report()
+    );
+    Ok(())
+}
+
+const HELP: &str = "soi — Scattered Online Inference coordinator
+usage: soi <command> [options]
+  list                          list built artifact variants
+  info <variant>                manifest summary
+  exp <table1..table10|fig4..fig11|all>   regenerate paper tables/figures
+  serve <variant> [--streams N] [--frames N] [--workers N] [--no-idle-precompute]
+  denoise <variant> [--frames N]
+options: --artifacts DIR  --results DIR  --n-eval N  --seed S";

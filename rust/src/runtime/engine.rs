@@ -1,0 +1,377 @@
+//! PJRT execution engine: compiles a variant's HLO-text artifacts and runs
+//! them from the coordinator hot path.
+//!
+//! Implementation notes:
+//!
+//! * We execute with `execute_b` over device buffers, **not** `execute`
+//!   over literals: the `xla` crate's `execute` path leaks one device
+//!   buffer per argument per call (`buffer.release()` without a matching
+//!   free in xla_rs.cc) — fatal for a long-running server at 500 fps.
+//!   With `execute_b` we own the input buffers and they are freed on Drop.
+//! * All step executables return one tuple (jax lowered with
+//!   `return_tuple=True`); PJRT hands back a single tuple buffer which we
+//!   copy to host and decompose.
+//! * Weights are uploaded to the device once per variant (`DeviceWeights`)
+//!   and shared by every stream; per-step uploads are just the frame and
+//!   the per-stream partial states.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use crate::util::tensor::{f32s_from_le_bytes, Tensor};
+
+/// Shared PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile one HLO-text file into a loaded executable.
+    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+
+    /// Upload a host tensor to a device buffer.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .context("uploading tensor")
+    }
+
+    /// Upload raw f32 data with explicit dims.
+    pub fn upload_raw(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .context("uploading raw buffer")
+    }
+}
+
+/// A compiled executable returning a single tuple.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute over device buffers; decompose the tuple into host tensors.
+    pub fn run(&self, args: &[&xla::PjRtBuffer], out_shapes: &[Vec<usize>]) -> Result<Vec<Tensor>> {
+        let results = self.exe.execute_b(args).context("execute_b")?;
+        let buf = &results[0][0];
+        let mut lit = buf.to_literal_sync().context("tuple to host")?;
+        let parts = lit.decompose_tuple().context("decompose tuple")?;
+        if parts.len() != out_shapes.len() {
+            bail!(
+                "executable returned {} outputs, expected {}",
+                parts.len(),
+                out_shapes.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, shape) in parts.into_iter().zip(out_shapes) {
+            let data = p.to_vec::<f32>().context("tuple element to f32")?;
+            out.push(Tensor::new(shape.clone(), data));
+        }
+        Ok(out)
+    }
+}
+
+/// Host-side weights in manifest order (prunable).
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Weights {
+    /// Read `weights.bin` laid out per the manifest param specs.
+    pub fn load(manifest: &Manifest) -> Result<Weights> {
+        let path = manifest.dir.join("weights.bin");
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let vals = f32s_from_le_bytes(&bytes);
+        let want: usize = manifest.params.iter().map(|p| p.elements()).sum();
+        if vals.len() != want {
+            bail!(
+                "{}: weights.bin holds {} f32s, manifest wants {}",
+                manifest.name,
+                vals.len(),
+                want
+            );
+        }
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        let mut off = 0;
+        for spec in &manifest.params {
+            let n = spec.elements();
+            tensors.push(Tensor::new(spec.shape.clone(), vals[off..off + n].to_vec()));
+            off += n;
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Upload all weights once; shared across streams.
+    pub fn to_device(&self, rt: &Runtime) -> Result<DeviceWeights> {
+        let bufs = self
+            .tensors
+            .iter()
+            .map(|t| rt.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceWeights { bufs })
+    }
+}
+
+/// Device-resident weights.
+pub struct DeviceWeights {
+    pub bufs: Vec<xla::PjRtBuffer>,
+}
+
+/// One compiled SOI variant: all executables + manifest + weights.
+pub struct CompiledVariant {
+    pub manifest: Manifest,
+    pub weights: Weights,
+    // Phases with identical graphs share one compiled executable (Arc).
+    step: Vec<Arc<Executable>>, // indexed by phase
+    pre: Vec<Arc<Executable>>,  // empty unless FP
+    rest: Vec<Arc<Executable>>, // empty unless FP
+    offline: Arc<Executable>,
+    rt: Arc<Runtime>,
+}
+
+/// Per-stream partial states (host side).
+#[derive(Debug, Clone)]
+pub struct StateSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl CompiledVariant {
+    /// Load manifest + weights and compile every executable.
+    ///
+    /// Phases whose manifests point at the same HLO file share one
+    /// compiled executable (aot.py dedupes identical graphs).
+    pub fn load(rt: Arc<Runtime>, dir: &Path) -> Result<CompiledVariant> {
+        let manifest = Manifest::load(dir)?;
+        let weights = Weights::load(&manifest)?;
+        Self::with_weights(rt, manifest, weights)
+    }
+
+    pub fn with_weights(
+        rt: Arc<Runtime>,
+        manifest: Manifest,
+        weights: Weights,
+    ) -> Result<CompiledVariant> {
+        let mut cache: std::collections::BTreeMap<String, usize> = Default::default();
+        let mut exes: Vec<Executable> = Vec::new();
+        let mut index_of = |key: &str| -> Result<usize> {
+            let file = manifest
+                .executables
+                .get(key)
+                .with_context(|| format!("missing executable {key}"))?
+                .clone();
+            if let Some(&i) = cache.get(&file) {
+                return Ok(i);
+            }
+            let exe = rt.compile_file(&manifest.dir.join(&file))?;
+            exes.push(exe);
+            cache.insert(file, exes.len() - 1);
+            Ok(exes.len() - 1)
+        };
+
+        let mut step_idx = Vec::new();
+        let mut pre_idx = Vec::new();
+        let mut rest_idx = Vec::new();
+        if manifest.streamable {
+            for phase in 0..manifest.period {
+                step_idx.push(index_of(&format!("step_p{phase}"))?);
+            }
+            if manifest.has_fp_split() {
+                for phase in 0..manifest.period {
+                    pre_idx.push(index_of(&format!("pre_p{phase}"))?);
+                    rest_idx.push(index_of(&format!("rest_p{phase}"))?);
+                }
+            }
+        }
+        let off_idx = index_of("offline")?;
+
+        let exes: Vec<Arc<Executable>> = exes.into_iter().map(Arc::new).collect();
+        let pick = |idx: &[usize]| idx.iter().map(|&i| exes[i].clone()).collect::<Vec<_>>();
+        Ok(CompiledVariant {
+            step: pick(&step_idx),
+            pre: pick(&pre_idx),
+            rest: pick(&rest_idx),
+            offline: exes[off_idx].clone(),
+            manifest,
+            weights,
+            rt,
+        })
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    pub fn device_weights(&self) -> Result<DeviceWeights> {
+        self.weights.to_device(&self.rt)
+    }
+
+    /// Fresh zeroed per-stream states.
+    ///
+    /// Modern artifacts exchange one packed state vector (manifest
+    /// `packed_states` > 0) — a single HBM upload per inference; legacy
+    /// artifacts exchange one tensor per state spec.
+    pub fn init_states(&self) -> StateSet {
+        if self.manifest.packed_states > 0 {
+            return StateSet {
+                tensors: vec![Tensor::zeros(vec![self.manifest.packed_states])],
+            };
+        }
+        StateSet {
+            tensors: self
+                .manifest
+                .states
+                .iter()
+                .map(|s| Tensor::zeros(s.shape.clone()))
+                .collect(),
+        }
+    }
+
+    fn state_shapes(&self) -> Vec<Vec<usize>> {
+        if self.manifest.packed_states > 0 {
+            return vec![vec![self.manifest.packed_states]];
+        }
+        self.manifest.states.iter().map(|s| s.shape.clone()).collect()
+    }
+
+    /// One full streaming inference at schedule position `phase`.
+    ///
+    /// Uploads the frame + states, executes `step_p<phase>`, writes the new
+    /// states back into `states`, returns the output frame.
+    pub fn step(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        dev_weights: &DeviceWeights,
+    ) -> Result<Vec<f32>> {
+        let exe = &self.step[phase % self.manifest.period];
+        self.run_step_like(exe, Some(frame), states, dev_weights, true)
+    }
+
+    /// FP precompute: the delayed-region part of inference `phase`;
+    /// consumes no input frame, only updates states.
+    pub fn precompute(
+        &self,
+        phase: usize,
+        states: &mut StateSet,
+        dev_weights: &DeviceWeights,
+    ) -> Result<()> {
+        if self.pre.is_empty() {
+            bail!("{}: variant has no FP split", self.manifest.name);
+        }
+        let exe = &self.pre[phase % self.manifest.period];
+        self.run_step_like(exe, None, states, dev_weights, false)?;
+        Ok(())
+    }
+
+    /// FP rest pass: consumes the fresh frame after `precompute` ran.
+    pub fn step_rest(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        dev_weights: &DeviceWeights,
+    ) -> Result<Vec<f32>> {
+        if self.rest.is_empty() {
+            bail!("{}: variant has no FP split", self.manifest.name);
+        }
+        let exe = &self.rest[phase % self.manifest.period];
+        self.run_step_like(exe, Some(frame), states, dev_weights, true)
+    }
+
+    fn run_step_like(
+        &self,
+        exe: &Executable,
+        frame: Option<&[f32]>,
+        states: &mut StateSet,
+        dev_weights: &DeviceWeights,
+        has_out: bool,
+    ) -> Result<Vec<f32>> {
+        let feat = self.manifest.config.feat;
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(1 + states.tensors.len());
+        if let Some(f) = frame {
+            if f.len() != feat {
+                bail!("frame has {} samples, expected {feat}", f.len());
+            }
+            owned.push(self.rt.upload_raw(f, &[feat, 1])?);
+        }
+        for t in &states.tensors {
+            owned.push(self.rt.upload(t)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = owned.iter().collect();
+        for b in &dev_weights.bufs {
+            args.push(b);
+        }
+
+        let mut out_shapes = Vec::new();
+        if has_out {
+            out_shapes.push(vec![feat, 1]);
+        }
+        out_shapes.extend(self.state_shapes());
+        let mut outs = exe.run(&args, &out_shapes)?;
+
+        let out_frame = if has_out {
+            let f = outs.remove(0);
+            f.data
+        } else {
+            Vec::new()
+        };
+        for (slot, t) in states.tensors.iter_mut().zip(outs) {
+            *slot = t;
+        }
+        Ok(out_frame)
+    }
+
+    /// Run the offline (full-sequence) network over (feat, T) frames.
+    /// `x` must have exactly `offline_t` columns.
+    pub fn offline(&self, x: &Tensor, dev_weights: &DeviceWeights) -> Result<Tensor> {
+        let feat = self.manifest.config.feat;
+        let t = self.manifest.offline_t;
+        if x.shape != [feat, t] {
+            bail!(
+                "offline input shape {:?}, expected [{feat}, {t}]",
+                x.shape
+            );
+        }
+        let xbuf = self.rt.upload(x)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&xbuf];
+        for b in &dev_weights.bufs {
+            args.push(b);
+        }
+        let mut outs = self.offline.run(&args, &[vec![feat, t]])?;
+        Ok(outs.remove(0))
+    }
+}
+

@@ -1,0 +1,339 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  One manifest per SOI variant describes the model config,
+//! the partial-state inventory, the parameter layout of `weights.bin`, and
+//! the phase → executable map.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Mirror of python's `UNetConfig` (the fields rust needs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub feat: usize,
+    pub channels: Vec<usize>,
+    pub kernel: usize,
+    pub scc: Vec<usize>,
+    pub shift_pos: Option<usize>,
+    pub shift: usize,
+    pub extrap: Vec<String>,
+    pub interp: Option<String>,
+}
+
+impl ModelConfig {
+    pub fn depth(&self) -> usize {
+        self.channels.len()
+    }
+}
+
+/// One named tensor slot (state or parameter).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-layer MAC entry (cross-checked against `complexity::unet`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMacs {
+    pub name: String,
+    pub macs: u64,
+    pub rate_div: u64,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub config: ModelConfig,
+    pub period: usize,
+    pub streamable: bool,
+    pub offline_t: usize,
+    /// Total f32 length of the packed state vector the step executables
+    /// exchange (all per-layer states concatenated in spec order); 0 for
+    /// legacy per-state artifacts.
+    pub packed_states: usize,
+    pub states: Vec<TensorSpec>,
+    pub params: Vec<TensorSpec>,
+    /// key (e.g. "step_p0", "pre_p1", "offline") → hlo file name.
+    pub executables: BTreeMap<String, String>,
+    pub layer_macs: Vec<LayerMacs>,
+    pub macs_per_frame: f64,
+    pub precomputed_fraction: f64,
+    pub param_count: usize,
+    pub state_bytes: usize,
+    /// Build-time training metrics (si_snri etc.).
+    pub train_metrics: BTreeMap<String, f64>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+fn specs_from(v: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = v
+        .as_arr()
+        .with_context(|| format!("{what}: expected array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for e in arr {
+        let name = e
+            .req("name")
+            .map_err(anyhow::Error::from)?
+            .as_str()
+            .context("name must be a string")?
+            .to_string();
+        let shape = e
+            .req("shape")
+            .map_err(anyhow::Error::from)?
+            .as_arr()
+            .context("shape must be an array")?
+            .iter()
+            .map(|d| d.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        out.push(TensorSpec { name, shape });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v, dir)
+    }
+
+    pub fn from_json(v: &Json, dir: &Path) -> Result<Manifest> {
+        let cfg = v.req("config").map_err(anyhow::Error::from)?;
+        let usize_arr = |j: &Json| -> Result<Vec<usize>> {
+            j.as_arr()
+                .context("expected array")?
+                .iter()
+                .map(|d| d.as_usize().context("expected usize"))
+                .collect()
+        };
+        let config = ModelConfig {
+            feat: cfg.req("feat").map_err(anyhow::Error::from)?.as_usize().context("feat")?,
+            channels: usize_arr(cfg.req("channels").map_err(anyhow::Error::from)?)?,
+            kernel: cfg.req("kernel").map_err(anyhow::Error::from)?.as_usize().context("kernel")?,
+            scc: usize_arr(cfg.req("scc").map_err(anyhow::Error::from)?)?,
+            shift_pos: cfg.get("shift_pos").and_then(|j| j.as_usize()),
+            shift: cfg.get("shift").and_then(|j| j.as_usize()).unwrap_or(1),
+            extrap: cfg
+                .req("extrap")
+                .map_err(anyhow::Error::from)?
+                .as_arr()
+                .context("extrap")?
+                .iter()
+                .map(|e| e.as_str().unwrap_or("duplicate").to_string())
+                .collect(),
+            interp: cfg
+                .get("interp")
+                .and_then(|j| j.as_str())
+                .map(|s| s.to_string()),
+        };
+
+        let mut executables = BTreeMap::new();
+        if let Some(kv) = v.req("executables").map_err(anyhow::Error::from)?.as_obj() {
+            for (k, val) in kv {
+                executables.insert(
+                    k.clone(),
+                    val.as_str().context("executable file name")?.to_string(),
+                );
+            }
+        }
+
+        let mut layer_macs = Vec::new();
+        for e in v
+            .req("layer_macs")
+            .map_err(anyhow::Error::from)?
+            .as_arr()
+            .context("layer_macs")?
+        {
+            layer_macs.push(LayerMacs {
+                name: e
+                    .req("name")
+                    .map_err(anyhow::Error::from)?
+                    .as_str()
+                    .context("layer name")?
+                    .to_string(),
+                macs: e.req("macs").map_err(anyhow::Error::from)?.as_i64().context("macs")? as u64,
+                rate_div: e
+                    .req("rate_div")
+                    .map_err(anyhow::Error::from)?
+                    .as_i64()
+                    .context("rate_div")? as u64,
+            });
+        }
+
+        let mut train_metrics = BTreeMap::new();
+        if let Some(m) = v.get("train_metrics").and_then(|m| m.as_obj()) {
+            for (k, val) in m {
+                if let Some(f) = val.as_f64() {
+                    train_metrics.insert(k.clone(), f);
+                }
+            }
+        }
+
+        let m = Manifest {
+            name: v
+                .req("name")
+                .map_err(anyhow::Error::from)?
+                .as_str()
+                .context("name")?
+                .to_string(),
+            config,
+            period: v.req("period").map_err(anyhow::Error::from)?.as_usize().context("period")?,
+            streamable: v
+                .get("streamable")
+                .and_then(|j| j.as_bool())
+                .unwrap_or(true),
+            offline_t: v
+                .get("offline_t")
+                .and_then(|j| j.as_usize())
+                .unwrap_or(256),
+            packed_states: v
+                .get("packed_states")
+                .and_then(|j| j.as_usize())
+                .unwrap_or(0),
+            states: specs_from(v.req("states").map_err(anyhow::Error::from)?, "states")?,
+            params: specs_from(v.req("params").map_err(anyhow::Error::from)?, "params")?,
+            executables,
+            layer_macs,
+            macs_per_frame: v
+                .get("macs_per_frame")
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0),
+            precomputed_fraction: v
+                .get("precomputed_fraction")
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0),
+            param_count: v.get("param_count").and_then(|j| j.as_usize()).unwrap_or(0),
+            state_bytes: v.get("state_bytes").and_then(|j| j.as_usize()).unwrap_or(0),
+            train_metrics,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.period == 0 || !self.period.is_power_of_two() {
+            bail!("{}: period must be a power of two", self.name);
+        }
+        if self.streamable {
+            for phase in 0..self.period {
+                let key = format!("step_p{phase}");
+                if !self.executables.contains_key(&key) {
+                    bail!("{}: missing executable {key}", self.name);
+                }
+            }
+        }
+        if !self.executables.contains_key("offline") {
+            bail!("{}: missing offline executable", self.name);
+        }
+        Ok(())
+    }
+
+    /// Does this variant carry an FP precompute split?
+    pub fn has_fp_split(&self) -> bool {
+        self.executables.contains_key("pre_p0")
+    }
+
+    /// Path of an executable by key ("step_p0", "offline", ...).
+    pub fn exe_path(&self, key: &str) -> Result<PathBuf> {
+        let f = self
+            .executables
+            .get(key)
+            .with_context(|| format!("{}: no executable '{key}'", self.name))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Training SI-SNRi (dB) recorded at build time.
+    pub fn si_snri(&self) -> Option<f64> {
+        self.train_metrics.get("si_snri").copied()
+    }
+
+    /// Average MACs/frame relative to a baseline manifest, in percent.
+    pub fn complexity_retain_vs(&self, baseline: &Manifest) -> f64 {
+        100.0 * self.macs_per_frame / baseline.macs_per_frame
+    }
+}
+
+/// List variant directories under an artifacts root (sorted by name).
+pub fn list_variants(root: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for entry in fs::read_dir(root).with_context(|| format!("reading {}", root.display()))? {
+        let e = entry?;
+        if e.path().join("manifest.json").exists() {
+            names.push(e.file_name().to_string_lossy().to_string());
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> String {
+        r#"{
+          "name": "t",
+          "config": {"feat": 4, "channels": [4, 6], "kernel": 3, "scc": [1],
+                     "shift_pos": null, "shift": 1, "extrap": ["duplicate"],
+                     "interp": null},
+          "period": 2,
+          "streamable": true,
+          "offline_t": 16,
+          "states": [{"name": "enc1.win", "shape": [4, 2]}],
+          "params": [{"name": "enc1.w", "shape": [6, 4, 3]}],
+          "executables": {"step_p0": "a.hlo.txt", "step_p1": "b.hlo.txt",
+                           "offline": "o.hlo.txt"},
+          "layer_macs": [{"name": "enc1", "macs": 72, "rate_div": 2}],
+          "macs_per_frame": 36.0,
+          "precomputed_fraction": 0.0,
+          "param_count": 72,
+          "state_bytes": 32,
+          "train_metrics": {"si_snri": 1.5}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let v = json::parse(&mini_manifest_json()).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.config.channels, vec![4, 6]);
+        assert_eq!(m.period, 2);
+        assert_eq!(m.states[0].elements(), 8);
+        assert_eq!(m.si_snri(), Some(1.5));
+        assert!(!m.has_fp_split());
+        assert_eq!(m.exe_path("offline").unwrap(), PathBuf::from("/tmp/x/o.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_missing_phase() {
+        let bad = mini_manifest_json().replace(r#""step_p1": "b.hlo.txt","#, "");
+        let v = json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_period() {
+        let bad = mini_manifest_json().replace(r#""period": 2"#, r#""period": 3"#);
+        let v = json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+}

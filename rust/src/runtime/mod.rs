@@ -1,0 +1,9 @@
+//! PJRT runtime (L3 ⇄ artifacts bridge): loads HLO-text artifacts emitted
+//! by `python/compile/aot.py`, compiles them on the PJRT CPU client, and
+//! executes them from the coordinator hot path.  Python never runs here.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{CompiledVariant, DeviceWeights, Executable, Runtime, StateSet, Weights};
+pub use manifest::{list_variants, LayerMacs, Manifest, ModelConfig, TensorSpec};

@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, then timed iterations until both a minimum wall-time and a
+//! minimum iteration count are reached; reports mean / p50 / p95 per
+//! iteration.
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            1e9 / self.mean_ns
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: warm up for `warmup`, then time iterations until
+/// `min_time` has elapsed and at least `min_iters` samples were taken.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_config(name, Duration::from_millis(200), Duration::from_secs(1), 10, &mut f)
+}
+
+pub fn bench_config<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    min_time: Duration,
+    min_iters: usize,
+    f: &mut F,
+) -> BenchResult {
+    // Warmup
+    let w0 = Instant::now();
+    while w0.elapsed() < warmup {
+        f();
+    }
+    // Timed
+    let mut samples: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed() < min_time || samples.len() < min_iters {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed().as_nanos() as f64);
+        if samples.len() > 5_000_000 {
+            break; // safety valve for ns-scale bodies
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        p50_ns: percentile(&samples, 0.50),
+        p95_ns: percentile(&samples, 0.95),
+        min_ns: samples[0],
+    }
+}
+
+/// Prevent the optimizer from discarding a value (ports of
+/// `std::hint::black_box` exist on stable now; keep an alias for clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_closure() {
+        let mut acc = 0u64;
+        let r = bench_config(
+            "noop",
+            Duration::from_millis(1),
+            Duration::from_millis(10),
+            5,
+            &mut || {
+                acc = black_box(acc.wrapping_add(1));
+            },
+        );
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn formats_ns() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.0e9).contains(" s"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Each experiment driver declares its options up front so
+//! `--help` output stays accurate.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argv (without the program name).
+    ///
+    /// `bool_flags` lists options that take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args, String> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&stripped) {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("--{stripped} expects a value"))?;
+                    flags.insert(stripped.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { flags, positional })
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad float '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_positional() {
+        let a = Args::parse(&argv(&["run", "--n", "5", "--mode=fast", "x"]), &[]).unwrap();
+        assert_eq!(a.positional(), &["run", "x"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+        assert_eq!(a.str_or("mode", ""), "fast");
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = Args::parse(&argv(&["--verbose", "--n", "2"]), &["verbose"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&argv(&["--n", "abc"]), &[]).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&[], &[]).unwrap();
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("x", 1.5).unwrap(), 1.5);
+        assert!(!a.flag("v"));
+    }
+}

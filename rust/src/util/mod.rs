@@ -1,0 +1,11 @@
+//! Infrastructure substrates built in-repo because the usual crates
+//! (serde, clap, rand, criterion, proptest, hdrhistogram) are unavailable
+//! in this offline environment — see DESIGN.md §5.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tensor;

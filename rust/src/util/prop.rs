@@ -1,0 +1,96 @@
+//! Hand-rolled property-test harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! reports the failing case index and seed so the case can be replayed
+//! deterministically with `replay`.
+
+use super::rng::Rng;
+
+/// Run `prop(rng, case_index)` for `n` cases; panic with the seed on the
+/// first failure (the property should panic or return Err to fail).
+pub fn check<F>(name: &str, n: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..n {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with prop::replay({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    prop(&mut rng, 0).expect("replayed property still failing");
+}
+
+/// Assert two f64 are within rtol/atol (helper for numeric properties).
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let bound = atol + rtol * b.abs().max(a.abs());
+    if diff <= bound {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {diff} > {bound}"))
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn slices_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let diff = (x - y).abs();
+        let bound = atol + rtol * y.abs().max(x.abs());
+        if diff > bound {
+            return Err(format!("at [{i}]: |{x} - {y}| = {diff} > {bound}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 parity", 50, 1, |rng, _| {
+            let v = rng.next_u64();
+            if v % 2 == 0 || v % 2 == 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        check("always fails", 5, 2, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0).is_ok());
+        assert!(close(1.0, 2.0, 1e-6, 0.0).is_err());
+    }
+
+    #[test]
+    fn slices_close_helper() {
+        assert!(slices_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6).is_ok());
+        assert!(slices_close(&[1.0], &[1.0, 2.0], 1e-5, 1e-6).is_err());
+        assert!(slices_close(&[1.0], &[1.5], 1e-5, 1e-6).is_err());
+    }
+}

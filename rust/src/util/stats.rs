@@ -1,0 +1,221 @@
+//! Latency/throughput statistics: online summaries and fixed-bucket
+//! histograms (hdrhistogram is unavailable offline; this log-bucketed
+//! histogram gives <1% quantile error over the ns..s range, which is all
+//! the serving benches need).
+
+/// Online mean/min/max/count accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Log-bucketed histogram over (0, ~18e18) ns with ~1% resolution.
+///
+/// Buckets: 64 octaves x `SUB` log-linear sub-buckets per octave.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+const SUB: usize = 128; // sub-buckets per power of two => <0.8% bucket width
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; 64 * SUB],
+            total: 0,
+        }
+    }
+
+    fn index(v: u64) -> usize {
+        if v == 0 {
+            return 0;
+        }
+        let oct = 63 - v.leading_zeros() as usize;
+        let sub = if oct == 0 {
+            0
+        } else {
+            // position within the octave, scaled to SUB
+            ((v - (1 << oct)) as u128 * SUB as u128 >> oct) as usize
+        };
+        (oct * SUB + sub).min(64 * SUB - 1)
+    }
+
+    fn bucket_value(idx: usize) -> u64 {
+        let oct = idx / SUB;
+        let sub = idx % SUB;
+        let base = 1u64 << oct;
+        base + ((base as u128 * sub as u128) / SUB as u128) as u64
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Value at quantile q in [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        Self::bucket_value(64 * SUB - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mut s = 0.0;
+        for (i, c) in self.counts.iter().enumerate() {
+            if *c > 0 {
+                s += Self::bucket_value(i) as f64 * *c as f64;
+            }
+        }
+        s / self.total as f64
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+}
+
+/// Exact percentile over a collected sample (for small benches).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0] {
+            s.add(v);
+        }
+        assert_eq!(s.count, 3);
+        assert_eq!(s.mean(), 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_accurate() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 1000); // 1µs .. 10ms in ns
+        }
+        let p50 = h.p50() as f64;
+        assert!((p50 - 5_000_000.0).abs() / 5_000_000.0 < 0.02, "p50={p50}");
+        let p99 = h.p99() as f64;
+        assert!((p99 - 9_900_000.0).abs() / 9_900_000.0 < 0.02, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_mean_close() {
+        let mut h = Histogram::new();
+        for v in [100u64, 200, 300, 400] {
+            h.record(v);
+        }
+        assert!((h.mean() - 250.0).abs() / 250.0 < 0.02);
+    }
+
+    #[test]
+    fn histogram_zero_and_extremes() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) <= 1);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn exact_percentile() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert_eq!(percentile(&v, 0.5), 2.5);
+    }
+}

@@ -1,0 +1,107 @@
+//! Cross-layer consistency: the rust complexity engine must agree exactly
+//! with the `layer_macs` tables python embeds in every artifact manifest —
+//! two independent implementations of the paper's cost semantics.
+
+use std::path::PathBuf;
+
+use soi::complexity::unet;
+use soi::runtime::{list_variants, Manifest};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn rust_engine_matches_python_layer_macs() {
+    let root = artifacts_root();
+    if !root.exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let mut checked = 0;
+    for name in list_variants(&root).unwrap() {
+        let m = Manifest::load(&root.join(&name)).unwrap();
+        let net = unet::network(&m.config, m.offline_t as u64, 1000.0);
+        // Per-layer: every python entry must exist in the rust model with
+        // identical MACs and rate divisor.
+        for py in &m.layer_macs {
+            let rs = net
+                .layers
+                .iter()
+                .find(|l| l.name == py.name)
+                .unwrap_or_else(|| panic!("{name}: rust engine missing layer {}", py.name));
+            assert_eq!(
+                rs.macs_per_out, py.macs,
+                "{name}/{}: macs {} vs {}",
+                py.name, rs.macs_per_out, py.macs
+            );
+            assert_eq!(
+                rs.rate_div, py.rate_div,
+                "{name}/{}: rate {} vs {}",
+                py.name, rs.rate_div, py.rate_div
+            );
+        }
+        assert_eq!(net.layers.len(), m.layer_macs.len(), "{name}: layer count");
+        // Aggregate: average MACs/frame must match python's number.
+        let diff = (net.soi_macs_per_frame() - m.macs_per_frame).abs();
+        assert!(diff < 1e-6, "{name}: macs/frame {diff}");
+        checked += 1;
+    }
+    assert!(checked > 0, "no variants checked");
+    eprintln!("cross-checked {checked} variants");
+}
+
+#[test]
+fn precomputed_fraction_matches_python() {
+    let root = artifacts_root();
+    if !root.exists() {
+        return;
+    }
+    for name in list_variants(&root).unwrap() {
+        let m = Manifest::load(&root.join(&name)).unwrap();
+        let net = unet::network(&m.config, m.offline_t as u64, 1000.0);
+        let rs = net.precomputed_pct() / 100.0;
+        let py = m.precomputed_fraction;
+        assert!(
+            (rs - py).abs() < 1e-9,
+            "{name}: precomputed {rs} vs python {py}"
+        );
+    }
+}
+
+#[test]
+fn state_bytes_match_manifest() {
+    let root = artifacts_root();
+    if !root.exists() {
+        return;
+    }
+    for name in list_variants(&root).unwrap() {
+        let m = Manifest::load(&root.join(&name)).unwrap();
+        let computed: usize = m.states.iter().map(|s| s.elements() * 4).sum();
+        assert_eq!(computed, m.state_bytes, "{name}: state bytes");
+    }
+}
+
+#[test]
+fn soi_variants_have_strictly_lower_average_cost() {
+    let root = artifacts_root();
+    if !root.exists() {
+        return;
+    }
+    let Ok(base) = Manifest::load(&root.join("stmc")) else { return };
+    for name in list_variants(&root).unwrap() {
+        let m = Manifest::load(&root.join(&name)).unwrap();
+        if m.config.scc.is_empty() {
+            // no compression: cost must equal STMC's
+            assert!(
+                (m.macs_per_frame - base.macs_per_frame).abs() < 1e-6,
+                "{name}: non-SOI variant with different cost"
+            );
+        } else {
+            assert!(
+                m.macs_per_frame < base.macs_per_frame,
+                "{name}: SOI variant not cheaper"
+            );
+        }
+    }
+}

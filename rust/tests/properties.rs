@@ -1,0 +1,176 @@
+//! Property-based tests over the pure substrates (seeded xorshift cases
+//! via `util::prop` — the offline stand-in for proptest).
+
+use soi::complexity::unet;
+use soi::dsp::{metrics, resample, siggen};
+use soi::util::json::{self, Json};
+use soi::util::prop;
+use soi::util::rng::Rng;
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let n = rng.below(8);
+                Json::Str((0..n).map(|_| ['a', 'ż', '"', '\\', '\n', 'x'][rng.below(6)]).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop::check("json roundtrip", 200, 0xD0C, |rng, _| {
+        let doc = random_json(rng, 3);
+        let text = doc.to_string();
+        let back = json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+        if back != doc {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        let pretty = doc.to_string_pretty();
+        let back2 = json::parse(&pretty).map_err(|e| format!("{e} in pretty"))?;
+        if back2 != doc {
+            return Err("pretty roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_si_snr_scale_and_shift_invariant() {
+    prop::check("si_snr invariance", 40, 0x51, |rng, _| {
+        let n = 200 + rng.below(500);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let noisy: Vec<f32> = x.iter().map(|&v| v + 0.5 * rng.normal() as f32).collect();
+        let base = metrics::si_snr(&noisy, &x);
+        let g = rng.range(0.1, 10.0) as f32;
+        let off = rng.range(-1.0, 1.0) as f32;
+        let transformed: Vec<f32> = noisy.iter().map(|&v| g * v + off).collect();
+        let got = metrics::si_snr(&transformed, &x);
+        prop::close(got, base, 1e-3, 1e-3)
+    });
+}
+
+#[test]
+fn prop_resamplers_linear_in_input() {
+    // resampling is a linear operator: R(a x) == a R(x)
+    prop::check("resample linearity", 20, 0x2e5, |rng, _| {
+        let n = 512 + 2 * rng.below(256);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let a = rng.range(0.2, 3.0) as f32;
+        let xa: Vec<f32> = x.iter().map(|&v| a * v).collect();
+        for m in resample::Method::ALL {
+            let y1: Vec<f32> = resample::roundtrip(&x, m).iter().map(|&v| a * v).collect();
+            let y2 = resample::roundtrip(&xa, m);
+            prop::slices_close(&y2, &y1, 1e-4, 1e-4)
+                .map_err(|e| format!("{}: {e}", m.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_unet_compound_rate_rule() {
+    // For any S-CC position set, retain == 1 - Σ_l cost_l (1 - 1/2^{k(l)})
+    // where k(l) counts compression stages at or above l — the engine's
+    // semantics must satisfy the closed-form compounding identity used to
+    // validate against the paper (DESIGN.md §3).
+    prop::check("compound rate rule", 60, 0xABCD, |rng, _| {
+        let mut ps: Vec<usize> = Vec::new();
+        for p in 1..=7usize {
+            if rng.chance(0.3) {
+                ps.push(p);
+            }
+        }
+        let cfg = unet::default_config(ps.clone(), None);
+        let net = unet::network(&cfg, 256, 1000.0);
+        let total: f64 = net.layers.iter().map(|l| l.macs_per_out as f64).sum();
+        let expect: f64 = net
+            .layers
+            .iter()
+            .map(|l| l.macs_per_out as f64 / l.rate_div as f64)
+            .sum();
+        prop::close(net.soi_macs_per_frame(), expect, 1e-12, 0.0)?;
+        if ps.is_empty() {
+            prop::close(net.soi_macs_per_frame(), total, 1e-12, 0.0)?;
+        } else if net.soi_macs_per_frame() >= total {
+            return Err("SOI not cheaper with compression stages".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mix_monotone_in_snr() {
+    // higher requested SNR => noisy signal closer to clean
+    prop::check("mix monotone", 20, 0x111, |rng, _| {
+        let clean = siggen::speech(rng, 4000, siggen::FS);
+        let noise = siggen::noise(rng, 4000, siggen::FS);
+        let lo = siggen::mix(&clean, &noise, 0.0);
+        let hi = siggen::mix(&clean, &noise, 10.0);
+        let s_lo = metrics::si_snr(&lo, &clean);
+        let s_hi = metrics::si_snr(&hi, &clean);
+        if s_hi > s_lo {
+            Ok(())
+        } else {
+            Err(format!("snr10 {s_hi} <= snr0 {s_lo}"))
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_bounded_error() {
+    prop::check("histogram quantile error", 30, 0x9a9, |rng, _| {
+        let mut h = soi::util::stats::Histogram::new();
+        let mut vals: Vec<u64> = (0..2000)
+            .map(|_| (rng.uniform() * rng.uniform() * 1e9) as u64 + 1)
+            .collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for q in [0.5, 0.9, 0.99] {
+            let exact = vals[((q * (vals.len() - 1) as f64) as usize).min(vals.len() - 1)] as f64;
+            let got = h.quantile(q) as f64;
+            // log-bucketed: must be within one bucket (~1%) + ordering slop
+            if (got - exact).abs() / exact.max(1.0) > 0.05 {
+                return Err(format!("q{q}: {got} vs {exact}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pruning_never_increases_magnitude_sum() {
+    prop::check("pruning magnitude", 30, 0x777, |rng, _| {
+        let n = 100 + rng.below(400);
+        let mut w = soi::runtime::Weights {
+            tensors: vec![soi::util::tensor::Tensor::new(
+                vec![n],
+                (0..n).map(|_| rng.normal() as f32).collect(),
+            )],
+        };
+        let sum = |w: &soi::runtime::Weights| -> f64 {
+            w.tensors[0].data.iter().map(|v| v.abs() as f64).sum()
+        };
+        let before = sum(&w);
+        let k = rng.below(n);
+        soi::pruning::prune_global_magnitude(&mut w, k);
+        let after = sum(&w);
+        if after > before + 1e-6 {
+            return Err("magnitude sum grew".into());
+        }
+        // pruned count correct
+        if soi::pruning::zeros(&w) < k {
+            return Err(format!("pruned fewer than {k}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,180 @@
+//! Integration tests over real artifacts: load HLO text via PJRT, execute,
+//! and check the streaming/offline equivalence *through the rust runtime*
+//! (the cross-layer golden test of DESIGN.md §7).
+//!
+//! Tests are skipped (not failed) when `artifacts/` has not been built yet
+//! so `cargo test` stays green before `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use soi::runtime::{CompiledVariant, Runtime};
+use soi::util::rng::Rng;
+use soi::util::tensor::Tensor;
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn variant_dir(name: &str) -> Option<PathBuf> {
+    let d = artifacts_root().join(name);
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("SKIP: artifacts/{name} not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load(name: &str) -> Option<CompiledVariant> {
+    let dir = variant_dir(name)?;
+    let rt = Arc::new(Runtime::cpu().expect("PJRT CPU client"));
+    Some(CompiledVariant::load(rt, &dir).expect("compile variant"))
+}
+
+fn random_frames(feat: usize, t: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..feat * t).map(|_| rng.normal() as f32 * 0.3).collect();
+    Tensor::new(vec![feat, t], data)
+}
+
+/// Stream frame-by-frame through the step executables.
+fn stream_through(cv: &CompiledVariant, x: &Tensor) -> Vec<f32> {
+    let feat = cv.manifest.config.feat;
+    let t = x.shape[1];
+    let dw = cv.device_weights().unwrap();
+    let mut states = cv.init_states();
+    let mut out = Vec::with_capacity(feat * t);
+    let mut frame = vec![0.0f32; feat];
+    for tt in 0..t {
+        for i in 0..feat {
+            frame[i] = x.at2(i, tt);
+        }
+        let phase = tt % cv.manifest.period;
+        let o = cv.step(phase, &frame, &mut states, &dw).unwrap();
+        out.extend_from_slice(&o);
+    }
+    out // laid out as t blocks of feat
+}
+
+/// Same, but exercising the FP pre/rest split.
+fn stream_through_split(cv: &CompiledVariant, x: &Tensor) -> Vec<f32> {
+    let feat = cv.manifest.config.feat;
+    let t = x.shape[1];
+    let dw = cv.device_weights().unwrap();
+    let mut states = cv.init_states();
+    let mut out = Vec::with_capacity(feat * t);
+    let mut frame = vec![0.0f32; feat];
+    for tt in 0..t {
+        for i in 0..feat {
+            frame[i] = x.at2(i, tt);
+        }
+        let phase = tt % cv.manifest.period;
+        cv.precompute(phase, &mut states, &dw).unwrap();
+        let o = cv.step_rest(phase, &frame, &mut states, &dw).unwrap();
+        out.extend_from_slice(&o);
+    }
+    out
+}
+
+fn assert_stream_matches_offline(name: &str, use_split: bool) {
+    let Some(cv) = load(name) else { return };
+    let feat = cv.manifest.config.feat;
+    let t = cv.manifest.offline_t;
+    let x = random_frames(feat, t, 42);
+    let dw = cv.device_weights().unwrap();
+    let off = cv.offline(&x, &dw).unwrap();
+
+    let streamed = if use_split {
+        stream_through_split(&cv, &x)
+    } else {
+        stream_through(&cv, &x)
+    };
+    // streamed is t blocks of feat; offline is (feat, t) row-major
+    let mut max_err = 0.0f32;
+    for tt in 0..t {
+        for i in 0..feat {
+            let a = streamed[tt * feat + i];
+            let b = off.at2(i, tt);
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    assert!(
+        max_err < 1e-4,
+        "{name}: streaming vs offline max err {max_err}"
+    );
+}
+
+#[test]
+fn stmc_streaming_equals_offline() {
+    assert_stream_matches_offline("stmc", false);
+}
+
+#[test]
+fn scc2_pp_streaming_equals_offline() {
+    assert_stream_matches_offline("scc2", false);
+}
+
+#[test]
+fn scc5_pp_streaming_equals_offline() {
+    assert_stream_matches_offline("scc5", false);
+}
+
+#[test]
+fn double_scc_streaming_equals_offline() {
+    assert_stream_matches_offline("scc2_5", false);
+}
+
+#[test]
+fn sscc5_fp_monolithic_equals_offline() {
+    assert_stream_matches_offline("sscc5", false);
+}
+
+#[test]
+fn sscc5_fp_split_equals_offline() {
+    assert_stream_matches_offline("sscc5", true);
+}
+
+#[test]
+fn fp_hybrid_split_equals_offline() {
+    assert_stream_matches_offline("fp2_5", true);
+}
+
+#[test]
+fn precompute_does_not_touch_frame() {
+    // The pre pass has no frame argument at all (manifest signature), so
+    // this asserts it is runnable before any frame exists.
+    let Some(cv) = load("sscc5") else { return };
+    let dw = cv.device_weights().unwrap();
+    let mut states = cv.init_states();
+    cv.precompute(0, &mut states, &dw).unwrap();
+}
+
+#[test]
+fn manifest_macs_positive_and_monotone() {
+    let Some(stmc) = variant_dir("stmc") else { return };
+    let Some(scc2) = variant_dir("scc2") else { return };
+    let m0 = soi::runtime::Manifest::load(&stmc).unwrap();
+    let m2 = soi::runtime::Manifest::load(&scc2).unwrap();
+    assert!(m0.macs_per_frame > 0.0);
+    // SOI must strictly reduce average complexity
+    assert!(m2.macs_per_frame < m0.macs_per_frame);
+}
+
+#[test]
+fn weights_match_param_count() {
+    let Some(cv) = load("stmc") else { return };
+    assert_eq!(cv.weights.total_params(), cv.manifest.param_count);
+}
+
+#[test]
+fn list_variants_sees_built_artifacts() {
+    let root = artifacts_root();
+    if !root.exists() {
+        return;
+    }
+    let names = soi::runtime::list_variants(&root).unwrap();
+    if Path::new(&root.join("stmc/manifest.json")).exists() {
+        assert!(names.contains(&"stmc".to_string()));
+    }
+}
