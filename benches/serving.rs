@@ -1,5 +1,10 @@
 //! Multi-stream serving throughput (the end-to-end bench of the
-//! coordinator: worker pool + scheduler + PJRT execution).
+//! coordinator: worker pool + scheduler + backend execution).
+//!
+//! Runs out of the box on the native backend (synthesized untrained
+//! weights when `artifacts/` has not been built — throughput and latency
+//! are real).  Emits one JSON line per (variant, workers) pair for
+//! cross-PR comparison.
 //!
 //! Run: `cargo bench --bench serving`
 
@@ -7,15 +12,12 @@ use std::sync::Arc;
 
 use soi::coordinator::Server;
 use soi::dsp::{frames, siggen};
-use soi::runtime::{CompiledVariant, Runtime};
+use soi::runtime::{synth, Runtime};
+use soi::util::json::Json;
 use soi::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let root = std::path::Path::new("artifacts");
-    if !root.join("stmc").exists() {
-        eprintln!("SKIP serving: run `make artifacts` first");
-        return Ok(());
-    }
     let rt = Arc::new(Runtime::cpu()?);
     let feat = 16;
     let fps = siggen::FS / feat as f64;
@@ -29,14 +31,14 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    println!("# serving — {n_streams} streams x {n_frames} frames");
+    println!(
+        "# serving — {n_streams} streams x {n_frames} frames [{} backend]",
+        rt.platform()
+    );
     for workers in [1usize, 2, 4] {
         for name in ["stmc", "scc2", "sscc5"] {
-            if !root.join(name).exists() {
-                continue;
-            }
-            let cv = Arc::new(CompiledVariant::load(rt.clone(), &root.join(name))?);
-            let server = Server::new(cv, workers);
+            let (cv, _) = synth::load_or_synth(rt.clone(), root, name, 11)?;
+            let server = Server::new(Arc::new(cv), workers);
             let report = server.run(&streams)?;
             println!(
                 "serve[{name} w={workers}]  {:>9.0} frames/s  {:>6.1}x realtime  p99 {:>9}  retain {:>5.1}%",
@@ -44,6 +46,19 @@ fn main() -> anyhow::Result<()> {
                 report.throughput_fps() / fps,
                 soi::util::bench::fmt_ns(report.metrics.arrival_latency.p99() as f64),
                 report.metrics.retain_pct(),
+            );
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("bench", Json::Str("serving".into())),
+                    ("variant", Json::Str(name.into())),
+                    ("workers", Json::Num(workers as f64)),
+                    ("backend", Json::Str(rt.platform())),
+                    ("frames_per_s", Json::Num(report.throughput_fps())),
+                    ("p99_ns", Json::Num(report.metrics.arrival_latency.p99() as f64)),
+                    ("retain_pct", Json::Num(report.metrics.retain_pct())),
+                ])
+                .to_string()
             );
         }
     }

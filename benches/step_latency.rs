@@ -3,34 +3,41 @@
 //! offline; this uses the in-repo harness (`util::bench`) with
 //! `harness = false`.
 //!
+//! Runs out of the box on the native backend: variants are synthesized
+//! (untrained weights — irrelevant for latency) when `artifacts/` has not
+//! been built.  Besides the human-readable report, each variant emits one
+//! machine-readable JSON line (`{"bench":"step_latency",...}`) so results
+//! are comparable across PRs.
+//!
 //! Run: `cargo bench --bench step_latency`
 
 use std::sync::Arc;
 
 use soi::dsp::{frames, siggen};
-use soi::runtime::{CompiledVariant, Runtime};
+use soi::runtime::{synth, Runtime};
 use soi::util::bench::bench;
+use soi::util::json::Json;
 use soi::util::rng::Rng;
+
+fn json_line(fields: Vec<(&str, Json)>) -> String {
+    Json::obj(fields).to_string()
+}
 
 fn main() -> anyhow::Result<()> {
     let root = std::path::Path::new("artifacts");
-    if !root.join("stmc").exists() {
-        eprintln!("SKIP step_latency: run `make artifacts` first");
-        return Ok(());
-    }
     let rt = Arc::new(Runtime::cpu()?);
     let feat = 16;
     let mut rng = Rng::new(3);
     let (noisy, _) = siggen::denoise_pair(&mut rng, feat * 64, siggen::FS);
     let (cols, _) = frames(&noisy, feat);
 
-    println!("# step_latency — single-stream per-frame inference");
+    println!(
+        "# step_latency — single-stream per-frame inference [{} backend]",
+        rt.platform()
+    );
     for name in ["stmc", "scc1", "scc2", "scc5", "scc7", "scc2_5", "sscc5"] {
-        let dir = root.join(name);
-        if !dir.exists() {
-            continue;
-        }
-        let cv = Arc::new(CompiledVariant::load(rt.clone(), &dir)?);
+        let (cv, _) = synth::load_or_synth(rt.clone(), root, name, 3)?;
+        let cv = Arc::new(cv);
         let dw = Arc::new(cv.device_weights()?);
         let mut sess = soi::coordinator::StreamSession::new(0, cv.clone(), dw.clone());
         let mut i = 0usize;
@@ -39,8 +46,21 @@ fn main() -> anyhow::Result<()> {
             i += 1;
         });
         println!("{}  ({:.0} frames/s)", r.report(), r.throughput_per_sec());
+        println!(
+            "{}",
+            json_line(vec![
+                ("bench", Json::Str("step_latency".into())),
+                ("variant", Json::Str(name.into())),
+                ("backend", Json::Str(rt.platform())),
+                ("mean_ns", Json::Num(r.mean_ns)),
+                ("p50_ns", Json::Num(r.p50_ns)),
+                ("p95_ns", Json::Num(r.p95_ns)),
+                ("frames_per_s", Json::Num(r.throughput_per_sec())),
+                ("macs_per_frame", Json::Num(cv.manifest.macs_per_frame)),
+            ])
+        );
 
-        if cv.manifest.has_fp_split() {
+        if cv.has_fp_split() {
             let mut sess2 = soi::coordinator::StreamSession::new(1, cv, dw);
             let mut j = 0usize;
             let r2 = bench(&format!("step[{name}] rest-only (FP overlap)"), || {

@@ -3,13 +3,17 @@
 //! without — showing the paper's FP latency claim: most of each inference
 //! can run *before* the frame arrives.
 //!
+//! Runs out of the box on the native backend (synthesized untrained
+//! weights when `artifacts/` has not been built — timing and hidden% are
+//! real measurements either way).
+//!
 //! Run: `cargo run --release --example fp_precompute`
 
 use std::sync::Arc;
 
 use soi::coordinator::StreamSession;
 use soi::dsp::{frames, siggen};
-use soi::runtime::{CompiledVariant, Runtime};
+use soi::runtime::{synth, Runtime};
 use soi::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -19,14 +23,12 @@ fn main() -> anyhow::Result<()> {
     let (noisy, _) = siggen::denoise_pair(&mut rng, feat * 1500, siggen::FS);
     let (cols, _) = frames(&noisy, feat);
 
+    let artifacts = std::path::Path::new("artifacts");
     println!("variant   idle-precompute   on-arrival p50   on-arrival p99   hidden%  precomp%(analytic)");
     for name in ["sscc2", "sscc5", "sscc7", "fp1_3"] {
-        let dir = std::path::Path::new("artifacts").join(name);
-        if !dir.exists() {
-            continue;
-        }
         for use_idle in [false, true] {
-            let cv = Arc::new(CompiledVariant::load(rt.clone(), &dir)?);
+            let (cv, _) = synth::load_or_synth(rt.clone(), artifacts, name, 99)?;
+            let cv = Arc::new(cv);
             let precomp = 100.0 * cv.manifest.precomputed_fraction;
             let dw = Arc::new(cv.device_weights()?);
             let mut sess = StreamSession::new(0, cv, dw);

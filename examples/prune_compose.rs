@@ -2,6 +2,10 @@
 //! example): magnitude-prune an STMC model and an SOI model to the same
 //! sparsity and compare quality at equal *effective* complexity.
 //!
+//! Runs out of the box on the native backend (synthesized untrained
+//! weights when `artifacts/` has not been built; the SI-SNRi column only
+//! means something with trained artifacts).
+//!
 //! Run: `cargo run --release --example prune_compose`
 
 use std::sync::Arc;
@@ -9,7 +13,7 @@ use std::sync::Arc;
 use soi::dsp::siggen;
 use soi::experiments::eval::{eval_utterance, mean_std, output_to_wave};
 use soi::pruning;
-use soi::runtime::{CompiledVariant, Runtime, Weights};
+use soi::runtime::{synth, CompiledVariant, Runtime, Weights};
 use soi::util::rng::Rng;
 
 fn si_snri(
@@ -30,7 +34,7 @@ fn si_snri(
         let ns = est.len();
         imps.push(soi::dsp::metrics::si_snr_improvement(
             &noisy[..ns],
-            &est,
+            &est[..ns],
             &clean[..ns],
         ));
     }
@@ -39,14 +43,16 @@ fn si_snri(
 
 fn main() -> anyhow::Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
-    println!("{:<8} {:>9} {:>12} {:>14} {:>12}", "model", "pruned%", "SI-SNRi dB", "eff MMAC/s", "dense MMAC/s");
+    let artifacts = std::path::Path::new("artifacts");
+    println!(
+        "{:<8} {:>9} {:>12} {:>14} {:>12}",
+        "model", "pruned%", "SI-SNRi dB", "eff MMAC/s", "dense MMAC/s"
+    );
     for name in ["stmc", "scc1"] {
-        let dir = std::path::Path::new("artifacts").join(name);
-        if !dir.exists() {
-            eprintln!("artifacts/{name} missing — run `make artifacts`");
-            continue;
+        let (cv, synthesized) = synth::load_or_synth(rt.clone(), artifacts, name, 42)?;
+        if synthesized {
+            eprintln!("note: artifacts/{name} missing — synthesized untrained weights");
         }
-        let cv = CompiledVariant::load(rt.clone(), &dir)?;
         let fps = siggen::FS / cv.manifest.config.feat as f64;
         let dense = cv.manifest.macs_per_frame * fps / 1e6;
         let mut w = cv.weights.clone();

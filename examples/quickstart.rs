@@ -1,19 +1,28 @@
-//! Quickstart: load two AOT-compiled SOI variants (pure STMC and S-CC 5),
-//! stream one synthetic noisy utterance through each, and compare quality
-//! vs computational cost — the paper's core trade in ~60 lines.
+//! Quickstart: load two SOI variants (pure STMC and S-CC 5), stream one
+//! synthetic noisy utterance through each, and compare quality vs
+//! computational cost — the paper's core trade in ~60 lines.
 //!
-//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+//! Runs out of the box on the native backend: when `artifacts/` has not
+//! been built, the variants are synthesized with untrained weights
+//! (latency + complexity columns are meaningful; SI-SNRi is only
+//! meaningful with trained artifacts from `make artifacts`).
+//!
+//! Run: `cargo run --release --example quickstart`
 
 use std::sync::Arc;
 
 use soi::coordinator::StreamSession;
 use soi::dsp::{frames, metrics, siggen};
-use soi::runtime::{CompiledVariant, Runtime};
+use soi::runtime::{synth, Runtime};
 use soi::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
-    println!("PJRT platform: {} ({} device(s))", rt.platform(), rt.device_count());
+    println!(
+        "backend: {} ({} device(s))",
+        rt.platform(),
+        rt.device_count()
+    );
 
     // One synthetic noisy utterance (2 s @ 16 kHz).
     let mut rng = Rng::new(7);
@@ -21,13 +30,12 @@ fn main() -> anyhow::Result<()> {
     let (noisy, clean) = siggen::denoise_pair(&mut rng, feat * 2000, siggen::FS);
     let (cols, _) = frames(&noisy, feat);
 
+    let artifacts = std::path::Path::new("artifacts");
+    let mut any_synth = false;
     for name in ["stmc", "scc5"] {
-        let dir = std::path::Path::new("artifacts").join(name);
-        if !dir.exists() {
-            eprintln!("artifacts/{name} missing — run `make artifacts` first");
-            continue;
-        }
-        let cv = Arc::new(CompiledVariant::load(rt.clone(), &dir)?);
+        let (cv, synthesized) = synth::load_or_synth(rt.clone(), artifacts, name, 7)?;
+        any_synth |= synthesized;
+        let cv = Arc::new(cv);
         let dw = Arc::new(cv.device_weights()?);
         let mut sess = StreamSession::new(0, cv, dw);
 
@@ -38,13 +46,18 @@ fn main() -> anyhow::Result<()> {
         }
         let n = est.len();
         println!(
-            "{name:<6} SI-SNRi {:+.2} dB | retain {:>5.1}% of STMC MACs | mean step {:>8.1} µs",
+            "{name:<6} SI-SNRi {:+.2} dB | retain {:>5.1}% of STMC MACs | mean step {:>8.1} µs{}",
             metrics::si_snr_improvement(&noisy[..n], &est, &clean[..n]),
             sess.metrics.retain_pct(),
             sess.metrics.arrival_latency.mean() / 1e3,
+            if synthesized { "  [untrained]" } else { "" },
         );
     }
     println!("\nS-CC 5 runs its deep layers at half rate (scattered inference),");
     println!("trading a fraction of a dB for ~35% fewer MACs — Table 1's trade.");
+    if any_synth {
+        println!("(untrained synthesized weights: read the retain% and latency");
+        println!(" columns; run `make artifacts` for meaningful SI-SNRi.)");
+    }
     Ok(())
 }

@@ -1,9 +1,12 @@
-//! End-to-end serving driver (DESIGN.md §deliverable (b)/E2E): serve many
-//! concurrent synthetic-speech streams through the full stack — rust
-//! coordinator → PJRT CPU → AOT'd JAX/Pallas U-Net — and report quality,
-//! latency percentiles and throughput for STMC vs SOI variants.
+//! End-to-end serving driver (DESIGN.md §7/E2E): serve many concurrent
+//! synthetic-speech streams through the full stack — rust coordinator →
+//! inference backend → SOI U-Net — and report quality, latency
+//! percentiles and throughput for STMC vs SOI variants.
 //!
-//! This is the run recorded in EXPERIMENTS.md §E2E.
+//! Runs out of the box on the native backend (synthesized untrained
+//! weights when `artifacts/` has not been built; latency/throughput and
+//! retain% are real measurements either way, SI-SNRi needs trained
+//! artifacts).
 //!
 //! Run: `cargo run --release --example streaming_denoise -- [streams] [frames]`
 
@@ -12,14 +15,17 @@ use std::sync::Arc;
 use soi::coordinator::Server;
 use soi::dsp::{frames, metrics, siggen};
 use soi::experiments::eval::mean_std;
-use soi::runtime::{CompiledVariant, Runtime};
+use soi::runtime::{synth, Runtime};
 use soi::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_streams: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
     let n_frames: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(750);
-    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(8);
 
     let rt = Arc::new(Runtime::cpu()?);
     let feat = 16;
@@ -38,7 +44,8 @@ fn main() -> anyhow::Result<()> {
         noisys.push(noisy);
     }
     println!(
-        "E2E serving: {n_streams} streams x {n_frames} frames ({:.1} s audio each), {workers} workers\n",
+        "E2E serving [{} backend]: {n_streams} streams x {n_frames} frames ({:.1} s audio each), {workers} workers\n",
+        rt.platform(),
         n_frames as f64 / fps
     );
     println!(
@@ -46,13 +53,10 @@ fn main() -> anyhow::Result<()> {
         "variant", "SI-SNRi", "p50 µs", "p99 µs", "retain%", "frames/s", "xRT", "hidden%"
     );
 
+    let artifacts = std::path::Path::new("artifacts");
     for name in ["stmc", "scc2", "scc5", "scc2_5", "sscc5"] {
-        let dir = std::path::Path::new("artifacts").join(name);
-        if !dir.exists() {
-            continue;
-        }
-        let cv = Arc::new(CompiledVariant::load(rt.clone(), &dir)?);
-        let server = Server::new(cv, workers);
+        let (cv, _) = synth::load_or_synth(rt.clone(), artifacts, name, 1234)?;
+        let server = Server::new(Arc::new(cv), workers);
         let report = server.run(&streams)?;
 
         let mut imps = Vec::new();

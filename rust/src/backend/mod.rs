@@ -1,0 +1,116 @@
+//! Multi-backend execution layer (DESIGN.md §4).
+//!
+//! The serving stack (coordinator, experiments, benches, examples) talks
+//! to an SOI variant only through two object-safe traits:
+//!
+//! * [`InferenceBackend`] — a device/runtime: compiles a variant
+//!   [`Manifest`] into an executable form and uploads weights.
+//! * [`VariantExec`] — one compiled variant: per-stream state
+//!   initialisation, the phase-indexed streaming step, the FP
+//!   precompute/rest split, and the full-sequence offline pass.
+//!
+//! Two implementations exist:
+//!
+//! * [`native`] — a dependency-free pure-Rust streaming interpreter of
+//!   the variant manifest (causal/STMC conv1d, stride compression,
+//!   extrapolation, per-layer `rate_div` phase gating matching
+//!   `coordinator::scheduler` and eq. 4 of the paper).  This is the
+//!   default: it runs on anything that compiles Rust.
+//! * [`pjrt`] (`--features pjrt`) — the HLO-text/PJRT execution engine
+//!   for AOT-compiled artifacts from `python/compile/aot.py`.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::runtime::engine::{StateSet, Weights};
+use crate::runtime::manifest::Manifest;
+use crate::util::tensor::Tensor;
+
+/// Weights in whatever form a backend executes from.
+///
+/// The native backend computes straight from host memory; the pjrt
+/// backend holds device buffers uploaded once per variant and shared by
+/// every stream.
+pub enum DeviceWeights {
+    /// Host-resident tensors in manifest parameter order.
+    Host(Weights),
+    /// PJRT device buffers in manifest parameter order.
+    #[cfg(feature = "pjrt")]
+    Pjrt(Vec<xla::PjRtBuffer>),
+}
+
+/// A runtime capable of executing SOI variants.
+pub trait InferenceBackend: Send + Sync {
+    /// Short backend name ("native", "pjrt") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Number of devices this backend drives (1 for native).
+    fn device_count(&self) -> usize {
+        1
+    }
+
+    /// Compile one variant manifest into an executable form.
+    fn compile_variant(&self, manifest: &Manifest) -> Result<Box<dyn VariantExec>>;
+
+    /// Prepare weights for execution (upload for pjrt, pass-through for
+    /// native).  Tensors must be in manifest parameter order.
+    fn upload_weights(&self, weights: &Weights) -> Result<DeviceWeights>;
+}
+
+/// One compiled SOI variant, ready to serve streams.
+///
+/// `phase` arguments are schedule positions in `0..period`; callers may
+/// pass the raw frame counter (implementations reduce modulo the
+/// period).  `states` is the per-stream partial-state cache created by
+/// [`VariantExec::init_states`] and mutated in place by every step.
+pub trait VariantExec: Send + Sync {
+    /// Fresh zeroed per-stream partial states.
+    fn init_states(&self) -> StateSet;
+
+    /// Whether this variant supports the FP precompute/rest split.
+    fn has_fp_split(&self) -> bool;
+
+    /// One full streaming inference at schedule position `phase`:
+    /// consumes the frame, updates `states`, returns the output frame.
+    fn step(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<f32>>;
+
+    /// FP precompute: the delayed-region part of inference `phase`;
+    /// consumes no input frame, only updates states.
+    fn precompute(
+        &self,
+        phase: usize,
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<()>;
+
+    /// FP rest pass: consumes the fresh frame after `precompute` ran.
+    fn step_rest(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<f32>>;
+
+    /// Run the offline (full-sequence) network over (feat, T) frames.
+    fn offline(&self, x: &Tensor, weights: &DeviceWeights) -> Result<Tensor>;
+
+    /// Multiply-accumulate operations executed so far, when the backend
+    /// counts them (native does; pjrt reports `None`).  Used to verify
+    /// the scheduler's analytic per-phase accounting against reality.
+    fn executed_macs(&self) -> Option<u64> {
+        None
+    }
+
+    /// Reset the MAC counter (no-op when uncounted).
+    fn reset_executed_macs(&self) {}
+}

@@ -1,0 +1,966 @@
+//! Native pure-Rust SOI backend: interprets a variant [`Manifest`]
+//! directly — no ML runtime, no codegen, no external dependencies.
+//!
+//! This is the executable form of `python/compile/model.py`'s streaming
+//! semantics (the paper's eq. 3–7), cross-checked in
+//! `tests/native_backend.rs`:
+//!
+//! * Encoder layer `l` *ticks* (pushes its STMC conv window) when
+//!   `phase % r_in(l) == 0`; an S-CC layer `p` additionally *fires*
+//!   (computes) only when `phase % (2·r_in(p)) == 0` — the paper's eq. 4
+//!   odd-inference branch just updates state.
+//! * Decoder layer `l` computes when `phase % r_out(l) == 0`; S-CC
+//!   positions extrapolate their activation back to the `r_in` domain
+//!   through a one-frame cache (duplication) or a two-phase learned
+//!   transposed conv (`tconv`).
+//! * An FP shift at encoder `s` reads a delay-line FIFO, making layers
+//!   `s..=depth` (and the mirrored decoder region) depend on past data
+//!   only; [`VariantExec::precompute`] runs exactly that region before
+//!   the frame arrives and parks the boundary value in a handoff slot
+//!   for [`VariantExec::step_rest`].
+//!
+//! Every multiply-accumulate is counted ([`VariantExec::executed_macs`])
+//! so the scheduler's analytic per-phase accounting
+//! (`coordinator::stream::macs_at_phase`) can be verified against what
+//! actually ran.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use super::{DeviceWeights, InferenceBackend, VariantExec};
+use crate::runtime::engine::{StateSet, Weights};
+use crate::runtime::manifest::{Manifest, ModelConfig, TensorSpec};
+use crate::util::tensor::Tensor;
+
+/// The dependency-free pure-Rust backend (the default).
+pub struct NativeBackend;
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn compile_variant(&self, manifest: &Manifest) -> Result<Box<dyn VariantExec>> {
+        Ok(Box::new(NativeVariant::new(manifest)?))
+    }
+
+    fn upload_weights(&self, weights: &Weights) -> Result<DeviceWeights> {
+        Ok(DeviceWeights::Host(weights.clone()))
+    }
+}
+
+/// Per-stream partial-state inventory of a config, in canonical order
+/// (mirrors `python/compile/model.py::state_specs`).
+pub fn state_specs(cfg: &ModelConfig) -> Vec<TensorSpec> {
+    let k = cfg.kernel;
+    let mut specs = Vec::new();
+    for l in 1..=cfg.depth() {
+        specs.push(TensorSpec {
+            name: format!("enc{l}.win"),
+            shape: vec![cfg.enc_in_ch(l), k - 1],
+        });
+    }
+    for l in (1..=cfg.depth()).rev() {
+        specs.push(TensorSpec {
+            name: format!("dec{l}.win"),
+            shape: vec![cfg.dec_in_ch(l), k - 1],
+        });
+    }
+    for &p in &cfg.scc {
+        let width = if cfg.extrap_of(p) == "tconv" { 2 } else { 1 };
+        specs.push(TensorSpec {
+            name: format!("up{p}.cache"),
+            shape: vec![cfg.dec_out_ch(p), width],
+        });
+    }
+    if let Some(s) = cfg.shift_pos {
+        specs.push(TensorSpec {
+            name: "shift.fifo".into(),
+            shape: vec![cfg.enc_in_ch(s), cfg.shift],
+        });
+        if !cfg.scc.contains(&s) {
+            let ho = if s == 1 { cfg.feat } else { cfg.dec_out_ch(s) };
+            specs.push(TensorSpec {
+                name: "fp.handoff".into(),
+                shape: vec![ho, 1],
+            });
+        }
+    }
+    specs
+}
+
+/// Pre-resolved tensor indices (state slots and manifest parameters).
+struct Indices {
+    enc_win: Vec<usize>, // state slot of enc{l}.win, indexed l-1
+    dec_win: Vec<usize>, // state slot of dec{l}.win, indexed l-1
+    enc_w: Vec<usize>,   // param slots, indexed l-1
+    enc_b: Vec<usize>,
+    dec_w: Vec<usize>,
+    dec_b: Vec<usize>,
+    up_cache: BTreeMap<usize, usize>, // scc position -> state slot
+    up_w: BTreeMap<usize, usize>,     // scc position -> param slot (tconv)
+    up_b: BTreeMap<usize, usize>,
+    shift_fifo: Option<usize>,
+    fp_handoff: Option<usize>,
+    head_w: usize,
+    head_b: usize,
+    n_params: usize,
+}
+
+/// Which part of an inference to run (the FP split).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Part {
+    All,
+    Pre,
+    Rest,
+}
+
+/// One variant compiled for the native backend.
+pub struct NativeVariant {
+    cfg: ModelConfig,
+    name: String,
+    period: usize,
+    depth: usize,
+    r_in: Vec<usize>,  // 1-based, [0] unused
+    r_out: Vec<usize>, // 1-based, [0] unused
+    is_scc: Vec<bool>, // 1-based, [0] unused
+    tconv: Vec<bool>,  // 1-based: extrapolation at l is a learned tconv
+    specs: Vec<TensorSpec>,
+    idx: Indices,
+    macs: AtomicU64,
+}
+
+impl NativeVariant {
+    pub fn new(manifest: &Manifest) -> Result<NativeVariant> {
+        let cfg = manifest.config.clone();
+        let depth = cfg.depth();
+        let name = manifest.name.clone();
+        if depth == 0 {
+            bail!("{name}: config has no layers");
+        }
+        if cfg.kernel == 0 {
+            bail!("{name}: kernel must be >= 1");
+        }
+        if cfg.scc.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("{name}: scc positions must be sorted and unique");
+        }
+        if cfg.scc.iter().any(|&p| p == 0 || p > depth) {
+            bail!("{name}: scc position out of range 1..={depth}");
+        }
+        if let Some(s) = cfg.shift_pos {
+            if s == 0 || s > depth {
+                bail!("{name}: shift_pos out of range 1..={depth}");
+            }
+            if cfg.shift == 0 {
+                bail!("{name}: shift must be >= 1");
+            }
+        }
+        if manifest.period != cfg.period() {
+            bail!(
+                "{name}: manifest period {} != 2^|scc| = {}",
+                manifest.period,
+                cfg.period()
+            );
+        }
+        for &p in &cfg.scc {
+            let e = cfg.extrap_of(p);
+            if e != "duplicate" && e != "tconv" {
+                bail!("{name}: unknown extrapolation '{e}' at S-CC {p}");
+            }
+        }
+
+        let mut r_in = vec![1usize; depth + 1];
+        let mut r_out = vec![1usize; depth + 1];
+        let mut is_scc = vec![false; depth + 1];
+        let mut tconv = vec![false; depth + 1];
+        for l in 1..=depth {
+            r_in[l] = cfg.r_in(l);
+            r_out[l] = cfg.r_out(l);
+            is_scc[l] = cfg.scc.contains(&l);
+            tconv[l] = is_scc[l] && cfg.extrap_of(l) == "tconv";
+        }
+
+        let specs = state_specs(&cfg);
+        let state_slot: BTreeMap<&str, usize> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.as_str(), i))
+            .collect();
+        let sslot = |n: &str| -> Result<usize> {
+            state_slot
+                .get(n)
+                .copied()
+                .with_context(|| format!("{name}: missing state slot {n}"))
+        };
+
+        let param_slot: BTreeMap<&str, usize> = manifest
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.as_str(), i))
+            .collect();
+        let pslot = |n: &str, shape: &[usize]| -> Result<usize> {
+            let i = *param_slot
+                .get(n)
+                .with_context(|| format!("{name}: manifest lacks parameter {n}"))?;
+            if manifest.params[i].shape != shape {
+                bail!(
+                    "{name}: parameter {n} has shape {:?}, native backend expects {:?}",
+                    manifest.params[i].shape,
+                    shape
+                );
+            }
+            Ok(i)
+        };
+
+        let k = cfg.kernel;
+        let mut enc_win = Vec::new();
+        let mut dec_win = Vec::new();
+        let mut enc_w = Vec::new();
+        let mut enc_b = Vec::new();
+        let mut dec_w = Vec::new();
+        let mut dec_b = Vec::new();
+        for l in 1..=depth {
+            enc_win.push(sslot(&format!("enc{l}.win"))?);
+            dec_win.push(sslot(&format!("dec{l}.win"))?);
+            enc_w.push(pslot(
+                &format!("enc{l}.w"),
+                &[cfg.enc_out_ch(l), cfg.enc_in_ch(l), k],
+            )?);
+            enc_b.push(pslot(&format!("enc{l}.b"), &[cfg.enc_out_ch(l)])?);
+            dec_w.push(pslot(
+                &format!("dec{l}.w"),
+                &[cfg.dec_out_ch(l), cfg.dec_in_ch(l), k],
+            )?);
+            dec_b.push(pslot(&format!("dec{l}.b"), &[cfg.dec_out_ch(l)])?);
+        }
+        let mut up_cache = BTreeMap::new();
+        let mut up_w = BTreeMap::new();
+        let mut up_b = BTreeMap::new();
+        for &p in &cfg.scc {
+            up_cache.insert(p, sslot(&format!("up{p}.cache"))?);
+            if tconv[p] {
+                let c = cfg.dec_out_ch(p);
+                up_w.insert(p, pslot(&format!("up{p}.w"), &[c, c, 2])?);
+                up_b.insert(p, pslot(&format!("up{p}.b"), &[c])?);
+            }
+        }
+        let shift_fifo = if cfg.shift_pos.is_some() {
+            Some(sslot("shift.fifo")?)
+        } else {
+            None
+        };
+        let fp_handoff = match cfg.shift_pos {
+            Some(s) if !cfg.scc.contains(&s) => Some(sslot("fp.handoff")?),
+            _ => None,
+        };
+        let head_w = pslot("head.w", &[cfg.feat, cfg.dec_out_ch(1), 1])?;
+        let head_b = pslot("head.b", &[cfg.feat])?;
+
+        Ok(NativeVariant {
+            period: cfg.period(),
+            idx: Indices {
+                enc_win,
+                dec_win,
+                enc_w,
+                enc_b,
+                dec_w,
+                dec_b,
+                up_cache,
+                up_w,
+                up_b,
+                shift_fifo,
+                fp_handoff,
+                head_w,
+                head_b,
+                n_params: manifest.params.len(),
+            },
+            cfg,
+            name,
+            depth,
+            r_in,
+            r_out,
+            is_scc,
+            tconv,
+            specs,
+            macs: AtomicU64::new(0),
+        })
+    }
+
+    /// Resolve host weights from the backend-tagged handle.
+    fn host<'a>(&self, dw: &'a DeviceWeights) -> Result<&'a Weights> {
+        match dw {
+            DeviceWeights::Host(w) => {
+                if w.tensors.len() != self.idx.n_params {
+                    bail!(
+                        "{}: weights hold {} tensors, manifest wants {}",
+                        self.name,
+                        w.tensors.len(),
+                        self.idx.n_params
+                    );
+                }
+                Ok(w)
+            }
+            #[cfg(feature = "pjrt")]
+            DeviceWeights::Pjrt(_) => {
+                bail!("{}: pjrt device weights passed to the native backend", self.name)
+            }
+        }
+    }
+
+    // ---- counted kernels --------------------------------------------------
+
+    /// Dense step conv over a flattened (C_in, K) window.
+    fn conv_win(&self, w: &Tensor, b: &Tensor, win: &[f32]) -> Vec<f32> {
+        let c_out = w.shape[0];
+        let n = win.len();
+        let mut out = Vec::with_capacity(c_out);
+        for o in 0..c_out {
+            let row = &w.data[o * n..(o + 1) * n];
+            let mut acc = b.data[o];
+            for (wv, xv) in row.iter().zip(win) {
+                acc += wv * xv;
+            }
+            out.push(acc);
+        }
+        self.macs.fetch_add((c_out * n) as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// One output phase of a stride-2 transposed conv: `w[:, :, ph] @ x + b`.
+    fn tconv_phase(&self, w: &Tensor, b: &Tensor, ph: usize, x: &[f32]) -> Vec<f32> {
+        let c_out = w.shape[0];
+        let c_in = w.shape[1];
+        let mut out = Vec::with_capacity(c_out);
+        for o in 0..c_out {
+            let mut acc = b.data[o];
+            for (i, xv) in x.iter().enumerate() {
+                acc += w.data[o * c_in * 2 + i * 2 + ph] * xv;
+            }
+            out.push(acc);
+        }
+        self.macs.fetch_add((c_out * c_in) as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Causal stride-1 conv over a whole (C_in, T) sequence.
+    fn conv_full(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
+        let c_in = x.shape[0];
+        let t = x.shape[1];
+        let c_out = w.shape[0];
+        let k = w.shape[2];
+        let mut out = Tensor::zeros(vec![c_out, t]);
+        for o in 0..c_out {
+            for tt in 0..t {
+                let mut acc = b.data[o];
+                for i in 0..c_in {
+                    let wrow = &w.data[(o * c_in + i) * k..(o * c_in + i + 1) * k];
+                    for (j, wv) in wrow.iter().enumerate() {
+                        let src = tt as isize + j as isize - (k as isize - 1);
+                        if src >= 0 {
+                            acc += wv * x.at2(i, src as usize);
+                        }
+                    }
+                }
+                out.set2(o, tt, acc);
+            }
+        }
+        self.macs
+            .fetch_add((c_out * c_in * k * t) as u64, Ordering::Relaxed);
+        out
+    }
+
+    // ---- streaming step ---------------------------------------------------
+
+    /// One inference (or one FP part of it) at schedule position `phase`.
+    fn run_step(
+        &self,
+        phase: usize,
+        frame: Option<&[f32]>,
+        states: &mut StateSet,
+        dw: &DeviceWeights,
+        part: Part,
+    ) -> Result<Option<Vec<f32>>> {
+        if self.cfg.interp.is_some() {
+            bail!(
+                "{}: interpolation variants are offline-only (App. D adds a \
+                 frame of latency online); use offline()",
+                self.name
+            );
+        }
+        if states.tensors.len() != self.specs.len() {
+            bail!(
+                "{}: state set holds {} tensors, expected {}",
+                self.name,
+                states.tensors.len(),
+                self.specs.len()
+            );
+        }
+        let w = self.host(dw)?;
+        let phase = phase % self.period;
+        let depth = self.depth;
+        let s = self.cfg.shift_pos;
+        let delayed = |l: usize| s.map_or(false, |sp| l >= sp);
+        let in_part = |l: usize| match part {
+            Part::All => true,
+            Part::Pre => delayed(l),
+            Part::Rest => !delayed(l),
+        };
+
+        // ---- encoder ----
+        let mut enc_out: Vec<Option<Vec<f32>>> = vec![None; depth + 1];
+        let mut cur: Option<Vec<f32>> = match part {
+            Part::Pre => None,
+            _ => Some(
+                frame
+                    .with_context(|| format!("{}: step needs a frame", self.name))?
+                    .to_vec(),
+            ),
+        };
+        for l in 1..=depth {
+            if phase % self.r_in[l] != 0 {
+                cur = None;
+                continue;
+            }
+            // FP delay line at the input of layer s: read the oldest entry
+            // before pushing (the pre pass reads, the rest pass pushes).
+            if s == Some(l) {
+                let fifo = &mut states.tensors[self.idx.shift_fifo.unwrap()];
+                let delayed_in = column(fifo, 0);
+                if part != Part::Pre {
+                    let c = cur
+                        .as_ref()
+                        .with_context(|| format!("{}: enc{l} missing input", self.name))?;
+                    push_fifo(fifo, c);
+                }
+                cur = if in_part(l) { Some(delayed_in) } else { None };
+            }
+            if !in_part(l) {
+                cur = None;
+                continue;
+            }
+            let c = cur
+                .take()
+                .with_context(|| format!("{}: enc{l} has no input at phase {phase}", self.name))?;
+            let fires = if self.is_scc[l] {
+                phase % (2 * self.r_in[l]) == 0
+            } else {
+                true
+            };
+            let win = push_window(&mut states.tensors[self.idx.enc_win[l - 1]], &c);
+            cur = if fires {
+                let mut y = self.conv_win(
+                    &w.tensors[self.idx.enc_w[l - 1]],
+                    &w.tensors[self.idx.enc_b[l - 1]],
+                    &win,
+                );
+                elu(&mut y);
+                Some(y)
+            } else {
+                None
+            };
+            enc_out[l] = cur.clone();
+        }
+
+        // ---- decoder ----
+        let mut d: Option<Vec<f32>> = None;
+        for l in (1..=depth).rev() {
+            let mut computed_here = false;
+            if phase % self.r_out[l] == 0 {
+                if !in_part(l) {
+                    d = None;
+                } else {
+                    let inp: Vec<f32> = if l == depth {
+                        enc_out[l]
+                            .clone()
+                            .with_context(|| format!("{}: dec{l} missing input", self.name))?
+                    } else {
+                        let mut upper = d.take();
+                        if part == Part::Rest && delayed(l + 1) && !self.is_scc[l + 1] {
+                            // Boundary: the delayed d_{l+1} was produced by
+                            // the pre pass and parked in the handoff slot.
+                            upper = Some(column(
+                                &states.tensors[self.idx.fp_handoff.unwrap()],
+                                0,
+                            ));
+                        }
+                        let mut v = upper
+                            .with_context(|| format!("{}: dec{l} missing deep input", self.name))?;
+                        let skip = enc_out[l]
+                            .as_ref()
+                            .with_context(|| format!("{}: dec{l} missing skip", self.name))?;
+                        v.extend_from_slice(skip);
+                        v
+                    };
+                    let win = push_window(&mut states.tensors[self.idx.dec_win[l - 1]], &inp);
+                    let mut y = self.conv_win(
+                        &w.tensors[self.idx.dec_w[l - 1]],
+                        &w.tensors[self.idx.dec_b[l - 1]],
+                        &win,
+                    );
+                    elu(&mut y);
+                    d = Some(y);
+                    computed_here = true;
+                }
+            }
+            // Extrapolation back to the r_in(l) domain.  The *write*
+            // belongs to whichever pass computed the fresh d_l; the *read*
+            // to the pass computing d_{l-1} (or the head for l == 1).
+            if self.is_scc[l] && phase % self.r_in[l] == 0 {
+                let cache_slot = self.idx.up_cache[&l];
+                let fresh = phase % self.r_out[l] == 0;
+                if fresh && computed_here {
+                    let dv = d.as_ref().unwrap();
+                    if self.tconv[l] {
+                        let ph0 = self.tconv_phase(
+                            &w.tensors[self.idx.up_w[&l]],
+                            &w.tensors[self.idx.up_b[&l]],
+                            0,
+                            dv,
+                        );
+                        let ph1 = self.tconv_phase(
+                            &w.tensors[self.idx.up_w[&l]],
+                            &w.tensors[self.idx.up_b[&l]],
+                            1,
+                            dv,
+                        );
+                        let cache = &mut states.tensors[cache_slot];
+                        set_column(cache, 0, &ph0);
+                        set_column(cache, 1, &ph1);
+                    } else {
+                        set_column(&mut states.tensors[cache_slot], 0, dv);
+                    }
+                }
+                let reader_delayed = (l >= 2 && delayed(l - 1)) || (l == 1 && s == Some(1));
+                let reads_here = part == Part::All
+                    || (reader_delayed && part == Part::Pre)
+                    || (!reader_delayed && part == Part::Rest);
+                d = if reads_here {
+                    let cache = &states.tensors[cache_slot];
+                    let col = if self.tconv[l] && !fresh { 1 } else { 0 };
+                    Some(column(cache, col))
+                } else {
+                    None
+                };
+            }
+            // FP boundary handoff (pre pass writes; rest pass reads above).
+            if part == Part::Pre
+                && s == Some(l)
+                && !self.is_scc[l]
+                && phase % self.r_out[l] == 0
+                && l != 1
+            {
+                if let Some(dv) = &d {
+                    set_column(&mut states.tensors[self.idx.fp_handoff.unwrap()], 0, dv);
+                }
+            }
+        }
+
+        // ---- head ----
+        let head_w = &w.tensors[self.idx.head_w];
+        let head_b = &w.tensors[self.idx.head_b];
+        match part {
+            Part::Pre => {
+                if s == Some(1) {
+                    // Whole network delayed: the head output is the handoff.
+                    let dv = d
+                        .with_context(|| format!("{}: pre pass lost the head input", self.name))?;
+                    let out = self.conv_win(head_w, head_b, &dv);
+                    set_column(&mut states.tensors[self.idx.fp_handoff.unwrap()], 0, &out);
+                }
+                Ok(None)
+            }
+            Part::Rest if s == Some(1) => Ok(Some(column(
+                &states.tensors[self.idx.fp_handoff.unwrap()],
+                0,
+            ))),
+            _ => {
+                let dv = d
+                    .with_context(|| format!("{}: no decoder output at phase {phase}", self.name))?;
+                Ok(Some(self.conv_win(head_w, head_b, &dv)))
+            }
+        }
+    }
+
+    // ---- offline (full-sequence) interpreter ------------------------------
+
+    fn offline_forward(&self, x: &Tensor, w: &Weights) -> Result<Tensor> {
+        let cfg = &self.cfg;
+        if x.shape.len() != 2 || x.shape[0] != cfg.feat {
+            bail!(
+                "{}: offline input shape {:?}, expected [{}, T]",
+                self.name,
+                x.shape,
+                cfg.feat
+            );
+        }
+        if x.shape[1] == 0 || x.shape[1] % self.period != 0 {
+            bail!(
+                "{}: offline T = {} must be a positive multiple of the period {}",
+                self.name,
+                x.shape[1],
+                self.period
+            );
+        }
+        let depth = self.depth;
+        let mut enc: Vec<Tensor> = Vec::with_capacity(depth + 1);
+        enc.push(x.clone());
+        let mut cur = x.clone();
+        for l in 1..=depth {
+            if cfg.shift_pos == Some(l) {
+                cur = delay_cols(&cur, cfg.shift);
+            }
+            let mut y = self.conv_full(
+                &cur,
+                &w.tensors[self.idx.enc_w[l - 1]],
+                &w.tensors[self.idx.enc_b[l - 1]],
+            );
+            if self.is_scc[l] {
+                y = stride2(&y);
+            }
+            elu(&mut y.data);
+            cur = y.clone();
+            enc.push(y);
+        }
+
+        let mut d: Option<Tensor> = None;
+        for l in (1..=depth).rev() {
+            let inp = if l == depth {
+                enc[depth].clone()
+            } else {
+                concat_rows(d.as_ref().unwrap(), &enc[l])
+            };
+            let mut y = self.conv_full(
+                &inp,
+                &w.tensors[self.idx.dec_w[l - 1]],
+                &w.tensors[self.idx.dec_b[l - 1]],
+            );
+            elu(&mut y.data);
+            let mut dl = y;
+            if self.is_scc[l] {
+                let t_out = enc[l - 1].shape[1];
+                dl = if let Some(kind) = &cfg.interp {
+                    interp_upsample(&dl, t_out, kind)
+                        .with_context(|| format!("{}: up{l}", self.name))?
+                } else if self.tconv[l] {
+                    self.tconv_upsample(
+                        &dl,
+                        &w.tensors[self.idx.up_w[&l]],
+                        &w.tensors[self.idx.up_b[&l]],
+                        t_out,
+                    )
+                } else {
+                    duplicate_upsample(&dl, t_out)
+                };
+            }
+            d = Some(dl);
+        }
+        Ok(self.conv_full(
+            &d.unwrap(),
+            &w.tensors[self.idx.head_w],
+            &w.tensors[self.idx.head_b],
+        ))
+    }
+
+    /// Stride-2 transposed conv over a whole sequence: phase 0 lands on
+    /// even output times, phase 1 on odd ones.
+    fn tconv_upsample(&self, y: &Tensor, w: &Tensor, b: &Tensor, t_out: usize) -> Tensor {
+        let c_out = w.shape[0];
+        let s = y.shape[1];
+        let mut out = Tensor::zeros(vec![c_out, t_out]);
+        for src in 0..s {
+            let col = column(y, src);
+            let ph0 = self.tconv_phase(w, b, 0, &col);
+            let ph1 = self.tconv_phase(w, b, 1, &col);
+            if 2 * src < t_out {
+                set_column(&mut out, 2 * src, &ph0);
+            }
+            if 2 * src + 1 < t_out {
+                set_column(&mut out, 2 * src + 1, &ph1);
+            }
+        }
+        out
+    }
+}
+
+impl VariantExec for NativeVariant {
+    fn init_states(&self) -> StateSet {
+        StateSet {
+            tensors: self
+                .specs
+                .iter()
+                .map(|s| Tensor::zeros(s.shape.clone()))
+                .collect(),
+        }
+    }
+
+    fn has_fp_split(&self) -> bool {
+        // An FP shift at layer 1 that is *also* an S-CC position has no
+        // handoff slot (the head boundary value has nowhere to park) —
+        // the reference model cannot split that configuration either;
+        // the paper's SS-CC table starts at position 2.
+        match self.cfg.shift_pos {
+            Some(1) => !self.cfg.scc.contains(&1),
+            Some(_) => true,
+            None => false,
+        }
+    }
+
+    fn step(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<f32>> {
+        let out = self.run_step(phase, Some(frame), states, weights, Part::All)?;
+        out.with_context(|| format!("{}: step produced no output", self.name))
+    }
+
+    fn precompute(
+        &self,
+        phase: usize,
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<()> {
+        if !self.has_fp_split() {
+            bail!("{}: variant has no FP split", self.name);
+        }
+        self.run_step(phase, None, states, weights, Part::Pre)?;
+        Ok(())
+    }
+
+    fn step_rest(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<f32>> {
+        if !self.has_fp_split() {
+            bail!("{}: variant has no FP split", self.name);
+        }
+        let out = self.run_step(phase, Some(frame), states, weights, Part::Rest)?;
+        out.with_context(|| format!("{}: rest pass produced no output", self.name))
+    }
+
+    fn offline(&self, x: &Tensor, weights: &DeviceWeights) -> Result<Tensor> {
+        let w = self.host(weights)?;
+        self.offline_forward(x, w)
+    }
+
+    fn executed_macs(&self) -> Option<u64> {
+        Some(self.macs.load(Ordering::Relaxed))
+    }
+
+    fn reset_executed_macs(&self) {
+        self.macs.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---- column/window primitives (row-major (C, W) tensors) ------------------
+
+/// ELU activation in place.
+fn elu(v: &mut [f32]) {
+    for x in v.iter_mut() {
+        if *x < 0.0 {
+            *x = x.exp_m1();
+        }
+    }
+}
+
+/// Extract column `j` of a (C, W) tensor.
+fn column(t: &Tensor, j: usize) -> Vec<f32> {
+    let w = t.shape[1];
+    (0..t.shape[0]).map(|i| t.data[i * w + j]).collect()
+}
+
+/// Overwrite column `j` of a (C, W) tensor.
+fn set_column(t: &mut Tensor, j: usize, v: &[f32]) {
+    let w = t.shape[1];
+    for (i, &x) in v.iter().enumerate() {
+        t.data[i * w + j] = x;
+    }
+}
+
+/// STMC window tick: returns the full (C, K) window `[state | cur]`
+/// flattened row-major and advances the state to `window[:, 1:]`.
+fn push_window(state: &mut Tensor, cur: &[f32]) -> Vec<f32> {
+    let c = state.shape[0];
+    let w = state.shape[1]; // K - 1
+    let k = w + 1;
+    let mut win = vec![0.0f32; c * k];
+    for i in 0..c {
+        win[i * k..i * k + w].copy_from_slice(&state.data[i * w..(i + 1) * w]);
+        win[i * k + w] = cur[i];
+    }
+    for i in 0..c {
+        state.data[i * w..(i + 1) * w].copy_from_slice(&win[i * k + 1..(i + 1) * k]);
+    }
+    win
+}
+
+/// FIFO tick: drop the oldest column, append `cur`.
+fn push_fifo(state: &mut Tensor, cur: &[f32]) {
+    let w = state.shape[1];
+    for i in 0..state.shape[0] {
+        let row = &mut state.data[i * w..(i + 1) * w];
+        row.copy_within(1.., 0);
+        row[w - 1] = cur[i];
+    }
+}
+
+// ---- offline sequence primitives ------------------------------------------
+
+/// Right-shift along time by `d` frames (zeros in front), same length.
+fn delay_cols(x: &Tensor, d: usize) -> Tensor {
+    let (c, t) = (x.shape[0], x.shape[1]);
+    let mut out = Tensor::zeros(vec![c, t]);
+    for i in 0..c {
+        for tt in d..t {
+            out.set2(i, tt, x.at2(i, tt - d));
+        }
+    }
+    out
+}
+
+/// Keep even time steps: `out[:, s] = x[:, 2 s]`.
+fn stride2(x: &Tensor) -> Tensor {
+    let (c, t) = (x.shape[0], x.shape[1]);
+    let t2 = (t + 1) / 2;
+    let mut out = Tensor::zeros(vec![c, t2]);
+    for i in 0..c {
+        for s in 0..t2 {
+            out.set2(i, s, x.at2(i, 2 * s));
+        }
+    }
+    out
+}
+
+/// Stack `a` over `b` along the channel axis.
+fn concat_rows(a: &Tensor, b: &Tensor) -> Tensor {
+    debug_assert_eq!(a.shape[1], b.shape[1]);
+    let t = a.shape[1];
+    let c = a.shape[0] + b.shape[0];
+    let mut data = Vec::with_capacity(c * t);
+    data.extend_from_slice(&a.data);
+    data.extend_from_slice(&b.data);
+    Tensor::new(vec![c, t], data)
+}
+
+/// Duplication extrapolation (PP alignment): `up[:, t] = y[:, t / 2]`.
+fn duplicate_upsample(y: &Tensor, t_out: usize) -> Tensor {
+    let c = y.shape[0];
+    let last = y.shape[1] - 1;
+    let mut out = Tensor::zeros(vec![c, t_out]);
+    for i in 0..c {
+        for tt in 0..t_out {
+            out.set2(i, tt, y.at2(i, (tt / 2).min(last)));
+        }
+    }
+    out
+}
+
+/// Interpolation reconstruction (App. D, offline-only).
+fn interp_upsample(y: &Tensor, t_out: usize, kind: &str) -> Result<Tensor> {
+    let c = y.shape[0];
+    let last = y.shape[1] as isize - 1;
+    let tap = |i: usize, j: isize| y.at2(i, j.clamp(0, last) as usize);
+    let mut out = Tensor::zeros(vec![c, t_out]);
+    for tt in 0..t_out {
+        let s0 = (tt / 2) as isize;
+        let odd = tt % 2 == 1;
+        let frac: f32 = if odd { 0.5 } else { 0.0 };
+        for i in 0..c {
+            let v = match kind {
+                "nearest" => tap(i, s0 + if odd { 1 } else { 0 }),
+                "linear" => tap(i, s0) * (1.0 - frac) + tap(i, s0 + 1) * frac,
+                "cubic" => {
+                    // Catmull-Rom with u = frac
+                    let (p0, p1, p2, p3) =
+                        (tap(i, s0 - 1), tap(i, s0), tap(i, s0 + 1), tap(i, s0 + 2));
+                    let u = frac;
+                    0.5 * ((2.0 * p1)
+                        + (-p0 + p2) * u
+                        + (2.0 * p0 - 5.0 * p1 + 4.0 * p2 - p3) * u * u
+                        + (-p0 + 3.0 * p1 - 3.0 * p2 + p3) * u * u * u)
+                }
+                other => bail!("unknown interpolation kind '{other}'"),
+            };
+            out.set2(i, tt, v);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_specs_mirror_python_inventory() {
+        let cfg = ModelConfig {
+            feat: 4,
+            channels: vec![6, 8],
+            kernel: 3,
+            scc: vec![2],
+            shift_pos: Some(2),
+            shift: 1,
+            extrap: vec!["duplicate".into()],
+            interp: None,
+        };
+        let specs = state_specs(&cfg);
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        // s == p (SS-CC): no fp.handoff slot.
+        assert_eq!(
+            names,
+            ["enc1.win", "enc2.win", "dec2.win", "dec1.win", "up2.cache", "shift.fifo"]
+        );
+        assert_eq!(specs[0].shape, vec![4, 2]); // enc1: feat x (k-1)
+        assert_eq!(specs[2].shape, vec![8, 2]); // dec2 in = channels[1]
+        assert_eq!(specs[3].shape, vec![6 + 6, 2]); // dec1 in = dec_out(2)+ch[0]
+        assert_eq!(specs[4].shape, vec![6, 1]); // up2 cache = dec_out(2)
+        assert_eq!(specs[5].shape, vec![6, 1]); // fifo at enc2 input
+    }
+
+    #[test]
+    fn hybrid_fp_gets_handoff_slot() {
+        let cfg = ModelConfig {
+            feat: 4,
+            channels: vec![5, 6, 7],
+            kernel: 3,
+            scc: vec![3],
+            shift_pos: Some(2),
+            shift: 1,
+            extrap: vec!["duplicate".into()],
+            interp: None,
+        };
+        let names: Vec<String> = state_specs(&cfg).iter().map(|s| s.name.clone()).collect();
+        assert!(names.contains(&"fp.handoff".to_string()));
+        assert!(names.contains(&"shift.fifo".to_string()));
+    }
+
+    #[test]
+    fn push_window_shifts_by_one() {
+        let mut st = Tensor::new(vec![2, 2], vec![1.0, 2.0, 10.0, 20.0]);
+        let win = push_window(&mut st, &[3.0, 30.0]);
+        assert_eq!(win, vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0]);
+        assert_eq!(st.data, vec![2.0, 3.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn fifo_drops_oldest() {
+        let mut st = Tensor::new(vec![1, 3], vec![1.0, 2.0, 3.0]);
+        push_fifo(&mut st, &[4.0]);
+        assert_eq!(st.data, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn duplicate_upsample_repeats_frames() {
+        let y = Tensor::new(vec![1, 2], vec![5.0, 7.0]);
+        let up = duplicate_upsample(&y, 4);
+        assert_eq!(up.data, vec![5.0, 5.0, 7.0, 7.0]);
+    }
+}

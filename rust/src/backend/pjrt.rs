@@ -1,0 +1,343 @@
+//! PJRT execution backend (`--features pjrt`): compiles a variant's
+//! HLO-text artifacts (emitted by `python/compile/aot.py`) and runs them
+//! from the coordinator hot path.  Python never runs here.
+//!
+//! Implementation notes:
+//!
+//! * We execute with `execute_b` over device buffers, **not** `execute`
+//!   over literals: the `xla` crate's `execute` path leaks one device
+//!   buffer per argument per call (`buffer.release()` without a matching
+//!   free in xla_rs.cc) — fatal for a long-running server at 500 fps.
+//!   With `execute_b` we own the input buffers and they are freed on Drop.
+//! * All step executables return one tuple (jax lowered with
+//!   `return_tuple=True`); PJRT hands back a single tuple buffer which we
+//!   copy to host and decompose.
+//! * Weights are uploaded to the device once per variant
+//!   ([`InferenceBackend::upload_weights`]) and shared by every stream;
+//!   per-step uploads are just the frame and the per-stream states.
+//!
+//! Note: `rust/vendor/xla` is a compile-time stub by default — swap in
+//! the real `xla` crate to execute artifacts (DESIGN.md §5).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{DeviceWeights, InferenceBackend, VariantExec};
+use crate::runtime::engine::{StateSet, Weights};
+use crate::runtime::manifest::Manifest;
+use crate::util::tensor::Tensor;
+
+/// Upload a host tensor to a device buffer.
+fn upload(client: &xla::PjRtClient, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer::<f32>(data, dims, None)
+        .context("uploading buffer")
+}
+
+/// Shared PJRT client (CPU).
+pub struct PjrtBackend {
+    client: Arc<xla::PjRtClient>,
+}
+
+// SAFETY: PJRT requires clients/executables to be usable from multiple
+// threads concurrently (the CPU plugin uses an internal thread pool
+// itself); the `xla` crate wrappers merely hold raw pointers without
+// asserting it.  All rust-side mutation (states, metrics) is worker-local.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn cpu() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend {
+            client: Arc::new(client),
+        })
+    }
+
+    /// Compile one HLO-text file into a loaded executable.
+    fn compile_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    fn compile_variant(&self, manifest: &Manifest) -> Result<Box<dyn VariantExec>> {
+        Ok(Box::new(PjrtVariant::compile(self, manifest)?))
+    }
+
+    fn upload_weights(&self, weights: &Weights) -> Result<DeviceWeights> {
+        let bufs = weights
+            .tensors
+            .iter()
+            .map(|t| upload(&self.client, &t.data, &t.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceWeights::Pjrt(bufs))
+    }
+}
+
+/// A compiled executable returning a single tuple.
+struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute over device buffers; decompose the tuple into host tensors.
+    fn run(&self, args: &[&xla::PjRtBuffer], out_shapes: &[Vec<usize>]) -> Result<Vec<Tensor>> {
+        let results = self.exe.execute_b(args).context("execute_b")?;
+        let buf = &results[0][0];
+        let mut lit = buf.to_literal_sync().context("tuple to host")?;
+        let parts = lit.decompose_tuple().context("decompose tuple")?;
+        if parts.len() != out_shapes.len() {
+            bail!(
+                "executable returned {} outputs, expected {}",
+                parts.len(),
+                out_shapes.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, shape) in parts.into_iter().zip(out_shapes) {
+            let data = p.to_vec::<f32>().context("tuple element to f32")?;
+            out.push(Tensor::new(shape.clone(), data));
+        }
+        Ok(out)
+    }
+}
+
+/// One variant compiled for the PJRT backend: all executables + manifest.
+pub struct PjrtVariant {
+    manifest: Manifest,
+    // Phases with identical graphs share one compiled executable (Arc).
+    step: Vec<Arc<Executable>>, // indexed by phase
+    pre: Vec<Arc<Executable>>,  // empty unless FP
+    rest: Vec<Arc<Executable>>, // empty unless FP
+    offline: Arc<Executable>,
+    client: Arc<xla::PjRtClient>,
+}
+
+// SAFETY: same argument as for PjrtBackend — the PJRT C API guarantees
+// thread-safe Execute/buffer operations; streams never share StateSets.
+unsafe impl Send for PjrtVariant {}
+unsafe impl Sync for PjrtVariant {}
+
+impl PjrtVariant {
+    /// Compile every executable of a variant.
+    ///
+    /// Phases whose manifests point at the same HLO file share one
+    /// compiled executable (aot.py dedupes identical graphs).
+    fn compile(backend: &PjrtBackend, manifest: &Manifest) -> Result<PjrtVariant> {
+        if manifest.executables.is_empty() {
+            bail!(
+                "{}: manifest ships no HLO executables (native-only artifact); \
+                 build with aot.py or use the native backend",
+                manifest.name
+            );
+        }
+        let mut cache: std::collections::BTreeMap<String, usize> = Default::default();
+        let mut exes: Vec<Executable> = Vec::new();
+        let mut index_of = |key: &str| -> Result<usize> {
+            let file = manifest
+                .executables
+                .get(key)
+                .with_context(|| format!("missing executable {key}"))?
+                .clone();
+            if let Some(&i) = cache.get(&file) {
+                return Ok(i);
+            }
+            let exe = backend.compile_file(&manifest.dir.join(&file))?;
+            exes.push(exe);
+            cache.insert(file, exes.len() - 1);
+            Ok(exes.len() - 1)
+        };
+
+        let mut step_idx = Vec::new();
+        let mut pre_idx = Vec::new();
+        let mut rest_idx = Vec::new();
+        if manifest.streamable {
+            for phase in 0..manifest.period {
+                step_idx.push(index_of(&format!("step_p{phase}"))?);
+            }
+            if manifest.executables.contains_key("pre_p0") {
+                for phase in 0..manifest.period {
+                    pre_idx.push(index_of(&format!("pre_p{phase}"))?);
+                    rest_idx.push(index_of(&format!("rest_p{phase}"))?);
+                }
+            }
+        }
+        let off_idx = index_of("offline")?;
+
+        let exes: Vec<Arc<Executable>> = exes.into_iter().map(Arc::new).collect();
+        let pick = |idx: &[usize]| idx.iter().map(|&i| exes[i].clone()).collect::<Vec<_>>();
+        Ok(PjrtVariant {
+            step: pick(&step_idx),
+            pre: pick(&pre_idx),
+            rest: pick(&rest_idx),
+            offline: exes[off_idx].clone(),
+            manifest: manifest.clone(),
+            client: backend.client.clone(),
+        })
+    }
+
+    fn state_shapes(&self) -> Vec<Vec<usize>> {
+        if self.manifest.packed_states > 0 {
+            return vec![vec![self.manifest.packed_states]];
+        }
+        self.manifest
+            .states
+            .iter()
+            .map(|s| s.shape.clone())
+            .collect()
+    }
+
+    fn device_bufs<'a>(&self, dw: &'a DeviceWeights) -> Result<&'a [xla::PjRtBuffer]> {
+        match dw {
+            DeviceWeights::Pjrt(bufs) => Ok(bufs),
+            DeviceWeights::Host(_) => bail!(
+                "{}: host weights passed to the pjrt backend; upload them first",
+                self.manifest.name
+            ),
+        }
+    }
+
+    fn run_step_like(
+        &self,
+        exe: &Executable,
+        frame: Option<&[f32]>,
+        states: &mut StateSet,
+        dw: &DeviceWeights,
+        has_out: bool,
+    ) -> Result<Vec<f32>> {
+        let feat = self.manifest.config.feat;
+        let weight_bufs = self.device_bufs(dw)?;
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(1 + states.tensors.len());
+        if let Some(f) = frame {
+            if f.len() != feat {
+                bail!("frame has {} samples, expected {feat}", f.len());
+            }
+            owned.push(upload(&self.client, f, &[feat, 1])?);
+        }
+        for t in &states.tensors {
+            owned.push(upload(&self.client, &t.data, &t.shape)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = owned.iter().collect();
+        for b in weight_bufs {
+            args.push(b);
+        }
+
+        let mut out_shapes = Vec::new();
+        if has_out {
+            out_shapes.push(vec![feat, 1]);
+        }
+        out_shapes.extend(self.state_shapes());
+        let mut outs = exe.run(&args, &out_shapes)?;
+
+        let out_frame = if has_out {
+            let f = outs.remove(0);
+            f.data
+        } else {
+            Vec::new()
+        };
+        for (slot, t) in states.tensors.iter_mut().zip(outs) {
+            *slot = t;
+        }
+        Ok(out_frame)
+    }
+}
+
+impl VariantExec for PjrtVariant {
+    /// Fresh zeroed per-stream states.
+    ///
+    /// Modern artifacts exchange one packed state vector (manifest
+    /// `packed_states` > 0) — a single HBM upload per inference; legacy
+    /// artifacts exchange one tensor per state spec.
+    fn init_states(&self) -> StateSet {
+        if self.manifest.packed_states > 0 {
+            return StateSet {
+                tensors: vec![Tensor::zeros(vec![self.manifest.packed_states])],
+            };
+        }
+        StateSet {
+            tensors: self
+                .manifest
+                .states
+                .iter()
+                .map(|s| Tensor::zeros(s.shape.clone()))
+                .collect(),
+        }
+    }
+
+    fn has_fp_split(&self) -> bool {
+        !self.pre.is_empty()
+    }
+
+    fn step(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<f32>> {
+        let exe = &self.step[phase % self.manifest.period];
+        self.run_step_like(exe, Some(frame), states, weights, true)
+    }
+
+    fn precompute(
+        &self,
+        phase: usize,
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<()> {
+        if self.pre.is_empty() {
+            bail!("{}: variant has no FP split", self.manifest.name);
+        }
+        let exe = &self.pre[phase % self.manifest.period];
+        self.run_step_like(exe, None, states, weights, false)?;
+        Ok(())
+    }
+
+    fn step_rest(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<f32>> {
+        if self.rest.is_empty() {
+            bail!("{}: variant has no FP split", self.manifest.name);
+        }
+        let exe = &self.rest[phase % self.manifest.period];
+        self.run_step_like(exe, Some(frame), states, weights, true)
+    }
+
+    fn offline(&self, x: &Tensor, weights: &DeviceWeights) -> Result<Tensor> {
+        let feat = self.manifest.config.feat;
+        let t = self.manifest.offline_t;
+        if x.shape != [feat, t] {
+            bail!("offline input shape {:?}, expected [{feat}, {t}]", x.shape);
+        }
+        let weight_bufs = self.device_bufs(weights)?;
+        let xbuf = upload(&self.client, &x.data, &x.shape)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&xbuf];
+        for b in weight_bufs {
+            args.push(b);
+        }
+        let mut outs = self.offline.run(&args, &[vec![feat, t]])?;
+        Ok(outs.remove(0))
+    }
+}

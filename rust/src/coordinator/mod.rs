@@ -16,5 +16,5 @@ pub mod stream;
 
 pub use metrics::StreamMetrics;
 pub use scheduler::{Scheduler, StepPlan};
-pub use server::{ServeReport, Server, SharedEngine};
+pub use server::{ServeReport, Server};
 pub use stream::StreamSession;

@@ -106,6 +106,36 @@ mod tests {
     }
 
     #[test]
+    fn period_2k_sequences() {
+        // Every power-of-two period repeats 0..period indefinitely.
+        for k in 0..4u32 {
+            let period = 1usize << k;
+            let mut s = Scheduler::new(period, false);
+            for t in 0..(3 * period + 1) {
+                assert_eq!(s.next().phase, t % period, "period {period} at t {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp_split_plan_covers_every_phase() {
+        // FP variants: every plan in the cycle carries split=true and the
+        // phase advances exactly like the non-split schedule, so the
+        // pre/rest pair always runs the same executables the monolithic
+        // step would have.
+        let mut s = Scheduler::new(4, true);
+        for t in 0..8 {
+            assert!(s.can_precompute());
+            let peeked = s.peek();
+            let plan = s.next();
+            assert_eq!(peeked, plan, "peek must not advance");
+            assert_eq!(plan.phase, t % 4);
+            assert!(plan.split);
+        }
+        assert_eq!(s.t(), 8);
+    }
+
+    #[test]
     fn reset_restarts_pattern() {
         let mut s = Scheduler::new(2, false);
         s.next();

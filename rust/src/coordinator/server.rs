@@ -2,10 +2,15 @@
 //! bounded queues for backpressure and aggregated metrics.
 //!
 //! tokio is unavailable offline (DESIGN.md §5); the pool uses std threads
-//! and mpsc channels, which is a good fit anyway — PJRT CPU execution is
+//! and mpsc channels, which is a good fit anyway — backend execution is
 //! synchronous, so one OS thread per worker with its own stream shard is
 //! the natural topology (the vLLM-router-style design scaled down to
 //! frame-level requests).
+//!
+//! `CompiledVariant` is `Send + Sync` through the `VariantExec` trait
+//! bound (the pjrt implementation asserts PJRT's thread-safety contract
+//! itself), so workers share one `Arc<CompiledVariant>` directly; all
+//! mutation on the rust side (states, metrics) stays worker-local.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -17,19 +22,6 @@ use anyhow::{anyhow, Result};
 use super::metrics::StreamMetrics;
 use super::stream::StreamSession;
 use crate::runtime::CompiledVariant;
-
-/// PJRT's C API guarantees thread-safe `Execute`/buffer operations, but
-/// the `xla` crate wrappers hold raw pointers and are not marked Send.
-/// This wrapper asserts what the PJRT contract provides.  All mutation on
-/// the rust side (states, metrics) stays worker-local.
-pub struct SharedEngine(pub Arc<CompiledVariant>);
-
-// SAFETY: PJRT requires clients/executables to be usable from multiple
-// threads concurrently (the CPU plugin uses an internal thread pool
-// itself); the only non-Sync state in CompiledVariant is behind the PJRT
-// C API.  Streams never share StateSets.
-unsafe impl Send for SharedEngine {}
-unsafe impl Sync for SharedEngine {}
 
 /// One frame of work for a stream.
 pub struct FrameJob {
@@ -66,7 +58,7 @@ impl ServeReport {
 
 /// Multi-stream server over one compiled SOI variant.
 pub struct Server {
-    engine: Arc<SharedEngine>,
+    engine: Arc<CompiledVariant>,
     workers: usize,
     queue_depth: usize,
     /// Run the FP idle/precompute pass between frames (on by default;
@@ -77,7 +69,7 @@ pub struct Server {
 impl Server {
     pub fn new(engine: Arc<CompiledVariant>, workers: usize) -> Server {
         Server {
-            engine: Arc::new(SharedEngine(engine)),
+            engine,
             workers: workers.max(1),
             queue_depth: 64,
             idle_precompute: true,
@@ -152,12 +144,11 @@ impl Server {
 
 fn worker_loop(
     _worker_id: usize,
-    engine: Arc<SharedEngine>,
+    cv: Arc<CompiledVariant>,
     rx: Receiver<FrameJob>,
     out_tx: SyncSender<Result<(u64, StreamMetrics, Vec<Vec<f32>>)>>,
     idle_precompute: bool,
 ) {
-    let cv: Arc<CompiledVariant> = engine.0.clone();
     let weights = match cv.device_weights() {
         Ok(w) => Arc::new(w),
         Err(e) => {

@@ -41,7 +41,9 @@ pub struct StreamSession {
 impl StreamSession {
     pub fn new(id: u64, engine: Arc<CompiledVariant>, weights: Arc<DeviceWeights>) -> Self {
         let period = engine.manifest.period;
-        let fp = engine.manifest.has_fp_split();
+        // Ask the backend, not the manifest: the executor knows whether it
+        // can actually run the pre/rest split for this variant.
+        let fp = engine.has_fp_split();
         let states = engine.init_states();
         StreamSession {
             id,
@@ -179,5 +181,25 @@ mod tests {
         let m = manifest(2);
         let avg = (macs_at_phase(&m, 0) + macs_at_phase(&m, 1)) / 2.0;
         assert_eq!(avg, m.macs_per_frame);
+    }
+
+    #[test]
+    fn period4_phase_pattern() {
+        // Hand-built period-4 manifest (2 x S-CC): rate divisors 1/2/4.
+        let mut m = manifest(4);
+        m.layer_macs.push(LayerMacs {
+            name: "c".into(),
+            macs: 800,
+            rate_div: 4,
+        });
+        assert_eq!(macs_at_phase(&m, 0), 1200.0); // all fire
+        assert_eq!(macs_at_phase(&m, 1), 100.0); // rate-1 only
+        assert_eq!(macs_at_phase(&m, 2), 400.0); // rate-1 + rate-2
+        assert_eq!(macs_at_phase(&m, 3), 100.0);
+        assert_eq!(macs_stmc(&m), 1200.0);
+        // phases repeat with the period
+        for p in 0..4 {
+            assert_eq!(macs_at_phase(&m, p), macs_at_phase(&m, p + 4));
+        }
     }
 }

@@ -23,6 +23,10 @@ use anyhow::{bail, Context, Result};
 use crate::runtime::Runtime;
 
 /// Execution context shared by all drivers.
+///
+/// `rt` is the backend-agnostic runtime facade: experiments run on the
+/// native backend by default and on PJRT with `--features pjrt` +
+/// `SOI_BACKEND=pjrt` — drivers never see the difference (DESIGN.md §4).
 pub struct Ctx {
     pub artifacts: PathBuf,
     pub results: PathBuf,

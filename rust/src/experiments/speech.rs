@@ -180,7 +180,7 @@ pub fn table2(ctx: &Ctx) -> Result<()> {
 /// inference wall time hidden in the precompute slot.
 fn measured_hidden_pct(ctx: &Ctx, name: &str) -> Result<f64> {
     let cv = arced(load_variant(ctx, name)?);
-    if !cv.manifest.has_fp_split() {
+    if !cv.has_fp_split() {
         return Ok(0.0);
     }
     let dw = std::sync::Arc::new(cv.device_weights()?);

@@ -13,8 +13,15 @@
 //!   evaluation needs (complexity accounting, resamplers, pruning,
 //!   synthetic signal generation, SI-SNR).
 //!
+//! Execution is multi-backend ([`backend`]): the default **native**
+//! backend is a dependency-free pure-Rust interpreter of variant
+//! manifests (runs anywhere Rust compiles — the paper's MCU-class
+//! deployment story), and the optional **pjrt** backend
+//! (`--features pjrt`) executes AOT-compiled HLO-text artifacts.
+//!
 //! See DESIGN.md for the full system inventory and experiment index.
 
+pub mod backend;
 pub mod complexity;
 pub mod coordinator;
 pub mod dsp;

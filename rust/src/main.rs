@@ -20,7 +20,7 @@ use anyhow::{bail, Context, Result};
 use soi::coordinator::Server;
 use soi::dsp::{frames, metrics, siggen};
 use soi::experiments::{self, Ctx};
-use soi::runtime::{list_variants, CompiledVariant, Manifest, Runtime};
+use soi::runtime::{list_variants, synth, CompiledVariant, Manifest, Runtime};
 use soi::util::cli::Args;
 use soi::util::rng::Rng;
 
@@ -117,6 +117,22 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
+/// Load `artifacts/<name>` when built, else synthesize the preset.
+fn load_variant(
+    rt: Arc<Runtime>,
+    artifacts: &std::path::Path,
+    name: &str,
+) -> Result<CompiledVariant> {
+    let (cv, synthesized) = synth::load_or_synth(rt, artifacts, name, 0xC0DE)?;
+    if synthesized {
+        eprintln!(
+            "note: artifacts/{name} not built — synthesized untrained weights \
+             (timing/complexity meaningful, quality numbers are not)"
+        );
+    }
+    Ok(cv)
+}
+
 /// Multi-stream serving benchmark over synthetic utterances.
 fn serve_bench(
     artifacts: &std::path::Path,
@@ -128,13 +144,14 @@ fn serve_bench(
     idle_precompute: bool,
 ) -> Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
-    let cv = Arc::new(CompiledVariant::load(rt, &artifacts.join(name))?);
+    let cv = Arc::new(load_variant(rt.clone(), artifacts, name)?);
     let feat = cv.manifest.config.feat;
     println!(
-        "serving '{name}': {n_streams} streams x {n_frames} frames, {workers} workers, \
-         period {}, FP split: {}",
+        "serving '{name}' on the {} backend: {n_streams} streams x {n_frames} frames, \
+         {workers} workers, period {}, FP split: {}",
+        rt.platform(),
         cv.manifest.period,
-        cv.manifest.has_fp_split()
+        cv.has_fp_split()
     );
     let mut rng = Rng::new(seed);
     let mut streams = Vec::with_capacity(n_streams);
@@ -180,7 +197,7 @@ fn denoise_once(
     seed: u64,
 ) -> Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
-    let cv = Arc::new(CompiledVariant::load(rt, &artifacts.join(name))?);
+    let cv = Arc::new(load_variant(rt, artifacts, name)?);
     let feat = cv.manifest.config.feat;
     let dw = Arc::new(cv.device_weights()?);
     let mut sess = soi::coordinator::StreamSession::new(0, cv, dw);
@@ -208,4 +225,8 @@ usage: soi <command> [options]
   exp <table1..table10|fig4..fig11|all>   regenerate paper tables/figures
   serve <variant> [--streams N] [--frames N] [--workers N] [--no-idle-precompute]
   denoise <variant> [--frames N]
-options: --artifacts DIR  --results DIR  --n-eval N  --seed S";
+options: --artifacts DIR  --results DIR  --n-eval N  --seed S
+serve/denoise accept preset names (stmc, scc<p>, scc<p>_<q>, sscc<p>,
+fp<p>_<q>, pred<n>) even without built artifacts: the native backend then
+runs a synthesized untrained variant (set SOI_BACKEND=pjrt with
+--features pjrt for the HLO/PJRT engine on real artifacts).";

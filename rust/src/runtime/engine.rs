@@ -1,19 +1,10 @@
-//! PJRT execution engine: compiles a variant's HLO-text artifacts and runs
-//! them from the coordinator hot path.
+//! Backend-agnostic runtime facade.
 //!
-//! Implementation notes:
-//!
-//! * We execute with `execute_b` over device buffers, **not** `execute`
-//!   over literals: the `xla` crate's `execute` path leaks one device
-//!   buffer per argument per call (`buffer.release()` without a matching
-//!   free in xla_rs.cc) — fatal for a long-running server at 500 fps.
-//!   With `execute_b` we own the input buffers and they are freed on Drop.
-//! * All step executables return one tuple (jax lowered with
-//!   `return_tuple=True`); PJRT hands back a single tuple buffer which we
-//!   copy to host and decompose.
-//! * Weights are uploaded to the device once per variant (`DeviceWeights`)
-//!   and shared by every stream; per-step uploads are just the frame and
-//!   the per-stream partial states.
+//! [`Runtime`] selects an [`InferenceBackend`] (native by default; PJRT
+//! with `--features pjrt` and `SOI_BACKEND=pjrt`); [`CompiledVariant`]
+//! binds one variant manifest + weights to a backend-compiled executor.
+//! The coordinator, experiments, benches and examples only ever talk to
+//! these two types — the backend is swappable per DESIGN.md §4.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -21,79 +12,71 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::manifest::Manifest;
+use crate::backend::{DeviceWeights, InferenceBackend, VariantExec};
 use crate::util::tensor::{f32s_from_le_bytes, Tensor};
 
-/// Shared PJRT client (CPU).
+/// A runtime bound to one inference backend.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Arc<dyn InferenceBackend>,
 }
 
 impl Runtime {
+    /// The default CPU runtime.
+    ///
+    /// Uses the pure-Rust native backend unless `SOI_BACKEND=pjrt` is set
+    /// (which requires building with `--features pjrt`).
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+        match std::env::var("SOI_BACKEND").as_deref() {
+            Ok("pjrt") => Self::pjrt_or_err(),
+            Ok("native") | Ok("") | Err(_) => Ok(Self::native()),
+            Ok(other) => bail!("unknown SOI_BACKEND '{other}' (native|pjrt)"),
+        }
     }
 
+    /// The dependency-free pure-Rust backend.
+    pub fn native() -> Runtime {
+        Runtime {
+            backend: Arc::new(crate::backend::native::NativeBackend),
+        }
+    }
+
+    /// The PJRT HLO-text backend (feature `pjrt`).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt() -> Result<Runtime> {
+        Ok(Runtime {
+            backend: Arc::new(crate::backend::pjrt::PjrtBackend::cpu()?),
+        })
+    }
+
+    fn pjrt_or_err() -> Result<Runtime> {
+        #[cfg(feature = "pjrt")]
+        return Self::pjrt();
+        #[cfg(not(feature = "pjrt"))]
+        bail!("SOI_BACKEND=pjrt requires building with `--features pjrt`")
+    }
+
+    /// Wrap an externally constructed backend (tests, future backends).
+    pub fn with_backend(backend: Arc<dyn InferenceBackend>) -> Runtime {
+        Runtime { backend }
+    }
+
+    /// Backend name ("native", "pjrt").
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.name().to_string()
     }
 
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        self.backend.device_count()
     }
 
-    /// Compile one HLO-text file into a loaded executable.
-    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe })
+    /// Prepare weights for execution on this runtime's backend.
+    pub fn upload_weights(&self, weights: &Weights) -> Result<DeviceWeights> {
+        self.backend.upload_weights(weights)
     }
 
-    /// Upload a host tensor to a device buffer.
-    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
-            .context("uploading tensor")
-    }
-
-    /// Upload raw f32 data with explicit dims.
-    pub fn upload_raw(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<f32>(data, dims, None)
-            .context("uploading raw buffer")
-    }
-}
-
-/// A compiled executable returning a single tuple.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    /// Execute over device buffers; decompose the tuple into host tensors.
-    pub fn run(&self, args: &[&xla::PjRtBuffer], out_shapes: &[Vec<usize>]) -> Result<Vec<Tensor>> {
-        let results = self.exe.execute_b(args).context("execute_b")?;
-        let buf = &results[0][0];
-        let mut lit = buf.to_literal_sync().context("tuple to host")?;
-        let parts = lit.decompose_tuple().context("decompose tuple")?;
-        if parts.len() != out_shapes.len() {
-            bail!(
-                "executable returned {} outputs, expected {}",
-                parts.len(),
-                out_shapes.len()
-            );
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (p, shape) in parts.into_iter().zip(out_shapes) {
-            let data = p.to_vec::<f32>().context("tuple element to f32")?;
-            out.push(Tensor::new(shape.clone(), data));
-        }
-        Ok(out)
+    /// Compile one variant manifest for this runtime's backend.
+    pub fn compile_variant(&self, manifest: &Manifest) -> Result<Box<dyn VariantExec>> {
+        self.backend.compile_variant(manifest)
     }
 }
 
@@ -133,32 +116,11 @@ impl Weights {
         self.tensors.iter().map(|t| t.len()).sum()
     }
 
-    /// Upload all weights once; shared across streams.
+    /// Prepare these weights for execution on `rt`'s backend (device
+    /// upload for pjrt, pass-through for native).
     pub fn to_device(&self, rt: &Runtime) -> Result<DeviceWeights> {
-        let bufs = self
-            .tensors
-            .iter()
-            .map(|t| rt.upload(t))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(DeviceWeights { bufs })
+        rt.upload_weights(self)
     }
-}
-
-/// Device-resident weights.
-pub struct DeviceWeights {
-    pub bufs: Vec<xla::PjRtBuffer>,
-}
-
-/// One compiled SOI variant: all executables + manifest + weights.
-pub struct CompiledVariant {
-    pub manifest: Manifest,
-    pub weights: Weights,
-    // Phases with identical graphs share one compiled executable (Arc).
-    step: Vec<Arc<Executable>>, // indexed by phase
-    pre: Vec<Arc<Executable>>,  // empty unless FP
-    rest: Vec<Arc<Executable>>, // empty unless FP
-    offline: Arc<Executable>,
-    rt: Arc<Runtime>,
 }
 
 /// Per-stream partial states (host side).
@@ -167,64 +129,37 @@ pub struct StateSet {
     pub tensors: Vec<Tensor>,
 }
 
+/// One compiled SOI variant: manifest + weights + backend executor.
+pub struct CompiledVariant {
+    pub manifest: Manifest,
+    pub weights: Weights,
+    exec: Box<dyn VariantExec>,
+    rt: Arc<Runtime>,
+}
+
 impl CompiledVariant {
-    /// Load manifest + weights and compile every executable.
-    ///
-    /// Phases whose manifests point at the same HLO file share one
-    /// compiled executable (aot.py dedupes identical graphs).
+    /// Load manifest + weights from an artifact directory and compile for
+    /// the runtime's backend.
     pub fn load(rt: Arc<Runtime>, dir: &Path) -> Result<CompiledVariant> {
         let manifest = Manifest::load(dir)?;
         let weights = Weights::load(&manifest)?;
         Self::with_weights(rt, manifest, weights)
     }
 
+    /// Compile from an in-memory manifest + weights (synthesized variants,
+    /// pruning sweeps).
     pub fn with_weights(
         rt: Arc<Runtime>,
         manifest: Manifest,
         weights: Weights,
     ) -> Result<CompiledVariant> {
-        let mut cache: std::collections::BTreeMap<String, usize> = Default::default();
-        let mut exes: Vec<Executable> = Vec::new();
-        let mut index_of = |key: &str| -> Result<usize> {
-            let file = manifest
-                .executables
-                .get(key)
-                .with_context(|| format!("missing executable {key}"))?
-                .clone();
-            if let Some(&i) = cache.get(&file) {
-                return Ok(i);
-            }
-            let exe = rt.compile_file(&manifest.dir.join(&file))?;
-            exes.push(exe);
-            cache.insert(file, exes.len() - 1);
-            Ok(exes.len() - 1)
-        };
-
-        let mut step_idx = Vec::new();
-        let mut pre_idx = Vec::new();
-        let mut rest_idx = Vec::new();
-        if manifest.streamable {
-            for phase in 0..manifest.period {
-                step_idx.push(index_of(&format!("step_p{phase}"))?);
-            }
-            if manifest.has_fp_split() {
-                for phase in 0..manifest.period {
-                    pre_idx.push(index_of(&format!("pre_p{phase}"))?);
-                    rest_idx.push(index_of(&format!("rest_p{phase}"))?);
-                }
-            }
-        }
-        let off_idx = index_of("offline")?;
-
-        let exes: Vec<Arc<Executable>> = exes.into_iter().map(Arc::new).collect();
-        let pick = |idx: &[usize]| idx.iter().map(|&i| exes[i].clone()).collect::<Vec<_>>();
+        let exec = rt
+            .compile_variant(&manifest)
+            .with_context(|| format!("compiling variant '{}'", manifest.name))?;
         Ok(CompiledVariant {
-            step: pick(&step_idx),
-            pre: pick(&pre_idx),
-            rest: pick(&rest_idx),
-            offline: exes[off_idx].clone(),
             manifest,
             weights,
+            exec,
             rt,
         })
     }
@@ -233,42 +168,22 @@ impl CompiledVariant {
         &self.rt
     }
 
+    /// Prepare this variant's own weights for execution.
     pub fn device_weights(&self) -> Result<DeviceWeights> {
-        self.weights.to_device(&self.rt)
+        self.rt.upload_weights(&self.weights)
     }
 
     /// Fresh zeroed per-stream states.
-    ///
-    /// Modern artifacts exchange one packed state vector (manifest
-    /// `packed_states` > 0) — a single HBM upload per inference; legacy
-    /// artifacts exchange one tensor per state spec.
     pub fn init_states(&self) -> StateSet {
-        if self.manifest.packed_states > 0 {
-            return StateSet {
-                tensors: vec![Tensor::zeros(vec![self.manifest.packed_states])],
-            };
-        }
-        StateSet {
-            tensors: self
-                .manifest
-                .states
-                .iter()
-                .map(|s| Tensor::zeros(s.shape.clone()))
-                .collect(),
-        }
+        self.exec.init_states()
     }
 
-    fn state_shapes(&self) -> Vec<Vec<usize>> {
-        if self.manifest.packed_states > 0 {
-            return vec![vec![self.manifest.packed_states]];
-        }
-        self.manifest.states.iter().map(|s| s.shape.clone()).collect()
+    /// Whether the backend can run the FP precompute/rest split.
+    pub fn has_fp_split(&self) -> bool {
+        self.exec.has_fp_split()
     }
 
     /// One full streaming inference at schedule position `phase`.
-    ///
-    /// Uploads the frame + states, executes `step_p<phase>`, writes the new
-    /// states back into `states`, returns the output frame.
     pub fn step(
         &self,
         phase: usize,
@@ -276,8 +191,12 @@ impl CompiledVariant {
         states: &mut StateSet,
         dev_weights: &DeviceWeights,
     ) -> Result<Vec<f32>> {
-        let exe = &self.step[phase % self.manifest.period];
-        self.run_step_like(exe, Some(frame), states, dev_weights, true)
+        let feat = self.manifest.config.feat;
+        if frame.len() != feat {
+            bail!("frame has {} samples, expected {feat}", frame.len());
+        }
+        self.exec
+            .step(phase % self.manifest.period, frame, states, dev_weights)
     }
 
     /// FP precompute: the delayed-region part of inference `phase`;
@@ -288,12 +207,8 @@ impl CompiledVariant {
         states: &mut StateSet,
         dev_weights: &DeviceWeights,
     ) -> Result<()> {
-        if self.pre.is_empty() {
-            bail!("{}: variant has no FP split", self.manifest.name);
-        }
-        let exe = &self.pre[phase % self.manifest.period];
-        self.run_step_like(exe, None, states, dev_weights, false)?;
-        Ok(())
+        self.exec
+            .precompute(phase % self.manifest.period, states, dev_weights)
     }
 
     /// FP rest pass: consumes the fresh frame after `precompute` ran.
@@ -304,74 +219,26 @@ impl CompiledVariant {
         states: &mut StateSet,
         dev_weights: &DeviceWeights,
     ) -> Result<Vec<f32>> {
-        if self.rest.is_empty() {
-            bail!("{}: variant has no FP split", self.manifest.name);
-        }
-        let exe = &self.rest[phase % self.manifest.period];
-        self.run_step_like(exe, Some(frame), states, dev_weights, true)
-    }
-
-    fn run_step_like(
-        &self,
-        exe: &Executable,
-        frame: Option<&[f32]>,
-        states: &mut StateSet,
-        dev_weights: &DeviceWeights,
-        has_out: bool,
-    ) -> Result<Vec<f32>> {
         let feat = self.manifest.config.feat;
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(1 + states.tensors.len());
-        if let Some(f) = frame {
-            if f.len() != feat {
-                bail!("frame has {} samples, expected {feat}", f.len());
-            }
-            owned.push(self.rt.upload_raw(f, &[feat, 1])?);
+        if frame.len() != feat {
+            bail!("frame has {} samples, expected {feat}", frame.len());
         }
-        for t in &states.tensors {
-            owned.push(self.rt.upload(t)?);
-        }
-        let mut args: Vec<&xla::PjRtBuffer> = owned.iter().collect();
-        for b in &dev_weights.bufs {
-            args.push(b);
-        }
-
-        let mut out_shapes = Vec::new();
-        if has_out {
-            out_shapes.push(vec![feat, 1]);
-        }
-        out_shapes.extend(self.state_shapes());
-        let mut outs = exe.run(&args, &out_shapes)?;
-
-        let out_frame = if has_out {
-            let f = outs.remove(0);
-            f.data
-        } else {
-            Vec::new()
-        };
-        for (slot, t) in states.tensors.iter_mut().zip(outs) {
-            *slot = t;
-        }
-        Ok(out_frame)
+        self.exec
+            .step_rest(phase % self.manifest.period, frame, states, dev_weights)
     }
 
     /// Run the offline (full-sequence) network over (feat, T) frames.
-    /// `x` must have exactly `offline_t` columns.
     pub fn offline(&self, x: &Tensor, dev_weights: &DeviceWeights) -> Result<Tensor> {
-        let feat = self.manifest.config.feat;
-        let t = self.manifest.offline_t;
-        if x.shape != [feat, t] {
-            bail!(
-                "offline input shape {:?}, expected [{feat}, {t}]",
-                x.shape
-            );
-        }
-        let xbuf = self.rt.upload(x)?;
-        let mut args: Vec<&xla::PjRtBuffer> = vec![&xbuf];
-        for b in &dev_weights.bufs {
-            args.push(b);
-        }
-        let mut outs = self.offline.run(&args, &[vec![feat, t]])?;
-        Ok(outs.remove(0))
+        self.exec.offline(x, dev_weights)
+    }
+
+    /// MACs executed so far, when the backend counts them (native only).
+    pub fn executed_macs(&self) -> Option<u64> {
+        self.exec.executed_macs()
+    }
+
+    /// Reset the MAC counter (no-op for uncounted backends).
+    pub fn reset_executed_macs(&self) {
+        self.exec.reset_executed_macs()
     }
 }
-

@@ -28,6 +28,56 @@ impl ModelConfig {
     pub fn depth(&self) -> usize {
         self.channels.len()
     }
+
+    /// Length of the repeating SOI inference pattern.
+    pub fn period(&self) -> usize {
+        1 << self.scc.len()
+    }
+
+    /// Rate divisor of encoder layer `l`'s *input* domain (1-based).
+    pub fn r_in(&self, l: usize) -> usize {
+        1 << self.scc.iter().filter(|&&p| p < l).count()
+    }
+
+    /// Rate divisor of encoder layer `l`'s *output* domain.
+    pub fn r_out(&self, l: usize) -> usize {
+        1 << self.scc.iter().filter(|&&p| p <= l).count()
+    }
+
+    pub fn enc_in_ch(&self, l: usize) -> usize {
+        if l == 1 {
+            self.feat
+        } else {
+            self.channels[l - 2]
+        }
+    }
+
+    pub fn enc_out_ch(&self, l: usize) -> usize {
+        self.channels[l - 1]
+    }
+
+    pub fn dec_out_ch(&self, l: usize) -> usize {
+        self.channels[l.saturating_sub(2)]
+    }
+
+    pub fn dec_in_ch(&self, l: usize) -> usize {
+        let d = self.depth();
+        if l == d {
+            self.channels[d - 1]
+        } else {
+            self.dec_out_ch(l + 1) + self.channels[l - 1]
+        }
+    }
+
+    /// Extrapolation kind at S-CC position `p` ("duplicate" | "tconv").
+    pub fn extrap_of(&self, p: usize) -> &str {
+        self.scc
+            .iter()
+            .position(|&q| q == p)
+            .and_then(|i| self.extrap.get(i))
+            .map(|s| s.as_str())
+            .unwrap_or("duplicate")
+    }
 }
 
 /// One named tensor slot (state or parameter).
@@ -231,23 +281,30 @@ impl Manifest {
         if self.period == 0 || !self.period.is_power_of_two() {
             bail!("{}: period must be a power of two", self.name);
         }
-        if self.streamable {
-            for phase in 0..self.period {
-                let key = format!("step_p{phase}");
-                if !self.executables.contains_key(&key) {
-                    bail!("{}: missing executable {key}", self.name);
+        // Native-interpreted artifacts ship no HLO at all (empty
+        // executables map); when executables are present the phase map
+        // must be complete.
+        if !self.executables.is_empty() {
+            if self.streamable {
+                for phase in 0..self.period {
+                    let key = format!("step_p{phase}");
+                    if !self.executables.contains_key(&key) {
+                        bail!("{}: missing executable {key}", self.name);
+                    }
                 }
             }
-        }
-        if !self.executables.contains_key("offline") {
-            bail!("{}: missing offline executable", self.name);
+            if !self.executables.contains_key("offline") {
+                bail!("{}: missing offline executable", self.name);
+            }
         }
         Ok(())
     }
 
-    /// Does this variant carry an FP precompute split?
+    /// Does this variant carry an FP precompute split?  True when the
+    /// config places an FP shift (native backend) or when the artifact
+    /// ships `pre_*` executables (pjrt backend).
     pub fn has_fp_split(&self) -> bool {
-        self.executables.contains_key("pre_p0")
+        self.config.shift_pos.is_some() || self.executables.contains_key("pre_p0")
     }
 
     /// Path of an executable by key ("step_p0", "offline", ...).

@@ -1,9 +1,13 @@
-//! PJRT runtime (L3 ⇄ artifacts bridge): loads HLO-text artifacts emitted
-//! by `python/compile/aot.py`, compiles them on the PJRT CPU client, and
-//! executes them from the coordinator hot path.  Python never runs here.
+//! Runtime (L3 ⇄ artifacts bridge): loads variant manifests (and, for
+//! trained artifacts, `weights.bin`) and executes them through a
+//! pluggable [`crate::backend::InferenceBackend`] — the pure-Rust native
+//! interpreter by default, PJRT behind `--features pjrt`.  Python never
+//! runs here.
 
 pub mod engine;
 pub mod manifest;
+pub mod synth;
 
-pub use engine::{CompiledVariant, DeviceWeights, Executable, Runtime, StateSet, Weights};
+pub use crate::backend::DeviceWeights;
+pub use engine::{CompiledVariant, Runtime, StateSet, Weights};
 pub use manifest::{list_variants, LayerMacs, Manifest, ModelConfig, TensorSpec};

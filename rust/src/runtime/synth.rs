@@ -1,0 +1,275 @@
+//! Synthesized variants: build a [`Manifest`] + deterministic
+//! He-initialised [`Weights`] for any [`ModelConfig`] entirely in Rust —
+//! no Python, no artifacts directory, no network.
+//!
+//! This powers the offline path of the examples, benches and the
+//! native-backend cross-check tests: `soi serve scc5`, `cargo bench` and
+//! `cargo test` all work on a fresh clone.  Synthesized weights are
+//! *untrained* — latency, throughput, complexity accounting and
+//! streaming/offline equivalence are all meaningful; SI-SNRi quality
+//! numbers are not (train real artifacts with `python/compile` for
+//! those).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::engine::{CompiledVariant, Runtime, Weights};
+use super::manifest::{LayerMacs, Manifest, ModelConfig, TensorSpec};
+use crate::backend::native::state_specs;
+use crate::complexity::unet;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// Parameter inventory of a config, in canonical (manifest/weights.bin)
+/// order — mirrors `python/compile/model.py::init_params`.
+pub fn param_specs(cfg: &ModelConfig) -> Vec<TensorSpec> {
+    let k = cfg.kernel;
+    let mut specs = Vec::new();
+    let mut conv = |name: String, c_out: usize, c_in: usize, kk: usize| {
+        specs.push(TensorSpec {
+            name: format!("{name}.w"),
+            shape: vec![c_out, c_in, kk],
+        });
+        specs.push(TensorSpec {
+            name: format!("{name}.b"),
+            shape: vec![c_out],
+        });
+    };
+    for l in 1..=cfg.depth() {
+        conv(format!("enc{l}"), cfg.enc_out_ch(l), cfg.enc_in_ch(l), k);
+    }
+    for l in (1..=cfg.depth()).rev() {
+        conv(format!("dec{l}"), cfg.dec_out_ch(l), cfg.dec_in_ch(l), k);
+    }
+    for &p in &cfg.scc {
+        if cfg.extrap_of(p) == "tconv" {
+            conv(format!("up{p}"), cfg.dec_out_ch(p), cfg.dec_out_ch(p), 2);
+        }
+    }
+    conv("head".to_string(), cfg.feat, cfg.dec_out_ch(1), 1);
+    specs
+}
+
+/// Build a complete in-memory manifest for a config: state/param specs,
+/// the `layer_macs` table (from the analytic complexity engine, so the
+/// two accountings agree by construction), and aggregate stats.  The
+/// executables map is empty — this manifest is native-backend only.
+pub fn manifest(cfg: &ModelConfig, name: &str, offline_t: usize) -> Manifest {
+    let fps = unet::frame_rate(cfg.feat, 16_000.0);
+    let net = unet::network(cfg, offline_t as u64, fps);
+    let states = state_specs(cfg);
+    let params = param_specs(cfg);
+    let param_count = params.iter().map(|p| p.elements()).sum();
+    let state_bytes = states.iter().map(|s| s.elements() * 4).sum();
+    Manifest {
+        name: name.to_string(),
+        config: cfg.clone(),
+        period: cfg.period(),
+        streamable: cfg.interp.is_none(),
+        offline_t,
+        packed_states: 0,
+        states,
+        params,
+        executables: BTreeMap::new(),
+        layer_macs: net
+            .layers
+            .iter()
+            .map(|l| LayerMacs {
+                name: l.name.clone(),
+                macs: l.macs_per_out,
+                rate_div: l.rate_div,
+            })
+            .collect(),
+        macs_per_frame: net.soi_macs_per_frame(),
+        precomputed_fraction: net.precomputed_pct() / 100.0,
+        param_count,
+        state_bytes,
+        train_metrics: BTreeMap::new(),
+        dir: PathBuf::new(),
+    }
+}
+
+/// Deterministic He-initialised weights for a manifest: conv kernels are
+/// `normal * sqrt(2 / fan_in)`, biases zero — the same init scheme as
+/// `python/compile/model.py`, driven by `util::rng` so every build of the
+/// same (manifest, seed) pair yields identical tensors.
+pub fn he_weights(manifest: &Manifest, seed: u64) -> Weights {
+    let mut rng = Rng::new(seed);
+    let tensors = manifest
+        .params
+        .iter()
+        .map(|spec| {
+            let n = spec.elements();
+            let data = if spec.shape.len() == 1 {
+                vec![0.0f32; n] // bias
+            } else {
+                let fan_in: usize = spec.shape[1..].iter().product();
+                let scale = (2.0 / fan_in as f64).sqrt();
+                (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+            };
+            Tensor::new(spec.shape.clone(), data)
+        })
+        .collect();
+    Weights { tensors }
+}
+
+/// Synthesize and compile a variant in one call.
+pub fn variant(
+    rt: Arc<Runtime>,
+    cfg: &ModelConfig,
+    name: &str,
+    seed: u64,
+) -> Result<CompiledVariant> {
+    let m = manifest(cfg, name, 256);
+    let w = he_weights(&m, seed);
+    CompiledVariant::with_weights(rt, m, w)
+}
+
+/// Map an artifact-style variant name to its config, using the default
+/// 7-layer U-Net topology (`complexity::unet::default_config`).  The
+/// name grammar matches the artifact registry in `python/compile/aot.py`
+/// so synthesized and built variants of the same name share a topology:
+///
+/// * `stmc` — pure STMC (no compression)
+/// * `scc<p>` — single S-CC at encoder position p (1..=7)
+/// * `scc<p>_<q>` — double S-CC at positions p < q
+/// * `sscc<p>` — SS-CC: S-CC at p with the FP shift at p
+/// * `fp<p>_<q>` — S-CC at p with the FP shift above it at q (p < q)
+/// * `pred<n>` — fully predictive: no compression, shift n at layer 1
+/// * `spred<n>` — strided-predictive (App. B): S-CC 4, shift n at layer 1
+pub fn preset(name: &str) -> Option<ModelConfig> {
+    let depth = 7usize;
+    let pos = |s: &str| -> Option<usize> {
+        let p: usize = s.parse().ok()?;
+        (1..=depth).contains(&p).then_some(p)
+    };
+    let pair = |s: &str| -> Option<(usize, usize)> {
+        let (a, b) = s.split_once('_')?;
+        let (p, q) = (pos(a)?, pos(b)?);
+        (p < q).then_some((p, q))
+    };
+    let shift_len = |s: &str| -> Option<usize> {
+        let n: usize = s.parse().ok()?;
+        (1..=4).contains(&n).then_some(n)
+    };
+    if name == "stmc" {
+        return Some(unet::default_config(vec![], None));
+    }
+    if let Some(rest) = name.strip_prefix("sscc") {
+        let p = pos(rest)?;
+        return Some(unet::default_config(vec![p], Some(p)));
+    }
+    if let Some(rest) = name.strip_prefix("scc") {
+        if let Some((p, q)) = pair(rest) {
+            return Some(unet::default_config(vec![p, q], None));
+        }
+        return Some(unet::default_config(vec![pos(rest)?], None));
+    }
+    if let Some(rest) = name.strip_prefix("fp") {
+        let (p, q) = pair(rest)?;
+        return Some(unet::default_config(vec![p], Some(q)));
+    }
+    if let Some(rest) = name.strip_prefix("spred") {
+        let mut cfg = unet::default_config(vec![4], Some(1));
+        cfg.shift = shift_len(rest)?;
+        return Some(cfg);
+    }
+    if let Some(rest) = name.strip_prefix("pred") {
+        let mut cfg = unet::default_config(vec![], Some(1));
+        cfg.shift = shift_len(rest)?;
+        return Some(cfg);
+    }
+    None
+}
+
+/// Load a variant from `artifacts/<name>` when built, otherwise
+/// synthesize it from its preset config (untrained weights).  Returns
+/// `(variant, synthesized)`.
+pub fn load_or_synth(
+    rt: Arc<Runtime>,
+    artifacts: &std::path::Path,
+    name: &str,
+    seed: u64,
+) -> Result<(CompiledVariant, bool)> {
+    let dir = artifacts.join(name);
+    if dir.join("manifest.json").exists() {
+        return Ok((CompiledVariant::load(rt, &dir)?, false));
+    }
+    let Some(cfg) = preset(name) else {
+        bail!(
+            "artifacts/{name} not built and '{name}' is not a known preset \
+             (stmc | scc<p> | scc<p>_<q> | sscc<p> | fp<p>_<q> | pred<n>)"
+        );
+    };
+    Ok((variant(rt, &cfg, name, seed)?, true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse() {
+        assert_eq!(preset("stmc").unwrap().scc, Vec::<usize>::new());
+        assert_eq!(preset("scc5").unwrap().scc, vec![5]);
+        assert_eq!(preset("scc2_5").unwrap().scc, vec![2, 5]);
+        let ss = preset("sscc3").unwrap();
+        assert_eq!(ss.scc, vec![3]);
+        assert_eq!(ss.shift_pos, Some(3));
+        // fp<p>_<q> matches aot.py: S-CC at p, shift above it at q.
+        let fp = preset("fp1_3").unwrap();
+        assert_eq!(fp.scc, vec![1]);
+        assert_eq!(fp.shift_pos, Some(3));
+        let pred = preset("pred2").unwrap();
+        assert_eq!(pred.shift, 2);
+        assert_eq!(pred.shift_pos, Some(1));
+        assert_eq!(pred.scc, Vec::<usize>::new());
+        let spred = preset("spred3").unwrap();
+        assert_eq!(spred.scc, vec![4]);
+        assert_eq!(spred.shift_pos, Some(1));
+        assert_eq!(spred.shift, 3);
+        assert!(preset("scc9").is_none());
+        assert!(preset("scc5_2").is_none());
+        assert!(preset("pred9").is_none());
+        assert!(preset("bogus").is_none());
+    }
+
+    #[test]
+    fn manifest_matches_complexity_engine() {
+        let cfg = unet::default_config(vec![2, 5], None);
+        let m = manifest(&cfg, "scc2_5", 256);
+        assert_eq!(m.period, 4);
+        assert!(m.macs_per_frame > 0.0);
+        // layer_macs must sum (rate-weighted) to macs_per_frame
+        let avg: f64 = m
+            .layer_macs
+            .iter()
+            .map(|l| l.macs as f64 / l.rate_div as f64)
+            .sum();
+        assert!((avg - m.macs_per_frame).abs() < 1e-9);
+        assert_eq!(
+            m.param_count,
+            m.params.iter().map(|p| p.elements()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn he_weights_are_deterministic_and_shaped() {
+        let cfg = unet::default_config(vec![2], Some(2));
+        let m = manifest(&cfg, "sscc2", 256);
+        let a = he_weights(&m, 7);
+        let b = he_weights(&m, 7);
+        assert_eq!(a.total_params(), m.param_count);
+        for (x, y) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(x.data, y.data);
+        }
+        // biases zero, kernels not
+        let names: Vec<&str> = m.params.iter().map(|p| p.name.as_str()).collect();
+        let bi = names.iter().position(|n| n.ends_with(".b")).unwrap();
+        assert!(a.tensors[bi].data.iter().all(|&v| v == 0.0));
+        assert!(a.tensors[0].data.iter().any(|&v| v != 0.0));
+    }
+}

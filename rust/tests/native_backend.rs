@@ -1,0 +1,423 @@
+//! Native-backend cross-checks (no artifacts, no Python, no network):
+//!
+//! * streaming step == offline forward for every variant family (pure
+//!   STMC, single/double S-CC, tconv extrapolation, SS-CC, hybrid FP,
+//!   predictive) — the paper's core exactness guarantee (eq. 3–7);
+//! * the FP pre/rest split reproduces the monolithic step bit-for-bit;
+//! * outputs match reference values computed independently from the
+//!   python reference kernels (`python/compile/kernels/ref.py`
+//!   semantics), baked in for a tiny 2-layer STMC conv manifest with
+//!   fully deterministic weights;
+//! * measured MACs at phase p equal the scheduler's analytic
+//!   `macs_at_phase(manifest, p)` — accounting is not just a formula;
+//! * the multi-stream server produces the same outputs as a
+//!   single-stream session on the native backend.
+
+use std::sync::Arc;
+
+use soi::coordinator::stream::{macs_at_phase, macs_stmc};
+use soi::coordinator::{Server, StreamSession};
+use soi::runtime::{synth, CompiledVariant, Manifest, ModelConfig, Runtime, Weights};
+use soi::util::rng::Rng;
+use soi::util::tensor::Tensor;
+
+fn rt() -> Arc<Runtime> {
+    Arc::new(Runtime::native())
+}
+
+fn cfg(
+    feat: usize,
+    channels: Vec<usize>,
+    scc: Vec<usize>,
+    shift_pos: Option<usize>,
+) -> ModelConfig {
+    ModelConfig {
+        feat,
+        channels,
+        kernel: 3,
+        extrap: vec!["duplicate".into(); scc.len()],
+        scc,
+        shift_pos,
+        shift: 1,
+        interp: None,
+    }
+}
+
+fn variant(c: &ModelConfig, name: &str) -> CompiledVariant {
+    let m = synth::manifest(c, name, 32);
+    let w = synth::he_weights(&m, 0xFEED);
+    CompiledVariant::with_weights(rt(), m, w).expect("compile native variant")
+}
+
+fn random_input(feat: usize, t: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..feat * t).map(|_| rng.normal() as f32 * 0.3).collect();
+    Tensor::new(vec![feat, t], data)
+}
+
+/// Stream frame-by-frame through the step path; returns t blocks of feat.
+fn stream_through(cv: &CompiledVariant, x: &Tensor, split: bool) -> Vec<f32> {
+    let feat = cv.manifest.config.feat;
+    let t = x.shape[1];
+    let dw = cv.device_weights().unwrap();
+    let mut states = cv.init_states();
+    let mut out = Vec::with_capacity(feat * t);
+    let mut frame = vec![0.0f32; feat];
+    for tt in 0..t {
+        for (i, f) in frame.iter_mut().enumerate() {
+            *f = x.at2(i, tt);
+        }
+        let phase = tt % cv.manifest.period;
+        let o = if split {
+            cv.precompute(phase, &mut states, &dw).unwrap();
+            cv.step_rest(phase, &frame, &mut states, &dw).unwrap()
+        } else {
+            cv.step(phase, &frame, &mut states, &dw).unwrap()
+        };
+        out.extend_from_slice(&o);
+    }
+    out
+}
+
+fn assert_stream_matches_offline(c: &ModelConfig, name: &str, split: bool) {
+    let cv = variant(c, name);
+    let t = 16;
+    let x = random_input(c.feat, t, 42);
+    let dw = cv.device_weights().unwrap();
+    let off = cv.offline(&x, &dw).unwrap();
+    let streamed = stream_through(&cv, &x, split);
+    let mut max_err = 0.0f32;
+    for tt in 0..t {
+        for i in 0..c.feat {
+            let a = streamed[tt * c.feat + i];
+            let b = off.at2(i, tt);
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    assert!(
+        max_err < 1e-5,
+        "{name} (split={split}): streaming vs offline max err {max_err}"
+    );
+}
+
+#[test]
+fn stmc_streaming_equals_offline() {
+    assert_stream_matches_offline(&cfg(4, vec![6, 8], vec![], None), "stmc", false);
+}
+
+#[test]
+fn scc_streaming_equals_offline() {
+    assert_stream_matches_offline(&cfg(4, vec![5, 6, 7], vec![2], None), "scc2", false);
+}
+
+#[test]
+fn double_scc_streaming_equals_offline() {
+    assert_stream_matches_offline(&cfg(4, vec![5, 6, 7], vec![1, 3], None), "scc1_3", false);
+}
+
+#[test]
+fn tconv_streaming_equals_offline() {
+    let mut c = cfg(4, vec![6, 8], vec![2], None);
+    c.extrap = vec!["tconv".into()];
+    assert_stream_matches_offline(&c, "scc2_tconv", false);
+}
+
+#[test]
+fn sscc_monolithic_and_split_equal_offline() {
+    let c = cfg(4, vec![5, 6, 7], vec![2], Some(2));
+    assert_stream_matches_offline(&c, "sscc2", false);
+    assert_stream_matches_offline(&c, "sscc2", true);
+}
+
+#[test]
+fn hybrid_fp_shift_below_scc_equals_offline() {
+    // FP shift below the S-CC position: exercises the handoff slot.
+    let c = cfg(4, vec![5, 6, 7], vec![3], Some(1));
+    assert_stream_matches_offline(&c, "shift_below", false);
+    assert_stream_matches_offline(&c, "shift_below", true);
+}
+
+#[test]
+fn hybrid_fp_shift_above_scc_equals_offline() {
+    // The aot.py fp<p>_<q> family: S-CC at p, shift above it at q — the
+    // delay-line FIFO then lives in a rate-divided (compressed) domain.
+    let c = cfg(4, vec![5, 6, 7], vec![1], Some(3)); // fp1_3
+    assert_stream_matches_offline(&c, "fp1_3", false);
+    assert_stream_matches_offline(&c, "fp1_3", true);
+    let c2 = cfg(4, vec![5, 6, 7], vec![2], Some(3));
+    assert_stream_matches_offline(&c2, "fp2_3", false);
+    assert_stream_matches_offline(&c2, "fp2_3", true);
+}
+
+#[test]
+fn hybrid_fp_preset_is_splittable() {
+    // The synthesized fp presets must actually run the pre/rest split
+    // (fp1_3 == scc=[1], shift at 3 — shift_pos not in scc).
+    let c = synth::preset("fp1_3").unwrap();
+    assert_eq!(c.scc, vec![1]);
+    assert_eq!(c.shift_pos, Some(3));
+    let cv = variant(&c, "fp1_3");
+    assert!(cv.has_fp_split());
+}
+
+#[test]
+fn predictive_split_equals_offline() {
+    let mut c = cfg(4, vec![6, 8], vec![], Some(1));
+    c.shift = 2;
+    assert_stream_matches_offline(&c, "pred2", false);
+    assert_stream_matches_offline(&c, "pred2", true);
+}
+
+#[test]
+fn precompute_runs_before_any_frame() {
+    let c = cfg(4, vec![5, 6, 7], vec![2], Some(2));
+    let cv = variant(&c, "sscc2");
+    let dw = cv.device_weights().unwrap();
+    let mut states = cv.init_states();
+    cv.precompute(0, &mut states, &dw).unwrap();
+}
+
+#[test]
+fn non_fp_variant_refuses_precompute() {
+    let cv = variant(&cfg(4, vec![6, 8], vec![], None), "stmc");
+    let dw = cv.device_weights().unwrap();
+    let mut states = cv.init_states();
+    assert!(cv.precompute(0, &mut states, &dw).is_err());
+    assert!(!cv.has_fp_split());
+}
+
+#[test]
+fn interp_is_offline_only() {
+    let mut c = cfg(4, vec![6, 8], vec![2], None);
+    c.interp = Some("linear".into());
+    let cv = variant(&c, "scc2_ilinear");
+    let dw = cv.device_weights().unwrap();
+    let x = random_input(4, 16, 5);
+    let out = cv.offline(&x, &dw).unwrap();
+    assert_eq!(out.shape, vec![4, 16]);
+    let mut states = cv.init_states();
+    let frame = vec![0.0f32; 4];
+    assert!(cv.step(0, &frame, &mut states, &dw).is_err());
+}
+
+#[test]
+fn offline_rejects_partial_period() {
+    let cv = variant(&cfg(4, vec![5, 6, 7], vec![1, 3], None), "scc1_3");
+    let dw = cv.device_weights().unwrap();
+    let x = random_input(4, 6, 1); // 6 % 4 != 0
+    assert!(cv.offline(&x, &dw).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Reference-kernel cross-check: outputs baked from an independent
+// implementation of python/compile/kernels/ref.py + model.py semantics
+// (f64), for fully deterministic pattern weights:
+//   kernel tensor ti, element j: (((j*7 + ti*3) % 11) - 5) / 16
+//   bias, element j:             ((j % 5) - 2) / 32
+//   input sample j:              (((j*5) % 17) - 8) / 16
+// ---------------------------------------------------------------------------
+
+const EXPECTED_STMC: [f32; 32] = [
+    -0.07473192, 0.04143375, -0.01161698, 0.03192598,
+    -0.01157201, 0.08705511, 0.0316568, -0.01577427,
+    -0.0931153, -0.1220912, 0.02783043, 0.06811045,
+    -0.1173613, 0.007374842, 0.06678371, -0.02625506,
+    0.002537131, 0.04184413, -0.1187127, -0.01305773,
+    -0.005254611, 0.03047984, -0.1168691, 0.07891243,
+    -0.1754361, 0.04537053, 0.04593579, 0.1323277,
+    0.04192133, 0.1145318, 0.03865359, -0.09356854,
+];
+
+const EXPECTED_SCC2: [f32; 32] = [
+    -0.07473192, 0.04143375, -0.01161698, 0.03192598,
+    -0.01216716, 0.08837815, 0.02393687, -0.008534885,
+    -0.04618491, -0.1130169, -0.003858703, 0.04135305,
+    -0.116992, -0.01180475, 0.03209389, 0.002280347,
+    -0.1260398, 0.1071763, -0.006210243, 0.02529562,
+    0.002992927, 0.1093491, -0.03045442, -0.01550423,
+    -0.04093235, 0.003577901, -0.07013121, 0.07527115,
+    0.02495972, 0.02799381, -0.05485172, 0.02055001,
+];
+
+fn pattern_weights(m: &Manifest) -> Weights {
+    let tensors = m
+        .params
+        .iter()
+        .enumerate()
+        .map(|(ti, spec)| {
+            let n = spec.elements();
+            let data: Vec<f32> = if spec.shape.len() == 1 {
+                (0..n).map(|j| ((j % 5) as f32 - 2.0) / 32.0).collect()
+            } else {
+                (0..n)
+                    .map(|j| (((j * 7 + ti * 3) % 11) as f32 - 5.0) / 16.0)
+                    .collect()
+            };
+            Tensor::new(spec.shape.clone(), data)
+        })
+        .collect();
+    Weights { tensors }
+}
+
+fn pattern_input(feat: usize, t: usize) -> Tensor {
+    let mut x = Tensor::zeros(vec![feat, t]);
+    for tt in 0..t {
+        for i in 0..feat {
+            let j = tt * feat + i;
+            x.set2(i, tt, (((j * 5) % 17) as f32 - 8.0) / 16.0);
+        }
+    }
+    x
+}
+
+fn assert_matches_reference(c: &ModelConfig, name: &str, expected: &[f32]) {
+    let m = synth::manifest(c, name, 8);
+    let w = pattern_weights(&m);
+    let cv = CompiledVariant::with_weights(rt(), m, w).unwrap();
+    let x = pattern_input(c.feat, 8);
+    let dw = cv.device_weights().unwrap();
+
+    let off = cv.offline(&x, &dw).unwrap();
+    let streamed = stream_through(&cv, &x, false);
+    for tt in 0..8 {
+        for i in 0..c.feat {
+            let want = expected[tt * c.feat + i];
+            let got_off = off.at2(i, tt);
+            let got_stream = streamed[tt * c.feat + i];
+            assert!(
+                (got_off - want).abs() < 2e-3,
+                "{name} offline[{i},{tt}] = {got_off}, reference {want}"
+            );
+            assert!(
+                (got_stream - want).abs() < 2e-3,
+                "{name} stream[{i},{tt}] = {got_stream}, reference {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn native_matches_reference_kernels_stmc() {
+    assert_matches_reference(&cfg(4, vec![6, 8], vec![], None), "stmc", &EXPECTED_STMC);
+}
+
+#[test]
+fn native_matches_reference_kernels_scc2() {
+    assert_matches_reference(&cfg(4, vec![6, 8], vec![2], None), "scc2", &EXPECTED_SCC2);
+}
+
+// ---------------------------------------------------------------------------
+// MAC accounting: the native backend's counted work must equal the
+// scheduler's analytic per-phase sum.
+// ---------------------------------------------------------------------------
+
+fn assert_macs_match(c: &ModelConfig, name: &str) {
+    let cv = variant(c, name);
+    let dw = cv.device_weights().unwrap();
+    let mut states = cv.init_states();
+    let frame = vec![0.1f32; c.feat];
+    let period = cv.manifest.period;
+    let mut total = 0u64;
+    for phase in 0..period {
+        cv.reset_executed_macs();
+        cv.step(phase, &frame, &mut states, &dw).unwrap();
+        let measured = cv.executed_macs().expect("native counts MACs");
+        let analytic = macs_at_phase(&cv.manifest, phase);
+        assert_eq!(
+            measured as f64, analytic,
+            "{name}: phase {phase} measured {measured} vs analytic {analytic}"
+        );
+        total += measured;
+    }
+    let avg = total as f64 / period as f64;
+    assert!(
+        (avg - cv.manifest.macs_per_frame).abs() < 1e-9,
+        "{name}: average {avg} vs manifest {}",
+        cv.manifest.macs_per_frame
+    );
+    assert!(macs_stmc(&cv.manifest) >= cv.manifest.macs_per_frame);
+}
+
+#[test]
+fn measured_macs_equal_scheduler_accounting() {
+    assert_macs_match(&cfg(4, vec![6, 8], vec![], None), "stmc");
+    assert_macs_match(&cfg(4, vec![5, 6, 7], vec![2], None), "scc2");
+    assert_macs_match(&cfg(4, vec![5, 6, 7], vec![1, 3], None), "scc1_3");
+}
+
+#[test]
+fn measured_macs_equal_scheduler_accounting_tconv() {
+    let mut c = cfg(4, vec![5, 6, 7], vec![2], None);
+    c.extrap = vec!["tconv".into()];
+    assert_macs_match(&c, "scc2_tconv");
+}
+
+#[test]
+fn fp_split_preserves_total_macs() {
+    // pre + rest must execute exactly what the monolithic step would.
+    let c = cfg(4, vec![5, 6, 7], vec![2], Some(2));
+    let cv = variant(&c, "sscc2");
+    let dw = cv.device_weights().unwrap();
+    let frame = vec![0.1f32; 4];
+    for phase in 0..cv.manifest.period {
+        let mut s1 = cv.init_states();
+        cv.reset_executed_macs();
+        cv.step(phase, &frame, &mut s1, &dw).unwrap();
+        let mono = cv.executed_macs().unwrap();
+
+        let mut s2 = cv.init_states();
+        cv.reset_executed_macs();
+        cv.precompute(phase, &mut s2, &dw).unwrap();
+        cv.step_rest(phase, &frame, &mut s2, &dw).unwrap();
+        let split = cv.executed_macs().unwrap();
+        assert_eq!(mono, split, "phase {phase}: split changed executed MACs");
+        assert_eq!(mono as f64, macs_at_phase(&cv.manifest, phase));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator end-to-end on the native backend.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn server_matches_single_session_outputs() {
+    let c = cfg(4, vec![5, 6, 7], vec![2], None);
+    let cv = Arc::new(variant(&c, "scc2"));
+    let n_streams = 4;
+    let n_frames = 24;
+    let mut rng = Rng::new(77);
+    let streams: Vec<Vec<Vec<f32>>> = (0..n_streams)
+        .map(|_| {
+            (0..n_frames)
+                .map(|_| (0..4).map(|_| rng.normal() as f32 * 0.3).collect())
+                .collect()
+        })
+        .collect();
+
+    let server = Server::new(cv.clone(), 2);
+    let report = server.run(&streams).unwrap();
+    assert_eq!(report.frames, (n_streams * n_frames) as u64);
+
+    // Replay each stream through a fresh single session; outputs must be
+    // identical (native execution is deterministic).
+    let dw = Arc::new(cv.device_weights().unwrap());
+    for (sid, frames) in streams.iter().enumerate() {
+        let mut sess = StreamSession::new(sid as u64, cv.clone(), dw.clone());
+        let served = &report.outputs[&(sid as u64)];
+        assert_eq!(served.len(), n_frames);
+        for (t, frame) in frames.iter().enumerate() {
+            let out = sess.on_frame(frame).unwrap();
+            assert_eq!(out, served[t], "stream {sid} frame {t} diverged");
+        }
+    }
+}
+
+#[test]
+fn session_state_bytes_match_manifest() {
+    let c = cfg(4, vec![5, 6, 7], vec![2], Some(2));
+    let cv = Arc::new(variant(&c, "sscc2"));
+    let dw = Arc::new(cv.device_weights().unwrap());
+    let manifest_bytes = cv.manifest.state_bytes;
+    let sess = StreamSession::new(0, cv, dw);
+    assert_eq!(sess.state_bytes(), manifest_bytes);
+}

@@ -1,9 +1,12 @@
-//! Integration tests over real artifacts: load HLO text via PJRT, execute,
-//! and check the streaming/offline equivalence *through the rust runtime*
-//! (the cross-layer golden test of DESIGN.md §7).
+//! Integration tests over real artifacts: load a built variant through
+//! the runtime facade (native backend by default; PJRT with
+//! `--features pjrt` + `SOI_BACKEND=pjrt`) and check the
+//! streaming/offline equivalence *through the rust runtime* (the
+//! cross-layer golden test of DESIGN.md §7).
 //!
 //! Tests are skipped (not failed) when `artifacts/` has not been built yet
-//! so `cargo test` stays green before `make artifacts`.
+//! so `cargo test` stays green before `make artifacts`.  The same
+//! equivalences run artifact-free in `tests/native_backend.rs`.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -28,7 +31,7 @@ fn variant_dir(name: &str) -> Option<PathBuf> {
 
 fn load(name: &str) -> Option<CompiledVariant> {
     let dir = variant_dir(name)?;
-    let rt = Arc::new(Runtime::cpu().expect("PJRT CPU client"));
+    let rt = Arc::new(Runtime::cpu().expect("runtime backend"));
     Some(CompiledVariant::load(rt, &dir).expect("compile variant"))
 }
 

@@ -1,0 +1,216 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! crates.io is unavailable in this environment (DESIGN.md §5), so this
+//! vendored crate provides the subset of anyhow's API the repo uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait (on both
+//! `Result` and `Option`), and the [`anyhow!`] / [`bail!`] macros.
+//!
+//! Semantics mirror anyhow where it matters here:
+//!
+//! * `Error` carries a context chain, outermost message first.
+//! * `{e}` displays the outermost message; `{e:#}` displays the whole
+//!   chain joined by `: ` (what `main` prints on failure).
+//! * A blanket `From<E: std::error::Error>` lets `?` convert concrete
+//!   errors; `Error` itself deliberately does **not** implement
+//!   `std::error::Error` (the same trick anyhow uses to keep the blanket
+//!   impl coherent).
+
+use std::fmt;
+
+/// A context-chained error. Outermost (most recently attached) message
+/// first, root cause last.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msgs: vec![m.to_string()],
+        }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.msgs.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.msgs.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msgs.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed conversion into [`crate::Error`]; implemented for all
+    /// `std::error::Error` types *and* for `Error` itself (which is not a
+    /// `std::error::Error`, so the two impls cannot overlap).
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let e = None::<u32>.with_context(|| "missing field").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "gone");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: usize) -> Result<()> {
+            if n > 0 {
+                bail!("bad count {n}");
+            }
+            Ok(())
+        }
+        assert_eq!(format!("{}", fails(3).unwrap_err()), "bad count 3");
+        let e = anyhow!("worker {} died", 7);
+        assert_eq!(format!("{e}"), "worker 7 died");
+        let owned = anyhow!(String::from("plain"));
+        assert_eq!(format!("{owned}"), "plain");
+    }
+}

@@ -1,0 +1,125 @@
+//! Compile-time stub of the `xla` (PJRT) crate.
+//!
+//! The real crate links against a PJRT plugin and cannot be fetched or
+//! built in this offline environment (DESIGN.md §5).  This stub mirrors
+//! the API surface `soi::backend::pjrt` uses so that
+//! `cargo build --features pjrt` still type-checks everywhere; every
+//! entry point returns [`XlaError`] at runtime, and `Runtime::cpu()`
+//! therefore falls back cleanly when asked for the pjrt backend.
+//!
+//! To use a real PJRT runtime, replace this directory with the actual
+//! `xla` crate (same API) and rebuild with `--features pjrt`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error returned by every stub entry point.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "xla stub: {what} unavailable (the real PJRT crate is not vendored; \
+         see rust/vendor/xla/src/lib.rs)"
+    ))
+}
+
+/// Stub PJRT client; [`PjRtClient::cpu`] always fails.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub XLA computation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Stub host literal.
+pub struct Literal(());
+
+impl Literal {
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable("decompose_tuple"))
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(unavailable("to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("xla stub"));
+    }
+}
