@@ -1,10 +1,15 @@
 //! Multi-stream serving throughput (the end-to-end bench of the
-//! coordinator: worker pool + scheduler + backend execution).
+//! coordinator: worker pool + phase-aligned batching + scheduler +
+//! backend execution).
 //!
-//! Runs out of the box on the native backend (synthesized untrained
-//! weights when `artifacts/` has not been built — throughput and latency
-//! are real).  Emits one JSON line per (variant, workers) pair for
-//! cross-PR comparison.
+//! Sweeps batching {off, on} × worker count × stream count × variant
+//! family, runs out of the box on the native backend (synthesized
+//! untrained weights when `artifacts/` has not been built — throughput
+//! and latency are real).  Emits one JSON line per configuration for
+//! cross-PR comparison and rewrites `BENCH_serving.json` at the
+//! workspace root with the full sweep plus the batched-vs-sequential
+//! speedups at the largest stream count — the committed perf baseline
+//! future PRs diff against.
 //!
 //! Run: `cargo bench --bench serving`
 
@@ -12,55 +17,122 @@ use std::sync::Arc;
 
 use soi::coordinator::Server;
 use soi::dsp::{frames, siggen};
-use soi::runtime::{synth, Runtime};
+use soi::runtime::{synth, CompiledVariant, Runtime};
 use soi::util::json::Json;
 use soi::util::rng::Rng;
+
+const VARIANTS: [&str; 3] = ["stmc", "scc2", "sscc5"];
+const WORKERS: [usize; 2] = [1, 4];
+const STREAMS: [usize; 2] = [4, 16];
+const N_FRAMES: usize = 240;
+
+fn run_once(
+    cv: &Arc<CompiledVariant>,
+    workers: usize,
+    batching: bool,
+    streams: &[Vec<Vec<f32>>],
+) -> anyhow::Result<soi::coordinator::ServeReport> {
+    let mut server = Server::new(cv.clone(), workers);
+    server.batching = batching;
+    server.run(streams)
+}
 
 fn main() -> anyhow::Result<()> {
     let root = std::path::Path::new("artifacts");
     let rt = Arc::new(Runtime::cpu()?);
     let feat = 16;
     let fps = siggen::FS / feat as f64;
-    let n_streams = 8;
-    let n_frames = 300;
+    let max_streams = *STREAMS.iter().max().unwrap();
     let mut rng = Rng::new(11);
-    let streams: Vec<Vec<Vec<f32>>> = (0..n_streams)
+    let all_streams: Vec<Vec<Vec<f32>>> = (0..max_streams)
         .map(|_| {
-            let (noisy, _) = siggen::denoise_pair(&mut rng, feat * n_frames, siggen::FS);
+            let (noisy, _) = siggen::denoise_pair(&mut rng, feat * N_FRAMES, siggen::FS);
             frames(&noisy, feat).0
         })
         .collect();
 
     println!(
-        "# serving — {n_streams} streams x {n_frames} frames [{} backend]",
+        "# serving — up to {max_streams} streams x {N_FRAMES} frames [{} backend]",
         rt.platform()
     );
-    for workers in [1usize, 2, 4] {
-        for name in ["stmc", "scc2", "sscc5"] {
-            let (cv, _) = synth::load_or_synth(rt.clone(), root, name, 11)?;
-            let server = Server::new(Arc::new(cv), workers);
-            let report = server.run(&streams)?;
-            println!(
-                "serve[{name} w={workers}]  {:>9.0} frames/s  {:>6.1}x realtime  p99 {:>9}  retain {:>5.1}%",
-                report.throughput_fps(),
-                report.throughput_fps() / fps,
-                soi::util::bench::fmt_ns(report.metrics.arrival_latency.p99() as f64),
-                report.metrics.retain_pct(),
-            );
-            println!(
-                "{}",
-                Json::obj(vec![
-                    ("bench", Json::Str("serving".into())),
-                    ("variant", Json::Str(name.into())),
-                    ("workers", Json::Num(workers as f64)),
-                    ("backend", Json::Str(rt.platform())),
-                    ("frames_per_s", Json::Num(report.throughput_fps())),
-                    ("p99_ns", Json::Num(report.metrics.arrival_latency.p99() as f64)),
-                    ("retain_pct", Json::Num(report.metrics.retain_pct())),
-                ])
-                .to_string()
-            );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for name in VARIANTS {
+        let (cv, _) = synth::load_or_synth(rt.clone(), root, name, 11)?;
+        let cv = Arc::new(cv);
+        // (workers, streams) -> sequential fps, for the speedup summary
+        let mut seq_fps = std::collections::BTreeMap::new();
+        for workers in WORKERS {
+            for n_streams in STREAMS {
+                let streams = &all_streams[..n_streams];
+                for batching in [false, true] {
+                    let report = run_once(&cv, workers, batching, streams)?;
+                    let fps_now = report.throughput_fps();
+                    println!(
+                        "serve[{name} w={workers} s={n_streams} batch={}]  {:>9.0} frames/s  \
+                         {:>6.1}x realtime  p99 {:>9}  retain {:>5.1}%  batch \u{3bc} {:>4.1}",
+                        if batching { "on" } else { "off" },
+                        fps_now,
+                        fps_now / fps,
+                        soi::util::bench::fmt_ns(report.metrics.arrival_latency.p99() as f64),
+                        report.metrics.retain_pct(),
+                        report.metrics.mean_batch(),
+                    );
+                    let row = Json::obj(vec![
+                        ("bench", Json::Str("serving".into())),
+                        ("variant", Json::Str(name.into())),
+                        ("workers", Json::Num(workers as f64)),
+                        ("streams", Json::Num(n_streams as f64)),
+                        ("batching", Json::Bool(batching)),
+                        ("backend", Json::Str(rt.platform())),
+                        ("frames_per_s", Json::Num(fps_now)),
+                        (
+                            "p99_ns",
+                            Json::Num(report.metrics.arrival_latency.p99() as f64),
+                        ),
+                        ("retain_pct", Json::Num(report.metrics.retain_pct())),
+                        ("mean_batch", Json::Num(report.metrics.mean_batch())),
+                    ]);
+                    let line = row.to_string();
+                    println!("{line}");
+                    rows.push(row);
+                    if batching {
+                        if let Some(&base) = seq_fps.get(&(workers, n_streams)) {
+                            if n_streams == max_streams {
+                                let s = fps_now / f64::max(base, 1e-9);
+                                speedups.push((format!("{name}/w{workers}"), s));
+                            }
+                        }
+                    } else {
+                        seq_fps.insert((workers, n_streams), fps_now);
+                    }
+                }
+            }
         }
     }
+
+    for (k, s) in &speedups {
+        println!("speedup[{k} @ {max_streams} streams]  {s:.2}x");
+    }
+    let baseline = Json::obj(vec![
+        ("bench", Json::Str("serving".into())),
+        ("backend", Json::Str(rt.platform())),
+        ("n_frames", Json::Num(N_FRAMES as f64)),
+        ("rows", Json::Arr(rows)),
+        (
+            "speedup_at_max_streams",
+            Json::Obj(
+                speedups
+                    .into_iter()
+                    .map(|(k, s)| (k, Json::Num(s)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    // cargo runs bench binaries with cwd at the package root (rust/);
+    // the committed baseline lives one level up at the workspace root
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json");
+    std::fs::write(&path, baseline.to_string_pretty())?;
+    println!("# wrote {}", path.display());
     Ok(())
 }

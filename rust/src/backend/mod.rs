@@ -16,14 +16,14 @@
 //!   extrapolation, per-layer `rate_div` phase gating matching
 //!   `coordinator::scheduler` and eq. 4 of the paper).  This is the
 //!   default: it runs on anything that compiles Rust.
-//! * [`pjrt`] (`--features pjrt`) — the HLO-text/PJRT execution engine
+//! * `pjrt` (`--features pjrt`) — the HLO-text/PJRT execution engine
 //!   for AOT-compiled artifacts from `python/compile/aot.py`.
 
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::runtime::engine::{StateSet, Weights};
 use crate::runtime::manifest::Manifest;
@@ -100,6 +100,61 @@ pub trait VariantExec: Send + Sync {
         states: &mut StateSet,
         weights: &DeviceWeights,
     ) -> Result<Vec<f32>>;
+
+    /// Phase-aligned batched streaming step (DESIGN.md §8): one inference
+    /// for each of `frames.len()` streams that all sit at the same
+    /// schedule position `phase`.  `states[i]` belongs to stream `i` and
+    /// must be mutated exactly as `frames.len()` independent
+    /// [`VariantExec::step`] calls would mutate it.
+    ///
+    /// The default implementation *is* that sequential loop, so backends
+    /// without a batched kernel (pjrt) fall back transparently; the
+    /// native backend overrides it with a batch-stacked GEMM path whose
+    /// outputs are bit-identical to the sequential path.
+    fn step_batch(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+    ) -> Result<Vec<Vec<f32>>> {
+        if frames.len() != states.len() {
+            bail!(
+                "step_batch: {} frames for {} state sets",
+                frames.len(),
+                states.len()
+            );
+        }
+        frames
+            .iter()
+            .zip(states.iter_mut())
+            .map(|(frame, st)| self.step(phase, frame, st, weights))
+            .collect()
+    }
+
+    /// Phase-aligned batched FP rest pass: [`VariantExec::step_rest`] for
+    /// a batch of streams whose `precompute` already ran.  Defaults to
+    /// the sequential loop exactly like [`VariantExec::step_batch`].
+    fn step_rest_batch(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+    ) -> Result<Vec<Vec<f32>>> {
+        if frames.len() != states.len() {
+            bail!(
+                "step_rest_batch: {} frames for {} state sets",
+                frames.len(),
+                states.len()
+            );
+        }
+        frames
+            .iter()
+            .zip(states.iter_mut())
+            .map(|(frame, st)| self.step_rest(phase, frame, st, weights))
+            .collect()
+    }
 
     /// Run the offline (full-sequence) network over (feat, T) frames.
     fn offline(&self, x: &Tensor, weights: &DeviceWeights) -> Result<Tensor>;

@@ -23,7 +23,18 @@
 //! so the scheduler's analytic per-phase accounting
 //! (`coordinator::stream::macs_at_phase`) can be verified against what
 //! actually ran.
+//!
+//! Streaming execution is *batched* (DESIGN.md §8): the interpreter has a
+//! single code path (`NativeVariant::run_step_batch`), which runs a
+//! phase-aligned group of B streams by stacking their activations into
+//! (C, B) matrices and executing each conv as one blocked GEMM over the
+//! batch (fused bias + ELU, thread-local scratch buffers so the steady
+//! state is allocation-free).  The single-stream entry points are the
+//! B == 1 case of the same path, and per-stream accumulation order is
+//! batch-size-independent, so batched and sequential serving are
+//! bit-identical — `tests/batch_equivalence.rs` asserts it.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -133,6 +144,7 @@ pub struct NativeVariant {
 }
 
 impl NativeVariant {
+    /// Compile (validate + index) one manifest for native execution.
     pub fn new(manifest: &Manifest) -> Result<NativeVariant> {
         let cfg = manifest.config.clone();
         let depth = cfg.depth();
@@ -312,24 +324,72 @@ impl NativeVariant {
 
     // ---- counted kernels --------------------------------------------------
 
-    /// Dense step conv over a flattened (C_in, K) window.
-    fn conv_win(&self, w: &Tensor, b: &Tensor, win: &[f32]) -> Vec<f32> {
+    /// Batched dense step conv over column-stacked windows: `xwin` is the
+    /// (C_in·K, B) matrix holding one flattened window per stream column,
+    /// and the (C_out, B) result lands in `out`.
+    ///
+    /// The loop is a register-blocked GEMM: one weight row streams over
+    /// the whole batch panel, so every weight element is loaded once per
+    /// *batch* instead of once per *stream*, and the inner axpy runs over
+    /// contiguous memory.  Per-stream accumulation order (bias first,
+    /// then taps in row order) is exactly the B == 1 order, so batched
+    /// and sequential execution agree bit-for-bit.
+    fn conv_win_batch(&self, w: &Tensor, b: &Tensor, xwin: &[f32], bsz: usize, out: &mut [f32]) {
         let c_out = w.shape[0];
-        let n = win.len();
-        let mut out = Vec::with_capacity(c_out);
+        let n = xwin.len() / bsz;
+        debug_assert_eq!(w.data.len(), c_out * n);
+        debug_assert_eq!(out.len(), c_out * bsz);
+        let mut acc = scratch_take(bsz);
         for o in 0..c_out {
             let row = &w.data[o * n..(o + 1) * n];
-            let mut acc = b.data[o];
-            for (wv, xv) in row.iter().zip(win) {
-                acc += wv * xv;
+            acc.fill(b.data[o]);
+            for (j, &wv) in row.iter().enumerate() {
+                let xs = &xwin[j * bsz..(j + 1) * bsz];
+                for (a, &x) in acc.iter_mut().zip(xs.iter()) {
+                    *a += wv * x;
+                }
             }
-            out.push(acc);
+            out[o * bsz..(o + 1) * bsz].copy_from_slice(&acc);
         }
-        self.macs.fetch_add((c_out * n) as u64, Ordering::Relaxed);
-        out
+        scratch_put(acc);
+        self.macs.fetch_add((c_out * n * bsz) as u64, Ordering::Relaxed);
     }
 
-    /// One output phase of a stride-2 transposed conv: `w[:, :, ph] @ x + b`.
+    /// Batched stride-2 transposed-conv phase: `w[:, :, ph] @ x + b` for
+    /// a (C_in, B) activation panel `x`, writing (C_out, B) into `out`.
+    /// Same blocked-GEMM shape and bit-exactness argument as
+    /// [`NativeVariant::conv_win_batch`].
+    fn tconv_phase_batch(
+        &self,
+        w: &Tensor,
+        b: &Tensor,
+        ph: usize,
+        x: &[f32],
+        bsz: usize,
+        out: &mut [f32],
+    ) {
+        let c_out = w.shape[0];
+        let c_in = w.shape[1];
+        debug_assert_eq!(x.len(), c_in * bsz);
+        let mut acc = scratch_take(bsz);
+        for o in 0..c_out {
+            acc.fill(b.data[o]);
+            for i in 0..c_in {
+                let wv = w.data[o * c_in * 2 + i * 2 + ph];
+                let xs = &x[i * bsz..(i + 1) * bsz];
+                for (a, &xv) in acc.iter_mut().zip(xs.iter()) {
+                    *a += wv * xv;
+                }
+            }
+            out[o * bsz..(o + 1) * bsz].copy_from_slice(&acc);
+        }
+        scratch_put(acc);
+        self.macs
+            .fetch_add((c_out * c_in * bsz) as u64, Ordering::Relaxed);
+    }
+
+    /// One output phase of a stride-2 transposed conv for a single
+    /// stream: `w[:, :, ph] @ x + b` (offline path).
     fn tconv_phase(&self, w: &Tensor, b: &Tensor, ph: usize, x: &[f32]) -> Vec<f32> {
         let c_out = w.shape[0];
         let c_in = w.shape[1];
@@ -372,17 +432,31 @@ impl NativeVariant {
         out
     }
 
-    // ---- streaming step ---------------------------------------------------
+    // ---- streaming step (batched; B == 1 is the single-stream case) -------
 
-    /// One inference (or one FP part of it) at schedule position `phase`.
-    fn run_step(
+    /// One inference (or one FP part of it) at schedule position `phase`
+    /// for a phase-aligned batch of `states.len()` streams.
+    ///
+    /// This is the *only* streaming code path: [`VariantExec::step`],
+    /// [`VariantExec::precompute`] and [`VariantExec::step_rest`] all run
+    /// it with B == 1, so the batched and sequential paths cannot diverge
+    /// in schedule logic — only the kernels see the batch, and those
+    /// preserve per-stream accumulation order bit-for-bit.
+    ///
+    /// Every batch-wide activation is a (C, B) matrix flattened row-major
+    /// (`buf[c * B + s]` = channel `c` of stream `s`), so the GEMM inner
+    /// loop runs contiguously across the batch.  All intermediates come
+    /// from a thread-local scratch pool: the serving steady state
+    /// allocates nothing but the returned output frames.
+    fn run_step_batch(
         &self,
         phase: usize,
-        frame: Option<&[f32]>,
-        states: &mut StateSet,
+        frames: Option<&[&[f32]]>,
+        states: &mut [&mut StateSet],
         dw: &DeviceWeights,
         part: Part,
-    ) -> Result<Option<Vec<f32>>> {
+    ) -> Result<Option<Vec<Vec<f32>>>> {
+        let bsz = states.len();
         if self.cfg.interp.is_some() {
             bail!(
                 "{}: interpolation variants are offline-only (App. D adds a \
@@ -390,13 +464,38 @@ impl NativeVariant {
                 self.name
             );
         }
-        if states.tensors.len() != self.specs.len() {
-            bail!(
-                "{}: state set holds {} tensors, expected {}",
-                self.name,
-                states.tensors.len(),
-                self.specs.len()
-            );
+        for st in states.iter() {
+            if st.tensors.len() != self.specs.len() {
+                bail!(
+                    "{}: state set holds {} tensors, expected {}",
+                    self.name,
+                    st.tensors.len(),
+                    self.specs.len()
+                );
+            }
+        }
+        if let Some(fr) = frames {
+            if fr.len() != bsz {
+                bail!(
+                    "{}: {} frames for {} state sets",
+                    self.name,
+                    fr.len(),
+                    bsz
+                );
+            }
+            for f in fr.iter() {
+                if f.len() != self.cfg.feat {
+                    bail!(
+                        "{}: frame has {} samples, expected {}",
+                        self.name,
+                        f.len(),
+                        self.cfg.feat
+                    );
+                }
+            }
+        }
+        if bsz == 0 {
+            return Ok(Some(Vec::new()));
         }
         let w = self.host(dw)?;
         let phase = phase % self.period;
@@ -413,32 +512,52 @@ impl NativeVariant {
         let mut enc_out: Vec<Option<Vec<f32>>> = vec![None; depth + 1];
         let mut cur: Option<Vec<f32>> = match part {
             Part::Pre => None,
-            _ => Some(
-                frame
-                    .with_context(|| format!("{}: step needs a frame", self.name))?
-                    .to_vec(),
-            ),
+            _ => {
+                let fr = frames.with_context(|| format!("{}: step needs frames", self.name))?;
+                let mut x0 = scratch_take(self.cfg.feat * bsz);
+                for (si, f) in fr.iter().enumerate() {
+                    for (i, &v) in f.iter().enumerate() {
+                        x0[i * bsz + si] = v;
+                    }
+                }
+                Some(x0)
+            }
         };
         for l in 1..=depth {
             if phase % self.r_in[l] != 0 {
-                cur = None;
+                release(&mut cur);
                 continue;
             }
             // FP delay line at the input of layer s: read the oldest entry
             // before pushing (the pre pass reads, the rest pass pushes).
             if s == Some(l) {
-                let fifo = &mut states.tensors[self.idx.shift_fifo.unwrap()];
-                let delayed_in = column(fifo, 0);
+                let fifo_slot = self.idx.shift_fifo.unwrap();
+                let c_in = self.cfg.enc_in_ch(l);
+                let mut delayed_in = scratch_take(c_in * bsz);
                 if part != Part::Pre {
                     let c = cur
                         .as_ref()
                         .with_context(|| format!("{}: enc{l} missing input", self.name))?;
-                    push_fifo(fifo, c);
+                    for (si, st) in states.iter_mut().enumerate() {
+                        let fifo = &mut st.tensors[fifo_slot];
+                        gather_state_col(fifo, 0, bsz, si, &mut delayed_in);
+                        push_fifo_col(fifo, c, bsz, si);
+                    }
+                } else {
+                    for (si, st) in states.iter().enumerate() {
+                        gather_state_col(&st.tensors[fifo_slot], 0, bsz, si, &mut delayed_in);
+                    }
                 }
-                cur = if in_part(l) { Some(delayed_in) } else { None };
+                release(&mut cur);
+                cur = if in_part(l) {
+                    Some(delayed_in)
+                } else {
+                    scratch_put(delayed_in);
+                    None
+                };
             }
             if !in_part(l) {
-                cur = None;
+                release(&mut cur);
                 continue;
             }
             let c = cur
@@ -449,20 +568,30 @@ impl NativeVariant {
             } else {
                 true
             };
-            let win = push_window(&mut states.tensors[self.idx.enc_win[l - 1]], &c);
+            let c_in = self.cfg.enc_in_ch(l);
+            let k = self.cfg.kernel;
+            let mut xwin = scratch_take(c_in * k * bsz);
+            for (si, st) in states.iter_mut().enumerate() {
+                push_window_col(&mut st.tensors[self.idx.enc_win[l - 1]], &c, bsz, si, &mut xwin);
+            }
+            scratch_put(c);
             cur = if fires {
-                let mut y = self.conv_win(
-                    &w.tensors[self.idx.enc_w[l - 1]],
-                    &w.tensors[self.idx.enc_b[l - 1]],
-                    &win,
-                );
+                let wt = &w.tensors[self.idx.enc_w[l - 1]];
+                let bt = &w.tensors[self.idx.enc_b[l - 1]];
+                let mut y = scratch_take(wt.shape[0] * bsz);
+                self.conv_win_batch(wt, bt, &xwin, bsz, &mut y);
                 elu(&mut y);
+                // keep a copy for the decoder's skip connection
+                let mut keep = scratch_take(y.len());
+                keep.copy_from_slice(&y);
+                enc_out[l] = Some(keep);
                 Some(y)
             } else {
                 None
             };
-            enc_out[l] = cur.clone();
+            scratch_put(xwin);
         }
+        release(&mut cur);
 
         // ---- decoder ----
         let mut d: Option<Vec<f32>> = None;
@@ -470,37 +599,62 @@ impl NativeVariant {
             let mut computed_here = false;
             if phase % self.r_out[l] == 0 {
                 if !in_part(l) {
-                    d = None;
+                    release(&mut d);
                 } else {
                     let inp: Vec<f32> = if l == depth {
-                        enc_out[l]
-                            .clone()
-                            .with_context(|| format!("{}: dec{l} missing input", self.name))?
+                        let src = enc_out[l]
+                            .as_ref()
+                            .with_context(|| format!("{}: dec{l} missing input", self.name))?;
+                        let mut v = scratch_take(src.len());
+                        v.copy_from_slice(src);
+                        v
                     } else {
                         let mut upper = d.take();
                         if part == Part::Rest && delayed(l + 1) && !self.is_scc[l + 1] {
                             // Boundary: the delayed d_{l+1} was produced by
                             // the pre pass and parked in the handoff slot.
-                            upper = Some(column(
-                                &states.tensors[self.idx.fp_handoff.unwrap()],
-                                0,
-                            ));
+                            release(&mut upper);
+                            let slot = self.idx.fp_handoff.unwrap();
+                            let c_h = states[0].tensors[slot].shape[0];
+                            let mut h = scratch_take(c_h * bsz);
+                            for (si, st) in states.iter().enumerate() {
+                                gather_state_col(&st.tensors[slot], 0, bsz, si, &mut h);
+                            }
+                            upper = Some(h);
                         }
-                        let mut v = upper
+                        let v = upper
                             .with_context(|| format!("{}: dec{l} missing deep input", self.name))?;
                         let skip = enc_out[l]
                             .as_ref()
                             .with_context(|| format!("{}: dec{l} missing skip", self.name))?;
-                        v.extend_from_slice(skip);
-                        v
+                        // stack deep rows over skip rows (channel concat)
+                        let mut inp = scratch_take(v.len() + skip.len());
+                        inp[..v.len()].copy_from_slice(&v);
+                        inp[v.len()..].copy_from_slice(skip);
+                        scratch_put(v);
+                        inp
                     };
-                    let win = push_window(&mut states.tensors[self.idx.dec_win[l - 1]], &inp);
-                    let mut y = self.conv_win(
-                        &w.tensors[self.idx.dec_w[l - 1]],
-                        &w.tensors[self.idx.dec_b[l - 1]],
-                        &win,
-                    );
+                    let c_in = self.cfg.dec_in_ch(l);
+                    let k = self.cfg.kernel;
+                    debug_assert_eq!(inp.len(), c_in * bsz);
+                    let mut xwin = scratch_take(c_in * k * bsz);
+                    for (si, st) in states.iter_mut().enumerate() {
+                        push_window_col(
+                            &mut st.tensors[self.idx.dec_win[l - 1]],
+                            &inp,
+                            bsz,
+                            si,
+                            &mut xwin,
+                        );
+                    }
+                    scratch_put(inp);
+                    let wt = &w.tensors[self.idx.dec_w[l - 1]];
+                    let bt = &w.tensors[self.idx.dec_b[l - 1]];
+                    let mut y = scratch_take(wt.shape[0] * bsz);
+                    self.conv_win_batch(wt, bt, &xwin, bsz, &mut y);
+                    scratch_put(xwin);
                     elu(&mut y);
+                    release(&mut d);
                     d = Some(y);
                     computed_here = true;
                 }
@@ -514,33 +668,38 @@ impl NativeVariant {
                 if fresh && computed_here {
                     let dv = d.as_ref().unwrap();
                     if self.tconv[l] {
-                        let ph0 = self.tconv_phase(
-                            &w.tensors[self.idx.up_w[&l]],
-                            &w.tensors[self.idx.up_b[&l]],
-                            0,
-                            dv,
-                        );
-                        let ph1 = self.tconv_phase(
-                            &w.tensors[self.idx.up_w[&l]],
-                            &w.tensors[self.idx.up_b[&l]],
-                            1,
-                            dv,
-                        );
-                        let cache = &mut states.tensors[cache_slot];
-                        set_column(cache, 0, &ph0);
-                        set_column(cache, 1, &ph1);
+                        let wt = &w.tensors[self.idx.up_w[&l]];
+                        let bt = &w.tensors[self.idx.up_b[&l]];
+                        let mut ph0 = scratch_take(wt.shape[0] * bsz);
+                        let mut ph1 = scratch_take(wt.shape[0] * bsz);
+                        self.tconv_phase_batch(wt, bt, 0, dv, bsz, &mut ph0);
+                        self.tconv_phase_batch(wt, bt, 1, dv, bsz, &mut ph1);
+                        for (si, st) in states.iter_mut().enumerate() {
+                            let cache = &mut st.tensors[cache_slot];
+                            scatter_state_col(cache, 0, &ph0, bsz, si);
+                            scatter_state_col(cache, 1, &ph1, bsz, si);
+                        }
+                        scratch_put(ph0);
+                        scratch_put(ph1);
                     } else {
-                        set_column(&mut states.tensors[cache_slot], 0, dv);
+                        for (si, st) in states.iter_mut().enumerate() {
+                            scatter_state_col(&mut st.tensors[cache_slot], 0, dv, bsz, si);
+                        }
                     }
                 }
                 let reader_delayed = (l >= 2 && delayed(l - 1)) || (l == 1 && s == Some(1));
                 let reads_here = part == Part::All
                     || (reader_delayed && part == Part::Pre)
                     || (!reader_delayed && part == Part::Rest);
+                release(&mut d);
                 d = if reads_here {
-                    let cache = &states.tensors[cache_slot];
                     let col = if self.tconv[l] && !fresh { 1 } else { 0 };
-                    Some(column(cache, col))
+                    let c_c = states[0].tensors[cache_slot].shape[0];
+                    let mut v = scratch_take(c_c * bsz);
+                    for (si, st) in states.iter().enumerate() {
+                        gather_state_col(&st.tensors[cache_slot], col, bsz, si, &mut v);
+                    }
+                    Some(v)
                 } else {
                     None
                 };
@@ -553,7 +712,10 @@ impl NativeVariant {
                 && l != 1
             {
                 if let Some(dv) = &d {
-                    set_column(&mut states.tensors[self.idx.fp_handoff.unwrap()], 0, dv);
+                    let slot = self.idx.fp_handoff.unwrap();
+                    for (si, st) in states.iter_mut().enumerate() {
+                        scatter_state_col(&mut st.tensors[slot], 0, dv, bsz, si);
+                    }
                 }
             }
         }
@@ -561,27 +723,52 @@ impl NativeVariant {
         // ---- head ----
         let head_w = &w.tensors[self.idx.head_w];
         let head_b = &w.tensors[self.idx.head_b];
-        match part {
+        let feat = self.cfg.feat;
+        let result = match part {
             Part::Pre => {
                 if s == Some(1) {
                     // Whole network delayed: the head output is the handoff.
                     let dv = d
+                        .take()
                         .with_context(|| format!("{}: pre pass lost the head input", self.name))?;
-                    let out = self.conv_win(head_w, head_b, &dv);
-                    set_column(&mut states.tensors[self.idx.fp_handoff.unwrap()], 0, &out);
+                    let mut out = scratch_take(feat * bsz);
+                    self.conv_win_batch(head_w, head_b, &dv, bsz, &mut out);
+                    scratch_put(dv);
+                    let slot = self.idx.fp_handoff.unwrap();
+                    for (si, st) in states.iter_mut().enumerate() {
+                        scatter_state_col(&mut st.tensors[slot], 0, &out, bsz, si);
+                    }
+                    scratch_put(out);
                 }
-                Ok(None)
+                None
             }
-            Part::Rest if s == Some(1) => Ok(Some(column(
-                &states.tensors[self.idx.fp_handoff.unwrap()],
-                0,
-            ))),
+            Part::Rest if s == Some(1) => {
+                let slot = self.idx.fp_handoff.unwrap();
+                let mut out = scratch_take(feat * bsz);
+                for (si, st) in states.iter().enumerate() {
+                    gather_state_col(&st.tensors[slot], 0, bsz, si, &mut out);
+                }
+                let frames_out = split_columns(&out, bsz, feat);
+                scratch_put(out);
+                Some(frames_out)
+            }
             _ => {
                 let dv = d
+                    .take()
                     .with_context(|| format!("{}: no decoder output at phase {phase}", self.name))?;
-                Ok(Some(self.conv_win(head_w, head_b, &dv)))
+                let mut out = scratch_take(feat * bsz);
+                self.conv_win_batch(head_w, head_b, &dv, bsz, &mut out);
+                scratch_put(dv);
+                let frames_out = split_columns(&out, bsz, feat);
+                scratch_put(out);
+                Some(frames_out)
             }
+        };
+        release(&mut d);
+        for e in enc_out.iter_mut() {
+            release(e);
         }
+        Ok(result)
     }
 
     // ---- offline (full-sequence) interpreter ------------------------------
@@ -715,8 +902,12 @@ impl VariantExec for NativeVariant {
         states: &mut StateSet,
         weights: &DeviceWeights,
     ) -> Result<Vec<f32>> {
-        let out = self.run_step(phase, Some(frame), states, weights, Part::All)?;
-        out.with_context(|| format!("{}: step produced no output", self.name))
+        let frames = [frame];
+        let mut sts = [states];
+        let out =
+            self.run_step_batch(phase, Some(&frames[..]), &mut sts[..], weights, Part::All)?;
+        let mut out = out.with_context(|| format!("{}: step produced no output", self.name))?;
+        Ok(out.remove(0))
     }
 
     fn precompute(
@@ -728,7 +919,8 @@ impl VariantExec for NativeVariant {
         if !self.has_fp_split() {
             bail!("{}: variant has no FP split", self.name);
         }
-        self.run_step(phase, None, states, weights, Part::Pre)?;
+        let mut sts = [states];
+        self.run_step_batch(phase, None, &mut sts[..], weights, Part::Pre)?;
         Ok(())
     }
 
@@ -742,8 +934,39 @@ impl VariantExec for NativeVariant {
         if !self.has_fp_split() {
             bail!("{}: variant has no FP split", self.name);
         }
-        let out = self.run_step(phase, Some(frame), states, weights, Part::Rest)?;
-        out.with_context(|| format!("{}: rest pass produced no output", self.name))
+        let frames = [frame];
+        let mut sts = [states];
+        let out =
+            self.run_step_batch(phase, Some(&frames[..]), &mut sts[..], weights, Part::Rest)?;
+        let mut out =
+            out.with_context(|| format!("{}: rest pass produced no output", self.name))?;
+        Ok(out.remove(0))
+    }
+
+    fn step_batch(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+    ) -> Result<Vec<Vec<f32>>> {
+        // run_step_batch validates frame/state arity and frame sizes
+        let out = self.run_step_batch(phase, Some(frames), states, weights, Part::All)?;
+        out.with_context(|| format!("{}: batched step produced no output", self.name))
+    }
+
+    fn step_rest_batch(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+    ) -> Result<Vec<Vec<f32>>> {
+        if !self.has_fp_split() {
+            bail!("{}: variant has no FP split", self.name);
+        }
+        let out = self.run_step_batch(phase, Some(frames), states, weights, Part::Rest)?;
+        out.with_context(|| format!("{}: batched rest pass produced no output", self.name))
     }
 
     fn offline(&self, x: &Tensor, weights: &DeviceWeights) -> Result<Tensor> {
@@ -760,7 +983,42 @@ impl VariantExec for NativeVariant {
     }
 }
 
-// ---- column/window primitives (row-major (C, W) tensors) ------------------
+// ---- scratch pool ----------------------------------------------------------
+
+thread_local! {
+    /// Per-thread free list of batch scratch buffers.  Sizes stabilise
+    /// after the first step through a variant, so the serving worker's
+    /// steady state is allocation-free.
+    static SCRATCH: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+}
+
+/// Take a zeroed length-`n` buffer from the thread-local scratch pool.
+fn scratch_take(n: usize) -> Vec<f32> {
+    SCRATCH.with(|p| {
+        let mut v = p.borrow_mut().pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    })
+}
+
+/// Return a buffer to the thread-local scratch pool for reuse.
+fn scratch_put(v: Vec<f32>) {
+    SCRATCH.with(|p| p.borrow_mut().push(v));
+}
+
+/// Return an optional batch buffer to the pool and leave `None` behind.
+fn release(v: &mut Option<Vec<f32>>) {
+    if let Some(buf) = v.take() {
+        scratch_put(buf);
+    }
+}
+
+// ---- column/window primitives ---------------------------------------------
+//
+// Per-stream states stay row-major (C, W) tensors; batch-wide activations
+// are (C, B) matrices.  The helpers below move one stream's column
+// between the two layouts.
 
 /// ELU activation in place.
 fn elu(v: &mut [f32]) {
@@ -771,13 +1029,13 @@ fn elu(v: &mut [f32]) {
     }
 }
 
-/// Extract column `j` of a (C, W) tensor.
+/// Extract column `j` of a (C, W) tensor (offline path).
 fn column(t: &Tensor, j: usize) -> Vec<f32> {
     let w = t.shape[1];
     (0..t.shape[0]).map(|i| t.data[i * w + j]).collect()
 }
 
-/// Overwrite column `j` of a (C, W) tensor.
+/// Overwrite column `j` of a (C, W) tensor (offline path).
 fn set_column(t: &mut Tensor, j: usize, v: &[f32]) {
     let w = t.shape[1];
     for (i, &x) in v.iter().enumerate() {
@@ -785,31 +1043,61 @@ fn set_column(t: &mut Tensor, j: usize, v: &[f32]) {
     }
 }
 
-/// STMC window tick: returns the full (C, K) window `[state | cur]`
-/// flattened row-major and advances the state to `window[:, 1:]`.
-fn push_window(state: &mut Tensor, cur: &[f32]) -> Vec<f32> {
-    let c = state.shape[0];
-    let w = state.shape[1]; // K - 1
-    let k = w + 1;
-    let mut win = vec![0.0f32; c * k];
-    for i in 0..c {
-        win[i * k..i * k + w].copy_from_slice(&state.data[i * w..(i + 1) * w]);
-        win[i * k + w] = cur[i];
+/// Read column `col` of stream `si`'s (C, W) state tensor into column
+/// `si` of a (C, B) batch matrix.
+fn gather_state_col(t: &Tensor, col: usize, bsz: usize, si: usize, dst: &mut [f32]) {
+    let w = t.shape[1];
+    for i in 0..t.shape[0] {
+        dst[i * bsz + si] = t.data[i * w + col];
     }
-    for i in 0..c {
-        state.data[i * w..(i + 1) * w].copy_from_slice(&win[i * k + 1..(i + 1) * k]);
-    }
-    win
 }
 
-/// FIFO tick: drop the oldest column, append `cur`.
-fn push_fifo(state: &mut Tensor, cur: &[f32]) {
+/// Write column `si` of a (C, B) batch matrix into column `col` of
+/// stream `si`'s (C, W) state tensor.
+fn scatter_state_col(t: &mut Tensor, col: usize, src: &[f32], bsz: usize, si: usize) {
+    let w = t.shape[1];
+    for i in 0..t.shape[0] {
+        t.data[i * w + col] = src[i * bsz + si];
+    }
+}
+
+/// STMC window tick for stream `si`: writes that stream's full (C, K)
+/// window `[state | cur]` into column `si` of the (C·K, B) matrix `dst`
+/// and advances the per-stream window state to `window[:, 1:]`.
+fn push_window_col(state: &mut Tensor, cur: &[f32], bsz: usize, si: usize, dst: &mut [f32]) {
+    let c = state.shape[0];
+    let wlen = state.shape[1]; // K - 1
+    let k = wlen + 1;
+    for i in 0..c {
+        let row = &mut state.data[i * wlen..(i + 1) * wlen];
+        for (j, &v) in row.iter().enumerate() {
+            dst[(i * k + j) * bsz + si] = v;
+        }
+        let x = cur[i * bsz + si];
+        dst[(i * k + wlen) * bsz + si] = x;
+        if wlen > 0 {
+            row.copy_within(1.., 0);
+            row[wlen - 1] = x;
+        }
+    }
+}
+
+/// FIFO tick for stream `si`: drop the oldest column, append that
+/// stream's current value (column `si` of the (C, B) matrix `cur`).
+fn push_fifo_col(state: &mut Tensor, cur: &[f32], bsz: usize, si: usize) {
     let w = state.shape[1];
     for i in 0..state.shape[0] {
         let row = &mut state.data[i * w..(i + 1) * w];
         row.copy_within(1.., 0);
-        row[w - 1] = cur[i];
+        row[w - 1] = cur[i * bsz + si];
     }
+}
+
+/// Split a (C, B) batch matrix into per-stream output frames.
+fn split_columns(m: &[f32], bsz: usize, c: usize) -> Vec<Vec<f32>> {
+    (0..bsz)
+        .map(|si| (0..c).map(|i| m[i * bsz + si]).collect())
+        .collect()
 }
 
 // ---- offline sequence primitives ------------------------------------------
@@ -943,18 +1231,57 @@ mod tests {
     }
 
     #[test]
-    fn push_window_shifts_by_one() {
+    fn push_window_col_shifts_by_one() {
+        // Stream 1 of a 2-wide batch: C = 2 channels, kernel 3.
         let mut st = Tensor::new(vec![2, 2], vec![1.0, 2.0, 10.0, 20.0]);
-        let win = push_window(&mut st, &[3.0, 30.0]);
+        let bsz = 2;
+        // cur is a (2, 2) batch matrix; stream 1's column is [3, 30].
+        let cur = vec![-1.0, 3.0, -1.0, 30.0];
+        let mut dst = vec![0.0f32; 2 * 3 * bsz];
+        push_window_col(&mut st, &cur, bsz, 1, &mut dst);
+        // column 1 of dst holds the stream's flattened (C, K) window
+        let win: Vec<f32> = (0..6).map(|r| dst[r * bsz + 1]).collect();
         assert_eq!(win, vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0]);
         assert_eq!(st.data, vec![2.0, 3.0, 20.0, 30.0]);
+        // stream 0's column was left untouched
+        assert!((0..6).all(|r| dst[r * bsz] == 0.0));
     }
 
     #[test]
-    fn fifo_drops_oldest() {
+    fn fifo_col_drops_oldest() {
         let mut st = Tensor::new(vec![1, 3], vec![1.0, 2.0, 3.0]);
-        push_fifo(&mut st, &[4.0]);
+        push_fifo_col(&mut st, &[4.0], 1, 0);
         assert_eq!(st.data, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_state_columns() {
+        let mut st = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let bsz = 3;
+        let mut panel = vec![0.0f32; 2 * bsz];
+        gather_state_col(&st, 1, bsz, 2, &mut panel);
+        assert_eq!(panel, vec![0.0, 0.0, 2.0, 0.0, 0.0, 4.0]);
+        scatter_state_col(&mut st, 0, &panel, bsz, 2);
+        assert_eq!(st.data, vec![2.0, 2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn split_columns_transposes_batch() {
+        // (C = 2, B = 2) matrix [[1, 2], [3, 4]] -> streams [1,3], [2,4]
+        let m = vec![1.0, 2.0, 3.0, 4.0];
+        let frames = split_columns(&m, 2, 2);
+        assert_eq!(frames, vec![vec![1.0, 3.0], vec![2.0, 4.0]]);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_buffers() {
+        let a = scratch_take(8);
+        let pa = a.as_ptr();
+        scratch_put(a);
+        let b = scratch_take(4); // smaller fits the recycled allocation
+        assert_eq!(b.as_ptr(), pa);
+        assert!(b.iter().all(|&v| v == 0.0));
+        scratch_put(b);
     }
 
     #[test]

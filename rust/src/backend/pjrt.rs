@@ -49,6 +49,7 @@ unsafe impl Send for PjrtBackend {}
 unsafe impl Sync for PjrtBackend {}
 
 impl PjrtBackend {
+    /// A backend over a fresh PJRT CPU client.
     pub fn cpu() -> Result<PjrtBackend> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(PjrtBackend {

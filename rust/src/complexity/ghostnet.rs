@@ -16,8 +16,11 @@ use super::{LayerCost, Network};
 /// One ghost block's shape.
 #[derive(Debug, Clone)]
 pub struct GhostBlock {
+    /// Input channels.
     pub c_in: usize,
+    /// Output channels.
     pub c_out: usize,
+    /// Temporal kernel width of the primary conv.
     pub kernel: usize,
     /// Part of the SOI-compressed region?
     pub compressed: bool,

@@ -25,6 +25,7 @@ pub mod unet;
 /// Cost of one layer of a streaming network.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerCost {
+    /// Layer label ("enc3", "dec1", "head", ...).
     pub name: String,
     /// MACs to produce one output frame in the layer's own rate domain.
     pub macs_per_out: u64,
@@ -42,7 +43,9 @@ pub struct LayerCost {
 /// A whole network plus its inference rate.
 #[derive(Debug, Clone)]
 pub struct Network {
+    /// Network label ("unet", "ghostnet-III", ...).
     pub name: String,
+    /// Per-layer costs, in forward order.
     pub layers: Vec<LayerCost>,
     /// Inferences per second (frame rate of the input).
     pub frame_rate: f64,
@@ -100,6 +103,7 @@ impl Network {
         100.0 * pre / total
     }
 
+    /// Number of layers in the cost model.
     pub fn total_layers(&self) -> usize {
         self.layers.len()
     }

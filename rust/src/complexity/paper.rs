@@ -18,8 +18,9 @@ pub const RETAIN_1SCC: [f64; 7] = [50.1, 51.4, 58.1, 61.5, 64.8, 71.3, 83.8];
 /// Paper Table 1: SI-SNRi (dB) for a single S-CC at p=1..7 (Table 6 row 1).
 pub const SISNRI_1SCC: [f64; 7] = [7.15, 7.23, 7.28, 7.43, 7.47, 7.56, 7.55];
 
-/// Paper STMC reference: SI-SNRi and MMAC/s.
+/// Paper STMC reference SI-SNRi, dB.
 pub const STMC_SISNRI: f64 = 7.69;
+/// Paper STMC reference complexity, MMAC/s.
 pub const STMC_MMACS: f64 = 1819.2;
 
 /// Paper Table 1: 2×S-CC rows (p, q, SI-SNRi, retain %).

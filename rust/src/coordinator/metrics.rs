@@ -19,11 +19,21 @@ pub struct StreamMetrics {
     pub macs_executed: f64,
     /// MACs a pure STMC model would have executed.
     pub macs_stmc: f64,
+    /// Batch widths seen by frames served through the phase-aligned
+    /// batched path (one entry per frame, so the mean is the average
+    /// batch size a frame experienced; empty when batching is off).
+    pub batch_size: Histogram,
+    /// Analytic MACs of the inferences whose on-arrival pass ran through
+    /// batched dispatch (subset of `macs_executed`; for FP variants this
+    /// includes their per-session precompute share — the whole inference
+    /// is attributed to the path that served its frame).
+    pub macs_batched: f64,
     /// Output quality accumulator (SI-SNR segments), if tracked.
     pub si_snr: Summary,
 }
 
 impl StreamMetrics {
+    /// Empty metrics.
     pub fn new() -> Self {
         Self {
             si_snr: Summary::new(),
@@ -31,20 +41,46 @@ impl StreamMetrics {
         }
     }
 
+    /// Record the on-arrival work that began at `start` (batched frames
+    /// record the whole batch's wall time — what the frame waited for).
     pub fn record_arrival(&mut self, start: Instant) {
         self.arrival_latency
             .record(start.elapsed().as_nanos() as u64);
     }
 
+    /// Record a precompute pass that began at `start`.
     pub fn record_precompute(&mut self, start: Instant) {
         self.precompute_time
             .record(start.elapsed().as_nanos() as u64);
     }
 
+    /// Count one served frame and its analytic MAC cost.
     pub fn record_frame(&mut self, macs_executed: f64, macs_stmc: f64) {
         self.frames += 1;
         self.macs_executed += macs_executed;
         self.macs_stmc += macs_stmc;
+    }
+
+    /// Record one frame served through the batched path in a batch of
+    /// `bsz` streams executing `macs` MACs for this stream's share.
+    pub fn record_batch(&mut self, bsz: u64, macs: f64) {
+        self.batch_size.record(bsz);
+        self.macs_batched += macs;
+    }
+
+    /// Mean batch width over the frames served by the batched path
+    /// (0 when the batched path never ran).
+    pub fn mean_batch(&self) -> f64 {
+        self.batch_size.mean()
+    }
+
+    /// Fraction of executed MACs attributed to batch-served inferences
+    /// (see [`StreamMetrics::macs_batched`] for the FP attribution rule).
+    pub fn batched_fraction(&self) -> f64 {
+        if self.macs_executed == 0.0 {
+            return 0.0;
+        }
+        self.macs_batched / self.macs_executed
     }
 
     /// Measured complexity retention vs STMC, percent.
@@ -65,12 +101,15 @@ impl StreamMetrics {
         pre / (pre + arr)
     }
 
+    /// Fold another stream's metrics into this aggregate.
     pub fn merge(&mut self, other: &StreamMetrics) {
         self.arrival_latency.merge(&other.arrival_latency);
         self.precompute_time.merge(&other.precompute_time);
         self.frames += other.frames;
         self.macs_executed += other.macs_executed;
         self.macs_stmc += other.macs_stmc;
+        self.batch_size.merge(&other.batch_size);
+        self.macs_batched += other.macs_batched;
         if other.si_snr.count > 0 {
             self.si_snr.count += other.si_snr.count;
             self.si_snr.sum += other.si_snr.sum;
@@ -79,15 +118,18 @@ impl StreamMetrics {
         }
     }
 
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
-            "frames {:>7}  p50 {:>9}  p95 {:>9}  p99 {:>9}  retain {:>5.1}%  hidden {:>4.1}%",
+            "frames {:>7}  p50 {:>9}  p95 {:>9}  p99 {:>9}  retain {:>5.1}%  \
+             hidden {:>4.1}%  batch \u{3bc} {:>4.1}",
             self.frames,
             crate::util::bench::fmt_ns(self.arrival_latency.p50() as f64),
             crate::util::bench::fmt_ns(self.arrival_latency.p95() as f64),
             crate::util::bench::fmt_ns(self.arrival_latency.p99() as f64),
             self.retain_pct(),
             100.0 * self.hidden_fraction(),
+            self.mean_batch(),
         )
     }
 }
@@ -120,5 +162,29 @@ mod tests {
         let mut m = StreamMetrics::new();
         m.record_arrival(Instant::now());
         assert_eq!(m.hidden_fraction(), 0.0);
+    }
+
+    #[test]
+    fn batch_accounting_tracks_width_and_macs() {
+        let mut m = StreamMetrics::new();
+        m.record_frame(100.0, 200.0);
+        m.record_batch(4, 100.0);
+        m.record_frame(100.0, 200.0); // unbatched frame
+        assert_eq!(m.batch_size.count(), 1);
+        assert!((m.mean_batch() - 4.0).abs() < 0.1);
+        assert!((m.batched_fraction() - 0.5).abs() < 1e-9);
+        let mut other = StreamMetrics::new();
+        other.record_frame(50.0, 200.0);
+        other.record_batch(8, 50.0);
+        m.merge(&other);
+        assert_eq!(m.batch_size.count(), 2);
+        assert_eq!(m.macs_batched, 150.0);
+    }
+
+    #[test]
+    fn batched_fraction_zero_when_idle() {
+        let m = StreamMetrics::new();
+        assert_eq!(m.batched_fraction(), 0.0);
+        assert_eq!(m.mean_batch(), 0.0);
     }
 }

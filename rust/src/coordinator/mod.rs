@@ -3,11 +3,14 @@
 //! * [`scheduler`] — the SOI inference pattern (which executable per
 //!   phase, FP precompute placement) as pure, testable logic.
 //! * [`stream`] — per-stream session: partial-state cache, schedule
-//!   execution, idle-time FP precompute, per-stream metrics.
+//!   execution, idle-time FP precompute, per-stream metrics, and the
+//!   phase-aligned batched group entry point
+//!   ([`StreamSession::on_frame_batch`], DESIGN.md §8).
 //! * [`server`] — multi-stream worker pool with id-sharding, bounded
-//!   queues (backpressure) and aggregated metrics.
-//! * [`metrics`] — latency histograms, executed-MAC accounting, measured
-//!   precompute overlap.
+//!   queues (backpressure), per-phase batched dispatch and aggregated
+//!   metrics.
+//! * [`metrics`] — latency histograms, executed-MAC and batch-width
+//!   accounting, measured precompute overlap.
 
 pub mod metrics;
 pub mod scheduler;

@@ -30,6 +30,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// A scheduler at t = 0; `period` must be a power of two.
     pub fn new(period: usize, fp_split: bool) -> Scheduler {
         assert!(period.is_power_of_two() && period > 0);
         Scheduler {
@@ -39,6 +40,7 @@ impl Scheduler {
         }
     }
 
+    /// Length of the repeating inference pattern.
     pub fn period(&self) -> usize {
         self.period
     }

@@ -1,5 +1,6 @@
 //! Multi-stream serving: a worker pool sharding streams by id, with
-//! bounded queues for backpressure and aggregated metrics.
+//! bounded queues for backpressure, phase-aligned batched dispatch and
+//! aggregated metrics.
 //!
 //! tokio is unavailable offline (DESIGN.md §5); the pool uses std threads
 //! and mpsc channels, which is a good fit anyway — backend execution is
@@ -7,13 +8,19 @@
 //! the natural topology (the vLLM-router-style design scaled down to
 //! frame-level requests).
 //!
+//! Each worker drains its queue without blocking, then serves at most one
+//! pending frame per stream per round, *grouped by scheduler phase*
+//! (DESIGN.md §8): streams at the same `StepPlan` phase execute as one
+//! batched backend call instead of N sequential ones.  Frames travel the
+//! queue as `Arc<[f32]>`, so dispatch clones a pointer, not the samples.
+//!
 //! `CompiledVariant` is `Send + Sync` through the `VariantExec` trait
 //! bound (the pjrt implementation asserts PJRT's thread-safety contract
 //! itself), so workers share one `Arc<CompiledVariant>` directly; all
 //! mutation on the rust side (states, metrics) stays worker-local.
 
-use std::collections::HashMap;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread;
 
@@ -21,32 +28,33 @@ use anyhow::{anyhow, Result};
 
 use super::metrics::StreamMetrics;
 use super::stream::StreamSession;
-use crate::runtime::CompiledVariant;
+use crate::runtime::{CompiledVariant, DeviceWeights};
 
 /// One frame of work for a stream.
 pub struct FrameJob {
+    /// Which stream the frame belongs to.
     pub stream_id: u64,
-    pub frame: Vec<f32>,
+    /// The frame samples, shared with the dispatcher (an `Arc` clone per
+    /// hop instead of a data copy).
+    pub frame: Arc<[f32]>,
     /// Marks the last frame of the stream (flush + report).
     pub last: bool,
 }
 
-/// Output frame handed back to the caller.
-pub struct FrameOut {
-    pub stream_id: u64,
-    pub seq: u64,
-    pub data: Vec<f32>,
-}
-
 /// Serving summary returned by [`Server::run`].
 pub struct ServeReport {
+    /// Metrics aggregated across every served stream.
     pub metrics: StreamMetrics,
+    /// Output frames per stream id.
     pub outputs: HashMap<u64, Vec<Vec<f32>>>,
+    /// Wall-clock duration of the whole run.
     pub wall_seconds: f64,
+    /// Total frames served.
     pub frames: u64,
 }
 
 impl ServeReport {
+    /// Aggregate throughput over the run, frames per second.
     pub fn throughput_fps(&self) -> f64 {
         if self.wall_seconds == 0.0 {
             0.0
@@ -64,15 +72,21 @@ pub struct Server {
     /// Run the FP idle/precompute pass between frames (on by default;
     /// turning it off measures the non-overlapped latency for Table 2).
     pub idle_precompute: bool,
+    /// Group each worker's streams by scheduler phase and execute them as
+    /// batched backend calls (on by default; turning it off forces the
+    /// one-frame-at-a-time path, the A/B baseline of `benches/serving`).
+    pub batching: bool,
 }
 
 impl Server {
+    /// A server over `engine` with `workers` worker threads (min 1).
     pub fn new(engine: Arc<CompiledVariant>, workers: usize) -> Server {
         Server {
             engine,
             workers: workers.max(1),
             queue_depth: 64,
             idle_precompute: true,
+            batching: true,
         }
     }
 
@@ -82,22 +96,36 @@ impl Server {
     /// Streams are sharded across workers by `stream_id % workers`; each
     /// worker owns its sessions exclusively (no locks on the hot path).
     pub fn run(&self, streams: &[Vec<Vec<f32>>]) -> Result<ServeReport> {
+        // One copy up front to share the frames; dispatch is copy-free.
+        let shared: Vec<Vec<Arc<[f32]>>> = streams
+            .iter()
+            .map(|s| s.iter().map(|f| Arc::from(f.as_slice())).collect())
+            .collect();
+        self.run_shared(&shared)
+    }
+
+    /// [`Server::run`] over frames that are already shared: each queued
+    /// job clones an `Arc`, never the samples.
+    pub fn run_shared(&self, streams: &[Vec<Arc<[f32]>>]) -> Result<ServeReport> {
         let t0 = std::time::Instant::now();
         let mut senders: Vec<SyncSender<FrameJob>> = Vec::new();
         let mut handles = Vec::new();
-        let (out_tx, out_rx) = sync_channel::<Result<(u64, StreamMetrics, Vec<Vec<f32>>)>>(
-            self.workers * 4,
-        );
+        // Unbounded on purpose: workers retire streams mid-run, and the
+        // dispatcher only drains results after dispatching every frame —
+        // a bounded channel here can deadlock worker against dispatcher.
+        let (out_tx, out_rx) = channel::<Result<(u64, StreamMetrics, Vec<Vec<f32>>)>>();
 
-        for w in 0..self.workers {
+        for _ in 0..self.workers {
             let (tx, rx): (SyncSender<FrameJob>, Receiver<FrameJob>) =
                 sync_channel(self.queue_depth);
             senders.push(tx);
             let engine = self.engine.clone();
             let out_tx = out_tx.clone();
             let idle = self.idle_precompute;
+            let batching = self.batching;
+            let depth = self.queue_depth;
             handles.push(thread::spawn(move || {
-                worker_loop(w, engine, rx, out_tx, idle);
+                worker_loop(engine, rx, out_tx, idle, batching, depth);
             }));
         }
         drop(out_tx);
@@ -142,72 +170,182 @@ impl Server {
     }
 }
 
+/// Per-stream serving state owned by one worker.
+struct Slot {
+    sess: StreamSession,
+    outs: Vec<Vec<f32>>,
+    /// Frames received but not yet served (at most one is served per
+    /// round so batches never reorder a stream against itself).
+    pending: VecDeque<Arc<[f32]>>,
+    /// The stream's final frame has been enqueued.
+    closing: bool,
+}
+
+/// Select disjoint `&mut` references to the slots at `idxs` (strictly
+/// increasing indices) — the safe split_at_mut dance.
+fn select_mut<'a>(slots: &'a mut [Slot], idxs: &[usize]) -> Vec<&'a mut Slot> {
+    let mut out = Vec::with_capacity(idxs.len());
+    let mut rest = slots;
+    let mut base = 0usize;
+    for &i in idxs {
+        let (_, tail) = rest.split_at_mut(i - base);
+        let (head, tail2) = tail.split_at_mut(1);
+        out.push(&mut head[0]);
+        rest = tail2;
+        base = i + 1;
+    }
+    out
+}
+
 fn worker_loop(
-    _worker_id: usize,
     cv: Arc<CompiledVariant>,
     rx: Receiver<FrameJob>,
-    out_tx: SyncSender<Result<(u64, StreamMetrics, Vec<Vec<f32>>)>>,
+    out_tx: Sender<Result<(u64, StreamMetrics, Vec<Vec<f32>>)>>,
     idle_precompute: bool,
+    batching: bool,
+    max_pending: usize,
 ) {
-    let weights = match cv.device_weights() {
+    let weights: Arc<DeviceWeights> = match cv.device_weights() {
         Ok(w) => Arc::new(w),
         Err(e) => {
             let _ = out_tx.send(Err(e));
             return;
         }
     };
-    let mut sessions: HashMap<u64, (StreamSession, Vec<Vec<f32>>)> = HashMap::new();
+    let mut slots: Vec<Slot> = Vec::new();
+    let mut index: HashMap<u64, usize> = HashMap::new();
+    let mut open = true;
+    // Undelivered frames across all slots (kept as a running counter —
+    // the drain loop checks it once per received frame).
+    let mut pending_total = 0usize;
+
+    let enqueue = |slots: &mut Vec<Slot>,
+                   index: &mut HashMap<u64, usize>,
+                   pending_total: &mut usize,
+                   job: FrameJob| {
+        let i = *index.entry(job.stream_id).or_insert_with(|| {
+            slots.push(Slot {
+                sess: StreamSession::new(job.stream_id, cv.clone(), weights.clone()),
+                outs: Vec::new(),
+                pending: VecDeque::new(),
+                closing: false,
+            });
+            slots.len() - 1
+        });
+        slots[i].pending.push_back(job.frame);
+        slots[i].closing |= job.last;
+        *pending_total += 1;
+    };
 
     loop {
-        // Idle gap: run FP precompute for any session that is waiting.
-        // try_recv first so a ready frame always wins over idle work.
-        let job = match rx.try_recv() {
-            Ok(j) => j,
-            Err(std::sync::mpsc::TryRecvError::Empty) => {
-                if idle_precompute {
-                    let mut did = false;
-                    for (sess, _) in sessions.values_mut() {
-                        match sess.idle() {
-                            Ok(worked) => did |= worked,
-                            Err(e) => {
-                                let _ = out_tx.send(Err(e));
-                                return;
-                            }
+        // 1. drain the queue without blocking — but keep at most
+        //    `max_pending` undelivered frames locally, so the bounded
+        //    channel keeps exerting backpressure on the dispatcher
+        while open && pending_total < max_pending {
+            match rx.try_recv() {
+                Ok(job) => enqueue(&mut slots, &mut index, &mut pending_total, job),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+
+        // 2. nothing pending? do idle FP work, then block for the next job
+        if pending_total == 0 {
+            if !open {
+                break;
+            }
+            if idle_precompute {
+                let mut did = false;
+                for slot in slots.iter_mut() {
+                    match slot.sess.idle() {
+                        Ok(worked) => did |= worked,
+                        Err(e) => {
+                            let _ = out_tx.send(Err(e));
+                            return;
                         }
                     }
-                    if did {
-                        continue; // re-poll the queue after useful work
+                }
+                if did {
+                    continue; // re-poll the queue after useful work
+                }
+            }
+            match rx.recv() {
+                Ok(job) => enqueue(&mut slots, &mut index, &mut pending_total, job),
+                Err(_) => open = false,
+            }
+            continue;
+        }
+
+        // 3. serve one round: at most one pending frame per stream,
+        //    grouped into phase-aligned batches
+        if batching {
+            let mut by_phase: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for (i, slot) in slots.iter().enumerate() {
+                if !slot.pending.is_empty() {
+                    by_phase
+                        .entry(slot.sess.next_plan().phase)
+                        .or_default()
+                        .push(i);
+                }
+            }
+            for (_phase, group) in by_phase {
+                let mut frames: Vec<Arc<[f32]>> = Vec::with_capacity(group.len());
+                for &i in &group {
+                    frames.push(slots[i].pending.pop_front().unwrap());
+                    pending_total -= 1;
+                }
+                let frame_refs: Vec<&[f32]> = frames.iter().map(|f| &f[..]).collect();
+                let res = {
+                    let mut selected = select_mut(&mut slots, &group);
+                    let mut sessions: Vec<&mut StreamSession> =
+                        selected.iter_mut().map(|s| &mut s.sess).collect();
+                    StreamSession::on_frame_batch(&mut sessions, &frame_refs)
+                };
+                match res {
+                    Ok(outs) => {
+                        for (&i, out) in group.iter().zip(outs) {
+                            slots[i].outs.push(out);
+                        }
+                    }
+                    Err(e) => {
+                        let _ = out_tx.send(Err(e));
+                        return;
                     }
                 }
-                match rx.recv() {
-                    Ok(j) => j,
-                    Err(_) => break, // channel closed: all frames dispatched
+            }
+        } else {
+            for slot in slots.iter_mut() {
+                if let Some(frame) = slot.pending.pop_front() {
+                    pending_total -= 1;
+                    match slot.sess.on_frame(&frame) {
+                        Ok(out) => slot.outs.push(out),
+                        Err(e) => {
+                            let _ = out_tx.send(Err(e));
+                            return;
+                        }
+                    }
                 }
             }
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
-        };
+        }
 
-        let sid = job.stream_id;
-        let entry = sessions.entry(sid).or_insert_with(|| {
-            (
-                StreamSession::new(sid, cv.clone(), weights.clone()),
-                Vec::new(),
-            )
-        });
-        match entry.0.on_frame(&job.frame) {
-            Ok(out) => entry.1.push(out),
-            Err(e) => {
-                let _ = out_tx.send(Err(e));
-                return;
+        // 4. retire streams whose last frame has been served
+        let mut i = 0;
+        while i < slots.len() {
+            if slots[i].closing && slots[i].pending.is_empty() {
+                let slot = slots.swap_remove(i);
+                index.remove(&slot.sess.id);
+                if let Some(moved) = slots.get(i) {
+                    index.insert(moved.sess.id, i);
+                }
+                let _ = out_tx.send(Ok((slot.sess.id, slot.sess.metrics.clone(), slot.outs)));
+            } else {
+                i += 1;
             }
         }
-        if job.last {
-            let (sess, outs) = sessions.remove(&sid).unwrap();
-            let _ = out_tx.send(Ok((sid, sess.metrics.clone(), outs)));
-        }
     }
+
     // flush any sessions that never saw a `last` marker
-    for (sid, (sess, outs)) in sessions {
-        let _ = out_tx.send(Ok((sid, sess.metrics.clone(), outs)));
+    for slot in slots {
+        let _ = out_tx.send(Ok((slot.sess.id, slot.sess.metrics.clone(), slot.outs)));
     }
 }

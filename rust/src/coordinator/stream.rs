@@ -5,10 +5,10 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::metrics::StreamMetrics;
-use super::scheduler::Scheduler;
+use super::scheduler::{Scheduler, StepPlan};
 use crate::runtime::{CompiledVariant, DeviceWeights, StateSet};
 
 /// MACs executed by `step_p<phase>` (layers whose rate domain ticks).
@@ -28,17 +28,21 @@ pub fn macs_stmc(manifest: &crate::runtime::Manifest) -> f64 {
 
 /// A live stream being served by one SOI variant.
 pub struct StreamSession {
+    /// Caller-chosen stream identifier.
     pub id: u64,
     engine: Arc<CompiledVariant>,
     weights: Arc<DeviceWeights>,
     states: StateSet,
     scheduler: Scheduler,
+    /// Per-stream serving metrics.
     pub metrics: StreamMetrics,
     /// FP: has the precompute pass already run for the upcoming inference?
     precomputed: bool,
 }
 
 impl StreamSession {
+    /// A fresh session (zeroed states, schedule at t = 0) over a shared
+    /// compiled variant and its prepared weights.
     pub fn new(id: u64, engine: Arc<CompiledVariant>, weights: Arc<DeviceWeights>) -> Self {
         let period = engine.manifest.period;
         // Ask the backend, not the manifest: the executor knows whether it
@@ -100,6 +104,89 @@ impl StreamSession {
             macs_stmc(&self.engine.manifest),
         );
         Ok(out)
+    }
+
+    /// The plan the next frame will execute (does not advance the
+    /// schedule).  The server's worker loop uses this to group sessions
+    /// into phase-aligned batches.
+    pub fn next_plan(&self) -> StepPlan {
+        self.scheduler.peek()
+    }
+
+    /// Serve one frame to each session of a phase-aligned group through
+    /// the backend's batched execution path (DESIGN.md §8).
+    ///
+    /// Every session must sit at the same schedule position (the worker's
+    /// phase grouping guarantees this; mismatches are an error) and share
+    /// one compiled engine.  Outputs and state updates are bit-identical
+    /// to calling [`StreamSession::on_frame`] once per session on the
+    /// native backend; metrics additionally record the batch width.
+    ///
+    /// FP variants: sessions whose idle-time `precompute` has not run yet
+    /// get it inline first (counted in arrival latency, exactly like the
+    /// per-session path), then the whole group runs one batched rest pass.
+    pub fn on_frame_batch(
+        sessions: &mut [&mut StreamSession],
+        frames: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let Some(first) = sessions.first() else {
+            return Ok(Vec::new());
+        };
+        if sessions.len() != frames.len() {
+            bail!(
+                "on_frame_batch: {} sessions but {} frames",
+                sessions.len(),
+                frames.len()
+            );
+        }
+        let plan = first.scheduler.peek();
+        let engine = first.engine.clone();
+        let weights = first.weights.clone();
+        for sess in sessions.iter() {
+            if !Arc::ptr_eq(&sess.engine, &engine) || !Arc::ptr_eq(&sess.weights, &weights) {
+                bail!(
+                    "on_frame_batch: stream {} serves a different compiled variant or weights",
+                    sess.id
+                );
+            }
+            let p = sess.scheduler.peek();
+            if p != plan {
+                bail!(
+                    "on_frame_batch: stream {} at phase {} grouped with phase {}",
+                    sess.id,
+                    p.phase,
+                    plan.phase
+                );
+            }
+        }
+        let bsz = sessions.len();
+        let start = Instant::now();
+        if plan.split {
+            for sess in sessions.iter_mut() {
+                if !sess.precomputed {
+                    engine.precompute(plan.phase, &mut sess.states, &sess.weights)?;
+                }
+            }
+        }
+        let outs = {
+            let mut states: Vec<&mut StateSet> =
+                sessions.iter_mut().map(|s| &mut s.states).collect();
+            if plan.split {
+                engine.step_rest_batch(plan.phase, frames, &mut states, &weights)?
+            } else {
+                engine.step_batch(plan.phase, frames, &mut states, &weights)?
+            }
+        };
+        let phase_macs = macs_at_phase(&engine.manifest, plan.phase);
+        let stmc = macs_stmc(&engine.manifest);
+        for sess in sessions.iter_mut() {
+            sess.scheduler.next();
+            sess.precomputed = false;
+            sess.metrics.record_arrival(start);
+            sess.metrics.record_frame(phase_macs, stmc);
+            sess.metrics.record_batch(bsz as u64, phase_macs);
+        }
+        Ok(outs)
     }
 
     /// Frames consumed so far.

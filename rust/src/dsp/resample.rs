@@ -14,13 +14,18 @@
 /// Resampling method selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
+    /// First-order interpolation, no anti-alias filter.
     Linear,
+    /// Windowed-sinc FIR (Hamming) in a polyphase structure.
     Polyphase,
+    /// Windowed-sinc FIR with a Kaiser window (β = 8.6).
     Kaiser,
+    /// Long windowed-sinc with a Blackman–Harris window (SoX VHQ-like).
     SoxLike,
 }
 
 impl Method {
+    /// Every method, in Table 3 row order.
     pub const ALL: [Method; 4] = [
         Method::Linear,
         Method::Polyphase,
@@ -28,6 +33,7 @@ impl Method {
         Method::SoxLike,
     ];
 
+    /// Display name used in tables.
     pub fn name(&self) -> &'static str {
         match self {
             Method::Linear => "Linear",

@@ -4,6 +4,7 @@
 
 use crate::util::rng::Rng;
 
+/// Sample rate shared by every synthetic generator, Hz.
 pub const FS: f64 = 16_000.0;
 
 /// Speech-like clean source: harmonic stack with a log-domain pitch random

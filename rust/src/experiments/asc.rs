@@ -40,6 +40,7 @@ fn load_measured(ctx: &Ctx) -> Result<Vec<(String, String, AscMeasured)>> {
     Ok(out)
 }
 
+/// Table 4: GhostNet acoustic-scene-classification complexity rows.
 pub fn table4(ctx: &Ctx) -> Result<()> {
     let measured = load_measured(ctx)?;
     let find = |size: &str, method: &str| {

@@ -90,6 +90,7 @@ pub fn si_snri_with_weights(
     si_snri_offline(cv, &dw, n, seed)
 }
 
+/// Mean and (population) standard deviation of a sample.
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     if xs.is_empty() {
         return (0.0, 0.0);

@@ -28,15 +28,20 @@ use crate::runtime::Runtime;
 /// native backend by default and on PJRT with `--features pjrt` +
 /// `SOI_BACKEND=pjrt` — drivers never see the difference (DESIGN.md §4).
 pub struct Ctx {
+    /// Artifact root directory (variant subdirectories).
     pub artifacts: PathBuf,
+    /// Output directory for rendered tables.
     pub results: PathBuf,
+    /// Backend-agnostic runtime shared by every driver.
     pub rt: Arc<Runtime>,
     /// Evaluation effort (number of utterances per variant).
     pub n_eval: usize,
+    /// Base RNG seed for the synthetic evaluation data.
     pub seed: u64,
 }
 
 impl Ctx {
+    /// A context over an existing artifacts directory; creates `results`.
     pub fn new(artifacts: &Path, results: &Path, n_eval: usize, seed: u64) -> Result<Ctx> {
         if !artifacts.exists() {
             bail!(
@@ -105,6 +110,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty table with a title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -113,11 +119,13 @@ impl Table {
         }
     }
 
+    /// Append one row; panics when the arity differs from the header.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Render the table as aligned markdown.
     pub fn render(&self) -> String {
         let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for r in &self.rows {
@@ -147,10 +155,12 @@ impl Table {
     }
 }
 
+/// Format with one decimal place (table cells).
 pub fn f1(v: f64) -> String {
     format!("{v:.1}")
 }
 
+/// Format with two decimal places (table cells).
 pub fn f2(v: f64) -> String {
     format!("{v:.2}")
 }

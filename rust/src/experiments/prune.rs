@@ -10,6 +10,7 @@ use crate::dsp::siggen;
 use crate::pruning;
 use crate::runtime::Weights;
 
+/// Fig. 6: pruning sweep — SOI x global magnitude pruning compose.
 pub fn fig6(ctx: &Ctx) -> Result<()> {
     let mut t = Table::new(
         "Figure 6 — pruning sweep over STMC and SOI variants",

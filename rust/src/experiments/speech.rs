@@ -45,6 +45,7 @@ fn stmc_macs_per_frame(ctx: &Ctx) -> Result<f64> {
 // Table 1 / Figure 4 — PP SOI
 // ---------------------------------------------------------------------------
 
+/// Table 1 / Fig. 4: PP SOI — complexity retain and SI-SNRi per S-CC placement.
 pub fn table1(ctx: &Ctx) -> Result<()> {
     let base = stmc_macs_per_frame(ctx)?;
     let mut t = Table::new(
@@ -125,6 +126,7 @@ fn shape_checks_pp(rows: &[Row]) -> String {
 // Table 2 / Figure 5 — FP SOI
 // ---------------------------------------------------------------------------
 
+/// Table 2 / Fig. 5: FP SOI — precomputed fraction and hidden latency.
 pub fn table2(ctx: &Ctx) -> Result<()> {
     let base = stmc_macs_per_frame(ctx)?;
     let mut t = Table::new(
@@ -200,6 +202,7 @@ fn measured_hidden_pct(ctx: &Ctx, name: &str) -> Result<f64> {
 // Table 3 — resampling baselines
 // ---------------------------------------------------------------------------
 
+/// Table 3: resampling baselines vs SOI.
 pub fn table3(ctx: &Ctx) -> Result<()> {
     let base = stmc_macs_per_frame(ctx)?;
     let cv = load_variant(ctx, "stmc")?;
@@ -291,6 +294,7 @@ pub fn table3(ctx: &Ctx) -> Result<()> {
 // Table 5 / Figure 7 — prediction length (App. B)
 // ---------------------------------------------------------------------------
 
+/// Table 5 / Fig. 7: prediction-length sweep.
 pub fn table5(ctx: &Ctx) -> Result<()> {
     let mut t = Table::new(
         "Table 5 — Strided convolutions are better for longer predictions",
@@ -329,6 +333,7 @@ pub fn table5(ctx: &Ctx) -> Result<()> {
 // Table 6 / Figure 8 — inference time + peak memory (REAL measurements)
 // ---------------------------------------------------------------------------
 
+/// Table 6 / Fig. 8: inference time and partial-state memory.
 pub fn table6(ctx: &Ctx) -> Result<()> {
     let base = stmc_macs_per_frame(ctx)?;
     let mut t = Table::new(
@@ -382,6 +387,7 @@ pub fn table6(ctx: &Ctx) -> Result<()> {
 // Table 7 / Figure 9 — interpolation (App. D)
 // ---------------------------------------------------------------------------
 
+/// Table 7 / Fig. 9: interpolation reconstruction (offline-only).
 pub fn table7(ctx: &Ctx) -> Result<()> {
     let base = stmc_macs_per_frame(ctx)?;
     let mut t = Table::new(
@@ -415,6 +421,7 @@ pub fn table7(ctx: &Ctx) -> Result<()> {
 // Tables 8/9 / Figures 10/11 — duplication vs transposed conv (App. E)
 // ---------------------------------------------------------------------------
 
+/// Table 8 / Fig. 10: extrapolation kinds, single S-CC.
 pub fn table8(ctx: &Ctx) -> Result<()> {
     let base = stmc_macs_per_frame(ctx)?;
     let mut t = Table::new(
@@ -444,6 +451,7 @@ pub fn table8(ctx: &Ctx) -> Result<()> {
     ctx.emit("table8", &body)
 }
 
+/// Table 9 / Fig. 11: extrapolation kinds, double S-CC.
 pub fn table9(ctx: &Ctx) -> Result<()> {
     let base = stmc_macs_per_frame(ctx)?;
     let mut t = Table::new(

@@ -8,6 +8,7 @@ use super::{f1, f2, Ctx, Table};
 use crate::complexity::paper;
 use crate::complexity::resnet;
 
+/// Tables 10-11: video / ResNet ASC complexity-only rows.
 pub fn table10_11(ctx: &Ctx) -> Result<()> {
     // ---- Table 10: video ----
     let mut t = Table::new(

@@ -21,6 +21,8 @@
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
+#![warn(missing_docs)]
+
 pub mod backend;
 pub mod complexity;
 pub mod coordinator;

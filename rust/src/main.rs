@@ -36,7 +36,8 @@ fn main() -> ExitCode {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["help", "no-idle-precompute"]).map_err(anyhow::Error::msg)?;
+    let args = Args::parse(argv, &["help", "no-idle-precompute", "no-batching"])
+        .map_err(anyhow::Error::msg)?;
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
 
@@ -105,7 +106,7 @@ fn run(argv: &[String]) -> Result<()> {
             let workers = args.usize_or("workers", 4).map_err(anyhow::Error::msg)?;
             let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
             serve_bench(&artifacts, name, n_streams, n_frames, workers, seed,
-                        !args.flag("no-idle-precompute"))
+                        !args.flag("no-idle-precompute"), !args.flag("no-batching"))
         }
         "denoise" => {
             let name = args.positional().get(1).context("denoise needs a variant name")?;
@@ -134,6 +135,7 @@ fn load_variant(
 }
 
 /// Multi-stream serving benchmark over synthetic utterances.
+#[allow(clippy::too_many_arguments)]
 fn serve_bench(
     artifacts: &std::path::Path,
     name: &str,
@@ -142,6 +144,7 @@ fn serve_bench(
     workers: usize,
     seed: u64,
     idle_precompute: bool,
+    batching: bool,
 ) -> Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
     let cv = Arc::new(load_variant(rt.clone(), artifacts, name)?);
@@ -166,6 +169,7 @@ fn serve_bench(
     }
     let mut server = Server::new(cv, workers);
     server.idle_precompute = idle_precompute;
+    server.batching = batching;
     let report = server.run(&streams)?;
     println!("{}", report.metrics.report());
     println!(
@@ -224,6 +228,7 @@ usage: soi <command> [options]
   info <variant>                manifest summary
   exp <table1..table10|fig4..fig11|all>   regenerate paper tables/figures
   serve <variant> [--streams N] [--frames N] [--workers N] [--no-idle-precompute]
+                  [--no-batching]
   denoise <variant> [--frames N]
 options: --artifacts DIR  --results DIR  --n-eval N  --seed S
 serve/denoise accept preset names (stmc, scc<p>, scc<p>_<q>, sscc<p>,

@@ -65,6 +65,7 @@ impl Runtime {
         self.backend.name().to_string()
     }
 
+    /// Number of devices the backend drives (1 for native).
     pub fn device_count(&self) -> usize {
         self.backend.device_count()
     }
@@ -83,6 +84,7 @@ impl Runtime {
 /// Host-side weights in manifest order (prunable).
 #[derive(Debug, Clone)]
 pub struct Weights {
+    /// Parameter tensors, in manifest `params` order.
     pub tensors: Vec<Tensor>,
 }
 
@@ -112,6 +114,7 @@ impl Weights {
         Ok(Weights { tensors })
     }
 
+    /// Total parameter count across all tensors.
     pub fn total_params(&self) -> usize {
         self.tensors.iter().map(|t| t.len()).sum()
     }
@@ -126,12 +129,15 @@ impl Weights {
 /// Per-stream partial states (host side).
 #[derive(Debug, Clone)]
 pub struct StateSet {
+    /// State tensors, in manifest `states` order.
     pub tensors: Vec<Tensor>,
 }
 
 /// One compiled SOI variant: manifest + weights + backend executor.
 pub struct CompiledVariant {
+    /// The variant's parsed manifest.
     pub manifest: Manifest,
+    /// The variant's host-side weights.
     pub weights: Weights,
     exec: Box<dyn VariantExec>,
     rt: Arc<Runtime>,
@@ -164,6 +170,7 @@ impl CompiledVariant {
         })
     }
 
+    /// The runtime this variant was compiled for.
     pub fn runtime(&self) -> &Arc<Runtime> {
         &self.rt
     }
@@ -225,6 +232,52 @@ impl CompiledVariant {
         }
         self.exec
             .step_rest(phase % self.manifest.period, frame, states, dev_weights)
+    }
+
+    /// Phase-aligned batched streaming step (DESIGN.md §8): one inference
+    /// for every stream in the batch, all at schedule position `phase`.
+    /// Backends without a batched kernel fall back to the sequential loop.
+    pub fn step_batch(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        dev_weights: &DeviceWeights,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.check_batch(frames, states.len())?;
+        self.exec
+            .step_batch(phase % self.manifest.period, frames, states, dev_weights)
+    }
+
+    /// Phase-aligned batched FP rest pass (each stream's `precompute`
+    /// must already have run for this phase).
+    pub fn step_rest_batch(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        dev_weights: &DeviceWeights,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.check_batch(frames, states.len())?;
+        self.exec
+            .step_rest_batch(phase % self.manifest.period, frames, states, dev_weights)
+    }
+
+    fn check_batch(&self, frames: &[&[f32]], n_states: usize) -> Result<()> {
+        if frames.len() != n_states {
+            bail!(
+                "batched step: {} frames for {} state sets",
+                frames.len(),
+                n_states
+            );
+        }
+        let feat = self.manifest.config.feat;
+        for frame in frames {
+            if frame.len() != feat {
+                bail!("frame has {} samples, expected {feat}", frame.len());
+            }
+        }
+        Ok(())
     }
 
     /// Run the offline (full-sequence) network over (feat, T) frames.

@@ -14,17 +14,26 @@ use crate::util::json::{self, Json};
 /// Mirror of python's `UNetConfig` (the fields rust needs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
+    /// Samples per frame (input/output feature size).
     pub feat: usize,
+    /// Encoder output channels per layer, shallow to deep.
     pub channels: Vec<usize>,
+    /// Temporal kernel width of every conv layer.
     pub kernel: usize,
+    /// Encoder positions carrying S-CC stride compression (sorted, 1-based).
     pub scc: Vec<usize>,
+    /// Encoder position of the FP shift delay line, when present.
     pub shift_pos: Option<usize>,
+    /// FP delay-line length in frames (prediction length).
     pub shift: usize,
+    /// Extrapolation kind per S-CC position ("duplicate" | "tconv").
     pub extrap: Vec<String>,
+    /// Offline-only interpolation reconstruction (App. D), when present.
     pub interp: Option<String>,
 }
 
 impl ModelConfig {
+    /// Number of encoder (== decoder) layers.
     pub fn depth(&self) -> usize {
         self.channels.len()
     }
@@ -44,6 +53,7 @@ impl ModelConfig {
         1 << self.scc.iter().filter(|&&p| p <= l).count()
     }
 
+    /// Input channels of encoder layer `l` (1-based).
     pub fn enc_in_ch(&self, l: usize) -> usize {
         if l == 1 {
             self.feat
@@ -52,14 +62,17 @@ impl ModelConfig {
         }
     }
 
+    /// Output channels of encoder layer `l`.
     pub fn enc_out_ch(&self, l: usize) -> usize {
         self.channels[l - 1]
     }
 
+    /// Output channels of decoder layer `l`.
     pub fn dec_out_ch(&self, l: usize) -> usize {
         self.channels[l.saturating_sub(2)]
     }
 
+    /// Input channels of decoder layer `l` (deep input + skip).
     pub fn dec_in_ch(&self, l: usize) -> usize {
         let d = self.depth();
         if l == d {
@@ -83,11 +96,14 @@ impl ModelConfig {
 /// One named tensor slot (state or parameter).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Slot name ("enc3.w", "shift.fifo", ...).
     pub name: String,
+    /// Tensor shape, outermost first.
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count of the slot.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -96,31 +112,46 @@ impl TensorSpec {
 /// Per-layer MAC entry (cross-checked against `complexity::unet`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerMacs {
+    /// Layer label matching the complexity engine's naming.
     pub name: String,
+    /// MACs per output frame in the layer's own rate domain.
     pub macs: u64,
+    /// The layer computes every `rate_div` input frames.
     pub rate_div: u64,
 }
 
 /// Parsed `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Variant name (artifact directory name).
     pub name: String,
+    /// Model topology the artifact was built from.
     pub config: ModelConfig,
+    /// Length of the repeating inference pattern (2^|scc|).
     pub period: usize,
+    /// Whether the variant can run online (interp variants cannot).
     pub streamable: bool,
+    /// Sequence length the offline executable was lowered for.
     pub offline_t: usize,
     /// Total f32 length of the packed state vector the step executables
     /// exchange (all per-layer states concatenated in spec order); 0 for
     /// legacy per-state artifacts.
     pub packed_states: usize,
+    /// Per-stream partial-state inventory, in canonical order.
     pub states: Vec<TensorSpec>,
+    /// Parameter inventory, in `weights.bin` order.
     pub params: Vec<TensorSpec>,
     /// key (e.g. "step_p0", "pre_p1", "offline") → hlo file name.
     pub executables: BTreeMap<String, String>,
+    /// Per-layer MAC table (cross-checked against `complexity::unet`).
     pub layer_macs: Vec<LayerMacs>,
+    /// Average MACs per frame under the SOI schedule.
     pub macs_per_frame: f64,
+    /// Fraction of full-rate work in the FP-delayed region (0 for PP).
     pub precomputed_fraction: f64,
+    /// Total parameter count.
     pub param_count: usize,
+    /// Bytes of per-stream partial state.
     pub state_bytes: usize,
     /// Build-time training metrics (si_snri etc.).
     pub train_metrics: BTreeMap<String, f64>,
@@ -163,6 +194,8 @@ impl Manifest {
         Self::from_json(&v, dir)
     }
 
+    /// Parse a manifest from its JSON document; `dir` becomes
+    /// [`Manifest::dir`] for resolving executable paths.
     pub fn from_json(v: &Json, dir: &Path) -> Result<Manifest> {
         let cfg = v.req("config").map_err(anyhow::Error::from)?;
         let usize_arr = |j: &Json| -> Result<Vec<usize>> {

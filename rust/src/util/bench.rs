@@ -9,17 +9,25 @@ use std::time::{Duration, Instant};
 
 use super::stats::percentile;
 
+/// Timing summary of one benchmarked closure.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations taken.
     pub iters: usize,
+    /// Mean wall time per iteration, ns.
     pub mean_ns: f64,
+    /// Median wall time per iteration, ns.
     pub p50_ns: f64,
+    /// 95th-percentile wall time per iteration, ns.
     pub p95_ns: f64,
+    /// Fastest iteration, ns.
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// Iterations per second implied by the mean.
     pub fn throughput_per_sec(&self) -> f64 {
         if self.mean_ns == 0.0 {
             0.0
@@ -28,6 +36,7 @@ impl BenchResult {
         }
     }
 
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
@@ -40,6 +49,7 @@ impl BenchResult {
     }
 }
 
+/// Format a nanosecond count with a human-scale unit (ns/µs/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")
@@ -58,6 +68,7 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     bench_config(name, Duration::from_millis(200), Duration::from_secs(1), 10, &mut f)
 }
 
+/// [`bench`] with explicit warmup/min-time/min-iteration settings.
 pub fn bench_config<F: FnMut()>(
     name: &str,
     warmup: Duration,

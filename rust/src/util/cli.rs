@@ -6,6 +6,7 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: `--key value` flags plus positionals.
 #[derive(Debug, Clone)]
 pub struct Args {
     flags: BTreeMap<String, String>,
@@ -42,18 +43,22 @@ impl Args {
         Ok(Args { flags, positional })
     }
 
+    /// Positional arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
 
+    /// Raw value of `--key`, when given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// String value of `--key`, or `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Integer value of `--key`, or `default`; errors on non-integers.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
         match self.get(key) {
             None => Ok(default),
@@ -61,6 +66,7 @@ impl Args {
         }
     }
 
+    /// `u64` value of `--key`, or `default`; errors on non-integers.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
         match self.get(key) {
             None => Ok(default),
@@ -68,6 +74,7 @@ impl Args {
         }
     }
 
+    /// Float value of `--key`, or `default`; errors on non-floats.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
         match self.get(key) {
             None => Ok(default),
@@ -75,6 +82,7 @@ impl Args {
         }
     }
 
+    /// True when the boolean `--key` flag was passed.
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }

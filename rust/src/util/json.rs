@@ -12,10 +12,15 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// Insertion-ordered object (order matters for weight manifests).
     Obj(Vec<(String, Json)>),
@@ -24,7 +29,9 @@ pub enum Json {
 /// Error with byte offset into the input.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the parsed input (0 for accessor errors).
     pub offset: usize,
 }
 
@@ -39,6 +46,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ---- accessors --------------------------------------------------------
 
+    /// Object field by key (None for non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -54,6 +62,7 @@ impl Json {
         })
     }
 
+    /// The string value, when this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -61,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, when this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -68,6 +78,7 @@ impl Json {
         }
     }
 
+    /// The value as an integer, when this is a whole number.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Num(n) if n.fract() == 0.0 => Some(*n as i64),
@@ -75,10 +86,12 @@ impl Json {
         }
     }
 
+    /// The value as a usize, when this is a whole non-negative number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|v| usize::try_from(v).ok())
     }
 
+    /// The boolean value, when this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -86,6 +99,7 @@ impl Json {
         }
     }
 
+    /// The elements, when this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -93,10 +107,12 @@ impl Json {
         }
     }
 
+    /// True for `null`.
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
 
+    /// The key/value pairs in document order, when this is an object.
     pub fn as_obj(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(kv) => Some(kv),
@@ -106,22 +122,26 @@ impl Json {
 
     // ---- constructors ------------------------------------------------------
 
+    /// An object from `(key, value)` pairs, preserving their order.
     pub fn obj(kv: Vec<(&str, Json)>) -> Json {
         Json::Obj(kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// An object from a sorted map (keys end up in map order).
     pub fn map(kv: BTreeMap<String, Json>) -> Json {
         Json::Obj(kv.into_iter().collect())
     }
 
     // ---- serialization ------------------------------------------------------
 
+    /// Compact single-line serialization.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);
         s
     }
 
+    /// Two-space-indented serialization with a trailing newline.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(2), 0);

@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A generator whose whole stream is determined by `seed`.
     pub fn new(seed: u64) -> Self {
         // splitmix64 expansion of the seed into the 256-bit state
         let mut sm = seed;
@@ -27,6 +28,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[0]

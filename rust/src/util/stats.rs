@@ -6,13 +6,18 @@
 /// Online mean/min/max/count accumulator.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
+    /// Number of samples added.
     pub count: u64,
+    /// Sum of all samples.
     pub sum: f64,
+    /// Smallest sample seen (`+inf` when empty).
     pub min: f64,
+    /// Largest sample seen (`-inf` when empty).
     pub max: f64,
 }
 
 impl Summary {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Summary {
             count: 0,
@@ -22,6 +27,7 @@ impl Summary {
         }
     }
 
+    /// Fold one sample in.
     pub fn add(&mut self, v: f64) {
         self.count += 1;
         self.sum += v;
@@ -29,6 +35,7 @@ impl Summary {
         self.max = self.max.max(v);
     }
 
+    /// Mean of the samples (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -56,6 +63,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Histogram {
             counts: vec![0; 64 * SUB],
@@ -84,11 +92,13 @@ impl Histogram {
         base + ((base as u128 * sub as u128) / SUB as u128) as u64
     }
 
+    /// Record one sample.
     pub fn record(&mut self, v: u64) {
         self.counts[Self::index(v)] += 1;
         self.total += 1;
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.total
     }
@@ -109,16 +119,20 @@ impl Histogram {
         Self::bucket_value(64 * SUB - 1)
     }
 
+    /// Median sample value.
     pub fn p50(&self) -> u64 {
         self.quantile(0.50)
     }
+    /// 95th-percentile sample value.
     pub fn p95(&self) -> u64 {
         self.quantile(0.95)
     }
+    /// 99th-percentile sample value.
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
     }
 
+    /// Approximate mean (bucket midpoint weighted; 0 when empty).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -132,6 +146,7 @@ impl Histogram {
         s / self.total as f64
     }
 
+    /// Fold another histogram's samples into this one.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;

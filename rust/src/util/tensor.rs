@@ -4,11 +4,14 @@
 /// Row-major dense f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Elements, flattened row-major.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// A tensor from parts; panics when `data` does not fill `shape`.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -20,6 +23,7 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// An all-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor {
@@ -28,14 +32,17 @@ impl Tensor {
         }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Size of the payload in bytes (f32 elements).
     pub fn bytes(&self) -> usize {
         self.data.len() * 4
     }
@@ -46,6 +53,7 @@ impl Tensor {
         self.data[i * self.shape[1] + j]
     }
 
+    /// 2-D setter (row-major).
     pub fn set2(&mut self, i: usize, j: usize, v: f32) {
         debug_assert_eq!(self.shape.len(), 2);
         self.data[i * self.shape[1] + j] = v;

@@ -1,0 +1,299 @@
+//! Batched == sequential equivalence (DESIGN.md §8).
+//!
+//! The native backend's `step_batch` must be *bit-identical* to N
+//! independent `step` calls — outputs and every per-stream state tensor —
+//! for every variant family `runtime::synth` can produce (pure STMC,
+//! single/double S-CC, tconv extrapolation, SS-CC, hybrid FP both ways,
+//! predictive).  Also covered: the batched FP rest pass against
+//! per-session precompute + step_rest, mixed-phase session groups batched
+//! through `StreamSession::on_frame_batch`, phase-mismatch rejection, and
+//! the server with batching on vs off.
+
+use std::sync::Arc;
+
+use soi::coordinator::{Server, StreamSession};
+use soi::runtime::{synth, CompiledVariant, ModelConfig, Runtime, StateSet};
+use soi::util::rng::Rng;
+
+fn rt() -> Arc<Runtime> {
+    Arc::new(Runtime::native())
+}
+
+fn cfg(
+    feat: usize,
+    channels: Vec<usize>,
+    scc: Vec<usize>,
+    shift_pos: Option<usize>,
+) -> ModelConfig {
+    ModelConfig {
+        feat,
+        channels,
+        kernel: 3,
+        extrap: vec!["duplicate".into(); scc.len()],
+        scc,
+        shift_pos,
+        shift: 1,
+        interp: None,
+    }
+}
+
+fn variant(c: &ModelConfig, name: &str) -> CompiledVariant {
+    let m = synth::manifest(c, name, 32);
+    let w = synth::he_weights(&m, 0xFEED);
+    CompiledVariant::with_weights(rt(), m, w).expect("compile native variant")
+}
+
+/// One small config per variant family the synthesizer knows.
+fn families() -> Vec<(&'static str, ModelConfig)> {
+    let mut tconv = cfg(4, vec![6, 8], vec![2], None);
+    tconv.extrap = vec!["tconv".into()];
+    let mut pred2 = cfg(4, vec![6, 8], vec![], Some(1));
+    pred2.shift = 2;
+    let mut spred = cfg(4, vec![5, 6, 7], vec![2], Some(1));
+    spred.shift = 2;
+    vec![
+        ("stmc", cfg(4, vec![6, 8], vec![], None)),
+        ("scc2", cfg(4, vec![5, 6, 7], vec![2], None)),
+        ("scc1_3", cfg(4, vec![5, 6, 7], vec![1, 3], None)),
+        ("scc2_tconv", tconv),
+        ("sscc2", cfg(4, vec![5, 6, 7], vec![2], Some(2))),
+        ("fp1_3", cfg(4, vec![5, 6, 7], vec![1], Some(3))),
+        ("shift_below", cfg(4, vec![5, 6, 7], vec![3], Some(1))),
+        ("pred2", pred2),
+        ("spred2", spred),
+    ]
+}
+
+fn random_streams(feat: usize, n: usize, t: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..t)
+                .map(|_| (0..feat).map(|_| rng.normal() as f32 * 0.3).collect())
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_states_identical(name: &str, a: &[StateSet], b: &[StateSet]) {
+    for (si, (sa, sb)) in a.iter().zip(b).enumerate() {
+        for (ta, tb) in sa.tensors.iter().zip(&sb.tensors) {
+            assert_eq!(ta.data, tb.data, "{name}: stream {si} state diverged");
+        }
+    }
+}
+
+#[test]
+fn step_batch_is_bit_identical_to_sequential() {
+    for (name, c) in families() {
+        let cv = variant(&c, name);
+        let dw = cv.device_weights().unwrap();
+        let n = 5usize;
+        let t = 4 * cv.manifest.period;
+        let streams = random_streams(c.feat, n, t, 0xBA7C4);
+
+        // sequential reference
+        let mut seq_states: Vec<StateSet> = (0..n).map(|_| cv.init_states()).collect();
+        let mut seq_out: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+        for tt in 0..t {
+            for si in 0..n {
+                let o = cv
+                    .step(tt, &streams[si][tt], &mut seq_states[si], &dw)
+                    .unwrap();
+                seq_out[si].push(o);
+            }
+        }
+
+        // batched
+        let mut bat_states: Vec<StateSet> = (0..n).map(|_| cv.init_states()).collect();
+        for tt in 0..t {
+            let frame_refs: Vec<&[f32]> = (0..n).map(|si| streams[si][tt].as_slice()).collect();
+            let mut st_refs: Vec<&mut StateSet> = bat_states.iter_mut().collect();
+            let outs = cv.step_batch(tt, &frame_refs, &mut st_refs, &dw).unwrap();
+            assert_eq!(outs.len(), n);
+            for (si, out) in outs.iter().enumerate() {
+                assert_eq!(
+                    out, &seq_out[si][tt],
+                    "{name}: stream {si} frame {tt} diverged"
+                );
+            }
+        }
+        assert_states_identical(name, &seq_states, &bat_states);
+    }
+}
+
+#[test]
+fn step_rest_batch_matches_sequential_fp_split() {
+    for (name, c) in families() {
+        let cv = variant(&c, name);
+        if !cv.has_fp_split() {
+            continue;
+        }
+        let dw = cv.device_weights().unwrap();
+        let n = 4usize;
+        let t = 3 * cv.manifest.period;
+        let streams = random_streams(c.feat, n, t, 0xF00D);
+
+        let mut seq_states: Vec<StateSet> = (0..n).map(|_| cv.init_states()).collect();
+        let mut seq_out: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+        for tt in 0..t {
+            for si in 0..n {
+                cv.precompute(tt, &mut seq_states[si], &dw).unwrap();
+                let o = cv
+                    .step_rest(tt, &streams[si][tt], &mut seq_states[si], &dw)
+                    .unwrap();
+                seq_out[si].push(o);
+            }
+        }
+
+        let mut bat_states: Vec<StateSet> = (0..n).map(|_| cv.init_states()).collect();
+        for tt in 0..t {
+            // precompute stays per-session (idle-time work)...
+            for st in bat_states.iter_mut() {
+                cv.precompute(tt, st, &dw).unwrap();
+            }
+            // ...the on-arrival rest pass runs batched
+            let frame_refs: Vec<&[f32]> = (0..n).map(|si| streams[si][tt].as_slice()).collect();
+            let mut st_refs: Vec<&mut StateSet> = bat_states.iter_mut().collect();
+            let outs = cv
+                .step_rest_batch(tt, &frame_refs, &mut st_refs, &dw)
+                .unwrap();
+            for (si, out) in outs.iter().enumerate() {
+                assert_eq!(
+                    out, &seq_out[si][tt],
+                    "{name}: rest pass stream {si} frame {tt} diverged"
+                );
+            }
+        }
+        assert_states_identical(name, &seq_states, &bat_states);
+    }
+}
+
+#[test]
+fn mixed_phase_groups_match_per_session_serving() {
+    // Sessions staggered to different schedule phases: grouping by
+    // next_plan().phase and batching each group must reproduce the
+    // per-session path exactly (this is what the server's worker does).
+    for (name, c) in [
+        ("scc1_3", cfg(4, vec![5, 6, 7], vec![1, 3], None)),
+        ("sscc2", cfg(4, vec![5, 6, 7], vec![2], Some(2))),
+    ] {
+        let cv = Arc::new(variant(&c, name));
+        let dw = Arc::new(cv.device_weights().unwrap());
+        let n = 5usize;
+        let t = 8usize;
+        let streams = random_streams(c.feat, n, t + n, 0x517A);
+
+        // reference: per-session serving, stream si offset by si frames
+        let mut ref_sessions: Vec<StreamSession> = (0..n)
+            .map(|si| StreamSession::new(si as u64, cv.clone(), dw.clone()))
+            .collect();
+        let mut ref_out: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+        for (si, sess) in ref_sessions.iter_mut().enumerate() {
+            for tt in 0..si {
+                sess.on_frame(&streams[si][tt]).unwrap(); // warmup offset
+            }
+        }
+        for tt in 0..t {
+            for (si, sess) in ref_sessions.iter_mut().enumerate() {
+                ref_out[si].push(sess.on_frame(&streams[si][si + tt]).unwrap());
+            }
+        }
+
+        // batched: same stagger, grouped by phase each round
+        let mut sessions: Vec<StreamSession> = (0..n)
+            .map(|si| StreamSession::new(si as u64, cv.clone(), dw.clone()))
+            .collect();
+        for (si, sess) in sessions.iter_mut().enumerate() {
+            for tt in 0..si {
+                sess.on_frame(&streams[si][tt]).unwrap();
+            }
+        }
+        let period = cv.manifest.period;
+        for tt in 0..t {
+            // snapshot the phase groups BEFORE executing any batch — a
+            // served group advances its sessions' schedulers, and
+            // re-evaluating next_plan() mid-round would serve them twice
+            let mut groups: Vec<Vec<usize>> = vec![Vec::new(); period];
+            for si in 0..n {
+                groups[sessions[si].next_plan().phase].push(si);
+            }
+            for group in groups {
+                if group.is_empty() {
+                    continue;
+                }
+                let frames: Vec<&[f32]> = group
+                    .iter()
+                    .map(|&si| streams[si][si + tt].as_slice())
+                    .collect();
+                let mut sess_refs: Vec<&mut StreamSession> = sessions
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(si, _)| group.contains(si))
+                    .map(|(_, sess)| sess)
+                    .collect();
+                let outs = StreamSession::on_frame_batch(&mut sess_refs, &frames).unwrap();
+                drop(sess_refs);
+                for (&si, out) in group.iter().zip(outs) {
+                    assert_eq!(
+                        out, ref_out[si][tt],
+                        "{name}: staggered stream {si} round {tt} diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn on_frame_batch_rejects_phase_mismatch() {
+    let c = cfg(4, vec![5, 6, 7], vec![2], None); // period 2
+    let cv = Arc::new(variant(&c, "scc2"));
+    let dw = Arc::new(cv.device_weights().unwrap());
+    let mut a = StreamSession::new(0, cv.clone(), dw.clone());
+    let mut b = StreamSession::new(1, cv.clone(), dw.clone());
+    let f = vec![0.1f32; 4];
+    a.on_frame(&f).unwrap(); // a now at phase 1, b at phase 0
+    let frames: Vec<&[f32]> = vec![&f, &f];
+    let mut sessions = [&mut a, &mut b];
+    assert!(StreamSession::on_frame_batch(&mut sessions[..], &frames).is_err());
+}
+
+#[test]
+fn server_batching_on_and_off_produce_identical_outputs() {
+    for (name, c) in [
+        ("scc2", cfg(4, vec![5, 6, 7], vec![2], None)),
+        ("sscc2", cfg(4, vec![5, 6, 7], vec![2], Some(2))),
+    ] {
+        let cv = Arc::new(variant(&c, name));
+        let n_streams = 6usize;
+        // unequal lengths so worker shards drift out of phase alignment
+        let mut rng = Rng::new(0x5EED);
+        let streams: Vec<Vec<Vec<f32>>> = (0..n_streams)
+            .map(|si| {
+                (0..(20 + 3 * si))
+                    .map(|_| (0..4).map(|_| rng.normal() as f32 * 0.3).collect())
+                    .collect()
+            })
+            .collect();
+
+        let mut batched = Server::new(cv.clone(), 2);
+        batched.batching = true;
+        let rb = batched.run(&streams).unwrap();
+
+        let mut sequential = Server::new(cv.clone(), 2);
+        sequential.batching = false;
+        let rs = sequential.run(&streams).unwrap();
+
+        assert_eq!(rb.frames, rs.frames);
+        for sid in 0..n_streams as u64 {
+            assert_eq!(
+                rb.outputs[&sid], rs.outputs[&sid],
+                "{name}: stream {sid} diverged between batched and sequential serving"
+            );
+        }
+        // the batched run actually batched something
+        assert!(rb.metrics.batch_size.count() > 0, "{name}: no batched frames");
+        assert_eq!(rs.metrics.batch_size.count(), 0);
+    }
+}
