@@ -5,19 +5,23 @@
 //! Sweeps batching {off, on} × worker count × stream count × variant
 //! family, runs out of the box on the native backend (synthesized
 //! untrained weights when `artifacts/` has not been built — throughput
-//! and latency are real).  Emits one JSON line per configuration for
-//! cross-PR comparison and rewrites `BENCH_serving.json` at the
-//! workspace root with the full sweep plus the batched-vs-sequential
-//! speedups at the largest stream count — the committed perf baseline
-//! future PRs diff against.
+//! and latency are real), then drives the adaptive serving controller
+//! (DESIGN.md §9) through a paced load spike: calm traffic → a flooded
+//! middle third → calm again, adaptive off vs on over the
+//! stmc → scc2 → sscc5 ladder.  The adaptive rows record migrations,
+//! per-variant frame counts, whether p99 stayed within the controller
+//! target, and whether every stream recovered to rung 0 (STMC) by the
+//! end.  Emits one JSON line per configuration for cross-PR comparison
+//! and rewrites `BENCH_serving.json` at the workspace root — the
+//! committed perf baseline future PRs diff against.
 //!
 //! Run: `cargo bench --bench serving`
 
 use std::sync::Arc;
 
-use soi::coordinator::Server;
+use soi::coordinator::{AdaptivePolicy, Server};
 use soi::dsp::{frames, siggen};
-use soi::runtime::{synth, CompiledVariant, Runtime};
+use soi::runtime::{synth, CompiledVariant, Runtime, VariantLadder};
 use soi::util::json::Json;
 use soi::util::rng::Rng;
 
@@ -25,6 +29,16 @@ const VARIANTS: [&str; 3] = ["stmc", "scc2", "sscc5"];
 const WORKERS: [usize; 2] = [1, 4];
 const STREAMS: [usize; 2] = [4, 16];
 const N_FRAMES: usize = 240;
+
+// Adaptive spike: calm rounds are paced (dispatch gap per round), the
+// middle third floods the queue.
+const ADAPTIVE_LADDER: [&str; 3] = ["stmc", "scc2", "sscc5"];
+const ADAPTIVE_STREAMS: usize = 8;
+const ADAPTIVE_WORKERS: usize = 2;
+const ADAPTIVE_FRAMES: usize = 480;
+const ADAPTIVE_TARGET_US: u64 = 3_000;
+const CALM_GAP_US: u64 = 700;
+const SPIKE_ROUNDS: std::ops::Range<usize> = 160..320;
 
 fn run_once(
     cv: &Arc<CompiledVariant>,
@@ -114,6 +128,76 @@ fn main() -> anyhow::Result<()> {
     for (k, s) in &speedups {
         println!("speedup[{k} @ {max_streams} streams]  {s:.2}x");
     }
+
+    // ---- adaptive controller under a load spike (DESIGN.md §9) ----
+    let mut lvars = Vec::with_capacity(ADAPTIVE_LADDER.len());
+    for name in ADAPTIVE_LADDER {
+        let (cv, _) = synth::load_or_synth(rt.clone(), root, name, 11)?;
+        lvars.push(Arc::new(cv));
+    }
+    let ladder = Arc::new(VariantLadder::new(lvars)?);
+    let spike_streams: Vec<Vec<Vec<f32>>> = (0..ADAPTIVE_STREAMS)
+        .map(|_| {
+            let (noisy, _) = siggen::denoise_pair(&mut rng, feat * ADAPTIVE_FRAMES, siggen::FS);
+            frames(&noisy, feat).0
+        })
+        .collect();
+    let gaps: Vec<u64> = (0..ADAPTIVE_FRAMES)
+        .map(|t| if SPIKE_ROUNDS.contains(&t) { 0 } else { CALM_GAP_US })
+        .collect();
+    for adaptive in [false, true] {
+        let mut server = Server::with_ladder(ladder.clone(), ADAPTIVE_WORKERS);
+        if adaptive {
+            server.adaptive = Some(AdaptivePolicy::with_target_us(ADAPTIVE_TARGET_US));
+        }
+        let report = server.run_paced(&spike_streams, &gaps)?;
+        let p99_us = report.metrics.arrival_latency.p99() as f64 / 1_000.0;
+        let recovered = report.final_levels.values().all(|&l| l == 0);
+        println!(
+            "spike[adaptive={}]  p99 {:>9}  within-target {}  migr {:>3}  \
+             recovered-to-{} {}  retain {:>5.1}%",
+            if adaptive { "on" } else { "off" },
+            soi::util::bench::fmt_ns(report.metrics.arrival_latency.p99() as f64),
+            p99_us <= ADAPTIVE_TARGET_US as f64,
+            report.metrics.migrations,
+            ADAPTIVE_LADDER[0],
+            recovered,
+            report.metrics.retain_pct(),
+        );
+        let row = Json::obj(vec![
+            ("bench", Json::Str("serving_adaptive".into())),
+            (
+                "ladder",
+                Json::Arr(ADAPTIVE_LADDER.iter().map(|n| Json::Str((*n).into())).collect()),
+            ),
+            ("adaptive", Json::Bool(adaptive)),
+            ("workers", Json::Num(ADAPTIVE_WORKERS as f64)),
+            ("streams", Json::Num(ADAPTIVE_STREAMS as f64)),
+            ("backend", Json::Str(rt.platform())),
+            ("target_p99_us", Json::Num(ADAPTIVE_TARGET_US as f64)),
+            ("p99_us", Json::Num(p99_us)),
+            ("within_target", Json::Bool(p99_us <= ADAPTIVE_TARGET_US as f64)),
+            ("migrations", Json::Num(report.metrics.migrations as f64)),
+            ("migration_macs", Json::Num(report.metrics.macs_migration)),
+            ("recovered_to_rung0", Json::Bool(recovered)),
+            ("retain_pct", Json::Num(report.metrics.retain_pct())),
+            (
+                "variant_frames",
+                Json::Obj(
+                    report
+                        .metrics
+                        .variant_frames
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        let line = row.to_string();
+        println!("{line}");
+        rows.push(row);
+    }
+
     let baseline = Json::obj(vec![
         ("bench", Json::Str("serving".into())),
         ("backend", Json::Str(rt.platform())),

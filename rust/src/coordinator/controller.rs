@@ -1,0 +1,234 @@
+//! Load controller for adaptive serving (DESIGN.md §9): watches each
+//! worker's queue depth and rolling on-arrival p99 and decides when to
+//! move that worker's streams up or down the variant ladder.
+//!
+//! The controller is pure decision logic — it never touches sessions or
+//! the ladder.  `coordinator::server` feeds it one observation per
+//! serving round and applies the rung it returns; keeping it
+//! side-effect-free is what makes the hysteresis rule directly testable
+//! (`rust/tests/adaptive_serving.rs` drives a synthetic load spike
+//! through it without a server).
+
+/// Tuning knobs for the adaptive-serving controller.
+///
+/// The hysteresis rule is three-layered so the ladder cannot flap:
+/// *patience* (a signal must persist for N consecutive rounds before a
+/// switch), *cooldown* (after any switch, decisions pause for M rounds
+/// so the new rung's effect can show up in the signals), and *headroom*
+/// (upgrading back toward quality requires p99 comfortably *below*
+/// target — `headroom · target` — not merely at it, so the upgrade
+/// itself cannot immediately re-trigger a downgrade).
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    /// On-arrival p99 target, microseconds.  The controller downgrades
+    /// (cheaper rungs) while the rolling p99 exceeds this.
+    pub target_p99_us: u64,
+    /// Queue depth (undelivered frames in the worker) treated as
+    /// overload even when latency still looks fine — queue growth is
+    /// the earlier signal under a burst.
+    pub queue_high: usize,
+    /// Queue depth at or below which the worker counts as drained
+    /// (one of the two conditions for upgrading).
+    pub queue_low: usize,
+    /// Consecutive overloaded rounds before a downgrade.
+    pub patience_down: u32,
+    /// Consecutive calm rounds before an upgrade.  Deliberately much
+    /// larger than `patience_down`: degrade fast, recover cautiously.
+    pub patience_up: u32,
+    /// Rounds after any switch during which no further decision fires.
+    pub cooldown: u32,
+    /// Rolling latency-window length, in served frames.
+    pub window: usize,
+    /// Upgrade only while the rolling p99 is below
+    /// `headroom · target_p99_us` (in (0, 1]).
+    pub headroom: f64,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        AdaptivePolicy {
+            target_p99_us: 500,
+            queue_high: 8,
+            queue_low: 1,
+            patience_down: 2,
+            patience_up: 24,
+            cooldown: 8,
+            window: 128,
+            headroom: 0.5,
+        }
+    }
+}
+
+impl AdaptivePolicy {
+    /// The default policy with a specific p99 target (the CLI's
+    /// `--target-p99-us` maps here).
+    pub fn with_target_us(target_p99_us: u64) -> AdaptivePolicy {
+        AdaptivePolicy {
+            target_p99_us,
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-worker controller state: a rolling latency window plus the
+/// hysteresis counters.
+pub struct LoadController {
+    policy: AdaptivePolicy,
+    /// Ring buffer of recent per-frame on-arrival latencies, ns.
+    lat_ns: Vec<u64>,
+    next: usize,
+    over_rounds: u32,
+    calm_rounds: u32,
+    cooldown_left: u32,
+}
+
+impl LoadController {
+    /// A controller with empty history.
+    pub fn new(policy: AdaptivePolicy) -> LoadController {
+        LoadController {
+            lat_ns: Vec::with_capacity(policy.window.max(1)),
+            policy,
+            next: 0,
+            over_rounds: 0,
+            calm_rounds: 0,
+            cooldown_left: 0,
+        }
+    }
+
+    /// Feed one served frame's on-arrival latency (for a batched round,
+    /// the batch wall time once per frame in it — what each frame
+    /// actually waited for).
+    pub fn record_latency_ns(&mut self, ns: u64) {
+        let cap = self.policy.window.max(1);
+        if self.lat_ns.len() < cap {
+            self.lat_ns.push(ns);
+        } else {
+            self.lat_ns[self.next] = ns;
+            self.next = (self.next + 1) % cap;
+        }
+    }
+
+    /// p99 over the rolling window, microseconds (0 while empty).
+    pub fn window_p99_us(&self) -> u64 {
+        if self.lat_ns.is_empty() {
+            return 0;
+        }
+        let mut v = self.lat_ns.clone();
+        v.sort_unstable();
+        let idx = ((v.len() as f64) * 0.99).ceil() as usize;
+        v[idx.saturating_sub(1).min(v.len() - 1)] / 1_000
+    }
+
+    /// One control decision per serving round.
+    ///
+    /// `queue_depth` is the worker's backlog *after* the round (frames
+    /// received but not served — 0 when the worker keeps up with
+    /// arrivals, large under overload), `rung` its streams' current
+    /// target rung, `max_rung` the ladder's last index.
+    /// Returns the new target rung when the hysteresis rule fires
+    /// (`rung + 1` = downgrade toward cheaper, `rung - 1` = upgrade
+    /// toward quality), `None` to stay put.
+    pub fn observe_round(
+        &mut self,
+        queue_depth: usize,
+        rung: usize,
+        max_rung: usize,
+    ) -> Option<usize> {
+        let p = &self.policy;
+        let p99 = self.window_p99_us();
+        let over = queue_depth >= p.queue_high || p99 > p.target_p99_us;
+        let calm =
+            queue_depth <= p.queue_low && (p99 as f64) <= p.headroom * p.target_p99_us as f64;
+        if over {
+            self.over_rounds = self.over_rounds.saturating_add(1);
+            self.calm_rounds = 0;
+        } else if calm {
+            self.calm_rounds = self.calm_rounds.saturating_add(1);
+            self.over_rounds = 0;
+        } else {
+            self.over_rounds = 0;
+            self.calm_rounds = 0;
+        }
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return None;
+        }
+        if self.over_rounds >= self.policy.patience_down && rung < max_rung {
+            self.over_rounds = 0;
+            self.calm_rounds = 0;
+            self.cooldown_left = self.policy.cooldown;
+            return Some(rung + 1);
+        }
+        if self.calm_rounds >= self.policy.patience_up && rung > 0 {
+            self.over_rounds = 0;
+            self.calm_rounds = 0;
+            self.cooldown_left = self.policy.cooldown;
+            return Some(rung - 1);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_policy() -> AdaptivePolicy {
+        AdaptivePolicy {
+            target_p99_us: 1_000,
+            queue_high: 4,
+            queue_low: 0,
+            patience_down: 2,
+            patience_up: 3,
+            cooldown: 2,
+            window: 16,
+            headroom: 0.5,
+        }
+    }
+
+    #[test]
+    fn window_p99_tracks_recent_samples() {
+        let mut c = LoadController::new(AdaptivePolicy {
+            window: 4,
+            ..quick_policy()
+        });
+        assert_eq!(c.window_p99_us(), 0);
+        for ns in [1_000_000, 2_000_000, 3_000_000, 4_000_000] {
+            c.record_latency_ns(ns);
+        }
+        assert_eq!(c.window_p99_us(), 4_000);
+        // the ring evicts the oldest sample
+        for _ in 0..4 {
+            c.record_latency_ns(500_000);
+        }
+        assert_eq!(c.window_p99_us(), 500);
+    }
+
+    #[test]
+    fn latency_above_target_counts_as_overload() {
+        let mut c = LoadController::new(quick_policy());
+        c.record_latency_ns(5_000_000); // 5 ms >> 1 ms target
+        assert_eq!(c.observe_round(0, 0, 2), None); // patience 1/2
+        assert_eq!(c.observe_round(0, 0, 2), Some(1)); // patience 2/2
+    }
+
+    #[test]
+    fn single_round_blip_is_absorbed() {
+        let mut c = LoadController::new(quick_policy());
+        assert_eq!(c.observe_round(10, 0, 2), None);
+        assert_eq!(c.observe_round(0, 0, 2), None); // calm resets patience
+        assert_eq!(c.observe_round(10, 0, 2), None); // back to 1/2
+    }
+
+    #[test]
+    fn clamps_at_ladder_ends() {
+        let mut c = LoadController::new(quick_policy());
+        for _ in 0..10 {
+            assert_eq!(c.observe_round(10, 2, 2), None, "already at max rung");
+        }
+        let mut c = LoadController::new(quick_policy());
+        for _ in 0..10 {
+            assert_eq!(c.observe_round(0, 0, 2), None, "already at rung 0");
+        }
+    }
+}

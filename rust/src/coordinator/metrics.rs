@@ -2,6 +2,7 @@
 //! accounting, and the measured precompute overlap (which the Table 2
 //! driver checks against the analytic "Precomputed %").
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::util::stats::{Histogram, Summary};
@@ -30,6 +31,17 @@ pub struct StreamMetrics {
     pub macs_batched: f64,
     /// Output quality accumulator (SI-SNR segments), if tracked.
     pub si_snr: Summary,
+    /// Warm variant migrations performed (adaptive serving, DESIGN.md
+    /// §9); each one re-primed the new rung's states from retained
+    /// history.
+    pub migrations: u64,
+    /// Analytic MACs spent replaying retained history during
+    /// migrations.  Also folded into `macs_executed`, so `retain_pct`
+    /// reflects the true cost of switching.
+    pub macs_migration: f64,
+    /// Frames served per variant name — which rung of the ladder a
+    /// stream's traffic actually ran on.
+    pub variant_frames: BTreeMap<String, u64>,
 }
 
 impl StreamMetrics {
@@ -66,6 +78,24 @@ impl StreamMetrics {
     pub fn record_batch(&mut self, bsz: u64, macs: f64) {
         self.batch_size.record(bsz);
         self.macs_batched += macs;
+    }
+
+    /// Record one warm variant migration whose history replay executed
+    /// `macs` analytic MACs (counted in `macs_executed` too — switching
+    /// is real work the retention accounting must not hide).
+    pub fn record_migration(&mut self, macs: f64) {
+        self.migrations += 1;
+        self.macs_migration += macs;
+        self.macs_executed += macs;
+    }
+
+    /// Attribute one served frame to the named variant.
+    pub fn record_variant_frame(&mut self, name: &str) {
+        if let Some(c) = self.variant_frames.get_mut(name) {
+            *c += 1;
+        } else {
+            self.variant_frames.insert(name.to_string(), 1);
+        }
     }
 
     /// Mean batch width over the frames served by the batched path
@@ -110,6 +140,15 @@ impl StreamMetrics {
         self.macs_stmc += other.macs_stmc;
         self.batch_size.merge(&other.batch_size);
         self.macs_batched += other.macs_batched;
+        self.migrations += other.migrations;
+        self.macs_migration += other.macs_migration;
+        for (name, n) in &other.variant_frames {
+            if let Some(c) = self.variant_frames.get_mut(name) {
+                *c += n;
+            } else {
+                self.variant_frames.insert(name.clone(), *n);
+            }
+        }
         if other.si_snr.count > 0 {
             self.si_snr.count += other.si_snr.count;
             self.si_snr.sum += other.si_snr.sum;
@@ -122,7 +161,7 @@ impl StreamMetrics {
     pub fn report(&self) -> String {
         format!(
             "frames {:>7}  p50 {:>9}  p95 {:>9}  p99 {:>9}  retain {:>5.1}%  \
-             hidden {:>4.1}%  batch \u{3bc} {:>4.1}",
+             hidden {:>4.1}%  batch \u{3bc} {:>4.1}  migr {:>3}",
             self.frames,
             crate::util::bench::fmt_ns(self.arrival_latency.p50() as f64),
             crate::util::bench::fmt_ns(self.arrival_latency.p95() as f64),
@@ -130,6 +169,7 @@ impl StreamMetrics {
             self.retain_pct(),
             100.0 * self.hidden_fraction(),
             self.mean_batch(),
+            self.migrations,
         )
     }
 }
@@ -186,5 +226,34 @@ mod tests {
         let m = StreamMetrics::new();
         assert_eq!(m.batched_fraction(), 0.0);
         assert_eq!(m.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn migration_accounting_counts_and_charges_macs() {
+        let mut m = StreamMetrics::new();
+        m.record_frame(100.0, 200.0);
+        m.record_migration(40.0);
+        assert_eq!(m.migrations, 1);
+        assert_eq!(m.macs_migration, 40.0);
+        // the replay cost lands in macs_executed: 140 / 200 = 70%
+        assert!((m.retain_pct() - 70.0).abs() < 1e-9);
+        let mut other = StreamMetrics::new();
+        other.record_migration(10.0);
+        m.merge(&other);
+        assert_eq!(m.migrations, 2);
+        assert_eq!(m.macs_migration, 50.0);
+    }
+
+    #[test]
+    fn variant_frames_accumulate_and_merge() {
+        let mut a = StreamMetrics::new();
+        a.record_variant_frame("stmc");
+        a.record_variant_frame("stmc");
+        a.record_variant_frame("scc2");
+        let mut b = StreamMetrics::new();
+        b.record_variant_frame("scc2");
+        a.merge(&b);
+        assert_eq!(a.variant_frames["stmc"], 2);
+        assert_eq!(a.variant_frames["scc2"], 2);
     }
 }

@@ -3,20 +3,25 @@
 //! * [`scheduler`] — the SOI inference pattern (which executable per
 //!   phase, FP precompute placement) as pure, testable logic.
 //! * [`stream`] — per-stream session: partial-state cache, schedule
-//!   execution, idle-time FP precompute, per-stream metrics, and the
+//!   execution, idle-time FP precompute, per-stream metrics, the
 //!   phase-aligned batched group entry point
-//!   ([`StreamSession::on_frame_batch`], DESIGN.md §8).
+//!   ([`StreamSession::on_frame_batch`], DESIGN.md §8), and warm
+//!   variant migration (DESIGN.md §9).
 //! * [`server`] — multi-stream worker pool with id-sharding, bounded
-//!   queues (backpressure), per-phase batched dispatch and aggregated
-//!   metrics.
-//! * [`metrics`] — latency histograms, executed-MAC and batch-width
-//!   accounting, measured precompute overlap.
+//!   queues (backpressure), per-(variant, phase) batched dispatch,
+//!   optional load-adaptive ladder serving, and aggregated metrics.
+//! * [`controller`] — the adaptive-serving load controller: per-worker
+//!   queue-depth + rolling-p99 hysteresis deciding ladder moves (§9).
+//! * [`metrics`] — latency histograms, executed-MAC, batch-width and
+//!   migration accounting, measured precompute overlap.
 
+pub mod controller;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 pub mod stream;
 
+pub use controller::{AdaptivePolicy, LoadController};
 pub use metrics::StreamMetrics;
 pub use scheduler::{Scheduler, StepPlan};
 pub use server::{ServeReport, Server};

@@ -32,12 +32,16 @@ pub struct Scheduler {
 impl Scheduler {
     /// A scheduler at t = 0; `period` must be a power of two.
     pub fn new(period: usize, fp_split: bool) -> Scheduler {
+        Self::new_at(period, fp_split, 0)
+    }
+
+    /// A scheduler resuming at inference counter `t` — variant
+    /// migration carries a stream's global frame count onto the new
+    /// rung's schedule so phases stay aligned with the stream, not with
+    /// the switch (DESIGN.md §9).
+    pub fn new_at(period: usize, fp_split: bool, t: u64) -> Scheduler {
         assert!(period.is_power_of_two() && period > 0);
-        Scheduler {
-            period,
-            fp_split,
-            t: 0,
-        }
+        Scheduler { period, fp_split, t }
     }
 
     /// Length of the repeating inference pattern.
@@ -135,6 +139,15 @@ mod tests {
             assert!(plan.split);
         }
         assert_eq!(s.t(), 8);
+    }
+
+    #[test]
+    fn new_at_resumes_mid_pattern() {
+        let mut s = Scheduler::new_at(4, false, 6);
+        assert_eq!(s.t(), 6);
+        assert_eq!(s.next().phase, 2);
+        assert_eq!(s.next().phase, 3);
+        assert_eq!(s.next().phase, 0);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Multi-stream serving: a worker pool sharding streams by id, with
-//! bounded queues for backpressure, phase-aligned batched dispatch and
+//! bounded queues for backpressure, phase-aligned batched dispatch,
+//! optional load-adaptive variant-ladder serving (DESIGN.md §9) and
 //! aggregated metrics.
 //!
 //! tokio is unavailable offline (DESIGN.md §5); the pool uses std threads
@@ -9,26 +10,37 @@
 //! frame-level requests).
 //!
 //! Each worker drains its queue without blocking, then serves at most one
-//! pending frame per stream per round, *grouped by scheduler phase*
-//! (DESIGN.md §8): streams at the same `StepPlan` phase execute as one
-//! batched backend call instead of N sequential ones.  Frames travel the
-//! queue as `Arc<[f32]>`, so dispatch clones a pointer, not the samples.
+//! pending frame per stream per round, *grouped by (ladder rung,
+//! scheduler phase)* (DESIGN.md §8–9): streams on the same compiled
+//! variant at the same `StepPlan` phase execute as one batched backend
+//! call instead of N sequential ones.  Frames travel the queue as
+//! `Arc<[f32]>`, so dispatch clones a pointer, not the samples.
+//!
+//! With a multi-rung [`VariantLadder`] and an [`AdaptivePolicy`], each
+//! worker additionally runs a [`LoadController`]: one observation per
+//! round (queue depth + rolling on-arrival p99) decides whether the
+//! worker's streams should move down the ladder (overload → cheaper
+//! variants) or back up (calm → quality); sessions migrate individually
+//! at their next phase-0 boundary with warm state re-priming, so no
+//! output glitches and no stream restarts.
 //!
 //! `CompiledVariant` is `Send + Sync` through the `VariantExec` trait
 //! bound (the pjrt implementation asserts PJRT's thread-safety contract
-//! itself), so workers share one `Arc<CompiledVariant>` directly; all
+//! itself), so workers share one `Arc<VariantLadder>` directly; all
 //! mutation on the rust side (states, metrics) stays worker-local.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::controller::{AdaptivePolicy, LoadController};
 use super::metrics::StreamMetrics;
 use super::stream::StreamSession;
-use crate::runtime::{CompiledVariant, DeviceWeights};
+use crate::runtime::{CompiledVariant, DeviceWeights, VariantLadder};
 
 /// One frame of work for a stream.
 pub struct FrameJob {
@@ -43,10 +55,14 @@ pub struct FrameJob {
 
 /// Serving summary returned by [`Server::run`].
 pub struct ServeReport {
-    /// Metrics aggregated across every served stream.
+    /// Metrics aggregated across every served stream (includes the
+    /// migration and per-variant frame counters of adaptive runs).
     pub metrics: StreamMetrics,
     /// Output frames per stream id.
     pub outputs: HashMap<u64, Vec<Vec<f32>>>,
+    /// Ladder rung each stream sat on when it retired (all 0 for
+    /// pinned, single-variant serving).
+    pub final_levels: HashMap<u64, usize>,
     /// Wall-clock duration of the whole run.
     pub wall_seconds: f64,
     /// Total frames served.
@@ -64,29 +80,44 @@ impl ServeReport {
     }
 }
 
-/// Multi-stream server over one compiled SOI variant.
+/// Multi-stream server over a ladder of compiled SOI variants (a
+/// single pinned variant is the one-rung special case).
 pub struct Server {
-    engine: Arc<CompiledVariant>,
+    ladder: Arc<VariantLadder>,
     workers: usize,
     queue_depth: usize,
     /// Run the FP idle/precompute pass between frames (on by default;
     /// turning it off measures the non-overlapped latency for Table 2).
     pub idle_precompute: bool,
-    /// Group each worker's streams by scheduler phase and execute them as
-    /// batched backend calls (on by default; turning it off forces the
-    /// one-frame-at-a-time path, the A/B baseline of `benches/serving`).
+    /// Group each worker's streams by (rung, scheduler phase) and execute
+    /// them as batched backend calls (on by default; turning it off
+    /// forces the one-frame-at-a-time path, the A/B baseline of
+    /// `benches/serving`).
     pub batching: bool,
+    /// Load-adaptive variant switching (DESIGN.md §9): when set and the
+    /// ladder has more than one rung, each worker runs a
+    /// [`LoadController`] over this policy and migrates its streams up
+    /// and down the ladder with warm state re-priming.
+    pub adaptive: Option<AdaptivePolicy>,
 }
 
 impl Server {
-    /// A server over `engine` with `workers` worker threads (min 1).
+    /// A server pinned to one compiled variant, with `workers` worker
+    /// threads (min 1).
     pub fn new(engine: Arc<CompiledVariant>, workers: usize) -> Server {
+        Self::with_ladder(Arc::new(VariantLadder::single(engine)), workers)
+    }
+
+    /// A server over a variant ladder (rung 0 serves new streams; other
+    /// rungs are reachable only when [`Server::adaptive`] is set).
+    pub fn with_ladder(ladder: Arc<VariantLadder>, workers: usize) -> Server {
         Server {
-            engine,
+            ladder,
             workers: workers.max(1),
             queue_depth: 64,
             idle_precompute: true,
             batching: true,
+            adaptive: None,
         }
     }
 
@@ -96,36 +127,56 @@ impl Server {
     /// Streams are sharded across workers by `stream_id % workers`; each
     /// worker owns its sessions exclusively (no locks on the hot path).
     pub fn run(&self, streams: &[Vec<Vec<f32>>]) -> Result<ServeReport> {
+        self.run_paced(streams, &[])
+    }
+
+    /// [`Server::run`] with paced dispatch: before dispatching round `t`
+    /// (one frame per stream), the dispatcher sleeps `gap_us[t]`
+    /// microseconds (`gap_us` shorter than the run repeats its last
+    /// entry; empty means no pacing).  This is how `benches/serving.rs`
+    /// shapes a load spike and how `soi serve --pace-us` emulates
+    /// real-time arrival.
+    pub fn run_paced(&self, streams: &[Vec<Vec<f32>>], gap_us: &[u64]) -> Result<ServeReport> {
         // One copy up front to share the frames; dispatch is copy-free.
         let shared: Vec<Vec<Arc<[f32]>>> = streams
             .iter()
             .map(|s| s.iter().map(|f| Arc::from(f.as_slice())).collect())
             .collect();
-        self.run_shared(&shared)
+        self.run_shared_paced(&shared, gap_us)
     }
 
     /// [`Server::run`] over frames that are already shared: each queued
     /// job clones an `Arc`, never the samples.
     pub fn run_shared(&self, streams: &[Vec<Arc<[f32]>>]) -> Result<ServeReport> {
+        self.run_shared_paced(streams, &[])
+    }
+
+    /// [`Server::run_paced`] over already-shared frames.
+    pub fn run_shared_paced(
+        &self,
+        streams: &[Vec<Arc<[f32]>>],
+        gap_us: &[u64],
+    ) -> Result<ServeReport> {
         let t0 = std::time::Instant::now();
         let mut senders: Vec<SyncSender<FrameJob>> = Vec::new();
         let mut handles = Vec::new();
         // Unbounded on purpose: workers retire streams mid-run, and the
         // dispatcher only drains results after dispatching every frame —
         // a bounded channel here can deadlock worker against dispatcher.
-        let (out_tx, out_rx) = channel::<Result<(u64, StreamMetrics, Vec<Vec<f32>>)>>();
+        let (out_tx, out_rx) = channel::<WorkerResult>();
 
         for _ in 0..self.workers {
             let (tx, rx): (SyncSender<FrameJob>, Receiver<FrameJob>) =
                 sync_channel(self.queue_depth);
             senders.push(tx);
-            let engine = self.engine.clone();
+            let ladder = self.ladder.clone();
             let out_tx = out_tx.clone();
             let idle = self.idle_precompute;
             let batching = self.batching;
             let depth = self.queue_depth;
+            let adaptive = self.adaptive.clone();
             handles.push(thread::spawn(move || {
-                worker_loop(engine, rx, out_tx, idle, batching, depth);
+                worker_loop(ladder, rx, out_tx, idle, batching, depth, adaptive);
             }));
         }
         drop(out_tx);
@@ -134,6 +185,10 @@ impl Server {
         // workers see concurrent traffic (not stream-after-stream).
         let max_len = streams.iter().map(|s| s.len()).max().unwrap_or(0);
         for t in 0..max_len {
+            let gap = gap_us.get(t).or(gap_us.last()).copied().unwrap_or(0);
+            if gap > 0 {
+                thread::sleep(Duration::from_micros(gap));
+            }
             for (sid, frames) in streams.iter().enumerate() {
                 if t < frames.len() {
                     let job = FrameJob {
@@ -151,12 +206,14 @@ impl Server {
 
         let mut metrics = StreamMetrics::new();
         let mut outputs = HashMap::new();
+        let mut final_levels = HashMap::new();
         let mut frames = 0u64;
         for res in out_rx {
-            let (sid, m, outs) = res?;
+            let (sid, m, outs, rung) = res?;
             frames += m.frames;
             metrics.merge(&m);
             outputs.insert(sid, outs);
+            final_levels.insert(sid, rung);
         }
         for h in handles {
             h.join().map_err(|_| anyhow!("worker panicked"))?;
@@ -164,15 +221,23 @@ impl Server {
         Ok(ServeReport {
             metrics,
             outputs,
+            final_levels,
             wall_seconds: t0.elapsed().as_secs_f64(),
             frames,
         })
     }
 }
 
+/// What a worker reports per retired stream: id, metrics, outputs and
+/// the ladder rung the stream retired on.
+type WorkerResult = Result<(u64, StreamMetrics, Vec<Vec<f32>>, usize)>;
+
 /// Per-stream serving state owned by one worker.
 struct Slot {
     sess: StreamSession,
+    /// Ladder rung the session currently serves on (kept in lockstep
+    /// with the session's engine: updated exactly when a switch lands).
+    rung: usize,
     outs: Vec<Vec<f32>>,
     /// Frames received but not yet served (at most one is served per
     /// round so batches never reorder a stream against itself).
@@ -198,20 +263,37 @@ fn select_mut<'a>(slots: &'a mut [Slot], idxs: &[usize]) -> Vec<&'a mut Slot> {
 }
 
 fn worker_loop(
-    cv: Arc<CompiledVariant>,
+    ladder: Arc<VariantLadder>,
     rx: Receiver<FrameJob>,
-    out_tx: Sender<Result<(u64, StreamMetrics, Vec<Vec<f32>>)>>,
+    out_tx: Sender<WorkerResult>,
     idle_precompute: bool,
     batching: bool,
     max_pending: usize,
+    adaptive: Option<AdaptivePolicy>,
 ) {
-    let weights: Arc<DeviceWeights> = match cv.device_weights() {
+    let weights: Arc<DeviceWeights> = match ladder.device_weights() {
         Ok(w) => Arc::new(w),
         Err(e) => {
             let _ = out_tx.send(Err(e));
             return;
         }
     };
+    let mut controller = if ladder.len() > 1 {
+        adaptive.map(LoadController::new)
+    } else {
+        None
+    };
+    // Adaptive serving retains the receptive-field history every rung
+    // could need for warm re-priming; without a controller no stream can
+    // ever migrate, so retain nothing.
+    let history_cap = if controller.is_some() {
+        ladder.max_warmup()
+    } else {
+        0
+    };
+    // The worker-wide target rung the controller steers; sessions catch
+    // up to it individually at their next phase-0 boundary.
+    let mut target_rung = 0usize;
     let mut slots: Vec<Slot> = Vec::new();
     let mut index: HashMap<u64, usize> = HashMap::new();
     let mut open = true;
@@ -224,8 +306,12 @@ fn worker_loop(
                    pending_total: &mut usize,
                    job: FrameJob| {
         let i = *index.entry(job.stream_id).or_insert_with(|| {
+            let mut sess =
+                StreamSession::new(job.stream_id, ladder.level(0).clone(), weights.clone());
+            sess.set_history_cap(history_cap);
             slots.push(Slot {
-                sess: StreamSession::new(job.stream_id, cv.clone(), weights.clone()),
+                sess,
+                rung: 0,
                 outs: Vec::new(),
                 pending: VecDeque::new(),
                 closing: false,
@@ -276,25 +362,52 @@ fn worker_loop(
             continue;
         }
 
-        // 3. serve one round: at most one pending frame per stream,
-        //    grouped into phase-aligned batches
+        // 3. adaptive control, apply side: sessions lagging behind the
+        //    controller's target rung request the switch and apply it at
+        //    their next phase-0 boundary (warm re-priming inside
+        //    `try_switch` — DESIGN.md §9)
+        if controller.is_some() {
+            for slot in slots.iter_mut() {
+                if slot.rung != target_rung {
+                    slot.sess.request_switch(ladder.level(target_rung).clone());
+                    match slot.sess.try_switch() {
+                        Ok(true) => slot.rung = target_rung,
+                        Ok(false) => {}
+                        Err(e) => {
+                            let _ = out_tx.send(Err(e));
+                            return;
+                        }
+                    }
+                } else if slot.sess.switch_pending() {
+                    // the controller reversed course before the boundary
+                    // arrived — cancel the now-stale request
+                    slot.sess.request_switch(ladder.level(slot.rung).clone());
+                }
+            }
+        }
+
+        // 4. serve one round: at most one pending frame per stream,
+        //    grouped into (rung, phase)-aligned batches — sessions mid-
+        //    switch still sit on their old rung, so every group shares
+        //    one compiled variant by construction
         if batching {
-            let mut by_phase: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            let mut by_key: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
             for (i, slot) in slots.iter().enumerate() {
                 if !slot.pending.is_empty() {
-                    by_phase
-                        .entry(slot.sess.next_plan().phase)
+                    by_key
+                        .entry((slot.rung, slot.sess.next_plan().phase))
                         .or_default()
                         .push(i);
                 }
             }
-            for (_phase, group) in by_phase {
+            for (_key, group) in by_key {
                 let mut frames: Vec<Arc<[f32]>> = Vec::with_capacity(group.len());
                 for &i in &group {
                     frames.push(slots[i].pending.pop_front().unwrap());
                     pending_total -= 1;
                 }
                 let frame_refs: Vec<&[f32]> = frames.iter().map(|f| &f[..]).collect();
+                let t_exec = Instant::now();
                 let res = {
                     let mut selected = select_mut(&mut slots, &group);
                     let mut sessions: Vec<&mut StreamSession> =
@@ -303,6 +416,12 @@ fn worker_loop(
                 };
                 match res {
                     Ok(outs) => {
+                        if let Some(ctl) = controller.as_mut() {
+                            let ns = t_exec.elapsed().as_nanos() as u64;
+                            for _ in 0..group.len() {
+                                ctl.record_latency_ns(ns);
+                            }
+                        }
                         for (&i, out) in group.iter().zip(outs) {
                             slots[i].outs.push(out);
                         }
@@ -317,8 +436,14 @@ fn worker_loop(
             for slot in slots.iter_mut() {
                 if let Some(frame) = slot.pending.pop_front() {
                     pending_total -= 1;
+                    let t_exec = Instant::now();
                     match slot.sess.on_frame(&frame) {
-                        Ok(out) => slot.outs.push(out),
+                        Ok(out) => {
+                            if let Some(ctl) = controller.as_mut() {
+                                ctl.record_latency_ns(t_exec.elapsed().as_nanos() as u64);
+                            }
+                            slot.outs.push(out);
+                        }
                         Err(e) => {
                             let _ = out_tx.send(Err(e));
                             return;
@@ -328,7 +453,18 @@ fn worker_loop(
             }
         }
 
-        // 4. retire streams whose last frame has been served
+        // 5. adaptive control, observe side: one observation per round,
+        //    *after* serving — `pending_total` is now the backlog the
+        //    round could not clear (0 when the worker keeps up, large
+        //    under overload), which makes the queue signal independent
+        //    of how many streams happen to arrive per round
+        if let Some(ctl) = controller.as_mut() {
+            if let Some(rung) = ctl.observe_round(pending_total, target_rung, ladder.len() - 1) {
+                target_rung = rung;
+            }
+        }
+
+        // 6. retire streams whose last frame has been served
         let mut i = 0;
         while i < slots.len() {
             if slots[i].closing && slots[i].pending.is_empty() {
@@ -337,7 +473,12 @@ fn worker_loop(
                 if let Some(moved) = slots.get(i) {
                     index.insert(moved.sess.id, i);
                 }
-                let _ = out_tx.send(Ok((slot.sess.id, slot.sess.metrics.clone(), slot.outs)));
+                let _ = out_tx.send(Ok((
+                    slot.sess.id,
+                    slot.sess.metrics.clone(),
+                    slot.outs,
+                    slot.rung,
+                )));
             } else {
                 i += 1;
             }
@@ -346,6 +487,11 @@ fn worker_loop(
 
     // flush any sessions that never saw a `last` marker
     for slot in slots {
-        let _ = out_tx.send(Ok((slot.sess.id, slot.sess.metrics.clone(), slot.outs)));
+        let _ = out_tx.send(Ok((
+            slot.sess.id,
+            slot.sess.metrics.clone(),
+            slot.outs,
+            slot.rung,
+        )));
     }
 }

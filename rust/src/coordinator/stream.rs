@@ -1,7 +1,10 @@
 //! Per-stream session: owns the partial-state cache, follows the SOI
-//! schedule, tracks metrics, and (for FP variants) runs the precompute
-//! pass in the idle gap between frames.
+//! schedule, tracks metrics, (for FP variants) runs the precompute pass
+//! in the idle gap between frames, and — when serving from a variant
+//! ladder — migrates to another compiled variant at a phase-0 cycle
+//! boundary with warm state re-priming (DESIGN.md §9).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -9,6 +12,7 @@ use anyhow::{bail, Result};
 
 use super::metrics::StreamMetrics;
 use super::scheduler::{Scheduler, StepPlan};
+use crate::runtime::ladder::warmup_frames;
 use crate::runtime::{CompiledVariant, DeviceWeights, StateSet};
 
 /// MACs executed by `step_p<phase>` (layers whose rate domain ticks).
@@ -38,6 +42,15 @@ pub struct StreamSession {
     pub metrics: StreamMetrics,
     /// FP: has the precompute pass already run for the upcoming inference?
     precomputed: bool,
+    /// Recent input frames, oldest first — the receptive-field history
+    /// a warm migration replays (empty while `history_cap` is 0).
+    history: VecDeque<Vec<f32>>,
+    /// Frames of history to retain (0 disables retention; the adaptive
+    /// server sets it to the ladder's `max_warmup`).
+    history_cap: usize,
+    /// Variant requested by [`StreamSession::request_switch`], applied
+    /// at the next phase-0 boundary of *its* schedule.
+    pending_switch: Option<Arc<CompiledVariant>>,
 }
 
 impl StreamSession {
@@ -57,7 +70,152 @@ impl StreamSession {
             scheduler: Scheduler::new(period, fp),
             metrics: StreamMetrics::new(),
             precomputed: false,
+            history: VecDeque::new(),
+            history_cap: 0,
+            pending_switch: None,
         }
+    }
+
+    /// Retain up to `cap` recent input frames for warm migration
+    /// (DESIGN.md §9).  0 (the default) disables retention; an adaptive
+    /// server sets the ladder's [`crate::runtime::VariantLadder::max_warmup`]
+    /// so the session can be re-primed bit-exactly on any rung.
+    pub fn set_history_cap(&mut self, cap: usize) {
+        self.history_cap = cap;
+        while self.history.len() > cap {
+            self.history.pop_front();
+        }
+    }
+
+    /// Current history-retention cap, frames.
+    pub fn history_cap(&self) -> usize {
+        self.history_cap
+    }
+
+    /// The variant this session currently serves.
+    pub fn variant_name(&self) -> &str {
+        &self.engine.manifest.name
+    }
+
+    /// The compiled variant this session currently serves.
+    pub fn engine(&self) -> &Arc<CompiledVariant> {
+        &self.engine
+    }
+
+    fn record_history(&mut self, frame: &[f32]) {
+        if self.history_cap == 0 {
+            return;
+        }
+        if self.history.len() == self.history_cap {
+            // recycle the evicted buffer — steady state allocates nothing
+            let mut buf = self.history.pop_front().unwrap();
+            buf.clear();
+            buf.extend_from_slice(frame);
+            self.history.push_back(buf);
+        } else {
+            self.history.push_back(frame.to_vec());
+        }
+    }
+
+    /// Ask the session to move to `target` at its next phase-0 cycle
+    /// boundary (see [`StreamSession::try_switch`]).  Requesting the
+    /// currently served variant cancels any pending switch.
+    pub fn request_switch(&mut self, target: Arc<CompiledVariant>) {
+        if Arc::ptr_eq(&target, &self.engine) {
+            self.pending_switch = None;
+        } else {
+            self.pending_switch = Some(target);
+        }
+    }
+
+    /// Whether a requested switch is still waiting for its boundary.
+    pub fn switch_pending(&self) -> bool {
+        self.pending_switch.is_some()
+    }
+
+    /// Apply a pending switch if the stream sits at a phase-0 boundary
+    /// of the target's schedule (`t % period == 0` — the next inference
+    /// would be the target's full update).  Returns whether the
+    /// migration happened.  Call between frames; the worker loop does
+    /// this once per round before phase grouping.
+    pub fn try_switch(&mut self) -> Result<bool> {
+        let Some(target) = self.pending_switch.clone() else {
+            return Ok(false);
+        };
+        if self.scheduler.t() % target.manifest.period as u64 != 0 {
+            return Ok(false);
+        }
+        self.migrate(&target)?;
+        Ok(true)
+    }
+
+    /// Migrate to `target` now, with warm state re-priming.  The stream
+    /// must sit at a phase-0 boundary of the target's schedule; use
+    /// [`StreamSession::request_switch`] + [`StreamSession::try_switch`]
+    /// to defer to the next boundary instead of failing.
+    ///
+    /// Re-priming replays the retained receptive-field history through
+    /// the target executable (fresh states, full-update inferences at
+    /// the stream's absolute phases, outputs discarded).  Because every
+    /// partial state is a function of at most
+    /// [`warmup_frames`]`(target)` recent inputs, the resulting states —
+    /// and therefore all subsequent outputs — are bit-identical to a
+    /// session that served the stream's entire life on the target
+    /// (`rust/tests/adaptive_serving.rs`).  Costs
+    /// `history · macs_per_frame(target)` MACs, recorded via
+    /// [`StreamMetrics::record_migration`].
+    ///
+    /// Fails when the retained history is neither the stream's full
+    /// past nor at least the target's warmup — re-priming from less
+    /// would glitch the output, which migration exists to prevent.
+    pub fn migrate_to(&mut self, target: &Arc<CompiledVariant>) -> Result<()> {
+        if self.scheduler.t() % target.manifest.period as u64 != 0 {
+            bail!(
+                "stream {}: cannot migrate to '{}' at t = {} — not a phase-0 \
+                 boundary of its period {}",
+                self.id,
+                target.manifest.name,
+                self.scheduler.t(),
+                target.manifest.period
+            );
+        }
+        self.migrate(target)
+    }
+
+    fn migrate(&mut self, target: &Arc<CompiledVariant>) -> Result<()> {
+        let t = self.scheduler.t();
+        let h = self.history.len() as u64;
+        let warm = warmup_frames(&target.manifest.config) as u64;
+        if h < t && h < warm {
+            bail!(
+                "stream {}: {} retained frames cannot re-prime '{}' (needs the \
+                 full history or at least {} frames — raise the history cap)",
+                self.id,
+                h,
+                target.manifest.name,
+                warm
+            );
+        }
+        let period = target.manifest.period as u64;
+        let mut states = target.init_states();
+        let t0 = t - h;
+        let mut replay_macs = 0.0;
+        for (i, frame) in self.history.iter().enumerate() {
+            let phase = ((t0 + i as u64) % period) as usize;
+            target.step(phase, frame, &mut states, &self.weights)?;
+            replay_macs += macs_at_phase(&target.manifest, phase);
+        }
+        if t > 0 {
+            // t == 0 is initial placement (nothing to re-prime), not a
+            // migration — don't count it
+            self.metrics.record_migration(replay_macs);
+        }
+        self.engine = target.clone();
+        self.states = states;
+        self.scheduler = Scheduler::new_at(target.manifest.period, target.has_fp_split(), t);
+        self.precomputed = false;
+        self.pending_switch = None;
+        Ok(())
     }
 
     /// Idle-time work: for FP variants, run the precompute pass for the
@@ -84,6 +242,7 @@ impl StreamSession {
     /// first (counted in arrival latency — exactly the behaviour the paper
     /// describes for back-to-back arrivals).
     pub fn on_frame(&mut self, frame: &[f32]) -> Result<Vec<f32>> {
+        self.record_history(frame);
         let plan = self.scheduler.next();
         let start = Instant::now();
         let out = if plan.split {
@@ -103,6 +262,7 @@ impl StreamSession {
             macs_at_phase(&self.engine.manifest, plan.phase),
             macs_stmc(&self.engine.manifest),
         );
+        self.metrics.record_variant_frame(&self.engine.manifest.name);
         Ok(out)
     }
 
@@ -179,12 +339,14 @@ impl StreamSession {
         };
         let phase_macs = macs_at_phase(&engine.manifest, plan.phase);
         let stmc = macs_stmc(&engine.manifest);
-        for sess in sessions.iter_mut() {
+        for (sess, frame) in sessions.iter_mut().zip(frames) {
+            sess.record_history(frame);
             sess.scheduler.next();
             sess.precomputed = false;
             sess.metrics.record_arrival(start);
             sess.metrics.record_frame(phase_macs, stmc);
             sess.metrics.record_batch(bsz as u64, phase_macs);
+            sess.metrics.record_variant_frame(&engine.manifest.name);
         }
         Ok(outs)
     }
@@ -199,6 +361,8 @@ impl StreamSession {
         self.states = self.engine.init_states();
         self.scheduler.reset();
         self.precomputed = false;
+        self.history.clear();
+        self.pending_switch = None;
     }
 
     /// Peak partial-state memory for this stream, bytes.

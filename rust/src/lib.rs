@@ -9,7 +9,8 @@
 //!   variants, AOT-lowered to HLO text at build time,
 //! * **L3** (this crate) — the streaming serving coordinator: SOI phase
 //!   scheduling, FP precompute overlap, per-stream partial-state caches,
-//!   multi-stream workers, metrics, plus every substrate the paper's
+//!   multi-stream workers, load-adaptive variant ladders with warm state
+//!   migration (DESIGN.md §9), metrics, plus every substrate the paper's
 //!   evaluation needs (complexity accounting, resamplers, pruning,
 //!   synthetic signal generation, SI-SNR).
 //!

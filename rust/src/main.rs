@@ -17,11 +17,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use soi::coordinator::Server;
+use soi::coordinator::{AdaptivePolicy, Server};
 use soi::dsp::{frames, metrics, siggen};
 use soi::experiments::{self, Ctx};
-use soi::runtime::{list_variants, synth, CompiledVariant, Manifest, Runtime};
+use soi::runtime::{list_variants, synth, CompiledVariant, Manifest, Runtime, VariantLadder};
 use soi::util::cli::Args;
+use soi::util::json::Json;
 use soi::util::rng::Rng;
 
 fn main() -> ExitCode {
@@ -36,7 +37,7 @@ fn main() -> ExitCode {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["help", "no-idle-precompute", "no-batching"])
+    let args = Args::parse(argv, &["help", "no-idle-precompute", "no-batching", "adaptive"])
         .map_err(anyhow::Error::msg)?;
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
@@ -100,13 +101,25 @@ fn run(argv: &[String]) -> Result<()> {
             experiments::run(&ctx, what)
         }
         "serve" => {
-            let name = args.positional().get(1).context("serve needs a variant name")?;
-            let n_streams = args.usize_or("streams", 8).map_err(anyhow::Error::msg)?;
-            let n_frames = args.usize_or("frames", 500).map_err(anyhow::Error::msg)?;
-            let workers = args.usize_or("workers", 4).map_err(anyhow::Error::msg)?;
-            let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
-            serve_bench(&artifacts, name, n_streams, n_frames, workers, seed,
-                        !args.flag("no-idle-precompute"), !args.flag("no-batching"))
+            let opts = ServeOpts {
+                variant: args.positional().get(1).cloned(),
+                streams: args.usize_or("streams", 8).map_err(anyhow::Error::msg)?,
+                frames: args.usize_or("frames", 500).map_err(anyhow::Error::msg)?,
+                workers: args.usize_or("workers", 4).map_err(anyhow::Error::msg)?,
+                seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+                idle_precompute: !args.flag("no-idle-precompute"),
+                batching: !args.flag("no-batching"),
+                adaptive: args.flag("adaptive"),
+                ladder: args
+                    .str_or("ladder", "stmc,scc2,sscc5")
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+                target_p99_us: args.u64_or("target-p99-us", 500).map_err(anyhow::Error::msg)?,
+                pace_us: args.u64_or("pace-us", 0).map_err(anyhow::Error::msg)?,
+            };
+            serve_bench(&artifacts, opts)
         }
         "denoise" => {
             let name = args.positional().get(1).context("denoise needs a variant name")?;
@@ -134,43 +147,94 @@ fn load_variant(
     Ok(cv)
 }
 
-/// Multi-stream serving benchmark over synthetic utterances.
-#[allow(clippy::too_many_arguments)]
-fn serve_bench(
-    artifacts: &std::path::Path,
-    name: &str,
-    n_streams: usize,
-    n_frames: usize,
+/// Options of the `serve` subcommand.
+struct ServeOpts {
+    /// Pinned variant name (required unless `adaptive`).
+    variant: Option<String>,
+    streams: usize,
+    frames: usize,
     workers: usize,
     seed: u64,
     idle_precompute: bool,
     batching: bool,
-) -> Result<()> {
+    /// Load-adaptive ladder serving (DESIGN.md §9).
+    adaptive: bool,
+    /// Ladder rung names, best quality first (`--ladder a,b,c`).
+    ladder: Vec<String>,
+    /// Controller p99 target, µs (`--target-p99-us`).
+    target_p99_us: u64,
+    /// Dispatcher gap per round, µs (`--pace-us`; 0 floods).
+    pace_us: u64,
+}
+
+/// Multi-stream serving benchmark over synthetic utterances.
+fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
-    let cv = Arc::new(load_variant(rt.clone(), artifacts, name)?);
-    let feat = cv.manifest.config.feat;
-    println!(
-        "serving '{name}' on the {} backend: {n_streams} streams x {n_frames} frames, \
-         {workers} workers, period {}, FP split: {}",
-        rt.platform(),
-        cv.manifest.period,
-        cv.has_fp_split()
-    );
-    let mut rng = Rng::new(seed);
-    let mut streams = Vec::with_capacity(n_streams);
-    let mut cleans = Vec::with_capacity(n_streams);
-    let mut noisys = Vec::with_capacity(n_streams);
-    for _ in 0..n_streams {
-        let (noisy, clean) = siggen::denoise_pair(&mut rng, feat * n_frames, siggen::FS);
+    let (mut server, names, feat) = if opts.adaptive {
+        if let Some(name) = &opts.variant {
+            bail!(
+                "serve --adaptive takes its variants from --ladder (got positional \
+                 variant '{name}'); drop it or list it in --ladder"
+            );
+        }
+        let mut variants = Vec::with_capacity(opts.ladder.len());
+        for name in &opts.ladder {
+            variants.push(Arc::new(load_variant(rt.clone(), artifacts, name)?));
+        }
+        let ladder = Arc::new(VariantLadder::new(variants)?);
+        let names: Vec<String> = ladder.names().iter().map(|s| s.to_string()).collect();
+        let feat = ladder.level(0).manifest.config.feat;
+        println!(
+            "adaptive serving on the {} backend: ladder {:?}, target p99 {} \u{3bc}s, \
+             warmup \u{2264} {} frames, {} streams x {} frames, {} workers",
+            rt.platform(),
+            names,
+            opts.target_p99_us,
+            ladder.max_warmup(),
+            opts.streams,
+            opts.frames,
+            opts.workers,
+        );
+        let mut server = Server::with_ladder(ladder, opts.workers);
+        server.adaptive = Some(AdaptivePolicy::with_target_us(opts.target_p99_us));
+        (server, names, feat)
+    } else {
+        let name = opts
+            .variant
+            .as_deref()
+            .context("serve needs a variant name (or --adaptive with --ladder)")?;
+        let cv = Arc::new(load_variant(rt.clone(), artifacts, name)?);
+        let feat = cv.manifest.config.feat;
+        println!(
+            "serving '{name}' on the {} backend: {} streams x {} frames, \
+             {} workers, period {}, FP split: {}",
+            rt.platform(),
+            opts.streams,
+            opts.frames,
+            opts.workers,
+            cv.manifest.period,
+            cv.has_fp_split()
+        );
+        (Server::new(cv, opts.workers), vec![name.to_string()], feat)
+    };
+    let mut rng = Rng::new(opts.seed);
+    let mut streams = Vec::with_capacity(opts.streams);
+    let mut cleans = Vec::with_capacity(opts.streams);
+    let mut noisys = Vec::with_capacity(opts.streams);
+    for _ in 0..opts.streams {
+        let (noisy, clean) = siggen::denoise_pair(&mut rng, feat * opts.frames, siggen::FS);
         let (cols, _) = frames(&noisy, feat);
         streams.push(cols);
         cleans.push(clean);
         noisys.push(noisy);
     }
-    let mut server = Server::new(cv, workers);
-    server.idle_precompute = idle_precompute;
-    server.batching = batching;
-    let report = server.run(&streams)?;
+    server.idle_precompute = opts.idle_precompute;
+    server.batching = opts.batching;
+    let report = if opts.pace_us > 0 {
+        server.run_paced(&streams, &[opts.pace_us])?
+    } else {
+        server.run(&streams)?
+    };
     println!("{}", report.metrics.report());
     println!(
         "throughput: {:.0} frames/s ({:.1}x realtime across streams)",
@@ -190,6 +254,52 @@ fn serve_bench(
     }
     let (m, s) = soi::experiments::eval::mean_std(&imps);
     println!("served SI-SNRi: {m:.2} ± {s:.2} dB over {} streams", imps.len());
+    // machine-readable summary (README "Operating the server" documents
+    // the columns; `variant_frames` shows which rung traffic ran on)
+    let summary = Json::obj(vec![
+        ("cmd", Json::Str("serve".into())),
+        (
+            "mode",
+            Json::Str(if opts.adaptive { "adaptive" } else { "pinned" }.into()),
+        ),
+        (
+            "ladder",
+            Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect()),
+        ),
+        (
+            "target_p99_us",
+            Json::Num(if opts.adaptive {
+                opts.target_p99_us as f64
+            } else {
+                0.0
+            }),
+        ),
+        ("pace_us", Json::Num(opts.pace_us as f64)),
+        ("workers", Json::Num(opts.workers as f64)),
+        ("streams", Json::Num(opts.streams as f64)),
+        ("frames", Json::Num(report.frames as f64)),
+        ("frames_per_s", Json::Num(report.throughput_fps())),
+        (
+            "p99_us",
+            Json::Num(report.metrics.arrival_latency.p99() as f64 / 1_000.0),
+        ),
+        ("retain_pct", Json::Num(report.metrics.retain_pct())),
+        ("mean_batch", Json::Num(report.metrics.mean_batch())),
+        ("migrations", Json::Num(report.metrics.migrations as f64)),
+        ("migration_macs", Json::Num(report.metrics.macs_migration)),
+        (
+            "variant_frames",
+            Json::Obj(
+                report
+                    .metrics
+                    .variant_frames
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    println!("{}", summary.to_string());
     Ok(())
 }
 
@@ -228,7 +338,11 @@ usage: soi <command> [options]
   info <variant>                manifest summary
   exp <table1..table10|fig4..fig11|all>   regenerate paper tables/figures
   serve <variant> [--streams N] [--frames N] [--workers N] [--no-idle-precompute]
-                  [--no-batching]
+                  [--no-batching] [--pace-us N]
+  serve --adaptive [--ladder v0,v1,..] [--target-p99-us N] [--pace-us N]
+                  load-adaptive ladder serving (default ladder
+                  stmc,scc2,sscc5); emits a JSON summary line with
+                  migration and per-variant frame counts
   denoise <variant> [--frames N]
 options: --artifacts DIR  --results DIR  --n-eval N  --seed S
 serve/denoise accept preset names (stmc, scc<p>, scc<p>_<q>, sscc<p>,

@@ -1,0 +1,253 @@
+//! Variant ladder: the ordered set of compiled SOI variants an adaptive
+//! server switches between at runtime (DESIGN.md §9).
+//!
+//! The paper's compression depth (how many S-CC stages, whether an FP
+//! shift hides work before arrival) is a *compile-time* knob in the
+//! artifact flow — but every variant of one base model shares the same
+//! parameter inventory (S-CC and the FP shift change the schedule and
+//! the state layout, never the conv weights), so a serving process can
+//! hold several compiled executables over **one** weight set and move a
+//! live stream between them.  [`VariantLadder`] is that set: rung 0 is
+//! the quality anchor (typically pure STMC), later rungs trade output
+//! quality for cheaper on-arrival work under load.
+//!
+//! [`warmup_frames`] is the other half of the migration contract: the
+//! number of most-recent input frames that fully determine every partial
+//! state of a variant (conv windows, S-CC extrapolation caches, the FP
+//! delay line).  A stream that retains that many frames can be re-primed
+//! on a different rung with *no* output glitch — replaying them through
+//! the new executable reproduces, bit for bit, the states a session
+//! serving the whole stream on that rung would hold
+//! (`rust/tests/adaptive_serving.rs` proves it).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{CompiledVariant, Runtime};
+use super::manifest::ModelConfig;
+use crate::backend::DeviceWeights;
+
+/// Frames of input history that fully determine a variant's partial
+/// states (its streaming receptive field, conservatively rounded up).
+///
+/// Derivation: along the encoder, each layer's STMC window needs
+/// `kernel` ticks of clean input at its rate `r_in(l)`, the FP delay
+/// line adds `shift · r_in(s)`, and an S-CC layer's first *fresh* fire
+/// after its window settles adds up to one firing interval
+/// (`2 · r_in(l)`); the decoder mirrors this at `r_out(l)` with the
+/// extrapolation cache adding one more fresh compute.  The per-layer
+/// settle times telescope (a layer is clean one window after its input
+/// is clean), so the total is the sum plus one period of margin.
+///
+/// The bound is deliberately loose (`kernel` ticks where `kernel - 1`
+/// suffice): replaying a few extra frames costs microseconds, while an
+/// under-estimate would break the bit-exactness guarantee migration is
+/// built on.
+pub fn warmup_frames(cfg: &ModelConfig) -> usize {
+    let k = cfg.kernel;
+    let mut frames = 0usize;
+    for l in 1..=cfg.depth() {
+        let r_in = cfg.r_in(l);
+        if cfg.shift_pos == Some(l) {
+            frames += cfg.shift * r_in;
+        }
+        frames += k * r_in;
+        let r_out = cfg.r_out(l);
+        frames += k * r_out;
+        if cfg.scc.contains(&l) {
+            // first fresh fire (encoder) + one extrapolation-cache
+            // refresh (decoder) after the windows settle
+            frames += 2 * r_in + 2 * r_out;
+        }
+    }
+    frames + cfg.period()
+}
+
+/// An ordered set of compiled SOI variants sharing one weight set.
+///
+/// Rung 0 is the quality anchor; each later rung should be cheaper on
+/// arrival (deeper S-CC compression, or an FP split that hides work in
+/// the idle gap).  The ladder validates at construction that every rung
+/// is weight-compatible — identical parameter inventories (names and
+/// shapes, in `weights.bin` order), same frame size, same backend — so
+/// one [`DeviceWeights`] upload (rung 0's) serves every rung, and a
+/// stream can migrate between rungs without touching the weights.
+///
+/// ```
+/// use std::sync::Arc;
+/// use soi::runtime::{Runtime, VariantLadder};
+///
+/// let rt = Arc::new(Runtime::native());
+/// let ladder = VariantLadder::synth(rt, &["stmc", "scc2", "sscc5"], 0xC0DE).unwrap();
+/// assert_eq!(ladder.names(), ["stmc", "scc2", "sscc5"]);
+/// // every rung can be re-primed from this many retained input frames
+/// assert!(ladder.max_warmup() > 0);
+/// ```
+pub struct VariantLadder {
+    variants: Vec<Arc<CompiledVariant>>,
+}
+
+impl VariantLadder {
+    /// A ladder over already-compiled variants, ordered best quality
+    /// first.  Fails unless every rung is weight-compatible with rung 0
+    /// (see the type docs) and streamable, and names are unique.
+    pub fn new(variants: Vec<Arc<CompiledVariant>>) -> Result<VariantLadder> {
+        let Some(first) = variants.first() else {
+            bail!("variant ladder needs at least one rung");
+        };
+        for cv in &variants {
+            let m = &cv.manifest;
+            if !m.streamable {
+                bail!("ladder rung '{}' is offline-only (not streamable)", m.name);
+            }
+            if m.config.feat != first.manifest.config.feat {
+                bail!(
+                    "ladder rung '{}' has frame size {}, rung 0 ('{}') has {}",
+                    m.name,
+                    m.config.feat,
+                    first.manifest.name,
+                    first.manifest.config.feat
+                );
+            }
+            if m.params != first.manifest.params {
+                bail!(
+                    "ladder rung '{}' has a different parameter inventory than \
+                     rung 0 ('{}'); rungs must share one weight set",
+                    m.name,
+                    first.manifest.name
+                );
+            }
+            if !Arc::ptr_eq(cv.runtime(), first.runtime()) {
+                bail!(
+                    "ladder rung '{}' was compiled for a different runtime than rung 0",
+                    m.name
+                );
+            }
+        }
+        for (i, cv) in variants.iter().enumerate() {
+            if variants[..i]
+                .iter()
+                .any(|o| o.manifest.name == cv.manifest.name)
+            {
+                bail!("ladder lists variant '{}' twice", cv.manifest.name);
+            }
+        }
+        Ok(VariantLadder { variants })
+    }
+
+    /// A trivial one-rung ladder (pinned serving — no validation, so
+    /// `Server::new` keeps accepting every variant it accepted before).
+    pub fn single(variant: Arc<CompiledVariant>) -> VariantLadder {
+        VariantLadder {
+            variants: vec![variant],
+        }
+    }
+
+    /// Synthesize and compile a ladder from preset names
+    /// ([`crate::runtime::synth::preset`] grammar), sharing one
+    /// deterministic He-initialised weight set (untrained).
+    pub fn synth(rt: Arc<Runtime>, names: &[&str], seed: u64) -> Result<VariantLadder> {
+        let mut variants = Vec::with_capacity(names.len());
+        for name in names {
+            let cfg = super::synth::preset(name)
+                .with_context(|| format!("'{name}' is not a known preset variant name"))?;
+            variants.push(Arc::new(super::synth::variant(rt.clone(), &cfg, name, seed)?));
+        }
+        Self::new(variants)
+    }
+
+    /// Number of rungs.
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    /// Whether the ladder has no rungs (never true for a constructed
+    /// ladder; provided for clippy's `len_without_is_empty`).
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+
+    /// The compiled variant at rung `i` (0 = best quality).
+    pub fn level(&self, i: usize) -> &Arc<CompiledVariant> {
+        &self.variants[i]
+    }
+
+    /// All rungs, best quality first.
+    pub fn variants(&self) -> &[Arc<CompiledVariant>] {
+        &self.variants
+    }
+
+    /// Variant names, rung order.
+    pub fn names(&self) -> Vec<&str> {
+        self.variants
+            .iter()
+            .map(|v| v.manifest.name.as_str())
+            .collect()
+    }
+
+    /// Rung index of a variant by name.
+    pub fn position(&self, name: &str) -> Option<usize> {
+        self.variants.iter().position(|v| v.manifest.name == name)
+    }
+
+    /// The shared weights, prepared for execution (rung 0's upload —
+    /// valid for every rung by the construction-time inventory check).
+    pub fn device_weights(&self) -> Result<DeviceWeights> {
+        self.variants[0].device_weights()
+    }
+
+    /// Largest [`warmup_frames`] across all rungs: a stream retaining
+    /// this many recent input frames can migrate to *any* rung with
+    /// bit-exact re-priming.
+    pub fn max_warmup(&self) -> usize {
+        self.variants
+            .iter()
+            .map(|v| warmup_frames(&v.manifest.config))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complexity::unet;
+
+    #[test]
+    fn warmup_grows_with_compression_depth() {
+        let stmc = warmup_frames(&unet::default_config(vec![], None));
+        let scc2 = warmup_frames(&unet::default_config(vec![2], None));
+        let scc2_5 = warmup_frames(&unet::default_config(vec![2, 5], None));
+        assert!(stmc > 0);
+        assert!(scc2 > stmc, "S-CC widens the receptive field");
+        assert!(scc2_5 > scc2);
+    }
+
+    #[test]
+    fn warmup_counts_the_fp_delay_line() {
+        let mut fp = unet::default_config(vec![], Some(1));
+        fp.shift = 4;
+        let base = warmup_frames(&unet::default_config(vec![], None));
+        assert_eq!(warmup_frames(&fp), base + 4);
+    }
+
+    #[test]
+    fn preset_ladder_synthesizes_and_validates() {
+        let rt = Arc::new(Runtime::native());
+        let ladder = VariantLadder::synth(rt, &["stmc", "scc2", "sscc5"], 7).unwrap();
+        assert_eq!(ladder.len(), 3);
+        assert_eq!(ladder.position("sscc5"), Some(2));
+        assert!(ladder.position("scc3").is_none());
+        assert!(ladder.max_warmup() >= warmup_frames(&ladder.level(1).manifest.config));
+        assert!(!ladder.is_empty());
+        ladder.device_weights().unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_preset_and_empty() {
+        let rt = Arc::new(Runtime::native());
+        assert!(VariantLadder::synth(rt, &["stmc", "bogus"], 7).is_err());
+        assert!(VariantLadder::new(Vec::new()).is_err());
+    }
+}

@@ -5,9 +5,11 @@
 //! runs here.
 
 pub mod engine;
+pub mod ladder;
 pub mod manifest;
 pub mod synth;
 
 pub use crate::backend::DeviceWeights;
 pub use engine::{CompiledVariant, Runtime, StateSet, Weights};
+pub use ladder::{warmup_frames, VariantLadder};
 pub use manifest::{list_variants, LayerMacs, Manifest, ModelConfig, TensorSpec};

@@ -1,0 +1,323 @@
+//! Adaptive serving (DESIGN.md §9): warm variant migration and the
+//! load controller.
+//!
+//! The load-bearing guarantee is *migration equivalence*: after a
+//! session switches rungs at a phase-0 boundary, every subsequent
+//! output must be bit-identical to a session that served the stream's
+//! entire life on the new variant — the re-priming replay (from the
+//! retained receptive-field history, see `runtime::ladder::warmup_frames`)
+//! reconstructs the target's partial states exactly.  Also covered: the
+//! controller's hysteresis through a synthetic load spike, the adaptive
+//! server end-to-end (downgrades under pressure, no-op under calm
+//! policies, batching intact), ladder validation, and paced dispatch.
+
+use std::sync::Arc;
+
+use soi::coordinator::{AdaptivePolicy, LoadController, Server, StreamSession};
+use soi::runtime::{synth, warmup_frames, CompiledVariant, ModelConfig, Runtime, VariantLadder};
+use soi::util::rng::Rng;
+
+fn cfg(scc: Vec<usize>, shift_pos: Option<usize>) -> ModelConfig {
+    ModelConfig {
+        feat: 4,
+        channels: vec![5, 6, 7],
+        kernel: 3,
+        extrap: vec!["duplicate".into(); scc.len()],
+        scc,
+        shift_pos,
+        shift: 1,
+        interp: None,
+    }
+}
+
+/// Compile a variant on `rt` with the shared deterministic weight set
+/// (same seed + identical param inventories ⇒ identical tensors, the
+/// ladder's weight-compatibility contract).
+fn variant(rt: &Arc<Runtime>, c: &ModelConfig, name: &str) -> Arc<CompiledVariant> {
+    let m = synth::manifest(c, name, 32);
+    let w = synth::he_weights(&m, 0xFEED);
+    Arc::new(CompiledVariant::with_weights(rt.clone(), m, w).expect("compile native variant"))
+}
+
+fn random_frames(feat: usize, t: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..t)
+        .map(|_| (0..feat).map(|_| rng.normal() as f32 * 0.3).collect())
+        .collect()
+}
+
+fn random_streams(feat: usize, n: usize, t: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..t)
+                .map(|_| (0..feat).map(|_| rng.normal() as f32 * 0.3).collect())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn migration_matches_fresh_session_bit_exactly() {
+    let rt = Arc::new(Runtime::native());
+    // (from, to) across families: compression deepened, removed,
+    // into FP, FP to deeper period — both directions of the ladder.
+    let pairs = [
+        ("stmc", cfg(vec![], None), "scc2", cfg(vec![2], None)),
+        ("scc2", cfg(vec![2], None), "stmc", cfg(vec![], None)),
+        ("scc2", cfg(vec![2], None), "sscc2", cfg(vec![2], Some(2))),
+        ("sscc2", cfg(vec![2], Some(2)), "scc1_3", cfg(vec![1, 3], None)),
+    ];
+    for (na, ca, nb, cb) in pairs {
+        let a = variant(&rt, &ca, na);
+        let b = variant(&rt, &cb, nb);
+        let dw = Arc::new(a.device_weights().unwrap());
+        let warm = warmup_frames(&cb);
+        let pb = b.manifest.period as u64;
+        // long: the stream outlived the retention cap (replay covers
+        // exactly `warm` frames); short: full history still retained
+        let long = {
+            let raw = warm as u64 + 9;
+            raw.div_ceil(pb) * pb
+        };
+        for t_switch in [long, 2 * pb] {
+            let t_switch = t_switch as usize;
+            let total = t_switch + 16;
+            let frames = random_frames(4, total, 0xA11CE ^ t_switch as u64);
+
+            let mut sess = StreamSession::new(0, a.clone(), dw.clone());
+            sess.set_history_cap(warm);
+            for f in &frames[..t_switch] {
+                sess.on_frame(f).unwrap();
+            }
+            sess.migrate_to(&b).unwrap();
+            assert_eq!(sess.variant_name(), nb, "{na}->{nb}");
+            assert_eq!(sess.frames_seen(), t_switch as u64, "migration keeps t");
+            let mut migrated = Vec::new();
+            for f in &frames[t_switch..] {
+                migrated.push(sess.on_frame(f).unwrap());
+            }
+
+            let mut fresh = StreamSession::new(1, b.clone(), dw.clone());
+            let mut reference = Vec::new();
+            for (tt, f) in frames.iter().enumerate() {
+                let out = fresh.on_frame(f).unwrap();
+                if tt >= t_switch {
+                    reference.push(out);
+                }
+            }
+            assert_eq!(
+                migrated, reference,
+                "{na}->{nb} at t={t_switch}: post-migration outputs diverged"
+            );
+            assert_eq!(sess.metrics.migrations, 1, "{na}->{nb}");
+            assert!(sess.metrics.macs_migration > 0.0, "{na}->{nb}");
+        }
+    }
+}
+
+#[test]
+fn migration_requires_boundary_and_history() {
+    let rt = Arc::new(Runtime::native());
+    let a = variant(&rt, &cfg(vec![], None), "stmc");
+    let b = variant(&rt, &cfg(vec![2], None), "scc2");
+    let dw = Arc::new(a.device_weights().unwrap());
+    let f = vec![0.1f32; 4];
+
+    // not at a phase-0 boundary of the target's period-2 schedule
+    let mut sess = StreamSession::new(0, a.clone(), dw.clone());
+    sess.set_history_cap(64);
+    sess.on_frame(&f).unwrap();
+    assert!(sess.migrate_to(&b).is_err(), "t = 1 is mid-cycle for period 2");
+    sess.on_frame(&f).unwrap();
+    sess.migrate_to(&b).unwrap(); // t = 2 is a boundary
+
+    // no retained history on a stream past its warmup: refuse rather
+    // than glitch
+    let warm = warmup_frames(&b.manifest.config);
+    let mut bare = StreamSession::new(1, a.clone(), dw.clone());
+    for _ in 0..2 * warm {
+        bare.on_frame(&f).unwrap();
+    }
+    assert!(bare.migrate_to(&b).is_err(), "history retention was off");
+
+    // request/try: the switch waits for the boundary, then lands
+    let mut deferred = StreamSession::new(2, a, dw);
+    deferred.set_history_cap(warm);
+    deferred.on_frame(&f).unwrap();
+    deferred.request_switch(b.clone());
+    assert!(!deferred.try_switch().unwrap(), "t = 1: must wait");
+    assert!(deferred.switch_pending());
+    deferred.on_frame(&f).unwrap();
+    assert!(deferred.try_switch().unwrap(), "t = 2: boundary reached");
+    assert!(!deferred.switch_pending());
+    assert_eq!(deferred.variant_name(), "scc2");
+}
+
+#[test]
+fn controller_rides_a_load_spike_with_hysteresis() {
+    let policy = AdaptivePolicy {
+        target_p99_us: 1_000,
+        queue_high: 4,
+        queue_low: 0,
+        patience_down: 2,
+        patience_up: 3,
+        cooldown: 2,
+        window: 16,
+        headroom: 0.5,
+    };
+    let mut ctl = LoadController::new(policy);
+    let max_rung = 2;
+    let mut rung = 0usize;
+    let mut trace = Vec::new();
+    // calm → spike (flooded queue) → calm again
+    let mut depths = vec![0usize; 10];
+    depths.extend(vec![50; 20]);
+    depths.extend(vec![0; 40]);
+    for depth in depths {
+        ctl.record_latency_ns(100_000); // 100 µs, well under target
+        if let Some(r) = ctl.observe_round(depth, rung, max_rung) {
+            trace.push((rung, r));
+            rung = r;
+        }
+    }
+    // degraded stepwise to the bottom during the spike, recovered
+    // stepwise to rung 0 after it
+    assert_eq!(trace, vec![(0, 1), (1, 2), (2, 1), (1, 0)]);
+    assert_eq!(rung, 0, "recovered to the quality anchor");
+}
+
+#[test]
+fn ladder_validation_rejects_incompatible_rungs() {
+    let rt = Arc::new(Runtime::native());
+    let stmc = variant(&rt, &cfg(vec![], None), "stmc");
+    let scc2 = variant(&rt, &cfg(vec![2], None), "scc2");
+    let sscc2 = variant(&rt, &cfg(vec![2], Some(2)), "sscc2");
+
+    // different frame size
+    let mut wide = cfg(vec![], None);
+    wide.feat = 8;
+    let wide = variant(&rt, &wide, "wide");
+    assert!(VariantLadder::new(vec![stmc.clone(), wide]).is_err());
+
+    // different parameter inventory (tconv extrapolation adds up2.*)
+    let mut tc = cfg(vec![2], None);
+    tc.extrap = vec!["tconv".into()];
+    let tc = variant(&rt, &tc, "scc2_tconv");
+    assert!(VariantLadder::new(vec![stmc.clone(), tc]).is_err());
+
+    // duplicate names
+    assert!(VariantLadder::new(vec![stmc.clone(), stmc.clone()]).is_err());
+
+    // a compatible ladder validates and exposes the warmup bound
+    let ladder = VariantLadder::new(vec![stmc, scc2.clone(), sscc2]).unwrap();
+    assert_eq!(ladder.len(), 3);
+    assert!(ladder.max_warmup() >= warmup_frames(&scc2.manifest.config));
+}
+
+#[test]
+fn adaptive_server_downgrades_under_pressure() {
+    let rt = Arc::new(Runtime::native());
+    let ladder = Arc::new(
+        VariantLadder::new(vec![
+            variant(&rt, &cfg(vec![], None), "stmc"),
+            variant(&rt, &cfg(vec![2], None), "scc2"),
+            variant(&rt, &cfg(vec![2], Some(2)), "sscc2"),
+        ])
+        .unwrap(),
+    );
+    let mut server = Server::with_ladder(ladder.clone(), 2);
+    // any traffic is overload: downgrade all the way, immediately
+    server.adaptive = Some(AdaptivePolicy {
+        target_p99_us: 0,
+        queue_high: 1,
+        queue_low: 0,
+        patience_down: 1,
+        patience_up: 1_000_000,
+        cooldown: 0,
+        window: 8,
+        headroom: 0.5,
+    });
+    let n_streams = 6;
+    let n_frames = 48;
+    let streams = random_streams(4, n_streams, n_frames, 0xD0);
+    let report = server.run(&streams).unwrap();
+
+    assert_eq!(report.frames, (n_streams * n_frames) as u64, "every frame served");
+    for sid in 0..n_streams as u64 {
+        assert_eq!(report.outputs[&sid].len(), n_frames, "stream {sid} complete");
+    }
+    assert!(report.metrics.migrations > 0, "streams migrated under load");
+    assert!(report.metrics.macs_migration > 0.0, "replay cost recorded");
+    assert!(
+        report.metrics.variant_frames.len() >= 2,
+        "traffic ran on more than one rung: {:?}",
+        report.metrics.variant_frames
+    );
+    assert!(
+        report.final_levels.values().all(|&l| l == 2),
+        "every stream ended on the cheapest rung: {:?}",
+        report.final_levels
+    );
+    // batching survived the ladder split: grouped by (rung, phase)
+    assert!(report.metrics.batch_size.count() > 0, "no batched frames");
+}
+
+#[test]
+fn calm_adaptive_server_matches_pinned_serving_bit_exactly() {
+    let rt = Arc::new(Runtime::native());
+    let stmc = variant(&rt, &cfg(vec![], None), "stmc");
+    let ladder = Arc::new(
+        VariantLadder::new(vec![
+            stmc.clone(),
+            variant(&rt, &cfg(vec![2], None), "scc2"),
+        ])
+        .unwrap(),
+    );
+    let streams = random_streams(4, 5, 30, 0xCA1);
+
+    let pinned = Server::new(stmc, 2).run(&streams).unwrap();
+
+    // a policy that can never fire: nothing is overload, upgrades from
+    // rung 0 are a no-op
+    let mut calm = Server::with_ladder(ladder.clone(), 2);
+    calm.adaptive = Some(AdaptivePolicy {
+        target_p99_us: u64::MAX / 2,
+        queue_high: usize::MAX,
+        queue_low: usize::MAX,
+        patience_down: 1_000_000,
+        patience_up: 1_000_000,
+        cooldown: 0,
+        window: 8,
+        headroom: 0.5,
+    });
+    let calm_report = calm.run(&streams).unwrap();
+
+    // a multi-rung ladder with adaptive off must also stay pinned
+    let off = Server::with_ladder(ladder, 2).run(&streams).unwrap();
+
+    for r in [&calm_report, &off] {
+        assert_eq!(r.metrics.migrations, 0);
+        assert!(r.final_levels.values().all(|&l| l == 0));
+        for sid in 0..5u64 {
+            assert_eq!(
+                r.outputs[&sid], pinned.outputs[&sid],
+                "stream {sid} diverged from pinned serving"
+            );
+        }
+    }
+}
+
+#[test]
+fn paced_dispatch_serves_every_frame_identically() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2], None), "scc2");
+    let streams = random_streams(4, 4, 24, 0xBEEF);
+    let server = Server::new(cv, 2);
+    let flooded = server.run(&streams).unwrap();
+    let paced = server.run_paced(&streams, &[200]).unwrap();
+    assert_eq!(paced.frames, flooded.frames);
+    for sid in 0..4u64 {
+        assert_eq!(paced.outputs[&sid], flooded.outputs[&sid]);
+    }
+}
