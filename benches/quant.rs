@@ -1,0 +1,131 @@
+//! f32 vs int8 serving A/B (DESIGN.md §10): per variant family, the same
+//! stream set is served twice through the batched worker pool — once on
+//! the f32 interpreter, once on the quantized int8/s16 executable — and
+//! the bench records the frames/s of both, the speedup, and the
+//! quantized output's SNR against the f32 run (same weights, so the f32
+//! outputs *are* the reference).
+//!
+//! Runs out of the box on the native backend (synthesized untrained
+//! weights when `artifacts/` has not been built — throughput and SNR vs
+//! the f32 twin are both real).  Emits one JSON line per (variant,
+//! dtype) configuration and rewrites `BENCH_quant.json` at the workspace
+//! root — the committed A/B baseline future PRs diff against.
+//!
+//! Run: `cargo bench --bench quant`
+//! Smoke: `cargo bench --bench quant -- --smoke` — tiny config, seconds
+//! not minutes, no baseline rewrite; CI runs this so the bench can never
+//! rot uncompiled.
+
+use std::sync::Arc;
+
+use soi::coordinator::Server;
+use soi::dsp::{frames, siggen};
+use soi::runtime::{synth, Runtime};
+use soi::util::json::Json;
+use soi::util::rng::Rng;
+
+const VARIANTS: [&str; 3] = ["stmc", "scc2", "sscc5"];
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let (n_streams, n_frames, workers) = if smoke { (4, 48, 2) } else { (16, 240, 4) };
+    let root = std::path::Path::new("artifacts");
+    let rt = Arc::new(Runtime::cpu()?);
+    let feat = 16;
+    let fps = siggen::FS / feat as f64;
+    let mut rng = Rng::new(23);
+    let streams: Vec<Vec<Vec<f32>>> = (0..n_streams)
+        .map(|_| {
+            let (noisy, _) = siggen::denoise_pair(&mut rng, feat * n_frames, siggen::FS);
+            frames(&noisy, feat).0
+        })
+        .collect();
+
+    println!(
+        "# quant — f32 vs int8 A/B, {n_streams} streams x {n_frames} frames, \
+         {workers} workers, batched [{} backend]{}",
+        rt.platform(),
+        if smoke { " [smoke]" } else { "" }
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for name in VARIANTS {
+        let mut f32_fps = 0.0f64;
+        let mut f32_out: Vec<Vec<Vec<f32>>> = Vec::new();
+        for dtype in ["f32", "int8"] {
+            let spec = if dtype == "f32" {
+                name.to_string()
+            } else {
+                format!("{name}:int8")
+            };
+            let (cv, _) = synth::load_or_synth(rt.clone(), root, &spec, 23)?;
+            let server = Server::new(Arc::new(cv), workers);
+            let report = server.run(&streams)?;
+            let fps_now = report.throughput_fps();
+            // int8 fidelity: SNR of every served sample against the f32
+            // run of the same streams (identical weights by construction)
+            let snr = if dtype == "f32" {
+                f32_fps = fps_now;
+                f32_out = (0..n_streams as u64)
+                    .map(|sid| report.outputs[&sid].clone())
+                    .collect();
+                f64::NAN
+            } else {
+                let reference: Vec<f32> = f32_out.iter().flatten().flatten().copied().collect();
+                let served: Vec<f32> = (0..n_streams as u64)
+                    .flat_map(|sid| report.outputs[&sid].iter().flatten().copied())
+                    .collect();
+                soi::dsp::metrics::output_snr_db(&reference, &served)
+            };
+            let speedup = if dtype == "int8" && f32_fps > 0.0 {
+                fps_now / f32_fps
+            } else {
+                1.0
+            };
+            println!(
+                "quant[{name} {dtype}]  {fps_now:>9.0} frames/s  {:>6.1}x realtime  \
+                 p99 {:>9}  speedup-vs-f32 {speedup:>5.2}x  snr {}",
+                fps_now / fps,
+                soi::util::bench::fmt_ns(report.metrics.arrival_latency.p99() as f64),
+                if snr.is_nan() { "    -".to_string() } else { format!("{snr:.1} dB") },
+            );
+            let row = Json::obj(vec![
+                ("bench", Json::Str("quant".into())),
+                ("variant", Json::Str(name.into())),
+                ("dtype", Json::Str(dtype.into())),
+                ("workers", Json::Num(workers as f64)),
+                ("streams", Json::Num(n_streams as f64)),
+                ("backend", Json::Str(rt.platform())),
+                ("frames_per_s", Json::Num(fps_now)),
+                (
+                    "p99_ns",
+                    Json::Num(report.metrics.arrival_latency.p99() as f64),
+                ),
+                ("retain_pct", Json::Num(report.metrics.retain_pct())),
+                ("speedup_vs_f32", Json::Num(speedup)),
+                (
+                    "snr_db",
+                    if snr.is_nan() { Json::Null } else { Json::Num(snr) },
+                ),
+            ]);
+            println!("{}", row.to_string());
+            rows.push(row);
+        }
+    }
+
+    if smoke {
+        println!("# smoke mode: baseline file left untouched");
+        return Ok(());
+    }
+    let baseline = Json::obj(vec![
+        ("bench", Json::Str("quant".into())),
+        ("backend", Json::Str(rt.platform())),
+        ("n_frames", Json::Num(n_frames as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    // cargo runs bench binaries with cwd at the package root (rust/);
+    // the committed baseline lives one level up at the workspace root
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_quant.json");
+    std::fs::write(&path, baseline.to_string_pretty())?;
+    println!("# wrote {}", path.display());
+    Ok(())
+}

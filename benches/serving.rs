@@ -16,6 +16,10 @@
 //! committed perf baseline future PRs diff against.
 //!
 //! Run: `cargo bench --bench serving`
+//! Smoke: `cargo bench --bench serving -- --smoke` — a tiny sweep
+//! (seconds, not minutes) that exercises every code path but leaves the
+//! committed `BENCH_serving.json` baseline untouched; CI runs this so
+//! the bench can never rot uncompiled.
 
 use std::sync::Arc;
 
@@ -25,20 +29,54 @@ use soi::runtime::{synth, CompiledVariant, Runtime, VariantLadder};
 use soi::util::json::Json;
 use soi::util::rng::Rng;
 
-const VARIANTS: [&str; 3] = ["stmc", "scc2", "sscc5"];
-const WORKERS: [usize; 2] = [1, 4];
-const STREAMS: [usize; 2] = [4, 16];
-const N_FRAMES: usize = 240;
-
 // Adaptive spike: calm rounds are paced (dispatch gap per round), the
 // middle third floods the queue.
 const ADAPTIVE_LADDER: [&str; 3] = ["stmc", "scc2", "sscc5"];
-const ADAPTIVE_STREAMS: usize = 8;
-const ADAPTIVE_WORKERS: usize = 2;
-const ADAPTIVE_FRAMES: usize = 480;
 const ADAPTIVE_TARGET_US: u64 = 3_000;
 const CALM_GAP_US: u64 = 700;
-const SPIKE_ROUNDS: std::ops::Range<usize> = 160..320;
+
+/// Sweep sizes: the full committed-baseline sweep, or the CI smoke run.
+struct Sweep {
+    variants: Vec<&'static str>,
+    workers: Vec<usize>,
+    streams: Vec<usize>,
+    n_frames: usize,
+    adaptive_streams: usize,
+    adaptive_workers: usize,
+    adaptive_frames: usize,
+    spike: std::ops::Range<usize>,
+    smoke: bool,
+}
+
+impl Sweep {
+    fn new(smoke: bool) -> Sweep {
+        if smoke {
+            Sweep {
+                variants: vec!["scc2"],
+                workers: vec![2],
+                streams: vec![4],
+                n_frames: 48,
+                adaptive_streams: 4,
+                adaptive_workers: 2,
+                adaptive_frames: 96,
+                spike: 32..64,
+                smoke,
+            }
+        } else {
+            Sweep {
+                variants: vec!["stmc", "scc2", "sscc5"],
+                workers: vec![1, 4],
+                streams: vec![4, 16],
+                n_frames: 240,
+                adaptive_streams: 8,
+                adaptive_workers: 2,
+                adaptive_frames: 480,
+                spike: 160..320,
+                smoke,
+            }
+        }
+    }
+}
 
 fn run_once(
     cv: &Arc<CompiledVariant>,
@@ -52,32 +90,36 @@ fn run_once(
 }
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let sweep = Sweep::new(smoke);
+    let n_frames = sweep.n_frames;
     let root = std::path::Path::new("artifacts");
     let rt = Arc::new(Runtime::cpu()?);
     let feat = 16;
     let fps = siggen::FS / feat as f64;
-    let max_streams = *STREAMS.iter().max().unwrap();
+    let max_streams = *sweep.streams.iter().max().unwrap();
     let mut rng = Rng::new(11);
     let all_streams: Vec<Vec<Vec<f32>>> = (0..max_streams)
         .map(|_| {
-            let (noisy, _) = siggen::denoise_pair(&mut rng, feat * N_FRAMES, siggen::FS);
+            let (noisy, _) = siggen::denoise_pair(&mut rng, feat * n_frames, siggen::FS);
             frames(&noisy, feat).0
         })
         .collect();
 
     println!(
-        "# serving — up to {max_streams} streams x {N_FRAMES} frames [{} backend]",
-        rt.platform()
+        "# serving — up to {max_streams} streams x {n_frames} frames [{} backend]{}",
+        rt.platform(),
+        if smoke { " [smoke]" } else { "" }
     );
     let mut rows: Vec<Json> = Vec::new();
     let mut speedups: Vec<(String, f64)> = Vec::new();
-    for name in VARIANTS {
+    for name in sweep.variants.iter().copied() {
         let (cv, _) = synth::load_or_synth(rt.clone(), root, name, 11)?;
         let cv = Arc::new(cv);
         // (workers, streams) -> sequential fps, for the speedup summary
         let mut seq_fps = std::collections::BTreeMap::new();
-        for workers in WORKERS {
-            for n_streams in STREAMS {
+        for workers in sweep.workers.iter().copied() {
+            for n_streams in sweep.streams.iter().copied() {
                 let streams = &all_streams[..n_streams];
                 for batching in [false, true] {
                     let report = run_once(&cv, workers, batching, streams)?;
@@ -136,17 +178,18 @@ fn main() -> anyhow::Result<()> {
         lvars.push(Arc::new(cv));
     }
     let ladder = Arc::new(VariantLadder::new(lvars)?);
-    let spike_streams: Vec<Vec<Vec<f32>>> = (0..ADAPTIVE_STREAMS)
+    let spike_streams: Vec<Vec<Vec<f32>>> = (0..sweep.adaptive_streams)
         .map(|_| {
-            let (noisy, _) = siggen::denoise_pair(&mut rng, feat * ADAPTIVE_FRAMES, siggen::FS);
+            let (noisy, _) =
+                siggen::denoise_pair(&mut rng, feat * sweep.adaptive_frames, siggen::FS);
             frames(&noisy, feat).0
         })
         .collect();
-    let gaps: Vec<u64> = (0..ADAPTIVE_FRAMES)
-        .map(|t| if SPIKE_ROUNDS.contains(&t) { 0 } else { CALM_GAP_US })
+    let gaps: Vec<u64> = (0..sweep.adaptive_frames)
+        .map(|t| if sweep.spike.contains(&t) { 0 } else { CALM_GAP_US })
         .collect();
     for adaptive in [false, true] {
-        let mut server = Server::with_ladder(ladder.clone(), ADAPTIVE_WORKERS);
+        let mut server = Server::with_ladder(ladder.clone(), sweep.adaptive_workers);
         if adaptive {
             server.adaptive = Some(AdaptivePolicy::with_target_us(ADAPTIVE_TARGET_US));
         }
@@ -171,8 +214,8 @@ fn main() -> anyhow::Result<()> {
                 Json::Arr(ADAPTIVE_LADDER.iter().map(|n| Json::Str((*n).into())).collect()),
             ),
             ("adaptive", Json::Bool(adaptive)),
-            ("workers", Json::Num(ADAPTIVE_WORKERS as f64)),
-            ("streams", Json::Num(ADAPTIVE_STREAMS as f64)),
+            ("workers", Json::Num(sweep.adaptive_workers as f64)),
+            ("streams", Json::Num(sweep.adaptive_streams as f64)),
             ("backend", Json::Str(rt.platform())),
             ("target_p99_us", Json::Num(ADAPTIVE_TARGET_US as f64)),
             ("p99_us", Json::Num(p99_us)),
@@ -198,10 +241,14 @@ fn main() -> anyhow::Result<()> {
         rows.push(row);
     }
 
+    if sweep.smoke {
+        println!("# smoke mode: baseline file left untouched");
+        return Ok(());
+    }
     let baseline = Json::obj(vec![
         ("bench", Json::Str("serving".into())),
         ("backend", Json::Str(rt.platform())),
-        ("n_frames", Json::Num(N_FRAMES as f64)),
+        ("n_frames", Json::Num(n_frames as f64)),
         ("rows", Json::Arr(rows)),
         (
             "speedup_at_max_streams",

@@ -5,9 +5,12 @@
 //!
 //! Runs out of the box on the native backend: variants are synthesized
 //! (untrained weights — irrelevant for latency) when `artifacts/` has not
-//! been built.  Besides the human-readable report, each variant emits one
-//! machine-readable JSON line (`{"bench":"step_latency",...}`) so results
-//! are comparable across PRs.
+//! been built.  Each variant is timed at both execution precisions
+//! (DESIGN.md §10): the f32 interpreter and the quantized int8/s16
+//! executable, whose JSON rows additionally carry the measured output
+//! SNR against the f32 twin.  Besides the human-readable report, each
+//! (variant, dtype) pair emits one machine-readable JSON line
+//! (`{"bench":"step_latency",...}`) so results are comparable across PRs.
 //!
 //! Run: `cargo bench --bench step_latency`
 
@@ -36,43 +39,71 @@ fn main() -> anyhow::Result<()> {
         rt.platform()
     );
     for name in ["stmc", "scc1", "scc2", "scc5", "scc7", "scc2_5", "sscc5"] {
-        let (cv, _) = synth::load_or_synth(rt.clone(), root, name, 3)?;
-        let cv = Arc::new(cv);
-        let dw = Arc::new(cv.device_weights()?);
-        let mut sess = soi::coordinator::StreamSession::new(0, cv.clone(), dw.clone());
-        let mut i = 0usize;
-        let r = bench(&format!("step[{name}]"), || {
-            sess.on_frame(&cols[i % cols.len()]).unwrap();
-            i += 1;
-        });
-        println!("{}  ({:.0} frames/s)", r.report(), r.throughput_per_sec());
-        println!(
-            "{}",
-            json_line(vec![
-                ("bench", Json::Str("step_latency".into())),
-                ("variant", Json::Str(name.into())),
-                ("backend", Json::Str(rt.platform())),
-                ("mean_ns", Json::Num(r.mean_ns)),
-                ("p50_ns", Json::Num(r.p50_ns)),
-                ("p95_ns", Json::Num(r.p95_ns)),
-                ("frames_per_s", Json::Num(r.throughput_per_sec())),
-                ("macs_per_frame", Json::Num(cv.manifest.macs_per_frame)),
-            ])
-        );
-
-        if cv.has_fp_split() {
-            let mut sess2 = soi::coordinator::StreamSession::new(1, cv, dw);
-            let mut j = 0usize;
-            let r2 = bench(&format!("step[{name}] rest-only (FP overlap)"), || {
-                sess2.idle().unwrap();
-                sess2.on_frame(&cols[j % cols.len()]).unwrap();
-                j += 1;
+        // f32 reference outputs for the int8 row's SNR measurement
+        let mut f32_out: Vec<f32> = Vec::new();
+        for dtype in ["f32", "int8"] {
+            let spec = if dtype == "f32" {
+                name.to_string()
+            } else {
+                format!("{name}:int8")
+            };
+            let (cv, _) = synth::load_or_synth(rt.clone(), root, &spec, 3)?;
+            let cv = Arc::new(cv);
+            let dw = Arc::new(cv.device_weights()?);
+            // output fidelity first (fresh session, deterministic)
+            let snr = {
+                let mut probe = soi::coordinator::StreamSession::new(9, cv.clone(), dw.clone());
+                let mut out = Vec::with_capacity(cols.len() * feat);
+                for col in &cols {
+                    out.extend(probe.on_frame(col)?);
+                }
+                if dtype == "f32" {
+                    f32_out = out;
+                    f64::NAN
+                } else {
+                    soi::dsp::metrics::output_snr_db(&f32_out, &out)
+                }
+            };
+            let mut sess = soi::coordinator::StreamSession::new(0, cv.clone(), dw.clone());
+            let mut i = 0usize;
+            let r = bench(&format!("step[{spec}]"), || {
+                sess.on_frame(&cols[i % cols.len()]).unwrap();
+                i += 1;
             });
+            println!("{}  ({:.0} frames/s)", r.report(), r.throughput_per_sec());
             println!(
-                "{}  (arrival work only: p50 {})",
-                r2.report(),
-                soi::util::bench::fmt_ns(sess2.metrics.arrival_latency.p50() as f64)
+                "{}",
+                json_line(vec![
+                    ("bench", Json::Str("step_latency".into())),
+                    ("variant", Json::Str(name.into())),
+                    ("dtype", Json::Str(dtype.into())),
+                    ("backend", Json::Str(rt.platform())),
+                    ("mean_ns", Json::Num(r.mean_ns)),
+                    ("p50_ns", Json::Num(r.p50_ns)),
+                    ("p95_ns", Json::Num(r.p95_ns)),
+                    ("frames_per_s", Json::Num(r.throughput_per_sec())),
+                    ("macs_per_frame", Json::Num(cv.manifest.macs_per_frame)),
+                    (
+                        "snr_db",
+                        if snr.is_nan() { Json::Null } else { Json::Num(snr) },
+                    ),
+                ])
             );
+
+            if cv.has_fp_split() {
+                let mut sess2 = soi::coordinator::StreamSession::new(1, cv, dw);
+                let mut j = 0usize;
+                let r2 = bench(&format!("step[{spec}] rest-only (FP overlap)"), || {
+                    sess2.idle().unwrap();
+                    sess2.on_frame(&cols[j % cols.len()]).unwrap();
+                    j += 1;
+                });
+                println!(
+                    "{}  (arrival work only: p50 {})",
+                    r2.report(),
+                    soi::util::bench::fmt_ns(sess2.metrics.arrival_latency.p50() as f64)
+                );
+            }
         }
     }
     Ok(())

@@ -15,6 +15,7 @@ inputs at times ``<= t`` (left zero-padding of ``K - 1``).
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def causal_pad(x: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -161,3 +162,109 @@ def conv_step(x_t: jnp.ndarray, state: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarr
 def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Row-major dense layer: x (N,) @ w (M, N) -> (M,)."""
     return w @ x + b
+
+
+# ----------------------------------------------------------------------------
+# Int8 reference kernels — the python mirror of ``rust/src/quant`` (the
+# quantized execution subsystem, DESIGN.md §10).  These are plain numpy
+# (integer/LUT semantics, exact f32 accumulation order) so they stay
+# bit-comparable to the rust kernels; the golden vectors baked into
+# ``rust/tests/cross_check.rs`` are generated from exactly these
+# functions, keeping the python mirror the validation path on
+# toolchain-less images.
+# ----------------------------------------------------------------------------
+
+Q_W = 127       # symmetric int8 weight code range
+Q_ACT = 32767   # symmetric s16 activation code range
+
+
+def _round_half_away(x):
+    """Mirror rust's ``f32::round`` (half away from zero); numpy's
+    ``round`` rounds half to even and must not be used here."""
+    x = np.asarray(x)
+    return np.where(x >= 0, np.floor(x + 0.5), np.ceil(x - 0.5))
+
+
+def int8_quantize_weights(w, group=None):
+    """Per-channel, group-refined symmetric int8 weight quantization.
+
+    Mirrors ``quant::qtensor::quantize_weights``: ``w`` is a
+    ``(C_out, C_in, K)`` f32 kernel; each run of ``group`` trailing
+    elements (default ``K`` — one group per (out, in) pair) shares one
+    scale ``max|group| / 127`` (1.0 for an all-zero group) and codes
+    ``clamp(round(w / s), -127, 127)``.
+
+    Returns ``(q, scales)``: ``q`` int8 with ``w``'s shape, ``scales``
+    f32 of shape ``(w.size // group,)`` in row-major group order.
+    """
+    w = np.asarray(w, np.float32)
+    if group is None:
+        group = w.shape[-1]
+    flat = w.reshape(-1, group)
+    maxabs = np.abs(flat).max(axis=1)
+    scales = np.where(maxabs == 0.0, np.float32(1.0), maxabs / np.float32(Q_W)).astype(
+        np.float32
+    )
+    q = np.clip(_round_half_away(flat / scales[:, None]), -Q_W, Q_W).astype(np.int8)
+    return q.reshape(w.shape), scales
+
+
+def s16_quantize(v, scale):
+    """s16 activation quantization: ``clamp(round(v / s), ±32767)``
+    (mirrors ``quant::kernels::quantize_act`` / ``requant``)."""
+    v = np.asarray(v, np.float32)
+    q = _round_half_away(v / np.float32(scale))
+    return np.clip(q, -Q_ACT, Q_ACT).astype(np.int64)
+
+
+def int8_conv_win(q, scales, s_x, b, win_q):
+    """The quantized step conv: i32 group dots + f32 scale folds + bias.
+
+    Mirrors ``quant::kernels::conv_win_batch_q`` at ``B == 1``: ``q``
+    int8 ``(C_out, C_in, K)``, ``scales`` per-(out, in) group scales,
+    ``s_x`` the input activation scale (scalar or per-input-channel
+    vector), ``b`` f32 bias, ``win_q`` the flattened ``(C_in · K,)``
+    window of s16 codes.  Each (out, in) group accumulates an exact
+    integer dot, the groups fold in input-channel order as f32 (the
+    combine factor is ``s_x(i) · s_w(o, i)``), and the f32 bias is added
+    last — the exact accumulation order of the rust kernel, so outputs
+    are bit-comparable.
+    """
+    q = np.asarray(q)
+    c_out, c_in, k = q.shape
+    scales = np.asarray(scales, np.float32).reshape(c_out, c_in)
+    sx = np.broadcast_to(np.asarray(s_x, np.float32), (c_in,))
+    win = np.asarray(win_q, np.int64).reshape(c_in, k)
+    out = np.zeros(c_out, np.float32)
+    for o in range(c_out):
+        pre = np.float32(0.0)
+        for i in range(c_in):
+            acc = int((q[o, i].astype(np.int64) * win[i]).sum())
+            g = np.float32(sx[i] * scales[o, i])
+            pre = np.float32(pre + np.float32(g * np.float32(acc)))
+        out[o] = np.float32(pre + np.float32(b[o]))
+    return out
+
+
+def elu_lut_table(scale):
+    """The interpolated ELU LUT knots of ``quant::kernels::EluLut``:
+    ``table[j] = round(expm1(-(j · 32) · s) / s)`` for ``j in 0..=1024``
+    (f64 math, mirroring the rust construction)."""
+    j = np.arange(1025, dtype=np.float64)
+    return _round_half_away(np.expm1(-(j * 32.0) * float(scale)) / float(scale)).astype(
+        np.int64
+    )
+
+
+def elu_lut_apply(table, q):
+    """Integer LUT + interpolation of ``EluLut::apply``: positive codes
+    pass through; negative codes interpolate between the two surrounding
+    knots with round-to-nearest in pure integer math."""
+    q = np.asarray(q, np.int64)
+    u = -q
+    seg = np.clip(u >> 5, 0, 1023)
+    r = u & 31
+    lo = table[seg]
+    hi = table[seg + 1]
+    neg = lo + (((hi - lo) * r + 16) >> 5)
+    return np.where(q >= 0, q, neg).astype(np.int64)

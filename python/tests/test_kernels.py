@@ -167,3 +167,50 @@ def test_vmem_footprint_within_budget():
     """Every layer shape used in this repo fits VMEM comfortably (§Perf)."""
     worst = vmem_footprint_bytes(c_in=160, c_out=96, k=3, tile_t=128)
     assert worst["total"] < 2 * 1024 * 1024  # far under the ~16 MB budget
+
+
+# ---- int8 reference kernels (the rust quant subsystem's mirror) -----------
+
+
+def test_int8_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(3)
+    w = _rand(rng, 5, 4, 3)
+    q, s = ref.int8_quantize_weights(w)
+    assert q.dtype == np.int8 and np.abs(q).max() <= ref.Q_W
+    deq = q.reshape(-1, 3).astype(np.float32) * s[:, None]
+    err = np.abs(deq.reshape(w.shape) - np.asarray(w))
+    # per-group scales bound elementwise error by half an LSB
+    assert (err <= 0.5 * s.max() + 1e-7).all()
+
+
+def test_int8_conv_matches_fakequant_f32():
+    rng = np.random.default_rng(4)
+    c_out, c_in, k = 3, 4, 3
+    w = _rand(rng, c_out, c_in, k)
+    b = _rand(rng, c_out)
+    q, s = ref.int8_quantize_weights(w)
+    s_x = np.float32(1e-3)
+    win_q = rng.integers(-32000, 32000, size=c_in * k)
+    got = ref.int8_conv_win(q, s, s_x, b, win_q)
+    deq_w = q.reshape(-1, k).astype(np.float32) * s[:, None]
+    deq_w = deq_w.reshape(c_out, c_in * k)
+    deq_x = win_q.astype(np.float32) * s_x
+    want = deq_w @ deq_x + np.asarray(b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_elu_lut_identity_positive_and_close_negative():
+    scale = 2e-4
+    table = ref.elu_lut_table(scale)
+    q = np.array([0, 1, 500, 32767, -1, -33, -1000, -32767])
+    out = ref.elu_lut_apply(table, q)
+    np.testing.assert_array_equal(out[q >= 0], q[q >= 0])
+    want = np.expm1(q[q < 0] * scale) / scale
+    assert np.abs(out[q < 0] - want).max() <= 2.0
+
+
+def test_s16_quantize_rounds_half_away_and_saturates():
+    assert ref.s16_quantize(0.26, 0.1) == 3
+    assert ref.s16_quantize(-0.26, 0.1) == -3
+    assert ref.s16_quantize(1e9, 0.1) == ref.Q_ACT
+    assert ref.s16_quantize(-1e9, 0.1) == -ref.Q_ACT

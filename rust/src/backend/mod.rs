@@ -15,9 +15,13 @@
 //!   the variant manifest (causal/STMC conv1d, stride compression,
 //!   extrapolation, per-layer `rate_div` phase gating matching
 //!   `coordinator::scheduler` and eq. 4 of the paper).  This is the
-//!   default: it runs on anything that compiles Rust.
+//!   default: it runs on anything that compiles Rust.  Its registry is
+//!   dtype-aware: an int8 manifest compiles to the quantized executable
+//!   (`crate::quant::QuantVariant`, DESIGN.md §10) instead of the f32
+//!   interpreter — same trait, same weight upload, so ladders mix
+//!   precisions freely.
 //! * `pjrt` (`--features pjrt`) — the HLO-text/PJRT execution engine
-//!   for AOT-compiled artifacts from `python/compile/aot.py`.
+//!   for AOT-compiled artifacts from `python/compile/aot.py` (f32 only).
 
 pub mod native;
 #[cfg(feature = "pjrt")]

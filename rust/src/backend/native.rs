@@ -53,8 +53,19 @@ impl InferenceBackend for NativeBackend {
         "native"
     }
 
+    /// Compile a manifest into its native executable.  The manifest's
+    /// `dtype` selects the registry entry: f32 manifests get the float
+    /// interpreter below, int8 manifests get the quantized executable
+    /// ([`crate::quant::QuantVariant`], DESIGN.md §10).  Both implement
+    /// [`VariantExec`] and execute from the same host weight upload, so
+    /// one backend serves mixed-precision ladders.
     fn compile_variant(&self, manifest: &Manifest) -> Result<Box<dyn VariantExec>> {
-        Ok(Box::new(NativeVariant::new(manifest)?))
+        match manifest.dtype {
+            crate::runtime::manifest::Dtype::F32 => Ok(Box::new(NativeVariant::new(manifest)?)),
+            crate::runtime::manifest::Dtype::Int8 => {
+                Ok(Box::new(crate::quant::QuantVariant::new(manifest)?))
+            }
+        }
     }
 
     fn upload_weights(&self, weights: &Weights) -> Result<DeviceWeights> {

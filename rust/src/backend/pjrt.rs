@@ -80,6 +80,14 @@ impl InferenceBackend for PjrtBackend {
     }
 
     fn compile_variant(&self, manifest: &Manifest) -> Result<Box<dyn VariantExec>> {
+        if manifest.dtype != crate::runtime::manifest::Dtype::F32 {
+            anyhow::bail!(
+                "{}: the pjrt backend executes f32 artifacts only (dtype {}); \
+                 quantized execution is native-backend only",
+                manifest.name,
+                manifest.dtype.as_str()
+            );
+        }
         Ok(Box::new(PjrtVariant::compile(self, manifest)?))
     }
 

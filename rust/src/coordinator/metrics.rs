@@ -29,6 +29,11 @@ pub struct StreamMetrics {
     /// includes their per-session precompute share — the whole inference
     /// is attributed to the path that served its frame).
     pub macs_batched: f64,
+    /// Analytic MACs that executed on the quantized int8 path
+    /// (DESIGN.md §10) — a subset of `macs_executed`, including
+    /// migration replays into int8 rungs.  `macs_executed - macs_int8`
+    /// ran as f32.
+    pub macs_int8: f64,
     /// Output quality accumulator (SI-SNR segments), if tracked.
     pub si_snr: Summary,
     /// Warm variant migrations performed (adaptive serving, DESIGN.md
@@ -78,6 +83,21 @@ impl StreamMetrics {
     pub fn record_batch(&mut self, bsz: u64, macs: f64) {
         self.batch_size.record(bsz);
         self.macs_batched += macs;
+    }
+
+    /// Attribute `macs` already counted in `macs_executed` to the
+    /// quantized int8 path (call alongside `record_frame` /
+    /// `record_migration` when the serving engine's dtype is int8).
+    pub fn record_macs_int8(&mut self, macs: f64) {
+        self.macs_int8 += macs;
+    }
+
+    /// Fraction of executed MACs that ran as int8 (0 when all-f32).
+    pub fn int8_fraction(&self) -> f64 {
+        if self.macs_executed == 0.0 {
+            return 0.0;
+        }
+        self.macs_int8 / self.macs_executed
     }
 
     /// Record one warm variant migration whose history replay executed
@@ -140,6 +160,7 @@ impl StreamMetrics {
         self.macs_stmc += other.macs_stmc;
         self.batch_size.merge(&other.batch_size);
         self.macs_batched += other.macs_batched;
+        self.macs_int8 += other.macs_int8;
         self.migrations += other.migrations;
         self.macs_migration += other.macs_migration;
         for (name, n) in &other.variant_frames {
@@ -161,7 +182,7 @@ impl StreamMetrics {
     pub fn report(&self) -> String {
         format!(
             "frames {:>7}  p50 {:>9}  p95 {:>9}  p99 {:>9}  retain {:>5.1}%  \
-             hidden {:>4.1}%  batch \u{3bc} {:>4.1}  migr {:>3}",
+             hidden {:>4.1}%  batch \u{3bc} {:>4.1}  migr {:>3}  int8 {:>5.1}%",
             self.frames,
             crate::util::bench::fmt_ns(self.arrival_latency.p50() as f64),
             crate::util::bench::fmt_ns(self.arrival_latency.p95() as f64),
@@ -170,6 +191,7 @@ impl StreamMetrics {
             100.0 * self.hidden_fraction(),
             self.mean_batch(),
             self.migrations,
+            100.0 * self.int8_fraction(),
         )
     }
 }
@@ -242,6 +264,22 @@ mod tests {
         m.merge(&other);
         assert_eq!(m.migrations, 2);
         assert_eq!(m.macs_migration, 50.0);
+    }
+
+    #[test]
+    fn int8_mac_attribution_tracks_fraction_and_merges() {
+        let mut m = StreamMetrics::new();
+        m.record_frame(100.0, 200.0);
+        assert_eq!(m.int8_fraction(), 0.0);
+        m.record_frame(100.0, 200.0);
+        m.record_macs_int8(100.0);
+        assert!((m.int8_fraction() - 0.5).abs() < 1e-9);
+        let mut other = StreamMetrics::new();
+        other.record_frame(50.0, 200.0);
+        other.record_macs_int8(50.0);
+        m.merge(&other);
+        assert_eq!(m.macs_int8, 150.0);
+        assert!((m.int8_fraction() - 0.6).abs() < 1e-9);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use anyhow::{bail, Result};
 use super::metrics::StreamMetrics;
 use super::scheduler::{Scheduler, StepPlan};
 use crate::runtime::ladder::warmup_frames;
-use crate::runtime::{CompiledVariant, DeviceWeights, StateSet};
+use crate::runtime::{CompiledVariant, DeviceWeights, Dtype, StateSet};
 
 /// MACs executed by `step_p<phase>` (layers whose rate domain ticks).
 pub fn macs_at_phase(manifest: &crate::runtime::Manifest, phase: usize) -> f64 {
@@ -95,6 +95,12 @@ impl StreamSession {
     /// The variant this session currently serves.
     pub fn variant_name(&self) -> &str {
         &self.engine.manifest.name
+    }
+
+    /// Execution precision of the variant this session currently serves
+    /// (changes when a migration crosses precisions, DESIGN.md §10).
+    pub fn dtype(&self) -> Dtype {
+        self.engine.manifest.dtype
     }
 
     /// The compiled variant this session currently serves.
@@ -209,6 +215,10 @@ impl StreamSession {
             // t == 0 is initial placement (nothing to re-prime), not a
             // migration — don't count it
             self.metrics.record_migration(replay_macs);
+            if target.manifest.dtype == Dtype::Int8 {
+                // the replay ran on the target's quantized path
+                self.metrics.record_macs_int8(replay_macs);
+            }
         }
         self.engine = target.clone();
         self.states = states;
@@ -258,10 +268,12 @@ impl StreamSession {
                 .step(plan.phase, frame, &mut self.states, &self.weights)?
         };
         self.metrics.record_arrival(start);
-        self.metrics.record_frame(
-            macs_at_phase(&self.engine.manifest, plan.phase),
-            macs_stmc(&self.engine.manifest),
-        );
+        let phase_macs = macs_at_phase(&self.engine.manifest, plan.phase);
+        self.metrics
+            .record_frame(phase_macs, macs_stmc(&self.engine.manifest));
+        if self.engine.manifest.dtype == Dtype::Int8 {
+            self.metrics.record_macs_int8(phase_macs);
+        }
         self.metrics.record_variant_frame(&self.engine.manifest.name);
         Ok(out)
     }
@@ -339,6 +351,7 @@ impl StreamSession {
         };
         let phase_macs = macs_at_phase(&engine.manifest, plan.phase);
         let stmc = macs_stmc(&engine.manifest);
+        let int8 = engine.manifest.dtype == Dtype::Int8;
         for (sess, frame) in sessions.iter_mut().zip(frames) {
             sess.record_history(frame);
             sess.scheduler.next();
@@ -346,6 +359,9 @@ impl StreamSession {
             sess.metrics.record_arrival(start);
             sess.metrics.record_frame(phase_macs, stmc);
             sess.metrics.record_batch(bsz as u64, phase_macs);
+            if int8 {
+                sess.metrics.record_macs_int8(phase_macs);
+            }
             sess.metrics.record_variant_frame(&engine.manifest.name);
         }
         Ok(outs)
@@ -391,6 +407,8 @@ mod tests {
                 extrap: vec![],
                 interp: None,
             },
+            dtype: crate::runtime::Dtype::F32,
+            quant: None,
             period,
             streamable: true,
             offline_t: 16,

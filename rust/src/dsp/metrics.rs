@@ -33,6 +33,28 @@ pub fn si_snr_improvement(noisy: &[f32], est: &[f32], clean: &[f32]) -> f64 {
     si_snr(est, clean) - si_snr(noisy, clean)
 }
 
+/// Plain (non-scale-invariant) output SNR of an estimate against a
+/// reference signal, in dB, over the overlapping prefix — the fidelity
+/// number quantized execution reports against its f32 twin
+/// (DESIGN.md §10).  Capped at 120 dB so bit-exact runs stay finite in
+/// JSON summaries; degenerate inputs (empty, all-zero reference)
+/// report the cap.
+pub fn output_snr_db(reference: &[f32], estimate: &[f32]) -> f64 {
+    let n = reference.len().min(estimate.len());
+    let mut sig = 0.0f64;
+    let mut err = 0.0f64;
+    for i in 0..n {
+        let r = reference[i] as f64;
+        sig += r * r;
+        let e = r - estimate[i] as f64;
+        err += e * e;
+    }
+    if err <= 0.0 || sig <= 0.0 {
+        return 120.0;
+    }
+    (10.0 * (sig / err).log10()).min(120.0)
+}
+
 /// Top-1 accuracy over (prediction, label) pairs.
 pub fn top1_accuracy(pred: &[usize], labels: &[usize]) -> f64 {
     assert_eq!(pred.len(), labels.len());
@@ -94,5 +116,18 @@ mod tests {
     fn accuracy_and_argmax() {
         assert_eq!(top1_accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
         assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn output_snr_caps_and_measures() {
+        let r = vec![1.0f32, -2.0, 3.0, 0.5];
+        assert_eq!(output_snr_db(&r, &r), 120.0, "bit-exact caps at 120");
+        assert_eq!(output_snr_db(&[], &[]), 120.0, "degenerate caps");
+        let e: Vec<f32> = r.iter().map(|v| v + 0.01).collect();
+        let snr = output_snr_db(&r, &e);
+        assert!((20.0..60.0).contains(&snr), "plausible mid-range: {snr}");
+        // scale-variant on purpose: a 2x gain error is a real error
+        let g: Vec<f32> = r.iter().map(|v| v * 2.0).collect();
+        assert!(output_snr_db(&r, &g) < 1.0);
     }
 }

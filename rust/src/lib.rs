@@ -19,6 +19,9 @@
 //! manifests (runs anywhere Rust compiles — the paper's MCU-class
 //! deployment story), and the optional **pjrt** backend
 //! (`--features pjrt`) executes AOT-compiled HLO-text artifacts.
+//! Precision is a second execution axis ([`quant`], DESIGN.md §10): any
+//! variant also compiles as a quantized int8/s16 executable, and a
+//! serving ladder may mix precisions (`stmc:f32 → stmc:int8 → …`).
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
@@ -30,5 +33,6 @@ pub mod coordinator;
 pub mod dsp;
 pub mod experiments;
 pub mod pruning;
+pub mod quant;
 pub mod runtime;
 pub mod util;

@@ -9,7 +9,7 @@
 //!
 //! Common options: --artifacts DIR (default ./artifacts), --results DIR
 //! (default ./results), --n-eval N (default 6), --seed S, --streams N,
-//! --frames N, --workers N.
+//! --frames N, --workers N, --dtype f32|int8 (serve/denoise; DESIGN.md §10).
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -17,10 +17,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use soi::coordinator::{AdaptivePolicy, Server};
+use soi::coordinator::{AdaptivePolicy, Server, StreamSession};
 use soi::dsp::{frames, metrics, siggen};
 use soi::experiments::{self, Ctx};
-use soi::runtime::{list_variants, synth, CompiledVariant, Manifest, Runtime, VariantLadder};
+use soi::runtime::{
+    list_variants, synth, CompiledVariant, Dtype, Manifest, Runtime, VariantLadder,
+};
 use soi::util::cli::Args;
 use soi::util::json::Json;
 use soi::util::rng::Rng;
@@ -110,6 +112,7 @@ fn run(argv: &[String]) -> Result<()> {
                 idle_precompute: !args.flag("no-idle-precompute"),
                 batching: !args.flag("no-batching"),
                 adaptive: args.flag("adaptive"),
+                dtype: Dtype::parse(&args.str_or("dtype", "f32"))?,
                 ladder: args
                     .str_or("ladder", "stmc,scc2,sscc5")
                     .split(',')
@@ -123,9 +126,11 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "denoise" => {
             let name = args.positional().get(1).context("denoise needs a variant name")?;
+            let dtype = Dtype::parse(&args.str_or("dtype", "f32"))?;
+            let spec = spec_with_dtype(name, dtype);
             let n_frames = args.usize_or("frames", 1000).map_err(anyhow::Error::msg)?;
             let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
-            denoise_once(&artifacts, name, n_frames, seed)
+            denoise_once(&artifacts, &spec, n_frames, seed)
         }
         other => bail!("unknown command '{other}'\n{HELP}"),
     }
@@ -147,6 +152,17 @@ fn load_variant(
     Ok(cv)
 }
 
+/// Apply a `--dtype` default to a variant spec lacking an explicit
+/// `:<dtype>` suffix ("scc2" + int8 → "scc2:int8"; "scc2:f32" wins).
+fn spec_with_dtype(spec: &str, dtype: Dtype) -> String {
+    if spec.contains(':') || dtype == Dtype::F32 {
+        spec.to_string()
+    } else {
+        format!("{spec}:{}", dtype.as_str())
+    }
+}
+
+
 /// Options of the `serve` subcommand.
 struct ServeOpts {
     /// Pinned variant name (required unless `adaptive`).
@@ -159,7 +175,12 @@ struct ServeOpts {
     batching: bool,
     /// Load-adaptive ladder serving (DESIGN.md §9).
     adaptive: bool,
-    /// Ladder rung names, best quality first (`--ladder a,b,c`).
+    /// Default execution precision (`--dtype f32|int8`, DESIGN.md §10):
+    /// applied to the pinned variant / every ladder entry without an
+    /// explicit `:<dtype>` suffix.
+    dtype: Dtype,
+    /// Ladder rung names, best quality first (`--ladder a,b,c`; entries
+    /// may carry `:<dtype>` suffixes for mixed-precision ladders).
     ladder: Vec<String>,
     /// Controller p99 target, µs (`--target-p99-us`).
     target_p99_us: u64,
@@ -170,7 +191,9 @@ struct ServeOpts {
 /// Multi-stream serving benchmark over synthetic utterances.
 fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
-    let (mut server, names, feat) = if opts.adaptive {
+    // (server, rung names, frame size, dtype label for the summary, and —
+    // for pinned int8 serving — the base spec of the f32 reference twin)
+    let (mut server, names, feat, dtype_label, int8_base) = if opts.adaptive {
         if let Some(name) = &opts.variant {
             bail!(
                 "serve --adaptive takes its variants from --ladder (got positional \
@@ -179,11 +202,18 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
         }
         let mut variants = Vec::with_capacity(opts.ladder.len());
         for name in &opts.ladder {
-            variants.push(Arc::new(load_variant(rt.clone(), artifacts, name)?));
+            let spec = spec_with_dtype(name, opts.dtype);
+            variants.push(Arc::new(load_variant(rt.clone(), artifacts, &spec)?));
         }
         let ladder = Arc::new(VariantLadder::new(variants)?);
         let names: Vec<String> = ladder.names().iter().map(|s| s.to_string()).collect();
         let feat = ladder.level(0).manifest.config.feat;
+        let dtypes = ladder.dtypes();
+        let dtype_label = if dtypes.iter().all(|&d| d == dtypes[0]) {
+            dtypes[0].as_str().to_string()
+        } else {
+            "mixed".to_string()
+        };
         println!(
             "adaptive serving on the {} backend: ladder {:?}, target p99 {} \u{3bc}s, \
              warmup \u{2264} {} frames, {} streams x {} frames, {} workers",
@@ -197,25 +227,39 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
         );
         let mut server = Server::with_ladder(ladder, opts.workers);
         server.adaptive = Some(AdaptivePolicy::with_target_us(opts.target_p99_us));
-        (server, names, feat)
+        (server, names, feat, dtype_label, None)
     } else {
         let name = opts
             .variant
             .as_deref()
             .context("serve needs a variant name (or --adaptive with --ladder)")?;
-        let cv = Arc::new(load_variant(rt.clone(), artifacts, name)?);
+        let spec = spec_with_dtype(name, opts.dtype);
+        let cv = Arc::new(load_variant(rt.clone(), artifacts, &spec)?);
         let feat = cv.manifest.config.feat;
+        let dtype_label = cv.manifest.dtype.as_str().to_string();
+        let int8_base = if cv.manifest.dtype == Dtype::Int8 {
+            Some(synth::parse_spec(&spec)?.0.to_string())
+        } else {
+            None
+        };
         println!(
-            "serving '{name}' on the {} backend: {} streams x {} frames, \
-             {} workers, period {}, FP split: {}",
+            "serving '{spec}' on the {} backend: {} streams x {} frames, \
+             {} workers, period {}, dtype {}, FP split: {}",
             rt.platform(),
             opts.streams,
             opts.frames,
             opts.workers,
             cv.manifest.period,
+            dtype_label,
             cv.has_fp_split()
         );
-        (Server::new(cv, opts.workers), vec![name.to_string()], feat)
+        (
+            Server::new(cv, opts.workers),
+            vec![spec],
+            feat,
+            dtype_label,
+            int8_base,
+        )
     };
     let mut rng = Rng::new(opts.seed);
     let mut streams = Vec::with_capacity(opts.streams);
@@ -254,8 +298,29 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     }
     let (m, s) = soi::experiments::eval::mean_std(&imps);
     println!("served SI-SNRi: {m:.2} ± {s:.2} dB over {} streams", imps.len());
+    // Quantization fidelity: for pinned int8 serving, replay stream 0
+    // through the f32 twin (same weights — the base spec loads or
+    // synthesizes the identical tensor set) and measure output SNR
+    // against what the quantized server actually produced.
+    let quant_snr = match &int8_base {
+        Some(base) if report.outputs.contains_key(&0) => {
+            let f32_cv = Arc::new(load_variant(rt.clone(), artifacts, base)?);
+            let dw = Arc::new(f32_cv.device_weights()?);
+            let mut sess = StreamSession::new(0, f32_cv, dw);
+            let mut reference = Vec::with_capacity(feat * streams[0].len());
+            for col in &streams[0] {
+                reference.extend(sess.on_frame(col)?);
+            }
+            let served: Vec<f32> = report.outputs[&0].iter().flatten().copied().collect();
+            let snr = metrics::output_snr_db(&reference, &served);
+            println!("int8 output SNR vs f32 reference: {snr:.1} dB (stream 0)");
+            Some(snr)
+        }
+        _ => None,
+    };
     // machine-readable summary (README "Operating the server" documents
-    // the columns; `variant_frames` shows which rung traffic ran on)
+    // the columns; `variant_frames` shows which rung traffic ran on;
+    // `dtype`/`snr_db`/`macs_int8` extend the PR 3 schema additively)
     let summary = Json::obj(vec![
         ("cmd", Json::Str("serve".into())),
         (
@@ -287,6 +352,15 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
         ("mean_batch", Json::Num(report.metrics.mean_batch())),
         ("migrations", Json::Num(report.metrics.migrations as f64)),
         ("migration_macs", Json::Num(report.metrics.macs_migration)),
+        ("dtype", Json::Str(dtype_label.clone())),
+        ("macs_int8", Json::Num(report.metrics.macs_int8)),
+        (
+            "snr_db",
+            match quant_snr {
+                Some(v) => Json::Num(v),
+                None => Json::Null,
+            },
+        ),
         (
             "variant_frames",
             Json::Obj(
@@ -338,14 +412,20 @@ usage: soi <command> [options]
   info <variant>                manifest summary
   exp <table1..table10|fig4..fig11|all>   regenerate paper tables/figures
   serve <variant> [--streams N] [--frames N] [--workers N] [--no-idle-precompute]
-                  [--no-batching] [--pace-us N]
+                  [--no-batching] [--pace-us N] [--dtype f32|int8]
+                  pinned int8 serving additionally reports output SNR vs
+                  the f32 reference (snr_db in the JSON summary)
   serve --adaptive [--ladder v0,v1,..] [--target-p99-us N] [--pace-us N]
                   load-adaptive ladder serving (default ladder
                   stmc,scc2,sscc5); emits a JSON summary line with
-                  migration and per-variant frame counts
-  denoise <variant> [--frames N]
+                  migration and per-variant frame counts.  Ladder entries
+                  accept :f32/:int8 suffixes (mixed-precision ladders:
+                  --ladder stmc,stmc:int8,scc2:int8), and --dtype sets the
+                  default suffix for entries without one
+  denoise <variant> [--frames N] [--dtype f32|int8]
 options: --artifacts DIR  --results DIR  --n-eval N  --seed S
-serve/denoise accept preset names (stmc, scc<p>, scc<p>_<q>, sscc<p>,
-fp<p>_<q>, pred<n>) even without built artifacts: the native backend then
-runs a synthesized untrained variant (set SOI_BACKEND=pjrt with
---features pjrt for the HLO/PJRT engine on real artifacts).";
+serve/denoise accept preset specs (stmc, scc<p>, scc<p>_<q>, sscc<p>,
+fp<p>_<q>, pred<n>, each optionally :f32|:int8) even without built
+artifacts: the native backend then runs a synthesized untrained variant
+(set SOI_BACKEND=pjrt with --features pjrt for the HLO/PJRT engine on
+real f32 artifacts; int8 execution is native-only, DESIGN.md §10).";

@@ -1,0 +1,349 @@
+//! Activation-scale calibration for quantized execution (DESIGN.md §10).
+//!
+//! [`calibrate`] runs the f32 reference network over synthesized
+//! activations (the same `dsp::siggen` denoise distribution serving
+//! traffic is drawn from) and records each quantization point's dynamic
+//! range: the input frames, every conv layer's pre-activation output
+//! (post-stride for S-CC layers, so only values the streaming schedule
+//! actually computes are ranged), and each tconv extrapolation output.
+//! Scales are `maxabs · MARGIN / 32767`, one per tensor; pre- and
+//! post-activation ranges share the layer's scale (|ELU(x)| ≤ |x|),
+//! which makes the positive half of the ELU LUT an exact identity.
+//!
+//! The calibration signal is not one random utterance: serving inputs
+//! are speech/noise mixtures whose *peak* scales with the (random) mix
+//! SNR, and an input range calibrated on a quiet draw would saturate on
+//! a loud one (measured: a 1.6× amplitude mismatch collapses output SNR
+//! from ~42 dB to ~30 dB, while ≤ 1.3× is absorbed by [`MARGIN`]).  So
+//! the signal deliberately spans the serving distribution: consecutive
+//! utterances mixed at the fixed SNR extremes and midpoints of
+//! `siggen::denoise_pair`'s −5..10 dB range.
+//!
+//! The forward pass here is a deliberately small, self-contained f32
+//! offline interpreter (the streaming == offline equivalence theorem
+//! makes offline ranges valid for streaming execution); it exists so the
+//! calibration can tap intermediates, which the serving backends never
+//! expose.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dsp::{frames, siggen};
+use crate::runtime::engine::Weights;
+use crate::runtime::manifest::{Manifest, QuantSpec};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+use super::kernels::Q_ACT;
+
+/// Headroom multiplier applied to every calibrated range: values up to
+/// `MARGIN ×` the observed maximum survive without saturation, at a
+/// fractional-LSB cost that is negligible next to the int8 weight noise
+/// (measured in DESIGN.md §10).
+pub const MARGIN: f32 = 1.25;
+
+/// Derive a variant's [`QuantSpec`] by streaming `n_frames` synthesized
+/// denoise-distribution frames (seeded by `seed`) through the f32
+/// reference network and ranging every quantization point.
+pub fn calibrate(
+    manifest: &Manifest,
+    weights: &Weights,
+    n_frames: usize,
+    seed: u64,
+) -> Result<QuantSpec> {
+    let cfg = &manifest.config;
+    if cfg.interp.is_some() {
+        bail!(
+            "{}: interpolation variants are offline-only and have no \
+             quantized executable",
+            manifest.name
+        );
+    }
+    if n_frames == 0 {
+        bail!("{}: calibration needs at least one frame", manifest.name);
+    }
+    let mut rng = Rng::new(seed);
+    // one utterance per fixed mix SNR, covering the serving range's
+    // amplitude distribution (loud −5 dB mixtures set the input range)
+    let snrs = [-5.0f64, 0.0, 5.0, 10.0];
+    let seg = (cfg.feat * n_frames).div_ceil(snrs.len());
+    let mut noisy = Vec::with_capacity(seg * snrs.len());
+    for snr_db in snrs {
+        let clean = siggen::speech(&mut rng, seg, siggen::FS);
+        let nse = siggen::noise(&mut rng, seg, siggen::FS);
+        noisy.extend(siggen::mix(&clean, &nse, snr_db));
+    }
+    let (cols, _) = frames(&noisy, cfg.feat);
+    let t = cols.len();
+    let mut x = Tensor::zeros(vec![cfg.feat, t]);
+    for (tt, col) in cols.iter().enumerate() {
+        for (i, &v) in col.iter().enumerate() {
+            x.set2(i, tt, v);
+        }
+    }
+
+    // parameter lookup by name, shape-checked against the config
+    let by_name: BTreeMap<&str, usize> = manifest
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.name.as_str(), i))
+        .collect();
+    let param = |n: &str| -> Result<&Tensor> {
+        let i = *by_name
+            .get(n)
+            .with_context(|| format!("{}: manifest lacks parameter {n}", manifest.name))?;
+        Ok(&weights.tensors[i])
+    };
+
+    let depth = cfg.depth();
+    let scale = |maxabs: f32| {
+        if maxabs > 0.0 {
+            maxabs * MARGIN / Q_ACT as f32
+        } else {
+            1.0
+        }
+    };
+    let s_in = scale(maxabs(&x.data));
+
+    // ---- encoder ----
+    let mut enc: Vec<Tensor> = Vec::with_capacity(depth + 1);
+    enc.push(x.clone());
+    let mut cur = x;
+    let mut s_enc = Vec::with_capacity(depth);
+    for l in 1..=depth {
+        if cfg.shift_pos == Some(l) {
+            cur = delay_cols(&cur, cfg.shift);
+        }
+        let mut y = conv_full(&cur, param(&format!("enc{l}.w"))?, param(&format!("enc{l}.b"))?);
+        if cfg.scc.contains(&l) {
+            y = stride2(&y);
+        }
+        s_enc.push(scale(maxabs(&y.data)));
+        elu(&mut y.data);
+        cur = y.clone();
+        enc.push(y);
+    }
+
+    // ---- decoder ----
+    let mut s_dec = vec![1.0f32; depth];
+    let mut s_up = BTreeMap::new();
+    let mut d: Option<Tensor> = None;
+    for l in (1..=depth).rev() {
+        let inp = if l == depth {
+            enc[depth].clone()
+        } else {
+            concat_rows(d.as_ref().unwrap(), &enc[l])
+        };
+        let mut y = conv_full(&inp, param(&format!("dec{l}.w"))?, param(&format!("dec{l}.b"))?);
+        s_dec[l - 1] = scale(maxabs(&y.data));
+        elu(&mut y.data);
+        let mut dl = y;
+        if cfg.scc.contains(&l) {
+            let t_out = enc[l - 1].shape[1];
+            if cfg.extrap_of(l) == "tconv" {
+                let up = tconv_upsample(
+                    &dl,
+                    param(&format!("up{l}.w"))?,
+                    param(&format!("up{l}.b"))?,
+                    t_out,
+                );
+                s_up.insert(l, scale(maxabs(&up.data)));
+                dl = up;
+            } else {
+                dl = duplicate_upsample(&dl, t_out);
+            }
+        }
+        d = Some(dl);
+    }
+
+    let spec = QuantSpec {
+        s_in,
+        s_enc,
+        s_dec,
+        s_up,
+    };
+    spec.validate(cfg)
+        .with_context(|| format!("{}: calibration produced an invalid spec", manifest.name))?;
+    Ok(spec)
+}
+
+// ---- minimal f32 offline primitives (taps need intermediates the
+// serving backends never expose; semantics mirror backend::native) ----
+
+fn maxabs(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+fn elu(v: &mut [f32]) {
+    for x in v.iter_mut() {
+        if *x < 0.0 {
+            *x = x.exp_m1();
+        }
+    }
+}
+
+/// Causal stride-1 conv over a whole (C_in, T) sequence.
+fn conv_full(x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
+    let c_in = x.shape[0];
+    let t = x.shape[1];
+    let c_out = w.shape[0];
+    let k = w.shape[2];
+    let mut out = Tensor::zeros(vec![c_out, t]);
+    for o in 0..c_out {
+        for tt in 0..t {
+            let mut acc = b.data[o];
+            for i in 0..c_in {
+                let wrow = &w.data[(o * c_in + i) * k..(o * c_in + i + 1) * k];
+                for (j, wv) in wrow.iter().enumerate() {
+                    let src = tt as isize + j as isize - (k as isize - 1);
+                    if src >= 0 {
+                        acc += wv * x.at2(i, src as usize);
+                    }
+                }
+            }
+            out.set2(o, tt, acc);
+        }
+    }
+    out
+}
+
+/// Right-shift along time by `d` frames (zeros in front), same length.
+fn delay_cols(x: &Tensor, d: usize) -> Tensor {
+    let (c, t) = (x.shape[0], x.shape[1]);
+    let mut out = Tensor::zeros(vec![c, t]);
+    for i in 0..c {
+        for tt in d..t {
+            out.set2(i, tt, x.at2(i, tt - d));
+        }
+    }
+    out
+}
+
+/// Keep even time steps: `out[:, s] = x[:, 2 s]`.
+fn stride2(x: &Tensor) -> Tensor {
+    let (c, t) = (x.shape[0], x.shape[1]);
+    let t2 = (t + 1) / 2;
+    let mut out = Tensor::zeros(vec![c, t2]);
+    for i in 0..c {
+        for s in 0..t2 {
+            out.set2(i, s, x.at2(i, 2 * s));
+        }
+    }
+    out
+}
+
+/// Stack `a` over `b` along the channel axis.
+fn concat_rows(a: &Tensor, b: &Tensor) -> Tensor {
+    debug_assert_eq!(a.shape[1], b.shape[1]);
+    let t = a.shape[1];
+    let c = a.shape[0] + b.shape[0];
+    let mut data = Vec::with_capacity(c * t);
+    data.extend_from_slice(&a.data);
+    data.extend_from_slice(&b.data);
+    Tensor::new(vec![c, t], data)
+}
+
+/// Duplication extrapolation: `up[:, t] = y[:, t / 2]`.
+fn duplicate_upsample(y: &Tensor, t_out: usize) -> Tensor {
+    let c = y.shape[0];
+    let last = y.shape[1] - 1;
+    let mut out = Tensor::zeros(vec![c, t_out]);
+    for i in 0..c {
+        for tt in 0..t_out {
+            out.set2(i, tt, y.at2(i, (tt / 2).min(last)));
+        }
+    }
+    out
+}
+
+/// Stride-2 transposed conv over a whole sequence (phase 0 on even
+/// output times, phase 1 on odd ones).
+fn tconv_upsample(y: &Tensor, w: &Tensor, b: &Tensor, t_out: usize) -> Tensor {
+    let c_out = w.shape[0];
+    let c_in = w.shape[1];
+    let s = y.shape[1];
+    let mut out = Tensor::zeros(vec![c_out, t_out]);
+    for src in 0..s {
+        for ph in 0..2usize {
+            let dst = 2 * src + ph;
+            if dst >= t_out {
+                continue;
+            }
+            for o in 0..c_out {
+                let mut acc = b.data[o];
+                for i in 0..c_in {
+                    acc += w.data[(o * c_in + i) * 2 + ph] * y.at2(i, src);
+                }
+                out.set2(o, dst, acc);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::synth;
+    use crate::runtime::ModelConfig;
+
+    fn cfg(scc: Vec<usize>, shift_pos: Option<usize>, extrap: &str) -> ModelConfig {
+        ModelConfig {
+            feat: 4,
+            channels: vec![5, 6],
+            kernel: 3,
+            extrap: vec![extrap.into(); scc.len()],
+            scc,
+            shift_pos,
+            shift: 1,
+            interp: None,
+        }
+    }
+
+    #[test]
+    fn calibration_is_deterministic_and_valid() {
+        for (c, name) in [
+            (cfg(vec![], None, "duplicate"), "stmc"),
+            (cfg(vec![2], None, "duplicate"), "scc2"),
+            (cfg(vec![2], Some(2), "duplicate"), "sscc2"),
+            (cfg(vec![2], None, "tconv"), "scc2_tconv"),
+        ] {
+            let m = synth::manifest(&c, name, 32);
+            let w = synth::he_weights(&m, 0xFEED);
+            let a = calibrate(&m, &w, 64, 7).unwrap();
+            let b = calibrate(&m, &w, 64, 7).unwrap();
+            assert_eq!(a, b, "{name}: calibration must be deterministic");
+            a.validate(&c).unwrap();
+            assert!(a.s_in > 0.0 && a.s_in < 1.0, "{name}: s_in {}", a.s_in);
+            if c.extrap.first().map(|e| e == "tconv").unwrap_or(false) {
+                assert!(a.s_up.contains_key(&2), "{name}: tconv scale baked");
+            }
+        }
+    }
+
+    #[test]
+    fn deeper_seeds_change_ranges_but_not_validity() {
+        let c = cfg(vec![2], None, "duplicate");
+        let m = synth::manifest(&c, "scc2", 32);
+        let w = synth::he_weights(&m, 0xFEED);
+        let a = calibrate(&m, &w, 64, 7).unwrap();
+        let b = calibrate(&m, &w, 64, 8).unwrap();
+        assert_ne!(a, b, "different calibration signals range differently");
+        b.validate(&c).unwrap();
+    }
+
+    #[test]
+    fn rejects_interp_and_empty() {
+        let mut c = cfg(vec![2], None, "duplicate");
+        c.interp = Some("linear".into());
+        let m = synth::manifest(&c, "interp", 32);
+        let w = synth::he_weights(&m, 1);
+        assert!(calibrate(&m, &w, 32, 1).is_err());
+        let c2 = cfg(vec![], None, "duplicate");
+        let m2 = synth::manifest(&c2, "stmc", 32);
+        let w2 = synth::he_weights(&m2, 1);
+        assert!(calibrate(&m2, &w2, 0, 1).is_err());
+    }
+}

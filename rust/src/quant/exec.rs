@@ -1,0 +1,1175 @@
+//! `QuantExec`: the quantized executable form of a variant manifest —
+//! the int8/s16 twin of `backend::native::NativeVariant`, implementing
+//! the same [`VariantExec`] trait so the whole serving stack (schedulers,
+//! phase-aligned batching, variant ladders, warm migration) runs
+//! unchanged over quantized rungs (DESIGN.md §10).
+//!
+//! Execution model:
+//!
+//! * **Weights** are packed int8 ([`crate::quant::qtensor::QTensor`])
+//!   with per-(out, in)-channel scales, prepared lazily from the shared
+//!   f32 [`DeviceWeights`] upload on first use and cached (fingerprinted,
+//!   so a ladder's one upload serves f32 and int8 rungs alike).
+//! * **Activations** are s16 codes under the static per-tensor scales
+//!   baked into the manifest's [`QuantSpec`] at calibration time.  They
+//!   live in the ordinary f32 [`StateSet`] tensors (every code is a small
+//!   integer, exactly representable), so state cloning, history replay
+//!   and warm migration work bit-for-bit without a parallel state type.
+//! * **Schedule** is byte-for-byte the same SOI phase logic as the f32
+//!   interpreter — one batched code path, `B == 1` is the single-stream
+//!   case, and per-stream accumulation order is batch-independent, so
+//!   batched and sequential quantized serving are bit-identical
+//!   (`rust/tests/quant_backend.rs`).
+//! * **Determinism**: integer dots, fixed-order f32 scale folds, f32
+//!   `round` requantization and the integer ELU LUT — no execution-order
+//!   freedom anywhere, which is the int8 path's determinism contract
+//!   (migration replay reconstructs states exactly).
+//!
+//! The FP shift-at-layer-1 handoff slot is the one state tensor holding
+//! real f32 values (the head's output frames); everything else holds
+//! codes.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::native::state_specs;
+use crate::backend::{DeviceWeights, VariantExec};
+use crate::runtime::engine::{StateSet, Weights};
+use crate::runtime::manifest::{Dtype, Manifest, ModelConfig, QuantSpec, TensorSpec};
+use crate::util::tensor::Tensor;
+
+use super::kernels::{
+    conv_win_batch_q, quantize_act, requant, tconv_phase_batch_q, EluLut,
+};
+use super::qtensor::{quantize_weights, QTensor};
+
+/// Pre-resolved tensor indices (state slots and manifest parameters);
+/// mirrors the f32 interpreter's layout.
+struct QIndices {
+    enc_win: Vec<usize>,
+    dec_win: Vec<usize>,
+    enc_w: Vec<usize>,
+    enc_b: Vec<usize>,
+    dec_w: Vec<usize>,
+    dec_b: Vec<usize>,
+    up_cache: BTreeMap<usize, usize>,
+    up_w: BTreeMap<usize, usize>,
+    up_b: BTreeMap<usize, usize>,
+    shift_fifo: Option<usize>,
+    fp_handoff: Option<usize>,
+    head_w: usize,
+    head_b: usize,
+    n_params: usize,
+}
+
+/// Which part of an inference to run (the FP split).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Part {
+    All,
+    Pre,
+    Rest,
+}
+
+/// One conv layer's prepared quantized plan: packed weights, per-(out,
+/// in) combine factors `g = s_x(i) · s_w(o, i)`, and the f32 bias.
+struct QPlan {
+    qw: QTensor,
+    g: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+/// Weight-dependent execution plan, cached per uploaded weight set.
+struct Prepared {
+    fingerprint: u64,
+    enc: Vec<QPlan>,
+    dec: Vec<QPlan>,
+    up: BTreeMap<usize, QPlan>,
+    head: QPlan,
+}
+
+/// One variant compiled for quantized execution (dtype int8).
+pub struct QuantVariant {
+    cfg: ModelConfig,
+    name: String,
+    period: usize,
+    depth: usize,
+    r_in: Vec<usize>,
+    r_out: Vec<usize>,
+    is_scc: Vec<bool>,
+    tconv: Vec<bool>,
+    specs: Vec<TensorSpec>,
+    idx: QIndices,
+    qs: QuantSpec,
+    /// Per-layer ELU LUTs (scale = the layer's shared pre/post scale).
+    luts_enc: Vec<EluLut>,
+    luts_dec: Vec<EluLut>,
+    /// Input-activation scale of each encoder layer (index `l - 1`).
+    enc_sx: Vec<f32>,
+    /// Per-row input scales of each decoder layer (deep rows first).
+    dec_sx: Vec<Vec<f32>>,
+    /// Input scale of the head conv.
+    head_sx: f32,
+    prepared: RwLock<Option<Arc<Prepared>>>,
+    macs: AtomicU64,
+}
+
+impl QuantVariant {
+    /// Compile (validate + index) one int8 manifest for quantized
+    /// execution.  The manifest must carry baked quant params.
+    pub fn new(manifest: &Manifest) -> Result<QuantVariant> {
+        let cfg = manifest.config.clone();
+        let depth = cfg.depth();
+        let name = manifest.name.clone();
+        if depth == 0 {
+            bail!("{name}: config has no layers");
+        }
+        if cfg.kernel == 0 {
+            bail!("{name}: kernel must be >= 1");
+        }
+        if cfg.interp.is_some() {
+            bail!(
+                "{name}: interpolation variants are offline-only f32; no \
+                 quantized executable exists for them"
+            );
+        }
+        if manifest.dtype != Dtype::Int8 {
+            bail!("{name}: QuantExec compiles dtype int8 manifests only");
+        }
+        let Some(qs) = manifest.quant.clone() else {
+            bail!("{name}: int8 manifest lacks baked quant params");
+        };
+        qs.validate(&cfg)
+            .with_context(|| format!("{name}: invalid quant spec"))?;
+        if cfg.scc.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("{name}: scc positions must be sorted and unique");
+        }
+        if cfg.scc.iter().any(|&p| p == 0 || p > depth) {
+            bail!("{name}: scc position out of range 1..={depth}");
+        }
+        if let Some(s) = cfg.shift_pos {
+            if s == 0 || s > depth {
+                bail!("{name}: shift_pos out of range 1..={depth}");
+            }
+            if cfg.shift == 0 {
+                bail!("{name}: shift must be >= 1");
+            }
+        }
+        if manifest.period != cfg.period() {
+            bail!(
+                "{name}: manifest period {} != 2^|scc| = {}",
+                manifest.period,
+                cfg.period()
+            );
+        }
+        for &p in &cfg.scc {
+            let e = cfg.extrap_of(p);
+            if e != "duplicate" && e != "tconv" {
+                bail!("{name}: unknown extrapolation '{e}' at S-CC {p}");
+            }
+        }
+
+        let mut r_in = vec![1usize; depth + 1];
+        let mut r_out = vec![1usize; depth + 1];
+        let mut is_scc = vec![false; depth + 1];
+        let mut tconv = vec![false; depth + 1];
+        for l in 1..=depth {
+            r_in[l] = cfg.r_in(l);
+            r_out[l] = cfg.r_out(l);
+            is_scc[l] = cfg.scc.contains(&l);
+            tconv[l] = is_scc[l] && cfg.extrap_of(l) == "tconv";
+        }
+
+        let specs = state_specs(&cfg);
+        let state_slot: BTreeMap<&str, usize> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.as_str(), i))
+            .collect();
+        let sslot = |n: &str| -> Result<usize> {
+            state_slot
+                .get(n)
+                .copied()
+                .with_context(|| format!("{name}: missing state slot {n}"))
+        };
+        let param_slot: BTreeMap<&str, usize> = manifest
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.as_str(), i))
+            .collect();
+        let pslot = |n: &str, shape: &[usize]| -> Result<usize> {
+            let i = *param_slot
+                .get(n)
+                .with_context(|| format!("{name}: manifest lacks parameter {n}"))?;
+            if manifest.params[i].shape != shape {
+                bail!(
+                    "{name}: parameter {n} has shape {:?}, quant backend expects {:?}",
+                    manifest.params[i].shape,
+                    shape
+                );
+            }
+            Ok(i)
+        };
+
+        let k = cfg.kernel;
+        let mut enc_win = Vec::new();
+        let mut dec_win = Vec::new();
+        let mut enc_w = Vec::new();
+        let mut enc_b = Vec::new();
+        let mut dec_w = Vec::new();
+        let mut dec_b = Vec::new();
+        for l in 1..=depth {
+            enc_win.push(sslot(&format!("enc{l}.win"))?);
+            dec_win.push(sslot(&format!("dec{l}.win"))?);
+            enc_w.push(pslot(
+                &format!("enc{l}.w"),
+                &[cfg.enc_out_ch(l), cfg.enc_in_ch(l), k],
+            )?);
+            enc_b.push(pslot(&format!("enc{l}.b"), &[cfg.enc_out_ch(l)])?);
+            dec_w.push(pslot(
+                &format!("dec{l}.w"),
+                &[cfg.dec_out_ch(l), cfg.dec_in_ch(l), k],
+            )?);
+            dec_b.push(pslot(&format!("dec{l}.b"), &[cfg.dec_out_ch(l)])?);
+        }
+        let mut up_cache = BTreeMap::new();
+        let mut up_w = BTreeMap::new();
+        let mut up_b = BTreeMap::new();
+        for &p in &cfg.scc {
+            up_cache.insert(p, sslot(&format!("up{p}.cache"))?);
+            if tconv[p] {
+                let c = cfg.dec_out_ch(p);
+                up_w.insert(p, pslot(&format!("up{p}.w"), &[c, c, 2])?);
+                up_b.insert(p, pslot(&format!("up{p}.b"), &[c])?);
+            }
+        }
+        let shift_fifo = if cfg.shift_pos.is_some() {
+            Some(sslot("shift.fifo")?)
+        } else {
+            None
+        };
+        let fp_handoff = match cfg.shift_pos {
+            Some(s) if !cfg.scc.contains(&s) => Some(sslot("fp.handoff")?),
+            _ => None,
+        };
+        let head_w = pslot("head.w", &[cfg.feat, cfg.dec_out_ch(1), 1])?;
+        let head_b = pslot("head.b", &[cfg.feat])?;
+
+        // ---- static scale tables + per-layer ELU LUTs ----
+        let mut enc_sx = Vec::with_capacity(depth);
+        for l in 1..=depth {
+            enc_sx.push(if l == 1 { qs.s_in } else { qs.s_enc[l - 2] });
+        }
+        // scale of the deep rows of dec l (l < depth): the value of
+        // d_{l+1} *as read* — the extrapolation cache's scale at an S-CC
+        // position, the plain post-ELU scale otherwise (including through
+        // the FP handoff, which parks the same tensor)
+        let deep_scale = |l: usize| -> f32 {
+            let u = l + 1;
+            if is_scc[u] && tconv[u] {
+                qs.s_up[&u]
+            } else {
+                qs.s_dec[u - 1]
+            }
+        };
+        let mut dec_sx = Vec::with_capacity(depth);
+        for l in 1..=depth {
+            let c_in = cfg.dec_in_ch(l);
+            let rows = if l == depth {
+                vec![qs.s_enc[depth - 1]; c_in]
+            } else {
+                let c_deep = cfg.dec_out_ch(l + 1);
+                let mut rows = vec![deep_scale(l); c_deep];
+                rows.extend(std::iter::repeat(qs.s_enc[l - 1]).take(c_in - c_deep));
+                rows
+            };
+            dec_sx.push(rows);
+        }
+        let head_sx = if is_scc[1] && tconv[1] {
+            qs.s_up[&1]
+        } else {
+            qs.s_dec[0]
+        };
+        let luts_enc = qs.s_enc.iter().map(|&s| EluLut::new(s)).collect();
+        let luts_dec = qs.s_dec.iter().map(|&s| EluLut::new(s)).collect();
+
+        Ok(QuantVariant {
+            period: cfg.period(),
+            idx: QIndices {
+                enc_win,
+                dec_win,
+                enc_w,
+                enc_b,
+                dec_w,
+                dec_b,
+                up_cache,
+                up_w,
+                up_b,
+                shift_fifo,
+                fp_handoff,
+                head_w,
+                head_b,
+                n_params: manifest.params.len(),
+            },
+            cfg,
+            name,
+            depth,
+            r_in,
+            r_out,
+            is_scc,
+            tconv,
+            specs,
+            qs,
+            luts_enc,
+            luts_dec,
+            enc_sx,
+            dec_sx,
+            head_sx,
+            prepared: RwLock::new(None),
+            macs: AtomicU64::new(0),
+        })
+    }
+
+    /// Resolve host weights from the backend-tagged handle.
+    fn host<'a>(&self, dw: &'a DeviceWeights) -> Result<&'a Weights> {
+        match dw {
+            DeviceWeights::Host(w) => {
+                if w.tensors.len() != self.idx.n_params {
+                    bail!(
+                        "{}: weights hold {} tensors, manifest wants {}",
+                        self.name,
+                        w.tensors.len(),
+                        self.idx.n_params
+                    );
+                }
+                Ok(w)
+            }
+            #[cfg(feature = "pjrt")]
+            DeviceWeights::Pjrt(_) => {
+                bail!("{}: pjrt device weights passed to the quant backend", self.name)
+            }
+        }
+    }
+
+    /// Quantize the uploaded f32 weights into the execution plan, cached
+    /// per weight set (fingerprinted: a re-upload — e.g. a pruning sweep
+    /// — rebuilds the plan instead of silently executing stale codes).
+    ///
+    /// The key is a *content* fingerprint rather than an allocation
+    /// identity on purpose: every worker thread holds its own
+    /// `DeviceWeights::Host` clone of the same tensors, and a pointer
+    /// key would make them evict each other's plan every round.  The
+    /// hot path is the uncontended read lock plus ~17 bit-probes per
+    /// tensor — noise next to one batched conv.
+    fn prepared(&self, w: &Weights) -> Result<Arc<Prepared>> {
+        let fp = weights_fingerprint(w);
+        if let Ok(guard) = self.prepared.read() {
+            if let Some(p) = guard.as_ref() {
+                if p.fingerprint == fp {
+                    return Ok(p.clone());
+                }
+            }
+        }
+        let mut guard = self
+            .prepared
+            .write()
+            .map_err(|_| anyhow::anyhow!("{}: prepared-plan lock poisoned", self.name))?;
+        if let Some(p) = guard.as_ref() {
+            if p.fingerprint == fp {
+                return Ok(p.clone());
+            }
+        }
+        let plan = |wt: &Tensor, bias: &Tensor, sx: &dyn Fn(usize) -> f32| -> Result<QPlan> {
+            let qw = quantize_weights(wt)?;
+            let c_in = wt.shape[1];
+            let g = qw
+                .scales
+                .iter()
+                .enumerate()
+                .map(|(gi, &sw)| sw * sx(gi % c_in))
+                .collect();
+            Ok(QPlan {
+                qw,
+                g,
+                bias: bias.data.clone(),
+            })
+        };
+        let mut enc = Vec::with_capacity(self.depth);
+        let mut dec = Vec::with_capacity(self.depth);
+        for l in 1..=self.depth {
+            let sx = self.enc_sx[l - 1];
+            enc.push(plan(
+                &w.tensors[self.idx.enc_w[l - 1]],
+                &w.tensors[self.idx.enc_b[l - 1]],
+                &|_| sx,
+            )?);
+            let rows = &self.dec_sx[l - 1];
+            dec.push(plan(
+                &w.tensors[self.idx.dec_w[l - 1]],
+                &w.tensors[self.idx.dec_b[l - 1]],
+                &|i| rows[i],
+            )?);
+        }
+        let mut up = BTreeMap::new();
+        for (&p, &wi) in &self.idx.up_w {
+            let sx = self.qs.s_dec[p - 1];
+            up.insert(
+                p,
+                plan(&w.tensors[wi], &w.tensors[self.idx.up_b[&p]], &|_| sx)?,
+            );
+        }
+        let head = plan(
+            &w.tensors[self.idx.head_w],
+            &w.tensors[self.idx.head_b],
+            &|_| self.head_sx,
+        )?;
+        let built = Arc::new(Prepared {
+            fingerprint: fp,
+            enc,
+            dec,
+            up,
+            head,
+        });
+        *guard = Some(built.clone());
+        Ok(built)
+    }
+
+    /// One quantized inference (or one FP part of it) at schedule
+    /// position `phase` for a phase-aligned batch of streams — the same
+    /// single code path contract as the f32 interpreter: the
+    /// single-stream entry points are `B == 1`, so batched and
+    /// sequential execution cannot diverge.
+    fn run_step_batch(
+        &self,
+        phase: usize,
+        frames: Option<&[&[f32]]>,
+        states: &mut [&mut StateSet],
+        dw: &DeviceWeights,
+        part: Part,
+    ) -> Result<Option<Vec<Vec<f32>>>> {
+        let bsz = states.len();
+        for st in states.iter() {
+            if st.tensors.len() != self.specs.len() {
+                bail!(
+                    "{}: state set holds {} tensors, expected {}",
+                    self.name,
+                    st.tensors.len(),
+                    self.specs.len()
+                );
+            }
+        }
+        if let Some(fr) = frames {
+            if fr.len() != bsz {
+                bail!("{}: {} frames for {} state sets", self.name, fr.len(), bsz);
+            }
+            for f in fr.iter() {
+                if f.len() != self.cfg.feat {
+                    bail!(
+                        "{}: frame has {} samples, expected {}",
+                        self.name,
+                        f.len(),
+                        self.cfg.feat
+                    );
+                }
+            }
+        }
+        if bsz == 0 {
+            return Ok(Some(Vec::new()));
+        }
+        let w = self.host(dw)?;
+        let plan = self.prepared(w)?;
+        let phase = phase % self.period;
+        let depth = self.depth;
+        let s = self.cfg.shift_pos;
+        let delayed = |l: usize| s.map_or(false, |sp| l >= sp);
+        let in_part = |l: usize| match part {
+            Part::All => true,
+            Part::Pre => delayed(l),
+            Part::Rest => !delayed(l),
+        };
+        // kernel scratch, reused across every conv of this step
+        let mut acc = itake(bsz);
+        let mut fold = ftake(bsz);
+
+        // ---- encoder ----
+        let mut enc_out: Vec<Option<Vec<i32>>> = vec![None; depth + 1];
+        let mut cur: Option<Vec<i32>> = match part {
+            Part::Pre => None,
+            _ => {
+                let fr = frames.with_context(|| format!("{}: step needs frames", self.name))?;
+                let mut x0 = itake(self.cfg.feat * bsz);
+                for (si, f) in fr.iter().enumerate() {
+                    for (i, &v) in f.iter().enumerate() {
+                        x0[i * bsz + si] = quantize_act(v, self.qs.s_in);
+                    }
+                }
+                Some(x0)
+            }
+        };
+        for l in 1..=depth {
+            if phase % self.r_in[l] != 0 {
+                irelease(&mut cur);
+                continue;
+            }
+            if s == Some(l) {
+                let fifo_slot = self.idx.shift_fifo.unwrap();
+                let c_in = self.cfg.enc_in_ch(l);
+                let mut delayed_in = itake(c_in * bsz);
+                if part != Part::Pre {
+                    let c = cur
+                        .as_ref()
+                        .with_context(|| format!("{}: enc{l} missing input", self.name))?;
+                    for (si, st) in states.iter_mut().enumerate() {
+                        let fifo = &mut st.tensors[fifo_slot];
+                        gather_state_col_q(fifo, 0, bsz, si, &mut delayed_in);
+                        push_fifo_col_q(fifo, c, bsz, si);
+                    }
+                } else {
+                    for (si, st) in states.iter().enumerate() {
+                        gather_state_col_q(&st.tensors[fifo_slot], 0, bsz, si, &mut delayed_in);
+                    }
+                }
+                irelease(&mut cur);
+                cur = if in_part(l) {
+                    Some(delayed_in)
+                } else {
+                    iput(delayed_in);
+                    None
+                };
+            }
+            if !in_part(l) {
+                irelease(&mut cur);
+                continue;
+            }
+            let c = cur
+                .take()
+                .with_context(|| format!("{}: enc{l} has no input at phase {phase}", self.name))?;
+            let fires = if self.is_scc[l] {
+                phase % (2 * self.r_in[l]) == 0
+            } else {
+                true
+            };
+            let c_in = self.cfg.enc_in_ch(l);
+            let k = self.cfg.kernel;
+            let mut xwin = itake(c_in * k * bsz);
+            for (si, st) in states.iter_mut().enumerate() {
+                push_window_col_q(&mut st.tensors[self.idx.enc_win[l - 1]], &c, bsz, si, &mut xwin);
+            }
+            iput(c);
+            cur = if fires {
+                let qp = &plan.enc[l - 1];
+                let c_out = qp.qw.shape[0];
+                let mut pre = ftake(c_out * bsz);
+                let macs =
+                    conv_win_batch_q(&qp.qw, &qp.g, &qp.bias, &xwin, bsz, &mut acc, &mut fold, &mut pre);
+                self.macs.fetch_add(macs, Ordering::Relaxed);
+                let lut = &self.luts_enc[l - 1];
+                let mut y = itake(c_out * bsz);
+                for (dst, &p) in y.iter_mut().zip(pre.iter()) {
+                    *dst = lut.apply(requant(p, lut.scale));
+                }
+                fput(pre);
+                let mut keep = itake(y.len());
+                keep.copy_from_slice(&y);
+                enc_out[l] = Some(keep);
+                Some(y)
+            } else {
+                None
+            };
+            iput(xwin);
+        }
+        irelease(&mut cur);
+
+        // ---- decoder ----
+        let mut d: Option<Vec<i32>> = None;
+        for l in (1..=depth).rev() {
+            let mut computed_here = false;
+            if phase % self.r_out[l] == 0 {
+                if !in_part(l) {
+                    irelease(&mut d);
+                } else {
+                    let inp: Vec<i32> = if l == depth {
+                        let src = enc_out[l]
+                            .as_ref()
+                            .with_context(|| format!("{}: dec{l} missing input", self.name))?;
+                        let mut v = itake(src.len());
+                        v.copy_from_slice(src);
+                        v
+                    } else {
+                        let mut upper = d.take();
+                        if part == Part::Rest && delayed(l + 1) && !self.is_scc[l + 1] {
+                            irelease(&mut upper);
+                            let slot = self.idx.fp_handoff.unwrap();
+                            let c_h = states[0].tensors[slot].shape[0];
+                            let mut h = itake(c_h * bsz);
+                            for (si, st) in states.iter().enumerate() {
+                                gather_state_col_q(&st.tensors[slot], 0, bsz, si, &mut h);
+                            }
+                            upper = Some(h);
+                        }
+                        let v = upper
+                            .with_context(|| format!("{}: dec{l} missing deep input", self.name))?;
+                        let skip = enc_out[l]
+                            .as_ref()
+                            .with_context(|| format!("{}: dec{l} missing skip", self.name))?;
+                        let mut inp = itake(v.len() + skip.len());
+                        inp[..v.len()].copy_from_slice(&v);
+                        inp[v.len()..].copy_from_slice(skip);
+                        iput(v);
+                        inp
+                    };
+                    let c_in = self.cfg.dec_in_ch(l);
+                    let k = self.cfg.kernel;
+                    debug_assert_eq!(inp.len(), c_in * bsz);
+                    let mut xwin = itake(c_in * k * bsz);
+                    for (si, st) in states.iter_mut().enumerate() {
+                        push_window_col_q(
+                            &mut st.tensors[self.idx.dec_win[l - 1]],
+                            &inp,
+                            bsz,
+                            si,
+                            &mut xwin,
+                        );
+                    }
+                    iput(inp);
+                    let qp = &plan.dec[l - 1];
+                    let c_out = qp.qw.shape[0];
+                    let mut pre = ftake(c_out * bsz);
+                    let macs = conv_win_batch_q(
+                        &qp.qw, &qp.g, &qp.bias, &xwin, bsz, &mut acc, &mut fold, &mut pre,
+                    );
+                    self.macs.fetch_add(macs, Ordering::Relaxed);
+                    iput(xwin);
+                    let lut = &self.luts_dec[l - 1];
+                    let mut y = itake(c_out * bsz);
+                    for (dst, &p) in y.iter_mut().zip(pre.iter()) {
+                        *dst = lut.apply(requant(p, lut.scale));
+                    }
+                    fput(pre);
+                    irelease(&mut d);
+                    d = Some(y);
+                    computed_here = true;
+                }
+            }
+            // Extrapolation back to the r_in(l) domain (same write/read
+            // ownership rules as the f32 interpreter).
+            if self.is_scc[l] && phase % self.r_in[l] == 0 {
+                let cache_slot = self.idx.up_cache[&l];
+                let fresh = phase % self.r_out[l] == 0;
+                if fresh && computed_here {
+                    let dv = d.as_ref().unwrap();
+                    if self.tconv[l] {
+                        let qp = &plan.up[&l];
+                        let c_out = qp.qw.shape[0];
+                        let s_up = self.qs.s_up[&l];
+                        let mut pre = ftake(c_out * bsz);
+                        let mut phq = itake(c_out * bsz);
+                        for ph in 0..2usize {
+                            let macs = tconv_phase_batch_q(
+                                &qp.qw, &qp.g, &qp.bias, ph, dv, bsz, &mut fold, &mut pre,
+                            );
+                            self.macs.fetch_add(macs, Ordering::Relaxed);
+                            for (dst, &p) in phq.iter_mut().zip(pre.iter()) {
+                                *dst = requant(p, s_up);
+                            }
+                            for (si, st) in states.iter_mut().enumerate() {
+                                scatter_state_col_q(&mut st.tensors[cache_slot], ph, &phq, bsz, si);
+                            }
+                        }
+                        fput(pre);
+                        iput(phq);
+                    } else {
+                        for (si, st) in states.iter_mut().enumerate() {
+                            scatter_state_col_q(&mut st.tensors[cache_slot], 0, dv, bsz, si);
+                        }
+                    }
+                }
+                let reader_delayed = (l >= 2 && delayed(l - 1)) || (l == 1 && s == Some(1));
+                let reads_here = part == Part::All
+                    || (reader_delayed && part == Part::Pre)
+                    || (!reader_delayed && part == Part::Rest);
+                irelease(&mut d);
+                d = if reads_here {
+                    let col = if self.tconv[l] && !fresh { 1 } else { 0 };
+                    let c_c = states[0].tensors[cache_slot].shape[0];
+                    let mut v = itake(c_c * bsz);
+                    for (si, st) in states.iter().enumerate() {
+                        gather_state_col_q(&st.tensors[cache_slot], col, bsz, si, &mut v);
+                    }
+                    Some(v)
+                } else {
+                    None
+                };
+            }
+            // FP boundary handoff (pre pass writes; rest pass reads above).
+            if part == Part::Pre
+                && s == Some(l)
+                && !self.is_scc[l]
+                && phase % self.r_out[l] == 0
+                && l != 1
+            {
+                if let Some(dv) = &d {
+                    let slot = self.idx.fp_handoff.unwrap();
+                    for (si, st) in states.iter_mut().enumerate() {
+                        scatter_state_col_q(&mut st.tensors[slot], 0, dv, bsz, si);
+                    }
+                }
+            }
+        }
+
+        // ---- head (dequantizing: output frames are f32) ----
+        let feat = self.cfg.feat;
+        let result = match part {
+            Part::Pre => {
+                if s == Some(1) {
+                    let dv = d
+                        .take()
+                        .with_context(|| format!("{}: pre pass lost the head input", self.name))?;
+                    let mut out = ftake(feat * bsz);
+                    let macs = conv_win_batch_q(
+                        &plan.head.qw,
+                        &plan.head.g,
+                        &plan.head.bias,
+                        &dv,
+                        bsz,
+                        &mut acc,
+                        &mut fold,
+                        &mut out,
+                    );
+                    self.macs.fetch_add(macs, Ordering::Relaxed);
+                    iput(dv);
+                    let slot = self.idx.fp_handoff.unwrap();
+                    for (si, st) in states.iter_mut().enumerate() {
+                        scatter_state_col_f(&mut st.tensors[slot], 0, &out, bsz, si);
+                    }
+                    fput(out);
+                }
+                None
+            }
+            Part::Rest if s == Some(1) => {
+                let slot = self.idx.fp_handoff.unwrap();
+                let mut out = ftake(feat * bsz);
+                for (si, st) in states.iter().enumerate() {
+                    gather_state_col_f(&st.tensors[slot], 0, bsz, si, &mut out);
+                }
+                let frames_out = split_columns(&out, bsz, feat);
+                fput(out);
+                Some(frames_out)
+            }
+            _ => {
+                let dv = d
+                    .take()
+                    .with_context(|| format!("{}: no decoder output at phase {phase}", self.name))?;
+                let mut out = ftake(feat * bsz);
+                let macs = conv_win_batch_q(
+                    &plan.head.qw,
+                    &plan.head.g,
+                    &plan.head.bias,
+                    &dv,
+                    bsz,
+                    &mut acc,
+                    &mut fold,
+                    &mut out,
+                );
+                self.macs.fetch_add(macs, Ordering::Relaxed);
+                iput(dv);
+                let frames_out = split_columns(&out, bsz, feat);
+                fput(out);
+                Some(frames_out)
+            }
+        };
+        irelease(&mut d);
+        for e in enc_out.iter_mut() {
+            irelease(e);
+        }
+        iput(acc);
+        fput(fold);
+        Ok(result)
+    }
+}
+
+impl VariantExec for QuantVariant {
+    fn init_states(&self) -> StateSet {
+        StateSet {
+            tensors: self
+                .specs
+                .iter()
+                .map(|s| Tensor::zeros(s.shape.clone()))
+                .collect(),
+        }
+    }
+
+    fn has_fp_split(&self) -> bool {
+        // Same rule as the f32 interpreter: a shift at layer 1 that is
+        // also an S-CC position has no handoff slot.
+        match self.cfg.shift_pos {
+            Some(1) => !self.cfg.scc.contains(&1),
+            Some(_) => true,
+            None => false,
+        }
+    }
+
+    fn step(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<f32>> {
+        let frames = [frame];
+        let mut sts = [states];
+        let out =
+            self.run_step_batch(phase, Some(&frames[..]), &mut sts[..], weights, Part::All)?;
+        let mut out = out.with_context(|| format!("{}: step produced no output", self.name))?;
+        Ok(out.remove(0))
+    }
+
+    fn precompute(
+        &self,
+        phase: usize,
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<()> {
+        if !self.has_fp_split() {
+            bail!("{}: variant has no FP split", self.name);
+        }
+        let mut sts = [states];
+        self.run_step_batch(phase, None, &mut sts[..], weights, Part::Pre)?;
+        Ok(())
+    }
+
+    fn step_rest(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<f32>> {
+        if !self.has_fp_split() {
+            bail!("{}: variant has no FP split", self.name);
+        }
+        let frames = [frame];
+        let mut sts = [states];
+        let out =
+            self.run_step_batch(phase, Some(&frames[..]), &mut sts[..], weights, Part::Rest)?;
+        let mut out =
+            out.with_context(|| format!("{}: rest pass produced no output", self.name))?;
+        Ok(out.remove(0))
+    }
+
+    fn step_batch(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+    ) -> Result<Vec<Vec<f32>>> {
+        let out = self.run_step_batch(phase, Some(frames), states, weights, Part::All)?;
+        out.with_context(|| format!("{}: batched step produced no output", self.name))
+    }
+
+    fn step_rest_batch(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+    ) -> Result<Vec<Vec<f32>>> {
+        if !self.has_fp_split() {
+            bail!("{}: variant has no FP split", self.name);
+        }
+        let out = self.run_step_batch(phase, Some(frames), states, weights, Part::Rest)?;
+        out.with_context(|| format!("{}: batched rest pass produced no output", self.name))
+    }
+
+    fn offline(&self, x: &Tensor, weights: &DeviceWeights) -> Result<Tensor> {
+        // The quantized path has no separate offline network: offline is
+        // the streaming loop from zeroed states, which keeps quantized
+        // offline == quantized streaming an identity by construction.
+        if x.shape.len() != 2 || x.shape[0] != self.cfg.feat {
+            bail!(
+                "{}: offline input shape {:?}, expected [{}, T]",
+                self.name,
+                x.shape,
+                self.cfg.feat
+            );
+        }
+        if x.shape[1] == 0 || x.shape[1] % self.period != 0 {
+            bail!(
+                "{}: offline T = {} must be a positive multiple of the period {}",
+                self.name,
+                x.shape[1],
+                self.period
+            );
+        }
+        let t = x.shape[1];
+        let mut states = self.init_states();
+        let mut out = Tensor::zeros(vec![self.cfg.feat, t]);
+        let mut frame = vec![0.0f32; self.cfg.feat];
+        for tt in 0..t {
+            for (i, v) in frame.iter_mut().enumerate() {
+                *v = x.at2(i, tt);
+            }
+            let y = self.step(tt, &frame, &mut states, weights)?;
+            for (i, &v) in y.iter().enumerate() {
+                out.set2(i, tt, v);
+            }
+        }
+        Ok(out)
+    }
+
+    fn executed_macs(&self) -> Option<u64> {
+        Some(self.macs.load(Ordering::Relaxed))
+    }
+
+    fn reset_executed_macs(&self) {
+        self.macs.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Order-insensitive-enough FNV fingerprint of a weight set: tensor
+/// count, per-tensor length, and a strided sample of element bits.
+/// Collisions only matter if a *different* upload fingerprints equal,
+/// which would silently reuse stale quantized codes — the stride keeps
+/// the sample dense enough (≥ 16 probes per tensor) that any real
+/// weight change (pruning, retraining) lands on a probed element with
+/// overwhelming probability.
+fn weights_fingerprint(w: &Weights) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |h: &mut u64, v: u64| {
+        *h ^= v;
+        *h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(&mut h, w.tensors.len() as u64);
+    for t in &w.tensors {
+        mix(&mut h, t.data.len() as u64);
+        if t.data.is_empty() {
+            continue;
+        }
+        let step = (t.data.len() / 16).max(1);
+        let mut i = 0;
+        while i < t.data.len() {
+            mix(&mut h, t.data[i].to_bits() as u64);
+            i += step;
+        }
+        mix(&mut h, t.data[t.data.len() - 1].to_bits() as u64);
+    }
+    h
+}
+
+// ---- scratch pools (integer + float panels) --------------------------------
+
+thread_local! {
+    /// Per-thread free list of s16-code batch panels.
+    static ISCRATCH: RefCell<Vec<Vec<i32>>> = RefCell::new(Vec::new());
+    /// Per-thread free list of f32 batch panels (pre-activations, head).
+    static FSCRATCH: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+}
+
+fn itake(n: usize) -> Vec<i32> {
+    ISCRATCH.with(|p| {
+        let mut v = p.borrow_mut().pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0);
+        v
+    })
+}
+
+fn iput(v: Vec<i32>) {
+    ISCRATCH.with(|p| p.borrow_mut().push(v));
+}
+
+fn irelease(v: &mut Option<Vec<i32>>) {
+    if let Some(buf) = v.take() {
+        iput(buf);
+    }
+}
+
+fn ftake(n: usize) -> Vec<f32> {
+    FSCRATCH.with(|p| {
+        let mut v = p.borrow_mut().pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    })
+}
+
+fn fput(v: Vec<f32>) {
+    FSCRATCH.with(|p| p.borrow_mut().push(v));
+}
+
+// ---- column/window movers between f32 state tensors and code panels --------
+//
+// Per-stream states stay (C, W) f32 tensors *holding integer codes*
+// (exact for |code| ≤ 32767), so the StateSet machinery — cloning,
+// metrics, migration replay — is shared with the f32 path.
+
+/// Read column `col` of stream `si`'s state tensor into column `si` of a
+/// (C, B) code panel.
+fn gather_state_col_q(t: &Tensor, col: usize, bsz: usize, si: usize, dst: &mut [i32]) {
+    let w = t.shape[1];
+    for i in 0..t.shape[0] {
+        dst[i * bsz + si] = t.data[i * w + col] as i32;
+    }
+}
+
+/// Write column `si` of a (C, B) code panel into column `col` of stream
+/// `si`'s state tensor.
+fn scatter_state_col_q(t: &mut Tensor, col: usize, src: &[i32], bsz: usize, si: usize) {
+    let w = t.shape[1];
+    for i in 0..t.shape[0] {
+        t.data[i * w + col] = src[i * bsz + si] as f32;
+    }
+}
+
+/// f32 variant of [`gather_state_col_q`] for the layer-1 FP handoff (the
+/// one state slot carrying real f32 values).
+fn gather_state_col_f(t: &Tensor, col: usize, bsz: usize, si: usize, dst: &mut [f32]) {
+    let w = t.shape[1];
+    for i in 0..t.shape[0] {
+        dst[i * bsz + si] = t.data[i * w + col];
+    }
+}
+
+/// f32 variant of [`scatter_state_col_q`] for the layer-1 FP handoff.
+fn scatter_state_col_f(t: &mut Tensor, col: usize, src: &[f32], bsz: usize, si: usize) {
+    let w = t.shape[1];
+    for i in 0..t.shape[0] {
+        t.data[i * w + col] = src[i * bsz + si];
+    }
+}
+
+/// STMC window tick for stream `si`, code-panel flavour: write the full
+/// (C, K) window into column `si` of the (C·K, B) panel and advance the
+/// per-stream window state.
+fn push_window_col_q(state: &mut Tensor, cur: &[i32], bsz: usize, si: usize, dst: &mut [i32]) {
+    let c = state.shape[0];
+    let wlen = state.shape[1]; // K - 1
+    let k = wlen + 1;
+    for i in 0..c {
+        let row = &mut state.data[i * wlen..(i + 1) * wlen];
+        for (j, &v) in row.iter().enumerate() {
+            dst[(i * k + j) * bsz + si] = v as i32;
+        }
+        let x = cur[i * bsz + si];
+        dst[(i * k + wlen) * bsz + si] = x;
+        if wlen > 0 {
+            row.copy_within(1.., 0);
+            row[wlen - 1] = x as f32;
+        }
+    }
+}
+
+/// FIFO tick for stream `si`, code-panel flavour.
+fn push_fifo_col_q(state: &mut Tensor, cur: &[i32], bsz: usize, si: usize) {
+    let w = state.shape[1];
+    for i in 0..state.shape[0] {
+        let row = &mut state.data[i * w..(i + 1) * w];
+        row.copy_within(1.., 0);
+        row[w - 1] = cur[i * bsz + si] as f32;
+    }
+}
+
+/// Split a (C, B) f32 batch matrix into per-stream output frames.
+fn split_columns(m: &[f32], bsz: usize, c: usize) -> Vec<Vec<f32>> {
+    (0..bsz)
+        .map(|si| (0..c).map(|i| m[i * bsz + si]).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::synth;
+    use crate::runtime::Dtype;
+
+    fn int8_manifest() -> (Manifest, Weights) {
+        let cfg = ModelConfig {
+            feat: 4,
+            channels: vec![5, 6],
+            kernel: 3,
+            scc: vec![2],
+            shift_pos: None,
+            shift: 1,
+            extrap: vec!["duplicate".into()],
+            interp: None,
+        };
+        let mut m = synth::manifest(&cfg, "scc2:int8", 32);
+        let w = synth::he_weights(&m, 0xFEED);
+        m.dtype = Dtype::Int8;
+        m.quant = Some(crate::quant::calibrate(&m, &w, 64, 7).unwrap());
+        (m, w)
+    }
+
+    #[test]
+    fn compiles_and_steps() {
+        let (m, w) = int8_manifest();
+        let qv = QuantVariant::new(&m).unwrap();
+        let dw = DeviceWeights::Host(w);
+        let mut st = qv.init_states();
+        let frame = vec![0.25f32, -0.5, 0.125, 0.0];
+        for t in 0..8 {
+            let out = qv.step(t, &frame, &mut st, &dw).unwrap();
+            assert_eq!(out.len(), 4);
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+        assert!(qv.executed_macs().unwrap() > 0);
+        qv.reset_executed_macs();
+        assert_eq!(qv.executed_macs(), Some(0));
+    }
+
+    #[test]
+    fn quant_states_hold_integer_codes() {
+        let (m, w) = int8_manifest();
+        let qv = QuantVariant::new(&m).unwrap();
+        let dw = DeviceWeights::Host(w);
+        let mut st = qv.init_states();
+        for t in 0..6 {
+            let frame: Vec<f32> = (0..4).map(|i| ((t + i) as f32 * 0.07).sin() * 0.4).collect();
+            qv.step(t, &frame, &mut st, &dw).unwrap();
+        }
+        for tensor in &st.tensors {
+            for &v in &tensor.data {
+                assert_eq!(v, v.trunc(), "state holds non-integer code {v}");
+                assert!(v.abs() <= 32767.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_f32_manifest_and_missing_quant() {
+        let cfg = ModelConfig {
+            feat: 4,
+            channels: vec![5],
+            kernel: 3,
+            scc: vec![],
+            shift_pos: None,
+            shift: 1,
+            extrap: vec![],
+            interp: None,
+        };
+        let m = synth::manifest(&cfg, "stmc", 32);
+        assert!(QuantVariant::new(&m).is_err(), "f32 manifest");
+        let mut m2 = m.clone();
+        m2.dtype = Dtype::Int8;
+        assert!(QuantVariant::new(&m2).is_err(), "no quant params");
+    }
+
+    #[test]
+    fn prepared_plan_rebuilds_on_weight_change() {
+        let (m, w) = int8_manifest();
+        let qv = QuantVariant::new(&m).unwrap();
+        let p1 = qv.prepared(&w).unwrap();
+        let p1b = qv.prepared(&w).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p1b), "same weights reuse the plan");
+        let mut w2 = w.clone();
+        w2.tensors[0].data[0] += 1.0;
+        let p2 = qv.prepared(&w2).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p2), "changed weights rebuild the plan");
+        assert_ne!(p1.fingerprint, p2.fingerprint);
+    }
+}

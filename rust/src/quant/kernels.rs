@@ -1,0 +1,278 @@
+//! Fixed-point kernels of the quantized execution path (DESIGN.md §10):
+//! s16 activation quantization, the i32-accumulator blocked group-dot
+//! GEMM with fused scale-combine + bias, and the interpolated ELU LUT.
+//!
+//! Numeric contract (mirrored bit-for-bit by the int8 reference in
+//! `python/compile/kernels/ref.py`):
+//!
+//! * activations are s16 codes (`±`[`Q_ACT`]) under a static per-tensor
+//!   scale baked at calibration time;
+//! * each conv output channel accumulates one i32 dot per (out, in)
+//!   weight-scale group (`K` taps — never more than `K · 127 · 32767`,
+//!   so i32 cannot overflow for any supported kernel width), then folds
+//!   the groups with f32 combine factors `g(o, i) = s_x(i) · s_w(o, i)`
+//!   in fixed input-channel order, adds the f32 bias, and requantizes;
+//! * per-stream accumulation order is independent of the batch width, so
+//!   batched and sequential execution agree bit-for-bit (the same
+//!   argument as the f32 backend's `conv_win_batch`).
+
+use super::qtensor::QTensor;
+
+/// Symmetric s16 code range for activations (±32767).
+pub const Q_ACT: i32 = 32767;
+
+/// Quantize one real value to its s16 activation code:
+/// `clamp(round(v / scale), -32767, 32767)` with f32 round (half away
+/// from zero).
+#[inline]
+pub fn quantize_act(v: f32, scale: f32) -> i32 {
+    let q = (v / scale).round();
+    q.clamp(-(Q_ACT as f32), Q_ACT as f32) as i32
+}
+
+/// Requantize an f32 pre-activation into the s16 domain of `scale`
+/// (same rounding and saturation as [`quantize_act`]).
+#[inline]
+pub fn requant(pre: f32, scale: f32) -> i32 {
+    quantize_act(pre, scale)
+}
+
+/// Interpolated ELU lookup table over the s16 negative half-range.
+///
+/// The layer's pre- and post-activation ranges share one scale `s`
+/// (|ELU(x)| ≤ |x|, so the post range never outgrows the pre range);
+/// under a shared scale the positive half of ELU is the exact identity
+/// and only the negative half needs the table.  The table holds
+/// `expm1(-j · 32 · s) / s` rounded to integers at 1025 knots, and
+/// `apply` linearly interpolates between knots in pure integer math.
+///
+/// Error bound (DESIGN.md §10): table rounding ≤ 0.5 LSB, interpolation
+/// rounding ≤ 0.5 LSB, curvature ≤ 128 s LSB (`h²/8 · max|f''| / s` with
+/// knot spacing `h = 32 s` and `|f''| ≤ 1`) — under 2 LSB of `s` for
+/// every calibrated scale in practice (`s` ~ 1e-4).
+pub struct EluLut {
+    /// `table[j] = round(expm1(-(j · 32) · s) / s)`, `j in 0..=1024`.
+    table: Vec<i64>,
+    /// The shared pre/post-activation scale the table was built for.
+    pub scale: f32,
+}
+
+impl EluLut {
+    /// Knot spacing in s16 codes (the interpolation segment width).
+    pub const SEG: i64 = 32;
+
+    /// Build the table for a layer's shared activation scale.
+    pub fn new(scale: f32) -> EluLut {
+        let s = scale as f64;
+        let table = (0..=1024)
+            .map(|j| {
+                let x = -((j * 32) as f64) * s;
+                (x.exp_m1() / s).round() as i64
+            })
+            .collect();
+        EluLut { table, scale }
+    }
+
+    /// ELU on an s16 pre-activation code, returning the s16 post-
+    /// activation code under the same scale.  `q` must be saturated
+    /// (|q| ≤ [`Q_ACT`]); positive codes pass through exactly.
+    #[inline]
+    pub fn apply(&self, q: i32) -> i32 {
+        if q >= 0 {
+            return q;
+        }
+        debug_assert!(q >= -Q_ACT);
+        let u = (-q) as i64;
+        let seg = (u >> 5) as usize;
+        let r = u & 31;
+        let lo = self.table[seg];
+        let hi = self.table[seg + 1];
+        (lo + (((hi - lo) * r + 16) >> 5)) as i32
+    }
+}
+
+/// Batched quantized step conv over column-stacked windows.
+///
+/// `xwin` is the `(C_in · K, B)` panel of s16 activation codes (one
+/// flattened window per stream column, same layout as the f32 backend),
+/// `qw` the packed int8 kernel with `K`-tap groups
+/// ([`crate::quant::qtensor::quantize_weights`]), `g` the per-(out, in)
+/// combine factors (input scale × weight scale, row-major `(C_out,
+/// C_in)`), and `bias` the f32 per-channel bias, added after the group
+/// fold.  Writes f32 pre-activations into `out` (`(C_out, B)`) using the
+/// caller's scratch (`acc` i32 and `pre` f32, each `B` long), and
+/// returns the multiply-accumulate count.
+///
+/// The loop is the same register-blocked shape as the f32 backend's
+/// `conv_win_batch`: one weight group streams over the whole batch
+/// panel, so every weight byte is loaded once per batch instead of once
+/// per stream.
+// The argument list is the kernel ABI (weights, factors, bias, panel,
+// width, two scratch panels, output) — bundling it into a struct would
+// only move the eight names one level down.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_win_batch_q(
+    qw: &QTensor,
+    g: &[f32],
+    bias: &[f32],
+    xwin: &[i32],
+    bsz: usize,
+    acc: &mut [i32],
+    pre: &mut [f32],
+    out: &mut [f32],
+) -> u64 {
+    let c_out = qw.shape[0];
+    let c_in = qw.shape[1];
+    let k = qw.shape[2];
+    debug_assert_eq!(xwin.len(), c_in * k * bsz);
+    debug_assert_eq!(out.len(), c_out * bsz);
+    debug_assert_eq!(g.len(), c_out * c_in);
+    debug_assert_eq!(qw.group, k);
+    debug_assert!(acc.len() >= bsz && pre.len() >= bsz);
+    for o in 0..c_out {
+        pre[..bsz].fill(0.0);
+        for i in 0..c_in {
+            acc[..bsz].fill(0);
+            let grp = &qw.data[(o * c_in + i) * k..(o * c_in + i + 1) * k];
+            for (j, &wv) in grp.iter().enumerate() {
+                let wv = wv as i32;
+                let xs = &xwin[(i * k + j) * bsz..(i * k + j + 1) * bsz];
+                for (a, &x) in acc[..bsz].iter_mut().zip(xs) {
+                    *a += wv * x;
+                }
+            }
+            let gf = g[o * c_in + i];
+            for (p, &a) in pre[..bsz].iter_mut().zip(acc[..bsz].iter()) {
+                *p += gf * a as f32;
+            }
+        }
+        let b = bias[o];
+        for (dst, &p) in out[o * bsz..(o + 1) * bsz].iter_mut().zip(pre[..bsz].iter()) {
+            *dst = p + b;
+        }
+    }
+    (c_out * c_in * k * bsz) as u64
+}
+
+/// Batched quantized stride-2 transposed-conv phase: the int8 twin of
+/// the f32 backend's `tconv_phase_batch`.  `x` is a `(C_in, B)` s16
+/// panel, `qw` a `(C_out, C_in, 2)` kernel quantized with 2-tap groups,
+/// `ph` selects the output phase.  Writes f32 pre-extrapolation values
+/// (bias included) into `out` and returns the MAC count.
+#[allow(clippy::too_many_arguments)]
+pub fn tconv_phase_batch_q(
+    qw: &QTensor,
+    g: &[f32],
+    bias: &[f32],
+    ph: usize,
+    x: &[i32],
+    bsz: usize,
+    pre: &mut [f32],
+    out: &mut [f32],
+) -> u64 {
+    let c_out = qw.shape[0];
+    let c_in = qw.shape[1];
+    debug_assert_eq!(x.len(), c_in * bsz);
+    debug_assert_eq!(qw.group, 2);
+    for o in 0..c_out {
+        pre[..bsz].fill(0.0);
+        for i in 0..c_in {
+            let wv = qw.data[(o * c_in + i) * 2 + ph] as i32;
+            let gf = g[o * c_in + i];
+            let xs = &x[i * bsz..(i + 1) * bsz];
+            for (p, &xv) in pre[..bsz].iter_mut().zip(xs) {
+                *p += gf * (wv * xv) as f32;
+            }
+        }
+        let b = bias[o];
+        for (dst, &p) in out[o * bsz..(o + 1) * bsz].iter_mut().zip(pre[..bsz].iter()) {
+            *dst = p + b;
+        }
+    }
+    (c_out * c_in * bsz) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::qtensor::quantize_weights;
+    use crate::util::tensor::Tensor;
+
+    #[test]
+    fn quantize_act_rounds_and_saturates() {
+        assert_eq!(quantize_act(0.0, 0.1), 0);
+        assert_eq!(quantize_act(0.26, 0.1), 3); // 2.6 rounds away to 3
+        assert_eq!(quantize_act(-0.26, 0.1), -3);
+        assert_eq!(quantize_act(1e9, 0.1), Q_ACT);
+        assert_eq!(quantize_act(-1e9, 0.1), -Q_ACT);
+    }
+
+    #[test]
+    fn elu_lut_identity_on_positive_and_bounded_on_negative() {
+        let s = 1e-3f32;
+        let lut = EluLut::new(s);
+        assert_eq!(lut.apply(1234), 1234);
+        assert_eq!(lut.apply(0), 0);
+        for q in [-1, -7, -100, -1000, -5000, -Q_ACT] {
+            let got = lut.apply(q) as f32 * s;
+            let want = ((q as f32 * s) as f64).exp_m1() as f32;
+            assert!(
+                (got - want).abs() <= 2.0 * s,
+                "q={q}: {got} vs {want} (s={s})"
+            );
+            assert!(lut.apply(q) <= 0 && lut.apply(q) >= -Q_ACT);
+        }
+    }
+
+    #[test]
+    fn conv_matches_scalar_reference() {
+        // 2 out, 2 in, K=3, batch 2: compare against a plain f32 evaluation
+        // of the dequantized weights over the dequantized window.
+        let w = Tensor::new(
+            vec![2, 2, 3],
+            vec![0.5, -0.25, 0.125, 1.0, 0.5, -1.0, 0.2, 0.4, -0.2, 0.3, 0.1, 0.6],
+        );
+        let qw = quantize_weights(&w).unwrap();
+        let s_x = 0.01f32;
+        let bias = [0.05f32, -0.05];
+        // per-(o,i) combine factors
+        let g: Vec<f32> = (0..4).map(|gi| s_x * qw.scales[gi]).collect();
+        let bsz = 2;
+        // (C_in*K, B) window codes
+        let xwin: Vec<i32> = (0..12).map(|i| (i as i32 * 7 - 40) % 50).collect();
+        let mut acc = vec![0i32; bsz];
+        let mut pre = vec![0.0f32; bsz];
+        let mut out = vec![0.0f32; 4];
+        let macs = conv_win_batch_q(&qw, &g, &bias, &xwin, bsz, &mut acc, &mut pre, &mut out);
+        assert_eq!(macs, 2 * 2 * 3 * 2);
+        let wd = qw.dequantize();
+        for o in 0..2 {
+            for b in 0..bsz {
+                let mut want = bias[o];
+                for r in 0..6 {
+                    want += wd.data[o * 6 + r] * (xwin[r * bsz + b] as f32 * s_x);
+                }
+                let got = out[o * bsz + b];
+                assert!((got - want).abs() < 1e-4, "[{o},{b}] {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_conv_is_bit_identical_to_b1() {
+        let w = Tensor::new(vec![1, 2, 2], vec![0.9, -0.3, 0.7, 0.2]);
+        let qw = quantize_weights(&w).unwrap();
+        let g: Vec<f32> = qw.scales.iter().map(|s| s * 2e-4).collect();
+        let bias = [0.01f32];
+        let xwin_b2: Vec<i32> = vec![10, 20, -30, 40, 500, -600, 70, 80];
+        let mut out2 = vec![0.0f32; 2];
+        let (mut acc, mut pre) = (vec![0i32; 2], vec![0.0f32; 2]);
+        conv_win_batch_q(&qw, &g, &bias, &xwin_b2, 2, &mut acc, &mut pre, &mut out2);
+        for b in 0..2 {
+            let xwin_b1: Vec<i32> = (0..4).map(|r| xwin_b2[r * 2 + b]).collect();
+            let mut out1 = vec![0.0f32; 1];
+            conv_win_batch_q(&qw, &g, &bias, &xwin_b1, 1, &mut acc, &mut pre, &mut out1);
+            assert_eq!(out1[0].to_bits(), out2[b].to_bits(), "stream {b}");
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Quantized int8 execution subsystem (DESIGN.md §10).
+//!
+//! Precision is a *rung axis* of the serving ladder: every SOI variant
+//! can be compiled either as the classic f32 interpreter or as
+//! [`QuantVariant`] — int8 weights (per-channel scales refined per input
+//! channel, packed as [`QTensor`]), s16 activations under static
+//! calibrated scales, i32-accumulator group-dot GEMMs with fused
+//! scale-combine + bias + LUT-based ELU.  Both executables implement the
+//! same `VariantExec` trait and share one weight upload, so phase-aligned
+//! batching (DESIGN.md §8), variant ladders and warm state migration
+//! (§9) work unchanged across precisions — a ladder like
+//! `stmc:f32 → stmc:int8 → scc2:int8` lets the load controller reach for
+//! cheaper arithmetic *before* structural compression.
+//!
+//! * [`qtensor`] — the packed int8 weight format + quantizers.
+//! * [`kernels`] — s16 requantization, the batched integer GEMM, the
+//!   interpolated ELU LUT.
+//! * [`calibrate`] — activation-range calibration over synthesized
+//!   activations; produces the manifest's baked
+//!   [`crate::runtime::manifest::QuantSpec`].
+//! * [`exec`] — `QuantExec`: the streaming interpreter itself.
+//!
+//! The chosen numeric format (weights int8, activations s16 — the
+//! CMSIS-NN s16 configuration) is driven by a measured accuracy ladder:
+//! int8 activations cap the 7-layer U-Net's output SNR near 30 dB and
+//! pure per-output-channel weight scales near 33 dB, while
+//! input-channel-refined int8 weights with s16 activations hold ≥ 40 dB
+//! on every synthesized variant family (DESIGN.md §10,
+//! `rust/tests/quant_backend.rs`).
+
+pub mod calibrate;
+pub mod exec;
+pub mod kernels;
+pub mod qtensor;
+
+pub use calibrate::calibrate;
+pub use exec::QuantVariant;
+pub use kernels::{EluLut, Q_ACT};
+pub use qtensor::{quantize_groups, quantize_per_channel, quantize_weights, QTensor, Q_W};

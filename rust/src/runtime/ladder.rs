@@ -25,7 +25,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::engine::{CompiledVariant, Runtime};
-use super::manifest::ModelConfig;
+use super::manifest::{Dtype, ModelConfig};
 use crate::backend::DeviceWeights;
 
 /// Frames of input history that fully determine a variant's partial
@@ -67,20 +67,33 @@ pub fn warmup_frames(cfg: &ModelConfig) -> usize {
 /// An ordered set of compiled SOI variants sharing one weight set.
 ///
 /// Rung 0 is the quality anchor; each later rung should be cheaper on
-/// arrival (deeper S-CC compression, or an FP split that hides work in
-/// the idle gap).  The ladder validates at construction that every rung
-/// is weight-compatible — identical parameter inventories (names and
-/// shapes, in `weights.bin` order), same frame size, same backend — so
-/// one [`DeviceWeights`] upload (rung 0's) serves every rung, and a
-/// stream can migrate between rungs without touching the weights.
+/// arrival (deeper S-CC compression, an FP split that hides work in the
+/// idle gap, or — since precision became a rung axis (DESIGN.md §10) —
+/// quantized int8 execution of the same topology).  The ladder validates
+/// at construction that every rung is weight-compatible — identical
+/// parameter inventories (names and shapes, in `weights.bin` order),
+/// same frame size, same backend — so one [`DeviceWeights`] upload
+/// (rung 0's) serves every rung, and a stream can migrate between rungs
+/// without touching the weights.
+///
+/// **Cross-precision rungs** are explicitly valid: an int8 rung executes
+/// from the *same f32 upload* (the quantized executable packs its codes
+/// lazily from it), so `stmc:f32 → stmc:int8 → scc2:int8` needs no
+/// second weight set.  Migration *into* a quantized rung replays the
+/// stream's retained f32 input history through the int8 executable,
+/// re-priming its code-valued states under the int8 path's own
+/// determinism contract — bit-identical to a session that served the
+/// whole stream quantized (`rust/tests/quant_backend.rs`).
 ///
 /// ```
 /// use std::sync::Arc;
-/// use soi::runtime::{Runtime, VariantLadder};
+/// use soi::runtime::{Dtype, Runtime, VariantLadder};
 ///
 /// let rt = Arc::new(Runtime::native());
-/// let ladder = VariantLadder::synth(rt, &["stmc", "scc2", "sscc5"], 0xC0DE).unwrap();
-/// assert_eq!(ladder.names(), ["stmc", "scc2", "sscc5"]);
+/// let ladder =
+///     VariantLadder::synth(rt, &["stmc", "stmc:int8", "scc2:int8"], 0xC0DE).unwrap();
+/// assert_eq!(ladder.names(), ["stmc", "stmc:int8", "scc2:int8"]);
+/// assert_eq!(ladder.dtypes(), [Dtype::F32, Dtype::Int8, Dtype::Int8]);
 /// // every rung can be re-primed from this many retained input frames
 /// assert!(ladder.max_warmup() > 0);
 /// ```
@@ -100,6 +113,12 @@ impl VariantLadder {
             let m = &cv.manifest;
             if !m.streamable {
                 bail!("ladder rung '{}' is offline-only (not streamable)", m.name);
+            }
+            if m.dtype == Dtype::Int8 && m.quant.is_none() {
+                bail!(
+                    "ladder rung '{}' is int8 but carries no baked quant params",
+                    m.name
+                );
             }
             if m.config.feat != first.manifest.config.feat {
                 bail!(
@@ -144,15 +163,24 @@ impl VariantLadder {
         }
     }
 
-    /// Synthesize and compile a ladder from preset names
-    /// ([`crate::runtime::synth::preset`] grammar), sharing one
-    /// deterministic He-initialised weight set (untrained).
+    /// Synthesize and compile a ladder from preset specs
+    /// ([`crate::runtime::synth::preset`] grammar, optionally suffixed
+    /// `:f32` | `:int8`), sharing one deterministic He-initialised
+    /// weight set (untrained).  Mixed-precision ladders fall out of the
+    /// grammar: `["stmc", "stmc:int8", "scc2:int8"]`.
     pub fn synth(rt: Arc<Runtime>, names: &[&str], seed: u64) -> Result<VariantLadder> {
         let mut variants = Vec::with_capacity(names.len());
         for name in names {
-            let cfg = super::synth::preset(name)
-                .with_context(|| format!("'{name}' is not a known preset variant name"))?;
-            variants.push(Arc::new(super::synth::variant(rt.clone(), &cfg, name, seed)?));
+            let (base, dtype) = super::synth::parse_spec(name)?;
+            let cfg = super::synth::preset(base)
+                .with_context(|| format!("'{base}' is not a known preset variant name"))?;
+            variants.push(Arc::new(super::synth::variant_with_dtype(
+                rt.clone(),
+                &cfg,
+                name,
+                seed,
+                dtype,
+            )?));
         }
         Self::new(variants)
     }
@@ -184,6 +212,18 @@ impl VariantLadder {
             .iter()
             .map(|v| v.manifest.name.as_str())
             .collect()
+    }
+
+    /// Execution precision per rung, rung order (DESIGN.md §10).
+    pub fn dtypes(&self) -> Vec<Dtype> {
+        self.variants.iter().map(|v| v.manifest.dtype).collect()
+    }
+
+    /// Whether any rung executes quantized (int8).
+    pub fn has_int8(&self) -> bool {
+        self.variants
+            .iter()
+            .any(|v| v.manifest.dtype == Dtype::Int8)
     }
 
     /// Rung index of a variant by name.
@@ -249,5 +289,30 @@ mod tests {
         let rt = Arc::new(Runtime::native());
         assert!(VariantLadder::synth(rt, &["stmc", "bogus"], 7).is_err());
         assert!(VariantLadder::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn mixed_precision_ladder_shares_one_weight_set() {
+        let rt = Arc::new(Runtime::native());
+        let ladder =
+            VariantLadder::synth(rt, &["stmc", "stmc:int8", "scc2:int8"], 0xC0DE).unwrap();
+        assert_eq!(ladder.dtypes(), vec![Dtype::F32, Dtype::Int8, Dtype::Int8]);
+        assert!(ladder.has_int8());
+        // the int8 rungs share rung 0's f32 tensors bit-for-bit
+        for rung in 1..3 {
+            for (a, b) in ladder
+                .level(0)
+                .weights
+                .tensors
+                .iter()
+                .zip(&ladder.level(rung).weights.tensors)
+            {
+                assert_eq!(a.data, b.data);
+            }
+        }
+        // one upload (rung 0's) is valid for every rung
+        ladder.device_weights().unwrap();
+        // same base at two precisions is not a duplicate name
+        assert_eq!(ladder.position("stmc:int8"), Some(1));
     }
 }

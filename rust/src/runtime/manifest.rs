@@ -11,6 +11,128 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::{self, Json};
 
+/// Numeric execution precision of a variant artifact (DESIGN.md §10).
+///
+/// `F32` is the classic native/pjrt float path.  `Int8` selects the
+/// quantized executable ([`crate::quant::QuantVariant`]): int8 weights
+/// with per-channel (input-channel-refined) scales, s16 activations, and
+/// i32 accumulators.  An `Int8` manifest must carry a baked [`QuantSpec`]
+/// — the activation scales calibrated at build time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    /// 32-bit float execution (the default).
+    F32,
+    /// Quantized execution: int8 weights, s16 activations, i32 accumulators.
+    Int8,
+}
+
+impl Dtype {
+    /// Parse a dtype name ("f32" | "int8").
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "int8" => Ok(Dtype::Int8),
+            other => bail!("unknown dtype '{other}' (f32 | int8)"),
+        }
+    }
+
+    /// Canonical name ("f32" | "int8") — the `:<dtype>` suffix of the
+    /// variant-spec grammar and the `dtype` field of JSON reports.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Int8 => "int8",
+        }
+    }
+}
+
+/// Baked quantization parameters of an int8 artifact (DESIGN.md §10):
+/// the static activation scales `quant::calibrate` derived from
+/// synthesized activations at build time.  Weight scales are *not* here —
+/// they are a pure function of the weights and are re-derived when the
+/// weights are prepared for execution.
+///
+/// Every scale maps a real value `v` to the s16 code `round(v / s)`;
+/// pre-activation and post-activation ranges share one scale per layer
+/// (ELU never grows a magnitude), which is what makes the positive half
+/// of the ELU LUT an exact identity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    /// Input-frame activation scale.
+    pub s_in: f32,
+    /// Per encoder layer (index `l - 1`): the shared pre/post-activation
+    /// scale of `enc l`'s conv output.
+    pub s_enc: Vec<f32>,
+    /// Per decoder layer (index `l - 1`): the shared pre/post-activation
+    /// scale of `dec l`'s conv output.
+    pub s_dec: Vec<f32>,
+    /// Per tconv-extrapolation position: the scale of `up p`'s output
+    /// (duplication extrapolation reuses `s_dec[p - 1]` and has no entry).
+    pub s_up: BTreeMap<usize, f32>,
+}
+
+impl QuantSpec {
+    fn from_json(v: &Json) -> Result<QuantSpec> {
+        let f32_arr = |j: &Json, what: &str| -> Result<Vec<f32>> {
+            j.as_arr()
+                .with_context(|| format!("quant.{what}: expected array"))?
+                .iter()
+                .map(|d| d.as_f64().map(|f| f as f32).context("quant scale"))
+                .collect()
+        };
+        let mut s_up = BTreeMap::new();
+        if let Some(kv) = v.get("s_up").and_then(|j| j.as_obj()) {
+            for (k, val) in kv {
+                let p: usize = k.parse().with_context(|| format!("quant.s_up key '{k}'"))?;
+                s_up.insert(p, val.as_f64().context("quant.s_up value")? as f32);
+            }
+        }
+        Ok(QuantSpec {
+            s_in: v
+                .req("s_in")
+                .map_err(anyhow::Error::from)?
+                .as_f64()
+                .context("quant.s_in")? as f32,
+            s_enc: f32_arr(v.req("s_enc").map_err(anyhow::Error::from)?, "s_enc")?,
+            s_dec: f32_arr(v.req("s_dec").map_err(anyhow::Error::from)?, "s_dec")?,
+            s_up,
+        })
+    }
+
+    /// Structural validation against the owning config: one scale per
+    /// layer, every scale strictly positive and finite.
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        let d = cfg.depth();
+        if self.s_enc.len() != d || self.s_dec.len() != d {
+            bail!(
+                "quant spec has {} enc / {} dec scales for depth {d}",
+                self.s_enc.len(),
+                self.s_dec.len()
+            );
+        }
+        for p in self.s_up.keys() {
+            if !cfg.scc.contains(p) || cfg.extrap_of(*p) != "tconv" {
+                bail!("quant spec has an s_up scale at {p}, not a tconv S-CC position");
+            }
+        }
+        for &p in &cfg.scc {
+            if cfg.extrap_of(p) == "tconv" && !self.s_up.contains_key(&p) {
+                bail!("quant spec lacks the s_up scale for tconv S-CC position {p}");
+            }
+        }
+        let all = std::iter::once(self.s_in)
+            .chain(self.s_enc.iter().copied())
+            .chain(self.s_dec.iter().copied())
+            .chain(self.s_up.values().copied());
+        for s in all {
+            if !(s.is_finite() && s > 0.0) {
+                bail!("quant spec holds a non-positive or non-finite scale {s}");
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Mirror of python's `UNetConfig` (the fields rust needs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
@@ -127,6 +249,12 @@ pub struct Manifest {
     pub name: String,
     /// Model topology the artifact was built from.
     pub config: ModelConfig,
+    /// Numeric execution precision ([`Dtype::F32`] unless the artifact
+    /// was built for quantized execution).
+    pub dtype: Dtype,
+    /// Baked quantization parameters — required when `dtype` is
+    /// [`Dtype::Int8`], absent otherwise.
+    pub quant: Option<QuantSpec>,
     /// Length of the repeating inference pattern (2^|scc|).
     pub period: usize,
     /// Whether the variant can run online (interp variants cannot).
@@ -276,6 +404,14 @@ impl Manifest {
                 .context("name")?
                 .to_string(),
             config,
+            dtype: match v.get("dtype").and_then(|j| j.as_str()) {
+                Some(s) => Dtype::parse(s)?,
+                None => Dtype::F32,
+            },
+            quant: match v.get("quant") {
+                Some(q) if !q.is_null() => Some(QuantSpec::from_json(q)?),
+                _ => None,
+            },
             period: v.req("period").map_err(anyhow::Error::from)?.as_usize().context("period")?,
             streamable: v
                 .get("streamable")
@@ -313,6 +449,17 @@ impl Manifest {
     fn validate(&self) -> Result<()> {
         if self.period == 0 || !self.period.is_power_of_two() {
             bail!("{}: period must be a power of two", self.name);
+        }
+        if self.dtype == Dtype::Int8 {
+            let Some(q) = &self.quant else {
+                bail!(
+                    "{}: dtype int8 requires baked quant params (the 'quant' \
+                     section calibrated at build time)",
+                    self.name
+                );
+            };
+            q.validate(&self.config)
+                .with_context(|| format!("{}: invalid quant spec", self.name))?;
         }
         // Native-interpreted artifacts ship no HLO at all (empty
         // executables map); when executables are present the phase map
@@ -418,6 +565,67 @@ mod tests {
         let bad = mini_manifest_json().replace(r#""step_p1": "b.hlo.txt","#, "");
         let v = json::parse(&bad).unwrap();
         assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parses_dtype_and_quant() {
+        // default: f32, no quant section
+        let v = json::parse(&mini_manifest_json()).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.dtype, Dtype::F32);
+        assert!(m.quant.is_none());
+
+        // int8 with a baked quant spec round-trips
+        let with_quant = mini_manifest_json().replace(
+            r#""period": 2,"#,
+            r#""period": 2,
+               "dtype": "int8",
+               "quant": {"s_in": 0.001, "s_enc": [0.002, 0.003],
+                          "s_dec": [0.004, 0.005], "s_up": {}},"#,
+        );
+        let v = json::parse(&with_quant).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.dtype, Dtype::Int8);
+        let q = m.quant.unwrap();
+        assert_eq!(q.s_enc, vec![0.002, 0.003]);
+        assert!((q.s_in - 0.001).abs() < 1e-9);
+
+        // int8 without quant params is rejected
+        let bad = mini_manifest_json()
+            .replace(r#""period": 2,"#, r#""period": 2, "dtype": "int8","#);
+        let v = json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp/x")).is_err());
+    }
+
+    #[test]
+    fn quant_spec_validation_checks_shapes_and_positivity() {
+        let cfg = ModelConfig {
+            feat: 4,
+            channels: vec![4, 6],
+            kernel: 3,
+            scc: vec![1],
+            shift_pos: None,
+            shift: 1,
+            extrap: vec!["tconv".into()],
+            interp: None,
+        };
+        let mut q = QuantSpec {
+            s_in: 0.1,
+            s_enc: vec![0.1, 0.1],
+            s_dec: vec![0.1, 0.1],
+            s_up: BTreeMap::from([(1usize, 0.1f32)]),
+        };
+        q.validate(&cfg).unwrap();
+        q.s_up.clear();
+        assert!(q.validate(&cfg).is_err(), "tconv position needs s_up");
+        q.s_up.insert(1, 0.1);
+        q.s_enc.pop();
+        assert!(q.validate(&cfg).is_err(), "one scale per layer");
+        q.s_enc.push(0.0);
+        assert!(q.validate(&cfg).is_err(), "scales must be positive");
+        assert_eq!(Dtype::parse("int8").unwrap(), Dtype::Int8);
+        assert_eq!(Dtype::Int8.as_str(), "int8");
+        assert!(Dtype::parse("fp16").is_err());
     }
 
     #[test]

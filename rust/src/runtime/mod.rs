@@ -12,4 +12,4 @@ pub mod synth;
 pub use crate::backend::DeviceWeights;
 pub use engine::{CompiledVariant, Runtime, StateSet, Weights};
 pub use ladder::{warmup_frames, VariantLadder};
-pub use manifest::{list_variants, LayerMacs, Manifest, ModelConfig, TensorSpec};
+pub use manifest::{list_variants, Dtype, LayerMacs, Manifest, ModelConfig, QuantSpec, TensorSpec};

@@ -17,11 +17,15 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::engine::{CompiledVariant, Runtime, Weights};
-use super::manifest::{LayerMacs, Manifest, ModelConfig, TensorSpec};
+use super::manifest::{Dtype, LayerMacs, Manifest, ModelConfig, TensorSpec};
 use crate::backend::native::state_specs;
 use crate::complexity::unet;
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
+
+/// Calibration frames used when synthesizing an int8 variant's baked
+/// quant params (`quant::calibrate` over synthesized activations).
+pub const CALIBRATION_FRAMES: usize = 512;
 
 /// Parameter inventory of a config, in canonical (manifest/weights.bin)
 /// order — mirrors `python/compile/model.py::init_params`.
@@ -67,6 +71,8 @@ pub fn manifest(cfg: &ModelConfig, name: &str, offline_t: usize) -> Manifest {
     Manifest {
         name: name.to_string(),
         config: cfg.clone(),
+        dtype: Dtype::F32,
+        quant: None,
         period: cfg.period(),
         streamable: cfg.interp.is_none(),
         offline_t,
@@ -116,16 +122,53 @@ pub fn he_weights(manifest: &Manifest, seed: u64) -> Weights {
     Weights { tensors }
 }
 
-/// Synthesize and compile a variant in one call.
+/// Synthesize and compile a variant in one call (f32 execution).
 pub fn variant(
     rt: Arc<Runtime>,
     cfg: &ModelConfig,
     name: &str,
     seed: u64,
 ) -> Result<CompiledVariant> {
-    let m = manifest(cfg, name, 256);
+    variant_with_dtype(rt, cfg, name, seed, Dtype::F32)
+}
+
+/// Synthesize and compile a variant at an explicit precision.
+///
+/// `Dtype::Int8` additionally bakes quant params into the manifest:
+/// `quant::calibrate` ranges the f32 reference over
+/// [`CALIBRATION_FRAMES`] synthesized frames (seeded deterministically
+/// from `seed`), so the same `(cfg, name, seed)` triple always yields
+/// the same quantized executable.  The weight tensors themselves are the
+/// same He-initialised f32 set either way — an f32 and an int8 variant
+/// of one config are weight-compatible ladder rungs.
+pub fn variant_with_dtype(
+    rt: Arc<Runtime>,
+    cfg: &ModelConfig,
+    name: &str,
+    seed: u64,
+    dtype: Dtype,
+) -> Result<CompiledVariant> {
+    let mut m = manifest(cfg, name, 256);
     let w = he_weights(&m, seed);
+    if dtype == Dtype::Int8 {
+        m.dtype = Dtype::Int8;
+        m.quant = Some(crate::quant::calibrate(
+            &m,
+            &w,
+            CALIBRATION_FRAMES,
+            seed ^ 0x5EED_CA1B,
+        )?);
+    }
     CompiledVariant::with_weights(rt, m, w)
+}
+
+/// Split a `name[:dtype]` variant spec ("scc2", "stmc:int8") into its
+/// base name and execution precision (f32 when no suffix is given).
+pub fn parse_spec(spec: &str) -> Result<(&str, Dtype)> {
+    match spec.split_once(':') {
+        None => Ok((spec, Dtype::F32)),
+        Some((base, d)) => Ok((base, Dtype::parse(d)?)),
+    }
 }
 
 /// Map an artifact-style variant name to its config, using the default
@@ -140,6 +183,10 @@ pub fn variant(
 /// * `fp<p>_<q>` — S-CC at p with the FP shift above it at q (p < q)
 /// * `pred<n>` — fully predictive: no compression, shift n at layer 1
 /// * `spred<n>` — strided-predictive (App. B): S-CC 4, shift n at layer 1
+///
+/// Any spec may carry a `:<dtype>` suffix (`scc2:int8`) selecting the
+/// execution precision; [`parse_spec`] splits it off, `preset` itself
+/// takes base names only.
 pub fn preset(name: &str) -> Option<ModelConfig> {
     let depth = 7usize;
     let pos = |s: &str| -> Option<usize> {
@@ -185,26 +232,53 @@ pub fn preset(name: &str) -> Option<ModelConfig> {
     None
 }
 
-/// Load a variant from `artifacts/<name>` when built, otherwise
+/// Load a variant from `artifacts/<spec>` when built, otherwise
 /// synthesize it from its preset config (untrained weights).  Returns
 /// `(variant, synthesized)`.
+///
+/// `spec` follows the `name[:dtype]` grammar; a suffixed spec whose
+/// exact directory is not built resolves to the *base* artifact
+/// (`artifacts/scc2` for both `scc2:f32` and `scc2:int8`).  An int8
+/// spec loading a built f32 base gets its quant params calibrated on
+/// the fly — trained artifacts quantize without a separate build step;
+/// an explicit `:f32` spec loads the base artifact verbatim.
 pub fn load_or_synth(
     rt: Arc<Runtime>,
     artifacts: &std::path::Path,
-    name: &str,
+    spec: &str,
     seed: u64,
 ) -> Result<(CompiledVariant, bool)> {
-    let dir = artifacts.join(name);
+    let dir = artifacts.join(spec);
     if dir.join("manifest.json").exists() {
         return Ok((CompiledVariant::load(rt, &dir)?, false));
     }
-    let Some(cfg) = preset(name) else {
+    let (base, dtype) = parse_spec(spec)?;
+    if base != spec {
+        let base_dir = artifacts.join(base);
+        if base_dir.join("manifest.json").exists() {
+            let mut m = Manifest::load(&base_dir)?;
+            let w = Weights::load(&m)?;
+            if dtype == Dtype::Int8 && m.dtype != Dtype::Int8 {
+                m.name = spec.to_string();
+                m.dtype = Dtype::Int8;
+                m.quant = Some(crate::quant::calibrate(
+                    &m,
+                    &w,
+                    CALIBRATION_FRAMES,
+                    seed ^ 0x5EED_CA1B,
+                )?);
+            }
+            return Ok((CompiledVariant::with_weights(rt, m, w)?, false));
+        }
+    }
+    let Some(cfg) = preset(base) else {
         bail!(
-            "artifacts/{name} not built and '{name}' is not a known preset \
-             (stmc | scc<p> | scc<p>_<q> | sscc<p> | fp<p>_<q> | pred<n>)"
+            "artifacts/{base} not built and '{base}' is not a known preset \
+             (stmc | scc<p> | scc<p>_<q> | sscc<p> | fp<p>_<q> | pred<n>, \
+             optionally suffixed :f32 | :int8)"
         );
     };
-    Ok((variant(rt, &cfg, name, seed)?, true))
+    Ok((variant_with_dtype(rt, &cfg, spec, seed, dtype)?, true))
 }
 
 #[cfg(test)]
@@ -235,6 +309,37 @@ mod tests {
         assert!(preset("scc5_2").is_none());
         assert!(preset("pred9").is_none());
         assert!(preset("bogus").is_none());
+    }
+
+    #[test]
+    fn spec_grammar_splits_dtype() {
+        assert_eq!(parse_spec("stmc").unwrap(), ("stmc", Dtype::F32));
+        assert_eq!(parse_spec("scc2:int8").unwrap(), ("scc2", Dtype::Int8));
+        assert_eq!(parse_spec("sscc5:f32").unwrap(), ("sscc5", Dtype::F32));
+        assert!(parse_spec("stmc:fp16").is_err());
+    }
+
+    #[test]
+    fn int8_synthesis_bakes_quant_params() {
+        let rt = Arc::new(crate::runtime::Runtime::native());
+        let cfg = ModelConfig {
+            feat: 4,
+            channels: vec![5, 6],
+            kernel: 3,
+            scc: vec![2],
+            shift_pos: None,
+            shift: 1,
+            extrap: vec!["duplicate".into()],
+            interp: None,
+        };
+        let cv = variant_with_dtype(rt.clone(), &cfg, "scc2:int8", 7, Dtype::Int8).unwrap();
+        assert_eq!(cv.manifest.dtype, Dtype::Int8);
+        assert!(cv.manifest.quant.is_some());
+        // same seed ⇒ weight-compatible with the f32 twin
+        let f32_cv = variant(rt, &cfg, "scc2", 7).unwrap();
+        for (a, b) in cv.weights.tensors.iter().zip(&f32_cv.weights.tensors) {
+            assert_eq!(a.data, b.data);
+        }
     }
 
     #[test]

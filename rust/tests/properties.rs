@@ -3,9 +3,11 @@
 
 use soi::complexity::unet;
 use soi::dsp::{metrics, resample, siggen};
+use soi::quant::{quantize_groups, quantize_per_channel, EluLut};
 use soi::util::json::{self, Json};
 use soi::util::prop;
 use soi::util::rng::Rng;
+use soi::util::tensor::Tensor;
 
 #[test]
 fn prop_json_roundtrip_random_documents() {
@@ -142,6 +144,112 @@ fn prop_histogram_quantiles_bounded_error() {
             if (got - exact).abs() / exact.max(1.0) > 0.05 {
                 return Err(format!("q{q}: {got} vs {exact}"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_roundtrip_error_bounded() {
+    // quantize → dequantize is within half an LSB of each group's scale,
+    // codes stay in ±127, and group maxima hit the grid ends — for both
+    // the per-(out, in)-group and per-channel granularities.
+    prop::check("quant roundtrip", 60, 0x8B17, |rng, _| {
+        let co = 1 + rng.below(5);
+        let ci = 1 + rng.below(5);
+        let k = 1 + rng.below(4);
+        let t = Tensor::new(
+            vec![co, ci, k],
+            (0..co * ci * k)
+                .map(|_| (rng.normal() * rng.range(0.01, 3.0)) as f32)
+                .collect(),
+        );
+        for group in [k, ci * k] {
+            let q = quantize_groups(&t, group).map_err(|e| e.to_string())?;
+            if q.scales.len() != co * ci * k / group {
+                return Err("wrong group count".into());
+            }
+            let deq = q.dequantize();
+            for (i, (&a, &b)) in t.data.iter().zip(&deq.data).enumerate() {
+                let s = q.scale_of(i);
+                if (a - b).abs() > 0.5 * s + 1e-6 {
+                    return Err(format!("[{i}] |{a} - {b}| > {}/2", s));
+                }
+            }
+            if q.data.iter().any(|&c| c == i8::MIN) {
+                return Err("code -128 escapes the symmetric ±127 grid".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_scales_monotone_and_scale_equivariant() {
+    // scaling a kernel by a power of two scales every group scale
+    // *exactly* by it and leaves the codes untouched (exact in binary
+    // floating point); any gain > 1 never shrinks a scale.
+    prop::check("quant scale monotone", 60, 0x5CA1E, |rng, _| {
+        let n = 3 * (1 + rng.below(6));
+        let t = Tensor::new(
+            vec![n / 3, 3],
+            (0..n).map(|_| rng.normal() as f32).collect(),
+        );
+        let q1 = quantize_groups(&t, 3).map_err(|e| e.to_string())?;
+        let pow2 = [2.0f32, 4.0, 0.5][rng.below(3)];
+        let t2 = Tensor::new(t.shape.clone(), t.data.iter().map(|v| v * pow2).collect());
+        let q2 = quantize_groups(&t2, 3).map_err(|e| e.to_string())?;
+        for (gi, (&s1, &s2)) in q1.scales.iter().zip(&q2.scales).enumerate() {
+            let grp = &t.data[gi * 3..(gi + 1) * 3];
+            let zero = grp.iter().all(|&v| v == 0.0);
+            if zero {
+                continue; // all-zero groups pin their scale to 1.0
+            }
+            if s2 != s1 * pow2 {
+                return Err(format!("group {gi}: {s2} != {s1} * {pow2}"));
+            }
+        }
+        if q1.data != q2.data {
+            return Err("power-of-two gain changed the codes".into());
+        }
+        // general monotonicity: a gain > 1 never shrinks any scale
+        let g = rng.range(1.0, 5.0) as f32;
+        let t3 = Tensor::new(t.shape.clone(), t.data.iter().map(|v| v * g).collect());
+        let q3 = quantize_groups(&t3, 3).map_err(|e| e.to_string())?;
+        for (&s1, &s3) in q1.scales.iter().zip(&q3.scales) {
+            if s3 < s1 {
+                return Err(format!("gain {g} shrank a scale: {s3} < {s1}"));
+            }
+        }
+        let _ = quantize_per_channel(&t).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_elu_lut_error_within_bound() {
+    // |LUT(q)·s − ELU(q·s)| ≤ 1.5 s for calibration-realistic scales:
+    // ≤ 0.5 LSB knot rounding + ≤ 0.5 LSB interpolation rounding +
+    // 128 s LSB curvature (negligible at these scales, DESIGN.md §10).
+    prop::check("elu lut error", 30, 0xE1, |rng, _| {
+        let s = rng.range(1e-5, 1e-3) as f32;
+        let lut = EluLut::new(s);
+        for _ in 0..64 {
+            let q = -(rng.below(32767) as i32) - 1 + rng.below(2) as i32; // [-32768+1, 0]
+            let q = q.max(-32767);
+            let got = lut.apply(q) as f64 * s as f64;
+            let want = ((q as f64) * s as f64).exp_m1();
+            if (got - want).abs() > 1.5 * s as f64 {
+                return Err(format!("q={q} s={s}: |{got} - {want}| > 1.5s"));
+            }
+            if lut.apply(q) > 0 || lut.apply(q) < -32767 {
+                return Err("post-activation code out of range".into());
+            }
+        }
+        // positive identity
+        let qp = rng.below(32767) as i32;
+        if lut.apply(qp) != qp {
+            return Err("positive codes must pass through".into());
         }
         Ok(())
     });

@@ -1,0 +1,413 @@
+//! Quantized execution (DESIGN.md §10): fidelity, bit-exactness and
+//! cross-precision serving.
+//!
+//! The acceptance gates of the quant subsystem:
+//!
+//! * output SNR vs the f32 reference ≥ 40 dB on every synthesized
+//!   variant family (stmc, scc2, sscc5 — full-size presets, denoise
+//!   distribution, calibration on a *different* signal seed);
+//! * batched == sequential bit-identity for `QuantExec` (outputs and
+//!   every state tensor), mirroring `tests/batch_equivalence.rs`;
+//! * the FP precompute/rest split equals the monolithic step;
+//! * a mixed-precision ladder validates, and a migration across
+//!   precisions (f32 → int8 and back) is bit-identical to a fresh
+//!   session under the int8 path's own determinism contract
+//!   (mirroring `tests/adaptive_serving.rs`);
+//! * executed int8 MACs match the scheduler's analytic accounting, and
+//!   the server's `macs_int8` attribution sees them.
+
+use std::sync::Arc;
+
+use soi::coordinator::stream::{macs_at_phase, StreamSession};
+use soi::coordinator::{AdaptivePolicy, Server};
+use soi::dsp::{frames, siggen};
+use soi::runtime::{
+    synth, warmup_frames, CompiledVariant, Dtype, ModelConfig, Runtime, StateSet, VariantLadder,
+};
+use soi::util::rng::Rng;
+
+fn rt() -> Arc<Runtime> {
+    Arc::new(Runtime::native())
+}
+
+fn cfg(
+    feat: usize,
+    channels: Vec<usize>,
+    scc: Vec<usize>,
+    shift_pos: Option<usize>,
+) -> ModelConfig {
+    ModelConfig {
+        feat,
+        channels,
+        kernel: 3,
+        extrap: vec!["duplicate".into(); scc.len()],
+        scc,
+        shift_pos,
+        shift: 1,
+        interp: None,
+    }
+}
+
+/// Compile a variant at the requested precision over the shared
+/// deterministic weight set (same seed ⇒ identical f32 tensors for both
+/// precisions — the cross-precision ladder contract).
+fn variant(rt: &Arc<Runtime>, c: &ModelConfig, name: &str, dtype: Dtype) -> Arc<CompiledVariant> {
+    let mut m = synth::manifest(c, name, 32);
+    let w = synth::he_weights(&m, 0xFEED);
+    if dtype == Dtype::Int8 {
+        m.dtype = Dtype::Int8;
+        m.quant = Some(soi::quant::calibrate(&m, &w, 128, 0xCA1).expect("calibration"));
+    }
+    Arc::new(CompiledVariant::with_weights(rt.clone(), m, w).expect("compile"))
+}
+
+/// One small config per variant family (the `batch_equivalence` set).
+fn families() -> Vec<(&'static str, ModelConfig)> {
+    let mut tconv = cfg(4, vec![6, 8], vec![2], None);
+    tconv.extrap = vec!["tconv".into()];
+    let mut pred2 = cfg(4, vec![6, 8], vec![], Some(1));
+    pred2.shift = 2;
+    vec![
+        ("stmc", cfg(4, vec![6, 8], vec![], None)),
+        ("scc2", cfg(4, vec![5, 6, 7], vec![2], None)),
+        ("scc1_3", cfg(4, vec![5, 6, 7], vec![1, 3], None)),
+        ("scc2_tconv", tconv),
+        ("sscc2", cfg(4, vec![5, 6, 7], vec![2], Some(2))),
+        ("fp1_3", cfg(4, vec![5, 6, 7], vec![1], Some(3))),
+        ("shift_below", cfg(4, vec![5, 6, 7], vec![3], Some(1))),
+        ("pred2", pred2),
+    ]
+}
+
+fn random_streams(feat: usize, n: usize, t: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..t)
+                .map(|_| (0..feat).map(|_| rng.normal() as f32 * 0.3).collect())
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_states_identical(name: &str, a: &[StateSet], b: &[StateSet]) {
+    for (si, (sa, sb)) in a.iter().zip(b).enumerate() {
+        for (ta, tb) in sa.tensors.iter().zip(&sb.tensors) {
+            assert_eq!(ta.data, tb.data, "{name}: stream {si} state diverged");
+        }
+    }
+}
+
+#[test]
+fn quant_snr_exceeds_40db_on_all_families() {
+    // Full-size presets with the CLI/bench seed path: calibration runs
+    // on its own synthesized signal, evaluation on a different seed of
+    // the same denoise distribution.
+    let rt = rt();
+    let n_frames = 256usize;
+    for name in ["stmc", "scc2", "sscc5"] {
+        let c = synth::preset(name).unwrap();
+        let f32_cv = synth::variant_with_dtype(rt.clone(), &c, name, 11, Dtype::F32).unwrap();
+        let int8_cv = synth::variant_with_dtype(
+            rt.clone(),
+            &c,
+            &format!("{name}:int8"),
+            11,
+            Dtype::Int8,
+        )
+        .unwrap();
+        let feat = c.feat;
+        let mut rng = Rng::new(0xE7A1);
+        let (noisy, _) = siggen::denoise_pair(&mut rng, feat * n_frames, siggen::FS);
+        let (cols, _) = frames(&noisy, feat);
+
+        let dw_f = f32_cv.device_weights().unwrap();
+        let dw_q = int8_cv.device_weights().unwrap();
+        let mut st_f = f32_cv.init_states();
+        let mut st_q = int8_cv.init_states();
+        let mut sig = 0.0f64;
+        let mut err = 0.0f64;
+        for (t, col) in cols.iter().enumerate() {
+            let yf = f32_cv.step(t, col, &mut st_f, &dw_f).unwrap();
+            let yq = int8_cv.step(t, col, &mut st_q, &dw_q).unwrap();
+            for (a, b) in yf.iter().zip(&yq) {
+                sig += (*a as f64) * (*a as f64);
+                let e = *a as f64 - *b as f64;
+                err += e * e;
+            }
+        }
+        let snr = 10.0 * (sig / err.max(1e-30)).log10();
+        assert!(
+            snr >= 40.0,
+            "{name}: int8 output SNR {snr:.2} dB below the 40 dB acceptance bar"
+        );
+    }
+}
+
+#[test]
+fn quant_step_batch_is_bit_identical_to_sequential() {
+    let rt = rt();
+    for (name, c) in families() {
+        let cv = variant(&rt, &c, name, Dtype::Int8);
+        let dw = cv.device_weights().unwrap();
+        let n = 5usize;
+        let t = 4 * cv.manifest.period;
+        let streams = random_streams(c.feat, n, t, 0xBA7C4);
+
+        let mut seq_states: Vec<StateSet> = (0..n).map(|_| cv.init_states()).collect();
+        let mut seq_out: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+        for tt in 0..t {
+            for si in 0..n {
+                let o = cv
+                    .step(tt, &streams[si][tt], &mut seq_states[si], &dw)
+                    .unwrap();
+                seq_out[si].push(o);
+            }
+        }
+
+        let mut bat_states: Vec<StateSet> = (0..n).map(|_| cv.init_states()).collect();
+        for tt in 0..t {
+            let frame_refs: Vec<&[f32]> = (0..n).map(|si| streams[si][tt].as_slice()).collect();
+            let mut st_refs: Vec<&mut StateSet> = bat_states.iter_mut().collect();
+            let outs = cv.step_batch(tt, &frame_refs, &mut st_refs, &dw).unwrap();
+            for (si, out) in outs.iter().enumerate() {
+                assert_eq!(
+                    out, &seq_out[si][tt],
+                    "{name}: stream {si} frame {tt} diverged"
+                );
+            }
+        }
+        assert_states_identical(name, &seq_states, &bat_states);
+    }
+}
+
+#[test]
+fn quant_fp_split_matches_monolithic_step() {
+    let rt = rt();
+    for (name, c) in families() {
+        let cv = variant(&rt, &c, name, Dtype::Int8);
+        if !cv.has_fp_split() {
+            continue;
+        }
+        let dw = cv.device_weights().unwrap();
+        let t = 4 * cv.manifest.period.max(2);
+        let frames = random_streams(c.feat, 1, t, 0xF00D).remove(0);
+
+        let mut st_all = cv.init_states();
+        let mut st_split = cv.init_states();
+        for (tt, f) in frames.iter().enumerate() {
+            let a = cv.step(tt, f, &mut st_all, &dw).unwrap();
+            cv.precompute(tt, &mut st_split, &dw).unwrap();
+            let b = cv.step_rest(tt, f, &mut st_split, &dw).unwrap();
+            assert_eq!(a, b, "{name}: frame {tt} split output diverged");
+        }
+        assert_states_identical(name, &[st_all], &[st_split]);
+    }
+}
+
+#[test]
+fn quant_offline_matches_streaming() {
+    let rt = rt();
+    for (name, c) in [
+        ("stmc", cfg(4, vec![6, 8], vec![], None)),
+        ("scc2", cfg(4, vec![5, 6, 7], vec![2], None)),
+    ] {
+        let cv = variant(&rt, &c, name, Dtype::Int8);
+        let dw = cv.device_weights().unwrap();
+        let t = 4 * cv.manifest.period.max(2);
+        let frames = random_streams(c.feat, 1, t, 0x0FF1).remove(0);
+        let mut x = soi::util::tensor::Tensor::zeros(vec![c.feat, t]);
+        for (tt, f) in frames.iter().enumerate() {
+            for (i, &v) in f.iter().enumerate() {
+                x.set2(i, tt, v);
+            }
+        }
+        let off = cv.offline(&x, &dw).unwrap();
+        let mut st = cv.init_states();
+        for (tt, f) in frames.iter().enumerate() {
+            let y = cv.step(tt, f, &mut st, &dw).unwrap();
+            for (i, &v) in y.iter().enumerate() {
+                assert_eq!(v, off.at2(i, tt), "{name}: offline diverged at t={tt}");
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_executed_macs_match_scheduler_accounting() {
+    let rt = rt();
+    for (name, c) in [
+        ("stmc", cfg(4, vec![6, 8], vec![], None)),
+        ("scc2", cfg(4, vec![5, 6, 7], vec![2], None)),
+        ("sscc2", cfg(4, vec![5, 6, 7], vec![2], Some(2))),
+    ] {
+        let cv = variant(&rt, &c, name, Dtype::Int8);
+        let dw = cv.device_weights().unwrap();
+        let t = 4 * cv.manifest.period;
+        let frames = random_streams(c.feat, 1, t, 0x3AC5).remove(0);
+        let mut st = cv.init_states();
+        cv.reset_executed_macs();
+        for (tt, f) in frames.iter().enumerate() {
+            cv.step(tt, f, &mut st, &dw).unwrap();
+        }
+        let analytic: f64 = (0..t).map(|tt| macs_at_phase(&cv.manifest, tt)).sum();
+        assert_eq!(
+            cv.executed_macs().unwrap() as f64,
+            analytic,
+            "{name}: measured int8 MACs != scheduler accounting"
+        );
+    }
+}
+
+#[test]
+fn cross_precision_migration_is_bit_exact() {
+    let rt = rt();
+    // (from cfg/dtype, to cfg/dtype): f32 → int8 at both unchanged and
+    // deepened compression, and int8 → f32 back up the ladder.
+    let pairs = [
+        (
+            ("stmc", cfg(4, vec![5, 6, 7], vec![], None), Dtype::F32),
+            ("stmc:int8", cfg(4, vec![5, 6, 7], vec![], None), Dtype::Int8),
+        ),
+        (
+            ("stmc", cfg(4, vec![5, 6, 7], vec![], None), Dtype::F32),
+            ("scc2:int8", cfg(4, vec![5, 6, 7], vec![2], None), Dtype::Int8),
+        ),
+        (
+            ("scc2:int8", cfg(4, vec![5, 6, 7], vec![2], None), Dtype::Int8),
+            ("stmc", cfg(4, vec![5, 6, 7], vec![], None), Dtype::F32),
+        ),
+        (
+            ("stmc:int8", cfg(4, vec![5, 6, 7], vec![], None), Dtype::Int8),
+            ("sscc2:int8", cfg(4, vec![5, 6, 7], vec![2], Some(2)), Dtype::Int8),
+        ),
+    ];
+    for ((na, ca, da), (nb, cb, db)) in pairs {
+        let a = variant(&rt, &ca, na, da);
+        let b = variant(&rt, &cb, nb, db);
+        let dw = Arc::new(a.device_weights().unwrap());
+        let warm = warmup_frames(&cb);
+        let pb = b.manifest.period as u64;
+        let long = (warm as u64 + 9).div_ceil(pb) * pb;
+        for t_switch in [long as usize, 2 * pb as usize] {
+            let total = t_switch + 16;
+            let frames = random_streams(4, 1, total, 0xA11CE ^ t_switch as u64).remove(0);
+
+            let mut sess = StreamSession::new(0, a.clone(), dw.clone());
+            sess.set_history_cap(warm);
+            for f in &frames[..t_switch] {
+                sess.on_frame(f).unwrap();
+            }
+            sess.migrate_to(&b).unwrap();
+            assert_eq!(sess.variant_name(), nb);
+            assert_eq!(sess.dtype(), db, "{na}->{nb}: dtype follows the engine");
+            let mut migrated = Vec::new();
+            for f in &frames[t_switch..] {
+                migrated.push(sess.on_frame(f).unwrap());
+            }
+
+            let mut fresh = StreamSession::new(1, b.clone(), dw.clone());
+            let mut reference = Vec::new();
+            for (tt, f) in frames.iter().enumerate() {
+                let out = fresh.on_frame(f).unwrap();
+                if tt >= t_switch {
+                    reference.push(out);
+                }
+            }
+            assert_eq!(
+                migrated, reference,
+                "{na}->{nb} at t={t_switch}: post-migration outputs diverged"
+            );
+            if db == Dtype::Int8 {
+                assert!(
+                    sess.metrics.macs_int8 > 0.0,
+                    "{na}->{nb}: replay into int8 attributes int8 MACs"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_server_reaches_int8_rungs() {
+    let rt = rt();
+    let ladder = Arc::new(
+        VariantLadder::new(vec![
+            variant(&rt, &cfg(4, vec![5, 6, 7], vec![], None), "stmc", Dtype::F32),
+            variant(&rt, &cfg(4, vec![5, 6, 7], vec![], None), "stmc:int8", Dtype::Int8),
+            variant(&rt, &cfg(4, vec![5, 6, 7], vec![2], None), "scc2:int8", Dtype::Int8),
+        ])
+        .unwrap(),
+    );
+    assert!(ladder.has_int8());
+    let mut server = Server::with_ladder(ladder.clone(), 2);
+    // any traffic is overload: downgrade all the way, immediately
+    server.adaptive = Some(AdaptivePolicy {
+        target_p99_us: 0,
+        queue_high: 1,
+        queue_low: 0,
+        patience_down: 1,
+        patience_up: 1_000_000,
+        cooldown: 0,
+        window: 8,
+        headroom: 0.5,
+    });
+    let n_streams = 6;
+    let n_frames = 48;
+    let streams = random_streams(4, n_streams, n_frames, 0xD0);
+    let report = server.run(&streams).unwrap();
+
+    assert_eq!(report.frames, (n_streams * n_frames) as u64, "every frame served");
+    assert!(report.metrics.migrations > 0, "streams migrated under load");
+    assert!(
+        report.final_levels.values().all(|&l| l == 2),
+        "every stream ended on the cheapest (int8) rung: {:?}",
+        report.final_levels
+    );
+    assert!(
+        report.metrics.macs_int8 > 0.0,
+        "int8 MAC attribution saw quantized traffic"
+    );
+    assert!(
+        report.metrics.int8_fraction() > 0.0 && report.metrics.int8_fraction() <= 1.0,
+        "int8 fraction in (0, 1]: {}",
+        report.metrics.int8_fraction()
+    );
+    assert!(
+        report.metrics.variant_frames.keys().any(|k| k.ends_with(":int8")),
+        "per-variant frame counts name the int8 rungs: {:?}",
+        report.metrics.variant_frames
+    );
+    // batching survived the mixed-precision split: grouped by (rung, phase)
+    assert!(report.metrics.batch_size.count() > 0, "no batched frames");
+}
+
+#[test]
+fn pinned_int8_server_batching_on_off_identical() {
+    let rt = rt();
+    let cv = variant(&rt, &cfg(4, vec![5, 6, 7], vec![2], None), "scc2:int8", Dtype::Int8);
+    let mut rng = Rng::new(0x5EED);
+    let streams: Vec<Vec<Vec<f32>>> = (0..5)
+        .map(|si| {
+            (0..(20 + 3 * si))
+                .map(|_| (0..4).map(|_| rng.normal() as f32 * 0.3).collect())
+                .collect()
+        })
+        .collect();
+    let mut batched = Server::new(cv.clone(), 2);
+    batched.batching = true;
+    let rb = batched.run(&streams).unwrap();
+    let mut sequential = Server::new(cv, 2);
+    sequential.batching = false;
+    let rs = sequential.run(&streams).unwrap();
+    assert_eq!(rb.frames, rs.frames);
+    for sid in 0..5u64 {
+        assert_eq!(
+            rb.outputs[&sid], rs.outputs[&sid],
+            "stream {sid} diverged between batched and sequential int8 serving"
+        );
+    }
+    assert!(rb.metrics.batch_size.count() > 0);
+    // the whole run was quantized
+    assert!((rb.metrics.int8_fraction() - 1.0).abs() < 1e-12);
+}
