@@ -1,0 +1,306 @@
+//! Microkernel A/B bench (DESIGN.md §11): for each kernel family ×
+//! dtype × batch width, times three legs of the same conv —
+//!
+//! * `reference`     — the unpacked scalar loop (the pre-panel
+//!   interpreters' exact accumulation order; for int8 this is
+//!   `soi::quant::kernels`, the golden-vector-pinned reference),
+//! * `packed_scalar` — the packed-panel kernel forced onto the scalar
+//!   ISA (isolates the layout win),
+//! * `packed_simd`   — the packed-panel kernel on the runtime-dispatched
+//!   ISA (adds the vector win; equals `packed_scalar` on machines
+//!   without SIMD).
+//!
+//! Before timing, the legs are cross-checked: `packed_scalar` must match
+//! `reference` bit-for-bit (both dtypes), and `packed_simd` must be
+//! bit-identical for int8 / within the §11 ULP envelope for f32 — so CI's
+//! smoke run doubles as an equivalence gate on real shapes.
+//!
+//! Emits one JSON line per row and rewrites `BENCH_kernels.json` at the
+//! workspace root on full runs.
+//!
+//! Run: `cargo bench --bench kernels`
+//! Smoke: `cargo bench --bench kernels -- --smoke` (seconds, no rewrite;
+//! CI runs this with `RUSTFLAGS=-Ctarget-cpu=native`).
+
+use std::time::Duration;
+
+use soi::kernels::{
+    active_isa, gemm_f32, gemm_f32_on, gemm_i8, gemm_i8_on, Isa, PackedF32, PackedI8,
+};
+use soi::quant::kernels::{conv_win_batch_q, tconv_phase_batch_q};
+use soi::quant::quantize_weights;
+use soi::util::bench::{bench_config, black_box};
+use soi::util::json::Json;
+use soi::util::rng::Rng;
+use soi::util::tensor::Tensor;
+
+/// One benched shape: a conv family of the 7-layer U-Net.
+struct Family {
+    name: &'static str,
+    c_out: usize,
+    c_in: usize,
+    k: usize,
+    /// Transposed-conv families bench one output phase (n = c_in).
+    tconv: bool,
+}
+
+const FAMILIES: [Family; 3] = [
+    Family { name: "conv", c_out: 32, c_in: 32, k: 3, tconv: false },
+    Family { name: "head", c_out: 16, c_in: 32, k: 1, tconv: false },
+    Family { name: "tconv", c_out: 32, c_in: 32, k: 2, tconv: true },
+];
+
+/// Unpacked scalar f32 conv — the pre-panel interpreter's exact order.
+#[allow(clippy::too_many_arguments)]
+fn reference_f32(
+    w: &[f32],
+    c_out: usize,
+    n: usize,
+    bias: &[f32],
+    x: &[f32],
+    bsz: usize,
+    out: &mut [f32],
+) {
+    for o in 0..c_out {
+        for b in 0..bsz {
+            let mut acc = bias[o];
+            for j in 0..n {
+                acc += w[o * n + j] * x[j * bsz + b];
+            }
+            out[o * bsz + b] = acc;
+        }
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn row(
+    fam: &Family,
+    dtype: &str,
+    leg: &str,
+    isa: &str,
+    bsz: usize,
+    mean_ns: f64,
+    p50_ns: f64,
+    macs: usize,
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("kernels".into())),
+        ("family", Json::Str(fam.name.into())),
+        ("dtype", Json::Str(dtype.into())),
+        ("impl", Json::Str(leg.into())),
+        ("isa", Json::Str(isa.into())),
+        ("c_out", Json::Num(fam.c_out as f64)),
+        ("c_in", Json::Num(fam.c_in as f64)),
+        ("k", Json::Num(fam.k as f64)),
+        ("batch", Json::Num(bsz as f64)),
+        ("mean_ns", Json::Num(mean_ns)),
+        ("p50_ns", Json::Num(p50_ns)),
+        ("ns_per_mac", Json::Num(mean_ns / macs as f64)),
+        ("gmacs_per_s", Json::Num(macs as f64 / mean_ns)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let batches: &[usize] = if smoke { &[1, 8] } else { &[1, 4, 16] };
+    let (warm, min_t, min_i) = if smoke {
+        (Duration::from_millis(10), Duration::from_millis(40), 5)
+    } else {
+        (Duration::from_millis(100), Duration::from_millis(400), 20)
+    };
+    let isa = active_isa();
+    println!(
+        "# kernels — scalar vs packed-panel vs SIMD microkernel A/B [isa {}]{}",
+        isa.name(),
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut rng = Rng::new(0x51_AD);
+    let mut rows: Vec<Json> = Vec::new();
+    for fam in &FAMILIES {
+        // reduction length the streaming step sees for this family
+        let n = if fam.tconv { fam.c_in } else { fam.c_in * fam.k };
+        let wt = Tensor::new(
+            vec![fam.c_out, fam.c_in, fam.k],
+            (0..fam.c_out * fam.c_in * fam.k)
+                .map(|_| rng.normal() as f32 * 0.3)
+                .collect(),
+        );
+        let bias: Vec<f32> = (0..fam.c_out).map(|_| rng.normal() as f32 * 0.05).collect();
+        // flat (c_out, n) weight view of the benched op
+        let wflat: Vec<f32> = if fam.tconv {
+            (0..fam.c_out * fam.c_in)
+                .map(|oi| wt.data[oi * fam.k]) // phase 0 taps
+                .collect()
+        } else {
+            wt.data.clone()
+        };
+        let pf = if fam.tconv {
+            PackedF32::from_conv_tap(&wt, 0).unwrap()
+        } else {
+            PackedF32::from_conv(&wt).unwrap()
+        };
+        let qw = quantize_weights(&wt).unwrap();
+        let g: Vec<f32> = qw
+            .scales
+            .iter()
+            .enumerate()
+            .map(|(gi, &sw)| sw * 2e-4 * (1.0 + (gi % 5) as f32 * 0.1))
+            .collect();
+        let pq = if fam.tconv {
+            PackedI8::pack_tap(&qw.data, fam.c_out, fam.c_in, fam.k, 0, &g, &bias)
+        } else {
+            PackedI8::pack(&qw.data, fam.c_out, fam.c_in, fam.k, &g, &bias)
+        };
+
+        for &bsz in batches {
+            let macs = fam.c_out * n * bsz;
+            let xf: Vec<f32> = (0..n * bsz).map(|_| rng.normal() as f32 * 0.5).collect();
+            let xq: Vec<i32> = (0..n * bsz).map(|_| (rng.normal() * 9000.0) as i32).collect();
+            let mut out = vec![0.0f32; fam.c_out * bsz];
+            let mut want = vec![0.0f32; fam.c_out * bsz];
+
+            // ---- equivalence gate (cheap; runs in smoke too) ----
+            reference_f32(&wflat, fam.c_out, n, &bias, &xf, bsz, &mut want);
+            gemm_f32_on(Isa::Scalar, &pf, &bias, &xf, bsz, &mut out, false);
+            assert!(
+                out.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{}: packed_scalar f32 != reference",
+                fam.name
+            );
+            gemm_f32(&pf, &bias, &xf, bsz, &mut out, false);
+            let tol = 1e-5 * (1.0 + n as f32);
+            assert!(
+                max_abs_diff(&out, &want) <= tol,
+                "{}: packed_simd f32 beyond ULP envelope",
+                fam.name
+            );
+            let (mut acc, mut pre) = (vec![0i32; bsz], vec![0.0f32; bsz]);
+            if fam.tconv {
+                tconv_phase_batch_q(&qw, &g, &bias, 0, &xq, bsz, &mut pre, &mut want);
+            } else {
+                conv_win_batch_q(&qw, &g, &bias, &xq, bsz, &mut acc, &mut pre, &mut want);
+            }
+            gemm_i8(&pq, &xq, bsz, &mut out);
+            assert!(
+                out.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{}: packed int8 != reference (must be bit-identical)",
+                fam.name
+            );
+
+            // ---- timed legs ----
+            let legs: [(&str, &str, Box<dyn FnMut() + '_>); 6] = {
+                let (w2, b2, x2, p2, q2, g2, xq2) = (&wflat, &bias, &xf, &pf, &pq, &g, &xq);
+                let qw2 = &qw;
+                [
+                    (
+                        "f32",
+                        "reference",
+                        Box::new({
+                            let mut o = vec![0.0f32; fam.c_out * bsz];
+                            move || {
+                                reference_f32(w2, fam.c_out, n, b2, x2, bsz, &mut o);
+                                black_box(&o);
+                            }
+                        }),
+                    ),
+                    (
+                        "f32",
+                        "packed_scalar",
+                        Box::new({
+                            let mut o = vec![0.0f32; fam.c_out * bsz];
+                            move || {
+                                gemm_f32_on(Isa::Scalar, p2, b2, x2, bsz, &mut o, false);
+                                black_box(&o);
+                            }
+                        }),
+                    ),
+                    (
+                        "f32",
+                        "packed_simd",
+                        Box::new({
+                            let mut o = vec![0.0f32; fam.c_out * bsz];
+                            move || {
+                                gemm_f32(p2, b2, x2, bsz, &mut o, false);
+                                black_box(&o);
+                            }
+                        }),
+                    ),
+                    (
+                        "int8",
+                        "reference",
+                        Box::new({
+                            let mut o = vec![0.0f32; fam.c_out * bsz];
+                            let (mut a, mut p) = (vec![0i32; bsz], vec![0.0f32; bsz]);
+                            let tc = fam.tconv;
+                            move || {
+                                if tc {
+                                    tconv_phase_batch_q(qw2, g2, b2, 0, xq2, bsz, &mut p, &mut o);
+                                } else {
+                                    conv_win_batch_q(qw2, g2, b2, xq2, bsz, &mut a, &mut p, &mut o);
+                                }
+                                black_box(&o);
+                            }
+                        }),
+                    ),
+                    (
+                        "int8",
+                        "packed_scalar",
+                        Box::new({
+                            let mut o = vec![0.0f32; fam.c_out * bsz];
+                            move || {
+                                gemm_i8_on(Isa::Scalar, q2, xq2, bsz, &mut o);
+                                black_box(&o);
+                            }
+                        }),
+                    ),
+                    (
+                        "int8",
+                        "packed_simd",
+                        Box::new({
+                            let mut o = vec![0.0f32; fam.c_out * bsz];
+                            move || {
+                                gemm_i8(q2, xq2, bsz, &mut o);
+                                black_box(&o);
+                            }
+                        }),
+                    ),
+                ]
+            };
+            for (dtype, leg, mut f) in legs {
+                let leg_isa = if leg == "packed_simd" { isa.name() } else { "scalar" };
+                let r = bench_config(
+                    &format!("{}[{dtype} {leg} B={bsz}]", fam.name),
+                    warm,
+                    min_t,
+                    min_i,
+                    &mut f,
+                );
+                println!("{}  ({:.2} ns/MAC)", r.report(), r.mean_ns / macs as f64);
+                let j = row(fam, dtype, leg, leg_isa, bsz, r.mean_ns, r.p50_ns, macs);
+                println!("{}", j.to_string());
+                rows.push(j);
+            }
+        }
+    }
+
+    if smoke {
+        println!("# smoke mode: baseline file left untouched");
+        return Ok(());
+    }
+    let baseline = Json::obj(vec![
+        ("bench", Json::Str("kernels".into())),
+        ("isa", Json::Str(isa.name().into())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    // cargo runs bench binaries with cwd at the package root (rust/);
+    // the committed baseline lives one level up at the workspace root
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_kernels.json");
+    std::fs::write(&path, baseline.to_string_pretty())?;
+    println!("# wrote {}", path.display());
+    Ok(())
+}

@@ -84,6 +84,16 @@ fn main() -> anyhow::Result<()> {
                     ("frames_per_s", Json::Num(r.throughput_per_sec())),
                     ("macs_per_frame", Json::Num(cv.manifest.macs_per_frame)),
                     (
+                        // efficiency, not just counts: mean per-frame
+                        // wall time over the period-average MACs/frame
+                        "ns_per_mac",
+                        if cv.manifest.macs_per_frame > 0.0 {
+                            Json::Num(r.mean_ns / cv.manifest.macs_per_frame)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                    (
                         "snr_db",
                         if snr.is_nan() { Json::Null } else { Json::Num(snr) },
                     ),

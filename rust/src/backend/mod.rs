@@ -15,11 +15,12 @@
 //!   the variant manifest (causal/STMC conv1d, stride compression,
 //!   extrapolation, per-layer `rate_div` phase gating matching
 //!   `coordinator::scheduler` and eq. 4 of the paper).  This is the
-//!   default: it runs on anything that compiles Rust.  Its registry is
-//!   dtype-aware: an int8 manifest compiles to the quantized executable
-//!   (`crate::quant::QuantVariant`, DESIGN.md §10) instead of the f32
-//!   interpreter — same trait, same weight upload, so ladders mix
-//!   precisions freely.
+//!   default: it runs on anything that compiles Rust, executing on the
+//!   runtime-dispatched SIMD microkernels of [`crate::kernels`]
+//!   (DESIGN.md §11).  Its registry is dtype-aware: an int8 manifest
+//!   compiles to the quantized executable (`crate::quant::QuantVariant`,
+//!   DESIGN.md §10) instead of the f32 interpreter — same trait, same
+//!   weight upload, so ladders mix precisions freely.
 //! * `pjrt` (`--features pjrt`) — the HLO-text/PJRT execution engine
 //!   for AOT-compiled artifacts from `python/compile/aot.py` (f32 only).
 
@@ -27,23 +28,185 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
+use crate::kernels::PackedF32;
 use crate::runtime::engine::{StateSet, Weights};
-use crate::runtime::manifest::Manifest;
+use crate::runtime::manifest::{Manifest, ModelConfig};
 use crate::util::tensor::Tensor;
+
+/// One phase's precompiled schedule decisions, all indexed `l - 1` —
+/// the step-plan table both interpreters consult per frame instead of
+/// per-layer modular arithmetic (DESIGN.md §11).  Built by
+/// [`build_phase_plans`] and shared between the f32 and int8
+/// executables so the schedule semantics cannot drift between them
+/// (`backend::native`'s `phase_plans_mirror_rate_arithmetic` test pins
+/// the builder for both).
+pub(crate) struct PhasePlan {
+    /// Encoder layer ticks its STMC window (`phase % r_in == 0`).
+    pub enc_tick: Box<[bool]>,
+    /// Encoder layer computes (S-CC layers fire every other tick).
+    pub enc_fire: Box<[bool]>,
+    /// Decoder layer computes (`phase % r_out == 0`); at S-CC positions
+    /// this doubles as the "fresh extrapolation" flag.
+    pub dec_run: Box<[bool]>,
+}
+
+/// Precompile a config's per-phase schedule decisions (one entry per
+/// phase in `0..period`).
+pub(crate) fn build_phase_plans(cfg: &ModelConfig) -> Vec<PhasePlan> {
+    let depth = cfg.depth();
+    (0..cfg.period())
+        .map(|phase| PhasePlan {
+            enc_tick: (1..=depth).map(|l| phase % cfg.r_in(l) == 0).collect(),
+            enc_fire: (1..=depth)
+                .map(|l| {
+                    if cfg.scc.contains(&l) {
+                        phase % (2 * cfg.r_in(l)) == 0
+                    } else {
+                        phase % cfg.r_in(l) == 0
+                    }
+                })
+                .collect(),
+            dec_run: (1..=depth).map(|l| phase % cfg.r_out(l) == 0).collect(),
+        })
+        .collect()
+}
+
+/// The packed forms of one rank-3 weight tensor, built once at upload
+/// time (DESIGN.md §11).
+pub struct PanelSet {
+    /// The `(C_out, C_in · K)` GEMM panel every streaming/offline conv
+    /// executes on.
+    pub gemm: PackedF32,
+    /// For 2-tap kernels only: the per-output-phase `(C_out, C_in)`
+    /// panels of a stride-2 transposed conv.
+    pub phases: Option<Box<[PackedF32; 2]>>,
+}
+
+/// Host-resident weights plus the packed panels the native kernels
+/// execute on.  Built once per upload ([`InferenceBackend::upload_weights`])
+/// and shared by every variant, stream and worker through the `Arc` in
+/// [`DeviceWeights::Host`] — ladder rungs and worker threads no longer
+/// deep-copy the tensor set.
+pub struct HostWeights {
+    weights: Weights,
+    panels: Vec<Option<PanelSet>>,
+}
+
+impl HostWeights {
+    /// Wrap host weights, packing every rank-3 tensor (the conv kernels)
+    /// into cache-blocked panels.
+    ///
+    /// 2-tap tensors get *both* forms — the flat GEMM panel and the
+    /// per-phase panels — on purpose: at upload time a `(C, C, 2)`
+    /// tensor's role is unknown (a transposed-conv kernel executes
+    /// through its phase panels, a regular `K = 2` conv through the
+    /// flat one), and the duplicated packing of the small `up.w`
+    /// tensors is cheaper than threading per-variant role information
+    /// into the variant-agnostic upload.
+    pub fn new(weights: Weights) -> HostWeights {
+        let panels = weights
+            .tensors
+            .iter()
+            .map(|t| {
+                let gemm = PackedF32::from_conv(t)?;
+                let phases = if t.shape.len() == 3 && t.shape[2] == 2 {
+                    Some(Box::new([
+                        PackedF32::from_conv_tap(t, 0)?,
+                        PackedF32::from_conv_tap(t, 1)?,
+                    ]))
+                } else {
+                    None
+                };
+                Some(PanelSet { gemm, phases })
+            })
+            .collect();
+        HostWeights { weights, panels }
+    }
+
+    /// The wrapped host weight set (manifest parameter order).
+    pub fn weights(&self) -> &Weights {
+        &self.weights
+    }
+
+    /// The raw parameter tensors (manifest parameter order).
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.weights.tensors
+    }
+
+    /// The GEMM panel of parameter `i`, if it is a conv kernel.
+    pub fn panel(&self, i: usize) -> Option<&PackedF32> {
+        self.panels.get(i)?.as_ref().map(|p| &p.gemm)
+    }
+
+    /// Output-phase `ph` panel of a 2-tap (transposed-conv) kernel.
+    pub fn phase_panel(&self, i: usize, ph: usize) -> Option<&PackedF32> {
+        let set = self.panels.get(i)?.as_ref()?;
+        set.phases.as_ref().map(|ps| &ps[ph])
+    }
+}
 
 /// Weights in whatever form a backend executes from.
 ///
-/// The native backend computes straight from host memory; the pjrt
-/// backend holds device buffers uploaded once per variant and shared by
-/// every stream.
+/// The native backend computes straight from host memory (raw tensors
+/// plus their packed panels); the pjrt backend holds device buffers
+/// uploaded once per variant.  Both variants are cheap to clone — the
+/// payload is behind an `Arc`, so sessions, workers and ladder rungs
+/// share one physical copy.
+#[derive(Clone)]
 pub enum DeviceWeights {
-    /// Host-resident tensors in manifest parameter order.
-    Host(Weights),
+    /// Host-resident tensors + packed panels, shared by reference.
+    Host(Arc<HostWeights>),
     /// PJRT device buffers in manifest parameter order.
     #[cfg(feature = "pjrt")]
-    Pjrt(Vec<xla::PjRtBuffer>),
+    Pjrt(Arc<Vec<xla::PjRtBuffer>>),
+}
+
+impl DeviceWeights {
+    /// Wrap host weights (packing their conv panels) for the native
+    /// backend.
+    pub fn host(weights: Weights) -> DeviceWeights {
+        DeviceWeights::Host(Arc::new(HostWeights::new(weights)))
+    }
+}
+
+/// Where a streaming step writes its output frames (crate-internal: the
+/// native interpreters fill caller-owned buffers so the steady state
+/// allocates nothing).
+pub(crate) enum OutSink<'a> {
+    /// No output wanted (FP precompute pass).
+    Discard,
+    /// Single-stream output frame (`B == 1`).
+    Single(&'a mut Vec<f32>),
+    /// One output frame per stream of the batch.
+    Batch(&'a mut Vec<Vec<f32>>),
+}
+
+impl OutSink<'_> {
+    /// Write a `(c, bsz)` column-stacked output panel into the sink,
+    /// reusing the destination buffers' capacity.
+    pub(crate) fn write(&mut self, m: &[f32], bsz: usize, c: usize) {
+        match self {
+            OutSink::Discard => {}
+            OutSink::Single(out) => {
+                debug_assert_eq!(bsz, 1);
+                out.clear();
+                out.extend_from_slice(&m[..c]);
+            }
+            OutSink::Batch(outs) => {
+                if outs.len() != bsz {
+                    outs.resize_with(bsz, Vec::new);
+                }
+                for (si, o) in outs.iter_mut().enumerate() {
+                    o.clear();
+                    o.extend((0..c).map(|i| m[i * bsz + si]));
+                }
+            }
+        }
+    }
 }
 
 /// A runtime capable of executing SOI variants.
@@ -59,8 +222,10 @@ pub trait InferenceBackend: Send + Sync {
     /// Compile one variant manifest into an executable form.
     fn compile_variant(&self, manifest: &Manifest) -> Result<Box<dyn VariantExec>>;
 
-    /// Prepare weights for execution (upload for pjrt, pass-through for
-    /// native).  Tensors must be in manifest parameter order.
+    /// Prepare weights for execution (device upload for pjrt; wrap +
+    /// panel-pack for native).  Tensors must be in manifest parameter
+    /// order.  The result is cheaply clonable and shared — callers
+    /// should upload once and clone the handle.
     fn upload_weights(&self, weights: &Weights) -> Result<DeviceWeights>;
 }
 
@@ -70,6 +235,14 @@ pub trait InferenceBackend: Send + Sync {
 /// pass the raw frame counter (implementations reduce modulo the
 /// period).  `states` is the per-stream partial-state cache created by
 /// [`VariantExec::init_states`] and mutated in place by every step.
+///
+/// The `*_into` methods are the allocation-free forms: they fill
+/// caller-owned output buffers (reusing capacity), and on the native
+/// backends the whole step runs out of a recycled
+/// [`crate::kernels::StepArena`] — `rust/tests/hot_path_alloc.rs` proves
+/// zero steady-state allocations per step.  The owned-return methods
+/// remain for convenience and are implemented in terms of the `_into`
+/// forms (or vice versa for backends that predate them).
 pub trait VariantExec: Send + Sync {
     /// Fresh zeroed per-stream partial states.
     fn init_states(&self) -> StateSet;
@@ -86,6 +259,20 @@ pub trait VariantExec: Send + Sync {
         states: &mut StateSet,
         weights: &DeviceWeights,
     ) -> Result<Vec<f32>>;
+
+    /// [`VariantExec::step`] writing into a caller-owned buffer (cleared
+    /// and refilled; capacity is reused).  Default delegates to `step`.
+    fn step_into(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        *out = self.step(phase, frame, states, weights)?;
+        Ok(())
+    }
 
     /// FP precompute: the delayed-region part of inference `phase`;
     /// consumes no input frame, only updates states.
@@ -104,6 +291,20 @@ pub trait VariantExec: Send + Sync {
         states: &mut StateSet,
         weights: &DeviceWeights,
     ) -> Result<Vec<f32>>;
+
+    /// [`VariantExec::step_rest`] writing into a caller-owned buffer.
+    /// Default delegates to `step_rest`.
+    fn step_rest_into(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        *out = self.step_rest(phase, frame, states, weights)?;
+        Ok(())
+    }
 
     /// Phase-aligned batched streaming step (DESIGN.md §8): one inference
     /// for each of `frames.len()` streams that all sit at the same
@@ -136,6 +337,22 @@ pub trait VariantExec: Send + Sync {
             .collect()
     }
 
+    /// [`VariantExec::step_batch`] writing into caller-owned buffers
+    /// (`outs` is resized to the batch width; inner buffers are cleared
+    /// and refilled, reusing capacity).  Default delegates to
+    /// `step_batch`.
+    fn step_batch_into(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        *outs = self.step_batch(phase, frames, states, weights)?;
+        Ok(())
+    }
+
     /// Phase-aligned batched FP rest pass: [`VariantExec::step_rest`] for
     /// a batch of streams whose `precompute` already ran.  Defaults to
     /// the sequential loop exactly like [`VariantExec::step_batch`].
@@ -158,6 +375,20 @@ pub trait VariantExec: Send + Sync {
             .zip(states.iter_mut())
             .map(|(frame, st)| self.step_rest(phase, frame, st, weights))
             .collect()
+    }
+
+    /// [`VariantExec::step_rest_batch`] writing into caller-owned
+    /// buffers.  Default delegates to `step_rest_batch`.
+    fn step_rest_batch_into(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        *outs = self.step_rest_batch(phase, frames, states, weights)?;
+        Ok(())
     }
 
     /// Run the offline (full-sequence) network over (feat, T) frames.

@@ -24,23 +24,40 @@
 //! (`coordinator::stream::macs_at_phase`) can be verified against what
 //! actually ran.
 //!
+//! Execution runs on the SIMD microkernel substrate (DESIGN.md §11):
+//! conv weights are repacked once at upload time into cache-blocked
+//! [`crate::kernels::PackedF32`] panels (inside [`HostWeights`]), every
+//! conv — streaming, FP pre/rest, *and* offline — is one
+//! [`crate::kernels::gemm_f32`] call with a fused bias + ELU epilogue,
+//! and all intermediates come from the variant's recycled
+//! [`crate::kernels::StepArena`], so the steady state allocates nothing
+//! (`rust/tests/hot_path_alloc.rs`).  The per-phase schedule decisions
+//! (which layers tick/fire/compute) are precompiled into `PhasePlan`
+//! tables at variant-compile time, so the hot loop does no modular
+//! arithmetic.
+//!
 //! Streaming execution is *batched* (DESIGN.md §8): the interpreter has a
-//! single code path (`NativeVariant::run_step_batch`), which runs a
+//! single code path (`NativeVariant::exec_step`), which runs a
 //! phase-aligned group of B streams by stacking their activations into
-//! (C, B) matrices and executing each conv as one blocked GEMM over the
-//! batch (fused bias + ELU, thread-local scratch buffers so the steady
-//! state is allocation-free).  The single-stream entry points are the
-//! B == 1 case of the same path, and per-stream accumulation order is
+//! (C, B) matrices and executing each conv as one panel GEMM over the
+//! batch.  The single-stream entry points are the B == 1 case of the
+//! same path, and the kernels' per-stream accumulation order is
 //! batch-size-independent, so batched and sequential serving are
 //! bit-identical — `tests/batch_equivalence.rs` asserts it.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
-use super::{DeviceWeights, InferenceBackend, VariantExec};
+use super::{
+    build_phase_plans, DeviceWeights, HostWeights, InferenceBackend, OutSink, PhasePlan,
+    VariantExec,
+};
+use crate::kernels::{
+    gemm_f32, next_arena_id, offline_put, offline_take, with_arena, ArenaSpec, PackedF32,
+    StepArena,
+};
 use crate::runtime::engine::{StateSet, Weights};
 use crate::runtime::manifest::{Manifest, ModelConfig, TensorSpec};
 use crate::util::tensor::Tensor;
@@ -68,8 +85,12 @@ impl InferenceBackend for NativeBackend {
         }
     }
 
+    /// Wrap host weights for execution, packing every conv kernel into
+    /// its cache-blocked panels exactly once; the returned handle is
+    /// `Arc`-shared, so variants, streams and workers never duplicate
+    /// the tensor set.
     fn upload_weights(&self, weights: &Weights) -> Result<DeviceWeights> {
-        Ok(DeviceWeights::Host(weights.clone()))
+        Ok(DeviceWeights::host(weights.clone()))
     }
 }
 
@@ -139,6 +160,15 @@ enum Part {
     Rest,
 }
 
+/// Per-layer channel dimensions, resolved once at compile time so the
+/// hot loop never walks the config's channel list.
+struct LayerDims {
+    enc_ci: usize,
+    enc_co: usize,
+    dec_ci: usize,
+    dec_co: usize,
+}
+
 /// One variant compiled for the native backend.
 pub struct NativeVariant {
     cfg: ModelConfig,
@@ -151,11 +181,16 @@ pub struct NativeVariant {
     tconv: Vec<bool>,  // 1-based: extrapolation at l is a learned tconv
     specs: Vec<TensorSpec>,
     idx: Indices,
+    dims: Vec<LayerDims>,  // indexed l-1
+    plans: Vec<PhasePlan>, // indexed by phase
+    arena_id: u64,
+    arena_spec: ArenaSpec,
     macs: AtomicU64,
 }
 
 impl NativeVariant {
-    /// Compile (validate + index) one manifest for native execution.
+    /// Compile (validate + index + plan) one manifest for native
+    /// execution.
     pub fn new(manifest: &Manifest) -> Result<NativeVariant> {
         let cfg = manifest.config.clone();
         let depth = cfg.depth();
@@ -282,8 +317,24 @@ impl NativeVariant {
         let head_w = pslot("head.w", &[cfg.feat, cfg.dec_out_ch(1), 1])?;
         let head_b = pslot("head.b", &[cfg.feat])?;
 
+        // ---- precompiled per-layer dims, phase plans, arena spec ----
+        let mut dims = Vec::with_capacity(depth);
+        let mut sizes = vec![cfg.feat];
+        for l in 1..=depth {
+            let d = LayerDims {
+                enc_ci: cfg.enc_in_ch(l),
+                enc_co: cfg.enc_out_ch(l),
+                dec_ci: cfg.dec_in_ch(l),
+                dec_co: cfg.dec_out_ch(l),
+            };
+            sizes.extend([d.enc_ci, d.enc_ci * k, d.enc_co, d.dec_ci, d.dec_ci * k, d.dec_co]);
+            dims.push(d);
+        }
+        let period = cfg.period();
+        let plans = build_phase_plans(&cfg);
+
         Ok(NativeVariant {
-            period: cfg.period(),
+            period,
             idx: Indices {
                 enc_win,
                 dec_win,
@@ -308,23 +359,28 @@ impl NativeVariant {
             is_scc,
             tconv,
             specs,
+            dims,
+            plans,
+            arena_id: next_arena_id(),
+            arena_spec: ArenaSpec::new(sizes, Vec::new()),
             macs: AtomicU64::new(0),
         })
     }
 
-    /// Resolve host weights from the backend-tagged handle.
-    fn host<'a>(&self, dw: &'a DeviceWeights) -> Result<&'a Weights> {
+    /// Resolve host weights (tensors + panels) from the backend-tagged
+    /// handle.
+    fn host<'a>(&self, dw: &'a DeviceWeights) -> Result<&'a HostWeights> {
         match dw {
-            DeviceWeights::Host(w) => {
-                if w.tensors.len() != self.idx.n_params {
+            DeviceWeights::Host(hw) => {
+                if hw.tensors().len() != self.idx.n_params {
                     bail!(
                         "{}: weights hold {} tensors, manifest wants {}",
                         self.name,
-                        w.tensors.len(),
+                        hw.tensors().len(),
                         self.idx.n_params
                     );
                 }
-                Ok(w)
+                Ok(hw)
             }
             #[cfg(feature = "pjrt")]
             DeviceWeights::Pjrt(_) => {
@@ -333,132 +389,24 @@ impl NativeVariant {
         }
     }
 
-    // ---- counted kernels --------------------------------------------------
-
-    /// Batched dense step conv over column-stacked windows: `xwin` is the
-    /// (C_in·K, B) matrix holding one flattened window per stream column,
-    /// and the (C_out, B) result lands in `out`.
-    ///
-    /// The loop is a register-blocked GEMM: one weight row streams over
-    /// the whole batch panel, so every weight element is loaded once per
-    /// *batch* instead of once per *stream*, and the inner axpy runs over
-    /// contiguous memory.  Per-stream accumulation order (bias first,
-    /// then taps in row order) is exactly the B == 1 order, so batched
-    /// and sequential execution agree bit-for-bit.
-    fn conv_win_batch(&self, w: &Tensor, b: &Tensor, xwin: &[f32], bsz: usize, out: &mut [f32]) {
-        let c_out = w.shape[0];
-        let n = xwin.len() / bsz;
-        debug_assert_eq!(w.data.len(), c_out * n);
-        debug_assert_eq!(out.len(), c_out * bsz);
-        let mut acc = scratch_take(bsz);
-        for o in 0..c_out {
-            let row = &w.data[o * n..(o + 1) * n];
-            acc.fill(b.data[o]);
-            for (j, &wv) in row.iter().enumerate() {
-                let xs = &xwin[j * bsz..(j + 1) * bsz];
-                for (a, &x) in acc.iter_mut().zip(xs.iter()) {
-                    *a += wv * x;
-                }
-            }
-            out[o * bsz..(o + 1) * bsz].copy_from_slice(&acc);
-        }
-        scratch_put(acc);
-        self.macs.fetch_add((c_out * n * bsz) as u64, Ordering::Relaxed);
+    /// The packed GEMM panel of conv parameter `i`.
+    fn panel<'a>(&self, hw: &'a HostWeights, i: usize) -> Result<&'a PackedF32> {
+        hw.panel(i)
+            .with_context(|| format!("{}: parameter {i} carries no packed panel", self.name))
     }
 
-    /// Batched stride-2 transposed-conv phase: `w[:, :, ph] @ x + b` for
-    /// a (C_in, B) activation panel `x`, writing (C_out, B) into `out`.
-    /// Same blocked-GEMM shape and bit-exactness argument as
-    /// [`NativeVariant::conv_win_batch`].
-    fn tconv_phase_batch(
-        &self,
-        w: &Tensor,
-        b: &Tensor,
-        ph: usize,
-        x: &[f32],
-        bsz: usize,
-        out: &mut [f32],
-    ) {
-        let c_out = w.shape[0];
-        let c_in = w.shape[1];
-        debug_assert_eq!(x.len(), c_in * bsz);
-        let mut acc = scratch_take(bsz);
-        for o in 0..c_out {
-            acc.fill(b.data[o]);
-            for i in 0..c_in {
-                let wv = w.data[o * c_in * 2 + i * 2 + ph];
-                let xs = &x[i * bsz..(i + 1) * bsz];
-                for (a, &xv) in acc.iter_mut().zip(xs.iter()) {
-                    *a += wv * xv;
-                }
-            }
-            out[o * bsz..(o + 1) * bsz].copy_from_slice(&acc);
-        }
-        scratch_put(acc);
-        self.macs
-            .fetch_add((c_out * c_in * bsz) as u64, Ordering::Relaxed);
-    }
-
-    /// One output phase of a stride-2 transposed conv for a single
-    /// stream: `w[:, :, ph] @ x + b` (offline path).
-    fn tconv_phase(&self, w: &Tensor, b: &Tensor, ph: usize, x: &[f32]) -> Vec<f32> {
-        let c_out = w.shape[0];
-        let c_in = w.shape[1];
-        let mut out = Vec::with_capacity(c_out);
-        for o in 0..c_out {
-            let mut acc = b.data[o];
-            for (i, xv) in x.iter().enumerate() {
-                acc += w.data[o * c_in * 2 + i * 2 + ph] * xv;
-            }
-            out.push(acc);
-        }
-        self.macs.fetch_add((c_out * c_in) as u64, Ordering::Relaxed);
-        out
-    }
-
-    /// Causal stride-1 conv over a whole (C_in, T) sequence.
-    fn conv_full(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
-        let c_in = x.shape[0];
-        let t = x.shape[1];
-        let c_out = w.shape[0];
-        let k = w.shape[2];
-        let mut out = Tensor::zeros(vec![c_out, t]);
-        for o in 0..c_out {
-            for tt in 0..t {
-                let mut acc = b.data[o];
-                for i in 0..c_in {
-                    let wrow = &w.data[(o * c_in + i) * k..(o * c_in + i + 1) * k];
-                    for (j, wv) in wrow.iter().enumerate() {
-                        let src = tt as isize + j as isize - (k as isize - 1);
-                        if src >= 0 {
-                            acc += wv * x.at2(i, src as usize);
-                        }
-                    }
-                }
-                out.set2(o, tt, acc);
-            }
-        }
-        self.macs
-            .fetch_add((c_out * c_in * k * t) as u64, Ordering::Relaxed);
-        out
+    /// The output-phase `ph` panel of 2-tap (transposed-conv) parameter
+    /// `i`.
+    fn phase_panel<'a>(&self, hw: &'a HostWeights, i: usize, ph: usize) -> Result<&'a PackedF32> {
+        hw.phase_panel(i, ph)
+            .with_context(|| format!("{}: parameter {i} carries no phase panels", self.name))
     }
 
     // ---- streaming step (batched; B == 1 is the single-stream case) -------
 
-    /// One inference (or one FP part of it) at schedule position `phase`
-    /// for a phase-aligned batch of `states.len()` streams.
-    ///
-    /// This is the *only* streaming code path: [`VariantExec::step`],
-    /// [`VariantExec::precompute`] and [`VariantExec::step_rest`] all run
-    /// it with B == 1, so the batched and sequential paths cannot diverge
-    /// in schedule logic — only the kernels see the batch, and those
-    /// preserve per-stream accumulation order bit-for-bit.
-    ///
-    /// Every batch-wide activation is a (C, B) matrix flattened row-major
-    /// (`buf[c * B + s]` = channel `c` of stream `s`), so the GEMM inner
-    /// loop runs contiguously across the batch.  All intermediates come
-    /// from a thread-local scratch pool: the serving steady state
-    /// allocates nothing but the returned output frames.
+    /// Validate a step request, then execute it inside this variant's
+    /// per-thread [`StepArena`].  Returns whether an output was written
+    /// to the sink.
     fn run_step_batch(
         &self,
         phase: usize,
@@ -466,7 +414,8 @@ impl NativeVariant {
         states: &mut [&mut StateSet],
         dw: &DeviceWeights,
         part: Part,
-    ) -> Result<Option<Vec<Vec<f32>>>> {
+        sink: &mut OutSink,
+    ) -> Result<bool> {
         let bsz = states.len();
         if self.cfg.interp.is_some() {
             bail!(
@@ -487,12 +436,7 @@ impl NativeVariant {
         }
         if let Some(fr) = frames {
             if fr.len() != bsz {
-                bail!(
-                    "{}: {} frames for {} state sets",
-                    self.name,
-                    fr.len(),
-                    bsz
-                );
+                bail!("{}: {} frames for {} state sets", self.name, fr.len(), bsz);
             }
             for f in fr.iter() {
                 if f.len() != self.cfg.feat {
@@ -506,11 +450,46 @@ impl NativeVariant {
             }
         }
         if bsz == 0 {
-            return Ok(Some(Vec::new()));
+            if let OutSink::Batch(outs) = sink {
+                outs.clear();
+            }
+            return Ok(true);
         }
-        let w = self.host(dw)?;
-        let phase = phase % self.period;
+        let hw = self.host(dw)?;
+        with_arena(self.arena_id, &self.arena_spec, |arena| {
+            self.exec_step(phase % self.period, frames, states, hw, part, arena, sink)
+        })
+    }
+
+    /// One inference (or one FP part of it) at schedule position `phase`
+    /// for a phase-aligned batch of `states.len()` streams.
+    ///
+    /// This is the *only* streaming code path: [`VariantExec::step`],
+    /// [`VariantExec::precompute`] and [`VariantExec::step_rest`] all run
+    /// it with B == 1, so the batched and sequential paths cannot diverge
+    /// in schedule logic — only the kernels see the batch, and those
+    /// preserve per-stream accumulation order bit-for-bit.
+    ///
+    /// Every batch-wide activation is a (C, B) matrix flattened row-major
+    /// (`buf[c * B + s]` = channel `c` of stream `s`), so the GEMM inner
+    /// loop runs contiguously across the batch.  All intermediates come
+    /// from the variant's [`StepArena`]: after warm-up the serving steady
+    /// state allocates nothing at all (`tests/hot_path_alloc.rs`).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_step(
+        &self,
+        phase: usize,
+        frames: Option<&[&[f32]]>,
+        states: &mut [&mut StateSet],
+        hw: &HostWeights,
+        part: Part,
+        arena: &mut StepArena,
+        sink: &mut OutSink,
+    ) -> Result<bool> {
+        let bsz = states.len();
+        let pp = &self.plans[phase];
         let depth = self.depth;
+        let k = self.cfg.kernel;
         let s = self.cfg.shift_pos;
         let delayed = |l: usize| s.map_or(false, |sp| l >= sp);
         let in_part = |l: usize| match part {
@@ -520,12 +499,12 @@ impl NativeVariant {
         };
 
         // ---- encoder ----
-        let mut enc_out: Vec<Option<Vec<f32>>> = vec![None; depth + 1];
+        let mut enc_out = arena.take_opts_f32(depth + 1);
         let mut cur: Option<Vec<f32>> = match part {
             Part::Pre => None,
             _ => {
                 let fr = frames.with_context(|| format!("{}: step needs frames", self.name))?;
-                let mut x0 = scratch_take(self.cfg.feat * bsz);
+                let mut x0 = arena.take_f32(self.cfg.feat, bsz);
                 for (si, f) in fr.iter().enumerate() {
                     for (i, &v) in f.iter().enumerate() {
                         x0[i * bsz + si] = v;
@@ -535,16 +514,16 @@ impl NativeVariant {
             }
         };
         for l in 1..=depth {
-            if phase % self.r_in[l] != 0 {
-                release(&mut cur);
+            let ld = &self.dims[l - 1];
+            if !pp.enc_tick[l - 1] {
+                arena.release_f32(&mut cur);
                 continue;
             }
             // FP delay line at the input of layer s: read the oldest entry
             // before pushing (the pre pass reads, the rest pass pushes).
             if s == Some(l) {
                 let fifo_slot = self.idx.shift_fifo.unwrap();
-                let c_in = self.cfg.enc_in_ch(l);
-                let mut delayed_in = scratch_take(c_in * bsz);
+                let mut delayed_in = arena.take_f32(ld.enc_ci, bsz);
                 if part != Part::Pre {
                     let c = cur
                         .as_ref()
@@ -559,64 +538,58 @@ impl NativeVariant {
                         gather_state_col(&st.tensors[fifo_slot], 0, bsz, si, &mut delayed_in);
                     }
                 }
-                release(&mut cur);
-                cur = if in_part(l) {
-                    Some(delayed_in)
+                arena.release_f32(&mut cur);
+                if in_part(l) {
+                    cur = Some(delayed_in);
                 } else {
-                    scratch_put(delayed_in);
-                    None
-                };
+                    arena.put_f32(delayed_in);
+                }
             }
             if !in_part(l) {
-                release(&mut cur);
+                arena.release_f32(&mut cur);
                 continue;
             }
             let c = cur
                 .take()
                 .with_context(|| format!("{}: enc{l} has no input at phase {phase}", self.name))?;
-            let fires = if self.is_scc[l] {
-                phase % (2 * self.r_in[l]) == 0
-            } else {
-                true
-            };
-            let c_in = self.cfg.enc_in_ch(l);
-            let k = self.cfg.kernel;
-            let mut xwin = scratch_take(c_in * k * bsz);
+            let mut xwin = arena.take_f32(ld.enc_ci * k, bsz);
             for (si, st) in states.iter_mut().enumerate() {
                 push_window_col(&mut st.tensors[self.idx.enc_win[l - 1]], &c, bsz, si, &mut xwin);
             }
-            scratch_put(c);
-            cur = if fires {
-                let wt = &w.tensors[self.idx.enc_w[l - 1]];
-                let bt = &w.tensors[self.idx.enc_b[l - 1]];
-                let mut y = scratch_take(wt.shape[0] * bsz);
-                self.conv_win_batch(wt, bt, &xwin, bsz, &mut y);
-                elu(&mut y);
+            arena.put_f32(c);
+            cur = if pp.enc_fire[l - 1] {
+                let panel = self.panel(hw, self.idx.enc_w[l - 1])?;
+                let bias = &hw.tensors()[self.idx.enc_b[l - 1]].data;
+                let mut y = arena.take_f32(ld.enc_co, bsz);
+                gemm_f32(panel, bias, &xwin, bsz, &mut y, true);
+                self.macs
+                    .fetch_add((ld.enc_co * ld.enc_ci * k * bsz) as u64, Ordering::Relaxed);
                 // keep a copy for the decoder's skip connection
-                let mut keep = scratch_take(y.len());
+                let mut keep = arena.take_f32(ld.enc_co, bsz);
                 keep.copy_from_slice(&y);
                 enc_out[l] = Some(keep);
                 Some(y)
             } else {
                 None
             };
-            scratch_put(xwin);
+            arena.put_f32(xwin);
         }
-        release(&mut cur);
+        arena.release_f32(&mut cur);
 
         // ---- decoder ----
         let mut d: Option<Vec<f32>> = None;
         for l in (1..=depth).rev() {
+            let ld = &self.dims[l - 1];
             let mut computed_here = false;
-            if phase % self.r_out[l] == 0 {
+            if pp.dec_run[l - 1] {
                 if !in_part(l) {
-                    release(&mut d);
+                    arena.release_f32(&mut d);
                 } else {
                     let inp: Vec<f32> = if l == depth {
                         let src = enc_out[l]
                             .as_ref()
                             .with_context(|| format!("{}: dec{l} missing input", self.name))?;
-                        let mut v = scratch_take(src.len());
+                        let mut v = arena.take_f32(ld.enc_co, bsz);
                         v.copy_from_slice(src);
                         v
                     } else {
@@ -624,10 +597,10 @@ impl NativeVariant {
                         if part == Part::Rest && delayed(l + 1) && !self.is_scc[l + 1] {
                             // Boundary: the delayed d_{l+1} was produced by
                             // the pre pass and parked in the handoff slot.
-                            release(&mut upper);
+                            arena.release_f32(&mut upper);
                             let slot = self.idx.fp_handoff.unwrap();
                             let c_h = states[0].tensors[slot].shape[0];
-                            let mut h = scratch_take(c_h * bsz);
+                            let mut h = arena.take_f32(c_h, bsz);
                             for (si, st) in states.iter().enumerate() {
                                 gather_state_col(&st.tensors[slot], 0, bsz, si, &mut h);
                             }
@@ -639,16 +612,14 @@ impl NativeVariant {
                             .as_ref()
                             .with_context(|| format!("{}: dec{l} missing skip", self.name))?;
                         // stack deep rows over skip rows (channel concat)
-                        let mut inp = scratch_take(v.len() + skip.len());
+                        let mut inp = arena.take_f32(ld.dec_ci, bsz);
                         inp[..v.len()].copy_from_slice(&v);
                         inp[v.len()..].copy_from_slice(skip);
-                        scratch_put(v);
+                        arena.put_f32(v);
                         inp
                     };
-                    let c_in = self.cfg.dec_in_ch(l);
-                    let k = self.cfg.kernel;
-                    debug_assert_eq!(inp.len(), c_in * bsz);
-                    let mut xwin = scratch_take(c_in * k * bsz);
+                    debug_assert_eq!(inp.len(), ld.dec_ci * bsz);
+                    let mut xwin = arena.take_f32(ld.dec_ci * k, bsz);
                     for (si, st) in states.iter_mut().enumerate() {
                         push_window_col(
                             &mut st.tensors[self.idx.dec_win[l - 1]],
@@ -658,14 +629,15 @@ impl NativeVariant {
                             &mut xwin,
                         );
                     }
-                    scratch_put(inp);
-                    let wt = &w.tensors[self.idx.dec_w[l - 1]];
-                    let bt = &w.tensors[self.idx.dec_b[l - 1]];
-                    let mut y = scratch_take(wt.shape[0] * bsz);
-                    self.conv_win_batch(wt, bt, &xwin, bsz, &mut y);
-                    scratch_put(xwin);
-                    elu(&mut y);
-                    release(&mut d);
+                    arena.put_f32(inp);
+                    let panel = self.panel(hw, self.idx.dec_w[l - 1])?;
+                    let bias = &hw.tensors()[self.idx.dec_b[l - 1]].data;
+                    let mut y = arena.take_f32(ld.dec_co, bsz);
+                    gemm_f32(panel, bias, &xwin, bsz, &mut y, true);
+                    self.macs
+                        .fetch_add((ld.dec_co * ld.dec_ci * k * bsz) as u64, Ordering::Relaxed);
+                    arena.put_f32(xwin);
+                    arena.release_f32(&mut d);
                     d = Some(y);
                     computed_here = true;
                 }
@@ -673,25 +645,29 @@ impl NativeVariant {
             // Extrapolation back to the r_in(l) domain.  The *write*
             // belongs to whichever pass computed the fresh d_l; the *read*
             // to the pass computing d_{l-1} (or the head for l == 1).
-            if self.is_scc[l] && phase % self.r_in[l] == 0 {
+            if self.is_scc[l] && pp.enc_tick[l - 1] {
                 let cache_slot = self.idx.up_cache[&l];
-                let fresh = phase % self.r_out[l] == 0;
+                let fresh = pp.dec_run[l - 1];
                 if fresh && computed_here {
                     let dv = d.as_ref().unwrap();
                     if self.tconv[l] {
-                        let wt = &w.tensors[self.idx.up_w[&l]];
-                        let bt = &w.tensors[self.idx.up_b[&l]];
-                        let mut ph0 = scratch_take(wt.shape[0] * bsz);
-                        let mut ph1 = scratch_take(wt.shape[0] * bsz);
-                        self.tconv_phase_batch(wt, bt, 0, dv, bsz, &mut ph0);
-                        self.tconv_phase_batch(wt, bt, 1, dv, bsz, &mut ph1);
+                        let widx = self.idx.up_w[&l];
+                        let bias = &hw.tensors()[self.idx.up_b[&l]].data;
+                        let p0 = self.phase_panel(hw, widx, 0)?;
+                        let p1 = self.phase_panel(hw, widx, 1)?;
+                        let mut ph0 = arena.take_f32(p0.c_out, bsz);
+                        let mut ph1 = arena.take_f32(p1.c_out, bsz);
+                        gemm_f32(p0, bias, dv, bsz, &mut ph0, false);
+                        gemm_f32(p1, bias, dv, bsz, &mut ph1, false);
+                        self.macs
+                            .fetch_add((2 * p0.c_out * p0.n * bsz) as u64, Ordering::Relaxed);
                         for (si, st) in states.iter_mut().enumerate() {
                             let cache = &mut st.tensors[cache_slot];
                             scatter_state_col(cache, 0, &ph0, bsz, si);
                             scatter_state_col(cache, 1, &ph1, bsz, si);
                         }
-                        scratch_put(ph0);
-                        scratch_put(ph1);
+                        arena.put_f32(ph0);
+                        arena.put_f32(ph1);
                     } else {
                         for (si, st) in states.iter_mut().enumerate() {
                             scatter_state_col(&mut st.tensors[cache_slot], 0, dv, bsz, si);
@@ -702,11 +678,11 @@ impl NativeVariant {
                 let reads_here = part == Part::All
                     || (reader_delayed && part == Part::Pre)
                     || (!reader_delayed && part == Part::Rest);
-                release(&mut d);
+                arena.release_f32(&mut d);
                 d = if reads_here {
                     let col = if self.tconv[l] && !fresh { 1 } else { 0 };
                     let c_c = states[0].tensors[cache_slot].shape[0];
-                    let mut v = scratch_take(c_c * bsz);
+                    let mut v = arena.take_f32(c_c, bsz);
                     for (si, st) in states.iter().enumerate() {
                         gather_state_col(&st.tensors[cache_slot], col, bsz, si, &mut v);
                     }
@@ -719,7 +695,7 @@ impl NativeVariant {
             if part == Part::Pre
                 && s == Some(l)
                 && !self.is_scc[l]
-                && phase % self.r_out[l] == 0
+                && pp.dec_run[l - 1]
                 && l != 1
             {
                 if let Some(dv) = &d {
@@ -732,59 +708,61 @@ impl NativeVariant {
         }
 
         // ---- head ----
-        let head_w = &w.tensors[self.idx.head_w];
-        let head_b = &w.tensors[self.idx.head_b];
+        let head_panel = self.panel(hw, self.idx.head_w)?;
+        let head_bias = &hw.tensors()[self.idx.head_b].data;
         let feat = self.cfg.feat;
-        let result = match part {
+        let produced = match part {
             Part::Pre => {
                 if s == Some(1) {
                     // Whole network delayed: the head output is the handoff.
                     let dv = d
                         .take()
                         .with_context(|| format!("{}: pre pass lost the head input", self.name))?;
-                    let mut out = scratch_take(feat * bsz);
-                    self.conv_win_batch(head_w, head_b, &dv, bsz, &mut out);
-                    scratch_put(dv);
+                    let mut out = arena.take_f32(feat, bsz);
+                    gemm_f32(head_panel, head_bias, &dv, bsz, &mut out, false);
+                    self.macs
+                        .fetch_add((feat * head_panel.n * bsz) as u64, Ordering::Relaxed);
+                    arena.put_f32(dv);
                     let slot = self.idx.fp_handoff.unwrap();
                     for (si, st) in states.iter_mut().enumerate() {
                         scatter_state_col(&mut st.tensors[slot], 0, &out, bsz, si);
                     }
-                    scratch_put(out);
+                    arena.put_f32(out);
                 }
-                None
+                false
             }
             Part::Rest if s == Some(1) => {
                 let slot = self.idx.fp_handoff.unwrap();
-                let mut out = scratch_take(feat * bsz);
+                let mut out = arena.take_f32(feat, bsz);
                 for (si, st) in states.iter().enumerate() {
                     gather_state_col(&st.tensors[slot], 0, bsz, si, &mut out);
                 }
-                let frames_out = split_columns(&out, bsz, feat);
-                scratch_put(out);
-                Some(frames_out)
+                sink.write(&out, bsz, feat);
+                arena.put_f32(out);
+                true
             }
             _ => {
                 let dv = d
                     .take()
                     .with_context(|| format!("{}: no decoder output at phase {phase}", self.name))?;
-                let mut out = scratch_take(feat * bsz);
-                self.conv_win_batch(head_w, head_b, &dv, bsz, &mut out);
-                scratch_put(dv);
-                let frames_out = split_columns(&out, bsz, feat);
-                scratch_put(out);
-                Some(frames_out)
+                let mut out = arena.take_f32(feat, bsz);
+                gemm_f32(head_panel, head_bias, &dv, bsz, &mut out, false);
+                self.macs
+                    .fetch_add((feat * head_panel.n * bsz) as u64, Ordering::Relaxed);
+                arena.put_f32(dv);
+                sink.write(&out, bsz, feat);
+                arena.put_f32(out);
+                true
             }
         };
-        release(&mut d);
-        for e in enc_out.iter_mut() {
-            release(e);
-        }
-        Ok(result)
+        arena.release_f32(&mut d);
+        arena.put_opts_f32(enc_out);
+        Ok(produced)
     }
 
     // ---- offline (full-sequence) interpreter ------------------------------
 
-    fn offline_forward(&self, x: &Tensor, w: &Weights) -> Result<Tensor> {
+    fn offline_forward(&self, x: &Tensor, hw: &HostWeights) -> Result<Tensor> {
         let cfg = &self.cfg;
         if x.shape.len() != 2 || x.shape[0] != cfg.feat {
             bail!(
@@ -803,52 +781,52 @@ impl NativeVariant {
             );
         }
         let depth = self.depth;
-        let mut enc: Vec<Tensor> = Vec::with_capacity(depth + 1);
-        enc.push(x.clone());
-        let mut cur = x.clone();
+        // enc[l - 1] holds the post-activation output of encoder layer l
+        // (no clone of the input, no per-layer `cur` copies).
+        let mut enc: Vec<Tensor> = Vec::with_capacity(depth);
         for l in 1..=depth {
-            if cfg.shift_pos == Some(l) {
-                cur = delay_cols(&cur, cfg.shift);
-            }
+            let prev: &Tensor = if l == 1 { x } else { &enc[l - 2] };
+            let shifted;
+            let inp: &Tensor = if cfg.shift_pos == Some(l) {
+                shifted = delay_cols(prev, cfg.shift);
+                &shifted
+            } else {
+                prev
+            };
             let mut y = self.conv_full(
-                &cur,
-                &w.tensors[self.idx.enc_w[l - 1]],
-                &w.tensors[self.idx.enc_b[l - 1]],
+                inp,
+                self.panel(hw, self.idx.enc_w[l - 1])?,
+                &hw.tensors()[self.idx.enc_b[l - 1]].data,
+                true,
             );
             if self.is_scc[l] {
                 y = stride2(&y);
             }
-            elu(&mut y.data);
-            cur = y.clone();
             enc.push(y);
         }
 
         let mut d: Option<Tensor> = None;
         for l in (1..=depth).rev() {
-            let inp = if l == depth {
-                enc[depth].clone()
+            let concat;
+            let inp: &Tensor = if l == depth {
+                &enc[depth - 1]
             } else {
-                concat_rows(d.as_ref().unwrap(), &enc[l])
+                concat = concat_rows(d.as_ref().unwrap(), &enc[l - 1]);
+                &concat
             };
-            let mut y = self.conv_full(
-                &inp,
-                &w.tensors[self.idx.dec_w[l - 1]],
-                &w.tensors[self.idx.dec_b[l - 1]],
+            let mut dl = self.conv_full(
+                inp,
+                self.panel(hw, self.idx.dec_w[l - 1])?,
+                &hw.tensors()[self.idx.dec_b[l - 1]].data,
+                true,
             );
-            elu(&mut y.data);
-            let mut dl = y;
             if self.is_scc[l] {
-                let t_out = enc[l - 1].shape[1];
+                let t_out = if l == 1 { x.shape[1] } else { enc[l - 2].shape[1] };
                 dl = if let Some(kind) = &cfg.interp {
                     interp_upsample(&dl, t_out, kind)
                         .with_context(|| format!("{}: up{l}", self.name))?
                 } else if self.tconv[l] {
-                    self.tconv_upsample(
-                        &dl,
-                        &w.tensors[self.idx.up_w[&l]],
-                        &w.tensors[self.idx.up_b[&l]],
-                        t_out,
-                    )
+                    self.tconv_upsample(&dl, hw, l, t_out)?
                 } else {
                     duplicate_upsample(&dl, t_out)
                 };
@@ -857,29 +835,75 @@ impl NativeVariant {
         }
         Ok(self.conv_full(
             &d.unwrap(),
-            &w.tensors[self.idx.head_w],
-            &w.tensors[self.idx.head_b],
+            self.panel(hw, self.idx.head_w)?,
+            &hw.tensors()[self.idx.head_b].data,
+            false,
         ))
     }
 
-    /// Stride-2 transposed conv over a whole sequence: phase 0 lands on
-    /// even output times, phase 1 on odd ones.
-    fn tconv_upsample(&self, y: &Tensor, w: &Tensor, b: &Tensor, t_out: usize) -> Tensor {
-        let c_out = w.shape[0];
-        let s = y.shape[1];
-        let mut out = Tensor::zeros(vec![c_out, t_out]);
-        for src in 0..s {
-            let col = column(y, src);
-            let ph0 = self.tconv_phase(w, b, 0, &col);
-            let ph1 = self.tconv_phase(w, b, 1, &col);
-            if 2 * src < t_out {
-                set_column(&mut out, 2 * src, &ph0);
-            }
-            if 2 * src + 1 < t_out {
-                set_column(&mut out, 2 * src + 1, &ph1);
+    /// Causal stride-1 conv over a whole (C_in, T) sequence, executed as
+    /// one panel GEMM with T as the batch axis.  The window gather's
+    /// zero left-padding reproduces the zero-initialised streaming
+    /// window states, and the kernel and per-element accumulation order
+    /// are exactly the streaming step's — offline and streaming agree by
+    /// construction.
+    fn conv_full(&self, x: &Tensor, panel: &PackedF32, bias: &[f32], elu: bool) -> Tensor {
+        let c_in = x.shape[0];
+        let t = x.shape[1];
+        let c_out = panel.c_out;
+        let k = if c_in == 0 { 1 } else { panel.n / c_in };
+        debug_assert_eq!(panel.n, c_in * k);
+        let mut xwin = offline_take(c_in * k * t);
+        for i in 0..c_in {
+            for j in 0..k {
+                let shift = k - 1 - j;
+                let n = t.saturating_sub(shift);
+                if n > 0 {
+                    let row = (i * k + j) * t;
+                    xwin[row + shift..row + shift + n].copy_from_slice(&x.data[i * t..i * t + n]);
+                }
             }
         }
+        let mut out = Tensor::zeros(vec![c_out, t]);
+        gemm_f32(panel, bias, &xwin, t, &mut out.data, elu);
+        offline_put(xwin);
+        self.macs
+            .fetch_add((c_out * c_in * k * t) as u64, Ordering::Relaxed);
         out
+    }
+
+    /// Stride-2 transposed conv over a whole sequence via the per-phase
+    /// packed panels: phase 0 lands on even output times, phase 1 on odd
+    /// ones.
+    fn tconv_upsample(
+        &self,
+        y: &Tensor,
+        hw: &HostWeights,
+        l: usize,
+        t_out: usize,
+    ) -> Result<Tensor> {
+        let widx = self.idx.up_w[&l];
+        let bias = &hw.tensors()[self.idx.up_b[&l]].data;
+        let s = y.shape[1];
+        let c_out = self.phase_panel(hw, widx, 0)?.c_out;
+        let mut out = Tensor::zeros(vec![c_out, t_out]);
+        let mut ph = offline_take(c_out * s);
+        for phx in 0..2usize {
+            let panel = self.phase_panel(hw, widx, phx)?;
+            gemm_f32(panel, bias, &y.data, s, &mut ph, false);
+            self.macs
+                .fetch_add((c_out * panel.n * s) as u64, Ordering::Relaxed);
+            for src in 0..s {
+                let tt = 2 * src + phx;
+                if tt < t_out {
+                    for o in 0..c_out {
+                        out.set2(o, tt, ph[o * s + src]);
+                    }
+                }
+            }
+        }
+        offline_put(ph);
+        Ok(out)
     }
 }
 
@@ -913,12 +937,34 @@ impl VariantExec for NativeVariant {
         states: &mut StateSet,
         weights: &DeviceWeights,
     ) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.step_into(phase, frame, states, weights, &mut out)?;
+        Ok(out)
+    }
+
+    fn step_into(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let frames = [frame];
         let mut sts = [states];
-        let out =
-            self.run_step_batch(phase, Some(&frames[..]), &mut sts[..], weights, Part::All)?;
-        let mut out = out.with_context(|| format!("{}: step produced no output", self.name))?;
-        Ok(out.remove(0))
+        let mut sink = OutSink::Single(out);
+        let produced = self.run_step_batch(
+            phase,
+            Some(&frames[..]),
+            &mut sts[..],
+            weights,
+            Part::All,
+            &mut sink,
+        )?;
+        if !produced {
+            bail!("{}: step produced no output", self.name);
+        }
+        Ok(())
     }
 
     fn precompute(
@@ -931,7 +977,8 @@ impl VariantExec for NativeVariant {
             bail!("{}: variant has no FP split", self.name);
         }
         let mut sts = [states];
-        self.run_step_batch(phase, None, &mut sts[..], weights, Part::Pre)?;
+        let mut sink = OutSink::Discard;
+        self.run_step_batch(phase, None, &mut sts[..], weights, Part::Pre, &mut sink)?;
         Ok(())
     }
 
@@ -942,16 +989,37 @@ impl VariantExec for NativeVariant {
         states: &mut StateSet,
         weights: &DeviceWeights,
     ) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.step_rest_into(phase, frame, states, weights, &mut out)?;
+        Ok(out)
+    }
+
+    fn step_rest_into(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         if !self.has_fp_split() {
             bail!("{}: variant has no FP split", self.name);
         }
         let frames = [frame];
         let mut sts = [states];
-        let out =
-            self.run_step_batch(phase, Some(&frames[..]), &mut sts[..], weights, Part::Rest)?;
-        let mut out =
-            out.with_context(|| format!("{}: rest pass produced no output", self.name))?;
-        Ok(out.remove(0))
+        let mut sink = OutSink::Single(out);
+        let produced = self.run_step_batch(
+            phase,
+            Some(&frames[..]),
+            &mut sts[..],
+            weights,
+            Part::Rest,
+            &mut sink,
+        )?;
+        if !produced {
+            bail!("{}: rest pass produced no output", self.name);
+        }
+        Ok(())
     }
 
     fn step_batch(
@@ -961,9 +1029,27 @@ impl VariantExec for NativeVariant {
         states: &mut [&mut StateSet],
         weights: &DeviceWeights,
     ) -> Result<Vec<Vec<f32>>> {
+        let mut outs = Vec::new();
+        self.step_batch_into(phase, frames, states, weights, &mut outs)?;
+        Ok(outs)
+    }
+
+    fn step_batch_into(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
         // run_step_batch validates frame/state arity and frame sizes
-        let out = self.run_step_batch(phase, Some(frames), states, weights, Part::All)?;
-        out.with_context(|| format!("{}: batched step produced no output", self.name))
+        let mut sink = OutSink::Batch(outs);
+        let produced =
+            self.run_step_batch(phase, Some(frames), states, weights, Part::All, &mut sink)?;
+        if !produced {
+            bail!("{}: batched step produced no output", self.name);
+        }
+        Ok(())
     }
 
     fn step_rest_batch(
@@ -973,16 +1059,34 @@ impl VariantExec for NativeVariant {
         states: &mut [&mut StateSet],
         weights: &DeviceWeights,
     ) -> Result<Vec<Vec<f32>>> {
+        let mut outs = Vec::new();
+        self.step_rest_batch_into(phase, frames, states, weights, &mut outs)?;
+        Ok(outs)
+    }
+
+    fn step_rest_batch_into(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
         if !self.has_fp_split() {
             bail!("{}: variant has no FP split", self.name);
         }
-        let out = self.run_step_batch(phase, Some(frames), states, weights, Part::Rest)?;
-        out.with_context(|| format!("{}: batched rest pass produced no output", self.name))
+        let mut sink = OutSink::Batch(outs);
+        let produced =
+            self.run_step_batch(phase, Some(frames), states, weights, Part::Rest, &mut sink)?;
+        if !produced {
+            bail!("{}: batched rest pass produced no output", self.name);
+        }
+        Ok(())
     }
 
     fn offline(&self, x: &Tensor, weights: &DeviceWeights) -> Result<Tensor> {
-        let w = self.host(weights)?;
-        self.offline_forward(x, w)
+        let hw = self.host(weights)?;
+        self.offline_forward(x, hw)
     }
 
     fn executed_macs(&self) -> Option<u64> {
@@ -994,68 +1098,14 @@ impl VariantExec for NativeVariant {
     }
 }
 
-// ---- scratch pool ----------------------------------------------------------
-
-thread_local! {
-    /// Per-thread free list of batch scratch buffers.  Sizes stabilise
-    /// after the first step through a variant, so the serving worker's
-    /// steady state is allocation-free.
-    static SCRATCH: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
-}
-
-/// Take a zeroed length-`n` buffer from the thread-local scratch pool.
-fn scratch_take(n: usize) -> Vec<f32> {
-    SCRATCH.with(|p| {
-        let mut v = p.borrow_mut().pop().unwrap_or_default();
-        v.clear();
-        v.resize(n, 0.0);
-        v
-    })
-}
-
-/// Return a buffer to the thread-local scratch pool for reuse.
-fn scratch_put(v: Vec<f32>) {
-    SCRATCH.with(|p| p.borrow_mut().push(v));
-}
-
-/// Return an optional batch buffer to the pool and leave `None` behind.
-fn release(v: &mut Option<Vec<f32>>) {
-    if let Some(buf) = v.take() {
-        scratch_put(buf);
-    }
-}
-
 // ---- column/window primitives ---------------------------------------------
 //
 // Per-stream states stay row-major (C, W) tensors; batch-wide activations
 // are (C, B) matrices.  The helpers below move one stream's column
 // between the two layouts.
 
-/// ELU activation in place.
-fn elu(v: &mut [f32]) {
-    for x in v.iter_mut() {
-        if *x < 0.0 {
-            *x = x.exp_m1();
-        }
-    }
-}
-
-/// Extract column `j` of a (C, W) tensor (offline path).
-fn column(t: &Tensor, j: usize) -> Vec<f32> {
-    let w = t.shape[1];
-    (0..t.shape[0]).map(|i| t.data[i * w + j]).collect()
-}
-
-/// Overwrite column `j` of a (C, W) tensor (offline path).
-fn set_column(t: &mut Tensor, j: usize, v: &[f32]) {
-    let w = t.shape[1];
-    for (i, &x) in v.iter().enumerate() {
-        t.data[i * w + j] = x;
-    }
-}
-
-/// Read column `col` of stream `si`'s (C, W) state tensor into column
-/// `si` of a (C, B) batch matrix.
+/// Read column `col` of a (C, W) state tensor into column `si` of a
+/// (C, B) batch matrix.
 fn gather_state_col(t: &Tensor, col: usize, bsz: usize, si: usize, dst: &mut [f32]) {
     let w = t.shape[1];
     for i in 0..t.shape[0] {
@@ -1102,13 +1152,6 @@ fn push_fifo_col(state: &mut Tensor, cur: &[f32], bsz: usize, si: usize) {
         row.copy_within(1.., 0);
         row[w - 1] = cur[i * bsz + si];
     }
-}
-
-/// Split a (C, B) batch matrix into per-stream output frames.
-fn split_columns(m: &[f32], bsz: usize, c: usize) -> Vec<Vec<f32>> {
-    (0..bsz)
-        .map(|si| (0..c).map(|i| m[i * bsz + si]).collect())
-        .collect()
 }
 
 // ---- offline sequence primitives ------------------------------------------
@@ -1277,28 +1320,38 @@ mod tests {
     }
 
     #[test]
-    fn split_columns_transposes_batch() {
-        // (C = 2, B = 2) matrix [[1, 2], [3, 4]] -> streams [1,3], [2,4]
-        let m = vec![1.0, 2.0, 3.0, 4.0];
-        let frames = split_columns(&m, 2, 2);
-        assert_eq!(frames, vec![vec![1.0, 3.0], vec![2.0, 4.0]]);
-    }
-
-    #[test]
-    fn scratch_pool_reuses_buffers() {
-        let a = scratch_take(8);
-        let pa = a.as_ptr();
-        scratch_put(a);
-        let b = scratch_take(4); // smaller fits the recycled allocation
-        assert_eq!(b.as_ptr(), pa);
-        assert!(b.iter().all(|&v| v == 0.0));
-        scratch_put(b);
-    }
-
-    #[test]
     fn duplicate_upsample_repeats_frames() {
         let y = Tensor::new(vec![1, 2], vec![5.0, 7.0]);
         let up = duplicate_upsample(&y, 4);
         assert_eq!(up.data, vec![5.0, 5.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn phase_plans_mirror_rate_arithmetic() {
+        let cfg = ModelConfig {
+            feat: 4,
+            channels: vec![5, 6, 7],
+            kernel: 3,
+            scc: vec![2],
+            shift_pos: None,
+            shift: 1,
+            extrap: vec!["duplicate".into()],
+            interp: None,
+        };
+        let m = crate::runtime::synth::manifest(&cfg, "t", 16);
+        let v = NativeVariant::new(&m).unwrap();
+        assert_eq!(v.plans.len(), v.period);
+        for (phase, pp) in v.plans.iter().enumerate() {
+            for l in 1..=v.depth {
+                assert_eq!(pp.enc_tick[l - 1], phase % v.r_in[l] == 0, "tick l={l} p={phase}");
+                let fire = if v.is_scc[l] {
+                    phase % (2 * v.r_in[l]) == 0
+                } else {
+                    phase % v.r_in[l] == 0
+                };
+                assert_eq!(pp.enc_fire[l - 1], fire, "fire l={l} p={phase}");
+                assert_eq!(pp.dec_run[l - 1], phase % v.r_out[l] == 0, "dec l={l} p={phase}");
+            }
+        }
     }
 }

@@ -97,7 +97,7 @@ impl InferenceBackend for PjrtBackend {
             .iter()
             .map(|t| upload(&self.client, &t.data, &t.shape))
             .collect::<Result<Vec<_>>>()?;
-        Ok(DeviceWeights::Pjrt(bufs))
+        Ok(DeviceWeights::Pjrt(std::sync::Arc::new(bufs)))
     }
 }
 
@@ -216,7 +216,7 @@ impl PjrtVariant {
 
     fn device_bufs<'a>(&self, dw: &'a DeviceWeights) -> Result<&'a [xla::PjRtBuffer]> {
         match dw {
-            DeviceWeights::Pjrt(bufs) => Ok(bufs),
+            DeviceWeights::Pjrt(bufs) => Ok(bufs.as_slice()),
             DeviceWeights::Host(_) => bail!(
                 "{}: host weights passed to the pjrt backend; upload them first",
                 self.manifest.name

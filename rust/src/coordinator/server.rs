@@ -29,7 +29,7 @@
 //! itself), so workers share one `Arc<VariantLadder>` directly; all
 //! mutation on the rust side (states, metrics) stays worker-local.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread;
@@ -300,6 +300,17 @@ fn worker_loop(
     // Undelivered frames across all slots (kept as a running counter —
     // the drain loop checks it once per received frame).
     let mut pending_total = 0usize;
+    // Round-scoped dispatch buffers, reused across every round: the
+    // sorted (rung, phase, slot) key list, the current group's slot
+    // indices and frames, and the batched-output holder the group
+    // results land in.  (The per-group `&mut` session/frame-ref views
+    // still allocate small vectors — their lifetimes are tied to the
+    // group's slot borrows — so only the *exec* layer below is strictly
+    // allocation-free; see tests/hot_path_alloc.rs.)
+    let mut keyed: Vec<(usize, usize, usize)> = Vec::new();
+    let mut group: Vec<usize> = Vec::new();
+    let mut group_frames: Vec<Arc<[f32]>> = Vec::new();
+    let mut outs_buf: Vec<Vec<f32>> = Vec::new();
 
     let enqueue = |slots: &mut Vec<Slot>,
                    index: &mut HashMap<u64, usize>,
@@ -391,38 +402,48 @@ fn worker_loop(
         //    switch still sit on their old rung, so every group shares
         //    one compiled variant by construction
         if batching {
-            let mut by_key: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+            // Group by sorting a reused (rung, phase, slot) key list —
+            // same (rung, phase) visit order and ascending slot order
+            // within a group as the BTreeMap this replaces, without its
+            // per-round node churn.
+            keyed.clear();
             for (i, slot) in slots.iter().enumerate() {
                 if !slot.pending.is_empty() {
-                    by_key
-                        .entry((slot.rung, slot.sess.next_plan().phase))
-                        .or_default()
-                        .push(i);
+                    keyed.push((slot.rung, slot.sess.next_plan().phase, i));
                 }
             }
-            for (_key, group) in by_key {
-                let mut frames: Vec<Arc<[f32]>> = Vec::with_capacity(group.len());
-                for &i in &group {
-                    frames.push(slots[i].pending.pop_front().unwrap());
+            keyed.sort_unstable();
+            let mut g0 = 0usize;
+            while g0 < keyed.len() {
+                let (rung, phase, _) = keyed[g0];
+                let mut g1 = g0 + 1;
+                while g1 < keyed.len() && keyed[g1].0 == rung && keyed[g1].1 == phase {
+                    g1 += 1;
+                }
+                group.clear();
+                group_frames.clear();
+                for &(_, _, i) in &keyed[g0..g1] {
+                    group.push(i);
+                    group_frames.push(slots[i].pending.pop_front().unwrap());
                     pending_total -= 1;
                 }
-                let frame_refs: Vec<&[f32]> = frames.iter().map(|f| &f[..]).collect();
+                let frame_refs: Vec<&[f32]> = group_frames.iter().map(|f| &f[..]).collect();
                 let t_exec = Instant::now();
                 let res = {
                     let mut selected = select_mut(&mut slots, &group);
                     let mut sessions: Vec<&mut StreamSession> =
                         selected.iter_mut().map(|s| &mut s.sess).collect();
-                    StreamSession::on_frame_batch(&mut sessions, &frame_refs)
+                    StreamSession::on_frame_batch_into(&mut sessions, &frame_refs, &mut outs_buf)
                 };
                 match res {
-                    Ok(outs) => {
+                    Ok(()) => {
                         if let Some(ctl) = controller.as_mut() {
                             let ns = t_exec.elapsed().as_nanos() as u64;
                             for _ in 0..group.len() {
                                 ctl.record_latency_ns(ns);
                             }
                         }
-                        for (&i, out) in group.iter().zip(outs) {
+                        for (&i, out) in group.iter().zip(outs_buf.drain(..)) {
                             slots[i].outs.push(out);
                         }
                     }
@@ -431,6 +452,7 @@ fn worker_loop(
                         return;
                     }
                 }
+                g0 = g1;
             }
         } else {
             for slot in slots.iter_mut() {

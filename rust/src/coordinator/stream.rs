@@ -301,8 +301,24 @@ impl StreamSession {
         sessions: &mut [&mut StreamSession],
         frames: &[&[f32]],
     ) -> Result<Vec<Vec<f32>>> {
+        let mut outs = Vec::new();
+        Self::on_frame_batch_into(sessions, frames, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// [`StreamSession::on_frame_batch`] writing into caller-owned
+    /// buffers: `outs` is resized to the batch width and its buffers'
+    /// capacity is reused, so a server round recycles one outer vector
+    /// instead of allocating per group (the worker loop drains the
+    /// frames out of it afterwards).
+    pub fn on_frame_batch_into(
+        sessions: &mut [&mut StreamSession],
+        frames: &[&[f32]],
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
         let Some(first) = sessions.first() else {
-            return Ok(Vec::new());
+            outs.clear();
+            return Ok(());
         };
         if sessions.len() != frames.len() {
             bail!(
@@ -340,15 +356,15 @@ impl StreamSession {
                 }
             }
         }
-        let outs = {
+        {
             let mut states: Vec<&mut StateSet> =
                 sessions.iter_mut().map(|s| &mut s.states).collect();
             if plan.split {
-                engine.step_rest_batch(plan.phase, frames, &mut states, &weights)?
+                engine.step_rest_batch_into(plan.phase, frames, &mut states, &weights, outs)?
             } else {
-                engine.step_batch(plan.phase, frames, &mut states, &weights)?
+                engine.step_batch_into(plan.phase, frames, &mut states, &weights, outs)?
             }
-        };
+        }
         let phase_macs = macs_at_phase(&engine.manifest, plan.phase);
         let stmc = macs_stmc(&engine.manifest);
         let int8 = engine.manifest.dtype == Dtype::Int8;
@@ -364,7 +380,7 @@ impl StreamSession {
             }
             sess.metrics.record_variant_frame(&engine.manifest.name);
         }
-        Ok(outs)
+        Ok(())
     }
 
     /// Frames consumed so far.

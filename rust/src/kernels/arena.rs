@@ -1,0 +1,414 @@
+//! Per-variant step arenas: persistent, size-classed activation slabs
+//! that make the interpreters' steady state allocation-free
+//! (DESIGN.md §11).
+//!
+//! Every buffer the streaming step of a variant can ever need is a
+//! `(C, B)` panel whose per-stream element count `C` comes from the
+//! manifest — so each variant computes its [`ArenaSpec`] (the sorted set
+//! of distinct per-stream sizes) **at compile time**.  At execution time
+//! the [`StepArena`] hands out slabs from capacity-sorted free lists:
+//! a request is served by the smallest recycled slab that fits (best
+//! fit), and a miss allocates at the *class* capacity
+//! (`class_size · batch_capacity`), never the exact request — so after
+//! one warm-up pass per phase the multiset of slab capacities covers
+//! every request the schedule can make and `take` never allocates again.
+//! `tests/hot_path_alloc.rs` proves this with a counting global
+//! allocator for every variant family at both precisions.
+//!
+//! Arenas are thread-local and keyed by variant id ([`with_arena`]):
+//! workers never contend, and a variant served from several threads gets
+//! one arena per thread.  The registry is bounded (LRU beyond
+//! [`MAX_ARENAS`] entries is dropped), as is each free list, so scratch
+//! memory cannot grow without bound — the fix for the unbounded
+//! `thread_local SCRATCH` pool this module replaces.
+//!
+//! [`offline_take`]/[`offline_put`] are the surviving general-purpose
+//! pool for the *offline* (full-sequence) paths, whose buffer sizes
+//! scale with `T` rather than the manifest: bounded in count and bytes,
+//! with power-of-two size classes so differing sequence lengths still
+//! recycle.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Maximum per-thread arenas retained; the least-recently-used one is
+/// dropped beyond this (a backstop for tests that compile many
+/// variants).
+pub const MAX_ARENAS: usize = 32;
+
+/// Maximum recycled slabs per free list (far above any schedule's live
+/// set; purely a safety bound).
+const MAX_FREE: usize = 64;
+
+/// Per-stream buffer sizes a variant's step can request, computed from
+/// the manifest at variant-compile time (sorted, deduplicated).
+#[derive(Debug, Clone, Default)]
+pub struct ArenaSpec {
+    /// Distinct per-stream f32 panel heights.
+    pub f32_sizes: Vec<usize>,
+    /// Distinct per-stream i32 panel heights (quantized path).
+    pub i32_sizes: Vec<usize>,
+}
+
+impl ArenaSpec {
+    /// Build a spec from raw size lists (sorted + deduplicated here).
+    pub fn new(mut f32_sizes: Vec<usize>, mut i32_sizes: Vec<usize>) -> ArenaSpec {
+        f32_sizes.retain(|&s| s > 0);
+        i32_sizes.retain(|&s| s > 0);
+        f32_sizes.sort_unstable();
+        f32_sizes.dedup();
+        i32_sizes.sort_unstable();
+        i32_sizes.dedup();
+        ArenaSpec {
+            f32_sizes,
+            i32_sizes,
+        }
+    }
+}
+
+/// One element-typed pool of capacity-sorted recycled slabs.
+#[derive(Debug, Default)]
+struct Pool<T> {
+    /// Size classes (per-stream element counts), ascending.
+    sizes: Vec<usize>,
+    /// Recycled slabs, ascending capacity.
+    free: Vec<Vec<T>>,
+}
+
+impl<T: Copy + Default> Pool<T> {
+    fn take(&mut self, per_stream: usize, bsz: usize, bcap: usize) -> Vec<T> {
+        let n = per_stream * bsz;
+        let mut v = match self.free.iter().position(|v| v.capacity() >= n) {
+            Some(i) => self.free.remove(i),
+            None => {
+                // allocate at class capacity so the slab serves every
+                // future request of this class at full batch capacity
+                let class = self
+                    .sizes
+                    .iter()
+                    .copied()
+                    .find(|&c| c >= per_stream)
+                    .unwrap_or(per_stream);
+                Vec::with_capacity(class * bcap)
+            }
+        };
+        v.clear();
+        v.resize(n, T::default());
+        v
+    }
+
+    fn put(&mut self, v: Vec<T>) {
+        if v.capacity() == 0 || self.free.len() >= MAX_FREE {
+            return;
+        }
+        let cap = v.capacity();
+        let at = self
+            .free
+            .iter()
+            .position(|u| u.capacity() >= cap)
+            .unwrap_or(self.free.len());
+        self.free.insert(at, v);
+    }
+}
+
+/// The per-(thread, variant) scratch arena of the streaming step:
+/// recycled `(C, B)` activation slabs plus reusable `Vec<Option<_>>`
+/// holders for the per-layer encoder outputs.
+#[derive(Debug)]
+pub struct StepArena {
+    /// Largest batch width seen so far; slab classes are sized to it.
+    bcap: usize,
+    f: Pool<f32>,
+    i: Pool<i32>,
+    opts_f: Vec<Vec<Option<Vec<f32>>>>,
+    opts_i: Vec<Vec<Option<Vec<i32>>>>,
+}
+
+impl StepArena {
+    /// A fresh arena for a variant's [`ArenaSpec`].
+    pub fn new(spec: &ArenaSpec) -> StepArena {
+        StepArena {
+            bcap: 1,
+            f: Pool {
+                sizes: spec.f32_sizes.clone(),
+                free: Vec::new(),
+            },
+            i: Pool {
+                sizes: spec.i32_sizes.clone(),
+                free: Vec::new(),
+            },
+            opts_f: Vec::new(),
+            opts_i: Vec::new(),
+        }
+    }
+
+    /// A zeroed `(per_stream, bsz)` f32 panel.
+    pub fn take_f32(&mut self, per_stream: usize, bsz: usize) -> Vec<f32> {
+        self.bcap = self.bcap.max(bsz);
+        self.f.take(per_stream, bsz, self.bcap)
+    }
+
+    /// Return an f32 panel for reuse.
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        self.f.put(v);
+    }
+
+    /// Return an optional f32 panel for reuse, leaving `None` behind.
+    pub fn release_f32(&mut self, o: &mut Option<Vec<f32>>) {
+        if let Some(v) = o.take() {
+            self.f.put(v);
+        }
+    }
+
+    /// A zeroed `(per_stream, bsz)` i32 code panel (quantized path).
+    pub fn take_i32(&mut self, per_stream: usize, bsz: usize) -> Vec<i32> {
+        self.bcap = self.bcap.max(bsz);
+        self.i.take(per_stream, bsz, self.bcap)
+    }
+
+    /// Return an i32 panel for reuse.
+    pub fn put_i32(&mut self, v: Vec<i32>) {
+        self.i.put(v);
+    }
+
+    /// Return an optional i32 panel for reuse, leaving `None` behind.
+    pub fn release_i32(&mut self, o: &mut Option<Vec<i32>>) {
+        if let Some(v) = o.take() {
+            self.i.put(v);
+        }
+    }
+
+    /// A reusable `n`-slot `Vec<Option<Vec<f32>>>` (all `None`) — the
+    /// per-layer encoder-output holder.
+    pub fn take_opts_f32(&mut self, n: usize) -> Vec<Option<Vec<f32>>> {
+        let mut v = self.opts_f.pop().unwrap_or_default();
+        v.clear();
+        v.resize_with(n, || None);
+        v
+    }
+
+    /// Return an opts holder; inner panels drain back into the pool.
+    pub fn put_opts_f32(&mut self, mut v: Vec<Option<Vec<f32>>>) {
+        for o in v.iter_mut() {
+            self.release_f32(o);
+        }
+        v.clear();
+        if self.opts_f.len() < 4 {
+            self.opts_f.push(v);
+        }
+    }
+
+    /// i32 twin of [`StepArena::take_opts_f32`].
+    pub fn take_opts_i32(&mut self, n: usize) -> Vec<Option<Vec<i32>>> {
+        let mut v = self.opts_i.pop().unwrap_or_default();
+        v.clear();
+        v.resize_with(n, || None);
+        v
+    }
+
+    /// i32 twin of [`StepArena::put_opts_f32`].
+    pub fn put_opts_i32(&mut self, mut v: Vec<Option<Vec<i32>>>) {
+        for o in v.iter_mut() {
+            self.release_i32(o);
+        }
+        v.clear();
+        if self.opts_i.len() < 4 {
+            self.opts_i.push(v);
+        }
+    }
+}
+
+/// Process-unique arena id for one compiled variant (assigned at
+/// variant-compile time; keys the per-thread arena registry).
+pub fn next_arena_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+thread_local! {
+    /// Per-thread arena registry, linear-scanned by variant id (a
+    /// handful of live variants per worker; no hashing, no allocation
+    /// on the hot path).
+    static ARENAS: RefCell<Vec<(u64, StepArena)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's arena for variant `id`, creating it from
+/// `spec` on first use.  Reentrant use (calling `with_arena` from inside
+/// `f`) is a programming error and panics — the interpreters never nest
+/// steps on one thread.
+pub fn with_arena<R>(id: u64, spec: &ArenaSpec, f: impl FnOnce(&mut StepArena) -> R) -> R {
+    ARENAS.with(|cell| {
+        let mut arenas = cell.borrow_mut();
+        let idx = match arenas.iter().position(|(k, _)| *k == id) {
+            Some(i) => i,
+            None => {
+                if arenas.len() >= MAX_ARENAS {
+                    arenas.remove(0);
+                }
+                arenas.push((id, StepArena::new(spec)));
+                arenas.len() - 1
+            }
+        };
+        // Keep the registry in least-recently-used order (front =
+        // eviction candidate).  A steady single-variant worker finds its
+        // arena already at the back, so this rotates nothing.
+        let last = arenas.len() - 1;
+        if idx != last {
+            arenas[idx..].rotate_left(1);
+        }
+        f(&mut arenas[last].1)
+    })
+}
+
+// ---- bounded offline pool --------------------------------------------------
+
+/// Max buffers retained by the offline pool per thread.
+const OFFLINE_MAX_BUFS: usize = 8;
+/// Max total f32 elements retained by the offline pool per thread (16 MB).
+const OFFLINE_MAX_ELEMS: usize = 1 << 22;
+
+thread_local! {
+    static OFFLINE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Take a zeroed length-`n` buffer from the bounded per-thread offline
+/// pool (full-sequence paths, whose sizes scale with `T` rather than the
+/// manifest).  Capacities are power-of-two classes so varying sequence
+/// lengths still recycle.
+pub fn offline_take(n: usize) -> Vec<f32> {
+    OFFLINE.with(|p| {
+        let mut pool = p.borrow_mut();
+        let mut v = match pool.iter().position(|v| v.capacity() >= n) {
+            Some(i) => pool.remove(i),
+            None => Vec::with_capacity(n.next_power_of_two()),
+        };
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    })
+}
+
+/// Return a buffer to the offline pool; buffers beyond the pool's count
+/// or byte bound are dropped instead of retained.
+pub fn offline_put(v: Vec<f32>) {
+    OFFLINE.with(|p| {
+        let mut pool = p.borrow_mut();
+        let held: usize = pool.iter().map(|b| b.capacity()).sum();
+        if pool.len() >= OFFLINE_MAX_BUFS || held + v.capacity() > OFFLINE_MAX_ELEMS {
+            return;
+        }
+        let cap = v.capacity();
+        let at = pool
+            .iter()
+            .position(|u| u.capacity() >= cap)
+            .unwrap_or(pool.len());
+        pool.insert(at, v);
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_class_sized() {
+        let spec = ArenaSpec::new(vec![16, 4, 16, 0], vec![8]);
+        assert_eq!(spec.f32_sizes, vec![4, 16]);
+        let mut a = StepArena::new(&spec);
+        let v = a.take_f32(3, 2);
+        assert_eq!(v.len(), 6);
+        assert!(v.iter().all(|&x| x == 0.0));
+        // allocated at class capacity: smallest class >= 3 is 4, bcap 2
+        assert!(v.capacity() >= 8);
+        a.put_f32(v);
+    }
+
+    #[test]
+    fn steady_state_reuses_slabs() {
+        let spec = ArenaSpec::new(vec![4, 8], vec![]);
+        let mut a = StepArena::new(&spec);
+        // warm up at batch 4
+        let w = a.take_f32(8, 4);
+        let ptr = w.as_ptr();
+        a.put_f32(w);
+        // smaller request reuses the same slab (best fit finds it)
+        let v = a.take_f32(4, 4);
+        assert_eq!(v.as_ptr(), ptr);
+        assert!(v.iter().all(|&x| x == 0.0));
+        a.put_f32(v);
+    }
+
+    #[test]
+    fn batch_capacity_ratchets_up() {
+        let spec = ArenaSpec::new(vec![4], vec![]);
+        let mut a = StepArena::new(&spec);
+        let first = a.take_f32(4, 1);
+        a.put_f32(first);
+        let v = a.take_f32(4, 16); // larger batch: slab must grow
+        assert_eq!(v.len(), 64);
+        assert!(v.capacity() >= 64);
+        a.put_f32(v);
+        // new capacity class now serves batch-1 requests too
+        let w = a.take_f32(4, 1);
+        assert!(w.capacity() >= 64);
+        a.put_f32(w);
+    }
+
+    #[test]
+    fn opts_holder_recycles_inner_buffers() {
+        let spec = ArenaSpec::new(vec![4], vec![4]);
+        let mut a = StepArena::new(&spec);
+        let mut opts = a.take_opts_f32(3);
+        assert_eq!(opts.len(), 3);
+        opts[1] = Some(a.take_f32(4, 1));
+        let inner = opts[1].as_ref().unwrap().as_ptr();
+        a.put_opts_f32(opts);
+        // the inner buffer went back to the pool
+        let v = a.take_f32(4, 1);
+        assert_eq!(v.as_ptr(), inner);
+        a.put_f32(v);
+    }
+
+    #[test]
+    fn with_arena_is_keyed_by_id() {
+        let spec = ArenaSpec::new(vec![2], vec![]);
+        let (a, b) = (next_arena_id(), next_arena_id());
+        assert_ne!(a, b);
+        let pa = with_arena(a, &spec, |ar| {
+            let v = ar.take_f32(2, 1);
+            let p = v.as_ptr();
+            ar.put_f32(v);
+            p
+        });
+        // same id, same thread: the slab is still there
+        let pa2 = with_arena(a, &spec, |ar| {
+            let v = ar.take_f32(2, 1);
+            let p = v.as_ptr();
+            ar.put_f32(v);
+            p
+        });
+        assert_eq!(pa, pa2);
+        // different id: fresh arena, fresh slab
+        let pb = with_arena(b, &spec, |ar| {
+            let v = ar.take_f32(2, 1);
+            let p = v.as_ptr();
+            ar.put_f32(v);
+            p
+        });
+        let _ = pb;
+    }
+
+    #[test]
+    fn offline_pool_recycles_and_bounds() {
+        let v = offline_take(100);
+        assert_eq!(v.len(), 100);
+        assert!(v.capacity() >= 128); // power-of-two class
+        let p = v.as_ptr();
+        offline_put(v);
+        let w = offline_take(64);
+        assert_eq!(w.as_ptr(), p);
+        offline_put(w);
+        // oversized buffers are dropped, not retained
+        offline_put(Vec::with_capacity(OFFLINE_MAX_ELEMS + 1));
+    }
+}

@@ -1,0 +1,278 @@
+//! SIMD microkernel substrate (DESIGN.md §11): the single compute layer
+//! both interpreters execute on.
+//!
+//! * [`pack`] — [`PackedF32`]/[`PackedI8`] cache-blocked, pre-transposed
+//!   weight panels, built **once at upload time** (f32, in
+//!   `crate::backend::HostWeights`) or at quantized-plan preparation
+//!   (int8, in `crate::quant`).
+//! * [`gemm_f32`]/[`gemm_i8`] — runtime-dispatched panel GEMMs with
+//!   fused bias (+ ELU for f32) epilogues: AVX2+FMA on x86_64 (behind
+//!   `is_x86_feature_detected!`), NEON on aarch64, and a scalar fallback
+//!   that doubles as the correctness oracle everywhere else.
+//! * [`arena`] — the per-variant [`StepArena`] scratch slabs and the
+//!   bounded offline pool behind the interpreters' allocation-free
+//!   steady state.
+//!
+//! Numeric contract: every implementation accumulates each output
+//! element as *bias first, then reduction indices in ascending order* —
+//! independent of batch width — so batched and sequential execution are
+//! bit-identical on any single ISA.  Across ISAs, int8 results are
+//! bit-identical everywhere (exact integer dots, unfused per-lane
+//! folds); f32 results differ from the scalar oracle only by FMA's fused
+//! rounding, within the ULP envelope documented in DESIGN.md §11 and
+//! asserted by `rust/tests/properties.rs`.
+
+pub mod arena;
+pub mod pack;
+
+mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+pub use arena::{next_arena_id, offline_put, offline_take, with_arena, ArenaSpec, StepArena};
+pub use pack::{PackedF32, PackedI8, MR};
+
+use std::sync::OnceLock;
+
+/// An instruction-set family a microkernel can execute on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar fallback (also the correctness oracle).
+    Scalar,
+    /// x86_64 AVX2 + FMA (runtime-detected).
+    Avx2Fma,
+    /// aarch64 NEON (baseline on that architecture).
+    Neon,
+}
+
+impl Isa {
+    /// Short name for logs and bench rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2Fma => "avx2fma",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+#[allow(unreachable_code)] // per-arch early returns make the tail arch-dependent
+fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // AVX2 and FMA are required as a unit: every mainstream AVX2 CPU
+        // ships FMA, and a finer-grained tier for the hypothetical
+        // avx2-without-fma case (which only the int8 kernel could use)
+        // is not worth a fourth dispatch family.
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Isa::Avx2Fma;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Isa::Neon;
+    }
+    Isa::Scalar
+}
+
+/// The ISA the dispatched kernels run on, detected once per process.
+pub fn active_isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(detect)
+}
+
+/// ELU applied to one element — shared by every kernel's epilogue so the
+/// nonlinearity is identical math on every ISA.
+#[inline]
+pub(crate) fn elu_scalar(v: f32) -> f32 {
+    if v < 0.0 {
+        v.exp_m1()
+    } else {
+        v
+    }
+}
+
+/// Panel GEMM with fused bias (+ optional ELU) epilogue over a
+/// column-stacked `(n, bsz)` activation panel `x`, writing the
+/// `(c_out, bsz)` result row-major into `out`.  Dispatches to the
+/// [`active_isa`] implementation.
+pub fn gemm_f32(p: &PackedF32, bias: &[f32], x: &[f32], bsz: usize, out: &mut [f32], elu: bool) {
+    gemm_f32_on(active_isa(), p, bias, x, bsz, out, elu);
+}
+
+/// [`gemm_f32`] on an explicit ISA (bench A/B legs, oracle tests).
+/// Falls back to scalar when the requested ISA is unavailable on this
+/// CPU, so the call is always safe.
+pub fn gemm_f32_on(
+    isa: Isa,
+    p: &PackedF32,
+    bias: &[f32],
+    x: &[f32],
+    bsz: usize,
+    out: &mut [f32],
+    elu: bool,
+) {
+    assert_eq!(x.len(), p.n * bsz, "activation panel shape mismatch");
+    assert_eq!(out.len(), p.c_out * bsz, "output panel shape mismatch");
+    assert_eq!(bias.len(), p.c_out, "bias shape mismatch");
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma if active_isa() == Isa::Avx2Fma => {
+            // SAFETY: AVX2 + FMA availability was runtime-checked.
+            unsafe { x86::gemm_f32(p, bias, x, bsz, out, elu) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => {
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { neon::gemm_f32(p, bias, x, bsz, out, elu) }
+        }
+        _ => scalar::gemm_f32(p, bias, x, bsz, out, elu),
+    }
+}
+
+/// Quantized panel GEMM: i32 group dots over a column-stacked
+/// `(c_in · k, bsz)` panel of s16 activation codes, per-(out, in) f32
+/// scale folds in fixed order, bias added last; writes f32
+/// pre-activations `(c_out, bsz)` row-major.  Bit-identical across every
+/// ISA.  Dispatches to the [`active_isa`] implementation.
+pub fn gemm_i8(p: &PackedI8, x: &[i32], bsz: usize, out: &mut [f32]) {
+    gemm_i8_on(active_isa(), p, x, bsz, out);
+}
+
+/// [`gemm_i8`] on an explicit ISA (bench A/B legs, oracle tests); falls
+/// back to scalar when the requested ISA is unavailable.
+pub fn gemm_i8_on(isa: Isa, p: &PackedI8, x: &[i32], bsz: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), p.c_in * p.k * bsz, "code panel shape mismatch");
+    assert_eq!(out.len(), p.c_out * bsz, "output panel shape mismatch");
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma if active_isa() == Isa::Avx2Fma => {
+            // SAFETY: AVX2 availability was runtime-checked.
+            unsafe { x86::gemm_i8(p, x, bsz, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => {
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { neon::gemm_i8(p, x, bsz, out) }
+        }
+        _ => scalar::gemm_i8(p, x, bsz, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unpacked reference: the exact pre-panel accumulation order.
+    fn naive_f32(
+        w: &[f32],
+        c_out: usize,
+        n: usize,
+        bias: &[f32],
+        x: &[f32],
+        bsz: usize,
+        elu: bool,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; c_out * bsz];
+        for o in 0..c_out {
+            for b in 0..bsz {
+                let mut acc = bias[o];
+                for j in 0..n {
+                    acc += w[o * n + j] * x[j * bsz + b];
+                }
+                out[o * bsz + b] = if elu { elu_scalar(acc) } else { acc };
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn scalar_gemm_matches_naive_bitwise() {
+        let (c_out, n, bsz) = (11, 7, 3); // partial panel on purpose
+        let w: Vec<f32> = (0..c_out * n)
+            .map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.13)
+            .collect();
+        let bias: Vec<f32> = (0..c_out).map(|i| i as f32 * 0.01 - 0.05).collect();
+        let x: Vec<f32> = (0..n * bsz)
+            .map(|i| ((i * 11 % 23) as f32 - 11.0) * 0.07)
+            .collect();
+        let p = PackedF32::pack(&w, c_out, n);
+        for elu in [false, true] {
+            let mut out = vec![0.0f32; c_out * bsz];
+            gemm_f32_on(Isa::Scalar, &p, &bias, &x, bsz, &mut out, elu);
+            let want = naive_f32(&w, c_out, n, &bias, &x, bsz, elu);
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_gemm_is_batch_invariant() {
+        let (c_out, n, bsz) = (9, 12, 5);
+        let w: Vec<f32> = (0..c_out * n)
+            .map(|i| ((i * 7 % 29) as f32 - 14.0) * 0.21)
+            .collect();
+        let bias: Vec<f32> = (0..c_out).map(|i| (i as f32 - 4.0) * 0.3).collect();
+        let x: Vec<f32> = (0..n * bsz)
+            .map(|i| ((i * 13 % 31) as f32 - 15.0) * 0.09)
+            .collect();
+        let p = PackedF32::pack(&w, c_out, n);
+        let mut out = vec![0.0f32; c_out * bsz];
+        gemm_f32(&p, &bias, &x, bsz, &mut out, true);
+        for b in 0..bsz {
+            let col: Vec<f32> = (0..n).map(|j| x[j * bsz + b]).collect();
+            let mut one = vec![0.0f32; c_out];
+            gemm_f32(&p, &bias, &col, 1, &mut one, true);
+            for o in 0..c_out {
+                assert_eq!(
+                    one[o].to_bits(),
+                    out[o * bsz + b].to_bits(),
+                    "col {b} row {o}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn i8_gemm_bit_identical_across_isa_and_batch() {
+        let (c_out, c_in, k, bsz) = (10, 3, 3, 4);
+        let codes: Vec<i8> = (0..c_out * c_in * k)
+            .map(|i| ((i * 41 % 255) as i32 - 127) as i8)
+            .collect();
+        let g: Vec<f32> = (0..c_out * c_in)
+            .map(|i| 1e-4 * ((i % 7) + 1) as f32)
+            .collect();
+        let bias: Vec<f32> = (0..c_out).map(|i| (i as f32 - 5.0) * 0.02).collect();
+        let x: Vec<i32> = (0..c_in * k * bsz)
+            .map(|i| (i as i32 * 977 % 60001) - 30000)
+            .collect();
+        let p = PackedI8::pack(&codes, c_out, c_in, k, &g, &bias);
+        let mut simd = vec![0.0f32; c_out * bsz];
+        let mut sc = vec![0.0f32; c_out * bsz];
+        gemm_i8(&p, &x, bsz, &mut simd);
+        gemm_i8_on(Isa::Scalar, &p, &x, bsz, &mut sc);
+        for (a, b) in simd.iter().zip(&sc) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // batch invariance too
+        for b in 0..bsz {
+            let col: Vec<i32> = (0..c_in * k).map(|j| x[j * bsz + b]).collect();
+            let mut one = vec![0.0f32; c_out];
+            gemm_i8(&p, &col, 1, &mut one);
+            for o in 0..c_out {
+                assert_eq!(one[o].to_bits(), simd[o * bsz + b].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn isa_detection_is_stable_and_named() {
+        let isa = active_isa();
+        assert_eq!(isa, active_isa());
+        assert!(!isa.name().is_empty());
+    }
+}

@@ -1,0 +1,102 @@
+//! NEON microkernels (aarch64; NEON is baseline on that architecture —
+//! DESIGN.md §11).
+//!
+//! A packed panel's [`MR`] = 8 lanes are processed as two 4-lane
+//! `float32x4`/`int32x4` halves.  The f32 GEMM uses `vfmaq_f32` (fused,
+//! same rounding class as the AVX2 path — within the documented ULP
+//! envelope of the scalar oracle); the int8 GEMM uses exact integer
+//! `vmlaq_s32` dots and the *unfused* f32 fold, making it bit-identical
+//! to the scalar kernel.  Per-element accumulation order matches the
+//! scalar kernels (bias first, reduction indices ascending), so results
+//! are independent of the batch width on this ISA too.
+
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::*;
+
+use super::elu_scalar;
+use super::pack::{PackedF32, PackedI8, MR};
+
+/// # Safety
+/// NEON must be available (always true on aarch64 targets; the
+/// dispatcher only routes here on that architecture).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn gemm_f32(
+    p: &PackedF32,
+    bias: &[f32],
+    x: &[f32],
+    bsz: usize,
+    out: &mut [f32],
+    elu: bool,
+) {
+    debug_assert_eq!(MR, 8);
+    let n = p.n;
+    let mut tile = [0.0f32; MR];
+    for pi in 0..p.panels() {
+        let o0 = pi * MR;
+        let rows = MR.min(p.c_out - o0);
+        let pd = p.data[pi * n * MR..(pi + 1) * n * MR].as_ptr();
+        let mut btmp = [0.0f32; MR];
+        btmp[..rows].copy_from_slice(&bias[o0..o0 + rows]);
+        let bl = vld1q_f32(btmp.as_ptr());
+        let bh = vld1q_f32(btmp.as_ptr().add(4));
+        for b in 0..bsz {
+            let mut al = bl;
+            let mut ah = bh;
+            for j in 0..n {
+                let xv = vdupq_n_f32(*x.as_ptr().add(j * bsz + b));
+                al = vfmaq_f32(al, vld1q_f32(pd.add(j * MR)), xv);
+                ah = vfmaq_f32(ah, vld1q_f32(pd.add(j * MR + 4)), xv);
+            }
+            vst1q_f32(tile.as_mut_ptr(), al);
+            vst1q_f32(tile.as_mut_ptr().add(4), ah);
+            for m in 0..rows {
+                let v = tile[m];
+                out[(o0 + m) * bsz + b] = if elu { elu_scalar(v) } else { v };
+            }
+        }
+    }
+}
+
+/// # Safety
+/// NEON must be available (always true on aarch64 targets; the
+/// dispatcher only routes here on that architecture).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn gemm_i8(p: &PackedI8, x: &[i32], bsz: usize, out: &mut [f32]) {
+    debug_assert_eq!(MR, 8);
+    let (c_in, k) = (p.c_in, p.k);
+    let mut tile = [0.0f32; MR];
+    for pi in 0..p.panels() {
+        let o0 = pi * MR;
+        let rows = MR.min(p.c_out - o0);
+        let bl = vld1q_f32(p.bias.as_ptr().add(pi * MR));
+        let bh = vld1q_f32(p.bias.as_ptr().add(pi * MR + 4));
+        for b in 0..bsz {
+            let mut pre_l = vdupq_n_f32(0.0);
+            let mut pre_h = vdupq_n_f32(0.0);
+            for i in 0..c_in {
+                let mut acc_l = vdupq_n_s32(0);
+                let mut acc_h = vdupq_n_s32(0);
+                for j in 0..k {
+                    let wp = p.data.as_ptr().add(((pi * c_in + i) * k + j) * MR);
+                    let w16 = vmovl_s8(vld1_s8(wp));
+                    let wl = vmovl_s16(vget_low_s16(w16));
+                    let wh = vmovl_s16(vget_high_s16(w16));
+                    let xv = vdupq_n_s32(*x.as_ptr().add((i * k + j) * bsz + b));
+                    acc_l = vmlaq_s32(acc_l, wl, xv);
+                    acc_h = vmlaq_s32(acc_h, wh, xv);
+                }
+                let gl = vld1q_f32(p.g.as_ptr().add((pi * c_in + i) * MR));
+                let gh = vld1q_f32(p.g.as_ptr().add((pi * c_in + i) * MR + 4));
+                // unfused mul + add: bit-identical to the scalar fold
+                pre_l = vaddq_f32(pre_l, vmulq_f32(gl, vcvtq_f32_s32(acc_l)));
+                pre_h = vaddq_f32(pre_h, vmulq_f32(gh, vcvtq_f32_s32(acc_h)));
+            }
+            vst1q_f32(tile.as_mut_ptr(), vaddq_f32(pre_l, bl));
+            vst1q_f32(tile.as_mut_ptr().add(4), vaddq_f32(pre_h, bh));
+            for m in 0..rows {
+                out[(o0 + m) * bsz + b] = tile[m];
+            }
+        }
+    }
+}

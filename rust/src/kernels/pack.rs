@@ -1,0 +1,262 @@
+//! Packed weight panels: the cache-blocked, pre-transposed weight layout
+//! every GEMM microkernel in this module consumes (DESIGN.md §11).
+//!
+//! A conv weight `(C_out, C_in, K)` is repacked **once at upload time**
+//! into panels of [`MR`] output channels: within a panel, the `MR` lanes
+//! of each reduction index `j` sit contiguously, so the inner GEMM loop
+//! is one contiguous vector load per `j` — no strides, no gathers —
+//! regardless of the batch width.  Panels whose last rows run past
+//! `C_out` are zero-padded; kernels compute the padded lanes and store
+//! only the valid ones.
+//!
+//! Layout (f32): `data[(p · N + j) · MR + m] = w[(p · MR + m) · N + j]`
+//! for panel `p`, reduction index `j in 0..N`, lane `m in 0..MR`.
+//!
+//! The int8 variant additionally carries the per-(out, in) combine
+//! factors `g(o, i) = s_x(i) · s_w(o, i)` and the f32 bias in the same
+//! lane-padded layout, so the quantized kernel's group fold is also one
+//! contiguous load per lane group.
+
+use crate::util::tensor::Tensor;
+
+/// Panel height: output channels per packed panel (AVX2 f32 lane count;
+/// NEON kernels process a panel as two 4-lane halves, scalar as a loop).
+pub const MR: usize = 8;
+
+/// A conv weight repacked into [`MR`]-row, pre-transposed f32 panels.
+#[derive(Debug, Clone)]
+pub struct PackedF32 {
+    /// Output channels (valid rows; the last panel may be padded).
+    pub c_out: usize,
+    /// Reduction length (`C_in · K` for a flattened conv kernel).
+    pub n: usize,
+    /// Panel-major packed weights, `panels() · n · MR` elements.
+    pub(crate) data: Vec<f32>,
+}
+
+impl PackedF32 {
+    /// Pack a row-major `(c_out, n)` weight matrix into panels.
+    pub fn pack(w: &[f32], c_out: usize, n: usize) -> PackedF32 {
+        assert_eq!(w.len(), c_out * n, "weight matrix shape mismatch");
+        let panels = c_out.div_ceil(MR);
+        let mut data = vec![0.0f32; panels * n * MR];
+        for o in 0..c_out {
+            let (p, m) = (o / MR, o % MR);
+            for j in 0..n {
+                data[(p * n + j) * MR + m] = w[o * n + j];
+            }
+        }
+        PackedF32 { c_out, n, data }
+    }
+
+    /// Pack a rank-3 conv kernel `(C_out, C_in, K)` as the GEMM matrix
+    /// `(C_out, C_in · K)` (the layout of the streaming window panels).
+    /// Returns `None` for tensors that are not rank-3.
+    pub fn from_conv(t: &Tensor) -> Option<PackedF32> {
+        if t.shape.len() != 3 {
+            return None;
+        }
+        Some(Self::pack(&t.data, t.shape[0], t.shape[1] * t.shape[2]))
+    }
+
+    /// Pack one tap `j = tap` of a rank-3 kernel `(C_out, C_in, K)` as a
+    /// `(C_out, C_in)` matrix — the per-phase matrix of a stride-2
+    /// transposed conv.  Returns `None` unless the tensor is rank-3 and
+    /// `tap < K`.
+    pub fn from_conv_tap(t: &Tensor, tap: usize) -> Option<PackedF32> {
+        if t.shape.len() != 3 || tap >= t.shape[2] {
+            return None;
+        }
+        let (c_out, c_in, k) = (t.shape[0], t.shape[1], t.shape[2]);
+        let panels = c_out.div_ceil(MR);
+        let mut data = vec![0.0f32; panels * c_in * MR];
+        for o in 0..c_out {
+            let (p, m) = (o / MR, o % MR);
+            for i in 0..c_in {
+                data[(p * c_in + i) * MR + m] = t.data[(o * c_in + i) * k + tap];
+            }
+        }
+        Some(PackedF32 {
+            c_out,
+            n: c_in,
+            data,
+        })
+    }
+
+    /// Number of [`MR`]-row panels (the last may be partial).
+    pub fn panels(&self) -> usize {
+        self.c_out.div_ceil(MR)
+    }
+
+    /// Reconstruct the row-major `(c_out, n)` matrix this packing holds
+    /// (tests and the pack-roundtrip property).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.c_out * self.n];
+        for o in 0..self.c_out {
+            let (p, m) = (o / MR, o % MR);
+            for j in 0..self.n {
+                w[o * self.n + j] = self.data[(p * self.n + j) * MR + m];
+            }
+        }
+        w
+    }
+}
+
+/// An int8 conv kernel repacked into [`MR`]-row panels, with the f32
+/// combine factors and bias pre-padded into the same lane layout.
+///
+/// Layout: codes `data[((p · C_in + i) · K + j) · MR + m]`, factors
+/// `g[(p · C_in + i) · MR + m]`, bias `bias[p · MR + m]` — every slice a
+/// kernel touches is a contiguous [`MR`]-lane group.
+#[derive(Debug, Clone)]
+pub struct PackedI8 {
+    /// Output channels (valid rows; the last panel may be padded).
+    pub c_out: usize,
+    /// Input channels (one combine-factor group per input channel).
+    pub c_in: usize,
+    /// Taps per (out, in) group — the integer dot length.
+    pub k: usize,
+    pub(crate) data: Vec<i8>,
+    pub(crate) g: Vec<f32>,
+    pub(crate) bias: Vec<f32>,
+}
+
+impl PackedI8 {
+    /// Pack row-major int8 codes `(c_out, c_in, k)` with per-(out, in)
+    /// combine factors `g` (row-major `(c_out, c_in)`) and per-channel
+    /// f32 `bias`.
+    pub fn pack(
+        codes: &[i8],
+        c_out: usize,
+        c_in: usize,
+        k: usize,
+        g: &[f32],
+        bias: &[f32],
+    ) -> PackedI8 {
+        assert_eq!(codes.len(), c_out * c_in * k, "code tensor shape mismatch");
+        assert_eq!(g.len(), c_out * c_in, "combine factor shape mismatch");
+        assert_eq!(bias.len(), c_out, "bias shape mismatch");
+        let panels = c_out.div_ceil(MR);
+        let mut pdata = vec![0i8; panels * c_in * k * MR];
+        let mut pg = vec![0.0f32; panels * c_in * MR];
+        let mut pbias = vec![0.0f32; panels * MR];
+        for o in 0..c_out {
+            let (p, m) = (o / MR, o % MR);
+            pbias[p * MR + m] = bias[o];
+            for i in 0..c_in {
+                pg[(p * c_in + i) * MR + m] = g[o * c_in + i];
+                for j in 0..k {
+                    pdata[((p * c_in + i) * k + j) * MR + m] = codes[(o * c_in + i) * k + j];
+                }
+            }
+        }
+        PackedI8 {
+            c_out,
+            c_in,
+            k,
+            data: pdata,
+            g: pg,
+            bias: pbias,
+        }
+    }
+
+    /// Pack one tap `j = tap` of row-major codes `(c_out, c_in, k_total)`
+    /// as a 1-tap panel — the per-phase kernel of a quantized stride-2
+    /// transposed conv (`k == 1`, same `g`/`bias`).
+    pub fn pack_tap(
+        codes: &[i8],
+        c_out: usize,
+        c_in: usize,
+        k_total: usize,
+        tap: usize,
+        g: &[f32],
+        bias: &[f32],
+    ) -> PackedI8 {
+        assert!(tap < k_total, "tap {tap} out of range 0..{k_total}");
+        assert_eq!(
+            codes.len(),
+            c_out * c_in * k_total,
+            "code tensor shape mismatch"
+        );
+        let slice: Vec<i8> = (0..c_out * c_in)
+            .map(|oi| codes[oi * k_total + tap])
+            .collect();
+        Self::pack(&slice, c_out, c_in, 1, g, bias)
+    }
+
+    /// Number of [`MR`]-row panels (the last may be partial).
+    pub fn panels(&self) -> usize {
+        self.c_out.div_ceil(MR)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_pack_roundtrips_and_pads() {
+        // 10 output rows -> 2 panels, last padded to 16 lanes
+        let c_out = 10;
+        let n = 3;
+        let w: Vec<f32> = (0..c_out * n).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let p = PackedF32::pack(&w, c_out, n);
+        assert_eq!(p.panels(), 2);
+        assert_eq!(p.data.len(), 2 * n * MR);
+        assert_eq!(p.unpack(), w);
+        // padded lanes are zero
+        for j in 0..n {
+            for m in 2..MR {
+                assert_eq!(p.data[(n + j) * MR + m], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_conv_tap_selects_phase_matrix() {
+        // (2, 2, 2) kernel: tap 1 keeps w[o][i][1]
+        let t = Tensor::new(vec![2, 2, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let p = PackedF32::from_conv_tap(&t, 1).unwrap();
+        assert_eq!(p.c_out, 2);
+        assert_eq!(p.n, 2);
+        assert_eq!(p.unpack(), vec![2.0, 4.0, 6.0, 8.0]);
+        assert!(PackedF32::from_conv_tap(&t, 2).is_none());
+    }
+
+    #[test]
+    fn i8_pack_lanes_hold_codes_factors_and_bias() {
+        let (c_out, c_in, k) = (3, 2, 2);
+        let codes: Vec<i8> = (0..c_out * c_in * k).map(|i| i as i8 - 5).collect();
+        let g: Vec<f32> = (0..c_out * c_in).map(|i| 0.1 * (i + 1) as f32).collect();
+        let bias = [1.0f32, -2.0, 3.0];
+        let p = PackedI8::pack(&codes, c_out, c_in, k, &g, &bias);
+        assert_eq!(p.panels(), 1);
+        for o in 0..c_out {
+            assert_eq!(p.bias[o], bias[o]);
+            for i in 0..c_in {
+                assert_eq!(p.g[i * MR + o], g[o * c_in + i]);
+                for j in 0..k {
+                    assert_eq!(p.data[(i * k + j) * MR + o], codes[(o * c_in + i) * k + j]);
+                }
+            }
+        }
+        // padded lanes stay zero
+        assert_eq!(p.bias[3], 0.0);
+        assert_eq!(p.g[3], 0.0);
+    }
+
+    #[test]
+    fn i8_pack_tap_is_one_tap_panel() {
+        let (c_out, c_in, k) = (2, 2, 2);
+        let codes: Vec<i8> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let g = vec![1.0f32; 4];
+        let bias = vec![0.0f32; 2];
+        let p = PackedI8::pack_tap(&codes, c_out, c_in, k, 1, &g, &bias);
+        assert_eq!(p.k, 1);
+        // tap 1 of (o, i): 2, 4, 6, 8
+        assert_eq!(p.data[0], 2); // o=0, i=0
+        assert_eq!(p.data[MR], 4); // o=0, i=1
+        assert_eq!(p.data[1], 6); // o=1, i=0
+        assert_eq!(p.data[MR + 1], 8); // o=1, i=1
+    }
+}

@@ -1,0 +1,81 @@
+//! Portable scalar microkernels — the fallback on ISAs without a SIMD
+//! implementation and the correctness oracle every SIMD path is tested
+//! against (`rust/tests/properties.rs`).
+//!
+//! Numeric contract (DESIGN.md §11): for every output element `(o, b)`
+//! the accumulation is *bias first, then reduction indices in ascending
+//! order*, one multiply and one add per index (no fusing).  This is
+//! exactly the order the pre-panel interpreter used, so the scalar
+//! kernels reproduce its results bit-for-bit; it is also independent of
+//! the batch width, so batched and sequential execution agree
+//! bit-for-bit on every ISA family.
+
+use super::elu_scalar;
+use super::pack::{PackedF32, PackedI8, MR};
+
+/// Scalar panel GEMM: `out = [elu](P · x + bias)` over a column-stacked
+/// `(n, bsz)` activation panel, writing `(c_out, bsz)` row-major.
+pub(super) fn gemm_f32(
+    p: &PackedF32,
+    bias: &[f32],
+    x: &[f32],
+    bsz: usize,
+    out: &mut [f32],
+    elu: bool,
+) {
+    let n = p.n;
+    for pi in 0..p.panels() {
+        let o0 = pi * MR;
+        let rows = MR.min(p.c_out - o0);
+        let pd = &p.data[pi * n * MR..(pi + 1) * n * MR];
+        for b in 0..bsz {
+            let mut acc = [0.0f32; MR];
+            acc[..rows].copy_from_slice(&bias[o0..o0 + rows]);
+            for j in 0..n {
+                let xv = x[j * bsz + b];
+                let w = &pd[j * MR..j * MR + MR];
+                for m in 0..MR {
+                    acc[m] += w[m] * xv;
+                }
+            }
+            for m in 0..rows {
+                let v = acc[m];
+                out[(o0 + m) * bsz + b] = if elu { elu_scalar(v) } else { v };
+            }
+        }
+    }
+}
+
+/// Scalar quantized panel GEMM: i32 group dots over s16 activation codes
+/// with the fixed-order f32 fold `pre += g(o, i) · acc` and the bias
+/// added last — the exact per-element order of the reference kernel
+/// `crate::quant::kernels::conv_win_batch_q`, so results are
+/// bit-identical to it (and to the SIMD implementations, which use the
+/// same unfused per-lane operations).
+pub(super) fn gemm_i8(p: &PackedI8, x: &[i32], bsz: usize, out: &mut [f32]) {
+    let (c_in, k) = (p.c_in, p.k);
+    for pi in 0..p.panels() {
+        let o0 = pi * MR;
+        let rows = MR.min(p.c_out - o0);
+        for b in 0..bsz {
+            let mut pre = [0.0f32; MR];
+            for i in 0..c_in {
+                let mut acc = [0i32; MR];
+                for j in 0..k {
+                    let w = &p.data[((pi * c_in + i) * k + j) * MR..][..MR];
+                    let xv = x[(i * k + j) * bsz + b];
+                    for m in 0..MR {
+                        acc[m] += w[m] as i32 * xv;
+                    }
+                }
+                let g = &p.g[(pi * c_in + i) * MR..][..MR];
+                for m in 0..MR {
+                    pre[m] += g[m] * acc[m] as f32;
+                }
+            }
+            for m in 0..rows {
+                out[(o0 + m) * bsz + b] = pre[m] + p.bias[pi * MR + m];
+            }
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! AVX2 + FMA microkernels (x86_64, selected at runtime via
+//! `is_x86_feature_detected!` — DESIGN.md §11).
+//!
+//! The f32 GEMM vectorizes over the [`MR`] = 8 output-channel lanes of a
+//! packed panel and register-blocks 4 batch columns per tile; every
+//! `(o, b)` element still accumulates *bias first, then reduction
+//! indices in ascending order*, one `fmadd` per index, so results are
+//! independent of the batch width (batched == sequential bit-for-bit).
+//! Against the scalar oracle the only difference is the fused rounding
+//! of FMA — bounded by the documented ULP envelope and asserted by
+//! `rust/tests/properties.rs`.
+//!
+//! The int8 GEMM keeps integer dots (exact) and folds groups with
+//! *unfused* `mul` + `add` — per-lane the identical operation sequence
+//! as the scalar kernel, hence bit-identical output on every ISA.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+use super::elu_scalar;
+use super::pack::{PackedF32, PackedI8, MR};
+
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 and FMA (the dispatcher
+/// checks `is_x86_feature_detected!` before routing here).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn gemm_f32(
+    p: &PackedF32,
+    bias: &[f32],
+    x: &[f32],
+    bsz: usize,
+    out: &mut [f32],
+    elu: bool,
+) {
+    debug_assert_eq!(MR, 8);
+    let n = p.n;
+    let mut tile = [0.0f32; MR];
+    for pi in 0..p.panels() {
+        let o0 = pi * MR;
+        let rows = MR.min(p.c_out - o0);
+        let pd = p.data[pi * n * MR..(pi + 1) * n * MR].as_ptr();
+        // zero-padded bias vector for the (possibly partial) panel
+        let mut btmp = [0.0f32; MR];
+        btmp[..rows].copy_from_slice(&bias[o0..o0 + rows]);
+        let bv = _mm256_loadu_ps(btmp.as_ptr());
+        let mut b = 0usize;
+        while b + 4 <= bsz {
+            let mut a0 = bv;
+            let mut a1 = bv;
+            let mut a2 = bv;
+            let mut a3 = bv;
+            for j in 0..n {
+                let wv = _mm256_loadu_ps(pd.add(j * MR));
+                let xr = x.as_ptr().add(j * bsz + b);
+                a0 = _mm256_fmadd_ps(wv, _mm256_set1_ps(*xr), a0);
+                a1 = _mm256_fmadd_ps(wv, _mm256_set1_ps(*xr.add(1)), a1);
+                a2 = _mm256_fmadd_ps(wv, _mm256_set1_ps(*xr.add(2)), a2);
+                a3 = _mm256_fmadd_ps(wv, _mm256_set1_ps(*xr.add(3)), a3);
+            }
+            for (c, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                _mm256_storeu_ps(tile.as_mut_ptr(), acc);
+                for m in 0..rows {
+                    let v = tile[m];
+                    out[(o0 + m) * bsz + b + c] = if elu { elu_scalar(v) } else { v };
+                }
+            }
+            b += 4;
+        }
+        while b < bsz {
+            let mut acc = bv;
+            for j in 0..n {
+                let wv = _mm256_loadu_ps(pd.add(j * MR));
+                acc = _mm256_fmadd_ps(wv, _mm256_set1_ps(*x.as_ptr().add(j * bsz + b)), acc);
+            }
+            _mm256_storeu_ps(tile.as_mut_ptr(), acc);
+            for m in 0..rows {
+                let v = tile[m];
+                out[(o0 + m) * bsz + b] = if elu { elu_scalar(v) } else { v };
+            }
+            b += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 (the dispatcher checks
+/// `is_x86_feature_detected!` before routing here).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn gemm_i8(p: &PackedI8, x: &[i32], bsz: usize, out: &mut [f32]) {
+    debug_assert_eq!(MR, 8);
+    let (c_in, k) = (p.c_in, p.k);
+    let mut tile = [0.0f32; MR];
+    for pi in 0..p.panels() {
+        let o0 = pi * MR;
+        let rows = MR.min(p.c_out - o0);
+        // bias is stored lane-padded, so the vector load is direct
+        let bv = _mm256_loadu_ps(p.bias.as_ptr().add(pi * MR));
+        for b in 0..bsz {
+            let mut pre = _mm256_setzero_ps();
+            for i in 0..c_in {
+                let mut acc = _mm256_setzero_si256();
+                for j in 0..k {
+                    let wp = p.data.as_ptr().add(((pi * c_in + i) * k + j) * MR);
+                    let wv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(wp as *const __m128i));
+                    let xv = _mm256_set1_epi32(*x.as_ptr().add((i * k + j) * bsz + b));
+                    acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(wv, xv));
+                }
+                let gv = _mm256_loadu_ps(p.g.as_ptr().add((pi * c_in + i) * MR));
+                // unfused mul + add: bit-identical to the scalar fold
+                pre = _mm256_add_ps(pre, _mm256_mul_ps(gv, _mm256_cvtepi32_ps(acc)));
+            }
+            _mm256_storeu_ps(tile.as_mut_ptr(), _mm256_add_ps(pre, bv));
+            for m in 0..rows {
+                out[(o0 + m) * bsz + b] = tile[m];
+            }
+        }
+    }
+}

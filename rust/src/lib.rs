@@ -22,6 +22,11 @@
 //! Precision is a second execution axis ([`quant`], DESIGN.md §10): any
 //! variant also compiles as a quantized int8/s16 executable, and a
 //! serving ladder may mix precisions (`stmc:f32 → stmc:int8 → …`).
+//! Both interpreters execute on one compute substrate ([`kernels`],
+//! DESIGN.md §11): runtime-dispatched SIMD microkernels (AVX2/FMA,
+//! NEON, scalar oracle) over weight panels packed once at upload time,
+//! with per-variant scratch arenas keeping the serving steady state
+//! allocation-free.
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
@@ -32,6 +37,7 @@ pub mod complexity;
 pub mod coordinator;
 pub mod dsp;
 pub mod experiments;
+pub mod kernels;
 pub mod pruning;
 pub mod quant;
 pub mod runtime;

@@ -320,7 +320,16 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     };
     // machine-readable summary (README "Operating the server" documents
     // the columns; `variant_frames` shows which rung traffic ran on;
-    // `dtype`/`snr_db`/`macs_int8` extend the PR 3 schema additively)
+    // `dtype`/`snr_db`/`macs_int8` extend the PR 3 schema additively,
+    // `ns_per_mac` the PR 5 schema — efficiency, not just counts).
+    // ns_per_mac is wall time over executed MACs, so it only measures
+    // compute efficiency on flood runs; paced runs (--pace-us) would
+    // fold the intentional dispatch gaps in, so they report null.
+    let ns_per_mac = if report.metrics.macs_executed > 0.0 && opts.pace_us == 0 {
+        Json::Num(report.wall_seconds * 1e9 / report.metrics.macs_executed)
+    } else {
+        Json::Null
+    };
     let summary = Json::obj(vec![
         ("cmd", Json::Str("serve".into())),
         (
@@ -354,6 +363,7 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
         ("migration_macs", Json::Num(report.metrics.macs_migration)),
         ("dtype", Json::Str(dtype_label.clone())),
         ("macs_int8", Json::Num(report.metrics.macs_int8)),
+        ("ns_per_mac", ns_per_mac),
         (
             "snr_db",
             match quant_snr {

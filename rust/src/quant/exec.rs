@@ -6,10 +6,13 @@
 //!
 //! Execution model:
 //!
-//! * **Weights** are packed int8 ([`crate::quant::qtensor::QTensor`])
-//!   with per-(out, in)-channel scales, prepared lazily from the shared
-//!   f32 [`DeviceWeights`] upload on first use and cached (fingerprinted,
-//!   so a ladder's one upload serves f32 and int8 rungs alike).
+//! * **Weights** are packed int8: quantized per-(out, in) channel
+//!   ([`crate::quant::qtensor::QTensor`]) and then repacked into the
+//!   [`crate::kernels::PackedI8`] microkernel panels — codes, combine
+//!   factors and bias in lane-padded panel layout — prepared lazily from
+//!   the shared f32 [`DeviceWeights`] upload on first use and cached
+//!   (fingerprinted, so a ladder's one upload serves f32 and int8 rungs
+//!   alike).
 //! * **Activations** are s16 codes under the static per-tensor scales
 //!   baked into the manifest's [`QuantSpec`] at calibration time.  They
 //!   live in the ordinary f32 [`StateSet`] tensors (every code is a small
@@ -19,17 +22,22 @@
 //!   interpreter — one batched code path, `B == 1` is the single-stream
 //!   case, and per-stream accumulation order is batch-independent, so
 //!   batched and sequential quantized serving are bit-identical
-//!   (`rust/tests/quant_backend.rs`).
+//!   (`rust/tests/quant_backend.rs`).  As in the f32 interpreter, the
+//!   per-phase tick/fire/compute decisions are precompiled into plan
+//!   tables and every intermediate comes from the variant's
+//!   [`crate::kernels::StepArena`] — zero steady-state allocations
+//!   (`rust/tests/hot_path_alloc.rs`).
 //! * **Determinism**: integer dots, fixed-order f32 scale folds, f32
 //!   `round` requantization and the integer ELU LUT — no execution-order
-//!   freedom anywhere, which is the int8 path's determinism contract
-//!   (migration replay reconstructs states exactly).
+//!   freedom anywhere, *on any ISA*: the SIMD int8 kernels use unfused
+//!   per-lane folds, so their output is bit-identical to the scalar
+//!   reference (`rust/tests/properties.rs`), which keeps migration
+//!   replay exact.
 //!
 //! The FP shift-at-layer-1 handoff slot is the one state tensor holding
 //! real f32 values (the head's output frames); everything else holds
 //! codes.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -37,15 +45,16 @@ use std::sync::{Arc, RwLock};
 use anyhow::{bail, Context, Result};
 
 use crate::backend::native::state_specs;
-use crate::backend::{DeviceWeights, VariantExec};
+use crate::backend::{
+    build_phase_plans, DeviceWeights, HostWeights, OutSink, PhasePlan, VariantExec,
+};
+use crate::kernels::{gemm_i8, next_arena_id, with_arena, ArenaSpec, PackedI8, StepArena};
 use crate::runtime::engine::{StateSet, Weights};
 use crate::runtime::manifest::{Dtype, Manifest, ModelConfig, QuantSpec, TensorSpec};
 use crate::util::tensor::Tensor;
 
-use super::kernels::{
-    conv_win_batch_q, quantize_act, requant, tconv_phase_batch_q, EluLut,
-};
-use super::qtensor::{quantize_weights, QTensor};
+use super::kernels::{quantize_act, requant, EluLut};
+use super::qtensor::quantize_weights;
 
 /// Pre-resolved tensor indices (state slots and manifest parameters);
 /// mirrors the f32 interpreter's layout.
@@ -74,12 +83,16 @@ enum Part {
     Rest,
 }
 
-/// One conv layer's prepared quantized plan: packed weights, per-(out,
-/// in) combine factors `g = s_x(i) · s_w(o, i)`, and the f32 bias.
+/// One conv layer's prepared quantized plan: the packed microkernel
+/// panel (codes + per-(out, in) combine factors + bias, lane-padded).
 struct QPlan {
-    qw: QTensor,
-    g: Vec<f32>,
-    bias: Vec<f32>,
+    panel: PackedI8,
+}
+
+/// A quantized stride-2 transposed conv: one 1-tap panel per output
+/// phase.
+struct QUpPlan {
+    phases: [PackedI8; 2],
 }
 
 /// Weight-dependent execution plan, cached per uploaded weight set.
@@ -87,8 +100,14 @@ struct Prepared {
     fingerprint: u64,
     enc: Vec<QPlan>,
     dec: Vec<QPlan>,
-    up: BTreeMap<usize, QPlan>,
+    up: BTreeMap<usize, QUpPlan>,
     head: QPlan,
+}
+
+/// Per-layer channel dimensions resolved at compile time.
+struct LayerDims {
+    enc_ci: usize,
+    dec_ci: usize,
 }
 
 /// One variant compiled for quantized execution (dtype int8).
@@ -97,8 +116,6 @@ pub struct QuantVariant {
     name: String,
     period: usize,
     depth: usize,
-    r_in: Vec<usize>,
-    r_out: Vec<usize>,
     is_scc: Vec<bool>,
     tconv: Vec<bool>,
     specs: Vec<TensorSpec>,
@@ -113,12 +130,16 @@ pub struct QuantVariant {
     dec_sx: Vec<Vec<f32>>,
     /// Input scale of the head conv.
     head_sx: f32,
+    dims: Vec<LayerDims>,
+    plans: Vec<PhasePlan>,
+    arena_id: u64,
+    arena_spec: ArenaSpec,
     prepared: RwLock<Option<Arc<Prepared>>>,
     macs: AtomicU64,
 }
 
 impl QuantVariant {
-    /// Compile (validate + index) one int8 manifest for quantized
+    /// Compile (validate + index + plan) one int8 manifest for quantized
     /// execution.  The manifest must carry baked quant params.
     pub fn new(manifest: &Manifest) -> Result<QuantVariant> {
         let cfg = manifest.config.clone();
@@ -172,13 +193,9 @@ impl QuantVariant {
             }
         }
 
-        let mut r_in = vec![1usize; depth + 1];
-        let mut r_out = vec![1usize; depth + 1];
         let mut is_scc = vec![false; depth + 1];
         let mut tconv = vec![false; depth + 1];
         for l in 1..=depth {
-            r_in[l] = cfg.r_in(l);
-            r_out[l] = cfg.r_out(l);
             is_scc[l] = cfg.scc.contains(&l);
             tconv[l] = is_scc[l] && cfg.extrap_of(l) == "tconv";
         }
@@ -297,8 +314,25 @@ impl QuantVariant {
         let luts_enc = qs.s_enc.iter().map(|&s| EluLut::new(s)).collect();
         let luts_dec = qs.s_dec.iter().map(|&s| EluLut::new(s)).collect();
 
+        // ---- precompiled dims, phase plans, arena spec ----
+        let mut dims = Vec::with_capacity(depth);
+        let mut isizes = vec![cfg.feat];
+        let mut fsizes = vec![cfg.feat];
+        for l in 1..=depth {
+            let (eci, eco) = (cfg.enc_in_ch(l), cfg.enc_out_ch(l));
+            let (dci, dco) = (cfg.dec_in_ch(l), cfg.dec_out_ch(l));
+            isizes.extend([eci, eci * k, eco, dci, dci * k, dco]);
+            fsizes.extend([eco, dco]);
+            dims.push(LayerDims {
+                enc_ci: eci,
+                dec_ci: dci,
+            });
+        }
+        let period = cfg.period();
+        let plans = build_phase_plans(&cfg);
+
         Ok(QuantVariant {
-            period: cfg.period(),
+            period,
             idx: QIndices {
                 enc_win,
                 dec_win,
@@ -318,8 +352,6 @@ impl QuantVariant {
             cfg,
             name,
             depth,
-            r_in,
-            r_out,
             is_scc,
             tconv,
             specs,
@@ -329,24 +361,28 @@ impl QuantVariant {
             enc_sx,
             dec_sx,
             head_sx,
+            dims,
+            plans,
+            arena_id: next_arena_id(),
+            arena_spec: ArenaSpec::new(fsizes, isizes),
             prepared: RwLock::new(None),
             macs: AtomicU64::new(0),
         })
     }
 
     /// Resolve host weights from the backend-tagged handle.
-    fn host<'a>(&self, dw: &'a DeviceWeights) -> Result<&'a Weights> {
+    fn host<'a>(&self, dw: &'a DeviceWeights) -> Result<&'a HostWeights> {
         match dw {
-            DeviceWeights::Host(w) => {
-                if w.tensors.len() != self.idx.n_params {
+            DeviceWeights::Host(hw) => {
+                if hw.tensors().len() != self.idx.n_params {
                     bail!(
                         "{}: weights hold {} tensors, manifest wants {}",
                         self.name,
-                        w.tensors.len(),
+                        hw.tensors().len(),
                         self.idx.n_params
                     );
                 }
-                Ok(w)
+                Ok(hw)
             }
             #[cfg(feature = "pjrt")]
             DeviceWeights::Pjrt(_) => {
@@ -355,16 +391,17 @@ impl QuantVariant {
         }
     }
 
-    /// Quantize the uploaded f32 weights into the execution plan, cached
-    /// per weight set (fingerprinted: a re-upload — e.g. a pruning sweep
-    /// — rebuilds the plan instead of silently executing stale codes).
+    /// Quantize the uploaded f32 weights into packed microkernel panels,
+    /// cached per weight set (fingerprinted: a re-upload — e.g. a pruning
+    /// sweep — rebuilds the plan instead of silently executing stale
+    /// codes).
     ///
     /// The key is a *content* fingerprint rather than an allocation
-    /// identity on purpose: every worker thread holds its own
-    /// `DeviceWeights::Host` clone of the same tensors, and a pointer
-    /// key would make them evict each other's plan every round.  The
-    /// hot path is the uncontended read lock plus ~17 bit-probes per
-    /// tensor — noise next to one batched conv.
+    /// identity on purpose: distinct `DeviceWeights` uploads of the same
+    /// tensors (legal through the public API) must share the plan rather
+    /// than evict each other's.  The hot path is the uncontended read
+    /// lock plus ~17 bit-probes per tensor — noise next to one batched
+    /// conv.
     fn prepared(&self, w: &Weights) -> Result<Arc<Prepared>> {
         let fp = weights_fingerprint(w);
         if let Ok(guard) = self.prepared.read() {
@@ -385,17 +422,15 @@ impl QuantVariant {
         }
         let plan = |wt: &Tensor, bias: &Tensor, sx: &dyn Fn(usize) -> f32| -> Result<QPlan> {
             let qw = quantize_weights(wt)?;
-            let c_in = wt.shape[1];
-            let g = qw
+            let (c_out, c_in, kk) = (wt.shape[0], wt.shape[1], wt.shape[2]);
+            let g: Vec<f32> = qw
                 .scales
                 .iter()
                 .enumerate()
                 .map(|(gi, &sw)| sw * sx(gi % c_in))
                 .collect();
             Ok(QPlan {
-                qw,
-                g,
-                bias: bias.data.clone(),
+                panel: PackedI8::pack(&qw.data, c_out, c_in, kk, &g, &bias.data),
             })
         };
         let mut enc = Vec::with_capacity(self.depth);
@@ -416,10 +451,20 @@ impl QuantVariant {
         }
         let mut up = BTreeMap::new();
         for (&p, &wi) in &self.idx.up_w {
+            let wt = &w.tensors[wi];
+            let bias = &w.tensors[self.idx.up_b[&p]];
             let sx = self.qs.s_dec[p - 1];
+            let qw = quantize_weights(wt)?;
+            let (c_out, c_in) = (wt.shape[0], wt.shape[1]);
+            let g: Vec<f32> = qw.scales.iter().map(|&sw| sw * sx).collect();
             up.insert(
                 p,
-                plan(&w.tensors[wi], &w.tensors[self.idx.up_b[&p]], &|_| sx)?,
+                QUpPlan {
+                    phases: [
+                        PackedI8::pack_tap(&qw.data, c_out, c_in, 2, 0, &g, &bias.data),
+                        PackedI8::pack_tap(&qw.data, c_out, c_in, 2, 1, &g, &bias.data),
+                    ],
+                },
             );
         }
         let head = plan(
@@ -438,11 +483,9 @@ impl QuantVariant {
         Ok(built)
     }
 
-    /// One quantized inference (or one FP part of it) at schedule
-    /// position `phase` for a phase-aligned batch of streams — the same
-    /// single code path contract as the f32 interpreter: the
-    /// single-stream entry points are `B == 1`, so batched and
-    /// sequential execution cannot diverge.
+    /// Validate a step request, then execute it inside this variant's
+    /// per-thread [`StepArena`].  Returns whether an output was written
+    /// to the sink.
     fn run_step_batch(
         &self,
         phase: usize,
@@ -450,7 +493,8 @@ impl QuantVariant {
         states: &mut [&mut StateSet],
         dw: &DeviceWeights,
         part: Part,
-    ) -> Result<Option<Vec<Vec<f32>>>> {
+        sink: &mut OutSink,
+    ) -> Result<bool> {
         let bsz = states.len();
         for st in states.iter() {
             if st.tensors.len() != self.specs.len() {
@@ -478,12 +522,38 @@ impl QuantVariant {
             }
         }
         if bsz == 0 {
-            return Ok(Some(Vec::new()));
+            if let OutSink::Batch(outs) = sink {
+                outs.clear();
+            }
+            return Ok(true);
         }
-        let w = self.host(dw)?;
-        let plan = self.prepared(w)?;
-        let phase = phase % self.period;
+        let hw = self.host(dw)?;
+        let plan = self.prepared(hw.weights())?;
+        with_arena(self.arena_id, &self.arena_spec, |arena| {
+            self.exec_step(phase % self.period, frames, states, &plan, part, arena, sink)
+        })
+    }
+
+    /// One quantized inference (or one FP part of it) at schedule
+    /// position `phase` for a phase-aligned batch of streams — the same
+    /// single code path contract as the f32 interpreter: the
+    /// single-stream entry points are `B == 1`, so batched and
+    /// sequential execution cannot diverge.
+    #[allow(clippy::too_many_arguments)]
+    fn exec_step(
+        &self,
+        phase: usize,
+        frames: Option<&[&[f32]]>,
+        states: &mut [&mut StateSet],
+        plan: &Prepared,
+        part: Part,
+        arena: &mut StepArena,
+        sink: &mut OutSink,
+    ) -> Result<bool> {
+        let bsz = states.len();
+        let pp = &self.plans[phase];
         let depth = self.depth;
+        let k = self.cfg.kernel;
         let s = self.cfg.shift_pos;
         let delayed = |l: usize| s.map_or(false, |sp| l >= sp);
         let in_part = |l: usize| match part {
@@ -491,17 +561,14 @@ impl QuantVariant {
             Part::Pre => delayed(l),
             Part::Rest => !delayed(l),
         };
-        // kernel scratch, reused across every conv of this step
-        let mut acc = itake(bsz);
-        let mut fold = ftake(bsz);
 
         // ---- encoder ----
-        let mut enc_out: Vec<Option<Vec<i32>>> = vec![None; depth + 1];
+        let mut enc_out = arena.take_opts_i32(depth + 1);
         let mut cur: Option<Vec<i32>> = match part {
             Part::Pre => None,
             _ => {
                 let fr = frames.with_context(|| format!("{}: step needs frames", self.name))?;
-                let mut x0 = itake(self.cfg.feat * bsz);
+                let mut x0 = arena.take_i32(self.cfg.feat, bsz);
                 for (si, f) in fr.iter().enumerate() {
                     for (i, &v) in f.iter().enumerate() {
                         x0[i * bsz + si] = quantize_act(v, self.qs.s_in);
@@ -511,14 +578,14 @@ impl QuantVariant {
             }
         };
         for l in 1..=depth {
-            if phase % self.r_in[l] != 0 {
-                irelease(&mut cur);
+            let ld = &self.dims[l - 1];
+            if !pp.enc_tick[l - 1] {
+                arena.release_i32(&mut cur);
                 continue;
             }
             if s == Some(l) {
                 let fifo_slot = self.idx.shift_fifo.unwrap();
-                let c_in = self.cfg.enc_in_ch(l);
-                let mut delayed_in = itake(c_in * bsz);
+                let mut delayed_in = arena.take_i32(ld.enc_ci, bsz);
                 if part != Part::Pre {
                     let c = cur
                         .as_ref()
@@ -533,79 +600,74 @@ impl QuantVariant {
                         gather_state_col_q(&st.tensors[fifo_slot], 0, bsz, si, &mut delayed_in);
                     }
                 }
-                irelease(&mut cur);
-                cur = if in_part(l) {
-                    Some(delayed_in)
+                arena.release_i32(&mut cur);
+                if in_part(l) {
+                    cur = Some(delayed_in);
                 } else {
-                    iput(delayed_in);
-                    None
-                };
+                    arena.put_i32(delayed_in);
+                }
             }
             if !in_part(l) {
-                irelease(&mut cur);
+                arena.release_i32(&mut cur);
                 continue;
             }
             let c = cur
                 .take()
                 .with_context(|| format!("{}: enc{l} has no input at phase {phase}", self.name))?;
-            let fires = if self.is_scc[l] {
-                phase % (2 * self.r_in[l]) == 0
-            } else {
-                true
-            };
-            let c_in = self.cfg.enc_in_ch(l);
-            let k = self.cfg.kernel;
-            let mut xwin = itake(c_in * k * bsz);
+            let mut xwin = arena.take_i32(ld.enc_ci * k, bsz);
             for (si, st) in states.iter_mut().enumerate() {
                 push_window_col_q(&mut st.tensors[self.idx.enc_win[l - 1]], &c, bsz, si, &mut xwin);
             }
-            iput(c);
-            cur = if fires {
+            arena.put_i32(c);
+            cur = if pp.enc_fire[l - 1] {
                 let qp = &plan.enc[l - 1];
-                let c_out = qp.qw.shape[0];
-                let mut pre = ftake(c_out * bsz);
-                let macs =
-                    conv_win_batch_q(&qp.qw, &qp.g, &qp.bias, &xwin, bsz, &mut acc, &mut fold, &mut pre);
-                self.macs.fetch_add(macs, Ordering::Relaxed);
+                let c_out = qp.panel.c_out;
+                let mut pre = arena.take_f32(c_out, bsz);
+                gemm_i8(&qp.panel, &xwin, bsz, &mut pre);
+                self.macs.fetch_add(
+                    (c_out * qp.panel.c_in * qp.panel.k * bsz) as u64,
+                    Ordering::Relaxed,
+                );
                 let lut = &self.luts_enc[l - 1];
-                let mut y = itake(c_out * bsz);
+                let mut y = arena.take_i32(c_out, bsz);
                 for (dst, &p) in y.iter_mut().zip(pre.iter()) {
                     *dst = lut.apply(requant(p, lut.scale));
                 }
-                fput(pre);
-                let mut keep = itake(y.len());
+                arena.put_f32(pre);
+                let mut keep = arena.take_i32(c_out, bsz);
                 keep.copy_from_slice(&y);
                 enc_out[l] = Some(keep);
                 Some(y)
             } else {
                 None
             };
-            iput(xwin);
+            arena.put_i32(xwin);
         }
-        irelease(&mut cur);
+        arena.release_i32(&mut cur);
 
         // ---- decoder ----
         let mut d: Option<Vec<i32>> = None;
         for l in (1..=depth).rev() {
+            let ld = &self.dims[l - 1];
             let mut computed_here = false;
-            if phase % self.r_out[l] == 0 {
+            if pp.dec_run[l - 1] {
                 if !in_part(l) {
-                    irelease(&mut d);
+                    arena.release_i32(&mut d);
                 } else {
                     let inp: Vec<i32> = if l == depth {
                         let src = enc_out[l]
                             .as_ref()
                             .with_context(|| format!("{}: dec{l} missing input", self.name))?;
-                        let mut v = itake(src.len());
+                        let mut v = arena.take_i32(ld.dec_ci, bsz);
                         v.copy_from_slice(src);
                         v
                     } else {
                         let mut upper = d.take();
                         if part == Part::Rest && delayed(l + 1) && !self.is_scc[l + 1] {
-                            irelease(&mut upper);
+                            arena.release_i32(&mut upper);
                             let slot = self.idx.fp_handoff.unwrap();
                             let c_h = states[0].tensors[slot].shape[0];
-                            let mut h = itake(c_h * bsz);
+                            let mut h = arena.take_i32(c_h, bsz);
                             for (si, st) in states.iter().enumerate() {
                                 gather_state_col_q(&st.tensors[slot], 0, bsz, si, &mut h);
                             }
@@ -616,16 +678,14 @@ impl QuantVariant {
                         let skip = enc_out[l]
                             .as_ref()
                             .with_context(|| format!("{}: dec{l} missing skip", self.name))?;
-                        let mut inp = itake(v.len() + skip.len());
+                        let mut inp = arena.take_i32(ld.dec_ci, bsz);
                         inp[..v.len()].copy_from_slice(&v);
                         inp[v.len()..].copy_from_slice(skip);
-                        iput(v);
+                        arena.put_i32(v);
                         inp
                     };
-                    let c_in = self.cfg.dec_in_ch(l);
-                    let k = self.cfg.kernel;
-                    debug_assert_eq!(inp.len(), c_in * bsz);
-                    let mut xwin = itake(c_in * k * bsz);
+                    debug_assert_eq!(inp.len(), ld.dec_ci * bsz);
+                    let mut xwin = arena.take_i32(ld.dec_ci * k, bsz);
                     for (si, st) in states.iter_mut().enumerate() {
                         push_window_col_q(
                             &mut st.tensors[self.idx.dec_win[l - 1]],
@@ -635,44 +695,46 @@ impl QuantVariant {
                             &mut xwin,
                         );
                     }
-                    iput(inp);
+                    arena.put_i32(inp);
                     let qp = &plan.dec[l - 1];
-                    let c_out = qp.qw.shape[0];
-                    let mut pre = ftake(c_out * bsz);
-                    let macs = conv_win_batch_q(
-                        &qp.qw, &qp.g, &qp.bias, &xwin, bsz, &mut acc, &mut fold, &mut pre,
+                    let c_out = qp.panel.c_out;
+                    let mut pre = arena.take_f32(c_out, bsz);
+                    gemm_i8(&qp.panel, &xwin, bsz, &mut pre);
+                    self.macs.fetch_add(
+                        (c_out * qp.panel.c_in * qp.panel.k * bsz) as u64,
+                        Ordering::Relaxed,
                     );
-                    self.macs.fetch_add(macs, Ordering::Relaxed);
-                    iput(xwin);
+                    arena.put_i32(xwin);
                     let lut = &self.luts_dec[l - 1];
-                    let mut y = itake(c_out * bsz);
+                    let mut y = arena.take_i32(c_out, bsz);
                     for (dst, &p) in y.iter_mut().zip(pre.iter()) {
                         *dst = lut.apply(requant(p, lut.scale));
                     }
-                    fput(pre);
-                    irelease(&mut d);
+                    arena.put_f32(pre);
+                    arena.release_i32(&mut d);
                     d = Some(y);
                     computed_here = true;
                 }
             }
             // Extrapolation back to the r_in(l) domain (same write/read
             // ownership rules as the f32 interpreter).
-            if self.is_scc[l] && phase % self.r_in[l] == 0 {
+            if self.is_scc[l] && pp.enc_tick[l - 1] {
                 let cache_slot = self.idx.up_cache[&l];
-                let fresh = phase % self.r_out[l] == 0;
+                let fresh = pp.dec_run[l - 1];
                 if fresh && computed_here {
                     let dv = d.as_ref().unwrap();
                     if self.tconv[l] {
                         let qp = &plan.up[&l];
-                        let c_out = qp.qw.shape[0];
+                        let c_up = qp.phases[0].c_out;
                         let s_up = self.qs.s_up[&l];
-                        let mut pre = ftake(c_out * bsz);
-                        let mut phq = itake(c_out * bsz);
+                        let mut pre = arena.take_f32(c_up, bsz);
+                        let mut phq = arena.take_i32(c_up, bsz);
                         for ph in 0..2usize {
-                            let macs = tconv_phase_batch_q(
-                                &qp.qw, &qp.g, &qp.bias, ph, dv, bsz, &mut fold, &mut pre,
+                            gemm_i8(&qp.phases[ph], dv, bsz, &mut pre);
+                            self.macs.fetch_add(
+                                (c_up * qp.phases[ph].c_in * bsz) as u64,
+                                Ordering::Relaxed,
                             );
-                            self.macs.fetch_add(macs, Ordering::Relaxed);
                             for (dst, &p) in phq.iter_mut().zip(pre.iter()) {
                                 *dst = requant(p, s_up);
                             }
@@ -680,8 +742,8 @@ impl QuantVariant {
                                 scatter_state_col_q(&mut st.tensors[cache_slot], ph, &phq, bsz, si);
                             }
                         }
-                        fput(pre);
-                        iput(phq);
+                        arena.put_f32(pre);
+                        arena.put_i32(phq);
                     } else {
                         for (si, st) in states.iter_mut().enumerate() {
                             scatter_state_col_q(&mut st.tensors[cache_slot], 0, dv, bsz, si);
@@ -692,11 +754,11 @@ impl QuantVariant {
                 let reads_here = part == Part::All
                     || (reader_delayed && part == Part::Pre)
                     || (!reader_delayed && part == Part::Rest);
-                irelease(&mut d);
+                arena.release_i32(&mut d);
                 d = if reads_here {
                     let col = if self.tconv[l] && !fresh { 1 } else { 0 };
                     let c_c = states[0].tensors[cache_slot].shape[0];
-                    let mut v = itake(c_c * bsz);
+                    let mut v = arena.take_i32(c_c, bsz);
                     for (si, st) in states.iter().enumerate() {
                         gather_state_col_q(&st.tensors[cache_slot], col, bsz, si, &mut v);
                     }
@@ -709,7 +771,7 @@ impl QuantVariant {
             if part == Part::Pre
                 && s == Some(l)
                 && !self.is_scc[l]
-                && phase % self.r_out[l] == 0
+                && pp.dec_run[l - 1]
                 && l != 1
             {
                 if let Some(dv) = &d {
@@ -723,72 +785,52 @@ impl QuantVariant {
 
         // ---- head (dequantizing: output frames are f32) ----
         let feat = self.cfg.feat;
-        let result = match part {
+        let produced = match part {
             Part::Pre => {
                 if s == Some(1) {
                     let dv = d
                         .take()
                         .with_context(|| format!("{}: pre pass lost the head input", self.name))?;
-                    let mut out = ftake(feat * bsz);
-                    let macs = conv_win_batch_q(
-                        &plan.head.qw,
-                        &plan.head.g,
-                        &plan.head.bias,
-                        &dv,
-                        bsz,
-                        &mut acc,
-                        &mut fold,
-                        &mut out,
-                    );
-                    self.macs.fetch_add(macs, Ordering::Relaxed);
-                    iput(dv);
+                    let mut out = arena.take_f32(feat, bsz);
+                    gemm_i8(&plan.head.panel, &dv, bsz, &mut out);
+                    self.macs
+                        .fetch_add((feat * plan.head.panel.c_in * bsz) as u64, Ordering::Relaxed);
+                    arena.put_i32(dv);
                     let slot = self.idx.fp_handoff.unwrap();
                     for (si, st) in states.iter_mut().enumerate() {
                         scatter_state_col_f(&mut st.tensors[slot], 0, &out, bsz, si);
                     }
-                    fput(out);
+                    arena.put_f32(out);
                 }
-                None
+                false
             }
             Part::Rest if s == Some(1) => {
                 let slot = self.idx.fp_handoff.unwrap();
-                let mut out = ftake(feat * bsz);
+                let mut out = arena.take_f32(feat, bsz);
                 for (si, st) in states.iter().enumerate() {
                     gather_state_col_f(&st.tensors[slot], 0, bsz, si, &mut out);
                 }
-                let frames_out = split_columns(&out, bsz, feat);
-                fput(out);
-                Some(frames_out)
+                sink.write(&out, bsz, feat);
+                arena.put_f32(out);
+                true
             }
             _ => {
                 let dv = d
                     .take()
                     .with_context(|| format!("{}: no decoder output at phase {phase}", self.name))?;
-                let mut out = ftake(feat * bsz);
-                let macs = conv_win_batch_q(
-                    &plan.head.qw,
-                    &plan.head.g,
-                    &plan.head.bias,
-                    &dv,
-                    bsz,
-                    &mut acc,
-                    &mut fold,
-                    &mut out,
-                );
-                self.macs.fetch_add(macs, Ordering::Relaxed);
-                iput(dv);
-                let frames_out = split_columns(&out, bsz, feat);
-                fput(out);
-                Some(frames_out)
+                let mut out = arena.take_f32(feat, bsz);
+                gemm_i8(&plan.head.panel, &dv, bsz, &mut out);
+                self.macs
+                    .fetch_add((feat * plan.head.panel.c_in * bsz) as u64, Ordering::Relaxed);
+                arena.put_i32(dv);
+                sink.write(&out, bsz, feat);
+                arena.put_f32(out);
+                true
             }
         };
-        irelease(&mut d);
-        for e in enc_out.iter_mut() {
-            irelease(e);
-        }
-        iput(acc);
-        fput(fold);
-        Ok(result)
+        arena.release_i32(&mut d);
+        arena.put_opts_i32(enc_out);
+        Ok(produced)
     }
 }
 
@@ -820,12 +862,34 @@ impl VariantExec for QuantVariant {
         states: &mut StateSet,
         weights: &DeviceWeights,
     ) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.step_into(phase, frame, states, weights, &mut out)?;
+        Ok(out)
+    }
+
+    fn step_into(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let frames = [frame];
         let mut sts = [states];
-        let out =
-            self.run_step_batch(phase, Some(&frames[..]), &mut sts[..], weights, Part::All)?;
-        let mut out = out.with_context(|| format!("{}: step produced no output", self.name))?;
-        Ok(out.remove(0))
+        let mut sink = OutSink::Single(out);
+        let produced = self.run_step_batch(
+            phase,
+            Some(&frames[..]),
+            &mut sts[..],
+            weights,
+            Part::All,
+            &mut sink,
+        )?;
+        if !produced {
+            bail!("{}: step produced no output", self.name);
+        }
+        Ok(())
     }
 
     fn precompute(
@@ -838,7 +902,8 @@ impl VariantExec for QuantVariant {
             bail!("{}: variant has no FP split", self.name);
         }
         let mut sts = [states];
-        self.run_step_batch(phase, None, &mut sts[..], weights, Part::Pre)?;
+        let mut sink = OutSink::Discard;
+        self.run_step_batch(phase, None, &mut sts[..], weights, Part::Pre, &mut sink)?;
         Ok(())
     }
 
@@ -849,16 +914,37 @@ impl VariantExec for QuantVariant {
         states: &mut StateSet,
         weights: &DeviceWeights,
     ) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.step_rest_into(phase, frame, states, weights, &mut out)?;
+        Ok(out)
+    }
+
+    fn step_rest_into(
+        &self,
+        phase: usize,
+        frame: &[f32],
+        states: &mut StateSet,
+        weights: &DeviceWeights,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         if !self.has_fp_split() {
             bail!("{}: variant has no FP split", self.name);
         }
         let frames = [frame];
         let mut sts = [states];
-        let out =
-            self.run_step_batch(phase, Some(&frames[..]), &mut sts[..], weights, Part::Rest)?;
-        let mut out =
-            out.with_context(|| format!("{}: rest pass produced no output", self.name))?;
-        Ok(out.remove(0))
+        let mut sink = OutSink::Single(out);
+        let produced = self.run_step_batch(
+            phase,
+            Some(&frames[..]),
+            &mut sts[..],
+            weights,
+            Part::Rest,
+            &mut sink,
+        )?;
+        if !produced {
+            bail!("{}: rest pass produced no output", self.name);
+        }
+        Ok(())
     }
 
     fn step_batch(
@@ -868,8 +954,26 @@ impl VariantExec for QuantVariant {
         states: &mut [&mut StateSet],
         weights: &DeviceWeights,
     ) -> Result<Vec<Vec<f32>>> {
-        let out = self.run_step_batch(phase, Some(frames), states, weights, Part::All)?;
-        out.with_context(|| format!("{}: batched step produced no output", self.name))
+        let mut outs = Vec::new();
+        self.step_batch_into(phase, frames, states, weights, &mut outs)?;
+        Ok(outs)
+    }
+
+    fn step_batch_into(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        let mut sink = OutSink::Batch(outs);
+        let produced =
+            self.run_step_batch(phase, Some(frames), states, weights, Part::All, &mut sink)?;
+        if !produced {
+            bail!("{}: batched step produced no output", self.name);
+        }
+        Ok(())
     }
 
     fn step_rest_batch(
@@ -879,11 +983,29 @@ impl VariantExec for QuantVariant {
         states: &mut [&mut StateSet],
         weights: &DeviceWeights,
     ) -> Result<Vec<Vec<f32>>> {
+        let mut outs = Vec::new();
+        self.step_rest_batch_into(phase, frames, states, weights, &mut outs)?;
+        Ok(outs)
+    }
+
+    fn step_rest_batch_into(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        weights: &DeviceWeights,
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
         if !self.has_fp_split() {
             bail!("{}: variant has no FP split", self.name);
         }
-        let out = self.run_step_batch(phase, Some(frames), states, weights, Part::Rest)?;
-        out.with_context(|| format!("{}: batched rest pass produced no output", self.name))
+        let mut sink = OutSink::Batch(outs);
+        let produced =
+            self.run_step_batch(phase, Some(frames), states, weights, Part::Rest, &mut sink)?;
+        if !produced {
+            bail!("{}: batched rest pass produced no output", self.name);
+        }
+        Ok(())
     }
 
     fn offline(&self, x: &Tensor, weights: &DeviceWeights) -> Result<Tensor> {
@@ -910,11 +1032,12 @@ impl VariantExec for QuantVariant {
         let mut states = self.init_states();
         let mut out = Tensor::zeros(vec![self.cfg.feat, t]);
         let mut frame = vec![0.0f32; self.cfg.feat];
+        let mut y = Vec::with_capacity(self.cfg.feat);
         for tt in 0..t {
             for (i, v) in frame.iter_mut().enumerate() {
                 *v = x.at2(i, tt);
             }
-            let y = self.step(tt, &frame, &mut states, weights)?;
+            self.step_into(tt, &frame, &mut states, weights, &mut y)?;
             for (i, &v) in y.iter().enumerate() {
                 out.set2(i, tt, v);
             }
@@ -959,47 +1082,6 @@ fn weights_fingerprint(w: &Weights) -> u64 {
         mix(&mut h, t.data[t.data.len() - 1].to_bits() as u64);
     }
     h
-}
-
-// ---- scratch pools (integer + float panels) --------------------------------
-
-thread_local! {
-    /// Per-thread free list of s16-code batch panels.
-    static ISCRATCH: RefCell<Vec<Vec<i32>>> = RefCell::new(Vec::new());
-    /// Per-thread free list of f32 batch panels (pre-activations, head).
-    static FSCRATCH: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
-}
-
-fn itake(n: usize) -> Vec<i32> {
-    ISCRATCH.with(|p| {
-        let mut v = p.borrow_mut().pop().unwrap_or_default();
-        v.clear();
-        v.resize(n, 0);
-        v
-    })
-}
-
-fn iput(v: Vec<i32>) {
-    ISCRATCH.with(|p| p.borrow_mut().push(v));
-}
-
-fn irelease(v: &mut Option<Vec<i32>>) {
-    if let Some(buf) = v.take() {
-        iput(buf);
-    }
-}
-
-fn ftake(n: usize) -> Vec<f32> {
-    FSCRATCH.with(|p| {
-        let mut v = p.borrow_mut().pop().unwrap_or_default();
-        v.clear();
-        v.resize(n, 0.0);
-        v
-    })
-}
-
-fn fput(v: Vec<f32>) {
-    FSCRATCH.with(|p| p.borrow_mut().push(v));
 }
 
 // ---- column/window movers between f32 state tensors and code panels --------
@@ -1074,13 +1156,6 @@ fn push_fifo_col_q(state: &mut Tensor, cur: &[i32], bsz: usize, si: usize) {
     }
 }
 
-/// Split a (C, B) f32 batch matrix into per-stream output frames.
-fn split_columns(m: &[f32], bsz: usize, c: usize) -> Vec<Vec<f32>> {
-    (0..bsz)
-        .map(|si| (0..c).map(|i| m[i * bsz + si]).collect())
-        .collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1109,7 +1184,7 @@ mod tests {
     fn compiles_and_steps() {
         let (m, w) = int8_manifest();
         let qv = QuantVariant::new(&m).unwrap();
-        let dw = DeviceWeights::Host(w);
+        let dw = DeviceWeights::host(w);
         let mut st = qv.init_states();
         let frame = vec![0.25f32, -0.5, 0.125, 0.0];
         for t in 0..8 {
@@ -1126,7 +1201,7 @@ mod tests {
     fn quant_states_hold_integer_codes() {
         let (m, w) = int8_manifest();
         let qv = QuantVariant::new(&m).unwrap();
-        let dw = DeviceWeights::Host(w);
+        let dw = DeviceWeights::host(w);
         let mut st = qv.init_states();
         for t in 0..6 {
             let frame: Vec<f32> = (0..4).map(|i| ((t + i) as f32 * 0.07).sin() * 0.4).collect();

@@ -2,6 +2,15 @@
 //! s16 activation quantization, the i32-accumulator blocked group-dot
 //! GEMM with fused scale-combine + bias, and the interpolated ELU LUT.
 //!
+//! [`conv_win_batch_q`]/[`tconv_phase_batch_q`] are the *scalar
+//! reference* kernels: the production interpreter executes the same math
+//! through the packed-panel SIMD substrate
+//! ([`crate::kernels::gemm_i8`], DESIGN.md §11), which is bit-identical
+//! to these references on every ISA — `rust/tests/properties.rs` and the
+//! `benches/kernels.rs` A/B keep both in lockstep.  The golden-vector
+//! cross-checks against `python/compile/kernels/ref.py` pin *this* file,
+//! and the equivalence properties carry that pin to the SIMD path.
+//!
 //! Numeric contract (mirrored bit-for-bit by the int8 reference in
 //! `python/compile/kernels/ref.py`):
 //!

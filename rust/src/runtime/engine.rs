@@ -7,7 +7,7 @@
 //! these two types — the backend is swappable per DESIGN.md §4.
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
@@ -141,6 +141,11 @@ pub struct CompiledVariant {
     pub weights: Weights,
     exec: Box<dyn VariantExec>,
     rt: Arc<Runtime>,
+    /// The cached upload: prepared once, then shared by every caller
+    /// through [`DeviceWeights`]'s internal `Arc` (ladder rungs and
+    /// worker threads used to deep-copy the full tensor set per
+    /// `device_weights()` call).
+    upload: OnceLock<DeviceWeights>,
 }
 
 impl CompiledVariant {
@@ -167,6 +172,7 @@ impl CompiledVariant {
             weights,
             exec,
             rt,
+            upload: OnceLock::new(),
         })
     }
 
@@ -176,8 +182,18 @@ impl CompiledVariant {
     }
 
     /// Prepare this variant's own weights for execution.
+    ///
+    /// The upload (host-side panel packing for native, device transfer
+    /// for pjrt) happens once per variant; every subsequent call clones
+    /// the shared handle.  Mutate a *clone* of [`CompiledVariant::weights`]
+    /// and recompile (as the pruning flows do) to execute different
+    /// tensors — in-place edits after the first upload are not observed.
     pub fn device_weights(&self) -> Result<DeviceWeights> {
-        self.rt.upload_weights(&self.weights)
+        if let Some(dw) = self.upload.get() {
+            return Ok(dw.clone());
+        }
+        let dw = self.rt.upload_weights(&self.weights)?;
+        Ok(self.upload.get_or_init(|| dw).clone())
     }
 
     /// Fresh zeroed per-stream states.
@@ -261,6 +277,42 @@ impl CompiledVariant {
         self.check_batch(frames, states.len())?;
         self.exec
             .step_rest_batch(phase % self.manifest.period, frames, states, dev_weights)
+    }
+
+    /// [`CompiledVariant::step_batch`] writing into caller-owned buffers
+    /// (capacity reused across rounds — the server's batched dispatch
+    /// path).
+    pub fn step_batch_into(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        dev_weights: &DeviceWeights,
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        self.check_batch(frames, states.len())?;
+        self.exec
+            .step_batch_into(phase % self.manifest.period, frames, states, dev_weights, outs)
+    }
+
+    /// [`CompiledVariant::step_rest_batch`] writing into caller-owned
+    /// buffers.
+    pub fn step_rest_batch_into(
+        &self,
+        phase: usize,
+        frames: &[&[f32]],
+        states: &mut [&mut StateSet],
+        dev_weights: &DeviceWeights,
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        self.check_batch(frames, states.len())?;
+        self.exec.step_rest_batch_into(
+            phase % self.manifest.period,
+            frames,
+            states,
+            dev_weights,
+            outs,
+        )
     }
 
     fn check_batch(&self, frames: &[&[f32]], n_states: usize) -> Result<()> {

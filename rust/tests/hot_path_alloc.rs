@@ -1,0 +1,179 @@
+//! Zero-allocation steady state (DESIGN.md §11).
+//!
+//! A counting `#[global_allocator]` shim wraps the system allocator;
+//! after a warm-up pass (which populates the per-variant `StepArena`,
+//! the output buffers' capacity, and — for int8 — the packed quantized
+//! plan), every `step`/`step_rest`/`precompute`/`step_batch` through the
+//! `_into` entry points must perform **zero** heap allocations, for
+//! every variant family at both execution precisions.
+//!
+//! Everything lives in ONE `#[test]` on purpose: the counter is global,
+//! and the standard harness runs separate tests on separate threads —
+//! parallel tests would pollute each other's windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use soi::backend::VariantExec;
+use soi::quant::calibrate;
+use soi::runtime::{synth, Dtype, Runtime, StateSet};
+
+/// System allocator with an allocation-event counter (alloc, realloc
+/// and alloc_zeroed all count; frees do not — we gate on *new* memory).
+struct Counting;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: pure delegation to `System`; the counter has no side effects
+// on allocation behaviour.
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
+
+const BATCH: usize = 3;
+
+/// Drive `rounds` full schedule periods of single-stream + batched
+/// steps (FP variants run precompute + rest, mirroring the serving
+/// loop).  Reuses every caller-side buffer, so with a warm arena the
+/// exec layer is the only possible allocation source.
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    exec: &dyn VariantExec,
+    dw: &soi::runtime::DeviceWeights,
+    period: usize,
+    feat: usize,
+    t0: &mut usize,
+    st: &mut StateSet,
+    stb: &mut [StateSet; BATCH],
+    out: &mut Vec<f32>,
+    outs: &mut Vec<Vec<f32>>,
+    frame: &[f32],
+    rounds: usize,
+) {
+    assert_eq!(frame.len(), feat);
+    let fp = exec.has_fp_split();
+    for _ in 0..rounds * period {
+        let t = *t0;
+        *t0 += 1;
+        // single stream
+        if fp {
+            exec.precompute(t, st, dw).unwrap();
+            exec.step_rest_into(t, frame, st, dw, out).unwrap();
+        } else {
+            exec.step_into(t, frame, st, dw, out).unwrap();
+        }
+        assert_eq!(out.len(), feat);
+        // phase-aligned batch of BATCH streams
+        let fr: [&[f32]; BATCH] = [frame, frame, frame];
+        if fp {
+            for s in stb.iter_mut() {
+                exec.precompute(t, s, dw).unwrap();
+            }
+            let mut it = stb.iter_mut();
+            let mut refs: [&mut StateSet; BATCH] =
+                [it.next().unwrap(), it.next().unwrap(), it.next().unwrap()];
+            exec.step_rest_batch_into(t, &fr, &mut refs, dw, outs).unwrap();
+        } else {
+            let mut it = stb.iter_mut();
+            let mut refs: [&mut StateSet; BATCH] =
+                [it.next().unwrap(), it.next().unwrap(), it.next().unwrap()];
+            exec.step_batch_into(t, &fr, &mut refs, dw, outs).unwrap();
+        }
+        assert_eq!(outs.len(), BATCH);
+    }
+}
+
+#[test]
+fn zero_steady_state_allocations_for_all_families_and_dtypes() {
+    // Family coverage: pure STMC, single/double S-CC, SS-CC (shift at
+    // the S-CC position), hybrid FP, whole-network FP (shift at 1, the
+    // f32-valued handoff), and a learned-tconv extrapolation variant.
+    let presets = ["stmc", "scc2", "scc2_5", "sscc5", "fp1_3", "pred2"];
+    let rt = Runtime::native();
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let mut cases: Vec<(String, soi::runtime::Manifest)> = Vec::new();
+        for base in presets {
+            let cfg = synth::preset(base).unwrap();
+            cases.push((base.to_string(), synth::manifest(&cfg, base, 32)));
+        }
+        // learned-tconv extrapolation (presets default to duplication)
+        let mut tcfg = synth::preset("scc3").unwrap();
+        tcfg.extrap = vec!["tconv".into()];
+        cases.push(("scc3tconv".to_string(), synth::manifest(&tcfg, "scc3tconv", 32)));
+
+        for (name, mut m) in cases {
+            let w = synth::he_weights(&m, 0xA110C);
+            if dtype == Dtype::Int8 {
+                m.dtype = Dtype::Int8;
+                m.quant = Some(calibrate(&m, &w, 64, 7).unwrap());
+            }
+            let exec = rt.compile_variant(&m).unwrap();
+            let dw = rt.upload_weights(&w).unwrap();
+            let feat = m.config.feat;
+            let period = m.period;
+            let frame: Vec<f32> = (0..feat).map(|i| ((i * 7) as f32 * 0.07).sin() * 0.4).collect();
+            let mut st = exec.init_states();
+            let mut stb: [StateSet; BATCH] =
+                [exec.init_states(), exec.init_states(), exec.init_states()];
+            let mut out: Vec<f32> = Vec::new();
+            let mut outs: Vec<Vec<f32>> = Vec::new();
+            let mut t0 = 0usize;
+
+            // Warm-up: arena slabs, output capacity, quantized plan.
+            drive(
+                exec.as_ref(),
+                &dw,
+                period,
+                feat,
+                &mut t0,
+                &mut st,
+                &mut stb,
+                &mut out,
+                &mut outs,
+                &frame,
+                2,
+            );
+
+            // Steady state: two more full periods, zero allocations.
+            let before = ALLOCS.load(Ordering::Relaxed);
+            drive(
+                exec.as_ref(),
+                &dw,
+                period,
+                feat,
+                &mut t0,
+                &mut st,
+                &mut stb,
+                &mut out,
+                &mut outs,
+                &frame,
+                2,
+            );
+            let after = ALLOCS.load(Ordering::Relaxed);
+            assert_eq!(
+                after - before,
+                0,
+                "{name} ({}) allocated {} times in the steady state",
+                dtype.as_str(),
+                after - before
+            );
+        }
+    }
+}

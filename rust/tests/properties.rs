@@ -3,7 +3,9 @@
 
 use soi::complexity::unet;
 use soi::dsp::{metrics, resample, siggen};
-use soi::quant::{quantize_groups, quantize_per_channel, EluLut};
+use soi::kernels::{gemm_f32, gemm_f32_on, gemm_i8, gemm_i8_on, Isa, PackedF32, PackedI8};
+use soi::quant::kernels::{conv_win_batch_q, tconv_phase_batch_q};
+use soi::quant::{quantize_groups, quantize_per_channel, quantize_weights, EluLut};
 use soi::util::json::{self, Json};
 use soi::util::prop;
 use soi::util::rng::Rng;
@@ -250,6 +252,178 @@ fn prop_elu_lut_error_within_bound() {
         let qp = rng.below(32767) as i32;
         if lut.apply(qp) != qp {
             return Err("positive codes must pass through".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_panels_roundtrip() {
+    // Packing a (c_out, n) matrix into MR-lane panels and unpacking it
+    // reproduces the matrix exactly, for full and partial last panels.
+    prop::check("packed panel roundtrip", 60, 0x9AC4, |rng, _| {
+        let c_out = 1 + rng.below(20);
+        let n = 1 + rng.below(24);
+        let w: Vec<f32> = (0..c_out * n).map(|_| rng.normal() as f32).collect();
+        let p = PackedF32::pack(&w, c_out, n);
+        if p.unpack() != w {
+            return Err(format!("({c_out}, {n}) panel roundtrip mismatch"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_f32_simd_within_ulp_envelope_of_scalar() {
+    // DESIGN.md §11 ULP policy: the dispatched f32 kernel may differ
+    // from the scalar oracle only by FMA's fused rounding.  Per output
+    // element the envelope is 2 · (n + 2) · ε · (|bias| + Σ|w·x|) —
+    // the scalar path makes ~2n roundings and the fused path n, each
+    // bounded by ε/2 of the partial-sum magnitude, which Σ|w·x| + |bias|
+    // dominates; the ELU epilogue is 1-Lipschitz, so the bound survives
+    // it.  On machines without SIMD both paths are the scalar kernel
+    // and the diff is 0.
+    prop::check("gemm f32 ulp envelope", 40, 0xF3A, |rng, _| {
+        let c_out = 1 + rng.below(24);
+        let n = 1 + rng.below(64);
+        let bsz = 1 + rng.below(9);
+        let w: Vec<f32> = (0..c_out * n).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> = (0..c_out).map(|_| rng.normal() as f32 * 0.1).collect();
+        let x: Vec<f32> = (0..n * bsz).map(|_| rng.normal() as f32).collect();
+        let p = PackedF32::pack(&w, c_out, n);
+        let elu = rng.chance(0.5);
+        let mut simd = vec![0.0f32; c_out * bsz];
+        let mut sc = vec![0.0f32; c_out * bsz];
+        gemm_f32(&p, &bias, &x, bsz, &mut simd, elu);
+        gemm_f32_on(Isa::Scalar, &p, &bias, &x, bsz, &mut sc, elu);
+        for o in 0..c_out {
+            for b in 0..bsz {
+                let mut mag = bias[o].abs();
+                for j in 0..n {
+                    mag += (w[o * n + j] * x[j * bsz + b]).abs();
+                }
+                let tol = 2.0 * (n + 2) as f32 * f32::EPSILON * mag;
+                let (a, r) = (simd[o * bsz + b], sc[o * bsz + b]);
+                if (a - r).abs() > tol {
+                    return Err(format!("[{o},{b}] |{a} - {r}| > {tol}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_f32_batch_invariant_bitwise() {
+    // Per-stream accumulation order must not depend on the batch width:
+    // the dispatched kernel at width B equals B single-column calls
+    // bit-for-bit (the §8 batched == sequential guarantee, at kernel
+    // granularity).
+    prop::check("gemm f32 batch invariance", 40, 0xBA7C, |rng, _| {
+        let c_out = 1 + rng.below(20);
+        let n = 1 + rng.below(48);
+        let bsz = 2 + rng.below(10);
+        let w: Vec<f32> = (0..c_out * n).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> = (0..c_out).map(|_| rng.normal() as f32 * 0.1).collect();
+        let x: Vec<f32> = (0..n * bsz).map(|_| rng.normal() as f32).collect();
+        let p = PackedF32::pack(&w, c_out, n);
+        let mut batched = vec![0.0f32; c_out * bsz];
+        gemm_f32(&p, &bias, &x, bsz, &mut batched, true);
+        let mut one = vec![0.0f32; c_out];
+        let mut col = vec![0.0f32; n];
+        for b in 0..bsz {
+            for j in 0..n {
+                col[j] = x[j * bsz + b];
+            }
+            gemm_f32(&p, &bias, &col, 1, &mut one, true);
+            for o in 0..c_out {
+                if one[o].to_bits() != batched[o * bsz + b].to_bits() {
+                    return Err(format!("[{o},{b}] batch-width-dependent result"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_i8_bit_identical_to_reference() {
+    // The packed int8 kernel must reproduce the scalar reference
+    // (`quant::kernels::conv_win_batch_q`, pinned by the python golden
+    // vectors) bit-for-bit on every ISA — the int8 determinism contract
+    // warm migration relies on.
+    prop::check("gemm i8 vs reference", 40, 0x18B1, |rng, _| {
+        let c_out = 1 + rng.below(20);
+        let c_in = 1 + rng.below(8);
+        let k = 1 + rng.below(4);
+        let bsz = 1 + rng.below(7);
+        let wt = Tensor::new(
+            vec![c_out, c_in, k],
+            (0..c_out * c_in * k).map(|_| rng.normal() as f32).collect(),
+        );
+        let qw = quantize_weights(&wt).map_err(|e| e.to_string())?;
+        let g: Vec<f32> = qw
+            .scales
+            .iter()
+            .map(|&sw| sw * rng.range(1e-5, 1e-3) as f32)
+            .collect();
+        let bias: Vec<f32> = (0..c_out).map(|_| rng.normal() as f32 * 0.1).collect();
+        let x: Vec<i32> = (0..c_in * k * bsz)
+            .map(|_| rng.below(2 * 32767 + 1) as i32 - 32767)
+            .collect();
+        let mut want = vec![0.0f32; c_out * bsz];
+        let (mut acc, mut pre) = (vec![0i32; bsz], vec![0.0f32; bsz]);
+        conv_win_batch_q(&qw, &g, &bias, &x, bsz, &mut acc, &mut pre, &mut want);
+        let p = PackedI8::pack(&qw.data, c_out, c_in, k, &g, &bias);
+        for isa in [None, Some(Isa::Scalar)] {
+            let mut got = vec![0.0f32; c_out * bsz];
+            match isa {
+                None => gemm_i8(&p, &x, bsz, &mut got),
+                Some(i) => gemm_i8_on(i, &p, &x, bsz, &mut got),
+            }
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("[{i}] {a} != {b} (isa {isa:?})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_i8_tconv_phase_panels_match_reference() {
+    // Per-phase 1-tap panels of a quantized stride-2 transposed conv
+    // must match `tconv_phase_batch_q` bit-for-bit, both phases.
+    prop::check("gemm i8 tconv phases", 30, 0x7C0F, |rng, _| {
+        let c = 1 + rng.below(16);
+        let bsz = 1 + rng.below(6);
+        let wt = Tensor::new(
+            vec![c, c, 2],
+            (0..c * c * 2).map(|_| rng.normal() as f32).collect(),
+        );
+        let qw = quantize_weights(&wt).map_err(|e| e.to_string())?;
+        let g: Vec<f32> = qw
+            .scales
+            .iter()
+            .map(|&sw| sw * rng.range(1e-5, 1e-3) as f32)
+            .collect();
+        let bias: Vec<f32> = (0..c).map(|_| rng.normal() as f32 * 0.1).collect();
+        let x: Vec<i32> = (0..c * bsz)
+            .map(|_| rng.below(2 * 32767 + 1) as i32 - 32767)
+            .collect();
+        for ph in 0..2usize {
+            let mut want = vec![0.0f32; c * bsz];
+            let mut pre = vec![0.0f32; bsz];
+            tconv_phase_batch_q(&qw, &g, &bias, ph, &x, bsz, &mut pre, &mut want);
+            let p = PackedI8::pack_tap(&qw.data, c, c, 2, ph, &g, &bias);
+            let mut got = vec![0.0f32; c * bsz];
+            gemm_i8(&p, &x, bsz, &mut got);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("phase {ph} [{i}] {a} != {b}"));
+                }
+            }
         }
         Ok(())
     });
