@@ -74,6 +74,9 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "{}",
                 json_line(vec![
+                    // version tag (DESIGN.md appendix A): parsers can
+                    // dispatch on it instead of sniffing fields
+                    ("schema", Json::Str("soi.step_latency.v2".into())),
                     ("bench", Json::Str("step_latency".into())),
                     ("variant", Json::Str(name.into())),
                     ("dtype", Json::Str(dtype.into())),

@@ -403,4 +403,13 @@ pub trait VariantExec: Send + Sync {
 
     /// Reset the MAC counter (no-op when uncounted).
     fn reset_executed_macs(&self) {}
+
+    /// The variant's [`crate::kernels::StepArena`] registry id, when the
+    /// backend steps out of a per-thread arena (both native interpreters
+    /// do; pjrt reports `None`).  Lets the serving layer look up
+    /// per-variant peak scratch bytes on the thread that executed the
+    /// steps ([`crate::kernels::arena::peak_bytes_of`]).
+    fn arena_id(&self) -> Option<u64> {
+        None
+    }
 }

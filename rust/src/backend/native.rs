@@ -1096,6 +1096,10 @@ impl VariantExec for NativeVariant {
     fn reset_executed_macs(&self) {
         self.macs.store(0, Ordering::Relaxed);
     }
+
+    fn arena_id(&self) -> Option<u64> {
+        Some(self.arena_id)
+    }
 }
 
 // ---- column/window primitives ---------------------------------------------

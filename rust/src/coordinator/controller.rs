@@ -4,10 +4,20 @@
 //!
 //! The controller is pure decision logic — it never touches sessions or
 //! the ladder.  `coordinator::server` feeds it one observation per
-//! serving round and applies the rung it returns; keeping it
+//! serving round and applies the [`Decision`] it returns; keeping it
 //! side-effect-free is what makes the hysteresis rule directly testable
 //! (`rust/tests/adaptive_serving.rs` drives a synthetic load spike
 //! through it without a server).
+//!
+//! Each verdict carries its evidence — the [`Trigger`], the backlog and
+//! the rolling p99 *at decision time* — so the serving layer can record
+//! the full decision trace as obs events (`ctl_decision` in the health
+//! feed) instead of decisions vanishing into a rung change.  The rolling
+//! window itself is an [`crate::obs::RollingHist`]: the same mergeable
+//! log-linear buckets the health feed exports, replacing the old
+//! clone-and-sort sample ring (p99 reads are now allocation-free).
+
+use crate::obs::RollingHist;
 
 /// Tuning knobs for the adaptive-serving controller.
 ///
@@ -37,7 +47,9 @@ pub struct AdaptivePolicy {
     pub patience_up: u32,
     /// Rounds after any switch during which no further decision fires.
     pub cooldown: u32,
-    /// Rolling latency-window length, in served frames.
+    /// Rolling latency-window length, in served frames.  The window is
+    /// epoch-rotated ([`RollingHist`]): p99 covers between `window/2 + 1`
+    /// and `window` of the most recent samples.
     pub window: usize,
     /// Upgrade only while the rolling p99 is below
     /// `headroom · target_p99_us` (in (0, 1]).
@@ -70,28 +82,88 @@ impl AdaptivePolicy {
     }
 }
 
+/// Why a [`Decision`] fired.  Also the `trigger` field of
+/// `ctl_decision` health-feed events (`name()` is the wire string).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// Downgrade: queue depth at/above `queue_high` on the deciding
+    /// round (queue growth is the earlier overload signal).
+    Queue,
+    /// Downgrade: rolling p99 above `target_p99_us` (queue still fine).
+    Latency,
+    /// Upgrade: drained queue and p99 under the headroom for
+    /// `patience_up` consecutive rounds.
+    Calm,
+}
+
+impl Trigger {
+    /// Stable snake_case name (health-feed `trigger` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Trigger::Queue => "queue",
+            Trigger::Latency => "latency",
+            Trigger::Calm => "calm",
+        }
+    }
+
+    /// Numeric code carried in the fixed-size obs event payload
+    /// (0 queue, 1 latency, 2 calm — decoded back by `obs::export`).
+    pub fn code(self) -> u64 {
+        match self {
+            Trigger::Queue => 0,
+            Trigger::Latency => 1,
+            Trigger::Calm => 2,
+        }
+    }
+}
+
+/// One fired controller verdict, with the evidence it fired on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    /// Rung the worker's streams were targeting.
+    pub from: usize,
+    /// New target rung (`from + 1` degrade, `from - 1` recover).
+    pub to: usize,
+    /// Which signal fired.
+    pub trigger: Trigger,
+    /// Worker backlog (undelivered frames) at decision time.
+    pub backlog: usize,
+    /// Rolling window p99 at decision time, microseconds.
+    pub p99_us: u64,
+}
+
+impl Decision {
+    /// True when the verdict moves toward cheaper rungs.
+    pub fn is_degrade(&self) -> bool {
+        self.to > self.from
+    }
+}
+
 /// Per-worker controller state: a rolling latency window plus the
 /// hysteresis counters.
 pub struct LoadController {
     policy: AdaptivePolicy,
-    /// Ring buffer of recent per-frame on-arrival latencies, ns.
-    lat_ns: Vec<u64>,
-    next: usize,
+    /// Rolling window of recent per-frame on-arrival latencies, ns
+    /// (epoch-rotated mergeable histogram; see [`RollingHist`]).
+    lat_ns: RollingHist,
     over_rounds: u32,
     calm_rounds: u32,
     cooldown_left: u32,
+    /// Signal behind the most recent overloaded round (evidence for the
+    /// next degrade verdict).
+    last_over: Trigger,
 }
 
 impl LoadController {
     /// A controller with empty history.
     pub fn new(policy: AdaptivePolicy) -> LoadController {
         LoadController {
-            lat_ns: Vec::with_capacity(policy.window.max(1)),
+            lat_ns: RollingHist::new(policy.window.max(2)),
             policy,
-            next: 0,
             over_rounds: 0,
             calm_rounds: 0,
             cooldown_left: 0,
+            last_over: Trigger::Queue,
         }
     }
 
@@ -99,24 +171,13 @@ impl LoadController {
     /// the batch wall time once per frame in it — what each frame
     /// actually waited for).
     pub fn record_latency_ns(&mut self, ns: u64) {
-        let cap = self.policy.window.max(1);
-        if self.lat_ns.len() < cap {
-            self.lat_ns.push(ns);
-        } else {
-            self.lat_ns[self.next] = ns;
-            self.next = (self.next + 1) % cap;
-        }
+        self.lat_ns.record(ns);
     }
 
     /// p99 over the rolling window, microseconds (0 while empty).
+    /// Bucket resolution <1%; allocation-free.
     pub fn window_p99_us(&self) -> u64 {
-        if self.lat_ns.is_empty() {
-            return 0;
-        }
-        let mut v = self.lat_ns.clone();
-        v.sort_unstable();
-        let idx = ((v.len() as f64) * 0.99).ceil() as usize;
-        v[idx.saturating_sub(1).min(v.len() - 1)] / 1_000
+        self.lat_ns.p99() / 1_000
     }
 
     /// One control decision per serving round.
@@ -125,15 +186,15 @@ impl LoadController {
     /// received but not served — 0 when the worker keeps up with
     /// arrivals, large under overload), `rung` its streams' current
     /// target rung, `max_rung` the ladder's last index.
-    /// Returns the new target rung when the hysteresis rule fires
-    /// (`rung + 1` = downgrade toward cheaper, `rung - 1` = upgrade
-    /// toward quality), `None` to stay put.
+    /// Returns the fired [`Decision`] when the hysteresis rule trips
+    /// (`to = rung + 1` downgrade toward cheaper, `to = rung - 1`
+    /// upgrade toward quality), `None` to stay put.
     pub fn observe_round(
         &mut self,
         queue_depth: usize,
         rung: usize,
         max_rung: usize,
-    ) -> Option<usize> {
+    ) -> Option<Decision> {
         let p = &self.policy;
         let p99 = self.window_p99_us();
         let over = queue_depth >= p.queue_high || p99 > p.target_p99_us;
@@ -142,6 +203,13 @@ impl LoadController {
         if over {
             self.over_rounds = self.over_rounds.saturating_add(1);
             self.calm_rounds = 0;
+            // queue wins when both fire: it is the earlier signal and
+            // the one the operator can act on (shed load vs retune)
+            self.last_over = if queue_depth >= p.queue_high {
+                Trigger::Queue
+            } else {
+                Trigger::Latency
+            };
         } else if calm {
             self.calm_rounds = self.calm_rounds.saturating_add(1);
             self.over_rounds = 0;
@@ -157,13 +225,25 @@ impl LoadController {
             self.over_rounds = 0;
             self.calm_rounds = 0;
             self.cooldown_left = self.policy.cooldown;
-            return Some(rung + 1);
+            return Some(Decision {
+                from: rung,
+                to: rung + 1,
+                trigger: self.last_over,
+                backlog: queue_depth,
+                p99_us: p99,
+            });
         }
         if self.calm_rounds >= self.policy.patience_up && rung > 0 {
             self.over_rounds = 0;
             self.calm_rounds = 0;
             self.cooldown_left = self.policy.cooldown;
-            return Some(rung - 1);
+            return Some(Decision {
+                from: rung,
+                to: rung - 1,
+                trigger: Trigger::Calm,
+                backlog: queue_depth,
+                p99_us: p99,
+            });
         }
         None
     }
@@ -189,19 +269,23 @@ mod tests {
     #[test]
     fn window_p99_tracks_recent_samples() {
         let mut c = LoadController::new(AdaptivePolicy {
-            window: 4,
+            window: 8,
             ..quick_policy()
         });
         assert_eq!(c.window_p99_us(), 0);
-        for ns in [1_000_000, 2_000_000, 3_000_000, 4_000_000] {
-            c.record_latency_ns(ns);
+        for _ in 0..8 {
+            c.record_latency_ns(4_000_000);
         }
-        assert_eq!(c.window_p99_us(), 4_000);
-        // the ring evicts the oldest sample
-        for _ in 0..4 {
+        // log-bucketed: within 1% of 4 ms
+        let p99 = c.window_p99_us();
+        assert!((3_960..=4_040).contains(&p99), "p99={p99}");
+        // epoch rotation evicts the old spike: after `window` cheaper
+        // samples plus one epoch of slack, only 500 µs remains visible
+        for _ in 0..12 {
             c.record_latency_ns(500_000);
         }
-        assert_eq!(c.window_p99_us(), 500);
+        let p99 = c.window_p99_us();
+        assert!((495..=505).contains(&p99), "p99={p99}");
     }
 
     #[test]
@@ -209,7 +293,41 @@ mod tests {
         let mut c = LoadController::new(quick_policy());
         c.record_latency_ns(5_000_000); // 5 ms >> 1 ms target
         assert_eq!(c.observe_round(0, 0, 2), None); // patience 1/2
-        assert_eq!(c.observe_round(0, 0, 2), Some(1)); // patience 2/2
+        let d = c.observe_round(0, 0, 2).expect("patience 2/2 fires");
+        assert_eq!((d.from, d.to), (0, 1));
+        assert_eq!(d.trigger, Trigger::Latency);
+        assert_eq!(d.backlog, 0);
+        assert!(d.p99_us > 1_000, "evidence p99 carried: {}", d.p99_us);
+        assert!(d.is_degrade());
+    }
+
+    #[test]
+    fn queue_pressure_wins_the_trigger_attribution() {
+        let mut c = LoadController::new(quick_policy());
+        c.record_latency_ns(5_000_000); // latency *also* over target
+        assert_eq!(c.observe_round(10, 0, 2), None);
+        let d = c.observe_round(10, 0, 2).expect("degrade fires");
+        assert_eq!(d.trigger, Trigger::Queue);
+        assert_eq!(d.backlog, 10);
+    }
+
+    #[test]
+    fn recovery_is_attributed_to_calm() {
+        let mut c = LoadController::new(quick_policy());
+        for _ in 0..2 {
+            c.record_latency_ns(100_000); // 100 µs, well under headroom
+        }
+        let mut fired = None;
+        for _ in 0..10 {
+            if let Some(d) = c.observe_round(0, 1, 2) {
+                fired = Some(d);
+                break;
+            }
+        }
+        let d = fired.expect("calm upgrade fires within patience_up");
+        assert_eq!((d.from, d.to), (1, 0));
+        assert_eq!(d.trigger, Trigger::Calm);
+        assert!(!d.is_degrade());
     }
 
     #[test]

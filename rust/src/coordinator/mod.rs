@@ -21,7 +21,7 @@ pub mod scheduler;
 pub mod server;
 pub mod stream;
 
-pub use controller::{AdaptivePolicy, LoadController};
+pub use controller::{AdaptivePolicy, Decision, LoadController, Trigger};
 pub use metrics::StreamMetrics;
 pub use scheduler::{Scheduler, StepPlan};
 pub use server::{ServeReport, Server};

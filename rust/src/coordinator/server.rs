@@ -40,6 +40,7 @@ use anyhow::{anyhow, Result};
 use super::controller::{AdaptivePolicy, LoadController};
 use super::metrics::StreamMetrics;
 use super::stream::StreamSession;
+use crate::obs::{Counter, EventKind, Gauge, ObsHandle, Telemetry};
 use crate::runtime::{CompiledVariant, DeviceWeights, VariantLadder};
 
 /// One frame of work for a stream.
@@ -67,6 +68,13 @@ pub struct ServeReport {
     pub wall_seconds: f64,
     /// Total frames served.
     pub frames: u64,
+    /// Peak scratch-arena bytes per variant (high-water of the per-step
+    /// [`crate::kernels::StepArena`]; max across workers).  Empty for
+    /// backends without an arena (pjrt).
+    pub arena_peak_by_variant: HashMap<String, u64>,
+    /// Peak scratch-arena bytes of the hottest worker thread (the max
+    /// across workers of each worker's summed per-variant peaks).
+    pub arena_peak_bytes: u64,
 }
 
 impl ServeReport {
@@ -99,6 +107,13 @@ pub struct Server {
     /// [`LoadController`] over this policy and migrates its streams up
     /// and down the ladder with warm state re-priming.
     pub adaptive: Option<AdaptivePolicy>,
+    /// Telemetry root (DESIGN.md §12): when set, each worker records
+    /// dispatch rounds, per-(rung × phase) exec latencies, FP pre/rest
+    /// spans, migrations and controller decisions through its own
+    /// [`ObsHandle`] — into preallocated storage, so the zero-allocation
+    /// steady state holds with telemetry enabled
+    /// (`tests/hot_path_alloc.rs`).
+    pub telemetry: Option<Arc<Telemetry>>,
 }
 
 impl Server {
@@ -118,6 +133,7 @@ impl Server {
             idle_precompute: true,
             batching: true,
             adaptive: None,
+            telemetry: None,
         }
     }
 
@@ -165,18 +181,21 @@ impl Server {
         // a bounded channel here can deadlock worker against dispatcher.
         let (out_tx, out_rx) = channel::<WorkerResult>();
 
-        for _ in 0..self.workers {
+        for w in 0..self.workers {
             let (tx, rx): (SyncSender<FrameJob>, Receiver<FrameJob>) =
                 sync_channel(self.queue_depth);
             senders.push(tx);
             let ladder = self.ladder.clone();
             let out_tx = out_tx.clone();
-            let idle = self.idle_precompute;
-            let batching = self.batching;
-            let depth = self.queue_depth;
-            let adaptive = self.adaptive.clone();
+            let cfg = WorkerCfg {
+                idle_precompute: self.idle_precompute,
+                batching: self.batching,
+                max_pending: self.queue_depth,
+                adaptive: self.adaptive.clone(),
+                obs: self.telemetry.as_ref().map(|t| t.worker(w)),
+            };
             handles.push(thread::spawn(move || {
-                worker_loop(ladder, rx, out_tx, idle, batching, depth, adaptive);
+                worker_loop(ladder, rx, out_tx, cfg);
             }));
         }
         drop(out_tx);
@@ -208,12 +227,32 @@ impl Server {
         let mut outputs = HashMap::new();
         let mut final_levels = HashMap::new();
         let mut frames = 0u64;
+        let mut arena_peak_by_variant: HashMap<String, u64> = HashMap::new();
+        let mut arena_peak_bytes = 0u64;
         for res in out_rx {
-            let (sid, m, outs, rung) = res?;
-            frames += m.frames;
-            metrics.merge(&m);
-            outputs.insert(sid, outs);
-            final_levels.insert(sid, rung);
+            match res? {
+                WorkerMsg::Stream {
+                    id,
+                    metrics: m,
+                    outs,
+                    rung,
+                } => {
+                    frames += m.frames;
+                    metrics.merge(&m);
+                    outputs.insert(id, outs);
+                    final_levels.insert(id, rung);
+                }
+                WorkerMsg::Done {
+                    arena_peaks,
+                    thread_peak,
+                } => {
+                    for (name, bytes) in arena_peaks {
+                        let slot = arena_peak_by_variant.entry(name).or_insert(0);
+                        *slot = (*slot).max(bytes);
+                    }
+                    arena_peak_bytes = arena_peak_bytes.max(thread_peak);
+                }
+            }
         }
         for h in handles {
             h.join().map_err(|_| anyhow!("worker panicked"))?;
@@ -224,13 +263,44 @@ impl Server {
             final_levels,
             wall_seconds: t0.elapsed().as_secs_f64(),
             frames,
+            arena_peak_by_variant,
+            arena_peak_bytes,
         })
     }
 }
 
-/// What a worker reports per retired stream: id, metrics, outputs and
-/// the ladder rung the stream retired on.
-type WorkerResult = Result<(u64, StreamMetrics, Vec<Vec<f32>>, usize)>;
+/// What a worker sends back on the result channel.
+enum WorkerMsg {
+    /// One retired stream: id, metrics, outputs and the ladder rung it
+    /// retired on.
+    Stream {
+        id: u64,
+        metrics: StreamMetrics,
+        outs: Vec<Vec<f32>>,
+        rung: usize,
+    },
+    /// Worker exit summary: per-variant scratch-arena high-water marks
+    /// observed on the worker's thread (variant name, peak bytes) and
+    /// their sum.  Arenas are thread-local, so only the worker itself
+    /// can read them — sent exactly once, after the last stream retires.
+    Done {
+        arena_peaks: Vec<(String, u64)>,
+        thread_peak: u64,
+    },
+}
+
+/// Worker result-channel payload (errors abort the run).
+type WorkerResult = Result<WorkerMsg>;
+
+/// Per-worker configuration captured at spawn time.
+struct WorkerCfg {
+    idle_precompute: bool,
+    batching: bool,
+    max_pending: usize,
+    adaptive: Option<AdaptivePolicy>,
+    /// The worker's telemetry handle (None runs unobserved).
+    obs: Option<ObsHandle>,
+}
 
 /// Per-stream serving state owned by one worker.
 struct Slot {
@@ -266,11 +336,15 @@ fn worker_loop(
     ladder: Arc<VariantLadder>,
     rx: Receiver<FrameJob>,
     out_tx: Sender<WorkerResult>,
-    idle_precompute: bool,
-    batching: bool,
-    max_pending: usize,
-    adaptive: Option<AdaptivePolicy>,
+    cfg: WorkerCfg,
 ) {
+    let WorkerCfg {
+        idle_precompute,
+        batching,
+        max_pending,
+        adaptive,
+        obs,
+    } = cfg;
     let weights: Arc<DeviceWeights> = match ladder.device_weights() {
         Ok(w) => Arc::new(w),
         Err(e) => {
@@ -320,6 +394,7 @@ fn worker_loop(
             let mut sess =
                 StreamSession::new(job.stream_id, ladder.level(0).clone(), weights.clone());
             sess.set_history_cap(history_cap);
+            sess.set_obs(obs.clone());
             slots.push(Slot {
                 sess,
                 rung: 0,
@@ -381,8 +456,21 @@ fn worker_loop(
             for slot in slots.iter_mut() {
                 if slot.rung != target_rung {
                     slot.sess.request_switch(ladder.level(target_rung).clone());
+                    let replay = slot.sess.history_len();
+                    let t_mig = Instant::now();
                     match slot.sess.try_switch() {
-                        Ok(true) => slot.rung = target_rung,
+                        Ok(true) => {
+                            if let Some(obs) = &obs {
+                                obs.migration(
+                                    slot.sess.id,
+                                    slot.rung,
+                                    target_rung,
+                                    replay,
+                                    t_mig.elapsed().as_nanos() as u64,
+                                );
+                            }
+                            slot.rung = target_rung;
+                        }
                         Ok(false) => {}
                         Err(e) => {
                             let _ = out_tx.send(Err(e));
@@ -401,6 +489,8 @@ fn worker_loop(
         //    grouped into (rung, phase)-aligned batches — sessions mid-
         //    switch still sit on their old rung, so every group shares
         //    one compiled variant by construction
+        let t_round = Instant::now();
+        let mut served = 0u64;
         if batching {
             // Group by sorting a reused (rung, phase, slot) key list —
             // same (rung, phase) visit order and ascending slot order
@@ -437,12 +527,16 @@ fn worker_loop(
                 };
                 match res {
                     Ok(()) => {
+                        let ns = t_exec.elapsed().as_nanos() as u64;
                         if let Some(ctl) = controller.as_mut() {
-                            let ns = t_exec.elapsed().as_nanos() as u64;
                             for _ in 0..group.len() {
                                 ctl.record_latency_ns(ns);
                             }
                         }
+                        if let Some(obs) = &obs {
+                            obs.exec(rung, phase, group.len(), ns);
+                        }
+                        served += group.len() as u64;
                         for (&i, out) in group.iter().zip(outs_buf.drain(..)) {
                             slots[i].outs.push(out);
                         }
@@ -458,12 +552,18 @@ fn worker_loop(
             for slot in slots.iter_mut() {
                 if let Some(frame) = slot.pending.pop_front() {
                     pending_total -= 1;
+                    let phase = slot.sess.next_plan().phase;
                     let t_exec = Instant::now();
                     match slot.sess.on_frame(&frame) {
                         Ok(out) => {
+                            let ns = t_exec.elapsed().as_nanos() as u64;
                             if let Some(ctl) = controller.as_mut() {
-                                ctl.record_latency_ns(t_exec.elapsed().as_nanos() as u64);
+                                ctl.record_latency_ns(ns);
                             }
+                            if let Some(obs) = &obs {
+                                obs.exec(slot.rung, phase, 1, ns);
+                            }
+                            served += 1;
                             slot.outs.push(out);
                         }
                         Err(e) => {
@@ -481,9 +581,48 @@ fn worker_loop(
         //    under overload), which makes the queue signal independent
         //    of how many streams happen to arrive per round
         if let Some(ctl) = controller.as_mut() {
-            if let Some(rung) = ctl.observe_round(pending_total, target_rung, ladder.len() - 1) {
-                target_rung = rung;
+            if let Some(d) = ctl.observe_round(pending_total, target_rung, ladder.len() - 1) {
+                target_rung = d.to;
+                if let Some(obs) = &obs {
+                    obs.with(|w| {
+                        let counter = if d.is_degrade() {
+                            Counter::CtlDegrades
+                        } else {
+                            Counter::CtlRecovers
+                        };
+                        w.count(counter, 1);
+                        w.push_event(
+                            EventKind::CtlDecision,
+                            d.from as u64,
+                            d.to as u64,
+                            d.trigger.code(),
+                            d.backlog as u64,
+                            d.p99_us,
+                        );
+                    });
+                }
             }
+        }
+
+        // round record: counters + gauges + a Round event, one lock
+        if let Some(obs) = &obs {
+            let round_ns = t_round.elapsed().as_nanos() as u64;
+            let arena_peak = crate::kernels::thread_peak_bytes() as u64;
+            obs.with(|w| {
+                w.count(Counter::Rounds, 1);
+                w.push_event(
+                    EventKind::Round,
+                    served,
+                    pending_total as u64,
+                    slots.len() as u64,
+                    round_ns,
+                    0,
+                );
+                w.gauge_set(Gauge::QueueDepth, pending_total as u64);
+                w.gauge_set(Gauge::TargetRung, target_rung as u64);
+                w.gauge_set(Gauge::StreamsLive, slots.len() as u64);
+                w.gauge_max(Gauge::ArenaPeakBytes, arena_peak);
+            });
         }
 
         // 6. retire streams whose last frame has been served
@@ -495,12 +634,12 @@ fn worker_loop(
                 if let Some(moved) = slots.get(i) {
                     index.insert(moved.sess.id, i);
                 }
-                let _ = out_tx.send(Ok((
-                    slot.sess.id,
-                    slot.sess.metrics.clone(),
-                    slot.outs,
-                    slot.rung,
-                )));
+                let _ = out_tx.send(Ok(WorkerMsg::Stream {
+                    id: slot.sess.id,
+                    metrics: slot.sess.metrics.clone(),
+                    outs: slot.outs,
+                    rung: slot.rung,
+                }));
             } else {
                 i += 1;
             }
@@ -509,11 +648,28 @@ fn worker_loop(
 
     // flush any sessions that never saw a `last` marker
     for slot in slots {
-        let _ = out_tx.send(Ok((
-            slot.sess.id,
-            slot.sess.metrics.clone(),
-            slot.outs,
-            slot.rung,
-        )));
+        let _ = out_tx.send(Ok(WorkerMsg::Stream {
+            id: slot.sess.id,
+            metrics: slot.sess.metrics.clone(),
+            outs: slot.outs,
+            rung: slot.rung,
+        }));
     }
+
+    // exit summary: scratch arenas are thread-local, so the per-variant
+    // high-water marks can only be read here, on the worker's own thread
+    let mut arena_peaks: Vec<(String, u64)> = Vec::new();
+    for level in 0..ladder.len() {
+        let cv = ladder.level(level);
+        if let Some(id) = cv.arena_id() {
+            if let Some(bytes) = crate::kernels::peak_bytes_of(id) {
+                arena_peaks.push((cv.manifest.name.clone(), bytes as u64));
+            }
+        }
+    }
+    let thread_peak = crate::kernels::thread_peak_bytes() as u64;
+    let _ = out_tx.send(Ok(WorkerMsg::Done {
+        arena_peaks,
+        thread_peak,
+    }));
 }

@@ -12,6 +12,7 @@ use anyhow::{bail, Result};
 
 use super::metrics::StreamMetrics;
 use super::scheduler::{Scheduler, StepPlan};
+use crate::obs::ObsHandle;
 use crate::runtime::ladder::warmup_frames;
 use crate::runtime::{CompiledVariant, DeviceWeights, Dtype, StateSet};
 
@@ -51,6 +52,10 @@ pub struct StreamSession {
     /// Variant requested by [`StreamSession::request_switch`], applied
     /// at the next phase-0 boundary of *its* schedule.
     pending_switch: Option<Arc<CompiledVariant>>,
+    /// Telemetry recorder (the owning worker's [`ObsHandle`]); when set,
+    /// FP pre/rest passes are recorded as spans.  Recording writes into
+    /// preallocated slots — the steady state stays allocation-free.
+    obs: Option<ObsHandle>,
 }
 
 impl StreamSession {
@@ -73,7 +78,22 @@ impl StreamSession {
             history: VecDeque::new(),
             history_cap: 0,
             pending_switch: None,
+            obs: None,
         }
+    }
+
+    /// Attach (or detach) a telemetry recorder.  The serving worker
+    /// passes its own [`ObsHandle`] when the server runs with
+    /// `--telemetry`, so the session's FP pre/rest spans land in that
+    /// worker's ring.
+    pub fn set_obs(&mut self, obs: Option<ObsHandle>) {
+        self.obs = obs;
+    }
+
+    /// Frames of receptive-field history currently retained (the exact
+    /// count a warm migration would replay).
+    pub fn history_len(&self) -> usize {
+        self.history.len()
     }
 
     /// Retain up to `cap` recent input frames for warm migration
@@ -240,6 +260,9 @@ impl StreamSession {
         self.engine
             .precompute(plan.phase, &mut self.states, &self.weights)?;
         self.metrics.record_precompute(start);
+        if let Some(obs) = &self.obs {
+            obs.fp_pre(self.id, plan.phase, false, start.elapsed().as_nanos() as u64);
+        }
         self.precomputed = true;
         Ok(true)
     }
@@ -259,10 +282,19 @@ impl StreamSession {
             if !self.precomputed {
                 self.engine
                     .precompute(plan.phase, &mut self.states, &self.weights)?;
+                if let Some(obs) = &self.obs {
+                    obs.fp_pre(self.id, plan.phase, true, start.elapsed().as_nanos() as u64);
+                }
             }
             self.precomputed = false;
-            self.engine
-                .step_rest(plan.phase, frame, &mut self.states, &self.weights)?
+            let rest_start = Instant::now();
+            let out = self
+                .engine
+                .step_rest(plan.phase, frame, &mut self.states, &self.weights)?;
+            if let Some(obs) = &self.obs {
+                obs.fp_rest(plan.phase, 1, rest_start.elapsed().as_nanos() as u64);
+            }
+            out
         } else {
             self.engine
                 .step(plan.phase, frame, &mut self.states, &self.weights)?
@@ -352,10 +384,20 @@ impl StreamSession {
         if plan.split {
             for sess in sessions.iter_mut() {
                 if !sess.precomputed {
+                    let pre_start = Instant::now();
                     engine.precompute(plan.phase, &mut sess.states, &sess.weights)?;
+                    if let Some(obs) = &sess.obs {
+                        obs.fp_pre(
+                            sess.id,
+                            plan.phase,
+                            true,
+                            pre_start.elapsed().as_nanos() as u64,
+                        );
+                    }
                 }
             }
         }
+        let rest_start = Instant::now();
         {
             let mut states: Vec<&mut StateSet> =
                 sessions.iter_mut().map(|s| &mut s.states).collect();
@@ -363,6 +405,13 @@ impl StreamSession {
                 engine.step_rest_batch_into(plan.phase, frames, &mut states, &weights, outs)?
             } else {
                 engine.step_batch_into(plan.phase, frames, &mut states, &weights, outs)?
+            }
+        }
+        if plan.split {
+            // one rest pass served the whole group — record it once, on
+            // the group leader's handle (all sessions share a worker)
+            if let Some(obs) = sessions.first().and_then(|s| s.obs.as_ref()) {
+                obs.fp_rest(plan.phase, bsz, rest_start.elapsed().as_nanos() as u64);
             }
         }
         let phase_macs = macs_at_phase(&engine.manifest, plan.phase);

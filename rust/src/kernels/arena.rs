@@ -73,13 +73,26 @@ struct Pool<T> {
     sizes: Vec<usize>,
     /// Recycled slabs, ascending capacity.
     free: Vec<Vec<T>>,
+    /// Capacity bytes currently lent out (taken, not yet returned).
+    out_bytes: usize,
+    /// Capacity bytes parked on the free list.
+    free_bytes: usize,
+    /// High-water mark of `out_bytes + free_bytes` — the pool's peak
+    /// scratch footprint (the RAM axis the health feed reports).
+    peak_bytes: usize,
 }
 
 impl<T: Copy + Default> Pool<T> {
     fn take(&mut self, per_stream: usize, bsz: usize, bcap: usize) -> Vec<T> {
         let n = per_stream * bsz;
         let mut v = match self.free.iter().position(|v| v.capacity() >= n) {
-            Some(i) => self.free.remove(i),
+            Some(i) => {
+                let v = self.free.remove(i);
+                self.free_bytes = self
+                    .free_bytes
+                    .saturating_sub(v.capacity() * std::mem::size_of::<T>());
+                v
+            }
             None => {
                 // allocate at class capacity so the slab serves every
                 // future request of this class at full batch capacity
@@ -94,14 +107,23 @@ impl<T: Copy + Default> Pool<T> {
         };
         v.clear();
         v.resize(n, T::default());
+        self.out_bytes += v.capacity() * std::mem::size_of::<T>();
+        self.peak_bytes = self.peak_bytes.max(self.out_bytes + self.free_bytes);
         v
     }
 
     fn put(&mut self, v: Vec<T>) {
+        self.out_bytes = self
+            .out_bytes
+            .saturating_sub(v.capacity() * std::mem::size_of::<T>());
         if v.capacity() == 0 || self.free.len() >= MAX_FREE {
             return;
         }
         let cap = v.capacity();
+        self.free_bytes += cap * std::mem::size_of::<T>();
+        // caller-allocated slabs entering through `put` can raise the
+        // footprint without a `take` (they join the free list)
+        self.peak_bytes = self.peak_bytes.max(self.out_bytes + self.free_bytes);
         let at = self
             .free
             .iter()
@@ -216,6 +238,15 @@ impl StepArena {
             self.opts_i.push(v);
         }
     }
+
+    /// Peak scratch footprint of this arena in bytes: the high-water
+    /// mark of slab capacity lent out plus slab capacity parked on the
+    /// free lists, across both element types.  (The small `Vec<Option>`
+    /// holders are not counted — they hold pointers, not panels.)
+    /// Monotone over the arena's lifetime; allocation-free to read.
+    pub fn peak_bytes(&self) -> usize {
+        self.f.peak_bytes + self.i.peak_bytes
+    }
 }
 
 /// Process-unique arena id for one compiled variant (assigned at
@@ -258,6 +289,28 @@ pub fn with_arena<R>(id: u64, spec: &ArenaSpec, f: impl FnOnce(&mut StepArena) -
         }
         f(&mut arenas[last].1)
     })
+}
+
+/// Peak scratch bytes of *this thread's* arena for variant `id`
+/// ([`StepArena::peak_bytes`]); `None` if the thread never stepped the
+/// variant or the arena was LRU-evicted (evicted peaks are forgotten —
+/// the registry is bounded, and so is this gauge's memory).
+/// Allocation-free: a linear scan of the thread's arena registry.
+pub fn peak_bytes_of(id: u64) -> Option<usize> {
+    ARENAS.with(|cell| {
+        cell.borrow()
+            .iter()
+            .find(|(k, _)| *k == id)
+            .map(|(_, a)| a.peak_bytes())
+    })
+}
+
+/// Sum of [`StepArena::peak_bytes`] over all of this thread's live
+/// arenas — an upper bound on the thread's peak scratch RAM (individual
+/// peaks need not be simultaneous).  Allocation-free; serving workers
+/// poll this once per round into the `arena_peak_bytes` gauge.
+pub fn thread_peak_bytes() -> usize {
+    ARENAS.with(|cell| cell.borrow().iter().map(|(_, a)| a.peak_bytes()).sum())
 }
 
 // ---- bounded offline pool --------------------------------------------------
@@ -396,6 +449,48 @@ mod tests {
             p
         });
         let _ = pb;
+    }
+
+    #[test]
+    fn peak_bytes_is_a_monotone_high_water_mark() {
+        let spec = ArenaSpec::new(vec![4], vec![4]);
+        let mut a = StepArena::new(&spec);
+        assert_eq!(a.peak_bytes(), 0);
+        let v = a.take_f32(4, 2);
+        let expect = v.capacity() * std::mem::size_of::<f32>();
+        assert_eq!(a.peak_bytes(), expect);
+        a.put_f32(v);
+        // returning a slab never lowers the peak
+        assert_eq!(a.peak_bytes(), expect);
+        // reusing the same slab never raises it
+        let v = a.take_f32(4, 2);
+        assert_eq!(a.peak_bytes(), expect);
+        // two slabs live at once: the peak ratchets up
+        let w = a.take_f32(4, 2);
+        assert!(a.peak_bytes() >= 2 * expect);
+        let peak = a.peak_bytes();
+        a.put_f32(v);
+        a.put_f32(w);
+        assert_eq!(a.peak_bytes(), peak);
+        // i32 pool contributes too
+        let z = a.take_i32(4, 1);
+        assert!(a.peak_bytes() > peak);
+        a.put_i32(z);
+    }
+
+    #[test]
+    fn thread_peak_queries_see_with_arena_state() {
+        let spec = ArenaSpec::new(vec![8], vec![]);
+        let id = next_arena_id();
+        assert_eq!(peak_bytes_of(id), None);
+        let inner = with_arena(id, &spec, |ar| {
+            let v = ar.take_f32(8, 1);
+            ar.put_f32(v);
+            ar.peak_bytes()
+        });
+        assert!(inner > 0);
+        assert_eq!(peak_bytes_of(id), Some(inner));
+        assert!(thread_peak_bytes() >= inner);
     }
 
     #[test]

@@ -31,7 +31,10 @@ mod x86;
 #[cfg(target_arch = "aarch64")]
 mod neon;
 
-pub use arena::{next_arena_id, offline_put, offline_take, with_arena, ArenaSpec, StepArena};
+pub use arena::{
+    next_arena_id, offline_put, offline_take, peak_bytes_of, thread_peak_bytes, with_arena,
+    ArenaSpec, StepArena,
+};
 pub use pack::{PackedF32, PackedI8, MR};
 
 use std::sync::OnceLock;

@@ -122,6 +122,13 @@ pub struct PackedI8 {
 }
 
 impl PackedI8 {
+    /// Total packed footprint, bytes (codes + combine factors + bias) —
+    /// what a quantized (re)pack materializes, reported in the
+    /// `quant_repack` health-feed event.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + (self.g.len() + self.bias.len()) * std::mem::size_of::<f32>()
+    }
+
     /// Pack row-major int8 codes `(c_out, c_in, k)` with per-(out, in)
     /// combine factors `g` (row-major `(c_out, c_in)`) and per-channel
     /// f32 `bias`.

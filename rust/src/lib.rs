@@ -26,7 +26,11 @@
 //! DESIGN.md §11): runtime-dispatched SIMD microkernels (AVX2/FMA,
 //! NEON, scalar oracle) over weight panels packed once at upload time,
 //! with per-variant scratch arenas keeping the serving steady state
-//! allocation-free.
+//! allocation-free.  The whole serving stack is observable ([`obs`],
+//! DESIGN.md §12): phase-attributed tracing spans, a mergeable metrics
+//! registry, and a versioned NDJSON health feed
+//! (`serve --telemetry`) — recorded into preallocated storage so the
+//! zero-allocation steady state holds with telemetry enabled.
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
@@ -38,6 +42,7 @@ pub mod coordinator;
 pub mod dsp;
 pub mod experiments;
 pub mod kernels;
+pub mod obs;
 pub mod pruning;
 pub mod quant;
 pub mod runtime;

@@ -6,10 +6,13 @@
 //!   exp      <table|fig|all>     regenerate a paper table/figure (results/)
 //!   serve    <variant> [opts]    multi-stream serving benchmark
 //!   denoise  <variant> [opts]    stream one synthetic utterance, report SI-SNRi
+//!   validate-feed <path>         schema-check a telemetry health feed
 //!
 //! Common options: --artifacts DIR (default ./artifacts), --results DIR
 //! (default ./results), --n-eval N (default 6), --seed S, --streams N,
 //! --frames N, --workers N, --dtype f32|int8 (serve/denoise; DESIGN.md §10).
+//! Observability (DESIGN.md §12): serve accepts --telemetry[=PATH] and
+//! --snapshot-ms N to stream a live NDJSON health feed while serving.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -20,6 +23,7 @@ use anyhow::{bail, Context, Result};
 use soi::coordinator::{AdaptivePolicy, Server, StreamSession};
 use soi::dsp::{frames, metrics, siggen};
 use soi::experiments::{self, Ctx};
+use soi::obs::{self, Exporter, ObsConfig, Telemetry};
 use soi::runtime::{
     list_variants, synth, CompiledVariant, Dtype, Manifest, Runtime, VariantLadder,
 };
@@ -39,8 +43,17 @@ fn main() -> ExitCode {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["help", "no-idle-precompute", "no-batching", "adaptive"])
-        .map_err(anyhow::Error::msg)?;
+    let args = Args::parse(
+        argv,
+        &[
+            "help",
+            "no-idle-precompute",
+            "no-batching",
+            "adaptive",
+            "telemetry",
+        ],
+    )
+    .map_err(anyhow::Error::msg)?;
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
 
@@ -121,8 +134,36 @@ fn run(argv: &[String]) -> Result<()> {
                     .collect(),
                 target_p99_us: args.u64_or("target-p99-us", 500).map_err(anyhow::Error::msg)?,
                 pace_us: args.u64_or("pace-us", 0).map_err(anyhow::Error::msg)?,
+                // boolean-style flag that also accepts a value:
+                // `--telemetry` -> default path, `--telemetry=PATH` -> PATH
+                telemetry: args.get("telemetry").map(|v| {
+                    if v == "true" {
+                        "soi-feed.ndjson".to_string()
+                    } else {
+                        v.to_string()
+                    }
+                }),
+                snapshot_ms: args.u64_or("snapshot-ms", 200).map_err(anyhow::Error::msg)?,
             };
             serve_bench(&artifacts, opts)
+        }
+        "validate-feed" => {
+            let path = args
+                .positional()
+                .get(1)
+                .context("validate-feed needs the path of an NDJSON health feed")?;
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading feed {path}"))?;
+            let s = obs::schema::validate_feed(&text).map_err(anyhow::Error::msg)?;
+            println!(
+                "{path}: valid {} feed — {} lines ({} snapshots, {} hists, {} events)",
+                obs::FEED_SCHEMA,
+                s.lines,
+                s.snapshots,
+                s.hists,
+                s.events
+            );
+            Ok(())
         }
         "denoise" => {
             let name = args.positional().get(1).context("denoise needs a variant name")?;
@@ -186,6 +227,11 @@ struct ServeOpts {
     target_p99_us: u64,
     /// Dispatcher gap per round, µs (`--pace-us`; 0 floods).
     pace_us: u64,
+    /// NDJSON health-feed path (`--telemetry[=PATH]`, DESIGN.md §12);
+    /// `None` serves unobserved.
+    telemetry: Option<String>,
+    /// Feed snapshot interval, ms (`--snapshot-ms`).
+    snapshot_ms: u64,
 }
 
 /// Multi-stream serving benchmark over synthetic utterances.
@@ -274,11 +320,35 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     }
     server.idle_precompute = opts.idle_precompute;
     server.batching = opts.batching;
+    // Telemetry (DESIGN.md §12): install the recording root on the
+    // server and the process-global hook (quant repack), and start the
+    // NDJSON exporter before any frame is served.
+    let exporter = match &opts.telemetry {
+        Some(path) => {
+            let tel = Telemetry::new(ObsConfig::default());
+            tel.install_global();
+            let feed = PathBuf::from(path);
+            let exporter = Exporter::start(tel.clone(), &feed, opts.snapshot_ms)
+                .with_context(|| format!("creating health feed {path}"))?;
+            server.telemetry = Some(tel);
+            Some(exporter)
+        }
+        None => None,
+    };
     let report = if opts.pace_us > 0 {
         server.run_paced(&streams, &[opts.pace_us])?
     } else {
         server.run(&streams)?
     };
+    if let Some(exporter) = exporter {
+        let path = exporter.path().display().to_string();
+        let stats = exporter.finish().context("finishing the health feed")?;
+        Telemetry::uninstall_global();
+        eprintln!(
+            "telemetry: {} snapshots ({} dropped), {} lines / {} bytes -> {}",
+            stats.snapshots, stats.drops, stats.lines, stats.bytes, path
+        );
+    }
     println!("{}", report.metrics.report());
     println!(
         "throughput: {:.0} frames/s ({:.1}x realtime across streams)",
@@ -318,10 +388,12 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
         }
         _ => None,
     };
-    // machine-readable summary (README "Operating the server" documents
-    // the columns; `variant_frames` shows which rung traffic ran on;
+    // machine-readable summary (DESIGN.md appendix A documents every
+    // field; `variant_frames` shows which rung traffic ran on;
     // `dtype`/`snr_db`/`macs_int8` extend the PR 3 schema additively,
-    // `ns_per_mac` the PR 5 schema — efficiency, not just counts).
+    // `ns_per_mac` the PR 5 schema; `schema`/`arena_peak_*` are the
+    // PR 6 additions — the `schema` tag makes downstream parsers
+    // version-aware, like the health feed's `soi.obs.v1`).
     // ns_per_mac is wall time over executed MACs, so it only measures
     // compute efficiency on flood runs; paced runs (--pace-us) would
     // fold the intentional dispatch gaps in, so they report null.
@@ -331,6 +403,7 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
         Json::Null
     };
     let summary = Json::obj(vec![
+        ("schema", Json::Str("soi.serve.v2".into())),
         ("cmd", Json::Str("serve".into())),
         (
             "mode",
@@ -382,6 +455,23 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
                     .collect(),
             ),
         ),
+        (
+            "arena_peak_bytes",
+            Json::Num(report.arena_peak_bytes as f64),
+        ),
+        (
+            "arena_peak_by_variant",
+            Json::Obj({
+                // HashMap -> sorted pairs: the summary line is diffable
+                let mut peaks: Vec<(String, Json)> = report
+                    .arena_peak_by_variant
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect();
+                peaks.sort_by(|a, b| a.0.cmp(&b.0));
+                peaks
+            }),
+        ),
     ]);
     println!("{}", summary.to_string());
     Ok(())
@@ -432,6 +522,15 @@ usage: soi <command> [options]
                   accept :f32/:int8 suffixes (mixed-precision ladders:
                   --ladder stmc,stmc:int8,scc2:int8), and --dtype sets the
                   default suffix for entries without one
+  serve ... --telemetry[=PATH] [--snapshot-ms N]
+                  stream a live soi.obs.v1 NDJSON health feed while
+                  serving (default PATH soi-feed.ndjson, snapshot every
+                  200 ms): per-(rung x phase) latency histograms, FP
+                  pre/rest spans, migration + controller-decision events,
+                  arena_peak_bytes (DESIGN.md s12 + appendix A)
+  validate-feed <path>
+                  schema-check a health feed (every record, event payloads
+                  by kind, snapshot seq monotonicity) — what CI runs
   denoise <variant> [--frames N] [--dtype f32|int8]
 options: --artifacts DIR  --results DIR  --n-eval N  --seed S
 serve/denoise accept preset specs (stmc, scc<p>, scc<p>_<q>, sscc<p>,

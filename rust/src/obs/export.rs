@@ -1,0 +1,464 @@
+//! Snapshot assembly and the NDJSON health-feed exporter
+//! (DESIGN.md §12; record schema in DESIGN.md appendix A).
+//!
+//! [`take_snapshot`] merges every worker's registry (counters summed,
+//! gauges maxed, histograms merged — the merge is exact because all
+//! workers share one bucket space) and drains the event rings.
+//! [`Exporter`] runs two threads: a **sampler** that snapshots every
+//! `snapshot_ms` and serializes to NDJSON, and a **writer** that owns
+//! the file.  They are joined by a bounded channel; when the writer
+//! falls behind (slow disk), the sampler **drops the whole snapshot and
+//! counts it** (`feed_drops` in the next snapshot record) instead of
+//! blocking — telemetry must never apply backpressure to serving.
+//!
+//! Histograms and counters in the feed are cumulative since process
+//! start (each snapshot supersedes the last; a reader can join
+//! mid-stream).  Events are incremental: each appears in exactly one
+//! snapshot's drain.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::{Counter, Gauge, ObsHandle};
+use super::ring::{Event, EventKind};
+use super::Telemetry;
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+/// Schema tag stamped on every health-feed record.
+pub const FEED_SCHEMA: &str = "soi.obs.v1";
+
+/// One merged view of the whole registry plus the interval's drained
+/// events.
+#[derive(Debug)]
+pub struct Snapshot {
+    /// Milliseconds since the telemetry epoch.
+    pub t_ms: u64,
+    /// Counters summed across workers (index order = [`Counter::ALL`]).
+    pub counters: [u64; Counter::COUNT],
+    /// Gauges maxed across workers (index order = [`Gauge::ALL`]).
+    pub gauges: [u64; Gauge::COUNT],
+    /// Per-(rung, phase) exec wall-time histograms, merged across
+    /// workers, ascending key order.
+    pub exec_ns: Vec<(usize, usize, Histogram)>,
+    /// Dispatch-group widths, merged across workers.
+    pub batch_width: Histogram,
+    /// Events drained this interval: `(worker index, event)`; `None`
+    /// marks the shared (global-hook) handle.
+    pub events: Vec<(Option<usize>, Event)>,
+    /// Ring-overflow drops observed in this drain (all rings).
+    pub ring_dropped: u64,
+}
+
+fn fold(snap: &mut Snapshot, worker: Option<usize>, h: &ObsHandle) {
+    h.with(|w| {
+        for c in Counter::ALL {
+            snap.counters[Counter::ALL.iter().position(|x| *x == c).unwrap()] += w.counter(c);
+        }
+        for (i, g) in Gauge::ALL.iter().enumerate() {
+            snap.gauges[i] = snap.gauges[i].max(w.gauge(*g));
+        }
+        for (rung, phase, hist) in w.exec_hists() {
+            match snap
+                .exec_ns
+                .iter_mut()
+                .find(|(r, p, _)| *r == rung && *p == phase)
+            {
+                Some((_, _, m)) => m.merge(hist),
+                None => snap.exec_ns.push((rung, phase, hist.clone())),
+            }
+        }
+        snap.batch_width.merge(w.batch_width());
+        let mut buf = Vec::new();
+        snap.ring_dropped += w.drain_events(&mut buf);
+        snap.events.extend(buf.into_iter().map(|ev| (worker, ev)));
+    });
+}
+
+/// Merge every handle of `tel` into one [`Snapshot`], draining the
+/// event rings.  Runs on the sampler thread — this allocates freely;
+/// only *recording* is allocation-free.
+pub fn take_snapshot(tel: &Telemetry) -> Snapshot {
+    let mut snap = Snapshot {
+        t_ms: u64::try_from(tel.epoch().elapsed().as_millis()).unwrap_or(u64::MAX),
+        counters: [0; Counter::COUNT],
+        gauges: [0; Gauge::COUNT],
+        exec_ns: Vec::new(),
+        batch_width: Histogram::new(),
+        events: Vec::new(),
+        ring_dropped: 0,
+    };
+    for (i, h) in tel.worker_handles().iter().enumerate() {
+        fold(&mut snap, Some(i), h);
+    }
+    fold(&mut snap, None, &tel.shared());
+    snap.exec_ns.sort_by_key(|(r, p, _)| (*r, *p));
+    snap
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn hist_record(
+    seq: u64,
+    t_ms: u64,
+    name: &str,
+    rung: Option<usize>,
+    phase: Option<usize>,
+    h: &Histogram,
+) -> Json {
+    let buckets: Vec<Json> = h
+        .nonzero()
+        .map(|(i, c)| Json::Arr(vec![num(i as u64), num(c)]))
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Str(FEED_SCHEMA.into())),
+        ("type", Json::Str("hist".into())),
+        ("seq", num(seq)),
+        ("t_ms", num(t_ms)),
+        ("name", Json::Str(name.into())),
+        ("rung", rung.map_or(Json::Null, |r| num(r as u64))),
+        ("phase", phase.map_or(Json::Null, |p| num(p as u64))),
+        ("count", num(h.count())),
+        ("p50", num(h.p50())),
+        ("p95", num(h.p95())),
+        ("p99", num(h.p99())),
+        ("mean", Json::Num(h.mean())),
+        ("buckets", Json::Arr(buckets)),
+    ])
+}
+
+fn trigger_name(code: u64) -> &'static str {
+    match code {
+        0 => "queue",
+        1 => "latency",
+        _ => "calm",
+    }
+}
+
+fn event_record(seq: u64, worker: Option<usize>, ev: &Event) -> Json {
+    let mut kv: Vec<(&str, Json)> = vec![
+        ("schema", Json::Str(FEED_SCHEMA.into())),
+        ("type", Json::Str("event".into())),
+        ("seq", num(seq)),
+        ("worker", worker.map_or(Json::Null, |w| num(w as u64))),
+        ("t_us", num(ev.t_us)),
+        ("kind", Json::Str(ev.kind.name().into())),
+    ];
+    match ev.kind {
+        EventKind::Round => kv.extend([
+            ("served", num(ev.a)),
+            ("backlog", num(ev.b)),
+            ("streams", num(ev.c)),
+            ("ns", num(ev.d)),
+        ]),
+        EventKind::Exec => kv.extend([
+            ("rung", num(ev.a)),
+            ("phase", num(ev.b)),
+            ("width", num(ev.c)),
+            ("ns", num(ev.d)),
+        ]),
+        EventKind::FpPre => kv.extend([
+            ("stream", num(ev.a)),
+            ("phase", num(ev.b)),
+            ("inline", Json::Bool(ev.c != 0)),
+            ("ns", num(ev.d)),
+        ]),
+        EventKind::FpRest => kv.extend([
+            ("phase", num(ev.a)),
+            ("width", num(ev.b)),
+            ("ns", num(ev.d)),
+        ]),
+        EventKind::Migration => kv.extend([
+            ("stream", num(ev.a)),
+            ("from_rung", num(ev.b)),
+            ("to_rung", num(ev.c)),
+            ("replay_frames", num(ev.d)),
+            ("ns", num(ev.e)),
+        ]),
+        EventKind::QuantRepack => kv.extend([
+            ("panels", num(ev.a)),
+            ("bytes", num(ev.b)),
+            ("ns", num(ev.d)),
+        ]),
+        EventKind::CtlDecision => kv.extend([
+            ("from_rung", num(ev.a)),
+            ("to_rung", num(ev.b)),
+            ("trigger", Json::Str(trigger_name(ev.c).into())),
+            ("backlog", num(ev.d)),
+            ("p99_us", num(ev.e)),
+        ]),
+    }
+    Json::obj(kv)
+}
+
+impl Snapshot {
+    /// Serialize this snapshot as NDJSON into `out`: one `snapshot`
+    /// record, one `hist` record per non-empty histogram, one `event`
+    /// record per drained event — all stamped with `seq` and the
+    /// `soi.obs.v1` schema tag.  `feed_drops` is the exporter's
+    /// cumulative count of snapshots dropped on writer backpressure.
+    pub fn render_ndjson(&self, seq: u64, feed_drops: u64, out: &mut String) {
+        let counters = Json::Obj(
+            Counter::ALL
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (c.name().to_string(), num(self.counters[i])))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            Gauge::ALL
+                .iter()
+                .enumerate()
+                .map(|(i, g)| (g.name().to_string(), num(self.gauges[i])))
+                .collect(),
+        );
+        let head = Json::obj(vec![
+            ("schema", Json::Str(FEED_SCHEMA.into())),
+            ("type", Json::Str("snapshot".into())),
+            ("seq", num(seq)),
+            ("t_ms", num(self.t_ms)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("ring_dropped", num(self.ring_dropped)),
+            ("feed_drops", num(feed_drops)),
+        ]);
+        out.push_str(&head.to_string());
+        out.push('\n');
+        for (rung, phase, h) in &self.exec_ns {
+            if h.count() > 0 {
+                out.push_str(
+                    &hist_record(seq, self.t_ms, "exec_ns", Some(*rung), Some(*phase), h)
+                        .to_string(),
+                );
+                out.push('\n');
+            }
+        }
+        if self.batch_width.count() > 0 {
+            out.push_str(
+                &hist_record(seq, self.t_ms, "batch_width", None, None, &self.batch_width)
+                    .to_string(),
+            );
+            out.push('\n');
+        }
+        for (worker, ev) in &self.events {
+            out.push_str(&event_record(seq, *worker, ev).to_string());
+            out.push('\n');
+        }
+    }
+}
+
+/// Final accounting returned by [`Exporter::finish`].
+#[derive(Debug, Clone, Copy)]
+pub struct FeedStats {
+    /// Snapshots taken (including dropped ones).
+    pub snapshots: u64,
+    /// NDJSON lines written to the feed.
+    pub lines: u64,
+    /// Bytes written to the feed.
+    pub bytes: u64,
+    /// Snapshots dropped because the writer was behind.
+    pub drops: u64,
+}
+
+/// The periodic feed exporter: sampler thread + writer thread + the
+/// bounded channel between them.  Construct with [`Exporter::start`],
+/// stop with [`Exporter::finish`] (which emits one final snapshot so
+/// short runs still produce a feed).  Dropping without `finish` shuts
+/// both threads down but discards the stats.
+#[derive(Debug)]
+pub struct Exporter {
+    stop: Arc<AtomicBool>,
+    drops: Arc<AtomicU64>,
+    snapshots: Arc<AtomicU64>,
+    sampler: Option<JoinHandle<()>>,
+    writer: Option<JoinHandle<std::io::Result<(u64, u64)>>>,
+    path: PathBuf,
+}
+
+/// Bounded channel depth between sampler and writer (whole snapshot
+/// batches; beyond this the sampler drops).
+const FEED_QUEUE: usize = 8;
+
+impl Exporter {
+    /// Start exporting `tel` to the NDJSON file at `path` every
+    /// `snapshot_ms` milliseconds (clamped to ≥ 1).  The file is
+    /// created (truncated) eagerly so a bad path fails here, not on a
+    /// background thread.
+    pub fn start(tel: Arc<Telemetry>, path: &Path, snapshot_ms: u64) -> std::io::Result<Exporter> {
+        let file = std::fs::File::create(path)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let drops = Arc::new(AtomicU64::new(0));
+        let snapshots = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = sync_channel::<String>(FEED_QUEUE);
+
+        let writer = std::thread::spawn(move || -> std::io::Result<(u64, u64)> {
+            let mut w = std::io::BufWriter::new(file);
+            let (mut lines, mut bytes) = (0u64, 0u64);
+            for batch in rx {
+                w.write_all(batch.as_bytes())?;
+                // flush per batch: the feed is a *live* health surface
+                w.flush()?;
+                lines += batch.bytes().filter(|b| *b == b'\n').count() as u64;
+                bytes += batch.len() as u64;
+            }
+            Ok((lines, bytes))
+        });
+
+        let interval = Duration::from_millis(snapshot_ms.max(1));
+        let (stop2, drops2, snaps2) = (stop.clone(), drops.clone(), snapshots.clone());
+        let sampler = std::thread::spawn(move || {
+            let mut seq = 0u64;
+            loop {
+                // sleep in short steps so finish() returns promptly
+                let mut slept = Duration::ZERO;
+                while slept < interval && !stop2.load(Ordering::Relaxed) {
+                    let step = Duration::from_millis(2).min(interval - slept);
+                    std::thread::sleep(step);
+                    slept += step;
+                }
+                let stopping = stop2.load(Ordering::Relaxed);
+                let snap = take_snapshot(&tel);
+                let mut text = String::new();
+                snap.render_ndjson(seq, drops2.load(Ordering::Relaxed), &mut text);
+                seq += 1;
+                snaps2.fetch_add(1, Ordering::Relaxed);
+                if stopping {
+                    // final snapshot: block until the writer takes it
+                    let _ = tx.send(text);
+                    break;
+                }
+                if let Err(TrySendError::Full(_)) = tx.try_send(text) {
+                    drops2.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // tx drops here; the writer loop ends
+        });
+
+        Ok(Exporter {
+            stop,
+            drops,
+            snapshots,
+            sampler: Some(sampler),
+            writer: Some(writer),
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// The feed file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Stop both threads (emitting one final snapshot) and return the
+    /// feed accounting.
+    pub fn finish(mut self) -> std::io::Result<FeedStats> {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(s) = self.sampler.take() {
+            let _ = s.join();
+        }
+        let (lines, bytes) = match self.writer.take() {
+            Some(w) => w
+                .join()
+                .unwrap_or_else(|_| Err(std::io::Error::other("feed writer panicked")))?,
+            None => (0, 0),
+        };
+        Ok(FeedStats {
+            snapshots: self.snapshots.load(Ordering::Relaxed),
+            lines,
+            bytes,
+            drops: self.drops.load(Ordering::Relaxed),
+        })
+    }
+}
+
+impl Drop for Exporter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(s) = self.sampler.take() {
+            let _ = s.join();
+        }
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ObsConfig, Telemetry};
+    use crate::util::json;
+
+    #[test]
+    fn snapshot_merges_workers_and_renders_valid_ndjson() {
+        let tel = Telemetry::new(ObsConfig {
+            ring_capacity: 32,
+        });
+        let (a, b) = (tel.worker(0), tel.worker(1));
+        a.exec(0, 1, 4, 1000);
+        b.exec(0, 1, 2, 3000);
+        b.exec(1, 0, 1, 500);
+        a.with(|w| w.gauge_set(super::Gauge::QueueDepth, 3));
+        b.with(|w| w.gauge_set(super::Gauge::QueueDepth, 9));
+        b.migration(7, 0, 1, 16, 2000);
+        let snap = take_snapshot(&tel);
+        // counters summed
+        let frames_i = Counter::ALL
+            .iter()
+            .position(|c| *c == Counter::Frames)
+            .unwrap();
+        assert_eq!(snap.counters[frames_i], 7);
+        // gauges maxed
+        let qd_i = Gauge::ALL
+            .iter()
+            .position(|g| *g == Gauge::QueueDepth)
+            .unwrap();
+        assert_eq!(snap.gauges[qd_i], 9);
+        // (0,1) merged across workers
+        let h01 = snap
+            .exec_ns
+            .iter()
+            .find(|(r, p, _)| (*r, *p) == (0, 1))
+            .map(|(_, _, h)| h)
+            .unwrap();
+        assert_eq!(h01.count(), 2);
+        assert_eq!(snap.events.len(), 4);
+        let mut out = String::new();
+        snap.render_ndjson(0, 0, &mut out);
+        for line in out.lines() {
+            let v = json::parse(line).expect("every feed line parses");
+            assert_eq!(v.get("schema").and_then(|s| s.as_str()), Some(FEED_SCHEMA));
+        }
+        // draining is destructive: a second snapshot has no events but
+        // keeps the cumulative histograms
+        let again = take_snapshot(&tel);
+        assert!(again.events.is_empty());
+        assert_eq!(again.counters[frames_i], 7);
+    }
+
+    #[test]
+    fn exporter_writes_a_final_snapshot_even_for_instant_runs() {
+        let tel = Telemetry::new(ObsConfig::default());
+        tel.worker(0).exec(0, 0, 1, 777);
+        let path = std::env::temp_dir().join(format!(
+            "soi_obs_export_test_{}.ndjson",
+            std::process::id()
+        ));
+        let ex = Exporter::start(tel, &path, 10_000).unwrap();
+        let stats = ex.finish().unwrap();
+        assert!(stats.snapshots >= 1);
+        assert!(stats.lines >= 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() as u64 == stats.lines);
+        let first = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("type").and_then(|t| t.as_str()), Some("snapshot"));
+        std::fs::remove_file(&path).ok();
+    }
+}

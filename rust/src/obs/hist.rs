@@ -1,0 +1,148 @@
+//! Rolling latency window over the shared log-linear histogram
+//! (DESIGN.md §12).
+//!
+//! [`RollingHist`] replaces the controller's old sort-per-round sample
+//! ring with two epoch [`Histogram`]s rotated by sample count: samples
+//! land in the *active* epoch, quantiles read the merge of both, and
+//! when the active epoch fills it becomes the passive one and the stale
+//! passive epoch is cleared in place.  Quantiles therefore cover between
+//! `window/2 + 1` and `window` of the most recent samples — the same
+//! freshness contract as a true ring at a fraction of the cost (no
+//! clone, no sort, no allocation after construction), and in the same
+//! mergeable bucket space the health feed exports.
+
+use crate::util::stats::Histogram;
+
+/// A sample-count-rotated pair of epoch histograms approximating a
+/// sliding window of the most recent `window` samples.
+#[derive(Debug, Clone)]
+pub struct RollingHist {
+    epochs: [Histogram; 2],
+    active: usize,
+    epoch_cap: u64,
+    in_active: u64,
+}
+
+impl RollingHist {
+    /// A rolling window covering (window/2, window] recent samples.
+    /// `window` is clamped to at least 2 (one sample per epoch).
+    pub fn new(window: usize) -> RollingHist {
+        RollingHist {
+            epochs: [Histogram::new(), Histogram::new()],
+            active: 0,
+            epoch_cap: ((window as u64) / 2).max(1),
+            in_active: 0,
+        }
+    }
+
+    /// Record one sample, rotating epochs when the active one is full.
+    /// Allocation-free after construction.
+    pub fn record(&mut self, v: u64) {
+        if self.in_active >= self.epoch_cap {
+            self.active ^= 1;
+            self.epochs[self.active].clear();
+            self.in_active = 0;
+        }
+        self.epochs[self.active].record(v);
+        self.in_active += 1;
+    }
+
+    /// Samples currently covered (both epochs).
+    pub fn count(&self) -> u64 {
+        self.epochs[0].count() + self.epochs[1].count()
+    }
+
+    /// Value at quantile `q` over both epochs, without materializing the
+    /// merge (0 while empty).  Same bucket resolution as
+    /// [`Histogram::quantile`]: <1% relative error.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for idx in 0..Histogram::BUCKETS {
+            seen += self.epochs[0].count_at(idx) + self.epochs[1].count_at(idx);
+            if seen >= target {
+                return Histogram::bucket_bound(idx);
+            }
+        }
+        Histogram::bucket_bound(Histogram::BUCKETS - 1)
+    }
+
+    /// 99th-percentile sample value over the window.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Materialize the window as one mergeable [`Histogram`] (export
+    /// path only — this clones; the hot path never calls it).
+    pub fn merged(&self) -> Histogram {
+        let mut h = self.epochs[0].clone();
+        h.merge(&self.epochs[1]);
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_matches_single_histogram_before_rotation() {
+        let mut r = RollingHist::new(1000);
+        let mut h = Histogram::new();
+        for v in 1..=400u64 {
+            r.record(v * 1000);
+            h.record(v * 1000);
+        }
+        assert_eq!(r.count(), 400);
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(r.quantile(q), h.quantile(q));
+        }
+    }
+
+    #[test]
+    fn rotation_forgets_stale_samples() {
+        // window 8 => epochs of 4; after 12 cheap samples the expensive
+        // prefix has been fully rotated out.
+        let mut r = RollingHist::new(8);
+        for _ in 0..8 {
+            r.record(4_000_000);
+        }
+        assert!(r.p99() >= 3_900_000);
+        for _ in 0..12 {
+            r.record(500_000);
+        }
+        let p99 = r.p99();
+        assert!(
+            (450_000..=550_000).contains(&p99),
+            "stale spike still visible: p99={p99}"
+        );
+    }
+
+    #[test]
+    fn window_coverage_stays_in_contract() {
+        let mut r = RollingHist::new(8);
+        for i in 0..100 {
+            r.record(i);
+            assert!(r.count() <= 8, "more than `window` samples covered");
+            if i >= 8 {
+                assert!(r.count() > 4, "fewer than window/2+1 samples covered");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_merged() {
+        let r = RollingHist::new(4);
+        assert_eq!(r.quantile(0.99), 0);
+        assert_eq!(r.count(), 0);
+        let mut r = RollingHist::new(4);
+        r.record(100);
+        r.record(200);
+        let m = r.merged();
+        assert_eq!(m.count(), 2);
+    }
+}

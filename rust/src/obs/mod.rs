@@ -1,0 +1,186 @@
+//! Observability: a metrics registry, phase-attributed tracing spans,
+//! and a live NDJSON health feed (DESIGN.md §12).
+//!
+//! Three layers, cheapest first:
+//!
+//! * **Recording** ([`registry`], [`ring`]) — workers and sessions hold
+//!   an [`ObsHandle`] and record counters, gauges, per-(rung × phase)
+//!   latency histograms, and fixed-size trace events into preallocated
+//!   storage.  One uncontended mutex lock per logical record, zero heap
+//!   allocations in the steady state (`tests/hot_path_alloc.rs` proves
+//!   this with telemetry enabled).
+//! * **Aggregation** ([`hist`], [`export::take_snapshot`]) — the
+//!   shared log-linear [`crate::util::stats::Histogram`] is the one
+//!   mergeable latency type everywhere: the controller's rolling p99
+//!   window ([`RollingHist`]), the registry, and the feed all speak it,
+//!   so per-worker histograms merge losslessly into per-process ones
+//!   and (later) per-shard feeds merge into fleet views.
+//! * **Export** ([`export`], [`schema`]) — a sampler thread snapshots
+//!   the registry every `--snapshot-ms`, serializes to versioned NDJSON
+//!   (`soi.obs.v1`), and hands lines to a writer thread over a bounded
+//!   channel; a full channel **drops the snapshot and counts it**
+//!   (`feed_drops`) rather than ever stalling the samplers or workers.
+//!
+//! Deep layers that cannot thread a handle through (the quantized
+//! interpreter's plan repack) use the process-global hook
+//! ([`Telemetry::install_global`] / [`with_global`]): a `Weak` upgrade
+//! when telemetry is on, a single atomic-load no-op when off.
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod ring;
+pub mod schema;
+
+pub use export::{take_snapshot, Exporter, FeedStats, Snapshot, FEED_SCHEMA};
+pub use hist::RollingHist;
+pub use registry::{Counter, Gauge, ObsHandle, WorkerObs};
+pub use ring::{Event, EventKind, EventRing};
+
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::Instant;
+
+/// Telemetry tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Event slots per worker ring ([`EventRing`]); overflow within one
+    /// export interval drops events (counted, never silent).
+    pub ring_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            ring_capacity: 4096,
+        }
+    }
+}
+
+/// The per-process telemetry root: owns one [`ObsHandle`] per worker
+/// plus a shared handle for producers without a worker identity (the
+/// global hook).  Cheap to share (`Arc`); snapshotting merges across
+/// all handles.
+#[derive(Debug)]
+pub struct Telemetry {
+    epoch: Instant,
+    cfg: ObsConfig,
+    workers: Mutex<Vec<ObsHandle>>,
+    shared: ObsHandle,
+}
+
+impl Telemetry {
+    /// A fresh telemetry root; worker handles are created lazily by
+    /// [`Telemetry::worker`].
+    pub fn new(cfg: ObsConfig) -> Arc<Telemetry> {
+        let epoch = Instant::now();
+        Arc::new(Telemetry {
+            epoch,
+            shared: ObsHandle::new(epoch, cfg.ring_capacity),
+            cfg,
+            workers: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The instant event timestamps (`t_us`) count from.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// The recording handle for worker `i`, created on first request
+    /// (startup only — steady state never grows the table).
+    pub fn worker(&self, i: usize) -> ObsHandle {
+        let mut ws = self
+            .workers
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        while ws.len() <= i {
+            ws.push(ObsHandle::new(self.epoch, self.cfg.ring_capacity));
+        }
+        ws[i].clone()
+    }
+
+    /// The shared handle for producers without a worker identity
+    /// (global-hook emitters; exported with `worker: null`).
+    pub fn shared(&self) -> ObsHandle {
+        self.shared.clone()
+    }
+
+    /// Snapshot of all worker handles (exporter use).
+    pub fn worker_handles(&self) -> Vec<ObsHandle> {
+        self.workers
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Make this root reachable from [`with_global`] — the hook deep
+    /// layers (quant repack) emit through.  Held as a `Weak`, so
+    /// dropping the last `Arc` uninstalls automatically.
+    pub fn install_global(self: &Arc<Self>) {
+        *global_slot()
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner) = Arc::downgrade(self);
+    }
+
+    /// Clear the global hook (tests; normal teardown is automatic via
+    /// the `Weak`).
+    pub fn uninstall_global() {
+        *global_slot()
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner) = Weak::new();
+    }
+}
+
+fn global_slot() -> &'static Mutex<Weak<Telemetry>> {
+    static SLOT: OnceLock<Mutex<Weak<Telemetry>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(Weak::new()))
+}
+
+/// Run `f` with the installed [`Telemetry`], if any.  A no-op (one
+/// mutex lock on a rarely-touched slot plus a failed `Weak` upgrade)
+/// when telemetry is off — callers on rare paths (plan repack) can emit
+/// unconditionally.
+pub fn with_global(f: impl FnOnce(&Telemetry)) {
+    let tel = global_slot()
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .upgrade();
+    if let Some(t) = tel {
+        f(&t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_handles_are_stable_and_lazy() {
+        let tel = Telemetry::new(ObsConfig::default());
+        assert!(tel.worker_handles().is_empty());
+        let h2 = tel.worker(2);
+        assert_eq!(tel.worker_handles().len(), 3);
+        h2.count(Counter::Rounds, 1);
+        // same underlying store on re-request
+        tel.worker(2).with(|w| assert_eq!(w.counter(Counter::Rounds), 1));
+    }
+
+    #[test]
+    fn global_hook_upgrades_only_while_installed() {
+        // no hook: no-op
+        let mut ran = false;
+        with_global(|_| ran = true);
+        assert!(!ran);
+        let tel = Telemetry::new(ObsConfig::default());
+        tel.install_global();
+        with_global(|t| t.shared().count(Counter::QuantRepacks, 1));
+        tel.shared()
+            .with(|w| assert_eq!(w.counter(Counter::QuantRepacks), 1));
+        drop(tel);
+        // weak: dropping the root uninstalls
+        let mut ran = false;
+        with_global(|_| ran = true);
+        assert!(!ran);
+        Telemetry::uninstall_global();
+    }
+}

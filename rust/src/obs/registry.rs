@@ -1,0 +1,401 @@
+//! The metrics registry: counters, gauges, and per-(rung × phase)
+//! latency histograms, stored per worker (DESIGN.md §12).
+//!
+//! All storage is preallocated or warmed during the first schedule
+//! period: counters and gauges are fixed arrays indexed by enum,
+//! per-(rung, phase) histograms live in a linear-scanned `Vec` whose
+//! entries are inserted on first sight of a key (warm-up) and only
+//! *looked up* afterwards, and events go to the fixed-capacity
+//! [`EventRing`].  One [`ObsHandle`] wraps each worker's store in a
+//! `Mutex`; producers take the lock once per logical record (a dispatch
+//! group, a round, a decision), so the steady-state cost is one
+//! uncontended lock + a few array writes — and **zero** heap
+//! allocations, as `tests/hot_path_alloc.rs` proves with the registry
+//! active.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::ring::{Event, EventKind, EventRing};
+use crate::util::stats::Histogram;
+
+/// Monotone event counters, summed across workers at snapshot time.
+/// `name()` is the NDJSON field key (DESIGN.md appendix A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Stream frames delivered.
+    Frames,
+    /// Phase-aligned dispatch groups executed (width ≥ 1).
+    Execs,
+    /// Serving rounds completed.
+    Rounds,
+    /// FP precompute passes (idle or inline).
+    FpPre,
+    /// FP rest passes.
+    FpRest,
+    /// Warm migrations completed.
+    Migrations,
+    /// Quantized-plan (re)packs.
+    QuantRepacks,
+    /// Controller degrade verdicts (toward cheaper rungs).
+    CtlDegrades,
+    /// Controller recover verdicts (toward quality).
+    CtlRecovers,
+}
+
+impl Counter {
+    /// Number of counters (sizes the per-worker array).
+    pub const COUNT: usize = 9;
+
+    /// Every counter, in array-index order.
+    pub const ALL: [Counter; Counter::COUNT] = [
+        Counter::Frames,
+        Counter::Execs,
+        Counter::Rounds,
+        Counter::FpPre,
+        Counter::FpRest,
+        Counter::Migrations,
+        Counter::QuantRepacks,
+        Counter::CtlDegrades,
+        Counter::CtlRecovers,
+    ];
+
+    /// Stable snake_case name used as the NDJSON object key.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Frames => "frames",
+            Counter::Execs => "execs",
+            Counter::Rounds => "rounds",
+            Counter::FpPre => "fp_pre",
+            Counter::FpRest => "fp_rest",
+            Counter::Migrations => "migrations",
+            Counter::QuantRepacks => "quant_repacks",
+            Counter::CtlDegrades => "ctl_degrades",
+            Counter::CtlRecovers => "ctl_recovers",
+        }
+    }
+
+    fn idx(self) -> usize {
+        Counter::ALL.iter().position(|c| *c == self).unwrap_or(0)
+    }
+}
+
+/// Last-value gauges, set per worker; snapshots export the **max**
+/// across workers (the hottest worker is the one a health check cares
+/// about).  `name()` is the NDJSON field key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Peak scratch-arena bytes on the worker's thread (monotone; from
+    /// [`crate::kernels::arena::thread_peak_bytes`]).
+    ArenaPeakBytes,
+    /// Backlog (received, undelivered frames) after the latest round.
+    QueueDepth,
+    /// The worker's current target ladder rung.
+    TargetRung,
+    /// Live streams on the worker.
+    StreamsLive,
+}
+
+impl Gauge {
+    /// Number of gauges (sizes the per-worker array).
+    pub const COUNT: usize = 4;
+
+    /// Every gauge, in array-index order.
+    pub const ALL: [Gauge; Gauge::COUNT] = [
+        Gauge::ArenaPeakBytes,
+        Gauge::QueueDepth,
+        Gauge::TargetRung,
+        Gauge::StreamsLive,
+    ];
+
+    /// Stable snake_case name used as the NDJSON object key.
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::ArenaPeakBytes => "arena_peak_bytes",
+            Gauge::QueueDepth => "queue_depth",
+            Gauge::TargetRung => "target_rung",
+            Gauge::StreamsLive => "streams_live",
+        }
+    }
+
+    fn idx(self) -> usize {
+        Gauge::ALL.iter().position(|g| *g == self).unwrap_or(0)
+    }
+}
+
+/// One worker's metric store: counter/gauge arrays, per-(rung, phase)
+/// exec-latency histograms, a dispatch-width histogram, and the event
+/// ring.  Always accessed through an [`ObsHandle`]'s mutex.
+#[derive(Debug)]
+pub struct WorkerObs {
+    epoch: Instant,
+    counters: [u64; Counter::COUNT],
+    gauges: [u64; Gauge::COUNT],
+    /// `(rung << 16 | phase, wall-ns histogram)` — linear scan; entries
+    /// are created on first sight of a key (one allocation per live
+    /// (rung, phase) pair, all during warm-up) and reused forever after.
+    exec_ns: Vec<(u32, Histogram)>,
+    /// Dispatch-group widths (streams per exec).
+    batch_width: Histogram,
+    ring: EventRing,
+}
+
+impl WorkerObs {
+    fn new(epoch: Instant, ring_capacity: usize) -> WorkerObs {
+        WorkerObs {
+            epoch,
+            counters: [0; Counter::COUNT],
+            gauges: [0; Gauge::COUNT],
+            exec_ns: Vec::new(),
+            batch_width: Histogram::new(),
+            ring: EventRing::new(ring_capacity),
+        }
+    }
+
+    /// Increment counter `c` by `n`.
+    pub fn count(&mut self, c: Counter, n: u64) {
+        self.counters[c.idx()] += n;
+    }
+
+    /// Set gauge `g` to `v` (last-value semantics).
+    pub fn gauge_set(&mut self, g: Gauge, v: u64) {
+        self.gauges[g.idx()] = v;
+    }
+
+    /// Raise gauge `g` to at least `v` (for monotone gauges like
+    /// [`Gauge::ArenaPeakBytes`]).
+    pub fn gauge_max(&mut self, g: Gauge, v: u64) {
+        let slot = &mut self.gauges[g.idx()];
+        *slot = (*slot).max(v);
+    }
+
+    /// Current value of counter `c`.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c.idx()]
+    }
+
+    /// Current value of gauge `g`.
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[g.idx()]
+    }
+
+    /// Append a raw event to the ring (timestamped by the caller via
+    /// [`Event::stamp`] or here when `t_us` is 0 — callers inside this
+    /// module always stamp).
+    pub fn push_event(&mut self, kind: EventKind, a: u64, b: u64, c: u64, d: u64, e: u64) {
+        self.ring.push(Event {
+            t_us: Event::stamp(self.epoch),
+            kind,
+            a,
+            b,
+            c,
+            d,
+            e,
+        });
+    }
+
+    /// Record one phase-aligned dispatch group: bumps the per-(rung,
+    /// phase) latency histogram, the width histogram, the frame/exec
+    /// counters, and appends an [`EventKind::Exec`] event — all under
+    /// the caller's single lock.
+    pub fn exec(&mut self, rung: usize, phase: usize, width: usize, ns: u64) {
+        let key = ((rung as u32) << 16) | (phase as u32 & 0xFFFF);
+        match self.exec_ns.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, h)) => h.record(ns),
+            None => {
+                // first sight of this (rung, phase): warm-up allocation
+                let mut h = Histogram::new();
+                h.record(ns);
+                self.exec_ns.push((key, h));
+            }
+        }
+        self.batch_width.record(width as u64);
+        self.count(Counter::Execs, 1);
+        self.count(Counter::Frames, width as u64);
+        self.push_event(
+            EventKind::Exec,
+            rung as u64,
+            phase as u64,
+            width as u64,
+            ns,
+            0,
+        );
+    }
+
+    /// Iterate the per-(rung, phase) exec histograms as
+    /// `(rung, phase, hist)`.
+    pub fn exec_hists(&self) -> impl Iterator<Item = (usize, usize, &Histogram)> + '_ {
+        self.exec_ns
+            .iter()
+            .map(|(k, h)| ((*k >> 16) as usize, (*k & 0xFFFF) as usize, h))
+    }
+
+    /// The dispatch-width histogram.
+    pub fn batch_width(&self) -> &Histogram {
+        &self.batch_width
+    }
+
+    /// Drain buffered events into `out`, returning the overflow-drop
+    /// count since the last drain (exporter only).
+    pub fn drain_events(&mut self, out: &mut Vec<Event>) -> u64 {
+        self.ring.drain_into(out)
+    }
+}
+
+/// Cloneable producer handle: one worker's [`WorkerObs`] behind a
+/// mutex.  Every recording method takes the lock exactly once; compound
+/// updates go through [`ObsHandle::with`].
+#[derive(Debug, Clone)]
+pub struct ObsHandle {
+    inner: Arc<Mutex<WorkerObs>>,
+}
+
+impl ObsHandle {
+    /// A fresh handle with its own store (normally created by
+    /// [`crate::obs::Telemetry::worker`]).
+    pub fn new(epoch: Instant, ring_capacity: usize) -> ObsHandle {
+        ObsHandle {
+            inner: Arc::new(Mutex::new(WorkerObs::new(epoch, ring_capacity))),
+        }
+    }
+
+    /// Run `f` with the locked store — one lock for a compound update
+    /// (e.g. a round's event + counters + gauges together).
+    pub fn with<R>(&self, f: impl FnOnce(&mut WorkerObs) -> R) -> R {
+        let mut g = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        f(&mut g)
+    }
+
+    /// Increment counter `c` by `n`.
+    pub fn count(&self, c: Counter, n: u64) {
+        self.with(|w| w.count(c, n));
+    }
+
+    /// Record one dispatch group (see [`WorkerObs::exec`]).
+    pub fn exec(&self, rung: usize, phase: usize, width: usize, ns: u64) {
+        self.with(|w| w.exec(rung, phase, width, ns));
+    }
+
+    /// Record an FP precompute pass (`inline`: on-arrival vs idle).
+    pub fn fp_pre(&self, stream: u64, phase: usize, inline: bool, ns: u64) {
+        self.with(|w| {
+            w.count(Counter::FpPre, 1);
+            w.push_event(
+                EventKind::FpPre,
+                stream,
+                phase as u64,
+                u64::from(inline),
+                ns,
+                0,
+            );
+        });
+    }
+
+    /// Record an FP rest pass over a `width`-stream group.
+    pub fn fp_rest(&self, phase: usize, width: usize, ns: u64) {
+        self.with(|w| {
+            w.count(Counter::FpRest, 1);
+            w.push_event(EventKind::FpRest, phase as u64, width as u64, 0, ns, 0);
+        });
+    }
+
+    /// Record a completed warm migration.
+    pub fn migration(&self, stream: u64, from: usize, to: usize, replay_frames: usize, ns: u64) {
+        self.with(|w| {
+            w.count(Counter::Migrations, 1);
+            w.push_event(
+                EventKind::Migration,
+                stream,
+                from as u64,
+                to as u64,
+                replay_frames as u64,
+                ns,
+            );
+        });
+    }
+
+    /// Record a quantized-plan (re)pack.
+    pub fn quant_repack(&self, panels: usize, bytes: usize, ns: u64) {
+        self.with(|w| {
+            w.count(Counter::QuantRepacks, 1);
+            w.push_event(
+                EventKind::QuantRepack,
+                panels as u64,
+                bytes as u64,
+                0,
+                ns,
+                0,
+            );
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_index_correctly() {
+        let h = ObsHandle::new(Instant::now(), 8);
+        for c in Counter::ALL {
+            h.count(c, 2);
+        }
+        h.with(|w| {
+            for c in Counter::ALL {
+                assert_eq!(w.counter(c), 2, "{}", c.name());
+            }
+            for g in Gauge::ALL {
+                w.gauge_set(g, 7);
+                w.gauge_max(g, 3); // lower: no effect
+                assert_eq!(w.gauge(g), 7, "{}", g.name());
+                w.gauge_max(g, 11);
+                assert_eq!(w.gauge(g), 11, "{}", g.name());
+            }
+        });
+    }
+
+    #[test]
+    fn exec_attributes_by_rung_and_phase() {
+        let h = ObsHandle::new(Instant::now(), 8);
+        h.exec(1, 3, 4, 1000);
+        h.exec(1, 3, 4, 2000);
+        h.exec(0, 3, 1, 500);
+        h.with(|w| {
+            let hists: Vec<(usize, usize, u64)> =
+                w.exec_hists().map(|(r, p, h)| (r, p, h.count())).collect();
+            assert!(hists.contains(&(1, 3, 2)));
+            assert!(hists.contains(&(0, 3, 1)));
+            assert_eq!(w.counter(Counter::Execs), 3);
+            assert_eq!(w.counter(Counter::Frames), 9);
+            assert_eq!(w.batch_width().count(), 3);
+            let mut evs = Vec::new();
+            w.drain_events(&mut evs);
+            assert_eq!(evs.len(), 3);
+            assert!(evs.iter().all(|e| e.kind == EventKind::Exec));
+        });
+    }
+
+    #[test]
+    fn span_helpers_count_and_emit() {
+        let h = ObsHandle::new(Instant::now(), 16);
+        h.fp_pre(5, 2, true, 100);
+        h.fp_rest(2, 3, 200);
+        h.migration(5, 0, 1, 12, 300);
+        h.quant_repack(7, 4096, 400);
+        h.with(|w| {
+            assert_eq!(w.counter(Counter::FpPre), 1);
+            assert_eq!(w.counter(Counter::FpRest), 1);
+            assert_eq!(w.counter(Counter::Migrations), 1);
+            assert_eq!(w.counter(Counter::QuantRepacks), 1);
+            let mut evs = Vec::new();
+            w.drain_events(&mut evs);
+            let kinds: Vec<&str> = evs.iter().map(|e| e.kind.name()).collect();
+            assert_eq!(kinds, vec!["fp_pre", "fp_rest", "migration", "quant_repack"]);
+            let m = &evs[2];
+            assert_eq!((m.a, m.b, m.c, m.d, m.e), (5, 0, 1, 12, 300));
+        });
+    }
+}

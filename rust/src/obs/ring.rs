@@ -1,0 +1,227 @@
+//! Fixed-capacity tracing-event ring buffers (DESIGN.md §12).
+//!
+//! Every span the serving stack records becomes one fixed-size
+//! [`Event`]: a timestamp, a kind tag, and five `u64` payload fields
+//! whose meaning is per-kind (documented on [`EventKind`] and decoded to
+//! named NDJSON fields by `obs::export`).  Events live in a per-worker
+//! [`EventRing`] whose slots are allocated **once** at construction —
+//! pushing, overflowing, and draining are all allocation-free on the
+//! producer side, which is what lets the zero-allocation steady state of
+//! `tests/hot_path_alloc.rs` hold with telemetry enabled.
+//!
+//! Overflow policy: when the ring is full the **incoming** event is
+//! dropped and counted ([`EventRing::dropped`]); buffered events are
+//! never overwritten.  Keeping the oldest events preserves causality
+//! from the start of each export interval — a saturated ring tells you
+//! *when* the feed went blind (the drop counter) instead of silently
+//! rewriting history.
+
+use std::time::Instant;
+
+/// What a recorded span describes.  The five payload fields `a..e` of
+/// the carrying [`Event`] are interpreted per the field list on each
+/// kind; unused fields are zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// One serving round: `a` = frames served, `b` = backlog after the
+    /// round, `c` = live streams, `d` = round wall time ns.
+    Round,
+    /// One phase-aligned dispatch group: `a` = rung, `b` = phase,
+    /// `c` = group width (streams), `d` = exec wall time ns.
+    Exec,
+    /// FP precompute pass: `a` = stream id, `b` = phase, `c` = 1 when
+    /// run inline on arrival (0 when run idle), `d` = ns.
+    FpPre,
+    /// FP rest pass: `a` = phase, `b` = group width, `d` = ns.
+    FpRest,
+    /// Warm migration: `a` = stream id, `b` = from rung, `c` = to rung,
+    /// `d` = history frames replayed, `e` = ns.
+    Migration,
+    /// Quantized plan (re)pack: `a` = panels packed, `b` = packed code
+    /// bytes, `d` = ns.
+    QuantRepack,
+    /// Controller verdict: `a` = from rung, `b` = to rung, `c` =
+    /// trigger (0 queue, 1 latency, 2 calm), `d` = backlog at decision,
+    /// `e` = rolling p99 µs at decision.
+    CtlDecision,
+}
+
+impl EventKind {
+    /// Stable snake_case name — the `kind` field of NDJSON event
+    /// records (DESIGN.md appendix A).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Round => "round",
+            EventKind::Exec => "exec",
+            EventKind::FpPre => "fp_pre",
+            EventKind::FpRest => "fp_rest",
+            EventKind::Migration => "migration",
+            EventKind::QuantRepack => "quant_repack",
+            EventKind::CtlDecision => "ctl_decision",
+        }
+    }
+}
+
+/// One recorded span: fixed-size, `Copy`, no heap — ring slots hold
+/// these by value.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Microseconds since the owning [`crate::obs::Telemetry`] epoch.
+    pub t_us: u64,
+    /// What the span describes (fixes the meaning of `a..e`).
+    pub kind: EventKind,
+    /// First payload field (per-kind meaning; see [`EventKind`]).
+    pub a: u64,
+    /// Second payload field.
+    pub b: u64,
+    /// Third payload field.
+    pub c: u64,
+    /// Fourth payload field.
+    pub d: u64,
+    /// Fifth payload field.
+    pub e: u64,
+}
+
+impl Event {
+    /// Zeroed slot filler (capacity preallocation).
+    fn empty() -> Event {
+        Event {
+            t_us: 0,
+            kind: EventKind::Round,
+            a: 0,
+            b: 0,
+            c: 0,
+            d: 0,
+            e: 0,
+        }
+    }
+
+    /// Microseconds elapsed since `epoch`, saturating into `u64`.
+    pub fn stamp(epoch: Instant) -> u64 {
+        u64::try_from(epoch.elapsed().as_micros()).unwrap_or(u64::MAX)
+    }
+}
+
+/// Bounded FIFO of [`Event`]s with slots allocated once at construction.
+///
+/// Producers push allocation-free; the exporter periodically drains.
+/// When full, incoming events are dropped and counted (never silently) —
+/// see the module docs for why drop-newest is the right policy here.
+#[derive(Debug)]
+pub struct EventRing {
+    slots: Box<[Event]>,
+    /// Index of the oldest buffered event.
+    head: usize,
+    len: usize,
+    dropped: u64,
+}
+
+impl EventRing {
+    /// A ring holding up to `capacity` events (clamped to at least 1).
+    pub fn new(capacity: usize) -> EventRing {
+        let cap = capacity.max(1);
+        EventRing {
+            slots: vec![Event::empty(); cap].into_boxed_slice(),
+            head: 0,
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Buffered event count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Slot count.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events dropped on overflow since the last [`EventRing::drain_into`].
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Append one event; on a full ring the event is dropped and
+    /// counted instead.  Never allocates.
+    pub fn push(&mut self, ev: Event) {
+        if self.len == self.slots.len() {
+            self.dropped += 1;
+            return;
+        }
+        let at = (self.head + self.len) % self.slots.len();
+        self.slots[at] = ev;
+        self.len += 1;
+    }
+
+    /// Move every buffered event into `out` (oldest first) and return
+    /// the overflow-drop count since the previous drain, resetting it.
+    /// Allocation happens only in `out` (the exporter's buffer), never
+    /// in the ring.
+    pub fn drain_into(&mut self, out: &mut Vec<Event>) -> u64 {
+        for i in 0..self.len {
+            out.push(self.slots[(self.head + i) % self.slots.len()]);
+        }
+        self.head = 0;
+        self.len = 0;
+        std::mem::take(&mut self.dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, a: u64) -> Event {
+        Event {
+            t_us: 1,
+            kind,
+            a,
+            b: 0,
+            c: 0,
+            d: 0,
+            e: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_drain() {
+        let mut r = EventRing::new(4);
+        for i in 0..3 {
+            r.push(ev(EventKind::Exec, i));
+        }
+        assert_eq!(r.len(), 3);
+        let mut out = Vec::new();
+        assert_eq!(r.drain_into(&mut out), 0);
+        assert_eq!(out.iter().map(|e| e.a).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn overflow_drops_newest_and_counts() {
+        let mut r = EventRing::new(2);
+        for i in 0..5 {
+            r.push(ev(EventKind::Round, i));
+        }
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 3);
+        let mut out = Vec::new();
+        assert_eq!(r.drain_into(&mut out), 3);
+        // the two *oldest* events survived
+        assert_eq!(out.iter().map(|e| e.a).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(r.dropped(), 0, "drain resets the drop counter");
+        // wrap-around after drain still works
+        for i in 10..12 {
+            r.push(ev(EventKind::Round, i));
+        }
+        out.clear();
+        r.drain_into(&mut out);
+        assert_eq!(out.iter().map(|e| e.a).collect::<Vec<_>>(), vec![10, 11]);
+    }
+}

@@ -1,0 +1,262 @@
+//! Health-feed schema validation (DESIGN.md appendix A).
+//!
+//! One validator shared by the CLI (`soi validate-feed`), the
+//! integration tests, and CI — so the documented schema is enforced by
+//! the same code everywhere and CI needs no external `jq`.  Validation
+//! is structural: required fields present with the right JSON types,
+//! event payloads matching their `kind`, per-type `seq` monotonicity.
+
+use crate::util::json::{parse, Json};
+
+use super::export::FEED_SCHEMA;
+use super::registry::{Counter, Gauge};
+
+/// What one valid feed line turned out to be.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineKind {
+    /// A `snapshot` record (counters + gauges).
+    Snapshot,
+    /// A `hist` record (one latency/width histogram).
+    Hist,
+    /// An `event` record (one drained trace event).
+    Event,
+}
+
+/// Totals from a validated feed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FeedSummary {
+    /// Total NDJSON lines.
+    pub lines: u64,
+    /// `snapshot` records.
+    pub snapshots: u64,
+    /// `hist` records.
+    pub hists: u64,
+    /// `event` records.
+    pub events: u64,
+}
+
+fn want_u64(v: &Json, key: &str) -> Result<u64, String> {
+    let n = v
+        .get(key)
+        .ok_or_else(|| format!("missing field '{key}'"))?
+        .as_f64()
+        .ok_or_else(|| format!("field '{key}' is not a number"))?;
+    if n < 0.0 {
+        return Err(format!("field '{key}' is negative"));
+    }
+    Ok(n as u64)
+}
+
+fn want_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    v.get(key)
+        .ok_or_else(|| format!("missing field '{key}'"))?
+        .as_str()
+        .ok_or_else(|| format!("field '{key}' is not a string"))
+}
+
+fn want_counters(v: &Json, key: &str, names: &[&str]) -> Result<(), String> {
+    let obj = v
+        .get(key)
+        .ok_or_else(|| format!("missing field '{key}'"))?;
+    for name in names {
+        if obj.get(name).and_then(|n| n.as_f64()).is_none() {
+            return Err(format!("'{key}' missing numeric field '{name}'"));
+        }
+    }
+    Ok(())
+}
+
+fn validate_event(v: &Json) -> Result<(), String> {
+    // worker may be null (the shared/global-hook handle)
+    let w = v.get("worker").ok_or("missing field 'worker'")?;
+    if !w.is_null() && w.as_f64().is_none() {
+        return Err("field 'worker' is neither null nor a number".into());
+    }
+    want_u64(v, "t_us")?;
+    let kind = want_str(v, "kind")?;
+    let fields: &[&str] = match kind {
+        "round" => &["served", "backlog", "streams", "ns"],
+        "exec" => &["rung", "phase", "width", "ns"],
+        "fp_pre" => &["stream", "phase", "ns"], // + bool 'inline'
+        "fp_rest" => &["phase", "width", "ns"],
+        "migration" => &["stream", "from_rung", "to_rung", "replay_frames", "ns"],
+        "quant_repack" => &["panels", "bytes", "ns"],
+        "ctl_decision" => &["from_rung", "to_rung", "backlog", "p99_us"], // + str 'trigger'
+        other => return Err(format!("unknown event kind '{other}'")),
+    };
+    for f in fields {
+        want_u64(v, f)?;
+    }
+    if kind == "fp_pre" && v.get("inline").and_then(|b| b.as_bool()).is_none() {
+        return Err("fp_pre event missing bool field 'inline'".into());
+    }
+    if kind == "ctl_decision" {
+        let t = want_str(v, "trigger")?;
+        if !matches!(t, "queue" | "latency" | "calm") {
+            return Err(format!("unknown ctl_decision trigger '{t}'"));
+        }
+    }
+    Ok(())
+}
+
+fn validate_hist(v: &Json) -> Result<(), String> {
+    want_str(v, "name")?;
+    // rung/phase are numbers or null (null for un-keyed hists)
+    for key in ["rung", "phase"] {
+        let f = v.get(key).ok_or_else(|| format!("missing field '{key}'"))?;
+        if !f.is_null() && f.as_f64().is_none() {
+            return Err(format!("field '{key}' is neither null nor a number"));
+        }
+    }
+    let count = want_u64(v, "count")?;
+    for key in ["p50", "p95", "p99", "mean"] {
+        if v.get(key).and_then(|n| n.as_f64()).is_none() {
+            return Err(format!("missing numeric field '{key}'"));
+        }
+    }
+    let buckets = v
+        .get("buckets")
+        .and_then(|b| b.as_arr())
+        .ok_or("missing array field 'buckets'")?;
+    let mut total = 0u64;
+    for b in buckets {
+        let pair = b.as_arr().ok_or("bucket is not a [index, count] pair")?;
+        if pair.len() != 2 || pair[0].as_f64().is_none() || pair[1].as_f64().is_none() {
+            return Err("bucket is not a numeric [index, count] pair".into());
+        }
+        total += pair[1].as_f64().unwrap_or(0.0) as u64;
+    }
+    if total != count {
+        return Err(format!(
+            "bucket counts sum to {total} but 'count' says {count}"
+        ));
+    }
+    Ok(())
+}
+
+/// Validate one feed line; returns its record type or a description of
+/// the first violation.
+pub fn validate_line(line: &str) -> Result<LineKind, String> {
+    let v = parse(line).map_err(|e| format!("not valid JSON: {e}"))?;
+    let schema = want_str(&v, "schema")?;
+    if schema != FEED_SCHEMA {
+        return Err(format!(
+            "schema '{schema}' is not the expected '{FEED_SCHEMA}'"
+        ));
+    }
+    want_u64(&v, "seq")?;
+    match want_str(&v, "type")? {
+        "snapshot" => {
+            want_u64(&v, "t_ms")?;
+            let counter_names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+            want_counters(&v, "counters", &counter_names)?;
+            let gauge_names: Vec<&str> = Gauge::ALL.iter().map(|g| g.name()).collect();
+            want_counters(&v, "gauges", &gauge_names)?;
+            want_u64(&v, "ring_dropped")?;
+            want_u64(&v, "feed_drops")?;
+            Ok(LineKind::Snapshot)
+        }
+        "hist" => {
+            want_u64(&v, "t_ms")?;
+            validate_hist(&v)?;
+            Ok(LineKind::Hist)
+        }
+        "event" => {
+            validate_event(&v)?;
+            Ok(LineKind::Event)
+        }
+        other => Err(format!("unknown record type '{other}'")),
+    }
+}
+
+/// Validate a whole feed: every line individually, at least one
+/// snapshot, and strictly increasing `seq` across snapshot records.
+/// Returns per-type totals; the error message names the offending line.
+pub fn validate_feed(text: &str) -> Result<FeedSummary, String> {
+    let mut summary = FeedSummary::default();
+    let mut last_snapshot_seq: Option<u64> = None;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let kind = validate_line(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        summary.lines += 1;
+        match kind {
+            LineKind::Snapshot => {
+                let v = parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+                let seq = want_u64(&v, "seq").map_err(|e| format!("line {}: {e}", i + 1))?;
+                if let Some(prev) = last_snapshot_seq {
+                    if seq <= prev {
+                        return Err(format!(
+                            "line {}: snapshot seq {seq} does not increase past {prev}",
+                            i + 1
+                        ));
+                    }
+                }
+                last_snapshot_seq = Some(seq);
+                summary.snapshots += 1;
+            }
+            LineKind::Hist => summary.hists += 1,
+            LineKind::Event => summary.events += 1,
+        }
+    }
+    if summary.snapshots == 0 {
+        return Err("feed contains no snapshot record".into());
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{take_snapshot, ObsConfig, Telemetry};
+
+    #[test]
+    fn real_renderer_output_validates() {
+        let tel = Telemetry::new(ObsConfig {
+            ring_capacity: 64,
+        });
+        let h = tel.worker(0);
+        h.exec(0, 1, 3, 1500);
+        h.fp_pre(1, 2, false, 900);
+        h.fp_rest(2, 3, 1100);
+        h.migration(1, 0, 1, 8, 5000);
+        h.quant_repack(4, 1 << 20, 80_000);
+        h.with(|w| {
+            w.push_event(crate::obs::EventKind::Round, 3, 0, 3, 20_000, 0);
+            w.push_event(crate::obs::EventKind::CtlDecision, 0, 1, 0, 12, 800);
+        });
+        let mut out = String::new();
+        take_snapshot(&tel).render_ndjson(0, 0, &mut out);
+        let mut out2 = String::new();
+        take_snapshot(&tel).render_ndjson(1, 0, &mut out2);
+        out.push_str(&out2);
+        let summary = validate_feed(&out).expect("rendered feed validates");
+        assert_eq!(summary.snapshots, 2);
+        assert!(summary.hists >= 2); // exec_ns + batch_width
+        assert_eq!(summary.events, 7);
+    }
+
+    #[test]
+    fn violations_are_caught() {
+        assert!(validate_line("not json").is_err());
+        assert!(validate_line("{\"schema\":\"bogus.v9\",\"seq\":0,\"type\":\"snapshot\"}")
+            .unwrap_err()
+            .contains("bogus.v9"));
+        assert!(validate_line(&format!(
+            "{{\"schema\":\"{FEED_SCHEMA}\",\"seq\":0,\"type\":\"event\",\"worker\":0,\"t_us\":1,\"kind\":\"exec\",\"rung\":0}}"
+        ))
+        .unwrap_err()
+        .contains("phase"));
+        // non-increasing snapshot seq
+        let tel = Telemetry::new(ObsConfig::default());
+        let mut a = String::new();
+        take_snapshot(&tel).render_ndjson(5, 0, &mut a);
+        let mut b = String::new();
+        take_snapshot(&tel).render_ndjson(5, 0, &mut b);
+        a.push_str(&b);
+        assert!(validate_feed(&a).unwrap_err().contains("seq"));
+        // empty feed has no snapshot
+        assert!(validate_feed("").unwrap_err().contains("no snapshot"));
+    }
+}

@@ -41,6 +41,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -420,6 +421,7 @@ impl QuantVariant {
                 return Ok(p.clone());
             }
         }
+        let t_build = Instant::now();
         let plan = |wt: &Tensor, bias: &Tensor, sx: &dyn Fn(usize) -> f32| -> Result<QPlan> {
             let qw = quantize_weights(wt)?;
             let (c_out, c_in, kk) = (wt.shape[0], wt.shape[1], wt.shape[2]);
@@ -479,6 +481,24 @@ impl QuantVariant {
             up,
             head,
         });
+        // A rebuild is rare (first use, or a weight re-upload such as a
+        // pruning sweep) but expensive — surface it in the health feed
+        // via the global hook (no-op when telemetry is not installed).
+        let panels = built.enc.len() + built.dec.len() + 2 * built.up.len() + 1;
+        let bytes = built
+            .enc
+            .iter()
+            .chain(built.dec.iter())
+            .map(|p| p.panel.bytes())
+            .sum::<usize>()
+            + built
+                .up
+                .values()
+                .map(|u| u.phases[0].bytes() + u.phases[1].bytes())
+                .sum::<usize>()
+            + built.head.panel.bytes();
+        let ns = t_build.elapsed().as_nanos() as u64;
+        crate::obs::with_global(|t| t.shared().quant_repack(panels, bytes, ns));
         *guard = Some(built.clone());
         Ok(built)
     }
@@ -1051,6 +1071,10 @@ impl VariantExec for QuantVariant {
 
     fn reset_executed_macs(&self) {
         self.macs.store(0, Ordering::Relaxed);
+    }
+
+    fn arena_id(&self) -> Option<u64> {
+        Some(self.arena_id)
     }
 }
 

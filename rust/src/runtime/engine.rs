@@ -346,4 +346,11 @@ impl CompiledVariant {
     pub fn reset_executed_macs(&self) {
         self.exec.reset_executed_macs()
     }
+
+    /// The variant's per-thread scratch-arena id, when the backend steps
+    /// out of one (native interpreters only).  Keys the serving layer's
+    /// per-variant `arena_peak_bytes` lookups.
+    pub fn arena_id(&self) -> Option<u64> {
+        self.exec.arena_id()
+    }
 }

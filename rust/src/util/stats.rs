@@ -63,10 +63,13 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Total number of buckets (`64` octaves × `SUB` sub-buckets).
+    pub const BUCKETS: usize = 64 * SUB;
+
     /// An empty histogram.
     pub fn new() -> Self {
         Histogram {
-            counts: vec![0; 64 * SUB],
+            counts: vec![0; Self::BUCKETS],
             total: 0,
         }
     }
@@ -92,6 +95,14 @@ impl Histogram {
         base + ((base as u128 * sub as u128) / SUB as u128) as u64
     }
 
+    /// Representative value of bucket `idx` (the bucket's lower bound;
+    /// the same value `quantile` reports when the quantile lands there).
+    /// Exposed so exported sparse buckets can be re-ingested losslessly
+    /// via [`Histogram::add_bucket`].
+    pub fn bucket_bound(idx: usize) -> u64 {
+        Self::bucket_value(idx.min(Self::BUCKETS - 1))
+    }
+
     /// Record one sample.
     pub fn record(&mut self, v: u64) {
         self.counts[Self::index(v)] += 1;
@@ -101,6 +112,38 @@ impl Histogram {
     /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Count in bucket `idx` (0 for out-of-range indices).
+    pub fn count_at(&self, idx: usize) -> u64 {
+        self.counts.get(idx).copied().unwrap_or(0)
+    }
+
+    /// Add `count` samples directly into bucket `idx` — the inverse of
+    /// [`Histogram::nonzero`], used to reconstruct a histogram from an
+    /// exported sparse bucket list.  Reconstruction is exact: bucket
+    /// indices round-trip, so quantiles and counts are identical.
+    pub fn add_bucket(&mut self, idx: usize, count: u64) {
+        self.counts[idx.min(Self::BUCKETS - 1)] += count;
+        self.total += count;
+    }
+
+    /// Iterate `(bucket_index, count)` over non-empty buckets, in
+    /// ascending value order.  Allocation-free; the sparse form is what
+    /// the NDJSON health feed serializes.
+    pub fn nonzero(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| (i, *c))
+    }
+
+    /// Forget all samples, keeping the allocation (epoch rotation in
+    /// `obs::RollingHist` reuses buffers this way).
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
     }
 
     /// Value at quantile q in [0, 1].
@@ -214,6 +257,29 @@ mod tests {
         h.record(u64::MAX);
         assert_eq!(h.count(), 2);
         assert!(h.quantile(0.0) <= 1);
+    }
+
+    #[test]
+    fn histogram_sparse_round_trip_is_exact() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 999, 1_000_000, u64::MAX] {
+            h.record(v);
+            h.record(v);
+        }
+        let mut r = Histogram::new();
+        for (idx, c) in h.nonzero() {
+            r.add_bucket(idx, c);
+        }
+        assert_eq!(r.count(), h.count());
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(r.quantile(q), h.quantile(q));
+        }
+        for i in 0..Histogram::BUCKETS {
+            assert_eq!(r.count_at(i), h.count_at(i));
+        }
+        r.clear();
+        assert_eq!(r.count(), 0);
+        assert_eq!(r.quantile(0.99), 0);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use soi::coordinator::{AdaptivePolicy, LoadController, Server, StreamSession};
+use soi::coordinator::{AdaptivePolicy, Decision, LoadController, Server, StreamSession, Trigger};
 use soi::runtime::{synth, warmup_frames, CompiledVariant, ModelConfig, Runtime, VariantLadder};
 use soi::util::rng::Rng;
 
@@ -169,22 +169,43 @@ fn controller_rides_a_load_spike_with_hysteresis() {
     let mut ctl = LoadController::new(policy);
     let max_rung = 2;
     let mut rung = 0usize;
-    let mut trace = Vec::new();
+    let mut trace: Vec<Decision> = Vec::new();
     // calm → spike (flooded queue) → calm again
     let mut depths = vec![0usize; 10];
     depths.extend(vec![50; 20]);
     depths.extend(vec![0; 40]);
     for depth in depths {
         ctl.record_latency_ns(100_000); // 100 µs, well under target
-        if let Some(r) = ctl.observe_round(depth, rung, max_rung) {
-            trace.push((rung, r));
-            rung = r;
+        if let Some(d) = ctl.observe_round(depth, rung, max_rung) {
+            assert_eq!(d.from, rung, "decision evidence names the source rung");
+            rung = d.to;
+            trace.push(d);
         }
     }
     // degraded stepwise to the bottom during the spike, recovered
     // stepwise to rung 0 after it
-    assert_eq!(trace, vec![(0, 1), (1, 2), (2, 1), (1, 0)]);
+    let steps: Vec<(usize, usize)> = trace.iter().map(|d| (d.from, d.to)).collect();
+    assert_eq!(steps, vec![(0, 1), (1, 2), (2, 1), (1, 0)]);
     assert_eq!(rung, 0, "recovered to the quality anchor");
+    // the decision trace carries its evidence: both downgrades were
+    // queue-triggered (depth 50 with the p99 at ~100 µs, far under the
+    // 1 ms target), both recoveries fired on calm
+    for d in &trace[..2] {
+        assert!(d.is_degrade());
+        assert_eq!(d.trigger, Trigger::Queue, "{d:?}");
+        assert_eq!(d.backlog, 50, "{d:?}");
+    }
+    for d in &trace[2..] {
+        assert!(!d.is_degrade());
+        assert_eq!(d.trigger, Trigger::Calm, "{d:?}");
+        assert_eq!(d.backlog, 0, "{d:?}");
+    }
+    for d in &trace {
+        assert!(
+            d.p99_us > 0 && d.p99_us < 1_000,
+            "p99 evidence at decision time: {d:?}"
+        );
+    }
 }
 
 #[test]

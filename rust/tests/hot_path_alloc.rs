@@ -7,6 +7,12 @@
 //! `_into` entry points must perform **zero** heap allocations, for
 //! every variant family at both execution precisions.
 //!
+//! A second leg re-proves the guarantee with **telemetry enabled**
+//! (DESIGN.md §12): exec spans, FP pre/rest spans, counters, gauges and
+//! round events recorded through a real `ObsHandle` — with a ring tiny
+//! enough that the overflow (drop-newest) path runs inside the measured
+//! window.
+//!
 //! Everything lives in ONE `#[test]` on purpose: the counter is global,
 //! and the standard harness runs separate tests on separate threads —
 //! parallel tests would pollute each other's windows.
@@ -100,6 +106,82 @@ fn drive(
     }
 }
 
+/// Like [`drive`], but recording telemetry the way the serving worker
+/// does (DESIGN.md §12): an exec span per dispatch, FP pre/rest spans
+/// for split variants, and one compound round record (counter + gauges
+/// + a round event) per frame.
+#[allow(clippy::too_many_arguments)]
+fn drive_obs(
+    exec: &dyn VariantExec,
+    dw: &soi::runtime::DeviceWeights,
+    period: usize,
+    feat: usize,
+    t0: &mut usize,
+    st: &mut StateSet,
+    stb: &mut [StateSet; BATCH],
+    out: &mut Vec<f32>,
+    outs: &mut Vec<Vec<f32>>,
+    frame: &[f32],
+    rounds: usize,
+    obs: &soi::obs::ObsHandle,
+) {
+    use soi::obs::{Counter, EventKind, Gauge};
+    use std::time::Instant;
+    assert_eq!(frame.len(), feat);
+    let fp = exec.has_fp_split();
+    for _ in 0..rounds * period {
+        let t = *t0;
+        *t0 += 1;
+        let phase = t % period;
+        let t_round = Instant::now();
+        // single stream
+        if fp {
+            let t_pre = Instant::now();
+            exec.precompute(t, st, dw).unwrap();
+            obs.fp_pre(0, phase, false, t_pre.elapsed().as_nanos() as u64);
+            let t_rest = Instant::now();
+            exec.step_rest_into(t, frame, st, dw, out).unwrap();
+            obs.fp_rest(phase, 1, t_rest.elapsed().as_nanos() as u64);
+        } else {
+            let t_exec = Instant::now();
+            exec.step_into(t, frame, st, dw, out).unwrap();
+            obs.exec(0, phase, 1, t_exec.elapsed().as_nanos() as u64);
+        }
+        // phase-aligned batch of BATCH streams
+        let fr: [&[f32]; BATCH] = [frame, frame, frame];
+        let t_exec = Instant::now();
+        if fp {
+            for s in stb.iter_mut() {
+                exec.precompute(t, s, dw).unwrap();
+            }
+            let mut it = stb.iter_mut();
+            let mut refs: [&mut StateSet; BATCH] =
+                [it.next().unwrap(), it.next().unwrap(), it.next().unwrap()];
+            exec.step_rest_batch_into(t, &fr, &mut refs, dw, outs).unwrap();
+        } else {
+            let mut it = stb.iter_mut();
+            let mut refs: [&mut StateSet; BATCH] =
+                [it.next().unwrap(), it.next().unwrap(), it.next().unwrap()];
+            exec.step_batch_into(t, &fr, &mut refs, dw, outs).unwrap();
+        }
+        obs.exec(0, phase, BATCH, t_exec.elapsed().as_nanos() as u64);
+        obs.with(|w| {
+            w.count(Counter::Rounds, 1);
+            w.push_event(
+                EventKind::Round,
+                1 + BATCH as u64,
+                0,
+                1 + BATCH as u64,
+                t_round.elapsed().as_nanos() as u64,
+                0,
+            );
+            w.gauge_set(Gauge::QueueDepth, 0);
+            w.gauge_set(Gauge::StreamsLive, 1 + BATCH as u64);
+            w.gauge_max(Gauge::ArenaPeakBytes, soi::kernels::thread_peak_bytes() as u64);
+        });
+    }
+}
+
 #[test]
 fn zero_steady_state_allocations_for_all_families_and_dtypes() {
     // Family coverage: pure STMC, single/double S-CC, SS-CC (shift at
@@ -176,4 +258,86 @@ fn zero_steady_state_allocations_for_all_families_and_dtypes() {
             );
         }
     }
+
+    // --- telemetry-enabled leg (DESIGN.md §12) ---
+    // The same guarantee must hold with spans + registry active, for one
+    // FP f32 family and one int8 family.  ring_capacity is tiny on
+    // purpose: the measured window overflows it, so the drop-newest path
+    // is proven allocation-free too.
+    let tel = soi::obs::Telemetry::new(soi::obs::ObsConfig { ring_capacity: 8 });
+    tel.install_global(); // routes the int8 warm-up's quant repack here
+    for (base, dtype) in [("fp1_3", Dtype::F32), ("scc2", Dtype::Int8)] {
+        let cfg = synth::preset(base).unwrap();
+        let mut m = synth::manifest(&cfg, base, 32);
+        let w = synth::he_weights(&m, 0xA110C);
+        if dtype == Dtype::Int8 {
+            m.dtype = Dtype::Int8;
+            m.quant = Some(calibrate(&m, &w, 64, 7).unwrap());
+        }
+        let exec = rt.compile_variant(&m).unwrap();
+        let dw = rt.upload_weights(&w).unwrap();
+        let feat = m.config.feat;
+        let period = m.period;
+        let frame: Vec<f32> = (0..feat).map(|i| ((i * 7) as f32 * 0.07).sin() * 0.4).collect();
+        let mut st = exec.init_states();
+        let mut stb: [StateSet; BATCH] =
+            [exec.init_states(), exec.init_states(), exec.init_states()];
+        let mut out: Vec<f32> = Vec::new();
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        let mut t0 = 0usize;
+        let obs = tel.worker(0);
+
+        // Warm-up: arena + plan as before, plus the registry's lazy
+        // per-(rung, phase) histogram inserts (one per live key).
+        drive_obs(
+            exec.as_ref(),
+            &dw,
+            period,
+            feat,
+            &mut t0,
+            &mut st,
+            &mut stb,
+            &mut out,
+            &mut outs,
+            &frame,
+            2,
+            &obs,
+        );
+
+        let before = ALLOCS.load(Ordering::Relaxed);
+        drive_obs(
+            exec.as_ref(),
+            &dw,
+            period,
+            feat,
+            &mut t0,
+            &mut st,
+            &mut stb,
+            &mut out,
+            &mut outs,
+            &frame,
+            2,
+            &obs,
+        );
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "{base} ({}) allocated {} times in the telemetry-enabled steady state",
+            dtype.as_str(),
+            after - before
+        );
+    }
+    // telemetry really recorded: counters advanced, the quant repack
+    // reached the shared handle through the global hook, and the tiny
+    // ring exercised its counted-drop overflow path
+    tel.worker(0)
+        .with(|w| assert!(w.counter(soi::obs::Counter::Rounds) > 0));
+    tel.shared()
+        .with(|w| assert!(w.counter(soi::obs::Counter::QuantRepacks) >= 1));
+    let mut drained = Vec::new();
+    let dropped = tel.worker(0).with(|w| w.drain_events(&mut drained));
+    assert!(!drained.is_empty());
+    assert!(dropped > 0, "the 8-slot ring should have overflowed");
+    soi::obs::Telemetry::uninstall_global();
 }

@@ -1,0 +1,277 @@
+//! The NDJSON health feed, end to end (DESIGN.md §12, appendix A).
+//!
+//! Two layers of proof.  First, the feed round-trips: every rendered
+//! line parses back, the snapshot's counters are the exact sum of the
+//! per-worker registries, and a histogram reconstructed from the sparse
+//! `buckets` pairs reproduces the printed count, quantiles, and mean
+//! bucket-for-bucket — the merge/re-ingest identities that make
+//! per-worker feeds foldable into fleet views.  Second, a real adaptive
+//! server run with telemetry enabled produces a feed the shared
+//! validator (`soi validate-feed`, CI) accepts, carrying migration and
+//! controller-decision events, per-(rung × phase) exec histograms, and
+//! a live arena-peak gauge; the `ServeReport` carries the matching
+//! per-variant arena peaks.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use soi::coordinator::{AdaptivePolicy, Server};
+use soi::obs::{schema, take_snapshot, Counter, Exporter, ObsConfig, Snapshot, Telemetry};
+use soi::runtime::{synth, CompiledVariant, ModelConfig, Runtime, VariantLadder};
+use soi::util::json::{self, Json};
+use soi::util::rng::Rng;
+use soi::util::stats::Histogram;
+
+fn cfg(scc: Vec<usize>, shift_pos: Option<usize>) -> ModelConfig {
+    ModelConfig {
+        feat: 4,
+        channels: vec![5, 6, 7],
+        kernel: 3,
+        extrap: vec!["duplicate".into(); scc.len()],
+        scc,
+        shift_pos,
+        shift: 1,
+        interp: None,
+    }
+}
+
+fn variant(rt: &Arc<Runtime>, c: &ModelConfig, name: &str) -> Arc<CompiledVariant> {
+    let m = synth::manifest(c, name, 32);
+    let w = synth::he_weights(&m, 0xFEED);
+    Arc::new(CompiledVariant::with_weights(rt.clone(), m, w).expect("compile native variant"))
+}
+
+fn random_streams(feat: usize, n: usize, t: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..t)
+                .map(|_| (0..feat).map(|_| rng.normal() as f32 * 0.3).collect())
+                .collect()
+        })
+        .collect()
+}
+
+fn num(v: &Json, key: &str) -> u64 {
+    v.get(key)
+        .and_then(|n| n.as_f64())
+        .unwrap_or_else(|| panic!("missing numeric field '{key}'")) as u64
+}
+
+fn kind<'a>(v: &'a Json, key: &str) -> Option<&'a str> {
+    v.get(key).and_then(|s| s.as_str())
+}
+
+/// The merged `(rung, phase)` exec histogram out of a snapshot.
+fn find_exec(snap: &Snapshot, r: usize, p: usize) -> &Histogram {
+    snap.exec_ns
+        .iter()
+        .find_map(|(sr, sp, h)| ((*sr, *sp) == (r, p)).then_some(h))
+        .expect("snapshot has the (rung, phase) histogram")
+}
+
+/// The first event record of kind `k`.
+fn event<'a>(events: &[&'a Json], k: &str) -> &'a Json {
+    events
+        .iter()
+        .find(|v| kind(v, "kind") == Some(k))
+        .copied()
+        .unwrap_or_else(|| panic!("no '{k}' event in the feed"))
+}
+
+/// Rebuild a [`Histogram`] from a hist record's sparse `buckets` pairs.
+fn rebuild(v: &Json) -> Histogram {
+    let mut h = Histogram::new();
+    let buckets = v
+        .get("buckets")
+        .and_then(|b| b.as_arr())
+        .expect("hist record has a buckets array");
+    for pair in buckets {
+        let p = pair.as_arr().expect("[index, count] pair");
+        h.add_bucket(p[0].as_f64().unwrap() as usize, p[1].as_f64().unwrap() as u64);
+    }
+    h
+}
+
+#[test]
+fn feed_round_trips_counters_and_histograms_exactly() {
+    // ring sized to hold every event below: the ring drops *newest* on
+    // overflow, which would silently eat the migration pushed after the
+    // 100-exec burst
+    let tel = Telemetry::new(ObsConfig { ring_capacity: 256 });
+    let (w0, w1) = (tel.worker(0), tel.worker(1));
+    // known data spread across two workers and the shared handle,
+    // including a wide latency spread so quantiles are non-trivial
+    w0.exec(0, 1, 4, 1_000);
+    w0.exec(0, 1, 2, 250_000);
+    w1.exec(0, 1, 1, 9_000);
+    for i in 0..100u64 {
+        w1.exec(2, 0, 1, 1_000 + i * 400);
+    }
+    w0.fp_pre(3, 1, true, 500);
+    w1.migration(3, 0, 2, 12, 40_000);
+    tel.shared().quant_repack(9, 1 << 16, 123_456);
+    w0.count(Counter::Rounds, 5);
+    w1.count(Counter::Rounds, 7);
+    let per_worker_frames: u64 = [&w0, &w1, &tel.shared()]
+        .iter()
+        .map(|h| h.with(|w| w.counter(Counter::Frames)))
+        .sum();
+
+    let snap = take_snapshot(&tel);
+    let mut text = String::new();
+    snap.render_ndjson(0, 0, &mut text);
+    let lines: Vec<Json> = text
+        .lines()
+        .map(|l| json::parse(l).expect("feed line parses"))
+        .collect();
+
+    // --- snapshot record: counters are the exact cross-worker sums ---
+    let head = &lines[0];
+    assert_eq!(kind(head, "type"), Some("snapshot"));
+    let counters = head.get("counters").expect("counters object");
+    assert_eq!(num(counters, "rounds"), 12, "5 + 7 across workers");
+    assert_eq!(num(counters, "frames"), per_worker_frames);
+    assert_eq!(num(counters, "execs"), 103);
+    assert_eq!(num(counters, "migrations"), 1);
+    assert_eq!(num(counters, "quant_repacks"), 1, "shared handle folded in");
+
+    // --- hist records: sparse buckets rebuild the histogram exactly ---
+    let mut seen_hists = 0;
+    for v in lines.iter().filter(|v| kind(v, "type") == Some("hist")) {
+        let h = rebuild(v);
+        assert_eq!(h.count(), num(v, "count"));
+        assert_eq!(h.p50(), num(v, "p50"));
+        assert_eq!(h.p95(), num(v, "p95"));
+        assert_eq!(h.p99(), num(v, "p99"));
+        let mean = v.get("mean").and_then(|n| n.as_f64()).unwrap();
+        assert!((h.mean() - mean).abs() <= 1e-9 * mean.abs().max(1.0));
+        // ...and matches the merged source histogram bucket-for-bucket
+        let orig: &Histogram = match kind(v, "name") {
+            Some("exec_ns") => {
+                find_exec(&snap, num(v, "rung") as usize, num(v, "phase") as usize)
+            }
+            Some("batch_width") => &snap.batch_width,
+            other => panic!("unexpected hist name {other:?}"),
+        };
+        let a: Vec<(usize, u64)> = h.nonzero().collect();
+        let b: Vec<(usize, u64)> = orig.nonzero().collect();
+        assert_eq!(a, b, "reconstruction is bucket-exact");
+        seen_hists += 1;
+    }
+    // (0,1) merged across both workers, (2,0), plus batch_width
+    assert_eq!(seen_hists, 3);
+    let h01 = find_exec(&snap, 0, 1);
+    assert_eq!(h01.count(), 3, "worker 0's two execs merged with worker 1's one");
+
+    // --- event records: payloads survive with their kind fields ---
+    let events: Vec<&Json> = lines
+        .iter()
+        .filter(|v| kind(v, "type") == Some("event"))
+        .collect();
+    let mig = event(&events, "migration");
+    assert_eq!(
+        (num(mig, "stream"), num(mig, "from_rung"), num(mig, "to_rung")),
+        (3, 0, 2)
+    );
+    assert_eq!(num(mig, "replay_frames"), 12);
+    let qr = event(&events, "quant_repack");
+    assert!(qr.get("worker").unwrap().is_null(), "shared handle exports worker: null");
+    assert_eq!(num(qr, "bytes"), 1 << 16);
+    let pre = event(&events, "fp_pre");
+    assert_eq!(pre.get("inline").and_then(|b| b.as_bool()), Some(true));
+
+    // the whole rendered feed passes the shared validator
+    schema::validate_feed(&text).expect("round-trip feed validates");
+}
+
+#[test]
+fn adaptive_server_run_emits_a_validating_live_feed() {
+    let rt = Arc::new(Runtime::native());
+    let ladder = Arc::new(
+        VariantLadder::new(vec![
+            variant(&rt, &cfg(vec![], None), "stmc"),
+            variant(&rt, &cfg(vec![2], None), "scc2"),
+            variant(&rt, &cfg(vec![2], Some(2)), "sscc2"),
+        ])
+        .unwrap(),
+    );
+    let mut server = Server::with_ladder(ladder, 2);
+    // any traffic is overload: forces migrations + controller verdicts
+    server.adaptive = Some(AdaptivePolicy {
+        target_p99_us: 0,
+        queue_high: 1,
+        queue_low: 0,
+        patience_down: 1,
+        patience_up: 1_000_000,
+        cooldown: 0,
+        window: 8,
+        headroom: 0.5,
+    });
+    let tel = Telemetry::new(ObsConfig::default());
+    let path = std::env::temp_dir().join(format!(
+        "soi_obs_feed_e2e_{}.ndjson",
+        std::process::id()
+    ));
+    let exporter = Exporter::start(tel.clone(), &path, 5).unwrap();
+    server.telemetry = Some(tel);
+
+    let streams = random_streams(4, 6, 48, 0xD0);
+    let report = server.run(&streams).unwrap();
+    let stats = exporter.finish().unwrap();
+
+    // report-side arena accounting (satellite: arena_peak_bytes).  A
+    // rung only gets an entry on workers that actually stepped it, and
+    // a worker may leapfrog a middle rung — but the downgrade sweep
+    // guarantees traffic on at least the top and bottom of the ladder.
+    assert!(report.arena_peak_bytes > 0, "scratch high-water recorded");
+    assert!(
+        report.arena_peak_by_variant.len() >= 2,
+        "peaks for every executed rung: {:?}",
+        report.arena_peak_by_variant
+    );
+    assert!(
+        report.arena_peak_by_variant.values().all(|&b| b > 0),
+        "executed variants report non-zero peaks: {:?}",
+        report.arena_peak_by_variant
+    );
+
+    // the feed passes the same validator CI runs (no jq needed)
+    assert!(stats.snapshots >= 1);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let summary = schema::validate_feed(&text).expect("live feed validates");
+    assert!(summary.snapshots >= 1 && summary.hists >= 1 && summary.events >= 1);
+
+    // the records the dashboards care about are actually present
+    let mut kinds: BTreeSet<String> = BTreeSet::new();
+    let mut exec_rungs: BTreeSet<u64> = BTreeSet::new();
+    let mut last_peak_gauge = 0u64;
+    for line in text.lines() {
+        let v = json::parse(line).unwrap();
+        match kind(&v, "type") {
+            Some("event") => {
+                kinds.insert(kind(&v, "kind").unwrap().to_string());
+            }
+            Some("hist") if kind(&v, "name") == Some("exec_ns") => {
+                // per-(rung × phase) attribution: keys are non-null
+                exec_rungs.insert(num(&v, "rung"));
+                let _ = num(&v, "phase");
+            }
+            Some("snapshot") => {
+                let gauges = v.get("gauges").expect("gauges object");
+                last_peak_gauge = num(gauges, "arena_peak_bytes");
+            }
+            _ => {}
+        }
+    }
+    for k in ["round", "exec", "migration", "ctl_decision"] {
+        assert!(kinds.contains(k), "feed missing '{k}' events (saw {kinds:?})");
+    }
+    assert!(
+        exec_rungs.len() >= 2,
+        "exec latency attributed across rungs: {exec_rungs:?}"
+    );
+    assert!(last_peak_gauge > 0, "arena peak gauge is live in the feed");
+
+    std::fs::remove_file(&path).ok();
+}
