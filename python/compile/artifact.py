@@ -1,0 +1,365 @@
+"""Versioned ``soi.artifact.v1`` weight-artifact exporter (DESIGN.md §13).
+
+Stdlib-only and runnable standalone (no jax import, no package install),
+so CI can export an artifact without the training stack:
+
+    python python/compile/artifact.py --synth --name scc2 --scc 2 \
+        --out /tmp/soi-art/gen-000001
+    python python/compile/artifact.py --from-variant artifacts/scc2 \
+        --generation 3 --out artifacts-gen/gen-000003
+    python python/compile/artifact.py --verify /tmp/soi-art/gen-000001
+
+Each export emits ``<out>/``:
+
+    artifact.json — schema soi.artifact.v1: name, generation, model
+                    config, dtype (+ baked quant scales), train metrics,
+                    and a per-tensor table {name, dtype, shape,
+                    byte_len, sha256}
+    weights.bin   — the tensors concatenated raw little-endian f32 in
+                    table order
+
+``--from-variant`` re-packages a trained ``compile.aot`` bundle
+(manifest.json + weights.bin) as one integrity-checked generation;
+``--synth`` derives the canonical parameter inventory for an explicit
+config (mirroring the rust engine's ``synth::param_specs``) and fills it
+with deterministic pseudo-random weights — enough to exercise format,
+digests, and hot reload without any training stack.
+
+The rust loader (``rust/src/runtime/artifact.rs``) verifies the schema
+tag, the full parameter inventory for the declared config, the blob
+length, and every sha-256 digest before constructing anything.  CI
+cross-checks this writer against that reader: export here, ``soi
+inspect-artifact`` must pass; flip one blob byte, it must fail with the
+typed digest error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import shutil
+import struct
+import sys
+
+SCHEMA = "soi.artifact.v1"
+MANIFEST_FILE = "artifact.json"
+WEIGHTS_FILE = "weights.bin"
+
+# compile.aot's default model scale (kept in sync by the aot round-trip
+# in python/tests)
+FEAT = 16
+CHANNELS = (12, 16, 20, 24, 28, 32, 40)
+
+
+# ---------------------------------------------------------------------------
+# Config helpers — the same channel arithmetic as model.UNetConfig and
+# the rust engine's ModelConfig, rewritten over a plain dict so this
+# module stays import-free.
+# ---------------------------------------------------------------------------
+
+
+def depth(cfg: dict) -> int:
+    return len(cfg["channels"])
+
+
+def enc_in_ch(cfg: dict, l: int) -> int:
+    return cfg["feat"] if l == 1 else cfg["channels"][l - 2]
+
+
+def enc_out_ch(cfg: dict, l: int) -> int:
+    return cfg["channels"][l - 1]
+
+
+def dec_out_ch(cfg: dict, l: int) -> int:
+    return cfg["channels"][max(l - 2, 0)]
+
+
+def dec_in_ch(cfg: dict, l: int) -> int:
+    d = depth(cfg)
+    if l == d:
+        return cfg["channels"][d - 1]
+    return dec_out_ch(cfg, l + 1) + cfg["channels"][l - 1]
+
+
+def extrap_of(cfg: dict, p: int) -> str:
+    for pos, kind in zip(cfg["scc"], cfg["extrap"]):
+        if pos == p:
+            return kind
+    return "duplicate"
+
+
+def param_specs(cfg: dict) -> list:
+    """Canonical (name, shape) inventory — mirrors rust
+    ``synth::param_specs`` (the loader rejects any deviation)."""
+    k = cfg["kernel"]
+    specs = []
+
+    def conv(name, c_out, c_in, kk):
+        specs.append((f"{name}.w", (c_out, c_in, kk)))
+        specs.append((f"{name}.b", (c_out,)))
+
+    for l in range(1, depth(cfg) + 1):
+        conv(f"enc{l}", enc_out_ch(cfg, l), enc_in_ch(cfg, l), k)
+    for l in range(depth(cfg), 0, -1):
+        conv(f"dec{l}", dec_out_ch(cfg, l), dec_in_ch(cfg, l), k)
+    for p in cfg["scc"]:
+        if extrap_of(cfg, p) == "tconv":
+            conv(f"up{p}", dec_out_ch(cfg, p), dec_out_ch(cfg, p), 2)
+    conv("head", cfg["feat"], dec_out_ch(cfg, 1), 1)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Deterministic synthetic weights (no numpy): an LCG over u64, mapped to
+# small floats.  Values only need to be deterministic and finite — the
+# round-trip/integrity machinery is what's under test, not quality.
+# ---------------------------------------------------------------------------
+
+
+def _lcg_floats(n: int, seed: int):
+    state = (seed ^ 0x9E3779B97F4A7C15) & (2**64 - 1)
+    out = []
+    for _ in range(n):
+        state = (state * 6364136223846793005 + 1442695040888963407) % 2**64
+        # top 24 bits -> [-0.1, 0.1)
+        out.append(((state >> 40) / float(1 << 24) - 0.5) * 0.2)
+    return out
+
+
+def synth_blob(shape, seed: int) -> bytes:
+    n = 1
+    for d in shape:
+        n *= d
+    return struct.pack(f"<{n}f", *_lcg_floats(n, seed))
+
+
+# ---------------------------------------------------------------------------
+# Writer
+# ---------------------------------------------------------------------------
+
+
+def write_artifact(out_dir, name, generation, config, tensors,
+                   dtype="f32", quant=None, train_metrics=None):
+    """Write one generation directory atomically (stage + rename), the
+    same protocol as the rust saver: a watcher polling the parent never
+    sees a half-written generation.
+
+    ``tensors`` is [(name, shape, little-endian f32 bytes)] in canonical
+    parameter order.
+    """
+    table = []
+    for tname, shape, blob in tensors:
+        n = 1
+        for d in shape:
+            n *= d
+        if len(blob) != 4 * n:
+            raise ValueError(f"tensor {tname}: {len(blob)} bytes for shape {shape}")
+        table.append({
+            "name": tname,
+            "dtype": "f32",
+            "shape": list(shape),
+            "byte_len": len(blob),
+            "sha256": hashlib.sha256(blob).hexdigest(),
+        })
+    manifest = {
+        "schema": SCHEMA,
+        "name": name,
+        "generation": int(generation),
+        "config": {
+            "feat": config["feat"],
+            "channels": list(config["channels"]),
+            "kernel": config["kernel"],
+            "scc": list(config["scc"]),
+            "shift_pos": config.get("shift_pos"),
+            "shift": config.get("shift", 1),
+            "extrap": list(config.get("extrap", ["duplicate"] * len(config["scc"]))),
+            "interp": config.get("interp"),
+        },
+        "dtype": dtype,
+        "quant": quant,
+        "train_metrics": train_metrics or {},
+        "tensors": table,
+    }
+    out_dir = os.path.normpath(out_dir)
+    parent = os.path.dirname(out_dir) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = f"{out_dir}.tmp-{os.getpid()}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, WEIGHTS_FILE), "wb") as f:
+        for _, _, blob in tensors:
+            f.write(blob)
+    with open(os.path.join(tmp, MANIFEST_FILE), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    if os.path.exists(out_dir):
+        shutil.rmtree(out_dir)
+    os.rename(tmp, out_dir)
+    return manifest
+
+
+def export_synth(cfg: dict, name: str, generation: int, seed: int, out_dir):
+    specs = param_specs(cfg)
+    tensors = []
+    for i, (tname, shape) in enumerate(specs):
+        tensors.append((tname, shape, synth_blob(shape, seed + 1000003 * i)))
+    return write_artifact(out_dir, name, generation, cfg, tensors)
+
+
+def export_from_variant(variant_dir, generation: int, out_dir):
+    """Re-package a trained ``compile.aot`` bundle as one generation."""
+    with open(os.path.join(variant_dir, "manifest.json")) as f:
+        man = json.load(f)
+    with open(os.path.join(variant_dir, WEIGHTS_FILE), "rb") as f:
+        blob = f.read()
+    tensors, off = [], 0
+    for p in man["params"]:
+        n = 1
+        for d in p["shape"]:
+            n *= d
+        tensors.append((p["name"], tuple(p["shape"]), blob[off:off + 4 * n]))
+        off += 4 * n
+    if off != len(blob):
+        raise ValueError(
+            f"{variant_dir}: weights.bin holds {len(blob)} bytes, "
+            f"params declare {off}"
+        )
+    return write_artifact(
+        out_dir,
+        man["name"],
+        generation,
+        man["config"],
+        tensors,
+        dtype=man.get("dtype", "f32"),
+        quant=man.get("quant"),
+        train_metrics=man.get("train_metrics", {}),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Verifier — the same checks the rust loader runs, for python-side CI
+# smoke and self-tests (the rust reader remains the serving trust
+# boundary).
+# ---------------------------------------------------------------------------
+
+
+def verify(dir_path) -> dict:
+    """Raise ValueError on the first defect; return the manifest."""
+    with open(os.path.join(dir_path, MANIFEST_FILE)) as f:
+        man = json.load(f)
+    if man.get("schema") != SCHEMA:
+        raise ValueError(f"version skew: {man.get('schema')!r} != {SCHEMA!r}")
+    cfg = man["config"]
+    want = {name: tuple(shape) for name, shape in param_specs(cfg)}
+    table = man["tensors"]
+    seen = set()
+    declared = 0
+    for e in table:
+        tname = e["name"]
+        if tname in seen:
+            raise ValueError(f"tensor {tname} listed twice")
+        seen.add(tname)
+        if tname not in want:
+            raise ValueError(f"unexpected tensor {tname}")
+        if tuple(e["shape"]) != want[tname]:
+            raise ValueError(
+                f"tensor {tname}: shape {e['shape']} != {list(want[tname])}"
+            )
+        n = 1
+        for d in e["shape"]:
+            n *= d
+        if e["byte_len"] != 4 * n:
+            raise ValueError(f"tensor {tname}: byte_len {e['byte_len']} != {4 * n}")
+        declared += e["byte_len"]
+    missing = set(want) - seen
+    if missing:
+        raise ValueError(f"missing tensors {sorted(missing)}")
+    with open(os.path.join(dir_path, WEIGHTS_FILE), "rb") as f:
+        blob = f.read()
+    if len(blob) != declared:
+        raise ValueError(f"truncated: table declares {declared} bytes, blob holds {len(blob)}")
+    off = 0
+    for e in table:
+        piece = blob[off:off + e["byte_len"]]
+        off += e["byte_len"]
+        got = hashlib.sha256(piece).hexdigest()
+        if got != e["sha256"].lower():
+            raise ValueError(
+                f"tensor {e['name']}: digest mismatch (recorded {e['sha256']}, computed {got})"
+            )
+    return man
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _csv_ints(s: str):
+    return [int(x) for x in s.split(",") if x.strip()]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--synth", action="store_true",
+                      help="export deterministic synthetic weights for an explicit config")
+    mode.add_argument("--from-variant", metavar="DIR",
+                      help="re-package a trained compile.aot bundle (manifest.json + weights.bin)")
+    mode.add_argument("--verify", metavar="DIR",
+                      help="verify an existing artifact (digests, inventory, lengths)")
+    ap.add_argument("--out", help="generation directory to write (e.g. root/gen-000001)")
+    ap.add_argument("--generation", type=int, default=1)
+    ap.add_argument("--name", default=None, help="variant name (--synth; default from --scc)")
+    ap.add_argument("--feat", type=int, default=FEAT)
+    ap.add_argument("--channels", default=",".join(str(c) for c in CHANNELS))
+    ap.add_argument("--kernel", type=int, default=3)
+    ap.add_argument("--scc", default="", help="comma-separated S-CC positions")
+    ap.add_argument("--shift-pos", type=int, default=None)
+    ap.add_argument("--shift", type=int, default=1)
+    ap.add_argument("--extrap", default=None,
+                    help="comma-separated duplicate|tconv, one per scc position")
+    ap.add_argument("--seed", type=int, default=0xC0DE)
+    args = ap.parse_args(argv)
+
+    if args.verify:
+        try:
+            man = verify(args.verify)
+        except (OSError, KeyError, ValueError) as e:
+            print(f"[artifact] INVALID {args.verify}: {e}", file=sys.stderr)
+            return 1
+        print(f"[artifact] ok: '{man['name']}' generation {man['generation']}, "
+              f"{len(man['tensors'])} tensors, every digest verified")
+        return 0
+
+    if not args.out:
+        ap.error("--out DIR is required when exporting")
+    if args.from_variant:
+        man = export_from_variant(args.from_variant, args.generation, args.out)
+    else:
+        scc = _csv_ints(args.scc)
+        cfg = {
+            "feat": args.feat,
+            "channels": _csv_ints(args.channels),
+            "kernel": args.kernel,
+            "scc": scc,
+            "shift_pos": args.shift_pos,
+            "shift": args.shift,
+            "extrap": (args.extrap.split(",") if args.extrap
+                       else ["duplicate"] * len(scc)),
+            "interp": None,
+        }
+        name = args.name or ("scc" + "_".join(str(p) for p in scc) if scc else "stmc")
+        man = export_synth(cfg, name, args.generation, args.seed, args.out)
+    total = sum(e["byte_len"] for e in man["tensors"])
+    print(f"[artifact] exported '{man['name']}' generation {man['generation']} "
+          f"-> {args.out} ({len(man['tensors'])} tensors, {total} weight bytes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,8 @@
 //!   variant migration (DESIGN.md §9).
 //! * [`server`] — multi-stream worker pool with id-sharding, bounded
 //!   queues (backpressure), per-(variant, phase) batched dispatch,
-//!   optional load-adaptive ladder serving, and aggregated metrics.
+//!   optional load-adaptive ladder serving, zero-downtime weight-
+//!   generation hot reload (DESIGN.md §13), and aggregated metrics.
 //! * [`controller`] — the adaptive-serving load controller: per-worker
 //!   queue-depth + rolling-p99 hysteresis deciding ladder moves (§9).
 //! * [`metrics`] — latency histograms, executed-MAC, batch-width and
@@ -24,5 +25,5 @@ pub mod stream;
 pub use controller::{AdaptivePolicy, Decision, LoadController, Trigger};
 pub use metrics::StreamMetrics;
 pub use scheduler::{Scheduler, StepPlan};
-pub use server::{ServeReport, Server};
+pub use server::{Generation, GenerationWatcher, ReloadHandle, ServeReport, Server};
 pub use stream::StreamSession;

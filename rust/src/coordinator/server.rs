@@ -29,9 +29,11 @@
 //! itself), so workers share one `Arc<VariantLadder>` directly; all
 //! mutation on the rust side (states, metrics) stays worker-local.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -41,7 +43,9 @@ use super::controller::{AdaptivePolicy, LoadController};
 use super::metrics::StreamMetrics;
 use super::stream::StreamSession;
 use crate::obs::{Counter, EventKind, Gauge, ObsHandle, Telemetry};
-use crate::runtime::{CompiledVariant, DeviceWeights, VariantLadder};
+use crate::runtime::{
+    artifact, Artifact, CompiledVariant, DeviceWeights, Runtime, VariantLadder,
+};
 
 /// One frame of work for a stream.
 pub struct FrameJob {
@@ -75,6 +79,9 @@ pub struct ServeReport {
     /// Peak scratch-arena bytes of the hottest worker thread (the max
     /// across workers of each worker's summed per-variant peaks).
     pub arena_peak_bytes: u64,
+    /// Weight generation the run ended on (max across workers; 0 when
+    /// the server ran without hot reload — DESIGN.md §13).
+    pub generation: u64,
 }
 
 impl ServeReport {
@@ -85,6 +92,175 @@ impl ServeReport {
         } else {
             self.frames as f64 / self.wall_seconds
         }
+    }
+}
+
+/// One published weight generation: a compiled rung ladder over one
+/// verified artifact's weight set (DESIGN.md §13).
+pub struct Generation {
+    /// Monotonic generation number (higher supersedes lower).
+    pub seq: u64,
+    /// The generation's compiled rung ladder — all rungs share the
+    /// generation's weight tensors, so one upload serves every rung.
+    pub ladder: Arc<VariantLadder>,
+}
+
+struct ReloadInner {
+    /// Bumped on every publish; workers poll this single atomic per
+    /// round and only take the slot lock when it moved.
+    epoch: AtomicU64,
+    slot: Mutex<Arc<Generation>>,
+}
+
+/// Shared hot-reload slot (DESIGN.md §13): a publisher (the
+/// [`GenerationWatcher`], or a test) [`ReloadHandle::publish`]es a fully
+/// verified new [`Generation`]; every serving worker notices via one
+/// relaxed atomic read per round, uploads the new weights side by side
+/// with the old, and re-primes its streams through §9 history-replay
+/// migration at their next phase-0 boundary.  The old generation retires
+/// when its last `Arc` drops — no stream is ever dropped or glitched.
+#[derive(Clone)]
+pub struct ReloadHandle(Arc<ReloadInner>);
+
+impl ReloadHandle {
+    /// A handle seeded with the generation the server starts on.
+    pub fn new(initial: Generation) -> ReloadHandle {
+        ReloadHandle(Arc::new(ReloadInner {
+            epoch: AtomicU64::new(0),
+            slot: Mutex::new(Arc::new(initial)),
+        }))
+    }
+
+    /// Publish a new generation: it must already be fully verified
+    /// (workers trust it — the artifact loader is the integrity
+    /// boundary).  Takes effect at each worker's next round.
+    pub fn publish(&self, generation: Generation) {
+        let mut slot = self
+            .0
+            .slot
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        *slot = Arc::new(generation);
+        drop(slot);
+        self.0.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// The currently published generation.
+    pub fn current(&self) -> Arc<Generation> {
+        self.0
+            .slot
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Publish sequence number (bumps by one per [`ReloadHandle::publish`]).
+    pub fn epoch(&self) -> u64 {
+        self.0.epoch.load(Ordering::Acquire)
+    }
+}
+
+/// Background poller that turns a directory of versioned weight
+/// artifacts into live generation publishes (DESIGN.md §13): every
+/// `poll_ms` it lists the generation directories under `root`, and when
+/// one with a higher number than the currently published generation
+/// appears, loads it through the verifying [`Artifact::load`], compiles
+/// the server's rung specs over its weights
+/// ([`VariantLadder::over_weights`]) and publishes.  A candidate that
+/// fails verification is remembered and never retried (its directory is
+/// immutable once renamed into place), so the server **keeps serving the
+/// old generation** — a corrupt artifact can degrade nothing but disk
+/// space.
+pub struct GenerationWatcher {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl GenerationWatcher {
+    /// Start watching `root`.  `specs` are the ladder rung specs
+    /// (`preset[:dtype]` grammar) compiled over each new generation's
+    /// weights; `seed` feeds int8 calibration exactly as pinned serving
+    /// does.
+    pub fn spawn(
+        rt: Arc<Runtime>,
+        root: PathBuf,
+        specs: Vec<String>,
+        seed: u64,
+        reload: ReloadHandle,
+        poll_ms: u64,
+    ) -> GenerationWatcher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = thread::spawn(move || {
+            let mut rejected: HashSet<PathBuf> = HashSet::new();
+            while !stop2.load(Ordering::Relaxed) {
+                let current = reload.current().seq;
+                let candidate = artifact::list_generations(&root)
+                    .unwrap_or_default()
+                    .into_iter()
+                    .filter(|(g, d)| *g > current && !rejected.contains(d))
+                    .next_back();
+                if let Some((seq, dir)) = candidate {
+                    let spec_refs: Vec<&str> = specs.iter().map(|s| s.as_str()).collect();
+                    let built = Artifact::load(&dir).map_err(anyhow::Error::from).and_then(
+                        |art| {
+                            VariantLadder::over_weights(
+                                rt.clone(),
+                                &art.manifest.config,
+                                &art.weights,
+                                &spec_refs,
+                                seed,
+                            )
+                        },
+                    );
+                    match built {
+                        Ok(ladder) => reload.publish(Generation {
+                            seq,
+                            ladder: Arc::new(ladder),
+                        }),
+                        Err(e) => {
+                            // keep serving the old generation; remember the
+                            // reject so one bad artifact cannot hot-loop
+                            eprintln!(
+                                "soi: rejecting artifact generation {} at {}: {e:#}",
+                                seq,
+                                dir.display()
+                            );
+                            rejected.insert(dir);
+                        }
+                    }
+                }
+                // sleep in short steps so stop() returns promptly
+                let mut slept = 0u64;
+                while slept < poll_ms.max(1) && !stop2.load(Ordering::Relaxed) {
+                    let step = 2.min(poll_ms.max(1) - slept);
+                    thread::sleep(Duration::from_millis(step));
+                    slept += step;
+                }
+            }
+        });
+        GenerationWatcher {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop the poller and join its thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for GenerationWatcher {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -114,6 +290,11 @@ pub struct Server {
     /// steady state holds with telemetry enabled
     /// (`tests/hot_path_alloc.rs`).
     pub telemetry: Option<Arc<Telemetry>>,
+    /// Live weight-generation reload (DESIGN.md §13): when set (via
+    /// [`Server::enable_reload`]), each worker checks the handle once
+    /// per round and migrates its streams onto newly published
+    /// generations with §9 history-replay re-priming.
+    pub reload: Option<ReloadHandle>,
 }
 
 impl Server {
@@ -134,7 +315,22 @@ impl Server {
             batching: true,
             adaptive: None,
             telemetry: None,
+            reload: None,
         }
+    }
+
+    /// Enable hot generation reload: wraps the server's current ladder
+    /// as generation `seq` (the artifact generation it was built from,
+    /// or 1 for synthesized weights) and returns the shared handle a
+    /// publisher — a [`GenerationWatcher`] or a test — pushes new
+    /// generations through.
+    pub fn enable_reload(&mut self, seq: u64) -> ReloadHandle {
+        let handle = ReloadHandle::new(Generation {
+            seq,
+            ladder: self.ladder.clone(),
+        });
+        self.reload = Some(handle.clone());
+        handle
     }
 
     /// Serve a fixed set of streams to completion (throughput mode): every
@@ -193,6 +389,7 @@ impl Server {
                 max_pending: self.queue_depth,
                 adaptive: self.adaptive.clone(),
                 obs: self.telemetry.as_ref().map(|t| t.worker(w)),
+                reload: self.reload.clone(),
             };
             handles.push(thread::spawn(move || {
                 worker_loop(ladder, rx, out_tx, cfg);
@@ -229,6 +426,7 @@ impl Server {
         let mut frames = 0u64;
         let mut arena_peak_by_variant: HashMap<String, u64> = HashMap::new();
         let mut arena_peak_bytes = 0u64;
+        let mut generation = 0u64;
         for res in out_rx {
             match res? {
                 WorkerMsg::Stream {
@@ -245,12 +443,14 @@ impl Server {
                 WorkerMsg::Done {
                     arena_peaks,
                     thread_peak,
+                    generation: g,
                 } => {
                     for (name, bytes) in arena_peaks {
                         let slot = arena_peak_by_variant.entry(name).or_insert(0);
                         *slot = (*slot).max(bytes);
                     }
                     arena_peak_bytes = arena_peak_bytes.max(thread_peak);
+                    generation = generation.max(g);
                 }
             }
         }
@@ -265,6 +465,7 @@ impl Server {
             frames,
             arena_peak_by_variant,
             arena_peak_bytes,
+            generation,
         })
     }
 }
@@ -280,12 +481,14 @@ enum WorkerMsg {
         rung: usize,
     },
     /// Worker exit summary: per-variant scratch-arena high-water marks
-    /// observed on the worker's thread (variant name, peak bytes) and
-    /// their sum.  Arenas are thread-local, so only the worker itself
-    /// can read them — sent exactly once, after the last stream retires.
+    /// observed on the worker's thread (variant name, peak bytes), their
+    /// sum, and the weight generation the worker ended on (0 without hot
+    /// reload).  Arenas are thread-local, so only the worker itself can
+    /// read them — sent exactly once, after the last stream retires.
     Done {
         arena_peaks: Vec<(String, u64)>,
         thread_peak: u64,
+        generation: u64,
     },
 }
 
@@ -300,6 +503,9 @@ struct WorkerCfg {
     adaptive: Option<AdaptivePolicy>,
     /// The worker's telemetry handle (None runs unobserved).
     obs: Option<ObsHandle>,
+    /// Hot-reload slot shared with the publisher (None serves one fixed
+    /// generation forever).
+    reload: Option<ReloadHandle>,
 }
 
 /// Per-stream serving state owned by one worker.
@@ -308,6 +514,10 @@ struct Slot {
     /// Ladder rung the session currently serves on (kept in lockstep
     /// with the session's engine: updated exactly when a switch lands).
     rung: usize,
+    /// Weight generation the session currently serves on (0 without hot
+    /// reload); sessions lagging the worker's adopted generation request
+    /// a cross-generation switch each round until it lands.
+    gen: u64,
     outs: Vec<Vec<f32>>,
     /// Frames received but not yet served (at most one is served per
     /// round so batches never reorder a stream against itself).
@@ -344,8 +554,21 @@ fn worker_loop(
         max_pending,
         adaptive,
         obs,
+        reload,
     } = cfg;
-    let weights: Arc<DeviceWeights> = match ladder.device_weights() {
+    // With hot reload enabled, the handle's current generation is the
+    // starting ladder (the server seeds it with its own ladder, so this
+    // is a no-op unless a publish already happened).
+    let mut ladder = ladder;
+    let mut gen_seq = 0u64;
+    let mut seen_epoch = 0u64;
+    if let Some(rh) = &reload {
+        seen_epoch = rh.epoch();
+        let g = rh.current();
+        ladder = g.ladder.clone();
+        gen_seq = g.seq;
+    }
+    let mut weights: Arc<DeviceWeights> = match ladder.device_weights() {
         Ok(w) => Arc::new(w),
         Err(e) => {
             let _ = out_tx.send(Err(e));
@@ -358,9 +581,10 @@ fn worker_loop(
         None
     };
     // Adaptive serving retains the receptive-field history every rung
-    // could need for warm re-priming; without a controller no stream can
-    // ever migrate, so retain nothing.
-    let history_cap = if controller.is_some() {
+    // could need for warm re-priming; generation reload needs the same
+    // retention to re-prime onto new weights.  Without either, no stream
+    // can ever migrate, so retain nothing.
+    let history_cap = if controller.is_some() || reload.is_some() {
         ladder.max_warmup()
     } else {
         0
@@ -381,15 +605,21 @@ fn worker_loop(
     // still allocate small vectors — their lifetimes are tied to the
     // group's slot borrows — so only the *exec* layer below is strictly
     // allocation-free; see tests/hot_path_alloc.rs.)
-    let mut keyed: Vec<(usize, usize, usize)> = Vec::new();
+    let mut keyed: Vec<(u64, usize, usize, usize)> = Vec::new();
     let mut group: Vec<usize> = Vec::new();
     let mut group_frames: Vec<Arc<[f32]>> = Vec::new();
     let mut outs_buf: Vec<Vec<f32>> = Vec::new();
 
+    // `ladder`/`weights`/`gen_seq` are passed per call (not captured):
+    // a generation adoption swaps them mid-run, and new streams must
+    // start on whatever generation the worker currently serves.
     let enqueue = |slots: &mut Vec<Slot>,
                    index: &mut HashMap<u64, usize>,
                    pending_total: &mut usize,
-                   job: FrameJob| {
+                   job: FrameJob,
+                   ladder: &Arc<VariantLadder>,
+                   weights: &Arc<DeviceWeights>,
+                   gen_seq: u64| {
         let i = *index.entry(job.stream_id).or_insert_with(|| {
             let mut sess =
                 StreamSession::new(job.stream_id, ladder.level(0).clone(), weights.clone());
@@ -398,6 +628,7 @@ fn worker_loop(
             slots.push(Slot {
                 sess,
                 rung: 0,
+                gen: gen_seq,
                 outs: Vec::new(),
                 pending: VecDeque::new(),
                 closing: false,
@@ -410,12 +641,59 @@ fn worker_loop(
     };
 
     loop {
+        // 0. generation adoption (DESIGN.md §13): one relaxed epoch read
+        //    per round; when the publisher moved it, upload the new
+        //    generation's weights side by side with the old and switch
+        //    the worker's serving ladder.  Live sessions stay on their
+        //    old (still-uploaded) generation until their §9 re-priming
+        //    lands below — nothing glitches at adoption time.
+        if let Some(rh) = &reload {
+            let e = rh.epoch();
+            if e != seen_epoch {
+                seen_epoch = e;
+                let next = rh.current();
+                if next.seq != gen_seq {
+                    let t_reload = Instant::now();
+                    match next.ladder.device_weights() {
+                        Ok(w) => {
+                            let from = gen_seq;
+                            gen_seq = next.seq;
+                            ladder = next.ladder.clone();
+                            weights = Arc::new(w);
+                            // the new ladder's rung count may differ
+                            target_rung = target_rung.min(ladder.len() - 1);
+                            if let Some(obs) = &obs {
+                                obs.gen_reload(
+                                    from,
+                                    gen_seq,
+                                    slots.len(),
+                                    t_reload.elapsed().as_nanos() as u64,
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            let _ = out_tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+
         // 1. drain the queue without blocking — but keep at most
         //    `max_pending` undelivered frames locally, so the bounded
         //    channel keeps exerting backpressure on the dispatcher
         while open && pending_total < max_pending {
             match rx.try_recv() {
-                Ok(job) => enqueue(&mut slots, &mut index, &mut pending_total, job),
+                Ok(job) => enqueue(
+                    &mut slots,
+                    &mut index,
+                    &mut pending_total,
+                    job,
+                    &ladder,
+                    &weights,
+                    gen_seq,
+                ),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => open = false,
             }
@@ -441,19 +719,90 @@ fn worker_loop(
                     continue; // re-poll the queue after useful work
                 }
             }
-            match rx.recv() {
-                Ok(job) => enqueue(&mut slots, &mut index, &mut pending_total, job),
-                Err(_) => open = false,
+            if reload.is_some() {
+                // block in short steps so a publish lands promptly even
+                // on a momentarily idle worker
+                match rx.recv_timeout(Duration::from_millis(2)) {
+                    Ok(job) => enqueue(
+                        &mut slots,
+                        &mut index,
+                        &mut pending_total,
+                        job,
+                        &ladder,
+                        &weights,
+                        gen_seq,
+                    ),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+            } else {
+                match rx.recv() {
+                    Ok(job) => enqueue(
+                        &mut slots,
+                        &mut index,
+                        &mut pending_total,
+                        job,
+                        &ladder,
+                        &weights,
+                        gen_seq,
+                    ),
+                    Err(_) => open = false,
+                }
             }
             continue;
+        }
+
+        // 3a. generation catch-up (DESIGN.md §13): sessions still on an
+        //     older generation request a cross-generation switch — the
+        //     current ladder's rung plus the new weight upload — and
+        //     apply it at their next phase-0 boundary.  §9 re-priming
+        //     replays their retained history through the new generation,
+        //     so post-swap output is bit-identical to a session that
+        //     lived its whole life there.
+        if reload.is_some() {
+            for slot in slots.iter_mut() {
+                if slot.gen == gen_seq {
+                    continue;
+                }
+                let want = target_rung.min(ladder.len() - 1);
+                slot.sess
+                    .request_switch_with_weights(ladder.level(want).clone(), weights.clone());
+                let replay = slot.sess.history_len();
+                let t_mig = Instant::now();
+                match slot.sess.try_switch() {
+                    Ok(true) => {
+                        if let Some(obs) = &obs {
+                            obs.migration(
+                                slot.sess.id,
+                                slot.rung,
+                                want,
+                                replay,
+                                t_mig.elapsed().as_nanos() as u64,
+                            );
+                        }
+                        slot.rung = want;
+                        slot.gen = gen_seq;
+                    }
+                    Ok(false) => {}
+                    Err(e) => {
+                        let _ = out_tx.send(Err(e));
+                        return;
+                    }
+                }
+            }
         }
 
         // 3. adaptive control, apply side: sessions lagging behind the
         //    controller's target rung request the switch and apply it at
         //    their next phase-0 boundary (warm re-priming inside
-        //    `try_switch` — DESIGN.md §9)
+        //    `try_switch` — DESIGN.md §9).  Sessions still catching up
+        //    to a newer generation are owned by 3a above — their pending
+        //    switch carries the new weights and must not be clobbered.
         if controller.is_some() {
             for slot in slots.iter_mut() {
+                if slot.gen != gen_seq {
+                    continue;
+                }
                 if slot.rung != target_rung {
                     slot.sess.request_switch(ladder.level(target_rung).clone());
                     let replay = slot.sess.history_len();
@@ -492,27 +841,33 @@ fn worker_loop(
         let t_round = Instant::now();
         let mut served = 0u64;
         if batching {
-            // Group by sorting a reused (rung, phase, slot) key list —
-            // same (rung, phase) visit order and ascending slot order
+            // Group by sorting a reused (generation, rung, phase, slot)
+            // key list — same visit order and ascending slot order
             // within a group as the BTreeMap this replaces, without its
-            // per-round node churn.
+            // per-round node churn.  Generation leads the key so
+            // sessions mid-reload (still on the old ladder and weights)
+            // never batch with sessions already on the new one.
             keyed.clear();
             for (i, slot) in slots.iter().enumerate() {
                 if !slot.pending.is_empty() {
-                    keyed.push((slot.rung, slot.sess.next_plan().phase, i));
+                    keyed.push((slot.gen, slot.rung, slot.sess.next_plan().phase, i));
                 }
             }
             keyed.sort_unstable();
             let mut g0 = 0usize;
             while g0 < keyed.len() {
-                let (rung, phase, _) = keyed[g0];
+                let (gen, rung, phase, _) = keyed[g0];
                 let mut g1 = g0 + 1;
-                while g1 < keyed.len() && keyed[g1].0 == rung && keyed[g1].1 == phase {
+                while g1 < keyed.len()
+                    && keyed[g1].0 == gen
+                    && keyed[g1].1 == rung
+                    && keyed[g1].2 == phase
+                {
                     g1 += 1;
                 }
                 group.clear();
                 group_frames.clear();
-                for &(_, _, i) in &keyed[g0..g1] {
+                for &(_, _, _, i) in &keyed[g0..g1] {
                     group.push(i);
                     group_frames.push(slots[i].pending.pop_front().unwrap());
                     pending_total -= 1;
@@ -621,6 +976,7 @@ fn worker_loop(
                 w.gauge_set(Gauge::QueueDepth, pending_total as u64);
                 w.gauge_set(Gauge::TargetRung, target_rung as u64);
                 w.gauge_set(Gauge::StreamsLive, slots.len() as u64);
+                w.gauge_set(Gauge::Generation, gen_seq);
                 w.gauge_max(Gauge::ArenaPeakBytes, arena_peak);
             });
         }
@@ -671,5 +1027,6 @@ fn worker_loop(
     let _ = out_tx.send(Ok(WorkerMsg::Done {
         arena_peaks,
         thread_peak,
+        generation: gen_seq,
     }));
 }

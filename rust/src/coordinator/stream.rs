@@ -52,6 +52,10 @@ pub struct StreamSession {
     /// Variant requested by [`StreamSession::request_switch`], applied
     /// at the next phase-0 boundary of *its* schedule.
     pending_switch: Option<Arc<CompiledVariant>>,
+    /// Replacement weight upload accompanying a cross-generation switch
+    /// ([`StreamSession::request_switch_with_weights`], DESIGN.md §13);
+    /// `None` for ordinary same-weights rung migrations.
+    pending_weights: Option<Arc<DeviceWeights>>,
     /// Telemetry recorder (the owning worker's [`ObsHandle`]); when set,
     /// FP pre/rest passes are recorded as spans.  Recording writes into
     /// preallocated slots — the steady state stays allocation-free.
@@ -78,6 +82,7 @@ impl StreamSession {
             history: VecDeque::new(),
             history_cap: 0,
             pending_switch: None,
+            pending_weights: None,
             obs: None,
         }
     }
@@ -152,6 +157,25 @@ impl StreamSession {
         } else {
             self.pending_switch = Some(target);
         }
+        self.pending_weights = None;
+    }
+
+    /// Ask the session to move to `target` executing `weights` at its
+    /// next phase-0 boundary — the cross-**generation** variant of
+    /// [`StreamSession::request_switch`] (DESIGN.md §13).  Unlike a rung
+    /// switch this never self-cancels: a new generation's rung is a
+    /// different compiled variant (and weight upload) even when its name
+    /// matches the currently served one.  On migration the retained
+    /// history replays through `target` *with the new weights*, so the
+    /// re-primed states — and all subsequent output — are bit-identical
+    /// to a session that served the whole stream on the new generation.
+    pub fn request_switch_with_weights(
+        &mut self,
+        target: Arc<CompiledVariant>,
+        weights: Arc<DeviceWeights>,
+    ) {
+        self.pending_switch = Some(target);
+        self.pending_weights = Some(weights);
     }
 
     /// Whether a requested switch is still waiting for its boundary.
@@ -171,7 +195,8 @@ impl StreamSession {
         if self.scheduler.t() % target.manifest.period as u64 != 0 {
             return Ok(false);
         }
-        self.migrate(&target)?;
+        let weights = self.pending_weights.clone();
+        self.migrate(&target, weights.as_ref())?;
         Ok(true)
     }
 
@@ -205,10 +230,18 @@ impl StreamSession {
                 target.manifest.period
             );
         }
-        self.migrate(target)
+        self.migrate(target, None)
     }
 
-    fn migrate(&mut self, target: &Arc<CompiledVariant>) -> Result<()> {
+    /// `weights` selects the upload the replay executes against (and the
+    /// session keeps afterwards): `None` re-primes on the current
+    /// weights (rung migration), `Some` on a new generation's upload
+    /// (hot reload).
+    fn migrate(
+        &mut self,
+        target: &Arc<CompiledVariant>,
+        weights: Option<&Arc<DeviceWeights>>,
+    ) -> Result<()> {
         let t = self.scheduler.t();
         let h = self.history.len() as u64;
         let warm = warmup_frames(&target.manifest.config) as u64;
@@ -223,12 +256,13 @@ impl StreamSession {
             );
         }
         let period = target.manifest.period as u64;
+        let weights = weights.unwrap_or(&self.weights).clone();
         let mut states = target.init_states();
         let t0 = t - h;
         let mut replay_macs = 0.0;
         for (i, frame) in self.history.iter().enumerate() {
             let phase = ((t0 + i as u64) % period) as usize;
-            target.step(phase, frame, &mut states, &self.weights)?;
+            target.step(phase, frame, &mut states, &weights)?;
             replay_macs += macs_at_phase(&target.manifest, phase);
         }
         if t > 0 {
@@ -241,10 +275,12 @@ impl StreamSession {
             }
         }
         self.engine = target.clone();
+        self.weights = weights;
         self.states = states;
         self.scheduler = Scheduler::new_at(target.manifest.period, target.has_fp_split(), t);
         self.precomputed = false;
         self.pending_switch = None;
+        self.pending_weights = None;
         Ok(())
     }
 
@@ -444,6 +480,7 @@ impl StreamSession {
         self.precomputed = false;
         self.history.clear();
         self.pending_switch = None;
+        self.pending_weights = None;
     }
 
     /// Peak partial-state memory for this stream, bytes.

@@ -7,12 +7,17 @@
 //!   serve    <variant> [opts]    multi-stream serving benchmark
 //!   denoise  <variant> [opts]    stream one synthetic utterance, report SI-SNRi
 //!   validate-feed <path>         schema-check a telemetry health feed
+//!   export-artifact <spec>       save weights as a versioned soi.artifact.v1 dir
+//!   inspect-artifact <dir>       verify every artifact digest, print a summary
 //!
 //! Common options: --artifacts DIR (default ./artifacts), --results DIR
 //! (default ./results), --n-eval N (default 6), --seed S, --streams N,
 //! --frames N, --workers N, --dtype f32|int8 (serve/denoise; DESIGN.md §10).
 //! Observability (DESIGN.md §12): serve accepts --telemetry[=PATH] and
 //! --snapshot-ms N to stream a live NDJSON health feed while serving.
+//! Versioned weights (DESIGN.md §13): serve accepts --artifact-dir DIR
+//! [--watch-generations [--watch-ms N]] to serve rungs compiled over the
+//! newest verified artifact generation and hot-reload newer ones live.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -20,12 +25,13 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use soi::coordinator::{AdaptivePolicy, Server, StreamSession};
+use soi::coordinator::{AdaptivePolicy, GenerationWatcher, Server, StreamSession};
 use soi::dsp::{frames, metrics, siggen};
 use soi::experiments::{self, Ctx};
 use soi::obs::{self, Exporter, ObsConfig, Telemetry};
 use soi::runtime::{
-    list_variants, synth, CompiledVariant, Dtype, Manifest, Runtime, VariantLadder,
+    artifact, list_variants, synth, Artifact, CompiledVariant, Dtype, Manifest, Runtime,
+    VariantLadder,
 };
 use soi::util::cli::Args;
 use soi::util::json::Json;
@@ -51,6 +57,7 @@ fn run(argv: &[String]) -> Result<()> {
             "no-batching",
             "adaptive",
             "telemetry",
+            "watch-generations",
         ],
     )
     .map_err(anyhow::Error::msg)?;
@@ -144,8 +151,33 @@ fn run(argv: &[String]) -> Result<()> {
                     }
                 }),
                 snapshot_ms: args.u64_or("snapshot-ms", 200).map_err(anyhow::Error::msg)?,
+                artifact_dir: args.get("artifact-dir").map(PathBuf::from),
+                watch: args.flag("watch-generations"),
+                watch_ms: args.u64_or("watch-ms", 200).map_err(anyhow::Error::msg)?,
             };
+            if opts.watch && opts.artifact_dir.is_none() {
+                bail!("--watch-generations needs --artifact-dir DIR to watch");
+            }
             serve_bench(&artifacts, opts)
+        }
+        "export-artifact" => {
+            let spec = args
+                .positional()
+                .get(1)
+                .context("export-artifact needs a variant spec (e.g. scc2 or scc2:int8)")?;
+            let generation = args.u64_or("generation", 1).map_err(anyhow::Error::msg)?;
+            let seed = args.u64_or("seed", 0xC0DE).map_err(anyhow::Error::msg)?;
+            let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+                artifacts.join(format!("{}-gen{generation:06}", spec.replace(':', "-")))
+            });
+            export_artifact(&artifacts, spec, generation, seed, &out)
+        }
+        "inspect-artifact" => {
+            let dir = args
+                .positional()
+                .get(1)
+                .context("inspect-artifact needs an artifact directory")?;
+            inspect_artifact(std::path::Path::new(dir))
         }
         "validate-feed" => {
             let path = args
@@ -193,6 +225,67 @@ fn load_variant(
     Ok(cv)
 }
 
+/// Build `<spec>` (trained build when present, synthesized otherwise)
+/// and save it as a versioned `soi.artifact.v1` directory (DESIGN.md
+/// §13): `artifact.json` with per-tensor sha-256 + raw f32 `weights.bin`.
+fn export_artifact(
+    artifacts: &std::path::Path,
+    spec: &str,
+    generation: u64,
+    seed: u64,
+    out: &std::path::Path,
+) -> Result<()> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let (cv, synthesized) = synth::load_or_synth(rt, artifacts, spec, seed)?;
+    if synthesized {
+        eprintln!(
+            "note: artifacts/{spec} not built — exporting synthesized untrained \
+             weights (format/integrity meaningful, quality numbers are not)"
+        );
+    }
+    let art = Artifact::new(cv.manifest.clone(), cv.weights.clone(), generation)?;
+    art.save(out)?;
+    let bytes: usize = art.weights.tensors.iter().map(|t| t.bytes()).sum();
+    println!(
+        "exported '{}' generation {} -> {} ({} tensors, {} weight bytes, \
+         every tensor sha-256 digested)",
+        art.name(),
+        art.generation,
+        out.display(),
+        art.weights.tensors.len(),
+        bytes,
+    );
+    Ok(())
+}
+
+/// Verify an artifact end to end (every digest, the full manifest) and
+/// print a summary; any corruption exits nonzero with the typed error.
+fn inspect_artifact(dir: &std::path::Path) -> Result<()> {
+    let art = Artifact::load(dir)
+        .map_err(anyhow::Error::from)
+        .with_context(|| format!("inspecting {}", dir.display()))?;
+    let m = &art.manifest;
+    let bytes: usize = art.weights.tensors.iter().map(|t| t.bytes()).sum();
+    println!("artifact        {}", dir.display());
+    println!("schema          {}", soi::runtime::ARTIFACT_SCHEMA);
+    println!("name            {}", art.name());
+    println!("generation      {}", art.generation);
+    println!("config          feat={} channels={:?} k={}", m.config.feat,
+             m.config.channels, m.config.kernel);
+    println!("scc             {:?}  shift_pos={:?} shift={}", m.config.scc,
+             m.config.shift_pos, m.config.shift);
+    println!("dtype           {}", m.dtype.as_str());
+    println!("period          {}", m.period);
+    println!("params          {}", m.param_count);
+    println!(
+        "weights         {} tensors / {} bytes — all sha-256 digests verified",
+        art.weights.tensors.len(),
+        bytes
+    );
+    println!("train SI-SNRi   {:?}", m.si_snri());
+    Ok(())
+}
+
 /// Apply a `--dtype` default to a variant spec lacking an explicit
 /// `:<dtype>` suffix ("scc2" + int8 → "scc2:int8"; "scc2:f32" wins).
 fn spec_with_dtype(spec: &str, dtype: Dtype) -> String {
@@ -232,11 +325,42 @@ struct ServeOpts {
     telemetry: Option<String>,
     /// Feed snapshot interval, ms (`--snapshot-ms`).
     snapshot_ms: u64,
+    /// Versioned-artifact root (`--artifact-dir`, DESIGN.md §13): serve
+    /// rungs compiled over the newest verified generation's shipped
+    /// weights instead of per-spec load/synth; `None` serves as before.
+    artifact_dir: Option<PathBuf>,
+    /// Poll the artifact root for newer generations and hot-reload them
+    /// mid-run with zero dropped streams (`--watch-generations`).
+    watch: bool,
+    /// Generation poll interval, ms (`--watch-ms`).
+    watch_ms: u64,
+}
+
+/// Load the newest verified generation under `root` (serve boot,
+/// DESIGN.md §13).  Every candidate the verifying loader rejects is
+/// reported and skipped — boot succeeds on the newest loadable one.
+fn newest_generation(root: &std::path::Path) -> Result<(u64, Artifact)> {
+    let gens = artifact::list_generations(root)
+        .with_context(|| format!("listing artifact generations under {}", root.display()))?;
+    for (seq, dir) in gens.into_iter().rev() {
+        match Artifact::load(&dir) {
+            Ok(art) => return Ok((seq, art)),
+            Err(e) => eprintln!(
+                "soi: skipping artifact generation {seq} at {}: {e}",
+                dir.display()
+            ),
+        }
+    }
+    bail!("no loadable artifact generation under {}", root.display())
 }
 
 /// Multi-stream serving benchmark over synthetic utterances.
 fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
+    // Versioned-artifact serving (DESIGN.md §13): boot on the newest
+    // verified generation under --artifact-dir; every rung then compiles
+    // over that generation's shipped tensors.
+    let boot = opts.artifact_dir.as_deref().map(newest_generation).transpose()?;
     // (server, rung names, frame size, dtype label for the summary, and —
     // for pinned int8 serving — the base spec of the f32 reference twin)
     let (mut server, names, feat, dtype_label, int8_base) = if opts.adaptive {
@@ -246,12 +370,31 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
                  variant '{name}'); drop it or list it in --ladder"
             );
         }
-        let mut variants = Vec::with_capacity(opts.ladder.len());
-        for name in &opts.ladder {
-            let spec = spec_with_dtype(name, opts.dtype);
-            variants.push(Arc::new(load_variant(rt.clone(), artifacts, &spec)?));
-        }
-        let ladder = Arc::new(VariantLadder::new(variants)?);
+        let specs: Vec<String> = opts
+            .ladder
+            .iter()
+            .map(|n| spec_with_dtype(n, opts.dtype))
+            .collect();
+        let ladder = match &boot {
+            Some((seq, art)) => {
+                let refs: Vec<&str> = specs.iter().map(|s| s.as_str()).collect();
+                println!("booting on artifact generation {seq} ('{}')", art.name());
+                Arc::new(VariantLadder::over_weights(
+                    rt.clone(),
+                    &art.manifest.config,
+                    &art.weights,
+                    &refs,
+                    opts.seed,
+                )?)
+            }
+            None => {
+                let mut variants = Vec::with_capacity(specs.len());
+                for spec in &specs {
+                    variants.push(Arc::new(load_variant(rt.clone(), artifacts, spec)?));
+                }
+                Arc::new(VariantLadder::new(variants)?)
+            }
+        };
         let names: Vec<String> = ladder.names().iter().map(|s| s.to_string()).collect();
         let feat = ladder.level(0).manifest.config.feat;
         let dtypes = ladder.dtypes();
@@ -280,7 +423,21 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
             .as_deref()
             .context("serve needs a variant name (or --adaptive with --ladder)")?;
         let spec = spec_with_dtype(name, opts.dtype);
-        let cv = Arc::new(load_variant(rt.clone(), artifacts, &spec)?);
+        let cv = match &boot {
+            Some((seq, art)) => {
+                println!("booting on artifact generation {seq} ('{}')", art.name());
+                VariantLadder::over_weights(
+                    rt.clone(),
+                    &art.manifest.config,
+                    &art.weights,
+                    &[spec.as_str()],
+                    opts.seed,
+                )?
+                .level(0)
+                .clone()
+            }
+            None => Arc::new(load_variant(rt.clone(), artifacts, &spec)?),
+        };
         let feat = cv.manifest.config.feat;
         let dtype_label = cv.manifest.dtype.as_str().to_string();
         let int8_base = if cv.manifest.dtype == Dtype::Int8 {
@@ -320,6 +477,26 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     }
     server.idle_precompute = opts.idle_precompute;
     server.batching = opts.batching;
+    // Hot reload (DESIGN.md §13): publish the boot generation and, when
+    // watching, poll the artifact root for newer ones in the background —
+    // workers adopt each publish at a phase-0 boundary with no stream
+    // dropped, and a rejected candidate leaves the old generation live.
+    let watcher = match &boot {
+        Some((seq, _)) => {
+            let handle = server.enable_reload(*seq);
+            opts.watch.then(|| {
+                GenerationWatcher::spawn(
+                    rt.clone(),
+                    opts.artifact_dir.clone().expect("watch implies --artifact-dir"),
+                    names.clone(),
+                    opts.seed,
+                    handle,
+                    opts.watch_ms,
+                )
+            })
+        }
+        None => None,
+    };
     // Telemetry (DESIGN.md §12): install the recording root on the
     // server and the process-global hook (quant repack), and start the
     // NDJSON exporter before any frame is served.
@@ -340,6 +517,9 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     } else {
         server.run(&streams)?
     };
+    if let Some(w) = watcher {
+        w.stop();
+    }
     if let Some(exporter) = exporter {
         let path = exporter.path().display().to_string();
         let stats = exporter.finish().context("finishing the health feed")?;
@@ -374,7 +554,19 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     // against what the quantized server actually produced.
     let quant_snr = match &int8_base {
         Some(base) if report.outputs.contains_key(&0) => {
-            let f32_cv = Arc::new(load_variant(rt.clone(), artifacts, base)?);
+            let f32_cv = match &boot {
+                // artifact serving: the twin runs on the same shipped tensors
+                Some((_, art)) => VariantLadder::over_weights(
+                    rt.clone(),
+                    &art.manifest.config,
+                    &art.weights,
+                    &[base.as_str()],
+                    opts.seed,
+                )?
+                .level(0)
+                .clone(),
+                None => Arc::new(load_variant(rt.clone(), artifacts, base)?),
+            };
             let dw = Arc::new(f32_cv.device_weights()?);
             let mut sess = StreamSession::new(0, f32_cv, dw);
             let mut reference = Vec::with_capacity(feat * streams[0].len());
@@ -434,6 +626,9 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
         ("mean_batch", Json::Num(report.metrics.mean_batch())),
         ("migrations", Json::Num(report.metrics.migrations as f64)),
         ("migration_macs", Json::Num(report.metrics.macs_migration)),
+        // weight generation the run ended on (0 without --artifact-dir;
+        // PR 7 additive field, DESIGN.md §13)
+        ("generation", Json::Num(report.generation as f64)),
         ("dtype", Json::Str(dtype_label.clone())),
         ("macs_int8", Json::Num(report.metrics.macs_int8)),
         ("ns_per_mac", ns_per_mac),
@@ -528,9 +723,27 @@ usage: soi <command> [options]
                   200 ms): per-(rung x phase) latency histograms, FP
                   pre/rest spans, migration + controller-decision events,
                   arena_peak_bytes (DESIGN.md s12 + appendix A)
+  serve ... --artifact-dir DIR [--watch-generations] [--watch-ms N]
+                  serve rungs compiled over the newest soi.artifact.v1
+                  generation under DIR (pinned: the positional spec;
+                  adaptive: every --ladder entry).  With
+                  --watch-generations, newer generations hot-reload
+                  mid-run at phase-0 boundaries — zero dropped streams,
+                  and a corrupt candidate is rejected while the old
+                  generation keeps serving (DESIGN.md s13); the JSON
+                  summary reports the final `generation`
   validate-feed <path>
                   schema-check a health feed (every record, event payloads
                   by kind, snapshot seq monotonicity) — what CI runs
+  export-artifact <spec> [--out DIR] [--generation N] [--seed S]
+                  save <spec>'s weights as a versioned soi.artifact.v1
+                  directory: artifact.json (per-tensor sha-256 digests)
+                  + raw little-endian f32 weights.bin; default out
+                  artifacts/<spec>-gen<NNNNNN>
+  inspect-artifact <dir>
+                  load through the verifying reader (every digest
+                  checked) and print a summary; exits nonzero with a
+                  typed error on any corruption — what CI runs
   denoise <variant> [--frames N] [--dtype f32|int8]
 options: --artifacts DIR  --results DIR  --n-eval N  --seed S
 serve/denoise accept preset specs (stmc, scc<p>, scc<p>_<q>, sscc<p>,

@@ -194,6 +194,12 @@ fn event_record(seq: u64, worker: Option<usize>, ev: &Event) -> Json {
             ("backlog", num(ev.d)),
             ("p99_us", num(ev.e)),
         ]),
+        EventKind::GenReload => kv.extend([
+            ("from_gen", num(ev.a)),
+            ("to_gen", num(ev.b)),
+            ("streams", num(ev.c)),
+            ("ns", num(ev.d)),
+        ]),
     }
     Json::obj(kv)
 }

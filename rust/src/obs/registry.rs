@@ -41,11 +41,13 @@ pub enum Counter {
     CtlDegrades,
     /// Controller recover verdicts (toward quality).
     CtlRecovers,
+    /// Weight-generation hot reloads adopted by a worker (DESIGN.md §13).
+    GenReloads,
 }
 
 impl Counter {
     /// Number of counters (sizes the per-worker array).
-    pub const COUNT: usize = 9;
+    pub const COUNT: usize = 10;
 
     /// Every counter, in array-index order.
     pub const ALL: [Counter; Counter::COUNT] = [
@@ -58,6 +60,7 @@ impl Counter {
         Counter::QuantRepacks,
         Counter::CtlDegrades,
         Counter::CtlRecovers,
+        Counter::GenReloads,
     ];
 
     /// Stable snake_case name used as the NDJSON object key.
@@ -72,6 +75,7 @@ impl Counter {
             Counter::QuantRepacks => "quant_repacks",
             Counter::CtlDegrades => "ctl_degrades",
             Counter::CtlRecovers => "ctl_recovers",
+            Counter::GenReloads => "gen_reloads",
         }
     }
 
@@ -94,11 +98,14 @@ pub enum Gauge {
     TargetRung,
     /// Live streams on the worker.
     StreamsLive,
+    /// The weight generation the worker currently serves (0 when the
+    /// server runs without hot reload — DESIGN.md §13).
+    Generation,
 }
 
 impl Gauge {
     /// Number of gauges (sizes the per-worker array).
-    pub const COUNT: usize = 4;
+    pub const COUNT: usize = 5;
 
     /// Every gauge, in array-index order.
     pub const ALL: [Gauge; Gauge::COUNT] = [
@@ -106,6 +113,7 @@ impl Gauge {
         Gauge::QueueDepth,
         Gauge::TargetRung,
         Gauge::StreamsLive,
+        Gauge::Generation,
     ];
 
     /// Stable snake_case name used as the NDJSON object key.
@@ -115,6 +123,7 @@ impl Gauge {
             Gauge::QueueDepth => "queue_depth",
             Gauge::TargetRung => "target_rung",
             Gauge::StreamsLive => "streams_live",
+            Gauge::Generation => "generation",
         }
     }
 
@@ -317,6 +326,17 @@ impl ObsHandle {
         });
     }
 
+    /// Record a weight-generation hot reload adopted by this worker:
+    /// bumps the counter, updates the generation gauge, and emits a
+    /// [`EventKind::GenReload`] event — one lock (DESIGN.md §13).
+    pub fn gen_reload(&self, from_gen: u64, to_gen: u64, streams: usize, ns: u64) {
+        self.with(|w| {
+            w.count(Counter::GenReloads, 1);
+            w.gauge_set(Gauge::Generation, to_gen);
+            w.push_event(EventKind::GenReload, from_gen, to_gen, streams as u64, ns, 0);
+        });
+    }
+
     /// Record a quantized-plan (re)pack.
     pub fn quant_repack(&self, panels: usize, bytes: usize, ns: u64) {
         self.with(|w| {
@@ -385,17 +405,25 @@ mod tests {
         h.fp_rest(2, 3, 200);
         h.migration(5, 0, 1, 12, 300);
         h.quant_repack(7, 4096, 400);
+        h.gen_reload(3, 4, 6, 500);
         h.with(|w| {
             assert_eq!(w.counter(Counter::FpPre), 1);
             assert_eq!(w.counter(Counter::FpRest), 1);
             assert_eq!(w.counter(Counter::Migrations), 1);
             assert_eq!(w.counter(Counter::QuantRepacks), 1);
+            assert_eq!(w.counter(Counter::GenReloads), 1);
+            assert_eq!(w.gauge(Gauge::Generation), 4);
             let mut evs = Vec::new();
             w.drain_events(&mut evs);
             let kinds: Vec<&str> = evs.iter().map(|e| e.kind.name()).collect();
-            assert_eq!(kinds, vec!["fp_pre", "fp_rest", "migration", "quant_repack"]);
+            assert_eq!(
+                kinds,
+                vec!["fp_pre", "fp_rest", "migration", "quant_repack", "gen_reload"]
+            );
             let m = &evs[2];
             assert_eq!((m.a, m.b, m.c, m.d, m.e), (5, 0, 1, 12, 300));
+            let g = &evs[4];
+            assert_eq!((g.a, g.b, g.c, g.d, g.e), (3, 4, 6, 500, 0));
         });
     }
 }

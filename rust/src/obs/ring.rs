@@ -44,6 +44,10 @@ pub enum EventKind {
     /// trigger (0 queue, 1 latency, 2 calm), `d` = backlog at decision,
     /// `e` = rolling p99 µs at decision.
     CtlDecision,
+    /// Weight-generation hot reload adopted by a worker (DESIGN.md §13):
+    /// `a` = from generation, `b` = to generation, `c` = live streams on
+    /// the worker at adoption, `d` = weight-upload wall time ns.
+    GenReload,
 }
 
 impl EventKind {
@@ -58,6 +62,7 @@ impl EventKind {
             EventKind::Migration => "migration",
             EventKind::QuantRepack => "quant_repack",
             EventKind::CtlDecision => "ctl_decision",
+            EventKind::GenReload => "gen_reload",
         }
     }
 }

@@ -82,6 +82,7 @@ fn validate_event(v: &Json) -> Result<(), String> {
         "migration" => &["stream", "from_rung", "to_rung", "replay_frames", "ns"],
         "quant_repack" => &["panels", "bytes", "ns"],
         "ctl_decision" => &["from_rung", "to_rung", "backlog", "p99_us"], // + str 'trigger'
+        "gen_reload" => &["from_gen", "to_gen", "streams", "ns"],
         other => return Err(format!("unknown event kind '{other}'")),
     };
     for f in fields {
@@ -222,6 +223,7 @@ mod tests {
         h.fp_rest(2, 3, 1100);
         h.migration(1, 0, 1, 8, 5000);
         h.quant_repack(4, 1 << 20, 80_000);
+        h.gen_reload(1, 2, 5, 40_000);
         h.with(|w| {
             w.push_event(crate::obs::EventKind::Round, 3, 0, 3, 20_000, 0);
             w.push_event(crate::obs::EventKind::CtlDecision, 0, 1, 0, 12, 800);
@@ -234,7 +236,7 @@ mod tests {
         let summary = validate_feed(&out).expect("rendered feed validates");
         assert_eq!(summary.snapshots, 2);
         assert!(summary.hists >= 2); // exec_ns + batch_width
-        assert_eq!(summary.events, 7);
+        assert_eq!(summary.events, 8);
     }
 
     #[test]

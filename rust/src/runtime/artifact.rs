@@ -1,0 +1,748 @@
+//! Versioned, integrity-checked weight artifacts (DESIGN.md §13).
+//!
+//! The on-disk unit of weight shipping is a **generation directory**:
+//!
+//! ```text
+//! gen-000042/
+//!   artifact.json   — soi.artifact.v1 manifest: name, generation,
+//!                     model config, dtype (+ baked quant scales),
+//!                     training metrics, and a per-tensor table
+//!                     {name, dtype, shape, byte_len, sha256}
+//!   weights.bin     — the tensor blobs, concatenated raw little-endian
+//!                     f32 in table order
+//! ```
+//!
+//! The loader is the trust boundary between disk and the serving
+//! process: it verifies the format version, the complete parameter
+//! inventory (against [`synth::param_specs`] for the declared config),
+//! every blob length, and every SHA-256 digest **before** constructing
+//! anything — a failed load returns a typed [`ArtifactError`] and
+//! leaves no partially-registered state behind (the function is pure:
+//! it builds locally and returns only on full success).  The saver is
+//! the mirror image and is atomic at the directory level: it stages
+//! into a `*.tmp-<pid>` sibling and `rename`s into place, so a
+//! generation watcher polling the root can never observe a
+//! half-written generation.
+//!
+//! Only the *weights* travel: the runtime [`Manifest`] (state specs,
+//! MAC tables, schedule metadata) is reconstructed from the embedded
+//! config via [`synth::manifest`], so the artifact can never disagree
+//! with the native backend about state layout or complexity accounting
+//! — those are functions of the config by construction.  Weight
+//! tensors are f32 regardless of execution dtype; an int8 artifact
+//! additionally carries its baked activation scales and the quantized
+//! backend packs codes lazily from the same f32 upload (DESIGN.md §10).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::engine::Weights;
+use super::manifest::{Dtype, Manifest, ModelConfig, QuantSpec};
+use super::synth;
+use crate::util::json::{self, Json};
+use crate::util::sha256;
+use crate::util::tensor::{f32s_from_le_bytes, f32s_to_le_bytes, Tensor};
+
+/// Format tag every artifact manifest must carry.
+pub const ARTIFACT_SCHEMA: &str = "soi.artifact.v1";
+/// Manifest file name inside a generation directory.
+pub const MANIFEST_FILE: &str = "artifact.json";
+/// Weight-blob file name inside a generation directory.
+pub const WEIGHTS_FILE: &str = "weights.bin";
+
+/// Why an artifact failed verification.  Every variant identifies one
+/// concrete defect; the loader returns the first it finds and
+/// constructs nothing, so a rejected generation can never be partially
+/// visible to the server (the corruption matrix in
+/// `rust/tests/artifact_roundtrip.rs` exercises each variant).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// The manifest's `schema` tag is missing or not [`ARTIFACT_SCHEMA`].
+    VersionSkew {
+        /// The tag found on disk (empty when absent).
+        found: String,
+    },
+    /// A tensor required by the declared config is absent from the table.
+    MissingTensor {
+        /// Canonical name of the missing parameter.
+        tensor: String,
+    },
+    /// `weights.bin` does not hold exactly the bytes the table declares
+    /// (a short file, or a manifest/blob `byte_len` disagreement).
+    Truncated {
+        /// Total bytes the tensor table declares.
+        want: u64,
+        /// Bytes actually present on disk.
+        got: u64,
+    },
+    /// A tensor's blob does not hash to its recorded digest.
+    DigestMismatch {
+        /// Tensor whose blob failed verification.
+        tensor: String,
+        /// Digest recorded in the manifest (lowercase hex).
+        want: String,
+        /// Digest computed from the blob (lowercase hex).
+        got: String,
+    },
+    /// Any other structural defect: unreadable files, bad JSON, shape or
+    /// dtype disagreements, duplicate or unexpected tensors, an invalid
+    /// quant section.
+    Malformed {
+        /// Human-readable description of the defect.
+        reason: String,
+    },
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::VersionSkew { found } => write!(
+                f,
+                "artifact version skew: found schema '{found}', this reader speaks '{ARTIFACT_SCHEMA}'"
+            ),
+            ArtifactError::MissingTensor { tensor } => {
+                write!(f, "artifact is missing tensor '{tensor}'")
+            }
+            ArtifactError::Truncated { want, got } => write!(
+                f,
+                "artifact weights truncated or length-skewed: tensor table declares {want} bytes, blob holds {got}"
+            ),
+            ArtifactError::DigestMismatch { tensor, want, got } => write!(
+                f,
+                "artifact tensor '{tensor}' fails integrity check: recorded sha256 {want}, computed {got}"
+            ),
+            ArtifactError::Malformed { reason } => write!(f, "malformed artifact: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+fn malformed<T>(reason: impl fmt::Display) -> std::result::Result<T, ArtifactError> {
+    Err(ArtifactError::Malformed {
+        reason: reason.to_string(),
+    })
+}
+
+/// A verified weight artifact: one generation of one named variant,
+/// either assembled in memory for [`Artifact::save`] or returned fully
+/// verified by [`Artifact::load`].
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Monotonic generation number (higher supersedes lower).
+    pub generation: u64,
+    /// Reconstructed runtime manifest (config, state/param specs, MAC
+    /// tables; the `executables` map is empty — artifacts are
+    /// native-backend weight carriers, not HLO bundles).
+    pub manifest: Manifest,
+    /// The verified tensors, in `manifest.params` order.
+    pub weights: Weights,
+}
+
+impl Artifact {
+    /// Package an in-memory variant (manifest + weights) as generation
+    /// `generation`.  Fails when the weights do not match the
+    /// manifest's parameter inventory — the saver refuses to write an
+    /// artifact the loader would reject.
+    pub fn new(manifest: Manifest, weights: Weights, generation: u64) -> Result<Artifact> {
+        if weights.tensors.len() != manifest.params.len() {
+            anyhow::bail!(
+                "artifact '{}': {} weight tensors for {} parameter specs",
+                manifest.name,
+                weights.tensors.len(),
+                manifest.params.len()
+            );
+        }
+        for (t, spec) in weights.tensors.iter().zip(&manifest.params) {
+            if t.shape != spec.shape {
+                anyhow::bail!(
+                    "artifact '{}': tensor '{}' has shape {:?}, spec wants {:?}",
+                    manifest.name,
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+        }
+        Ok(Artifact {
+            generation,
+            manifest,
+            weights,
+        })
+    }
+
+    /// The variant name this artifact ships weights for.
+    pub fn name(&self) -> &str {
+        &self.manifest.name
+    }
+
+    /// Render the deterministic `artifact.json` document (fixed key
+    /// order, canonical tensor order) — byte-identical across
+    /// save→load→save round trips.
+    pub fn manifest_json(&self) -> String {
+        let cfg = &self.manifest.config;
+        let opt_num = |v: Option<usize>| match v {
+            Some(n) => Json::Num(n as f64),
+            None => Json::Null,
+        };
+        let config = Json::obj(vec![
+            ("feat", Json::Num(cfg.feat as f64)),
+            (
+                "channels",
+                Json::Arr(cfg.channels.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            ("kernel", Json::Num(cfg.kernel as f64)),
+            (
+                "scc",
+                Json::Arr(cfg.scc.iter().map(|&p| Json::Num(p as f64)).collect()),
+            ),
+            ("shift_pos", opt_num(cfg.shift_pos)),
+            ("shift", Json::Num(cfg.shift as f64)),
+            (
+                "extrap",
+                Json::Arr(cfg.extrap.iter().map(|e| Json::Str(e.clone())).collect()),
+            ),
+            (
+                "interp",
+                match &cfg.interp {
+                    Some(s) => Json::Str(s.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ]);
+        let quant = match &self.manifest.quant {
+            None => Json::Null,
+            Some(q) => Json::obj(vec![
+                ("s_in", Json::Num(f64::from(q.s_in))),
+                (
+                    "s_enc",
+                    Json::Arr(q.s_enc.iter().map(|&s| Json::Num(f64::from(s))).collect()),
+                ),
+                (
+                    "s_dec",
+                    Json::Arr(q.s_dec.iter().map(|&s| Json::Num(f64::from(s))).collect()),
+                ),
+                (
+                    "s_up",
+                    Json::Obj(
+                        q.s_up
+                            .iter()
+                            .map(|(p, &s)| (p.to_string(), Json::Num(f64::from(s))))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        let metrics = Json::Obj(
+            self.manifest
+                .train_metrics
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                .collect(),
+        );
+        let tensors = Json::Arr(
+            self.manifest
+                .params
+                .iter()
+                .zip(&self.weights.tensors)
+                .map(|(spec, t)| {
+                    Json::obj(vec![
+                        ("name", Json::Str(spec.name.clone())),
+                        ("dtype", Json::Str("f32".to_string())),
+                        (
+                            "shape",
+                            Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+                        ),
+                        ("byte_len", Json::Num(t.bytes() as f64)),
+                        (
+                            "sha256",
+                            Json::Str(sha256::hex_digest(&f32s_to_le_bytes(&t.data))),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::Str(ARTIFACT_SCHEMA.to_string())),
+            ("name", Json::Str(self.manifest.name.clone())),
+            ("generation", Json::Num(self.generation as f64)),
+            ("config", config),
+            ("dtype", Json::Str(self.manifest.dtype.as_str().to_string())),
+            ("quant", quant),
+            ("train_metrics", metrics),
+            ("tensors", tensors),
+        ])
+        .to_string_pretty()
+    }
+
+    /// Write the artifact as generation directory `dir`, atomically:
+    /// both files are staged into a `*.tmp-<pid>` sibling which is
+    /// `rename`d into place (replacing an existing `dir`), so a
+    /// concurrent [`list_generations`] poll sees either the whole
+    /// generation or none of it.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let name = dir
+            .file_name()
+            .with_context(|| format!("artifact dir '{}' has no name", dir.display()))?
+            .to_string_lossy()
+            .to_string();
+        let parent = dir.parent().unwrap_or_else(|| Path::new(""));
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let tmp = parent.join(format!("{}.tmp-{}", name, std::process::id()));
+        if tmp.exists() {
+            fs::remove_dir_all(&tmp).with_context(|| format!("clearing {}", tmp.display()))?;
+        }
+        fs::create_dir_all(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        let mut blob = Vec::with_capacity(self.manifest.param_count * 4);
+        for t in &self.weights.tensors {
+            blob.extend_from_slice(&f32s_to_le_bytes(&t.data));
+        }
+        fs::write(tmp.join(WEIGHTS_FILE), &blob)
+            .with_context(|| format!("writing {}", tmp.join(WEIGHTS_FILE).display()))?;
+        fs::write(tmp.join(MANIFEST_FILE), self.manifest_json())
+            .with_context(|| format!("writing {}", tmp.join(MANIFEST_FILE).display()))?;
+        if dir.exists() {
+            fs::remove_dir_all(dir).with_context(|| format!("replacing {}", dir.display()))?;
+        }
+        fs::rename(&tmp, dir)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        Ok(())
+    }
+
+    /// Load and fully verify the generation directory `dir`.
+    ///
+    /// Verification order: format version ([`ArtifactError::VersionSkew`])
+    /// → structure → parameter inventory vs the declared config
+    /// ([`ArtifactError::MissingTensor`] / `Malformed`) → blob length
+    /// ([`ArtifactError::Truncated`]) → per-tensor SHA-256
+    /// ([`ArtifactError::DigestMismatch`]).  Nothing is constructed until
+    /// every check passes, and manifests listing tensors in any
+    /// permutation load equivalently — weights are reassembled in
+    /// canonical parameter order regardless of table order.
+    pub fn load(dir: &Path) -> std::result::Result<Artifact, ArtifactError> {
+        let man_path = dir.join(MANIFEST_FILE);
+        let text = match fs::read_to_string(&man_path) {
+            Ok(t) => t,
+            Err(e) => return malformed(format!("reading {}: {e}", man_path.display())),
+        };
+        let v = match json::parse(&text) {
+            Ok(v) => v,
+            Err(e) => return malformed(format!("parsing {}: {e}", man_path.display())),
+        };
+
+        // 1. format version gate — before trusting any other field
+        let schema = v.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+        if schema != ARTIFACT_SCHEMA {
+            return Err(ArtifactError::VersionSkew {
+                found: schema.to_string(),
+            });
+        }
+
+        // 2. structural parse
+        let Some(name) = v.get("name").and_then(|s| s.as_str()) else {
+            return malformed("missing 'name'");
+        };
+        let Some(generation) = v.get("generation").and_then(|g| g.as_i64()) else {
+            return malformed("missing or non-integer 'generation'");
+        };
+        if generation < 0 {
+            return malformed(format!("negative generation {generation}"));
+        }
+        let Some(cfg_json) = v.get("config") else {
+            return malformed("missing 'config'");
+        };
+        let config = parse_config(cfg_json)?;
+        let dtype = match v.get("dtype").and_then(|s| s.as_str()) {
+            None | Some("f32") => Dtype::F32,
+            Some("int8") => Dtype::Int8,
+            Some(other) => return malformed(format!("unknown dtype '{other}'")),
+        };
+        let quant = match v.get("quant") {
+            None => None,
+            Some(q) if q.is_null() => None,
+            Some(q) => match QuantSpec::from_json(q) {
+                Ok(q) => Some(q),
+                Err(e) => return malformed(format!("quant section: {e:#}")),
+            },
+        };
+        if dtype == Dtype::Int8 {
+            match &quant {
+                None => return malformed("dtype int8 without a baked quant section"),
+                Some(q) => {
+                    if let Err(e) = q.validate(&config) {
+                        return malformed(format!("quant section: {e:#}"));
+                    }
+                }
+            }
+        }
+        let mut train_metrics = BTreeMap::new();
+        if let Some(m) = v.get("train_metrics").and_then(|m| m.as_obj()) {
+            for (k, val) in m {
+                let Some(f) = val.as_f64() else {
+                    return malformed(format!("train_metrics.{k} is not a number"));
+                };
+                train_metrics.insert(k.clone(), f);
+            }
+        }
+        let Some(table) = v.get("tensors").and_then(|t| t.as_arr()) else {
+            return malformed("missing 'tensors' table");
+        };
+
+        // tensor table: name → (shape, blob offset, byte_len, digest)
+        struct Entry {
+            shape: Vec<usize>,
+            offset: u64,
+            byte_len: u64,
+            sha256: String,
+        }
+        let mut entries: BTreeMap<String, Entry> = BTreeMap::new();
+        let mut order: Vec<String> = Vec::with_capacity(table.len());
+        let mut offset = 0u64;
+        for e in table {
+            let Some(tname) = e.get("name").and_then(|s| s.as_str()) else {
+                return malformed("tensor entry without a name");
+            };
+            match e.get("dtype").and_then(|s| s.as_str()) {
+                Some("f32") => {}
+                other => {
+                    return malformed(format!(
+                        "tensor '{tname}': unsupported dtype {other:?} (tensor blobs are f32)"
+                    ))
+                }
+            }
+            let Some(shape) = e.get("shape").and_then(|s| s.as_arr()) else {
+                return malformed(format!("tensor '{tname}': missing shape"));
+            };
+            let mut dims = Vec::with_capacity(shape.len());
+            for d in shape {
+                match d.as_usize() {
+                    Some(n) => dims.push(n),
+                    None => return malformed(format!("tensor '{tname}': bad shape dim")),
+                }
+            }
+            let Some(byte_len) = e.get("byte_len").and_then(|b| b.as_i64()) else {
+                return malformed(format!("tensor '{tname}': missing byte_len"));
+            };
+            if byte_len < 0 {
+                return malformed(format!("tensor '{tname}': negative byte_len"));
+            }
+            let elements: usize = dims.iter().product();
+            if byte_len as u64 != 4 * elements as u64 {
+                return malformed(format!(
+                    "tensor '{tname}': byte_len {byte_len} disagrees with shape {dims:?} \
+                     ({} f32 bytes)",
+                    4 * elements
+                ));
+            }
+            let Some(digest) = e.get("sha256").and_then(|s| s.as_str()) else {
+                return malformed(format!("tensor '{tname}': missing sha256"));
+            };
+            let digest = digest.to_ascii_lowercase();
+            if digest.len() != 64 || !digest.bytes().all(|b| b.is_ascii_hexdigit()) {
+                return malformed(format!("tensor '{tname}': sha256 is not 64 hex chars"));
+            }
+            if entries
+                .insert(
+                    tname.to_string(),
+                    Entry {
+                        shape: dims,
+                        offset,
+                        byte_len: byte_len as u64,
+                        sha256: digest,
+                    },
+                )
+                .is_some()
+            {
+                return malformed(format!("tensor '{tname}' listed twice"));
+            }
+            order.push(tname.to_string());
+            offset += byte_len as u64;
+        }
+        let total_bytes = offset;
+
+        // 3. inventory vs the declared config — names and shapes must
+        // match synth::param_specs exactly (no gaps, no extras)
+        let specs = synth::param_specs(&config);
+        for spec in &specs {
+            let Some(entry) = entries.get(&spec.name) else {
+                return Err(ArtifactError::MissingTensor {
+                    tensor: spec.name.clone(),
+                });
+            };
+            if entry.shape != spec.shape {
+                return malformed(format!(
+                    "tensor '{}': shape {:?} disagrees with the config's {:?}",
+                    spec.name, entry.shape, spec.shape
+                ));
+            }
+        }
+        if entries.len() != specs.len() {
+            let known: std::collections::BTreeSet<&str> =
+                specs.iter().map(|s| s.name.as_str()).collect();
+            let extra: Vec<&String> = order.iter().filter(|n| !known.contains(n.as_str())).collect();
+            return malformed(format!("unexpected tensors {extra:?} for the declared config"));
+        }
+
+        // 4. whole-blob length — before any per-tensor slicing
+        let blob_path = dir.join(WEIGHTS_FILE);
+        let blob = match fs::read(&blob_path) {
+            Ok(b) => b,
+            Err(e) => return malformed(format!("reading {}: {e}", blob_path.display())),
+        };
+        if blob.len() as u64 != total_bytes {
+            return Err(ArtifactError::Truncated {
+                want: total_bytes,
+                got: blob.len() as u64,
+            });
+        }
+
+        // 5. per-tensor digests, in blob order
+        for tname in &order {
+            let entry = &entries[tname];
+            let slice = &blob[entry.offset as usize..(entry.offset + entry.byte_len) as usize];
+            let got = sha256::hex_digest(slice);
+            if got != entry.sha256 {
+                return Err(ArtifactError::DigestMismatch {
+                    tensor: tname.clone(),
+                    want: entry.sha256.clone(),
+                    got,
+                });
+            }
+        }
+
+        // 6. everything verified — only now build runtime objects.
+        // Weights assemble in canonical spec order whatever the table
+        // order; the manifest is reconstructed from the config so state
+        // specs and MAC tables cannot skew against the backend.
+        let tensors = specs
+            .iter()
+            .map(|spec| {
+                let entry = &entries[&spec.name];
+                let slice =
+                    &blob[entry.offset as usize..(entry.offset + entry.byte_len) as usize];
+                Tensor::new(spec.shape.clone(), f32s_from_le_bytes(slice))
+            })
+            .collect();
+        let mut manifest = synth::manifest(&config, name, 256);
+        manifest.dtype = dtype;
+        manifest.quant = quant;
+        manifest.train_metrics = train_metrics;
+        manifest.dir = dir.to_path_buf();
+        Ok(Artifact {
+            generation: generation as u64,
+            manifest,
+            weights: Weights { tensors },
+        })
+    }
+}
+
+fn parse_config(v: &Json) -> std::result::Result<ModelConfig, ArtifactError> {
+    let usize_arr = |key: &str| -> std::result::Result<Vec<usize>, ArtifactError> {
+        let Some(arr) = v.get(key).and_then(|a| a.as_arr()) else {
+            return malformed(format!("config.{key}: missing or not an array"));
+        };
+        let mut out = Vec::with_capacity(arr.len());
+        for d in arr {
+            match d.as_usize() {
+                Some(n) => out.push(n),
+                None => return malformed(format!("config.{key}: non-integer entry")),
+            }
+        }
+        Ok(out)
+    };
+    let req_usize = |key: &str| -> std::result::Result<usize, ArtifactError> {
+        match v.get(key).and_then(|n| n.as_usize()) {
+            Some(n) => Ok(n),
+            None => malformed(format!("config.{key}: missing or not an integer")),
+        }
+    };
+    let channels = usize_arr("channels")?;
+    if channels.is_empty() {
+        return malformed("config.channels: empty");
+    }
+    let scc = usize_arr("scc")?;
+    let depth = channels.len();
+    for &p in &scc {
+        if !(1..=depth).contains(&p) {
+            return malformed(format!("config.scc position {p} outside 1..={depth}"));
+        }
+    }
+    let shift_pos = v.get("shift_pos").and_then(|j| j.as_usize());
+    if let Some(s) = shift_pos {
+        if !(1..=depth).contains(&s) {
+            return malformed(format!("config.shift_pos {s} outside 1..={depth}"));
+        }
+    }
+    let extrap: Vec<String> = match v.get("extrap").and_then(|a| a.as_arr()) {
+        Some(arr) => {
+            let mut out = Vec::with_capacity(arr.len());
+            for e in arr {
+                match e.as_str() {
+                    Some(s @ ("duplicate" | "tconv")) => out.push(s.to_string()),
+                    other => {
+                        return malformed(format!("config.extrap entry {other:?} not duplicate|tconv"))
+                    }
+                }
+            }
+            out
+        }
+        None => vec!["duplicate".to_string(); scc.len()],
+    };
+    if extrap.len() != scc.len() {
+        return malformed(format!(
+            "config.extrap lists {} kinds for {} scc positions",
+            extrap.len(),
+            scc.len()
+        ));
+    }
+    Ok(ModelConfig {
+        feat: req_usize("feat")?,
+        channels,
+        kernel: req_usize("kernel")?,
+        scc,
+        shift_pos,
+        shift: v.get("shift").and_then(|j| j.as_usize()).unwrap_or(1),
+        extrap,
+        interp: v
+            .get("interp")
+            .and_then(|j| j.as_str())
+            .map(|s| s.to_string()),
+    })
+}
+
+/// Generation directories under `root`, sorted by ascending generation
+/// number: every subdirectory holding an `artifact.json` whose
+/// `generation` field parses.  Staging directories (`*.tmp-*`, dot
+/// names) and unparsable manifests are skipped rather than failing the
+/// listing — a watcher must keep polling past one bad directory (full
+/// verification happens at [`Artifact::load`] time, not here).
+pub fn list_generations(root: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries =
+        fs::read_dir(root).with_context(|| format!("reading {}", root.display()))?;
+    for entry in entries {
+        let e = entry?;
+        let path = e.path();
+        let fname = e.file_name().to_string_lossy().to_string();
+        if fname.starts_with('.') || fname.contains(".tmp-") || !path.is_dir() {
+            continue;
+        }
+        let man = path.join(MANIFEST_FILE);
+        let Ok(text) = fs::read_to_string(&man) else {
+            continue;
+        };
+        let Ok(v) = json::parse(&text) else { continue };
+        if v.get("schema").and_then(|s| s.as_str()) != Some(ARTIFACT_SCHEMA) {
+            continue;
+        }
+        let Some(g) = v.get("generation").and_then(|g| g.as_i64()) else {
+            continue;
+        };
+        if g >= 0 {
+            out.push((g as u64, path));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ModelConfig {
+        ModelConfig {
+            feat: 4,
+            channels: vec![5, 6],
+            kernel: 3,
+            scc: vec![2],
+            shift_pos: None,
+            shift: 1,
+            extrap: vec!["duplicate".into()],
+            interp: None,
+        }
+    }
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "soi_artifact_unit_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&p);
+        fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn make(generation: u64) -> Artifact {
+        let m = synth::manifest(&small_cfg(), "scc2", 256);
+        let w = synth::he_weights(&m, 0xA11CE);
+        Artifact::new(m, w, generation).unwrap()
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let root = tmp_root("roundtrip");
+        let dir = root.join("gen-000003");
+        let art = make(3);
+        art.save(&dir).unwrap();
+        let back = Artifact::load(&dir).unwrap();
+        assert_eq!(back.generation, 3);
+        assert_eq!(back.name(), "scc2");
+        assert_eq!(back.manifest.config, art.manifest.config);
+        assert_eq!(back.manifest.params, art.manifest.params);
+        for (a, b) in art.weights.tensors.iter().zip(&back.weights.tensors) {
+            assert_eq!(a, b);
+        }
+        // deterministic serialization: re-render is byte-identical
+        assert_eq!(art.manifest_json(), back.manifest_json());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn version_skew_is_typed() {
+        let root = tmp_root("skew");
+        let dir = root.join("gen-000001");
+        make(1).save(&dir).unwrap();
+        let man = dir.join(MANIFEST_FILE);
+        let text = fs::read_to_string(&man)
+            .unwrap()
+            .replace(ARTIFACT_SCHEMA, "soi.artifact.v9");
+        fs::write(&man, text).unwrap();
+        match Artifact::load(&dir) {
+            Err(ArtifactError::VersionSkew { found }) => assert_eq!(found, "soi.artifact.v9"),
+            other => panic!("expected VersionSkew, got {other:?}"),
+        }
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn listing_skips_staging_and_garbage() {
+        let root = tmp_root("listing");
+        make(2).save(&root.join("gen-000002")).unwrap();
+        make(5).save(&root.join("gen-000005")).unwrap();
+        // a staging dir and a junk dir must be invisible
+        fs::create_dir_all(root.join("gen-000009.tmp-1234")).unwrap();
+        fs::write(root.join("gen-000009.tmp-1234").join(MANIFEST_FILE), "{").unwrap();
+        fs::create_dir_all(root.join("junk")).unwrap();
+        let gens = list_generations(&root).unwrap();
+        let seqs: Vec<u64> = gens.iter().map(|(g, _)| *g).collect();
+        assert_eq!(seqs, vec![2, 5]);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn generation_is_the_only_varying_field() {
+        // same weights at different generations differ only in that field
+        let a = make(1).manifest_json();
+        let b = make(2).manifest_json();
+        assert_ne!(a, b);
+        assert_eq!(a.replace("\"generation\": 1", "\"generation\": 2"), b);
+    }
+}

@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::engine::{CompiledVariant, Runtime};
+use super::engine::{CompiledVariant, Runtime, Weights};
 use super::manifest::{Dtype, ModelConfig};
 use crate::backend::DeviceWeights;
 
@@ -185,6 +185,46 @@ impl VariantLadder {
         Self::new(variants)
     }
 
+    /// Compile a ladder of preset rungs **over a shipped weight set**
+    /// (DESIGN.md §13): each spec reshapes the schedule of `base`'s
+    /// topology via [`crate::runtime::synth::preset_over`] — never its
+    /// parameter inventory — so every rung executes the same `weights`
+    /// (an artifact's verified tensors).  Int8 rungs calibrate their
+    /// activation scales against these weights with the same derived
+    /// seed the synth path uses, keeping quantized execution
+    /// deterministic per `(artifact, spec, seed)`.
+    pub fn over_weights(
+        rt: Arc<Runtime>,
+        base: &ModelConfig,
+        weights: &Weights,
+        specs: &[&str],
+        seed: u64,
+    ) -> Result<VariantLadder> {
+        let mut variants = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let (name, dtype) = super::synth::parse_spec(spec)?;
+            let cfg = super::synth::preset_over(base, name).with_context(|| {
+                format!("'{name}' is not a preset rung of a depth-{} base", base.depth())
+            })?;
+            let mut m = super::synth::manifest(&cfg, spec, 256);
+            if dtype == Dtype::Int8 {
+                m.dtype = Dtype::Int8;
+                m.quant = Some(crate::quant::calibrate(
+                    &m,
+                    weights,
+                    super::synth::CALIBRATION_FRAMES,
+                    seed ^ 0x5EED_CA1B,
+                )?);
+            }
+            variants.push(Arc::new(CompiledVariant::with_weights(
+                rt.clone(),
+                m,
+                weights.clone(),
+            )?));
+        }
+        Self::new(variants)
+    }
+
     /// Number of rungs.
     pub fn len(&self) -> usize {
         self.variants.len()
@@ -289,6 +329,33 @@ mod tests {
         let rt = Arc::new(Runtime::native());
         assert!(VariantLadder::synth(rt, &["stmc", "bogus"], 7).is_err());
         assert!(VariantLadder::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn over_weights_builds_rungs_on_shipped_tensors() {
+        use crate::runtime::synth;
+        let rt = Arc::new(Runtime::native());
+        let base = unet::default_config(vec![], None);
+        let m = synth::manifest(&base, "stmc", 256);
+        let w = synth::he_weights(&m, 99);
+        let ladder =
+            VariantLadder::over_weights(rt, &base, &w, &["stmc", "scc2:int8"], 99).unwrap();
+        assert_eq!(ladder.names(), ["stmc", "scc2:int8"]);
+        // every rung executes the tensors it was handed, bit for bit
+        for rung in 0..2 {
+            for (a, b) in w.tensors.iter().zip(&ladder.level(rung).weights.tensors) {
+                assert_eq!(a.data, b.data);
+            }
+        }
+        // unknown rung names fail with context, not a panic
+        assert!(VariantLadder::over_weights(
+            Arc::new(Runtime::native()),
+            &base,
+            &w,
+            &["scc99"],
+            99
+        )
+        .is_err());
     }
 
     #[test]

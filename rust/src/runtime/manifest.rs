@@ -72,7 +72,9 @@ pub struct QuantSpec {
 }
 
 impl QuantSpec {
-    fn from_json(v: &Json) -> Result<QuantSpec> {
+    /// Parse the baked `quant` section (manifest.json / artifact.json —
+    /// the artifact loader shares this parser).
+    pub(crate) fn from_json(v: &Json) -> Result<QuantSpec> {
         let f32_arr = |j: &Json, what: &str| -> Result<Vec<f32>> {
             j.as_arr()
                 .with_context(|| format!("quant.{what}: expected array"))?

@@ -4,12 +4,14 @@
 //! interpreter by default, PJRT behind `--features pjrt`.  Python never
 //! runs here.
 
+pub mod artifact;
 pub mod engine;
 pub mod ladder;
 pub mod manifest;
 pub mod synth;
 
 pub use crate::backend::DeviceWeights;
+pub use artifact::{list_generations, Artifact, ArtifactError, ARTIFACT_SCHEMA};
 pub use engine::{CompiledVariant, Runtime, StateSet, Weights};
 pub use ladder::{warmup_frames, VariantLadder};
 pub use manifest::{list_variants, Dtype, LayerMacs, Manifest, ModelConfig, QuantSpec, TensorSpec};

@@ -188,7 +188,20 @@ pub fn parse_spec(spec: &str) -> Result<(&str, Dtype)> {
 /// execution precision; [`parse_spec`] splits it off, `preset` itself
 /// takes base names only.
 pub fn preset(name: &str) -> Option<ModelConfig> {
-    let depth = 7usize;
+    preset_over(&unet::default_config(vec![], None), name)
+}
+
+/// [`preset`] generalized over an arbitrary base topology: the same name
+/// grammar, but `feat` / `channels` / `kernel` come from `base` (so the
+/// valid position range is `1..=base.depth()`, not the default 7).  This
+/// is how ladder rung specs are resolved against a loaded weight
+/// artifact (DESIGN.md §13): every rung reshapes the *schedule* of the
+/// artifact's topology, never its parameter inventory, so all rungs stay
+/// weight-compatible with the shipped tensors.  The base's own schedule
+/// fields (`scc` / `shift_pos` / `shift` / `interp`) are ignored — the
+/// rung name alone defines them.
+pub fn preset_over(base: &ModelConfig, name: &str) -> Option<ModelConfig> {
+    let depth = base.depth();
     let pos = |s: &str| -> Option<usize> {
         let p: usize = s.parse().ok()?;
         (1..=depth).contains(&p).then_some(p)
@@ -202,32 +215,44 @@ pub fn preset(name: &str) -> Option<ModelConfig> {
         let n: usize = s.parse().ok()?;
         (1..=4).contains(&n).then_some(n)
     };
+    let build = |scc: Vec<usize>, shift_pos: Option<usize>, shift: usize| -> ModelConfig {
+        ModelConfig {
+            feat: base.feat,
+            channels: base.channels.clone(),
+            kernel: base.kernel,
+            extrap: vec!["duplicate".into(); scc.len()],
+            scc,
+            shift_pos,
+            shift,
+            interp: None,
+        }
+    };
     if name == "stmc" {
-        return Some(unet::default_config(vec![], None));
+        return Some(build(vec![], None, 1));
     }
     if let Some(rest) = name.strip_prefix("sscc") {
         let p = pos(rest)?;
-        return Some(unet::default_config(vec![p], Some(p)));
+        return Some(build(vec![p], Some(p), 1));
     }
     if let Some(rest) = name.strip_prefix("scc") {
         if let Some((p, q)) = pair(rest) {
-            return Some(unet::default_config(vec![p, q], None));
+            return Some(build(vec![p, q], None, 1));
         }
-        return Some(unet::default_config(vec![pos(rest)?], None));
+        return Some(build(vec![pos(rest)?], None, 1));
     }
     if let Some(rest) = name.strip_prefix("fp") {
         let (p, q) = pair(rest)?;
-        return Some(unet::default_config(vec![p], Some(q)));
+        return Some(build(vec![p], Some(q), 1));
     }
     if let Some(rest) = name.strip_prefix("spred") {
-        let mut cfg = unet::default_config(vec![4], Some(1));
-        cfg.shift = shift_len(rest)?;
-        return Some(cfg);
+        let shift = shift_len(rest)?;
+        if depth < 4 {
+            return None; // the strided-predictive preset compresses at 4
+        }
+        return Some(build(vec![4], Some(1), shift));
     }
     if let Some(rest) = name.strip_prefix("pred") {
-        let mut cfg = unet::default_config(vec![], Some(1));
-        cfg.shift = shift_len(rest)?;
-        return Some(cfg);
+        return Some(build(vec![], Some(1), shift_len(rest)?));
     }
     None
 }

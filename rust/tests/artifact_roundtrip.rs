@@ -1,0 +1,350 @@
+//! Versioned weight artifacts (DESIGN.md §13): round-trip properties
+//! and the fault-injection matrix.
+//!
+//! The round-trip contract: `save → load → save` is byte-identical on
+//! disk for every synthesized family × dtype, a loaded artifact's
+//! streaming outputs are bit-identical to the in-memory original, and a
+//! manifest listing its tensors in any permutation loads equivalently
+//! (weights reassemble in canonical parameter order).  The corruption
+//! matrix proves the loader is a real trust boundary: a truncated blob,
+//! a single flipped byte, a manifest/blob length skew, an unknown
+//! format version, and a missing tensor each yield their matching typed
+//! [`ArtifactError`] — and the pristine generation next to them keeps
+//! loading, because `Artifact::load` is pure and constructs nothing on
+//! failure.  The env-gated cross-check (`SOI_EXTERNAL_ARTIFACT` /
+//! `SOI_EXTERNAL_CORRUPT`) runs the same reader against artifacts the
+//! python exporter wrote, which is what CI wires up.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use soi::coordinator::StreamSession;
+use soi::runtime::{
+    synth, Artifact, ArtifactError, CompiledVariant, Dtype, Manifest, ModelConfig, Runtime,
+    Weights,
+};
+use soi::util::json::{self, Json};
+use soi::util::rng::Rng;
+
+fn cfg(scc: Vec<usize>, shift_pos: Option<usize>, tconv: bool) -> ModelConfig {
+    ModelConfig {
+        feat: 4,
+        channels: vec![5, 6, 7],
+        kernel: 3,
+        extrap: vec![if tconv { "tconv" } else { "duplicate" }.into(); scc.len()],
+        scc,
+        shift_pos,
+        shift: 1,
+        interp: None,
+    }
+}
+
+/// Every synthesized family the format must carry: plain STMC, single
+/// and double S-CC, FP, and tconv extrapolation (extra `up*` tensors).
+fn families() -> Vec<(&'static str, ModelConfig)> {
+    vec![
+        ("stmc", cfg(vec![], None, false)),
+        ("scc2", cfg(vec![2], None, false)),
+        ("sscc2", cfg(vec![2], Some(2), false)),
+        ("scc1_3", cfg(vec![1, 3], None, false)),
+        ("scc2_tconv", cfg(vec![2], None, true)),
+    ]
+}
+
+fn make(name: &str, c: &ModelConfig, dtype: Dtype, generation: u64, seed: u64) -> Artifact {
+    let mut m = synth::manifest(c, name, 256);
+    let w = synth::he_weights(&m, seed);
+    if dtype == Dtype::Int8 {
+        m.dtype = Dtype::Int8;
+        m.quant = Some(soi::quant::calibrate(&m, &w, 64, seed ^ 0x5EED).unwrap());
+    }
+    Artifact::new(m, w, generation).unwrap()
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("soi_artifact_rt_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&p);
+    fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn copy_generation(src: &Path, dst: &Path) {
+    fs::create_dir_all(dst).unwrap();
+    for f in ["artifact.json", "weights.bin"] {
+        fs::copy(src.join(f), dst.join(f)).unwrap();
+    }
+}
+
+fn random_frames(feat: usize, t: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..t)
+        .map(|_| (0..feat).map(|_| rng.normal() as f32 * 0.3).collect())
+        .collect()
+}
+
+/// Serve `frames` through one fresh session and collect every output.
+fn stream_outputs(
+    rt: &Arc<Runtime>,
+    manifest: Manifest,
+    weights: Weights,
+    frames: &[Vec<f32>],
+) -> Vec<Vec<f32>> {
+    let cv = Arc::new(CompiledVariant::with_weights(rt.clone(), manifest, weights).unwrap());
+    let dw = Arc::new(cv.device_weights().unwrap());
+    let mut sess = StreamSession::new(0, cv, dw);
+    frames.iter().map(|f| sess.on_frame(f).unwrap()).collect()
+}
+
+#[test]
+fn save_load_save_is_byte_identical_for_every_family_and_dtype() {
+    let root = tmp_root("families");
+    for (name, c) in families() {
+        for dtype in [Dtype::F32, Dtype::Int8] {
+            let spec = format!("{name}:{}", dtype.as_str());
+            let art = make(name, &c, dtype, 7, 0xFEED ^ name.len() as u64);
+            let d1 = root.join(&spec).join("gen-000007");
+            let d2 = root.join(&spec).join("resave");
+            art.save(&d1).unwrap();
+            let back = Artifact::load(&d1).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(back.generation, 7, "{spec}");
+            assert_eq!(back.manifest.config, art.manifest.config, "{spec}");
+            assert_eq!(back.manifest.dtype, dtype, "{spec}");
+            assert_eq!(back.manifest.quant, art.manifest.quant, "{spec}");
+            assert_eq!(back.manifest.params, art.manifest.params, "{spec}");
+            assert_eq!(back.weights.tensors, art.weights.tensors, "{spec}: weights");
+            back.save(&d2).unwrap();
+            for f in ["artifact.json", "weights.bin"] {
+                assert_eq!(
+                    fs::read(d1.join(f)).unwrap(),
+                    fs::read(d2.join(f)).unwrap(),
+                    "{spec}: {f} not byte-identical across save→load→save"
+                );
+            }
+        }
+    }
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn loaded_artifact_streams_bit_identically_to_the_original() {
+    let root = tmp_root("stream_equiv");
+    let rt = Arc::new(Runtime::native());
+    for (name, c) in families() {
+        for dtype in [Dtype::F32, Dtype::Int8] {
+            let spec = format!("{name}:{}", dtype.as_str());
+            let art = make(name, &c, dtype, 1, 0xAB);
+            let dir = root.join(&spec);
+            art.save(&dir).unwrap();
+            let back = Artifact::load(&dir).unwrap();
+            let frames = random_frames(c.feat, 3 * art.manifest.period.max(4), 0x51D);
+            let want = stream_outputs(&rt, art.manifest.clone(), art.weights.clone(), &frames);
+            let got = stream_outputs(&rt, back.manifest, back.weights, &frames);
+            assert_eq!(got, want, "{spec}: loaded weights changed streaming outputs");
+        }
+    }
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn permuted_tensor_table_loads_equivalently() {
+    let root = tmp_root("permuted");
+    let art = make("scc2", &cfg(vec![2], None, false), Dtype::F32, 1, 0xCAFE);
+    let dir = root.join("canonical");
+    art.save(&dir).unwrap();
+
+    // rewrite the generation with its tensor table (and blob) reversed
+    let v = json::parse(&fs::read_to_string(dir.join("artifact.json")).unwrap()).unwrap();
+    let table = v.get("tensors").and_then(|t| t.as_arr()).unwrap().to_vec();
+    let blob = fs::read(dir.join("weights.bin")).unwrap();
+    let mut slices = Vec::new();
+    let mut off = 0usize;
+    for e in &table {
+        let len = e.get("byte_len").and_then(|b| b.as_usize()).unwrap();
+        slices.push(blob[off..off + len].to_vec());
+        off += len;
+    }
+    let Json::Obj(pairs) = v else { panic!("manifest is not an object") };
+    let permuted = Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, val)| {
+                if k == "tensors" {
+                    (k, Json::Arr(table.iter().rev().cloned().collect()))
+                } else {
+                    (k, val)
+                }
+            })
+            .collect(),
+    );
+    let pdir = root.join("permuted");
+    fs::create_dir_all(&pdir).unwrap();
+    fs::write(pdir.join("artifact.json"), permuted.to_string_pretty()).unwrap();
+    let reordered: Vec<u8> = slices.iter().rev().flat_map(|s| s.iter().copied()).collect();
+    fs::write(pdir.join("weights.bin"), reordered).unwrap();
+
+    let back = Artifact::load(&pdir).expect("permuted table must load");
+    assert_eq!(back.manifest.params, art.manifest.params, "canonical spec order");
+    assert_eq!(back.weights.tensors, art.weights.tensors, "canonical reassembly");
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn corruption_matrix_yields_typed_errors_and_spares_the_pristine() {
+    let root = tmp_root("matrix");
+    let art = make("scc2", &cfg(vec![2], None, false), Dtype::F32, 1, 0xBADC0DE);
+    let pristine = root.join("pristine");
+    art.save(&pristine).unwrap();
+    let first_tensor = art.manifest.params[0].name.clone();
+    let total: u64 = art.weights.tensors.iter().map(|t| t.bytes() as u64).sum();
+
+    // 1. truncated blob
+    let d = root.join("truncated");
+    copy_generation(&pristine, &d);
+    let mut blob = fs::read(d.join("weights.bin")).unwrap();
+    blob.truncate(blob.len() - 5);
+    fs::write(d.join("weights.bin"), &blob).unwrap();
+    match Artifact::load(&d) {
+        Err(ArtifactError::Truncated { want, got }) => {
+            assert_eq!(want, total);
+            assert_eq!(got, total - 5);
+        }
+        other => panic!("truncated blob: expected Truncated, got {other:?}"),
+    }
+
+    // 2. one flipped byte — digest mismatch naming the damaged tensor
+    let d = root.join("flipped");
+    copy_generation(&pristine, &d);
+    let mut blob = fs::read(d.join("weights.bin")).unwrap();
+    blob[3] ^= 0xFF;
+    fs::write(d.join("weights.bin"), &blob).unwrap();
+    match Artifact::load(&d) {
+        Err(ArtifactError::DigestMismatch { tensor, want, got }) => {
+            assert_eq!(tensor, first_tensor);
+            assert_ne!(want, got);
+        }
+        other => panic!("flipped byte: expected DigestMismatch, got {other:?}"),
+    }
+
+    // 3a. manifest/blob length skew: blob longer than the table declares
+    let d = root.join("overlong");
+    copy_generation(&pristine, &d);
+    let mut blob = fs::read(d.join("weights.bin")).unwrap();
+    blob.extend_from_slice(&[0u8; 4]);
+    fs::write(d.join("weights.bin"), &blob).unwrap();
+    match Artifact::load(&d) {
+        Err(ArtifactError::Truncated { want, got }) => {
+            assert_eq!(want, total);
+            assert_eq!(got, total + 4);
+        }
+        other => panic!("overlong blob: expected Truncated, got {other:?}"),
+    }
+
+    // 3b. a byte_len that disagrees with its declared shape
+    let d = root.join("byte_len");
+    copy_generation(&pristine, &d);
+    let v = json::parse(&fs::read_to_string(d.join("artifact.json")).unwrap()).unwrap();
+    let Json::Obj(pairs) = v else { panic!() };
+    let edited = Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, val)| {
+                if k != "tensors" {
+                    return (k, val);
+                }
+                let Json::Arr(mut entries) = val else { panic!() };
+                let Json::Obj(fields) = &mut entries[0] else { panic!() };
+                for (fk, fv) in fields.iter_mut() {
+                    if fk == "byte_len" {
+                        let n = fv.as_f64().unwrap();
+                        *fv = Json::Num(n + 4.0);
+                    }
+                }
+                (k, Json::Arr(entries))
+            })
+            .collect(),
+    );
+    fs::write(d.join("artifact.json"), edited.to_string_pretty()).unwrap();
+    match Artifact::load(&d) {
+        Err(ArtifactError::Malformed { reason }) => {
+            assert!(reason.contains("byte_len"), "reason: {reason}");
+        }
+        other => panic!("byte_len skew: expected Malformed, got {other:?}"),
+    }
+
+    // 4. unknown format version
+    let d = root.join("skew");
+    copy_generation(&pristine, &d);
+    let text = fs::read_to_string(d.join("artifact.json"))
+        .unwrap()
+        .replace("soi.artifact.v1", "soi.artifact.v9");
+    fs::write(d.join("artifact.json"), text).unwrap();
+    match Artifact::load(&d) {
+        Err(ArtifactError::VersionSkew { found }) => assert_eq!(found, "soi.artifact.v9"),
+        other => panic!("version skew: expected VersionSkew, got {other:?}"),
+    }
+
+    // 5. missing tensor: drop the first table entry and its blob slice
+    let d = root.join("missing");
+    copy_generation(&pristine, &d);
+    let v = json::parse(&fs::read_to_string(d.join("artifact.json")).unwrap()).unwrap();
+    let first_len = v.get("tensors").and_then(|t| t.as_arr()).unwrap()[0]
+        .get("byte_len")
+        .and_then(|b| b.as_usize())
+        .unwrap();
+    let Json::Obj(pairs) = v else { panic!() };
+    let edited = Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, val)| {
+                if k != "tensors" {
+                    return (k, val);
+                }
+                let Json::Arr(entries) = val else { panic!() };
+                (k, Json::Arr(entries.into_iter().skip(1).collect()))
+            })
+            .collect(),
+    );
+    fs::write(d.join("artifact.json"), edited.to_string_pretty()).unwrap();
+    let blob = fs::read(d.join("weights.bin")).unwrap();
+    fs::write(d.join("weights.bin"), &blob[first_len..]).unwrap();
+    match Artifact::load(&d) {
+        Err(ArtifactError::MissingTensor { tensor }) => assert_eq!(tensor, first_tensor),
+        other => panic!("missing tensor: expected MissingTensor, got {other:?}"),
+    }
+
+    // the loader is pure: after five rejections next door, the pristine
+    // generation still verifies and matches the original bit for bit
+    let back = Artifact::load(&pristine).expect("pristine generation still loads");
+    assert_eq!(back.weights.tensors, art.weights.tensors);
+    let _ = fs::remove_dir_all(&root);
+}
+
+/// Cross-check against the python exporter (CI wires the env vars):
+/// `SOI_EXTERNAL_ARTIFACT` must load, compile, and serve; the
+/// byte-flipped `SOI_EXTERNAL_CORRUPT` copy must be rejected with the
+/// typed digest error.
+#[test]
+fn external_python_artifact_cross_check() {
+    let Ok(dir) = std::env::var("SOI_EXTERNAL_ARTIFACT") else {
+        eprintln!("SOI_EXTERNAL_ARTIFACT unset — cross-check skipped");
+        return;
+    };
+    let art = Artifact::load(Path::new(&dir)).expect("python-written artifact must verify");
+    let rt = Arc::new(Runtime::native());
+    let feat = art.manifest.config.feat;
+    let period = art.manifest.period.max(2);
+    let frames = random_frames(feat, 4 * period, 0xE77);
+    let outs = stream_outputs(&rt, art.manifest.clone(), art.weights.clone(), &frames);
+    assert_eq!(outs.len(), frames.len(), "every frame served");
+    assert!(
+        outs.iter().flatten().all(|v| v.is_finite()),
+        "python-exported weights produced non-finite output"
+    );
+    if let Ok(bad) = std::env::var("SOI_EXTERNAL_CORRUPT") {
+        match Artifact::load(Path::new(&bad)) {
+            Err(ArtifactError::DigestMismatch { .. }) => {}
+            other => panic!("corrupt python artifact: expected DigestMismatch, got {other:?}"),
+        }
+    }
+}

@@ -6,9 +6,11 @@ use soi::dsp::{metrics, resample, siggen};
 use soi::kernels::{gemm_f32, gemm_f32_on, gemm_i8, gemm_i8_on, Isa, PackedF32, PackedI8};
 use soi::quant::kernels::{conv_win_batch_q, tconv_phase_batch_q};
 use soi::quant::{quantize_groups, quantize_per_channel, quantize_weights, EluLut};
+use soi::runtime::{synth, Artifact, ArtifactError, ModelConfig};
 use soi::util::json::{self, Json};
 use soi::util::prop;
 use soi::util::rng::Rng;
+use soi::util::sha256::{hex_digest, Sha256};
 use soi::util::tensor::Tensor;
 
 #[test]
@@ -455,4 +457,92 @@ fn prop_pruning_never_increases_magnitude_sum() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_sha256_chunking_invariant() {
+    // the digest is a function of the byte stream alone: any split of
+    // the input into update() calls — including empty and unaligned
+    // chunks straddling the 64-byte block boundary — matches one-shot
+    prop::check("sha256 chunking", 120, 0x5A256, |rng, _| {
+        let n = rng.below(300);
+        let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let want = hex_digest(&data);
+        if want.len() != 64 || !want.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase())
+        {
+            return Err(format!("not lowercase 64-hex: {want}"));
+        }
+        let mut h = Sha256::new();
+        let mut off = 0;
+        while off < n {
+            let step = rng.below(80); // 0 is a legal (empty) update
+            let end = (off + step).min(n);
+            h.update(&data[off..end]);
+            off = end;
+        }
+        let got = Sha256::to_hex(&h.finish());
+        if got != want {
+            return Err(format!("chunked {got} != one-shot {want} over {n} bytes"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_artifact_roundtrip_and_flip_detection() {
+    // for random small model families: save → load preserves every
+    // tensor bit-for-bit, and any single flipped blob byte is caught by
+    // the digest gate as a typed error naming the damaged tensor
+    let root = std::env::temp_dir().join(format!("soi_prop_artifact_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    prop::check("artifact roundtrip", 12, 0xA27, |rng, case| {
+        let depth = 2 + rng.below(2);
+        let channels: Vec<usize> = (0..depth).map(|_| 3 + rng.below(4)).collect();
+        let scc = if rng.chance(0.5) { vec![1 + rng.below(depth)] } else { vec![] };
+        let c = ModelConfig {
+            feat: 1 + rng.below(4),
+            channels,
+            kernel: 3,
+            extrap: vec!["duplicate".into(); scc.len()],
+            scc,
+            shift_pos: None,
+            shift: 1,
+            interp: None,
+        };
+        let m = synth::manifest(&c, "p", 16);
+        let w = synth::he_weights(&m, 0xBEEF ^ case as u64);
+        let art = Artifact::new(m, w, 1 + case as u64).map_err(|e| e.to_string())?;
+        let dir = root.join(format!("case{case}"));
+        art.save(&dir).map_err(|e| e.to_string())?;
+        let back = Artifact::load(&dir).map_err(|e| e.to_string())?;
+        if back.weights.tensors != art.weights.tensors {
+            return Err("loaded tensors differ from saved".into());
+        }
+        if back.generation != art.generation {
+            return Err("generation did not round-trip".into());
+        }
+        // flip one random blob byte; the load must fail naming the
+        // tensor whose byte range covers the flipped offset
+        let blob_path = dir.join("weights.bin");
+        let mut blob = std::fs::read(&blob_path).map_err(|e| e.to_string())?;
+        let at = rng.below(blob.len());
+        blob[at] ^= 1 + rng.below(255) as u8;
+        std::fs::write(&blob_path, &blob).map_err(|e| e.to_string())?;
+        let mut off = 0usize;
+        let mut damaged = String::new();
+        for (spec, t) in art.manifest.params.iter().zip(&art.weights.tensors) {
+            if at < off + t.bytes() {
+                damaged = spec.name.clone();
+                break;
+            }
+            off += t.bytes();
+        }
+        match Artifact::load(&dir) {
+            Err(ArtifactError::DigestMismatch { tensor, .. }) if tensor == damaged => Ok(()),
+            Err(e) => Err(format!("flip at {at}: expected DigestMismatch in '{damaged}', got {e}")),
+            Ok(_) => Err(format!("flip at {at} in '{damaged}' went undetected")),
+        }
+    });
+    let _ = std::fs::remove_dir_all(&root);
 }
