@@ -197,6 +197,16 @@ impl LoadController {
     ) -> Option<Decision> {
         let p = &self.policy;
         let p99 = self.window_p99_us();
+        // Cooldown gates *before* any patience accrual: rounds observed
+        // while the previous switch settles count toward nothing, so a
+        // recovery cannot fire the instant cooldown expires on patience
+        // quietly banked inside the window.
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            self.over_rounds = 0;
+            self.calm_rounds = 0;
+            return None;
+        }
         let over = queue_depth >= p.queue_high || p99 > p.target_p99_us;
         let calm =
             queue_depth <= p.queue_low && (p99 as f64) <= p.headroom * p.target_p99_us as f64;
@@ -216,10 +226,6 @@ impl LoadController {
         } else {
             self.over_rounds = 0;
             self.calm_rounds = 0;
-        }
-        if self.cooldown_left > 0 {
-            self.cooldown_left -= 1;
-            return None;
         }
         if self.over_rounds >= self.policy.patience_down && rung < max_rung {
             self.over_rounds = 0;
@@ -336,6 +342,24 @@ mod tests {
         assert_eq!(c.observe_round(10, 0, 2), None);
         assert_eq!(c.observe_round(0, 0, 2), None); // calm resets patience
         assert_eq!(c.observe_round(10, 0, 2), None); // back to 1/2
+    }
+
+    #[test]
+    fn recovery_waits_out_cooldown_before_earning_patience() {
+        // quick_policy: patience_down 2, patience_up 3, cooldown 2.
+        let mut c = LoadController::new(quick_policy());
+        assert_eq!(c.observe_round(10, 0, 2), None);
+        let d = c.observe_round(10, 0, 2).expect("degrade fires");
+        assert!(d.is_degrade());
+        // From here every round is perfectly calm (empty queue, p99 0,
+        // well under headroom).  Rounds 1-2 are cooldown, rounds 3-5
+        // earn calm patience 1..3 — recovery fires exactly at round 5,
+        // never inside the cooldown window.
+        for round in 1..=4 {
+            assert_eq!(c.observe_round(0, 1, 2), None, "round {round}");
+        }
+        let d = c.observe_round(0, 1, 2).expect("recovery at round 5");
+        assert_eq!((d.from, d.to, d.trigger), (1, 0, Trigger::Calm));
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //! * [`server`] — multi-stream worker pool with id-sharding, bounded
 //!   queues (backpressure), per-(variant, phase) batched dispatch,
 //!   optional load-adaptive ladder serving, zero-downtime weight-
-//!   generation hot reload (DESIGN.md §13), and aggregated metrics.
+//!   generation hot reload (DESIGN.md §13), aggregated metrics, and a
+//!   live mode ([`Server::start_live`]) that a network shard wraps
+//!   (DESIGN.md §14).
 //! * [`controller`] — the adaptive-serving load controller: per-worker
 //!   queue-depth + rolling-p99 hysteresis deciding ladder moves (§9).
 //! * [`metrics`] — latency histograms, executed-MAC, batch-width and
@@ -25,5 +27,8 @@ pub mod stream;
 pub use controller::{AdaptivePolicy, Decision, LoadController, Trigger};
 pub use metrics::StreamMetrics;
 pub use scheduler::{Scheduler, StepPlan};
-pub use server::{Generation, GenerationWatcher, ReloadHandle, ServeReport, Server};
+pub use server::{
+    FrameJob, Generation, GenerationWatcher, LiveCmd, LiveEvent, LiveServer, ReloadHandle,
+    ServeReport, Server,
+};
 pub use stream::StreamSession;

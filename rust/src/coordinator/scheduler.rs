@@ -179,4 +179,118 @@ mod tests {
             Ok(())
         });
     }
+
+    #[test]
+    fn randomized_admission_keeps_phase_groups_aligned() {
+        // §8 batched serving admits streams mid-flight by resuming
+        // their schedule at the *absolute* frame counter (the same
+        // mechanism §9 migration and §14 cross-shard resume use).  The
+        // invariant that makes per-phase batched dispatch correct is
+        // that every live stream's plan is identical at every round,
+        // no matter when it was admitted or which siblings retired.
+        prop::check("admission keeps phase groups aligned", 40, 0xA11A, |rng, _| {
+            let period = 1usize << (rng.below(3) + 1); // 2, 4, 8
+            let split = rng.chance(0.5);
+            let mut live = vec![Scheduler::new_at(period, split, 0)];
+            let rounds = rng.below(60) + 10;
+            for g in 0..rounds as u64 {
+                if rng.chance(0.3) {
+                    live.push(Scheduler::new_at(period, split, g));
+                }
+                if live.len() > 1 && rng.chance(0.2) {
+                    let idx = rng.below(live.len());
+                    live.swap_remove(idx);
+                }
+                let mut plans = live.iter_mut().map(Scheduler::next);
+                let first = plans.next().expect("pool never empties");
+                if first.phase != (g % period as u64) as usize {
+                    return Err(format!("phase {} at t {g}, period {period}", first.phase));
+                }
+                for p in plans {
+                    if p != first {
+                        return Err(format!("divergent plans {p:?} vs {first:?} at t {g}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mac_accounting_closes_over_complete_periods() {
+        // Summing the per-phase MAC table over any whole number of
+        // periods reproduces `macs_per_frame · frames` exactly — from
+        // any admission phase — so a stream retired on a period
+        // boundary never skews the MAC ledger, and no single phase
+        // exceeds the full (STMC) inference.
+        use crate::coordinator::stream::{macs_at_phase, macs_stmc};
+        use crate::runtime::{Dtype, LayerMacs, Manifest, ModelConfig};
+        use std::collections::BTreeMap;
+        use std::path::PathBuf;
+
+        fn manifest(period: usize) -> Manifest {
+            Manifest {
+                name: "t".into(),
+                config: ModelConfig {
+                    feat: 4,
+                    channels: vec![4],
+                    kernel: 3,
+                    scc: vec![],
+                    shift_pos: None,
+                    shift: 1,
+                    extrap: vec![],
+                    interp: None,
+                },
+                dtype: Dtype::F32,
+                quant: None,
+                period,
+                streamable: true,
+                offline_t: 16,
+                packed_states: 0,
+                states: vec![],
+                params: vec![],
+                executables: BTreeMap::new(),
+                layer_macs: vec![
+                    LayerMacs {
+                        name: "a".into(),
+                        macs: 100,
+                        rate_div: 1,
+                    },
+                    LayerMacs {
+                        name: "b".into(),
+                        macs: 300,
+                        rate_div: 2,
+                    },
+                ],
+                macs_per_frame: 250.0,
+                precomputed_fraction: 0.0,
+                param_count: 0,
+                state_bytes: 0,
+                train_metrics: BTreeMap::new(),
+                dir: PathBuf::from("/nonexistent"),
+            }
+        }
+
+        prop::check("macs close over whole periods", 40, 0x5CA1E, |rng, _| {
+            let period = 1usize << (rng.below(3) + 1); // 2, 4, 8
+            let m = manifest(period);
+            let full = macs_stmc(&m);
+            let t0 = rng.below(1000) as u64;
+            let mut s = Scheduler::new_at(period, false, t0);
+            let frames = (rng.below(5) + 1) * period;
+            let mut total = 0.0;
+            for _ in 0..frames {
+                let phase_macs = macs_at_phase(&m, s.next().phase);
+                if phase_macs > full {
+                    return Err(format!("phase macs {phase_macs} exceed full {full}"));
+                }
+                total += phase_macs;
+            }
+            let want = m.macs_per_frame * frames as f64;
+            if (total - want).abs() > 1e-9 {
+                return Err(format!("{frames} frames from t0 {t0}: {total} != {want}"));
+            }
+            Ok(())
+        });
+    }
 }

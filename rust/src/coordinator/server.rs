@@ -58,6 +58,73 @@ pub struct FrameJob {
     pub last: bool,
 }
 
+/// One command for a live worker (DESIGN.md §14).  Batch-mode runs
+/// ([`Server::run`]) only ever use [`LiveCmd::Frame`]; a shard
+/// ([`crate::net::shard`]) additionally admits migrated sessions with
+/// [`LiveCmd::Resume`] and retires drained ones with
+/// [`LiveCmd::Forget`].
+pub enum LiveCmd {
+    /// Serve one frame (creates the session on first sight).
+    Frame(FrameJob),
+    /// Admit a session mid-stream by §9 history replay
+    /// ([`StreamSession::resume`]): resume at absolute frame counter
+    /// `t` from `history` (oldest first).  Failure emits
+    /// [`LiveEvent::ResumeFailed`] and constructs nothing — the
+    /// worker and its other sessions are unaffected.
+    Resume {
+        /// Stream id to admit.
+        stream_id: u64,
+        /// Absolute frame counter the stream resumes at.
+        t: u64,
+        /// Recent input frames, oldest first (`len == t` or
+        /// `>= warmup`).
+        history: Vec<Vec<f32>>,
+    },
+    /// Drop a session immediately (it migrated away or its client
+    /// vanished); pending frames are discarded.
+    Forget {
+        /// Stream id to drop.
+        stream_id: u64,
+    },
+}
+
+/// What a live worker reports while running (see
+/// [`Server::start_live`]).  In live mode outputs stream out as they
+/// are produced instead of accumulating until the stream retires.
+pub enum LiveEvent {
+    /// One output frame.
+    Out {
+        /// Stream id.
+        id: u64,
+        /// Seq of the input frame this output answers (the session's
+        /// frame counter before serving it).
+        seq: u64,
+        /// Output samples.
+        frame: Vec<f32>,
+    },
+    /// A session retired (last frame served, or [`LiveCmd::Forget`]).
+    Retired {
+        /// Stream id.
+        id: u64,
+        /// The session's final metrics.
+        metrics: StreamMetrics,
+        /// Ladder rung it retired on.
+        rung: usize,
+    },
+    /// A [`LiveCmd::Resume`] was rejected; no session was created.
+    ResumeFailed {
+        /// Stream id of the rejected resume.
+        id: u64,
+        /// Why the replay was refused.
+        reason: String,
+    },
+    /// The worker hit an unrecoverable serving error and exited.
+    Fatal {
+        /// Rendered error chain.
+        reason: String,
+    },
+}
+
 /// Serving summary returned by [`Server::run`].
 pub struct ServeReport {
     /// Metrics aggregated across every served stream (includes the
@@ -370,7 +437,7 @@ impl Server {
         gap_us: &[u64],
     ) -> Result<ServeReport> {
         let t0 = std::time::Instant::now();
-        let mut senders: Vec<SyncSender<FrameJob>> = Vec::new();
+        let mut senders: Vec<SyncSender<LiveCmd>> = Vec::new();
         let mut handles = Vec::new();
         // Unbounded on purpose: workers retire streams mid-run, and the
         // dispatcher only drains results after dispatching every frame —
@@ -378,7 +445,7 @@ impl Server {
         let (out_tx, out_rx) = channel::<WorkerResult>();
 
         for w in 0..self.workers {
-            let (tx, rx): (SyncSender<FrameJob>, Receiver<FrameJob>) =
+            let (tx, rx): (SyncSender<LiveCmd>, Receiver<LiveCmd>) =
                 sync_channel(self.queue_depth);
             senders.push(tx);
             let ladder = self.ladder.clone();
@@ -390,6 +457,7 @@ impl Server {
                 adaptive: self.adaptive.clone(),
                 obs: self.telemetry.as_ref().map(|t| t.worker(w)),
                 reload: self.reload.clone(),
+                live: None,
             };
             handles.push(thread::spawn(move || {
                 worker_loop(ladder, rx, out_tx, cfg);
@@ -413,7 +481,7 @@ impl Server {
                         last: t + 1 == frames.len(),
                     };
                     senders[sid % self.workers]
-                        .send(job)
+                        .send(LiveCmd::Frame(job))
                         .map_err(|_| anyhow!("worker {} died", sid % self.workers))?;
                 }
             }
@@ -468,6 +536,117 @@ impl Server {
             generation,
         })
     }
+
+    /// Start the worker pool in **live mode** (DESIGN.md §14): instead
+    /// of a fixed stream set driven to completion, the returned handle
+    /// accepts [`LiveCmd`]s for the lifetime of the pool and streams
+    /// [`LiveEvent`]s back as frames are served.  This is the engine a
+    /// network shard wraps ([`crate::net::shard`]): frames arrive from
+    /// the wire, outputs leave for the wire, and migrated sessions are
+    /// admitted mid-stream with §9 history replay.
+    ///
+    /// Sharding, batching, adaptive control, telemetry and hot reload
+    /// all behave exactly as in [`Server::run`] — live mode changes
+    /// only how work arrives and how outputs leave.
+    pub fn start_live(&self) -> LiveServer {
+        let (ev_tx, ev_rx) = channel::<LiveEvent>();
+        let (out_tx, out_rx) = channel::<WorkerResult>();
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for w in 0..self.workers {
+            let (tx, rx): (SyncSender<LiveCmd>, Receiver<LiveCmd>) =
+                sync_channel(self.queue_depth);
+            senders.push(tx);
+            let ladder = self.ladder.clone();
+            let out_tx = out_tx.clone();
+            let cfg = WorkerCfg {
+                idle_precompute: self.idle_precompute,
+                batching: self.batching,
+                max_pending: self.queue_depth,
+                adaptive: self.adaptive.clone(),
+                obs: self.telemetry.as_ref().map(|t| t.worker(w)),
+                reload: self.reload.clone(),
+                live: Some(ev_tx.clone()),
+            };
+            handles.push(thread::spawn(move || {
+                worker_loop(ladder, rx, out_tx, cfg);
+            }));
+        }
+        LiveServer {
+            senders,
+            events: Some(ev_rx),
+            out_rx,
+            handles,
+        }
+    }
+
+    /// The variant ladder this server serves (rung 0 admits new
+    /// streams; other rungs are reachable via [`Server::adaptive`]).
+    pub fn ladder(&self) -> &Arc<VariantLadder> {
+        &self.ladder
+    }
+}
+
+/// Handle to a live worker pool ([`Server::start_live`]).
+pub struct LiveServer {
+    senders: Vec<SyncSender<LiveCmd>>,
+    events: Option<Receiver<LiveEvent>>,
+    out_rx: Receiver<WorkerResult>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl LiveServer {
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// The worker a stream id is sharded to (`id % workers` — the same
+    /// affinity [`Server::run`] uses, so live and batch serving place
+    /// streams identically).
+    pub fn worker_of(&self, stream_id: u64) -> usize {
+        (stream_id % self.senders.len() as u64) as usize
+    }
+
+    /// Route a command to its stream's worker.  Blocks when that
+    /// worker's bounded queue is full (the same backpressure batch
+    /// dispatch exerts); fails only if the worker died.
+    pub fn submit(&self, cmd: LiveCmd) -> Result<()> {
+        let id = match &cmd {
+            LiveCmd::Frame(job) => job.stream_id,
+            LiveCmd::Resume { stream_id, .. } => *stream_id,
+            LiveCmd::Forget { stream_id } => *stream_id,
+        };
+        let w = self.worker_of(id);
+        self.senders[w]
+            .send(cmd)
+            .map_err(|_| anyhow!("worker {w} died"))
+    }
+
+    /// Take ownership of the pool's event stream (outputs,
+    /// retirements, resume rejections, fatal worker errors) so a
+    /// consumer thread can drain it independently of the handle.
+    /// `None` once taken.
+    pub fn take_events(&mut self) -> Option<Receiver<LiveEvent>> {
+        self.events.take()
+    }
+
+    /// Close the command queues, wait for every worker to exit and
+    /// return the pool-wide aggregated stream metrics.
+    pub fn shutdown(self) -> Result<StreamMetrics> {
+        drop(self.senders);
+        drop(self.events);
+        let mut metrics = StreamMetrics::new();
+        for res in self.out_rx {
+            if let WorkerMsg::Stream { metrics: m, .. } = res? {
+                metrics.merge(&m);
+            }
+        }
+        for h in self.handles {
+            h.join().map_err(|_| anyhow!("worker panicked"))?;
+        }
+        Ok(metrics)
+    }
 }
 
 /// What a worker sends back on the result channel.
@@ -506,6 +685,26 @@ struct WorkerCfg {
     /// Hot-reload slot shared with the publisher (None serves one fixed
     /// generation forever).
     reload: Option<ReloadHandle>,
+    /// Live-mode event channel ([`Server::start_live`]): when set,
+    /// outputs stream out as [`LiveEvent::Out`] instead of
+    /// accumulating in the slot, and serving errors are reported as
+    /// [`LiveEvent::Fatal`] instead of aborting a batch run.
+    live: Option<Sender<LiveEvent>>,
+}
+
+/// Route a worker error to whichever channel the mode uses.
+fn report_err(
+    live: &Option<Sender<LiveEvent>>,
+    out_tx: &Sender<WorkerResult>,
+    e: anyhow::Error,
+) {
+    if let Some(tx) = live {
+        let _ = tx.send(LiveEvent::Fatal {
+            reason: format!("{e:#}"),
+        });
+    } else {
+        let _ = out_tx.send(Err(e));
+    }
 }
 
 /// Per-stream serving state owned by one worker.
@@ -544,7 +743,7 @@ fn select_mut<'a>(slots: &'a mut [Slot], idxs: &[usize]) -> Vec<&'a mut Slot> {
 
 fn worker_loop(
     ladder: Arc<VariantLadder>,
-    rx: Receiver<FrameJob>,
+    rx: Receiver<LiveCmd>,
     out_tx: Sender<WorkerResult>,
     cfg: WorkerCfg,
 ) {
@@ -555,6 +754,7 @@ fn worker_loop(
         adaptive,
         obs,
         reload,
+        live,
     } = cfg;
     // With hot reload enabled, the handle's current generation is the
     // starting ladder (the server seeds it with its own ladder, so this
@@ -571,7 +771,7 @@ fn worker_loop(
     let mut weights: Arc<DeviceWeights> = match ladder.device_weights() {
         Ok(w) => Arc::new(w),
         Err(e) => {
-            let _ = out_tx.send(Err(e));
+            report_err(&live, &out_tx, e);
             return;
         }
     };
@@ -613,31 +813,118 @@ fn worker_loop(
     // `ladder`/`weights`/`gen_seq` are passed per call (not captured):
     // a generation adoption swaps them mid-run, and new streams must
     // start on whatever generation the worker currently serves.
-    let enqueue = |slots: &mut Vec<Slot>,
-                   index: &mut HashMap<u64, usize>,
-                   pending_total: &mut usize,
-                   job: FrameJob,
-                   ladder: &Arc<VariantLadder>,
-                   weights: &Arc<DeviceWeights>,
-                   gen_seq: u64| {
-        let i = *index.entry(job.stream_id).or_insert_with(|| {
-            let mut sess =
-                StreamSession::new(job.stream_id, ladder.level(0).clone(), weights.clone());
-            sess.set_history_cap(history_cap);
-            sess.set_obs(obs.clone());
-            slots.push(Slot {
-                sess,
-                rung: 0,
-                gen: gen_seq,
-                outs: Vec::new(),
-                pending: VecDeque::new(),
-                closing: false,
-            });
-            slots.len() - 1
-        });
-        slots[i].pending.push_back(job.frame);
-        slots[i].closing |= job.last;
-        *pending_total += 1;
+    let handle_cmd = |slots: &mut Vec<Slot>,
+                      index: &mut HashMap<u64, usize>,
+                      pending_total: &mut usize,
+                      cmd: LiveCmd,
+                      ladder: &Arc<VariantLadder>,
+                      weights: &Arc<DeviceWeights>,
+                      gen_seq: u64| {
+        match cmd {
+            LiveCmd::Frame(job) => {
+                let i = *index.entry(job.stream_id).or_insert_with(|| {
+                    let mut sess = StreamSession::new(
+                        job.stream_id,
+                        ladder.level(0).clone(),
+                        weights.clone(),
+                    );
+                    sess.set_history_cap(history_cap);
+                    sess.set_obs(obs.clone());
+                    slots.push(Slot {
+                        sess,
+                        rung: 0,
+                        gen: gen_seq,
+                        outs: Vec::new(),
+                        pending: VecDeque::new(),
+                        closing: false,
+                    });
+                    slots.len() - 1
+                });
+                slots[i].pending.push_back(job.frame);
+                slots[i].closing |= job.last;
+                *pending_total += 1;
+            }
+            LiveCmd::Resume {
+                stream_id,
+                t,
+                history,
+            } => {
+                // §9 replay admission (DESIGN.md §14): everything is
+                // validated inside `StreamSession::resume` before any
+                // state exists, so a bad migrate constructs nothing
+                // and the worker's other sessions never notice.
+                if index.contains_key(&stream_id) {
+                    if let Some(tx) = &live {
+                        let _ = tx.send(LiveEvent::ResumeFailed {
+                            id: stream_id,
+                            reason: "session already live on this worker".to_string(),
+                        });
+                    }
+                    return;
+                }
+                let replay = history.len();
+                let t_mig = Instant::now();
+                match StreamSession::resume(
+                    stream_id,
+                    ladder.level(0).clone(),
+                    weights.clone(),
+                    t,
+                    history,
+                ) {
+                    Ok(mut sess) => {
+                        sess.set_history_cap(history_cap);
+                        sess.set_obs(obs.clone());
+                        if let Some(obs) = &obs {
+                            obs.shard_migrate(
+                                stream_id,
+                                t,
+                                replay,
+                                t_mig.elapsed().as_nanos() as u64,
+                            );
+                        }
+                        index.insert(stream_id, slots.len());
+                        slots.push(Slot {
+                            sess,
+                            rung: 0,
+                            gen: gen_seq,
+                            outs: Vec::new(),
+                            pending: VecDeque::new(),
+                            closing: false,
+                        });
+                    }
+                    Err(e) => {
+                        if let Some(tx) = &live {
+                            let _ = tx.send(LiveEvent::ResumeFailed {
+                                id: stream_id,
+                                reason: format!("{e:#}"),
+                            });
+                        }
+                    }
+                }
+            }
+            LiveCmd::Forget { stream_id } => {
+                if let Some(i) = index.remove(&stream_id) {
+                    *pending_total -= slots[i].pending.len();
+                    let slot = slots.swap_remove(i);
+                    if let Some(moved) = slots.get(i) {
+                        index.insert(moved.sess.id, i);
+                    }
+                    if let Some(tx) = &live {
+                        let _ = tx.send(LiveEvent::Retired {
+                            id: slot.sess.id,
+                            metrics: slot.sess.metrics.clone(),
+                            rung: slot.rung,
+                        });
+                    }
+                    let _ = out_tx.send(Ok(WorkerMsg::Stream {
+                        id: slot.sess.id,
+                        metrics: slot.sess.metrics.clone(),
+                        outs: slot.outs,
+                        rung: slot.rung,
+                    }));
+                }
+            }
+        }
     };
 
     loop {
@@ -672,7 +959,7 @@ fn worker_loop(
                             }
                         }
                         Err(e) => {
-                            let _ = out_tx.send(Err(e));
+                            report_err(&live, &out_tx, e);
                             return;
                         }
                     }
@@ -685,11 +972,11 @@ fn worker_loop(
         //    channel keeps exerting backpressure on the dispatcher
         while open && pending_total < max_pending {
             match rx.try_recv() {
-                Ok(job) => enqueue(
+                Ok(cmd) => handle_cmd(
                     &mut slots,
                     &mut index,
                     &mut pending_total,
-                    job,
+                    cmd,
                     &ladder,
                     &weights,
                     gen_seq,
@@ -710,7 +997,7 @@ fn worker_loop(
                     match slot.sess.idle() {
                         Ok(worked) => did |= worked,
                         Err(e) => {
-                            let _ = out_tx.send(Err(e));
+                            report_err(&live, &out_tx, e);
                             return;
                         }
                     }
@@ -723,11 +1010,11 @@ fn worker_loop(
                 // block in short steps so a publish lands promptly even
                 // on a momentarily idle worker
                 match rx.recv_timeout(Duration::from_millis(2)) {
-                    Ok(job) => enqueue(
+                    Ok(cmd) => handle_cmd(
                         &mut slots,
                         &mut index,
                         &mut pending_total,
-                        job,
+                        cmd,
                         &ladder,
                         &weights,
                         gen_seq,
@@ -737,11 +1024,11 @@ fn worker_loop(
                 }
             } else {
                 match rx.recv() {
-                    Ok(job) => enqueue(
+                    Ok(cmd) => handle_cmd(
                         &mut slots,
                         &mut index,
                         &mut pending_total,
-                        job,
+                        cmd,
                         &ladder,
                         &weights,
                         gen_seq,
@@ -785,7 +1072,7 @@ fn worker_loop(
                     }
                     Ok(false) => {}
                     Err(e) => {
-                        let _ = out_tx.send(Err(e));
+                        report_err(&live, &out_tx, e);
                         return;
                     }
                 }
@@ -822,7 +1109,7 @@ fn worker_loop(
                         }
                         Ok(false) => {}
                         Err(e) => {
-                            let _ = out_tx.send(Err(e));
+                            report_err(&live, &out_tx, e);
                             return;
                         }
                     }
@@ -893,11 +1180,19 @@ fn worker_loop(
                         }
                         served += group.len() as u64;
                         for (&i, out) in group.iter().zip(outs_buf.drain(..)) {
-                            slots[i].outs.push(out);
+                            if let Some(tx) = &live {
+                                let _ = tx.send(LiveEvent::Out {
+                                    id: slots[i].sess.id,
+                                    seq: slots[i].sess.frames_seen() - 1,
+                                    frame: out,
+                                });
+                            } else {
+                                slots[i].outs.push(out);
+                            }
                         }
                     }
                     Err(e) => {
-                        let _ = out_tx.send(Err(e));
+                        report_err(&live, &out_tx, e);
                         return;
                     }
                 }
@@ -919,10 +1214,18 @@ fn worker_loop(
                                 obs.exec(slot.rung, phase, 1, ns);
                             }
                             served += 1;
-                            slot.outs.push(out);
+                            if let Some(tx) = &live {
+                                let _ = tx.send(LiveEvent::Out {
+                                    id: slot.sess.id,
+                                    seq: slot.sess.frames_seen() - 1,
+                                    frame: out,
+                                });
+                            } else {
+                                slot.outs.push(out);
+                            }
                         }
                         Err(e) => {
-                            let _ = out_tx.send(Err(e));
+                            report_err(&live, &out_tx, e);
                             return;
                         }
                     }
@@ -989,6 +1292,13 @@ fn worker_loop(
                 index.remove(&slot.sess.id);
                 if let Some(moved) = slots.get(i) {
                     index.insert(moved.sess.id, i);
+                }
+                if let Some(tx) = &live {
+                    let _ = tx.send(LiveEvent::Retired {
+                        id: slot.sess.id,
+                        metrics: slot.sess.metrics.clone(),
+                        rung: slot.rung,
+                    });
                 }
                 let _ = out_tx.send(Ok(WorkerMsg::Stream {
                     id: slot.sess.id,

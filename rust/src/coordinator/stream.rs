@@ -87,6 +87,87 @@ impl StreamSession {
         }
     }
 
+    /// Reconstruct a session mid-stream from replayed history — the
+    /// cross-process face of warm migration (DESIGN.md §9, §14).
+    ///
+    /// A shard receiving a `Migrate` message builds the session here:
+    /// `t` is the absolute frame counter the stream resumes at and
+    /// `history` its most recent input frames, oldest first.  The
+    /// frames replay through `engine` from zeroed states at the
+    /// stream's *absolute* phases (`(t - h + i) % period`), so the
+    /// re-primed states — and every subsequent output — are
+    /// bit-identical to a session that served the whole stream here.
+    /// Same-variant resume is valid at **any** `t`: phases are
+    /// absolute, so no phase-0 boundary is required (only
+    /// cross-variant switches need one; see
+    /// [`StreamSession::try_switch`]).
+    ///
+    /// Fails — constructing nothing — unless `history` is the
+    /// stream's full past (`h == t`) or at least the variant's
+    /// [`warmup_frames`].  The replayed frames are retained as the
+    /// new session's history, so the stream can move again later.
+    pub fn resume(
+        id: u64,
+        engine: Arc<CompiledVariant>,
+        weights: Arc<DeviceWeights>,
+        t: u64,
+        history: Vec<Vec<f32>>,
+    ) -> Result<Self> {
+        let h = history.len() as u64;
+        let warm = warmup_frames(&engine.manifest.config) as u64;
+        if h > t {
+            bail!(
+                "stream {id}: resume carries {h} history frames for a stream at t = {t}"
+            );
+        }
+        if h < t && h < warm {
+            bail!(
+                "stream {id}: {h} history frames cannot re-prime '{}' at t = {t} \
+                 (needs the full history or at least {warm} frames)",
+                engine.manifest.name
+            );
+        }
+        let period = engine.manifest.period as u64;
+        let mut states = engine.init_states();
+        let t0 = t - h;
+        let mut replay_macs = 0.0;
+        for (i, frame) in history.iter().enumerate() {
+            let phase = ((t0 + i as u64) % period) as usize;
+            engine.step(phase, frame, &mut states, &weights)?;
+            replay_macs += macs_at_phase(&engine.manifest, phase);
+        }
+        let mut metrics = StreamMetrics::new();
+        if t > 0 {
+            metrics.record_migration(replay_macs);
+            if engine.manifest.dtype == Dtype::Int8 {
+                metrics.record_macs_int8(replay_macs);
+            }
+        }
+        let fp = engine.has_fp_split();
+        let history_cap = history.len();
+        let scheduler = Scheduler::new_at(engine.manifest.period, fp, t);
+        Ok(StreamSession {
+            id,
+            engine,
+            weights,
+            states,
+            scheduler,
+            metrics,
+            precomputed: false,
+            history: history.into(),
+            history_cap,
+            pending_switch: None,
+            pending_weights: None,
+            obs: None,
+        })
+    }
+
+    /// The retained receptive-field history, oldest first (what a warm
+    /// migration of this session would replay).
+    pub fn history_frames(&self) -> impl Iterator<Item = &[f32]> {
+        self.history.iter().map(Vec::as_slice)
+    }
+
     /// Attach (or detach) a telemetry recorder.  The serving worker
     /// passes its own [`ObsHandle`] when the server runs with
     /// `--telemetry`, so the session's FP pre/rest spans land in that

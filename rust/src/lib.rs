@@ -31,6 +31,11 @@
 //! registry, and a versioned NDJSON health feed
 //! (`serve --telemetry`) — recorded into preallocated storage so the
 //! zero-allocation steady state holds with telemetry enabled.
+//! Scale-out ([`net`], DESIGN.md §14) puts that stack behind a
+//! versioned wire protocol (`soi.wire.v1`): a front-end with admission
+//! control and session affinity over N backend shards, zero-drop warm
+//! cross-shard migration via the §9 replay path, and a deterministic
+//! loopback transport for byte-level fault injection in tests.
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
@@ -42,6 +47,7 @@ pub mod coordinator;
 pub mod dsp;
 pub mod experiments;
 pub mod kernels;
+pub mod net;
 pub mod obs;
 pub mod pruning;
 pub mod quant;

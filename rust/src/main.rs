@@ -9,6 +9,9 @@
 //!   validate-feed <path>         schema-check a telemetry health feed
 //!   export-artifact <spec>       save weights as a versioned soi.artifact.v1 dir
 //!   inspect-artifact <dir>       verify every artifact digest, print a summary
+//!   serve-shard <variant>        run one backend shard over TCP (soi.wire.v1)
+//!   serve-front --shards a,b     run the front-end over a shard fleet
+//!   wire-smoke [variant]         front + 2 loopback shards vs single-process serve
 //!
 //! Common options: --artifacts DIR (default ./artifacts), --results DIR
 //! (default ./results), --n-eval N (default 6), --seed S, --streams N,
@@ -23,11 +26,15 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use soi::coordinator::{AdaptivePolicy, GenerationWatcher, Server, StreamSession};
 use soi::dsp::{frames, metrics, siggen};
 use soi::experiments::{self, Ctx};
+use soi::net::{
+    health_from_feed, run_shard, spawn_front, ClusterController, ClusterPolicy, FrontPolicy,
+    LoopbackHub, Msg, ShardConfig, ShardHealth, ShardLink, TcpConnector, TcpPort, WireClient,
+};
 use soi::obs::{self, Exporter, ObsConfig, Telemetry};
 use soi::runtime::{
     artifact, list_variants, synth, Artifact, CompiledVariant, Dtype, Manifest, Runtime,
@@ -196,6 +203,73 @@ fn run(argv: &[String]) -> Result<()> {
                 s.events
             );
             Ok(())
+        }
+        "serve-shard" => {
+            let name = args
+                .positional()
+                .get(1)
+                .context("serve-shard needs a variant name")?;
+            let dtype = Dtype::parse(&args.str_or("dtype", "f32"))?;
+            let opts = ShardOpts {
+                listen: args.str_or("listen", "127.0.0.1:7071"),
+                workers: args.usize_or("workers", 4).map_err(anyhow::Error::msg)?,
+                shard_id: args.u64_or("shard-id", 1).map_err(anyhow::Error::msg)?,
+                telemetry: args.get("telemetry").map(|v| {
+                    if v == "true" {
+                        "soi-shard-feed.ndjson".to_string()
+                    } else {
+                        v.to_string()
+                    }
+                }),
+                snapshot_ms: args.u64_or("snapshot-ms", 200).map_err(anyhow::Error::msg)?,
+            };
+            serve_shard(&artifacts, &spec_with_dtype(name, dtype), opts)
+        }
+        "serve-front" => {
+            let shards: Vec<String> = args
+                .str_or("shards", "")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if shards.is_empty() {
+                bail!("serve-front needs --shards host:port[,host:port..]");
+            }
+            let feeds: Vec<String> = args
+                .str_or("feeds", "")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let opts = FrontOpts {
+                listen: args.str_or("listen", "127.0.0.1:7070"),
+                max_sessions: args.usize_or("max-sessions", 64).map_err(anyhow::Error::msg)?,
+                balance_ms: args.u64_or("balance-ms", 500).map_err(anyhow::Error::msg)?,
+            };
+            serve_front(shards, feeds, opts)
+        }
+        "wire-smoke" => {
+            let variant = args
+                .positional()
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("scc2")
+                .to_string();
+            let feeds: Vec<String> = args
+                .str_or("feeds", "")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let opts = SmokeOpts {
+                streams: args.usize_or("streams", 4).map_err(anyhow::Error::msg)?,
+                frames: args.usize_or("frames", 96).map_err(anyhow::Error::msg)?,
+                workers: args.usize_or("workers", 2).map_err(anyhow::Error::msg)?,
+                seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+                snapshot_ms: args.u64_or("snapshot-ms", 50).map_err(anyhow::Error::msg)?,
+                feeds,
+            };
+            wire_smoke(&artifacts, &variant, opts)
         }
         "denoise" => {
             let name = args.positional().get(1).context("denoise needs a variant name")?;
@@ -701,6 +775,323 @@ fn denoise_once(
     Ok(())
 }
 
+/// Options of the `serve-shard` subcommand.
+struct ShardOpts {
+    /// TCP listen address (`--listen`, default `127.0.0.1:7071`).
+    listen: String,
+    workers: usize,
+    /// Operator-assigned shard id (`--shard-id`), exported on the
+    /// health feed so the cluster controller can attribute it.
+    shard_id: u64,
+    /// NDJSON health-feed path (`--telemetry[=PATH]`).
+    telemetry: Option<String>,
+    snapshot_ms: u64,
+}
+
+/// Run one backend shard over TCP until the front-end drains it
+/// (DESIGN.md §14): a `coordinator::Server` worker pool behind a
+/// `soi.wire.v1` endpoint, with §9 warm resume of migrated sessions.
+fn serve_shard(artifacts: &std::path::Path, spec: &str, opts: ShardOpts) -> Result<()> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let cv = Arc::new(load_variant(rt, artifacts, spec)?);
+    let mut server = Server::new(cv, opts.workers);
+    let exporter = match &opts.telemetry {
+        Some(path) => {
+            let tel = Telemetry::new(ObsConfig::default());
+            let feed = PathBuf::from(path);
+            let exporter = Exporter::start(tel.clone(), &feed, opts.snapshot_ms)
+                .with_context(|| format!("creating health feed {path}"))?;
+            server.telemetry = Some(tel);
+            Some(exporter)
+        }
+        None => None,
+    };
+    let port = TcpPort::bind(&opts.listen).map_err(|e| anyhow!("bind {}: {e}", opts.listen))?;
+    let addr = port.local_addr().map_err(|e| anyhow!("local_addr: {e}"))?;
+    println!(
+        "shard {} serving '{spec}' on {addr}: {} workers (whole-shard drain stops it)",
+        opts.shard_id, opts.workers
+    );
+    let report = run_shard(&server, &port, ShardConfig { shard_id: opts.shard_id })?;
+    if let Some(exporter) = exporter {
+        let path = exporter.path().display().to_string();
+        let stats = exporter.finish().context("finishing the health feed")?;
+        eprintln!("telemetry: {} snapshots, {} lines -> {path}", stats.snapshots, stats.lines);
+    }
+    println!(
+        "shard {}: {} conns, {} frames in / {} out, {} resumes, {} drains, {} wire errors",
+        opts.shard_id,
+        report.conns,
+        report.frames_in,
+        report.frames_out,
+        report.resumes,
+        report.drains,
+        report.wire_errs
+    );
+    Ok(())
+}
+
+/// Options of the `serve-front` subcommand.
+struct FrontOpts {
+    /// TCP listen address (`--listen`, default `127.0.0.1:7070`).
+    listen: String,
+    /// Fleet-wide session cap (`--max-sessions`).
+    max_sessions: usize,
+    /// Health-feed poll interval, ms (`--balance-ms`).
+    balance_ms: u64,
+}
+
+/// Run the TCP front-end over an already-running shard fleet.  With
+/// `--feeds`, poll each shard's `soi.obs.v1` health feed and let the
+/// cluster controller rebalance sessions across shards by zero-drop
+/// warm migration (DESIGN.md §14).
+fn serve_front(shards: Vec<String>, feeds: Vec<String>, opts: FrontOpts) -> Result<()> {
+    let links: Vec<ShardLink> = shards
+        .iter()
+        .map(|addr| ShardLink {
+            name: addr.clone(),
+            transport: Box::new(TcpConnector::new(addr.clone())),
+        })
+        .collect();
+    let port = TcpPort::bind(&opts.listen).map_err(|e| anyhow!("bind {}: {e}", opts.listen))?;
+    let addr = port.local_addr().map_err(|e| anyhow!("local_addr: {e}"))?;
+    let policy = FrontPolicy { max_sessions: opts.max_sessions };
+    let handle = spawn_front(Box::new(port), links, policy)?;
+    println!(
+        "front on {addr}: {} shards {shards:?}, max {} sessions (ctrl-c to stop)",
+        shards.len(),
+        opts.max_sessions
+    );
+    if feeds.is_empty() {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    println!("balancing over {} feeds every {} ms", feeds.len(), opts.balance_ms);
+    let mut controller = ClusterController::new(ClusterPolicy::default());
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(opts.balance_ms));
+        let healths: Vec<ShardHealth> = feeds
+            .iter()
+            .enumerate()
+            .map(|(i, path)| {
+                std::fs::read_to_string(path)
+                    .ok()
+                    .and_then(|text| health_from_feed(i, &text).ok())
+                    .unwrap_or(ShardHealth {
+                        shard: i,
+                        reachable: false,
+                        streams: 0,
+                        queue_depth: 0,
+                        p99_us: 0,
+                    })
+            })
+            .collect();
+        if let Some(d) = controller.observe(&healths) {
+            eprintln!(
+                "front: rebalancing one session off shard {} onto {} (backlog {}, p99 {} us)",
+                d.from, d.to, d.backlog, d.p99_us
+            );
+            handle.rebalance(d.from, d.to)?;
+        }
+    }
+}
+
+/// Options of the `wire-smoke` subcommand.
+struct SmokeOpts {
+    streams: usize,
+    frames: usize,
+    workers: usize,
+    seed: u64,
+    snapshot_ms: u64,
+    /// Per-shard NDJSON health-feed paths (`--feeds a,b`; optional).
+    feeds: Vec<String>,
+}
+
+/// Collect `FrameOut`s for `sid` into `got` until it holds `upto`
+/// frames; any fleet `Err`, early close, or decode fault fails.
+fn collect_session_outputs(
+    client: &mut WireClient,
+    sid: u64,
+    got: &mut Vec<Vec<f32>>,
+    upto: usize,
+) -> Result<()> {
+    while got.len() < upto {
+        match client.recv() {
+            Ok(Some(Msg::FrameOut { session, samples, .. })) if session == sid => {
+                got.push(samples);
+            }
+            Ok(Some(Msg::Err { code, detail, .. })) => {
+                bail!("fleet error {}: {detail}", code.name());
+            }
+            Ok(Some(_)) => {}
+            Ok(None) => bail!("fleet closed after {} of {upto} outputs", got.len()),
+            Err(e) => bail!("recv: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// End-to-end sharded-serving smoke (what CI runs): a front-end plus
+/// two loopback shards serve deterministic synthetic streams, one
+/// session warm-migrates across shards mid-stream, and every output
+/// must be bit-identical to single-process serving.  Exits nonzero on
+/// any mismatch, dropped frame, or missed migration (DESIGN.md §14).
+fn wire_smoke(artifacts: &std::path::Path, spec: &str, opts: SmokeOpts) -> Result<()> {
+    const N_SHARDS: usize = 2;
+    let rt = Arc::new(Runtime::cpu()?);
+    let cv = Arc::new(load_variant(rt, artifacts, spec)?);
+    let feat = cv.manifest.config.feat;
+
+    // Deterministic synthetic inputs, plus one extra stream that is
+    // driven manually through a mid-stream migration.
+    let mut rng = Rng::new(opts.seed);
+    let mut inputs: Vec<Vec<Vec<f32>>> = Vec::with_capacity(opts.streams + 1);
+    for _ in 0..opts.streams + 1 {
+        let (noisy, _) = siggen::denoise_pair(&mut rng, feat * opts.frames, siggen::FS);
+        let (cols, _) = frames(&noisy, feat);
+        inputs.push(cols);
+    }
+
+    // Single-process reference: the exact outputs the fleet must match.
+    let reference = {
+        let server = Server::new(cv.clone(), opts.workers);
+        let report = server.run(&inputs)?;
+        let mut outs = Vec::with_capacity(inputs.len());
+        for sid in 0..inputs.len() as u64 {
+            outs.push(report.outputs.get(&sid).cloned().unwrap_or_default());
+        }
+        outs
+    };
+
+    // Two shards over loopback hubs, each with its own worker pool
+    // (and, with --feeds, its own soi.obs.v1 exporter).
+    let mut hubs = Vec::with_capacity(N_SHARDS);
+    let mut shard_threads = Vec::with_capacity(N_SHARDS);
+    let mut exporters = Vec::new();
+    for i in 0..N_SHARDS {
+        let hub = LoopbackHub::new();
+        let mut server = Server::new(cv.clone(), opts.workers);
+        if let Some(path) = opts.feeds.get(i) {
+            let tel = Telemetry::new(ObsConfig::default());
+            let feed = PathBuf::from(path);
+            let exporter = Exporter::start(tel.clone(), &feed, opts.snapshot_ms)
+                .with_context(|| format!("creating health feed {path}"))?;
+            server.telemetry = Some(tel);
+            exporters.push(exporter);
+        }
+        let shard_hub = hub.clone();
+        let cfg = ShardConfig { shard_id: i as u64 + 1 };
+        shard_threads.push(std::thread::spawn(move || run_shard(&server, &shard_hub, cfg)));
+        hubs.push(hub);
+    }
+
+    let links: Vec<ShardLink> = hubs
+        .iter()
+        .enumerate()
+        .map(|(i, hub)| ShardLink {
+            name: format!("shard{i}"),
+            transport: Box::new(hub.clone()),
+        })
+        .collect();
+    let front_hub = LoopbackHub::new();
+    let policy = FrontPolicy { max_sessions: opts.streams + 1 };
+    let handle = spawn_front(Box::new(front_hub.clone()), links, policy)?;
+
+    let mut client = WireClient::connect(&front_hub)?;
+    if client.feat() != feat {
+        bail!("fleet serves feat {}, variant has {feat}", client.feat());
+    }
+
+    // Phase 1: the batch streams, spread across both shards.
+    let batch = &inputs[..opts.streams];
+    let served = client.serve_streams(batch)?;
+    let mut mismatched = 0usize;
+    for sid in 0..opts.streams {
+        if served[sid] != reference[sid] {
+            mismatched += 1;
+            eprintln!("wire-smoke: session {sid} diverged from single-process serving");
+        }
+    }
+
+    // Phase 2: one fresh session, warm-migrated mid-stream.  Waiting
+    // for the first half's outputs first makes both nominations land
+    // on a quiet session, so wherever the front homed it, nudging it
+    // at both shards executes at least one real move; the outputs must
+    // be unchanged by the move.
+    let sid = opts.streams as u64;
+    let mig = &inputs[opts.streams];
+    let half = mig.len() / 2;
+    for (i, samples) in mig.iter().take(half).enumerate() {
+        let msg = Msg::Frame {
+            session: sid,
+            seq: i as u64,
+            last: false,
+            samples: samples.clone(),
+        };
+        client.send(&msg).map_err(|e| anyhow!("send: {e}"))?;
+    }
+    let mut got: Vec<Vec<f32>> = Vec::with_capacity(mig.len());
+    collect_session_outputs(&mut client, sid, &mut got, half)?;
+    handle.migrate(sid, 0)?;
+    handle.migrate(sid, 1)?;
+    for (i, samples) in mig.iter().enumerate().skip(half) {
+        let msg = Msg::Frame {
+            session: sid,
+            seq: i as u64,
+            last: i + 1 == mig.len(),
+            samples: samples.clone(),
+        };
+        client.send(&msg).map_err(|e| anyhow!("send: {e}"))?;
+    }
+    collect_session_outputs(&mut client, sid, &mut got, mig.len())?;
+    if got != reference[opts.streams] {
+        mismatched += 1;
+        eprintln!("wire-smoke: migrated session diverged from single-process serving");
+    }
+
+    client.shutdown();
+    let front = handle.stop()?;
+    let mut shard_frames_out = 0u64;
+    let mut resumes = 0u64;
+    for (i, t) in shard_threads.into_iter().enumerate() {
+        let report = t.join().map_err(|_| anyhow!("shard {i} panicked"))??;
+        shard_frames_out += report.frames_out;
+        resumes += report.resumes;
+    }
+    for exporter in exporters {
+        let path = exporter.path().display().to_string();
+        let stats = exporter.finish().context("finishing a shard health feed")?;
+        eprintln!("telemetry: {} snapshots, {} lines -> {path}", stats.snapshots, stats.lines);
+    }
+    println!(
+        "wire-smoke: {} sessions x {} frames over {N_SHARDS} shards — {} shard frames out, \
+         {} forwarded, {} migrations ({} shard resumes), {} wire errors",
+        opts.streams + 1,
+        opts.frames,
+        shard_frames_out,
+        front.frames_out,
+        front.migrations,
+        resumes,
+        front.wire_errs
+    );
+    if mismatched > 0 {
+        bail!("{mismatched} sessions diverged from single-process serving");
+    }
+    if front.migrations == 0 || resumes == 0 {
+        bail!(
+            "no warm migration happened (front {} migrations, shard resumes {resumes})",
+            front.migrations
+        );
+    }
+    let expected: usize = reference.iter().map(Vec::len).sum();
+    if front.frames_out != expected as u64 {
+        bail!("front forwarded {} of {expected} outputs — frames dropped", front.frames_out);
+    }
+    println!("wire-smoke: PASS — sharded serving is bit-identical to single-process serving");
+    Ok(())
+}
+
 const HELP: &str = "soi — Scattered Online Inference coordinator
 usage: soi <command> [options]
   list                          list built artifact variants
@@ -744,6 +1135,26 @@ usage: soi <command> [options]
                   load through the verifying reader (every digest
                   checked) and print a summary; exits nonzero with a
                   typed error on any corruption — what CI runs
+  serve-shard <variant> [--listen HOST:PORT] [--workers N] [--shard-id N]
+                  [--telemetry[=PATH]] [--snapshot-ms N] [--dtype f32|int8]
+                  run one backend shard over TCP (soi.wire.v1, DESIGN.md
+                  s14): a coordinator worker pool behind a wire endpoint
+                  with s9 warm resume of migrated sessions; a whole-shard
+                  Drain from the front stops it gracefully
+  serve-front --shards HOST:PORT[,HOST:PORT..] [--listen HOST:PORT]
+                  [--max-sessions N] [--feeds P1,P2..] [--balance-ms N]
+                  run the front-end: admission control, session->shard
+                  affinity, zero-drop warm cross-shard migration, and
+                  shard-loss recovery by s9 replay.  With --feeds, polls
+                  each shard's soi.obs.v1 health feed and rebalances
+                  sessions off hot shards (cluster controller)
+  wire-smoke [variant] [--streams N] [--frames N] [--workers N] [--seed S]
+                  [--feeds P1,P2] [--snapshot-ms N]
+                  in-process scale-out smoke (what CI runs): front + 2
+                  loopback shards serve deterministic streams, one session
+                  warm-migrates mid-stream, and every output must be
+                  bit-identical to single-process serving; exits nonzero
+                  on any mismatch, dropped frame, or missed migration
   denoise <variant> [--frames N] [--dtype f32|int8]
 options: --artifacts DIR  --results DIR  --n-eval N  --seed S
 serve/denoise accept preset specs (stmc, scc<p>, scc<p>_<q>, sscc<p>,

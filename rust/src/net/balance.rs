@@ -1,0 +1,354 @@
+//! Cluster-level load balancing: the fleet sibling of
+//! [`crate::coordinator::LoadController`].
+//!
+//! Where the per-worker controller moves its streams *down a ladder*
+//! (cheaper variants) under overload, the [`ClusterController`] moves
+//! streams *across shards*: it observes one [`ShardHealth`] per shard
+//! — distilled from each shard's `soi.obs.v1` NDJSON health feed by
+//! [`health_from_feed`] — and, with the same patience/cooldown
+//! hysteresis discipline, nominates one stream migration from the
+//! hottest shard to the calmest.  The decision is pure logic; the
+//! front-end executes it with a zero-drop warm migration
+//! (DESIGN.md §14).
+//!
+//! Like the worker controller after its recover-side fix, the
+//! cooldown gate runs *before* any patience accrual, so patience can
+//! only be earned from observations made outside the cooldown window.
+
+use crate::util::json::{self, Json};
+use crate::util::stats::Histogram;
+
+/// One shard's distilled health, as the cluster controller sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardHealth {
+    /// Shard index (position in the front-end's shard table).
+    pub shard: usize,
+    /// False once the front-end lost the shard's connection.
+    pub reachable: bool,
+    /// Live streams on the shard ([`crate::obs::Gauge::StreamsLive`]).
+    pub streams: u64,
+    /// Backlog after the latest round ([`crate::obs::Gauge::QueueDepth`]).
+    pub queue_depth: u64,
+    /// p99 exec wall time, µs, over the shard's merged exec histograms.
+    pub p99_us: u64,
+}
+
+/// Hysteresis thresholds for [`ClusterController`].  Mirrors
+/// [`crate::coordinator::AdaptivePolicy`]'s shape: pressure and calm
+/// bars, patience before acting, cooldown after.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterPolicy {
+    /// Backlog at or above which a shard counts as hot.
+    pub queue_high: u64,
+    /// Backlog at or below which a shard can accept a stream.
+    pub queue_low: u64,
+    /// Minimum stream-count gap (hot minus calm) before moving; stops
+    /// the controller ping-ponging a single stream between shards.
+    pub imbalance_min: u64,
+    /// Consecutive hot observations required before a migration.
+    pub patience: u32,
+    /// Observations ignored after each decision (the migration itself
+    /// perturbs both shards; judging it immediately double-triggers).
+    pub cooldown: u32,
+}
+
+impl Default for ClusterPolicy {
+    fn default() -> Self {
+        ClusterPolicy {
+            queue_high: 8,
+            queue_low: 1,
+            imbalance_min: 2,
+            patience: 3,
+            cooldown: 4,
+        }
+    }
+}
+
+/// A nominated cross-shard stream migration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterDecision {
+    /// Shard to take a stream from (the hot one).
+    pub from: usize,
+    /// Shard to move it to (the calm one).
+    pub to: usize,
+    /// The hot shard's backlog at decision time.
+    pub backlog: u64,
+    /// The hot shard's p99 exec µs at decision time.
+    pub p99_us: u64,
+}
+
+/// The cluster rebalancer.  Call [`ClusterController::observe`] once
+/// per health-poll tick; it returns at most one decision, then holds
+/// its cooldown.
+#[derive(Debug)]
+pub struct ClusterController {
+    policy: ClusterPolicy,
+    hot_rounds: u32,
+    cooldown_left: u32,
+}
+
+impl ClusterController {
+    /// A controller over `policy`.
+    pub fn new(policy: ClusterPolicy) -> Self {
+        ClusterController {
+            policy,
+            hot_rounds: 0,
+            cooldown_left: 0,
+        }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> &ClusterPolicy {
+        &self.policy
+    }
+
+    /// One observation of the fleet.  Returns a migration nomination
+    /// when the hottest reachable shard has held `queue_high` backlog
+    /// for `patience` consecutive observations while some other
+    /// reachable shard sits at or below `queue_low` with at least
+    /// `imbalance_min` fewer streams.  During cooldown nothing is
+    /// observed at all — patience restarts from zero afterwards.
+    pub fn observe(&mut self, shards: &[ShardHealth]) -> Option<ClusterDecision> {
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            self.hot_rounds = 0;
+            return None;
+        }
+        let hot = shards
+            .iter()
+            .filter(|s| s.reachable)
+            .max_by_key(|s| (s.queue_depth, s.p99_us))?;
+        let calm = shards
+            .iter()
+            .filter(|s| s.reachable && s.shard != hot.shard)
+            .min_by_key(|s| (s.queue_depth, s.streams))?;
+        let pressured = hot.queue_depth >= self.policy.queue_high && hot.streams > 0;
+        let room = calm.queue_depth <= self.policy.queue_low
+            && hot.streams >= calm.streams + self.policy.imbalance_min;
+        if pressured && room {
+            self.hot_rounds += 1;
+            if self.hot_rounds >= self.policy.patience {
+                self.hot_rounds = 0;
+                self.cooldown_left = self.policy.cooldown;
+                return Some(ClusterDecision {
+                    from: hot.shard,
+                    to: calm.shard,
+                    backlog: hot.queue_depth,
+                    p99_us: hot.p99_us,
+                });
+            }
+        } else {
+            self.hot_rounds = 0;
+        }
+        None
+    }
+}
+
+/// Distill one shard's `soi.obs.v1` NDJSON feed into a
+/// [`ShardHealth`]: gauges come from the latest `snapshot` record,
+/// and p99 from the latest-seq `exec_ns` `hist` records re-ingested
+/// bucket by bucket ([`Histogram::add_bucket`]) and merged — exact,
+/// because the feed exports the histogram's own log-linear buckets.
+/// Lines that fail to parse are skipped (a live feed's last line may
+/// be mid-write); an empty or snapshot-less feed is an error.
+pub fn health_from_feed(shard: usize, text: &str) -> Result<ShardHealth, String> {
+    fn get_u64(v: &Json, key: &str) -> Option<u64> {
+        v.get(key).and_then(Json::as_f64).map(|f| f as u64)
+    }
+    let mut best_seq: Option<u64> = None;
+    let mut streams = 0u64;
+    let mut queue_depth = 0u64;
+    // (seq, bucket idx, count) of every exec_ns hist line
+    let mut hist_lines: Vec<(u64, usize, u64)> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = json::parse(line) else { continue };
+        let Some(ty) = v.get("type").and_then(|t| t.as_str()) else {
+            continue;
+        };
+        let seq = get_u64(&v, "seq").unwrap_or(0);
+        match ty {
+            "snapshot" => {
+                if seq >= best_seq.unwrap_or(0) {
+                    best_seq = Some(seq);
+                    if let Some(g) = v.get("gauges") {
+                        streams = get_u64(g, "streams_live").unwrap_or(0);
+                        queue_depth = get_u64(g, "queue_depth").unwrap_or(0);
+                    }
+                }
+            }
+            "hist" => {
+                if v.get("name").and_then(|n| n.as_str()) == Some("exec_ns") {
+                    if let Some(buckets) = v.get("buckets").and_then(Json::as_arr) {
+                        for b in buckets {
+                            let Some(pair) = b.as_arr() else { continue };
+                            if pair.len() == 2 {
+                                if let (Some(i), Some(c)) = (
+                                    pair[0].as_usize(),
+                                    pair[1].as_f64().map(|f| f as u64),
+                                ) {
+                                    hist_lines.push((seq, i, c));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let Some(latest) = best_seq else {
+        return Err(format!("shard {shard}: feed has no snapshot record"));
+    };
+    // Feed histograms are cumulative; the latest seq's records are the
+    // totals.  (Hist records only render at seqs with exec activity,
+    // so take the newest seq that has any, not `latest` itself.)
+    let mut p99_us = 0u64;
+    if let Some(hseq) = hist_lines.iter().map(|(s, _, _)| *s).max() {
+        let mut h = Histogram::new();
+        for &(s, i, c) in &hist_lines {
+            if s == hseq {
+                h.add_bucket(i, c);
+            }
+        }
+        p99_us = h.p99() / 1000;
+    }
+    Ok(ShardHealth {
+        shard,
+        reachable: true,
+        streams,
+        queue_depth,
+        p99_us,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(hot_q: u64, calm_q: u64) -> Vec<ShardHealth> {
+        vec![
+            ShardHealth {
+                shard: 0,
+                reachable: true,
+                streams: 6,
+                queue_depth: hot_q,
+                p99_us: 900,
+            },
+            ShardHealth {
+                shard: 1,
+                reachable: true,
+                streams: 2,
+                queue_depth: calm_q,
+                p99_us: 100,
+            },
+        ]
+    }
+
+    fn quick() -> ClusterPolicy {
+        ClusterPolicy {
+            queue_high: 4,
+            queue_low: 1,
+            imbalance_min: 2,
+            patience: 2,
+            cooldown: 3,
+        }
+    }
+
+    #[test]
+    fn patience_gates_the_first_decision() {
+        let mut c = ClusterController::new(quick());
+        assert_eq!(c.observe(&fleet(8, 0)), None, "patience 1 of 2");
+        let d = c.observe(&fleet(8, 0)).expect("fires at patience");
+        assert_eq!((d.from, d.to), (0, 1));
+        assert_eq!(d.backlog, 8);
+    }
+
+    #[test]
+    fn cooldown_blocks_and_resets_patience() {
+        let mut c = ClusterController::new(quick());
+        c.observe(&fleet(8, 0));
+        c.observe(&fleet(8, 0)).expect("decision");
+        // cooldown 3: nothing fires, and patience earned inside the
+        // window is discarded
+        for i in 0..3 {
+            assert_eq!(c.observe(&fleet(9, 0)), None, "cooldown round {i}");
+        }
+        assert_eq!(c.observe(&fleet(9, 0)), None, "patience restarts at 0");
+        assert!(c.observe(&fleet(9, 0)).is_some(), "fresh patience earned");
+    }
+
+    #[test]
+    fn calm_fleet_never_moves() {
+        let mut c = ClusterController::new(quick());
+        for _ in 0..10 {
+            assert_eq!(c.observe(&fleet(1, 0)), None);
+        }
+    }
+
+    #[test]
+    fn no_room_on_target_blocks_the_move() {
+        let mut c = ClusterController::new(quick());
+        for _ in 0..10 {
+            // both shards backed up: nowhere to move to
+            assert_eq!(c.observe(&fleet(8, 5)), None);
+        }
+    }
+
+    #[test]
+    fn unreachable_shards_are_invisible() {
+        let mut c = ClusterController::new(quick());
+        let mut shards = fleet(8, 0);
+        shards[1].reachable = false;
+        for _ in 0..10 {
+            assert_eq!(c.observe(&shards), None, "no reachable target");
+        }
+    }
+
+    #[test]
+    fn imbalance_floor_prevents_ping_pong() {
+        let mut c = ClusterController::new(quick());
+        let mut shards = fleet(8, 0);
+        shards[0].streams = 3;
+        shards[1].streams = 2; // gap 1 < imbalance_min 2
+        for _ in 0..10 {
+            assert_eq!(c.observe(&shards), None);
+        }
+    }
+
+    #[test]
+    fn health_distills_a_real_feed() {
+        use crate::obs::{take_snapshot, Gauge, ObsConfig, Telemetry};
+        let tel = Telemetry::new(ObsConfig { ring_capacity: 64 });
+        let h = tel.worker(0);
+        for _ in 0..200 {
+            h.exec(0, 1, 2, 1_000_000); // 1 ms
+        }
+        h.with(|w| {
+            w.gauge_set(Gauge::StreamsLive, 5);
+            w.gauge_set(Gauge::QueueDepth, 3);
+        });
+        let mut out = String::new();
+        take_snapshot(&tel).render_ndjson(0, 0, &mut out);
+        let hh = health_from_feed(2, &out).expect("feed distills");
+        assert_eq!(hh.shard, 2);
+        assert!(hh.reachable);
+        assert_eq!(hh.streams, 5);
+        assert_eq!(hh.queue_depth, 3);
+        // log-linear buckets: p99 lands in the 1 ms bucket's bound
+        assert!(
+            hh.p99_us >= 900 && hh.p99_us <= 1200,
+            "p99_us = {}",
+            hh.p99_us
+        );
+    }
+
+    #[test]
+    fn snapshotless_feed_is_an_error() {
+        assert!(health_from_feed(0, "").is_err());
+        assert!(health_from_feed(0, "not json\n").is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! A minimal wire client: the reference peer for the front-end and
+//! shards, used by the integration tests and the `wire-smoke` CLI.
+//!
+//! [`WireClient::connect`] performs the `Hello` handshake and records
+//! the fleet's model shape.  [`WireClient::send`] / [`WireClient::recv`]
+//! expose raw messages so fault-injection tests can script exact
+//! protocol exchanges; [`WireClient::serve_streams`] drives whole
+//! streams through the fleet with the same round-robin interleaving as
+//! single-process [`crate::coordinator::Server::run`], so the two
+//! paths are bit-comparable.
+
+use std::thread;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::transport::{Transport, WireRead, WireWrite};
+use super::wire::{role, write_msg, FrameReader, Msg, WireError, WIRE_VERSION};
+
+/// A connected, greeted wire client.
+pub struct WireClient {
+    writer: Box<dyn WireWrite>,
+    reader: Option<FrameReader<Box<dyn WireRead>>>,
+    feat: u32,
+    period: u32,
+    warmup: u32,
+}
+
+impl WireClient {
+    /// Dial `transport`, exchange `Hello`s, and record the server's
+    /// model shape.  Fails on version skew or a non-hello greeting.
+    pub fn connect(transport: &dyn Transport) -> Result<Self> {
+        let (r, mut w) = transport.connect().map_err(|e| anyhow!("connect: {e}"))?;
+        let hello = Msg::Hello {
+            version: WIRE_VERSION,
+            role: role::CLIENT,
+            feat: 0,
+            period: 0,
+            warmup: 0,
+        };
+        write_msg(&mut w, &hello).map_err(|e| anyhow!("hello: {e}"))?;
+        let mut reader = FrameReader::new(r);
+        let ack = reader
+            .next_msg()
+            .map_err(|e| anyhow!("handshake: {e}"))?
+            .context("server closed during handshake")?;
+        let Msg::Hello {
+            role: r_role,
+            feat,
+            period,
+            warmup,
+            ..
+        } = ack
+        else {
+            bail!("server greeted with {}", ack.kind());
+        };
+        if r_role != role::FRONT && r_role != role::SHARD {
+            bail!("server claims role {r_role}, expected front or shard");
+        }
+        Ok(WireClient {
+            writer: w,
+            reader: Some(reader),
+            feat,
+            period,
+            warmup,
+        })
+    }
+
+    /// Frame width the fleet serves.
+    pub fn feat(&self) -> usize {
+        self.feat as usize
+    }
+
+    /// The fleet's schedule period.
+    pub fn period(&self) -> usize {
+        self.period as usize
+    }
+
+    /// The fleet's §9 replay window, in frames.
+    pub fn warmup(&self) -> usize {
+        self.warmup as usize
+    }
+
+    /// Send one raw message.
+    pub fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
+        write_msg(&mut self.writer, msg)?;
+        Ok(())
+    }
+
+    /// Block for the next raw message; `Ok(None)` is a clean close.
+    pub fn recv(&mut self) -> Result<Option<Msg>, WireError> {
+        self.reader
+            .as_mut()
+            .expect("reader present between serve_streams calls")
+            .next_msg()
+    }
+
+    /// Close the write half; the server observes EOF and retires this
+    /// connection's sessions.
+    pub fn shutdown(&mut self) {
+        self.writer.shutdown();
+    }
+
+    /// Serve whole streams: stream `i` becomes session `i`, frames are
+    /// interleaved round-robin across streams (the same admission
+    /// order as single-process serving), and the call returns each
+    /// session's outputs in order once every input frame has produced
+    /// one.  Any server-side `Err` message fails the call.
+    pub fn serve_streams(&mut self, streams: &[Vec<Vec<f32>>]) -> Result<Vec<Vec<Vec<f32>>>> {
+        let n = streams.len();
+        let expected: usize = streams.iter().map(Vec::len).sum();
+        let reader = self.reader.take().expect("reader present");
+        let collector = thread::spawn(move || collect_outputs(reader, n, expected));
+
+        let max_len = streams.iter().map(Vec::len).max().unwrap_or(0);
+        let mut send_failure = None;
+        'send: for i in 0..max_len {
+            for (sid, frames) in streams.iter().enumerate() {
+                if i >= frames.len() {
+                    continue;
+                }
+                let msg = Msg::Frame {
+                    session: sid as u64,
+                    seq: i as u64,
+                    last: i + 1 == frames.len(),
+                    samples: frames[i].clone(),
+                };
+                if let Err(e) = write_msg(&mut self.writer, &msg) {
+                    // Keep draining the reader: the server's reply
+                    // usually explains the refusal better than a
+                    // broken-pipe write error does.
+                    send_failure = Some(anyhow!("send: {e}"));
+                    break 'send;
+                }
+            }
+        }
+
+        let (reader, outcome) = collector.join().map_err(|_| anyhow!("reader panicked"))?;
+        self.reader = Some(reader);
+        match outcome {
+            Ok(outs) => Ok(outs),
+            Err(e) => Err(send_failure.unwrap_or(e)),
+        }
+    }
+}
+
+type TakenReader = FrameReader<Box<dyn WireRead>>;
+
+/// Collect exactly `expected` outputs across `n` sessions, or explain
+/// why the stream ended first.
+fn collect_outputs(
+    mut reader: TakenReader,
+    n: usize,
+    expected: usize,
+) -> (TakenReader, Result<Vec<Vec<Vec<f32>>>>) {
+    let mut outs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+    let mut got = 0usize;
+    while got < expected {
+        match reader.next_msg() {
+            Ok(Some(Msg::FrameOut {
+                session, samples, ..
+            })) => {
+                let sid = session as usize;
+                if sid >= n {
+                    return (reader, Err(anyhow!("output for unknown session {session}")));
+                }
+                outs[sid].push(samples);
+                got += 1;
+            }
+            Ok(Some(Msg::Err {
+                code,
+                session,
+                detail,
+            })) => {
+                let e = anyhow!("server error {} on session {session}: {detail}", code.name());
+                return (reader, Err(e));
+            }
+            Ok(Some(other)) => {
+                return (reader, Err(anyhow!("unexpected {} mid-serve", other.kind())));
+            }
+            Ok(None) => {
+                let e = anyhow!("server closed after {got} of {expected} outputs");
+                return (reader, Err(e));
+            }
+            Err(e) => return (reader, Err(anyhow!("recv: {e}"))),
+        }
+    }
+    (reader, Ok(outs))
+}

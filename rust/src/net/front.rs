@@ -1,0 +1,1020 @@
+//! The scale-out front-end: admission control, session affinity, and
+//! warm cross-shard migration over N backend shards (DESIGN.md §14).
+//!
+//! One router thread owns every connection writer and the session
+//! table; per-connection and per-shard reader threads feed it a single
+//! event queue, so all protocol decisions are serialized and the data
+//! path needs no locks.  Each session is pinned to one shard
+//! (affinity); the front keeps, per session, the last `warmup` *acked*
+//! frames plus everything sent-but-unacked, which is exactly the state
+//! needed to re-create the session on another shard by §9 replay:
+//!
+//! * **planned migration** ([`FrontHandle::migrate`]) holds new input
+//!   until the shard acks everything outstanding, then moves with
+//!   `Migrate { t: acked, history }` — zero frames dropped, outputs
+//!   bit-identical to never having moved;
+//! * **shard loss** re-homes every orphaned session the same way and
+//!   then re-sends the unacked tail, because the dead shard will never
+//!   emit those outputs.
+//!
+//! Faults on one connection — truncated frames, version skew, a
+//! mid-stream disconnect — answer with one typed `Err` (or just drop
+//! that connection) and never touch sibling sessions.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::transport::{Listener, Transport, WireWrite};
+use super::wire::{role, write_msg, ErrCode, FrameReader, Msg, WireError, DRAIN_ALL, WIRE_VERSION};
+
+/// One backend shard as the front-end sees it: a name for logs and a
+/// way to reach it.
+pub struct ShardLink {
+    /// Human-readable shard name (logs and errors only).
+    pub name: String,
+    /// How to reach the shard.
+    pub transport: Box<dyn Transport>,
+}
+
+/// Front-end admission policy.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontPolicy {
+    /// Sessions admitted across the whole fleet; the next new session
+    /// is refused with [`ErrCode::AdmissionDenied`].
+    pub max_sessions: usize,
+}
+
+impl Default for FrontPolicy {
+    fn default() -> Self {
+        FrontPolicy { max_sessions: 64 }
+    }
+}
+
+/// What the front-end counted over its lifetime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrontReport {
+    /// Client connections accepted.
+    pub conns: u64,
+    /// Sessions admitted.
+    pub admitted: u64,
+    /// Sessions refused by [`FrontPolicy::max_sessions`].
+    pub denied: u64,
+    /// Client frames forwarded to shards.
+    pub frames_in: u64,
+    /// Output frames forwarded back to clients.
+    pub frames_out: u64,
+    /// Warm migrations completed (planned and crash-driven).
+    pub migrations: u64,
+    /// Shard connections lost.
+    pub shard_losses: u64,
+    /// Typed wire faults observed on either side.
+    pub wire_errs: u64,
+}
+
+/// Everything the router can be woken by.
+enum FrontEvent {
+    /// Acceptor registered a new client connection's write half.
+    NewConn(u64, Box<dyn WireWrite>),
+    /// A client connection's reader produced a message (or died).
+    FromClient(u64, Result<Option<Msg>, WireError>),
+    /// A shard connection's reader produced a message (or died).
+    FromShard(usize, Result<Option<Msg>, WireError>),
+    /// Operator command: move `session` to shard `to`.
+    Migrate { session: u64, to: usize },
+    /// Operator command: move one session off shard `from` onto `to`
+    /// (the cluster controller's actuator — it names shards, not
+    /// sessions).
+    Rebalance { from: usize, to: usize },
+    /// Shut down: drain shards, close connections, report.
+    Stop,
+}
+
+struct ShardConn {
+    name: String,
+    writer: Box<dyn WireWrite>,
+    /// Cleared on the first failed write; its reader soon reports too.
+    reachable: bool,
+    /// Set once [`lose_shard`] has re-homed the orphans, whichever of
+    /// the write or read side noticed the death first.
+    lost: bool,
+}
+
+struct ConnState {
+    writer: Box<dyn WireWrite>,
+    greeted: bool,
+}
+
+struct SessionState {
+    conn: u64,
+    shard: usize,
+    /// Next input seq expected from the client.
+    next_seq: u64,
+    /// Frames sent to the shard (== seq of the next frame to send).
+    sent: u64,
+    /// Frames whose output came back.
+    acked: u64,
+    /// Last `warmup` acked frames — the §9 replay window.
+    history: VecDeque<Vec<f32>>,
+    /// Sent-but-unacked frames, oldest first: `(seq, last, samples)`.
+    inflight: VecDeque<(u64, bool, Vec<f32>)>,
+    /// Frames held back while a planned migration waits for the
+    /// inflight window to drain.
+    held: VecDeque<(u64, bool, Vec<f32>)>,
+    /// Planned migration target, if one is pending.
+    migrating_to: Option<usize>,
+}
+
+/// A running front-end.  Dropping the handle abandons the router;
+/// call [`FrontHandle::stop`] for a clean shutdown and its report.
+pub struct FrontHandle {
+    tx: Sender<FrontEvent>,
+    router: Option<JoinHandle<FrontReport>>,
+    listener: Arc<dyn Listener>,
+}
+
+impl FrontHandle {
+    /// Nominate a planned warm migration of `session` onto `to_shard`.
+    /// Executed asynchronously; invalid targets are ignored.
+    pub fn migrate(&self, session: u64, to_shard: usize) -> Result<()> {
+        self.tx
+            .send(FrontEvent::Migrate {
+                session,
+                to: to_shard,
+            })
+            .map_err(|_| anyhow!("front router is gone"))
+    }
+
+    /// Execute a cluster-controller decision: move one session off
+    /// shard `from` onto shard `to`.
+    pub fn rebalance(&self, from: usize, to: usize) -> Result<()> {
+        self.tx
+            .send(FrontEvent::Rebalance { from, to })
+            .map_err(|_| anyhow!("front router is gone"))
+    }
+
+    /// Stop accepting, drain every shard, and return the report.
+    pub fn stop(mut self) -> Result<FrontReport> {
+        let _ = self.tx.send(FrontEvent::Stop);
+        self.listener.close();
+        let handle = self.router.take().expect("router joined once");
+        handle.join().map_err(|_| anyhow!("front router panicked"))
+    }
+}
+
+/// Connect to every shard, verify they serve the same model shape,
+/// and start the acceptor + router.  Fails fast if any shard is
+/// unreachable, speaks another wire version, or disagrees on
+/// `(feat, period, warmup)`.
+pub fn spawn_front(
+    listener: Box<dyn Listener>,
+    shards: Vec<ShardLink>,
+    policy: FrontPolicy,
+) -> Result<FrontHandle> {
+    if shards.is_empty() {
+        bail!("front needs at least one shard");
+    }
+    let (tx, rx) = channel::<FrontEvent>();
+
+    // Handshake each shard synchronously: we speak first.
+    let mut shard_conns = Vec::with_capacity(shards.len());
+    let mut shape: Option<(u32, u32, u32)> = None;
+    for (idx, link) in shards.into_iter().enumerate() {
+        let (r, mut w) = link
+            .transport
+            .connect()
+            .map_err(|e| anyhow!("shard '{}' unreachable: {e}", link.name))?;
+        let hello = Msg::Hello {
+            version: WIRE_VERSION,
+            role: role::FRONT,
+            feat: 0,
+            period: 0,
+            warmup: 0,
+        };
+        write_msg(&mut w, &hello).map_err(|e| anyhow!("shard '{}': {e}", link.name))?;
+        let mut reader = FrameReader::new(r);
+        let ack = reader
+            .next_msg()
+            .map_err(|e| anyhow!("shard '{}' handshake: {e}", link.name))?
+            .with_context(|| format!("shard '{}' closed during handshake", link.name))?;
+        let Msg::Hello {
+            role: r_role,
+            feat,
+            period,
+            warmup,
+            ..
+        } = ack
+        else {
+            bail!("shard '{}' greeted with {}", link.name, ack.kind());
+        };
+        if r_role != role::SHARD {
+            bail!("shard '{}' claims role {r_role}, expected shard", link.name);
+        }
+        match shape {
+            None => shape = Some((feat, period, warmup)),
+            Some(s) if s != (feat, period, warmup) => bail!(
+                "shard '{}' serves feat/period/warmup {:?}, fleet serves {:?}",
+                link.name,
+                (feat, period, warmup),
+                s
+            ),
+            Some(_) => {}
+        }
+        // Reader thread keeps the (already buffered) FrameReader.
+        let shard_tx = tx.clone();
+        thread::spawn(move || {
+            pump_reader(reader, move |item| {
+                let fatal = is_fatal(&item);
+                shard_tx.send(FrontEvent::FromShard(idx, item)).is_err() || fatal
+            })
+        });
+        shard_conns.push(ShardConn {
+            name: link.name,
+            writer: w,
+            reachable: true,
+            lost: false,
+        });
+    }
+    let (feat, period, warmup) = shape.expect("nonempty fleet");
+
+    // Acceptor: register the write half, then stream reads.
+    let listener: Arc<dyn Listener> = Arc::from(listener);
+    let accept_tx = tx.clone();
+    let accept_listener = listener.clone();
+    thread::spawn(move || {
+        let mut next_conn = 0u64;
+        loop {
+            let (r, w) = match accept_listener.accept() {
+                Ok(d) => d,
+                Err(_) => return,
+            };
+            let id = next_conn;
+            next_conn += 1;
+            if accept_tx.send(FrontEvent::NewConn(id, w)).is_err() {
+                return;
+            }
+            let conn_tx = accept_tx.clone();
+            thread::spawn(move || {
+                pump_reader(FrameReader::new(r), move |item| {
+                    let fatal = is_fatal(&item);
+                    conn_tx.send(FrontEvent::FromClient(id, item)).is_err() || fatal
+                })
+            });
+        }
+    });
+
+    let router =
+        thread::spawn(move || run_router(rx, shard_conns, policy, feat, period, warmup));
+    Ok(FrontHandle {
+        tx,
+        router: Some(router),
+        listener,
+    })
+}
+
+/// Drive a [`FrameReader`] until `deliver` says stop (it returns true
+/// on fatal items or when the router is gone).
+fn pump_reader<R: super::transport::WireRead + 'static>(
+    mut reader: FrameReader<R>,
+    mut deliver: impl FnMut(Result<Option<Msg>, WireError>) -> bool,
+) {
+    loop {
+        if deliver(reader.next_msg()) {
+            return;
+        }
+    }
+}
+
+/// A reader item after which the byte stream cannot continue.
+fn is_fatal(item: &Result<Option<Msg>, WireError>) -> bool {
+    match item {
+        Ok(None) => true,
+        Ok(Some(_)) => false,
+        Err(e) => !matches!(
+            e,
+            WireError::UnknownTag { .. }
+                | WireError::Malformed { .. }
+                | WireError::VersionSkew { .. }
+        ),
+    }
+}
+
+fn send_to_shard(shards: &mut [ShardConn], idx: usize, msg: &Msg) -> bool {
+    let s = &mut shards[idx];
+    if !s.reachable {
+        return false;
+    }
+    if write_msg(s.writer.as_mut(), msg).is_err() {
+        s.reachable = false;
+        return false;
+    }
+    true
+}
+
+fn send_to_conn(conns: &mut HashMap<u64, ConnState>, id: u64, msg: &Msg) {
+    if let Some(c) = conns.get_mut(&id) {
+        // A failed client write surfaces as EOF on its reader; nothing
+        // more to do here.
+        let _ = write_msg(c.writer.as_mut(), msg);
+    }
+}
+
+fn load_of(sessions: &HashMap<u64, SessionState>, shard: usize) -> usize {
+    sessions.values().filter(|s| s.shard == shard).count()
+}
+
+/// Least-loaded reachable shard, optionally excluding one.
+fn pick_shard(
+    shards: &[ShardConn],
+    sessions: &HashMap<u64, SessionState>,
+    exclude: Option<usize>,
+) -> Option<usize> {
+    shards
+        .iter()
+        .enumerate()
+        .filter(|(i, s)| s.reachable && Some(*i) != exclude)
+        .min_by_key(|(i, _)| load_of(sessions, *i))
+        .map(|(i, _)| i)
+}
+
+fn run_router(
+    rx: Receiver<FrontEvent>,
+    mut shards: Vec<ShardConn>,
+    policy: FrontPolicy,
+    feat: u32,
+    period: u32,
+    warmup: u32,
+) -> FrontReport {
+    let mut conns: HashMap<u64, ConnState> = HashMap::new();
+    let mut sessions: HashMap<u64, SessionState> = HashMap::new();
+    let mut report = FrontReport::default();
+
+    for ev in rx {
+        match ev {
+            FrontEvent::NewConn(id, writer) => {
+                report.conns += 1;
+                conns.insert(
+                    id,
+                    ConnState {
+                        writer,
+                        greeted: false,
+                    },
+                );
+            }
+            FrontEvent::FromClient(conn, item) => match item {
+                Ok(Some(msg)) => handle_client_msg(
+                    conn,
+                    msg,
+                    &mut conns,
+                    &mut sessions,
+                    &mut shards,
+                    &policy,
+                    feat,
+                    period,
+                    warmup,
+                    &mut report,
+                ),
+                Ok(None) => {
+                    drop_conn(conn, &mut conns, &mut sessions, &mut shards);
+                }
+                Err(e) => {
+                    report.wire_errs += 1;
+                    if is_fatal(&Err(e.clone())) {
+                        drop_conn(conn, &mut conns, &mut sessions, &mut shards);
+                    } else {
+                        let code = if matches!(e, WireError::VersionSkew { .. }) {
+                            ErrCode::VersionSkew
+                        } else {
+                            ErrCode::BadFrame
+                        };
+                        send_to_conn(
+                            &mut conns,
+                            conn,
+                            &Msg::Err {
+                                code,
+                                session: 0,
+                                detail: e.to_string(),
+                            },
+                        );
+                    }
+                }
+            },
+            FrontEvent::FromShard(idx, item) => match item {
+                Ok(Some(msg)) => handle_shard_msg(
+                    idx,
+                    msg,
+                    &mut conns,
+                    &mut sessions,
+                    &mut shards,
+                    feat,
+                    warmup,
+                    &mut report,
+                ),
+                Ok(None) => {
+                    lose_shard(idx, &mut conns, &mut sessions, &mut shards, feat, &mut report);
+                }
+                Err(e) => {
+                    report.wire_errs += 1;
+                    if is_fatal(&Err(e)) {
+                        lose_shard(idx, &mut conns, &mut sessions, &mut shards, feat, &mut report);
+                    }
+                }
+            },
+            FrontEvent::Migrate { session, to } => {
+                start_migration(
+                    session,
+                    to,
+                    &mut conns,
+                    &mut sessions,
+                    &mut shards,
+                    feat,
+                    &mut report,
+                );
+            }
+            FrontEvent::Rebalance { from, to } => {
+                // Prefer a quiet session (empty inflight) so the move
+                // completes immediately.
+                let pick = sessions
+                    .iter()
+                    .filter(|(_, s)| s.shard == from && s.migrating_to.is_none())
+                    .min_by_key(|(_, s)| s.inflight.len())
+                    .map(|(id, _)| *id);
+                if let Some(sid) = pick {
+                    start_migration(
+                        sid,
+                        to,
+                        &mut conns,
+                        &mut sessions,
+                        &mut shards,
+                        feat,
+                        &mut report,
+                    );
+                }
+            }
+            FrontEvent::Stop => break,
+        }
+    }
+
+    for idx in 0..shards.len() {
+        send_to_shard(&mut shards, idx, &Msg::Drain { session: DRAIN_ALL });
+        shards[idx].writer.shutdown();
+    }
+    for c in conns.values_mut() {
+        c.writer.shutdown();
+    }
+    report
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_client_msg(
+    conn: u64,
+    msg: Msg,
+    conns: &mut HashMap<u64, ConnState>,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+    policy: &FrontPolicy,
+    feat: u32,
+    period: u32,
+    warmup: u32,
+    report: &mut FrontReport,
+) {
+    let greeted = conns.get(&conn).map(|c| c.greeted).unwrap_or(false);
+    match msg {
+        Msg::Hello { role: r, .. } => {
+            if greeted || r != role::CLIENT {
+                report.wire_errs += 1;
+                send_to_conn(
+                    conns,
+                    conn,
+                    &Msg::Err {
+                        code: ErrCode::Protocol,
+                        session: 0,
+                        detail: "unexpected hello".into(),
+                    },
+                );
+                return;
+            }
+            if let Some(c) = conns.get_mut(&conn) {
+                c.greeted = true;
+            }
+            send_to_conn(
+                conns,
+                conn,
+                &Msg::Hello {
+                    version: WIRE_VERSION,
+                    role: role::FRONT,
+                    feat,
+                    period,
+                    warmup,
+                },
+            );
+        }
+        Msg::Frame {
+            session,
+            seq,
+            last,
+            samples,
+        } => {
+            if !greeted {
+                report.wire_errs += 1;
+                send_to_conn(
+                    conns,
+                    conn,
+                    &Msg::Err {
+                        code: ErrCode::Protocol,
+                        session,
+                        detail: "frame before hello".into(),
+                    },
+                );
+                return;
+            }
+            if samples.len() != feat as usize {
+                report.wire_errs += 1;
+                let detail = format!("frame has {} samples, feat is {feat}", samples.len());
+                send_to_conn(
+                    conns,
+                    conn,
+                    &Msg::Err {
+                        code: ErrCode::BadFrame,
+                        session,
+                        detail,
+                    },
+                );
+                return;
+            }
+            if !sessions.contains_key(&session) {
+                // Admission: refuse before creating anything.
+                if seq != 0 {
+                    report.wire_errs += 1;
+                    let detail = format!("unknown session starts at seq {seq}, expected 0");
+                    send_to_conn(
+                        conns,
+                        conn,
+                        &Msg::Err {
+                            code: ErrCode::BadFrame,
+                            session,
+                            detail,
+                        },
+                    );
+                    return;
+                }
+                if sessions.len() >= policy.max_sessions {
+                    report.denied += 1;
+                    report.wire_errs += 1;
+                    let detail = format!("fleet serves {} sessions", policy.max_sessions);
+                    send_to_conn(
+                        conns,
+                        conn,
+                        &Msg::Err {
+                            code: ErrCode::AdmissionDenied,
+                            session,
+                            detail,
+                        },
+                    );
+                    return;
+                }
+                let Some(target) = pick_shard(shards, sessions, None) else {
+                    report.wire_errs += 1;
+                    send_to_conn(
+                        conns,
+                        conn,
+                        &Msg::Err {
+                            code: ErrCode::ShardLost,
+                            session,
+                            detail: "no reachable shard".into(),
+                        },
+                    );
+                    return;
+                };
+                report.admitted += 1;
+                sessions.insert(
+                    session,
+                    SessionState {
+                        conn,
+                        shard: target,
+                        next_seq: 0,
+                        sent: 0,
+                        acked: 0,
+                        history: VecDeque::new(),
+                        inflight: VecDeque::new(),
+                        held: VecDeque::new(),
+                        migrating_to: None,
+                    },
+                );
+            }
+            let sess = sessions.get_mut(&session).expect("just ensured");
+            if sess.conn != conn {
+                report.wire_errs += 1;
+                send_to_conn(
+                    conns,
+                    conn,
+                    &Msg::Err {
+                        code: ErrCode::Protocol,
+                        session,
+                        detail: "session owned by another connection".into(),
+                    },
+                );
+                return;
+            }
+            if seq != sess.next_seq {
+                report.wire_errs += 1;
+                let detail = format!("frame seq {seq}, expected {}", sess.next_seq);
+                send_to_conn(
+                    conns,
+                    conn,
+                    &Msg::Err {
+                        code: ErrCode::BadFrame,
+                        session,
+                        detail,
+                    },
+                );
+                return;
+            }
+            sess.next_seq += 1;
+            report.frames_in += 1;
+            if sess.migrating_to.is_some() {
+                sess.held.push_back((seq, last, samples));
+                return;
+            }
+            let shard = sess.shard;
+            sess.inflight.push_back((seq, last, samples.clone()));
+            sess.sent += 1;
+            let frame = Msg::Frame {
+                session,
+                seq,
+                last,
+                samples,
+            };
+            if !send_to_shard(shards, shard, &frame) {
+                lose_shard(shard, conns, sessions, shards, feat, report);
+            }
+        }
+        Msg::Drain { session } => {
+            if session == DRAIN_ALL {
+                let mine: Vec<u64> = sessions
+                    .iter()
+                    .filter(|(_, s)| s.conn == conn)
+                    .map(|(id, _)| *id)
+                    .collect();
+                for sid in mine {
+                    retire_session(sid, sessions, shards);
+                }
+                return;
+            }
+            if sessions.get(&session).map(|s| s.conn) == Some(conn) {
+                retire_session(session, sessions, shards);
+            }
+        }
+        Msg::Migrate { .. } | Msg::FrameOut { .. } | Msg::Err { .. } => {
+            report.wire_errs += 1;
+            send_to_conn(
+                conns,
+                conn,
+                &Msg::Err {
+                    code: ErrCode::Protocol,
+                    session: 0,
+                    detail: "unexpected message".into(),
+                },
+            );
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_shard_msg(
+    idx: usize,
+    msg: Msg,
+    conns: &mut HashMap<u64, ConnState>,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+    feat: u32,
+    warmup: u32,
+    report: &mut FrontReport,
+) {
+    match msg {
+        Msg::FrameOut {
+            session,
+            seq,
+            samples,
+        } => {
+            let Some(sess) = sessions.get_mut(&session) else {
+                return; // retired while the output was in flight
+            };
+            if sess.shard != idx {
+                return; // stale output from the pre-migration shard
+            }
+            let Some((fseq, last, frame)) = sess.inflight.pop_front() else {
+                report.wire_errs += 1;
+                return;
+            };
+            if fseq != seq {
+                // The shard's absolute counter disagrees with ours —
+                // a protocol bug, not a client fault.  Drop the pair.
+                report.wire_errs += 1;
+                return;
+            }
+            sess.acked += 1;
+            sess.history.push_back(frame);
+            while sess.history.len() > warmup as usize {
+                sess.history.pop_front();
+            }
+            let conn = sess.conn;
+            let finished = last;
+            let move_now = sess.migrating_to.is_some() && sess.inflight.is_empty();
+            report.frames_out += 1;
+            send_to_conn(
+                conns,
+                conn,
+                &Msg::FrameOut {
+                    session,
+                    seq,
+                    samples,
+                },
+            );
+            if finished {
+                sessions.remove(&session);
+                return;
+            }
+            if move_now {
+                complete_migration(session, conns, sessions, shards, feat, report);
+            }
+        }
+        Msg::Err {
+            code,
+            session,
+            detail,
+        } => {
+            report.wire_errs += 1;
+            if session != 0 {
+                if let Some(sess) = sessions.get(&session) {
+                    let conn = sess.conn;
+                    send_to_conn(
+                        conns,
+                        conn,
+                        &Msg::Err {
+                            code,
+                            session,
+                            detail,
+                        },
+                    );
+                }
+            }
+        }
+        // Shards never originate anything else after the handshake.
+        Msg::Hello { .. } | Msg::Frame { .. } | Msg::Migrate { .. } | Msg::Drain { .. } => {
+            report.wire_errs += 1;
+        }
+    }
+}
+
+/// Begin a planned migration; completes immediately when nothing is
+/// in flight, otherwise when the last outstanding output arrives.
+fn start_migration(
+    session: u64,
+    to: usize,
+    conns: &mut HashMap<u64, ConnState>,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+    feat: u32,
+    report: &mut FrontReport,
+) {
+    let Some(sess) = sessions.get_mut(&session) else {
+        return;
+    };
+    if to >= shards.len() || !shards[to].reachable || to == sess.shard {
+        return;
+    }
+    sess.migrating_to = Some(to);
+    if sess.inflight.is_empty() {
+        complete_migration(session, conns, sessions, shards, feat, report);
+    }
+}
+
+/// The inflight window is empty: retire the session on the old shard,
+/// re-create it on the target by §9 replay, and flush held frames.
+fn complete_migration(
+    session: u64,
+    conns: &mut HashMap<u64, ConnState>,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+    feat: u32,
+    report: &mut FrontReport,
+) {
+    let Some(sess) = sessions.get_mut(&session) else {
+        return;
+    };
+    let Some(to) = sess.migrating_to.take() else {
+        return;
+    };
+    let from = sess.shard;
+    debug_assert!(sess.inflight.is_empty());
+    send_to_shard(shards, from, &Msg::Drain { session });
+    let migrate = Msg::Migrate {
+        session,
+        t: sess.acked,
+        feat,
+        history: sess.history.iter().cloned().collect(),
+    };
+    if !send_to_shard(shards, to, &migrate) {
+        // Target died at handoff.  The old shard already dropped the
+        // session, so this is now a crash re-home, not a cancel.
+        sess.shard = to;
+        rehome_session(session, conns, sessions, shards, feat, report);
+        return;
+    }
+    sess.shard = to;
+    report.migrations += 1;
+    let held: Vec<(u64, bool, Vec<f32>)> = sess.held.drain(..).collect();
+    for (seq, last, samples) in held {
+        let sess = sessions.get_mut(&session).expect("still live");
+        sess.inflight.push_back((seq, last, samples.clone()));
+        sess.sent += 1;
+        let frame = Msg::Frame {
+            session,
+            seq,
+            last,
+            samples,
+        };
+        if !send_to_shard(shards, to, &frame) {
+            // The frame is recorded inflight; losing the shard now
+            // re-homes the session and re-sends the tail.
+            lose_shard(to, conns, sessions, shards, feat, report);
+            return;
+        }
+    }
+}
+
+/// A shard died: mark it, cancel migrations that were *targeting* it,
+/// and re-home every session *homed* on it by §9 replay — including a
+/// re-send of the unacked tail, whose outputs the dead shard will
+/// never deliver.
+fn lose_shard(
+    idx: usize,
+    conns: &mut HashMap<u64, ConnState>,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+    feat: u32,
+    report: &mut FrontReport,
+) {
+    if shards[idx].lost {
+        return; // the other half (reader/writer) noticed first
+    }
+    shards[idx].lost = true;
+    shards[idx].reachable = false;
+    shards[idx].writer.shutdown();
+    report.shard_losses += 1;
+    let nominated: Vec<u64> = sessions
+        .iter()
+        .filter(|(_, s)| s.shard != idx && s.migrating_to == Some(idx))
+        .map(|(id, _)| *id)
+        .collect();
+    for sid in nominated {
+        cancel_migration(sid, conns, sessions, shards, feat, report);
+    }
+    let orphans: Vec<u64> = sessions
+        .iter()
+        .filter(|(_, s)| s.shard == idx)
+        .map(|(id, _)| *id)
+        .collect();
+    for sid in orphans {
+        rehome_session(sid, conns, sessions, shards, feat, report);
+    }
+}
+
+/// A planned migration's target died before the handoff: forget the
+/// nomination and flush held frames to the still-live current shard.
+fn cancel_migration(
+    session: u64,
+    conns: &mut HashMap<u64, ConnState>,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+    feat: u32,
+    report: &mut FrontReport,
+) {
+    let Some(sess) = sessions.get_mut(&session) else {
+        return;
+    };
+    sess.migrating_to = None;
+    let shard = sess.shard;
+    let held: Vec<(u64, bool, Vec<f32>)> = sess.held.drain(..).collect();
+    for (seq, last, samples) in held {
+        let sess = sessions.get_mut(&session).expect("still live");
+        sess.inflight.push_back((seq, last, samples.clone()));
+        sess.sent += 1;
+        let frame = Msg::Frame {
+            session,
+            seq,
+            last,
+            samples,
+        };
+        if !send_to_shard(shards, shard, &frame) {
+            lose_shard(shard, conns, sessions, shards, feat, report);
+            return;
+        }
+    }
+}
+
+fn rehome_session(
+    session: u64,
+    conns: &mut HashMap<u64, ConnState>,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+    feat: u32,
+    report: &mut FrontReport,
+) {
+    loop {
+        let Some(sess) = sessions.get_mut(&session) else {
+            return;
+        };
+        sess.migrating_to = None;
+        let Some(target) = pick_shard(shards, sessions, Some(sessions[&session].shard)) else {
+            let conn = sessions[&session].conn;
+            sessions.remove(&session);
+            send_to_conn(
+                conns,
+                conn,
+                &Msg::Err {
+                    code: ErrCode::ShardLost,
+                    session,
+                    detail: "no reachable shard to resume on".into(),
+                },
+            );
+            return;
+        };
+        let sess = sessions.get_mut(&session).expect("still live");
+        let migrate = Msg::Migrate {
+            session,
+            t: sess.acked,
+            feat,
+            history: sess.history.iter().cloned().collect(),
+        };
+        if !send_to_shard(shards, target, &migrate) {
+            continue; // target just died too; try the next candidate
+        }
+        sess.shard = target;
+        // Re-send everything the dead shard never acked, then held.
+        let resend: Vec<(u64, bool, Vec<f32>)> = sess
+            .inflight
+            .iter()
+            .cloned()
+            .chain(sess.held.drain(..))
+            .collect();
+        sess.inflight.clear();
+        let mut ok = true;
+        for (seq, last, samples) in resend {
+            let sess = sessions.get_mut(&session).expect("still live");
+            sess.inflight.push_back((seq, last, samples.clone()));
+            let frame = Msg::Frame {
+                session,
+                seq,
+                last,
+                samples,
+            };
+            if !send_to_shard(shards, target, &frame) {
+                ok = false;
+                break;
+            }
+        }
+        let sess = sessions.get_mut(&session).expect("still live");
+        sess.sent = sess.acked + sess.inflight.len() as u64;
+        if ok {
+            report.migrations += 1;
+            return;
+        }
+        // Target died mid-replay: loop and pick another.
+    }
+}
+
+/// Forget a session and tell its shard to do the same.
+fn retire_session(
+    session: u64,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+) {
+    if let Some(sess) = sessions.remove(&session) {
+        send_to_shard(shards, sess.shard, &Msg::Drain { session });
+    }
+}
+
+/// Drop a client connection and retire every session it owned.
+fn drop_conn(
+    conn: u64,
+    conns: &mut HashMap<u64, ConnState>,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+) {
+    if let Some(mut c) = conns.remove(&conn) {
+        c.writer.shutdown();
+    }
+    let mine: Vec<u64> = sessions
+        .iter()
+        .filter(|(_, s)| s.conn == conn)
+        .map(|(id, _)| *id)
+        .collect();
+    for sid in mine {
+        retire_session(sid, sessions, shards);
+    }
+}

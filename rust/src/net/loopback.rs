@@ -1,0 +1,352 @@
+//! Deterministic in-process transport.
+//!
+//! A [`LoopbackHub`] pairs `connect` calls with `accept` calls over
+//! bounded in-memory byte pipes. There are no sockets, no timers and
+//! no OS scheduling in the data path, which is what lets the
+//! integration tests script byte-level faults reproducibly:
+//!
+//! * **truncation** — write part of a frame, then [`WireWrite::shutdown`];
+//! * **disconnect** — drop both halves mid-stream;
+//! * **shard crash** — drop every duplex a fake shard owns;
+//! * **backpressure** — build pipes with a small capacity and
+//!   `fail_on_full`, so a slow reader surfaces a deterministic
+//!   [`WireError::Backpressure`] instead of a timing-dependent stall.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+use super::transport::{Duplex, Listener, Transport, WireRead, WireWrite};
+use super::wire::{WireError, MAX_FRAME};
+
+/// Default pipe capacity: one max-size frame plus its prefix, so any
+/// single well-formed message can be written without blocking.
+pub const DEFAULT_PIPE_CAP: usize = MAX_FRAME + 64;
+
+struct PipeState {
+    buf: VecDeque<u8>,
+    /// Write half closed: reader drains, then sees EOF.
+    closed_w: bool,
+    /// Read half closed: writes fail with [`WireError::Closed`].
+    closed_r: bool,
+}
+
+struct PipeInner {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+    cap: usize,
+    fail_on_full: bool,
+}
+
+/// Read half of an in-memory pipe. Dropping it closes the read side,
+/// so a blocked or future writer fails with [`WireError::Closed`].
+pub struct PipeReader {
+    pipe: Arc<PipeInner>,
+}
+
+/// Write half of an in-memory pipe. Dropping it is equivalent to
+/// [`WireWrite::shutdown`]: the reader drains what was buffered and
+/// then observes EOF.
+pub struct PipeWriter {
+    pipe: Arc<PipeInner>,
+}
+
+/// Create one unidirectional in-memory pipe.
+///
+/// With `fail_on_full`, a send that does not fit entirely in the
+/// remaining capacity fails with [`WireError::Backpressure`] without
+/// writing anything — all-or-nothing, so the byte stream is never
+/// left mid-frame. Without it, the writer blocks until the reader
+/// drains.
+pub fn pipe(cap: usize, fail_on_full: bool) -> (PipeReader, PipeWriter) {
+    let inner = Arc::new(PipeInner {
+        state: Mutex::new(PipeState {
+            buf: VecDeque::new(),
+            closed_w: false,
+            closed_r: false,
+        }),
+        cv: Condvar::new(),
+        cap: cap.max(1),
+        fail_on_full,
+    });
+    (
+        PipeReader {
+            pipe: Arc::clone(&inner),
+        },
+        PipeWriter { pipe: inner },
+    )
+}
+
+impl WireRead for PipeReader {
+    fn recv(&mut self, out: &mut [u8]) -> Result<usize, WireError> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self
+            .pipe
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if !st.buf.is_empty() {
+                let n = out.len().min(st.buf.len());
+                for slot in out.iter_mut().take(n) {
+                    *slot = st.buf.pop_front().expect("non-empty");
+                }
+                self.pipe.cv.notify_all();
+                return Ok(n);
+            }
+            if st.closed_w {
+                return Ok(0);
+            }
+            st = self
+                .pipe
+                .cv
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+impl Drop for PipeReader {
+    fn drop(&mut self) {
+        let mut st = self
+            .pipe
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        st.closed_r = true;
+        self.pipe.cv.notify_all();
+    }
+}
+
+impl WireWrite for PipeWriter {
+    fn send(&mut self, bytes: &[u8]) -> Result<(), WireError> {
+        let mut pos = 0;
+        let mut st = self
+            .pipe
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        while pos < bytes.len() {
+            if st.closed_r || st.closed_w {
+                return Err(WireError::Closed);
+            }
+            if self.pipe.fail_on_full {
+                if st.buf.len() + (bytes.len() - pos) > self.pipe.cap {
+                    return Err(WireError::Backpressure {
+                        capacity: self.pipe.cap,
+                    });
+                }
+            } else if st.buf.len() == self.pipe.cap {
+                st = self
+                    .pipe
+                    .cv
+                    .wait(st)
+                    .unwrap_or_else(PoisonError::into_inner);
+                continue;
+            }
+            let space = self.pipe.cap - st.buf.len();
+            let n = space.min(bytes.len() - pos);
+            st.buf.extend(&bytes[pos..pos + n]);
+            pos += n;
+            self.pipe.cv.notify_all();
+        }
+        Ok(())
+    }
+
+    fn shutdown(&mut self) {
+        let mut st = self
+            .pipe
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        st.closed_w = true;
+        self.pipe.cv.notify_all();
+    }
+}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+struct HubState {
+    pending: VecDeque<Duplex>,
+    closed: bool,
+}
+
+struct HubInner {
+    state: Mutex<HubState>,
+    cv: Condvar,
+    cap: usize,
+    fail_on_full: bool,
+}
+
+/// An in-process rendezvous point: [`Transport::connect`] on one
+/// thread pairs with [`Listener::accept`] on another, each side
+/// receiving one half of a fresh bidirectional pipe pair. Cloning the
+/// hub clones a handle to the same rendezvous.
+#[derive(Clone)]
+pub struct LoopbackHub {
+    inner: Arc<HubInner>,
+}
+
+impl LoopbackHub {
+    /// Hub with default-capacity blocking pipes.
+    pub fn new() -> Self {
+        Self::with_pipes(DEFAULT_PIPE_CAP, false)
+    }
+
+    /// Hub whose pipes have capacity `cap` and, with `fail_on_full`,
+    /// surface [`WireError::Backpressure`] instead of blocking.
+    pub fn with_pipes(cap: usize, fail_on_full: bool) -> Self {
+        LoopbackHub {
+            inner: Arc::new(HubInner {
+                state: Mutex::new(HubState {
+                    pending: VecDeque::new(),
+                    closed: false,
+                }),
+                cv: Condvar::new(),
+                cap,
+                fail_on_full,
+            }),
+        }
+    }
+}
+
+impl Default for LoopbackHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for LoopbackHub {
+    fn connect(&self) -> Result<Duplex, WireError> {
+        let (srv_r, cli_w) = pipe(self.inner.cap, self.inner.fail_on_full);
+        let (cli_r, srv_w) = pipe(self.inner.cap, self.inner.fail_on_full);
+        let mut st = self
+            .inner
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        if st.closed {
+            return Err(WireError::Closed);
+        }
+        st.pending.push_back((Box::new(srv_r), Box::new(srv_w)));
+        self.inner.cv.notify_all();
+        Ok((Box::new(cli_r), Box::new(cli_w)))
+    }
+}
+
+impl Listener for LoopbackHub {
+    fn accept(&self) -> Result<Duplex, WireError> {
+        let mut st = self
+            .inner
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if let Some(d) = st.pending.pop_front() {
+                return Ok(d);
+            }
+            if st.closed {
+                return Err(WireError::Closed);
+            }
+            st = self
+                .inner
+                .cv
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self
+            .inner
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        st.closed = true;
+        self.inner.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_cross_the_pipe_in_order() {
+        let (mut r, mut w) = pipe(8, false);
+        let t = std::thread::spawn(move || {
+            w.send(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]).unwrap();
+        });
+        let mut got = Vec::new();
+        let mut buf = [0u8; 5];
+        while got.len() < 12 {
+            let n = r.recv(&mut buf).unwrap();
+            got.extend_from_slice(&buf[..n]);
+        }
+        t.join().unwrap();
+        assert_eq!(got, (1..=12).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn shutdown_yields_eof_after_drain() {
+        let (mut r, mut w) = pipe(64, false);
+        w.send(&[9, 9]).unwrap();
+        w.shutdown();
+        let mut buf = [0u8; 8];
+        assert_eq!(r.recv(&mut buf).unwrap(), 2);
+        assert_eq!(r.recv(&mut buf).unwrap(), 0, "EOF after drain");
+        assert_eq!(r.recv(&mut buf).unwrap(), 0, "EOF is sticky");
+    }
+
+    #[test]
+    fn fail_on_full_is_all_or_nothing() {
+        let (mut r, mut w) = pipe(4, true);
+        w.send(&[1, 2, 3]).unwrap();
+        match w.send(&[4, 5]) {
+            Err(WireError::Backpressure { capacity }) => assert_eq!(capacity, 4),
+            other => panic!("expected Backpressure, got {other:?}"),
+        }
+        // Nothing of the failed send leaked into the stream.
+        let mut buf = [0u8; 8];
+        assert_eq!(r.recv(&mut buf).unwrap(), 3);
+        assert_eq!(&buf[..3], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn dropped_reader_fails_writes() {
+        let (r, mut w) = pipe(4, false);
+        drop(r);
+        assert_eq!(w.send(&[1]), Err(WireError::Closed));
+    }
+
+    #[test]
+    fn hub_pairs_connect_with_accept() {
+        let hub = LoopbackHub::new();
+        let server = hub.clone();
+        let t = std::thread::spawn(move || {
+            let (mut r, mut w) = server.accept().unwrap();
+            let mut buf = [0u8; 4];
+            let n = r.recv(&mut buf).unwrap();
+            w.send(&buf[..n]).unwrap();
+        });
+        let (mut r, mut w) = hub.connect().unwrap();
+        w.send(&[7, 8]).unwrap();
+        let mut buf = [0u8; 4];
+        assert_eq!(r.recv(&mut buf).unwrap(), 2);
+        assert_eq!(&buf[..2], &[7, 8]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn closed_hub_rejects_both_sides() {
+        let hub = LoopbackHub::new();
+        hub.close();
+        assert!(matches!(hub.accept(), Err(WireError::Closed)));
+        assert!(matches!(hub.connect(), Err(WireError::Closed)));
+    }
+}

@@ -1,0 +1,52 @@
+//! L4 wire layer — sharded serving over a byte-stream transport.
+//!
+//! One `soi` process is a deep but single-OS-process serving stack;
+//! scaling to "millions of users" (ROADMAP item 1) needs a wire. This
+//! module adds exactly that, without giving up the determinism the
+//! rest of the crate is built on:
+//!
+//! * [`wire`] — `soi.wire.v1`: a versioned, length-prefixed binary
+//!   frame protocol (Hello/Frame/FrameOut/Migrate/Drain/Err) with
+//!   typed decode errors in the `ArtifactError` discipline — a decode
+//!   failure never yields a partially-constructed message or session.
+//! * [`transport`] — the [`Transport`]/[`Listener`] abstraction over
+//!   byte-stream duplexes, so every component above it is transport-
+//!   agnostic.
+//! * [`loopback`] — a deterministic in-process transport with bounded
+//!   pipes and scriptable faults (truncation, disconnect, fail-fast
+//!   backpressure) used by the fault-matrix integration tests.
+//! * [`tcp`] — the production transport: thin std-only wrappers over
+//!   `std::net` (no async runtime, consistent with the crate's
+//!   offline, dependency-free posture).
+//! * [`shard`] — a backend shard: one `coordinator::server` worker
+//!   pool behind a wire endpoint, with warm resume of migrated
+//!   streams via the §9 replay path.
+//! * [`front`] — the front-end: admission control, session→shard
+//!   affinity, zero-drop cross-shard warm migration, and shard-loss
+//!   recovery by replaying acked history on a survivor.
+//! * [`balance`] — the cluster-level sibling of
+//!   `coordinator::LoadController`: pure rebalancing decisions from
+//!   per-shard `soi.obs.v1` health feeds.
+//! * [`client`] — a minimal blocking client used by the smoke
+//!   subcommand and the integration tests.
+//!
+//! DESIGN.md §14 documents the frame grammar, the shard lifecycle and
+//! the fault-matrix semantics.
+
+pub mod balance;
+pub mod client;
+pub mod front;
+pub mod loopback;
+pub mod shard;
+pub mod tcp;
+pub mod transport;
+pub mod wire;
+
+pub use balance::{health_from_feed, ClusterController, ClusterDecision, ClusterPolicy, ShardHealth};
+pub use client::WireClient;
+pub use front::{spawn_front, FrontHandle, FrontPolicy, FrontReport, ShardLink};
+pub use loopback::LoopbackHub;
+pub use shard::{run_shard, ShardConfig, ShardReport};
+pub use tcp::{TcpConnector, TcpPort};
+pub use transport::{Duplex, Listener, Transport, WireRead, WireWrite};
+pub use wire::{ErrCode, FrameReader, Msg, WireError, MAX_FRAME, WIRE_SCHEMA, WIRE_VERSION};

@@ -1,0 +1,378 @@
+//! A backend shard: one `coordinator::server` worker pool behind a
+//! wire endpoint (DESIGN.md §14).
+//!
+//! The shard accepts one front-end connection at a time, exchanges
+//! `Hello`s (rejecting version skew before any session state exists),
+//! then bridges the wire and a live worker pool
+//! ([`crate::coordinator::Server::start_live`]): `Frame` → worker,
+//! worker output → `FrameOut`, `Migrate` → §9 replay admission,
+//! `Drain` → session retirement (or, with [`super::wire::DRAIN_ALL`],
+//! graceful shard shutdown).  Per-session faults answer with a typed
+//! `Err` message and touch nothing else; losing the front-end
+//! connection drops every session (the front re-creates them by
+//! replay elsewhere) and loops back to `accept`.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::transport::{Duplex, Listener, WireWrite};
+use super::wire::{role, write_msg, ErrCode, FrameReader, Msg, WireError, DRAIN_ALL, WIRE_VERSION};
+use crate::coordinator::{FrameJob, LiveCmd, LiveEvent, Server};
+use crate::obs::{Counter, Gauge, ObsHandle};
+use crate::runtime::warmup_frames;
+
+/// Shard-process configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardConfig {
+    /// Operator-assigned 1-based shard id, exported as
+    /// [`Gauge::ShardId`] so the cluster controller can attribute the
+    /// shard's health feed (0 = unsharded).
+    pub shard_id: u64,
+}
+
+/// What [`run_shard`] counted over its lifetime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardReport {
+    /// Front-end connections served.
+    pub conns: u64,
+    /// Input frames accepted onto workers.
+    pub frames_in: u64,
+    /// Output frames written to the wire.
+    pub frames_out: u64,
+    /// Sessions admitted by §9 replay (`Migrate`).
+    pub resumes: u64,
+    /// Sessions retired by `Drain`.
+    pub drains: u64,
+    /// Typed wire faults observed (decode errors, rejected resumes,
+    /// mid-stream protocol violations).
+    pub wire_errs: u64,
+}
+
+/// One event on the shard's unified queue: either something the wire
+/// produced or something a worker produced.
+enum ConnEvent {
+    Wire(Result<Option<Msg>, WireError>),
+    Live(LiveEvent),
+}
+
+/// After a decode error, can the byte stream still be trusted?  The
+/// frame is well-delimited for in-band faults (unknown tag, malformed
+/// body, skewed hello), so the reader keeps going; truncation and
+/// oversize mean framing itself is lost.
+fn survivable(e: &WireError) -> bool {
+    matches!(
+        e,
+        WireError::UnknownTag { .. } | WireError::Malformed { .. } | WireError::VersionSkew { .. }
+    )
+}
+
+fn count(obs: &Option<ObsHandle>, c: Counter, n: u64) {
+    if let Some(h) = obs {
+        h.count(c, n);
+    }
+}
+
+/// Run a shard until [`Listener::close`] or a whole-shard `Drain`.
+/// `server` supplies the worker pool configuration (ladder, batching,
+/// adaptive policy, telemetry, reload) exactly as single-process
+/// serving does.
+pub fn run_shard(server: &Server, listener: &dyn Listener, cfg: ShardConfig) -> Result<ShardReport> {
+    let obs = server.telemetry.as_ref().map(|t| t.shared());
+    if let Some(h) = &obs {
+        h.with(|w| w.gauge_set(Gauge::ShardId, cfg.shard_id));
+    }
+    let feat = server.ladder().level(0).manifest.config.feat as u32;
+    let period = server.ladder().level(0).manifest.period as u32;
+    let warmup = warmup_frames(&server.ladder().level(0).manifest.config) as u32;
+
+    let mut report = ShardReport::default();
+    loop {
+        let conn = match listener.accept() {
+            Ok(d) => d,
+            Err(WireError::Closed) => return Ok(report),
+            Err(e) => return Err(anyhow!("shard accept failed: {e}")),
+        };
+        report.conns += 1;
+        match serve_conn(server, conn, (feat, period, warmup), &obs, &mut report)? {
+            ConnEnd::FrontGone => continue,
+            ConnEnd::DrainAll => return Ok(report),
+        }
+    }
+}
+
+enum ConnEnd {
+    /// The front-end disconnected; every session died with it.
+    FrontGone,
+    /// Whole-shard drain requested: exit gracefully.
+    DrainAll,
+}
+
+fn serve_conn(
+    server: &Server,
+    conn: Duplex,
+    (feat, period, warmup): (u32, u32, u32),
+    obs: &Option<ObsHandle>,
+    report: &mut ShardReport,
+) -> Result<ConnEnd> {
+    let (reader_half, mut w) = conn;
+
+    // Unified event queue: a reader thread forwards wire messages, a
+    // pump thread forwards worker events; this thread owns the writer.
+    let (tx, rx) = channel::<ConnEvent>();
+    let reader_tx = tx.clone();
+    let reader_thread = thread::spawn(move || {
+        let mut reader = FrameReader::new(reader_half);
+        loop {
+            let item = reader.next_msg();
+            let fatal = match &item {
+                Ok(None) => true,
+                Ok(Some(_)) => false,
+                Err(e) => !survivable(e),
+            };
+            if reader_tx.send(ConnEvent::Wire(item)).is_err() || fatal {
+                return;
+            }
+        }
+    });
+
+    // Handshake: the front speaks first.  Version skew (or anything
+    // else malformed) is rejected before any worker state exists.
+    match rx.recv() {
+        Ok(ConnEvent::Wire(Ok(Some(Msg::Hello { version: _, role: r, .. })))) => {
+            if r != role::FRONT && r != role::CLIENT {
+                let _ = send_err(&mut w, obs, ErrCode::Protocol, 0, "expected front hello");
+                report.wire_errs += 1;
+                w.shutdown();
+                let _ = reader_thread.join();
+                return Ok(ConnEnd::FrontGone);
+            }
+        }
+        Ok(ConnEvent::Wire(Err(WireError::VersionSkew { found }))) => {
+            report.wire_errs += 1;
+            count(obs, Counter::WireErrs, 1);
+            let _ = send_err(
+                &mut w,
+                obs,
+                ErrCode::VersionSkew,
+                0,
+                &format!("shard speaks v{WIRE_VERSION}, peer sent v{found}"),
+            );
+            w.shutdown();
+            let _ = reader_thread.join();
+            return Ok(ConnEnd::FrontGone);
+        }
+        _ => {
+            report.wire_errs += 1;
+            count(obs, Counter::WireErrs, 1);
+            let _ = send_err(&mut w, obs, ErrCode::Protocol, 0, "handshake failed");
+            w.shutdown();
+            let _ = reader_thread.join();
+            return Ok(ConnEnd::FrontGone);
+        }
+    }
+    let ack = Msg::Hello {
+        version: WIRE_VERSION,
+        role: role::SHARD,
+        feat,
+        period,
+        warmup,
+    };
+    if send_msg(&mut w, obs, &ack).is_err() {
+        w.shutdown();
+        let _ = reader_thread.join();
+        return Ok(ConnEnd::FrontGone);
+    }
+
+    // The worker pool lives exactly as long as the connection: if the
+    // front goes away, so does every session it owned here (the front
+    // re-creates them elsewhere by §9 replay).
+    let mut live = server.start_live();
+    let ev_rx = live.take_events().expect("fresh pool");
+    let pump_tx: Sender<ConnEvent> = tx;
+    let pump_thread = thread::spawn(move || {
+        for ev in ev_rx {
+            if pump_tx.send(ConnEvent::Live(ev)).is_err() {
+                return;
+            }
+        }
+    });
+
+    // Per-session expected next input seq (admission bookkeeping only;
+    // the authoritative frame counter lives in the worker's session).
+    let mut next_seq: HashMap<u64, u64> = HashMap::new();
+    let mut end = ConnEnd::FrontGone;
+    let mut fatal: Option<anyhow::Error> = None;
+
+    for ev in &rx {
+        match ev {
+            ConnEvent::Wire(Ok(Some(msg))) => {
+                count(obs, Counter::WireRxMsgs, 1);
+                match msg {
+                    Msg::Frame {
+                        session,
+                        seq,
+                        last,
+                        samples,
+                    } => {
+                        if samples.len() != feat as usize {
+                            report.wire_errs += 1;
+                            let detail =
+                                format!("frame has {} samples, feat is {feat}", samples.len());
+                            if send_err(&mut w, obs, ErrCode::BadFrame, session, &detail).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                        let want = next_seq.entry(session).or_insert(0);
+                        if seq != *want {
+                            report.wire_errs += 1;
+                            let detail = format!("frame seq {seq}, expected {want}");
+                            if send_err(&mut w, obs, ErrCode::BadFrame, session, &detail).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                        *want += 1;
+                        report.frames_in += 1;
+                        live.submit(LiveCmd::Frame(FrameJob {
+                            stream_id: session,
+                            frame: Arc::from(samples.as_slice()),
+                            last,
+                        }))?;
+                    }
+                    Msg::Migrate {
+                        session,
+                        t,
+                        feat: mfeat,
+                        history,
+                    } => {
+                        if mfeat != feat {
+                            report.wire_errs += 1;
+                            let detail = format!("migrate feat {mfeat}, shard serves {feat}");
+                            if send_err(&mut w, obs, ErrCode::Protocol, session, &detail).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                        next_seq.insert(session, t);
+                        report.resumes += 1;
+                        live.submit(LiveCmd::Resume {
+                            stream_id: session,
+                            t,
+                            history,
+                        })?;
+                    }
+                    Msg::Drain { session } => {
+                        if session == DRAIN_ALL {
+                            end = ConnEnd::DrainAll;
+                            break;
+                        }
+                        next_seq.remove(&session);
+                        report.drains += 1;
+                        live.submit(LiveCmd::Forget { stream_id: session })?;
+                    }
+                    Msg::Hello { .. } | Msg::FrameOut { .. } => {
+                        report.wire_errs += 1;
+                        if send_err(&mut w, obs, ErrCode::Protocol, 0, "unexpected message")
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Msg::Err { .. } => {
+                        // The front reporting back; note it, serve on.
+                        report.wire_errs += 1;
+                        count(obs, Counter::WireErrs, 1);
+                    }
+                }
+            }
+            ConnEvent::Wire(Ok(None)) => break, // front closed cleanly
+            ConnEvent::Wire(Err(e)) => {
+                report.wire_errs += 1;
+                count(obs, Counter::WireErrs, 1);
+                if !survivable(&e)
+                    || send_err(&mut w, obs, ErrCode::Protocol, 0, &e.to_string()).is_err()
+                {
+                    break; // framing lost — the connection is dead
+                }
+            }
+            ConnEvent::Live(LiveEvent::Out { id, seq, frame }) => {
+                report.frames_out += 1;
+                let out = Msg::FrameOut {
+                    session: id,
+                    seq,
+                    samples: frame,
+                };
+                if send_msg(&mut w, obs, &out).is_err() {
+                    break;
+                }
+            }
+            ConnEvent::Live(LiveEvent::Retired { id, .. }) => {
+                next_seq.remove(&id);
+            }
+            ConnEvent::Live(LiveEvent::ResumeFailed { id, reason }) => {
+                // The replay constructed nothing; report and forget.
+                report.wire_errs += 1;
+                next_seq.remove(&id);
+                if send_err(&mut w, obs, ErrCode::Protocol, id, &reason).is_err() {
+                    break;
+                }
+            }
+            ConnEvent::Live(LiveEvent::Fatal { reason }) => {
+                fatal = Some(anyhow!("shard worker died: {reason}"));
+                break;
+            }
+        }
+    }
+
+    live.shutdown()?;
+    w.shutdown();
+    drop(rx);
+    let _ = pump_thread.join();
+    let _ = reader_thread.join();
+    if let Some(e) = fatal {
+        return Err(e);
+    }
+    Ok(end)
+}
+
+/// Write one message, counting it.  A `Err` return means the peer is
+/// gone (or refuses the bytes); the caller ends the connection rather
+/// than the shard.
+fn send_msg(
+    w: &mut Box<dyn WireWrite>,
+    obs: &Option<ObsHandle>,
+    msg: &Msg,
+) -> Result<(), WireError> {
+    let n = write_msg(w.as_mut(), msg)?;
+    if let Some(h) = obs {
+        h.with(|o| {
+            o.count(Counter::WireTxMsgs, 1);
+            o.count(Counter::WireTxBytes, n as u64);
+        });
+    }
+    Ok(())
+}
+
+fn send_err(
+    w: &mut Box<dyn WireWrite>,
+    obs: &Option<ObsHandle>,
+    code: ErrCode,
+    session: u64,
+    detail: &str,
+) -> Result<(), WireError> {
+    count(obs, Counter::WireErrs, 1);
+    send_msg(
+        w,
+        obs,
+        &Msg::Err {
+            code,
+            session,
+            detail: detail.to_string(),
+        },
+    )
+}

@@ -1,0 +1,192 @@
+//! Production transport: `std::net` TCP, no async runtime.
+//!
+//! Thin wrappers that map `std::io` failures onto typed
+//! [`WireError`]s. `TCP_NODELAY` is set on every stream — the
+//! protocol is small-frame and latency-bound, exactly the workload
+//! Nagle's algorithm hurts.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::transport::{Duplex, Listener, Transport, WireRead, WireWrite};
+use super::wire::WireError;
+
+fn io_err(op: &'static str, e: std::io::Error) -> WireError {
+    WireError::Io {
+        op,
+        detail: e.to_string(),
+    }
+}
+
+struct TcpRead {
+    stream: TcpStream,
+}
+
+struct TcpWrite {
+    stream: TcpStream,
+    down: bool,
+}
+
+impl WireRead for TcpRead {
+    fn recv(&mut self, out: &mut [u8]) -> Result<usize, WireError> {
+        self.stream.read(out).map_err(|e| io_err("read", e))
+    }
+}
+
+impl WireWrite for TcpWrite {
+    fn send(&mut self, bytes: &[u8]) -> Result<(), WireError> {
+        if self.down {
+            return Err(WireError::Closed);
+        }
+        self.stream.write_all(bytes).map_err(|e| io_err("write", e))
+    }
+
+    fn shutdown(&mut self) {
+        if !self.down {
+            self.down = true;
+            let _ = self.stream.shutdown(std::net::Shutdown::Write);
+        }
+    }
+}
+
+fn split(stream: TcpStream) -> Result<Duplex, WireError> {
+    stream.set_nodelay(true).map_err(|e| io_err("nodelay", e))?;
+    let writer = stream.try_clone().map_err(|e| io_err("clone", e))?;
+    Ok((
+        Box::new(TcpRead { stream }),
+        Box::new(TcpWrite {
+            stream: writer,
+            down: false,
+        }),
+    ))
+}
+
+/// TCP dialer for a fixed remote address.
+pub struct TcpConnector {
+    addr: String,
+}
+
+impl TcpConnector {
+    /// Connector for `addr` (`host:port`).
+    pub fn new(addr: impl Into<String>) -> Self {
+        TcpConnector { addr: addr.into() }
+    }
+
+    /// The remote address this connector dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+}
+
+impl Transport for TcpConnector {
+    fn connect(&self) -> Result<Duplex, WireError> {
+        let addrs = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| io_err("resolve", e))?
+            .collect::<Vec<_>>();
+        let mut last = WireError::Io {
+            op: "resolve",
+            detail: format!("no addresses for {}", self.addr),
+        };
+        for a in addrs {
+            match TcpStream::connect(a) {
+                Ok(s) => return split(s),
+                Err(e) => last = io_err("connect", e),
+            }
+        }
+        Err(last)
+    }
+}
+
+/// Listening TCP endpoint. `close()` is implemented by flipping an
+/// atomic flag that the accept loop polls between short
+/// `accept`-with-timeout rounds, because `std::net::TcpListener` has
+/// no portable cancellable accept.
+pub struct TcpPort {
+    listener: TcpListener,
+    closed: Arc<AtomicBool>,
+}
+
+impl TcpPort {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port).
+    pub fn bind(addr: &str) -> Result<Self, WireError> {
+        let listener = TcpListener::bind(addr).map_err(|e| io_err("bind", e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| io_err("nonblocking", e))?;
+        Ok(TcpPort {
+            listener,
+            closed: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound local address (useful with ephemeral ports).
+    pub fn local_addr(&self) -> Result<String, WireError> {
+        self.listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .map_err(|e| io_err("local_addr", e))
+    }
+}
+
+impl Listener for TcpPort {
+    fn accept(&self) -> Result<Duplex, WireError> {
+        loop {
+            if self.closed.load(Ordering::Acquire) {
+                return Err(WireError::Closed);
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream
+                        .set_nonblocking(false)
+                        .map_err(|e| io_err("blocking", e))?;
+                    return split(stream);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(io_err("accept", e)),
+            }
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::{write_msg, FrameReader, Msg};
+
+    #[test]
+    fn tcp_roundtrips_a_frame() {
+        let port = TcpPort::bind("127.0.0.1:0").expect("bind");
+        let addr = port.local_addr().expect("addr");
+        let t = std::thread::spawn(move || {
+            let (r, mut w) = port.accept().expect("accept");
+            let mut reader = FrameReader::new(r);
+            let msg = reader.next_msg().expect("read").expect("msg");
+            write_msg(w.as_mut(), &msg).expect("echo");
+            w.shutdown();
+        });
+        let (r, mut w) = TcpConnector::new(addr).connect().expect("connect");
+        let sent = Msg::Drain { session: 77 };
+        write_msg(w.as_mut(), &sent).expect("send");
+        let mut reader = FrameReader::new(r);
+        assert_eq!(reader.next_msg().expect("read"), Some(sent));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn closed_port_stops_accepting() {
+        let port = TcpPort::bind("127.0.0.1:0").expect("bind");
+        port.close();
+        assert!(matches!(port.accept(), Err(WireError::Closed)));
+    }
+}

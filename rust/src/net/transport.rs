@@ -1,0 +1,68 @@
+//! Transport abstraction: blocking byte-stream duplexes.
+//!
+//! Everything above this layer (front-end, shards, clients) is
+//! written against these traits, so the deterministic loopback
+//! transport used by the fault-matrix tests and the production TCP
+//! transport are interchangeable.
+
+use super::wire::WireError;
+
+/// Blocking read half of a duplex byte stream.
+pub trait WireRead: Send {
+    /// Read up to `out.len()` bytes. `Ok(0)` means EOF (peer closed
+    /// its write half). Blocks until at least one byte is available,
+    /// EOF, or a transport fault.
+    fn recv(&mut self, out: &mut [u8]) -> Result<usize, WireError>;
+}
+
+/// Blocking write half of a duplex byte stream.
+pub trait WireWrite: Send {
+    /// Write all of `bytes` or fail. A bounded transport configured
+    /// to fail fast returns [`WireError::Backpressure`] instead of
+    /// blocking when the peer reads too slowly.
+    fn send(&mut self, bytes: &[u8]) -> Result<(), WireError>;
+
+    /// Close the write half; the peer's reader observes EOF after
+    /// draining buffered bytes. Idempotent.
+    fn shutdown(&mut self);
+}
+
+impl WireRead for Box<dyn WireRead> {
+    fn recv(&mut self, out: &mut [u8]) -> Result<usize, WireError> {
+        (**self).recv(out)
+    }
+}
+
+impl WireWrite for Box<dyn WireWrite> {
+    fn send(&mut self, bytes: &[u8]) -> Result<(), WireError> {
+        (**self).send(bytes)
+    }
+
+    fn shutdown(&mut self) {
+        (**self).shutdown();
+    }
+}
+
+/// A connected duplex: independently-owned read and write halves.
+pub type Duplex = (Box<dyn WireRead>, Box<dyn WireWrite>);
+
+/// Client side of a transport: dial an endpoint.
+pub trait Transport: Send {
+    /// Establish a new duplex to the endpoint.
+    fn connect(&self) -> Result<Duplex, WireError>;
+}
+
+/// Server side of a transport: accept inbound duplexes.  `Sync`
+/// because accept and close race by design (a controller thread
+/// closes a listener the acceptor thread is blocked on).
+pub trait Listener: Send + Sync {
+    /// Block until the next inbound connection. Returns
+    /// [`WireError::Closed`] once [`Listener::close`] is called.
+    fn accept(&self) -> Result<Duplex, WireError>;
+
+    /// Unblock pending and future [`Listener::accept`] calls with
+    /// [`WireError::Closed`]. Idempotent; takes `&self` so a
+    /// controller thread can close a listener another thread is
+    /// accepting on.
+    fn close(&self);
+}

@@ -1,0 +1,847 @@
+//! `soi.wire.v1` — the versioned, length-prefixed binary frame
+//! protocol spoken between clients, the front-end and shards.
+//!
+//! Every message on the wire is `[len: u32 LE][tag: u8][payload]`
+//! where `len` counts the tag byte plus the payload. All multi-byte
+//! integers are little-endian; sample data is IEEE-754 `f32` LE, the
+//! same representation the artifact format (DESIGN.md §13) uses, so
+//! frames cross the wire bit-exactly.
+//!
+//! Decoding follows the `ArtifactError` discipline: everything is
+//! validated *before* anything is constructed. A failed decode yields
+//! exactly one typed [`WireError`] and no partially-decoded [`Msg`];
+//! an oversize length prefix is rejected before any body bytes are
+//! read or buffered. The full grammar and the fault matrix live in
+//! DESIGN.md §14.
+
+use std::fmt;
+
+/// Schema identifier for this protocol revision.
+pub const WIRE_SCHEMA: &str = "soi.wire.v1";
+
+/// Protocol version carried in every [`Msg::Hello`]. Peers with a
+/// different version are rejected with [`WireError::VersionSkew`]
+/// before any session state exists.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Hard ceiling on `tag + payload` length. Anything larger is a
+/// protocol violation ([`WireError::Oversize`]) and is rejected from
+/// the 4-byte prefix alone — the reader never allocates or consumes
+/// the claimed body.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Peer role carried in [`Msg::Hello`].
+pub mod role {
+    /// An end client submitting streams.
+    pub const CLIENT: u8 = 0;
+    /// The front-end (admission + affinity).
+    pub const FRONT: u8 = 1;
+    /// A backend shard running a worker pool.
+    pub const SHARD: u8 = 2;
+}
+
+/// Sentinel session id in [`Msg::Drain`] meaning "the whole shard".
+pub const DRAIN_ALL: u64 = u64::MAX;
+
+mod tag {
+    pub const HELLO: u8 = 1;
+    pub const FRAME: u8 = 2;
+    pub const FRAME_OUT: u8 = 3;
+    pub const MIGRATE: u8 = 4;
+    pub const DRAIN: u8 = 5;
+    pub const ERR: u8 = 6;
+}
+
+/// Typed decode/transport failure. Mirrors `ArtifactError` (§13):
+/// one variant per distinct fault, each carrying enough context to
+/// assert on exactly, and never paired with partial output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Stream ended inside the 4-byte length prefix.
+    TruncatedHeader {
+        /// Header bytes that did arrive (0..4).
+        got: usize,
+    },
+    /// Stream ended inside the message body.
+    TruncatedBody {
+        /// Bytes the prefix promised (tag + payload).
+        want: usize,
+        /// Bytes that actually arrived.
+        got: usize,
+    },
+    /// Length prefix exceeds [`MAX_FRAME`].
+    Oversize {
+        /// The claimed length.
+        len: usize,
+        /// The enforced ceiling ([`MAX_FRAME`]).
+        max: usize,
+    },
+    /// Unknown message tag byte.
+    UnknownTag {
+        /// The offending tag.
+        tag: u8,
+    },
+    /// Peer speaks a different protocol version.
+    VersionSkew {
+        /// The version the peer announced.
+        found: u16,
+    },
+    /// Structurally invalid payload (bad field values, length
+    /// mismatch between the prefix and the fields it frames, …).
+    Malformed {
+        /// Human-readable description of the violation.
+        reason: String,
+    },
+    /// A bounded pipe was full and the transport is configured to
+    /// fail fast instead of blocking (slow-reader backpressure).
+    Backpressure {
+        /// Pipe capacity in bytes.
+        capacity: usize,
+    },
+    /// The peer closed the connection (clean shutdown observed where
+    /// more traffic was required).
+    Closed,
+    /// An OS-level transport error (TCP only; the loopback transport
+    /// never produces this).
+    Io {
+        /// The operation that failed (`"read"`, `"write"`, …).
+        op: &'static str,
+        /// Stringified OS error.
+        detail: String,
+    },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::TruncatedHeader { got } => {
+                write!(f, "truncated header: got {got} of 4 prefix bytes")
+            }
+            WireError::TruncatedBody { want, got } => {
+                write!(f, "truncated body: want {want} bytes, got {got}")
+            }
+            WireError::Oversize { len, max } => {
+                write!(f, "oversize frame: length prefix {len} exceeds max {max}")
+            }
+            WireError::UnknownTag { tag } => write!(f, "unknown message tag {tag}"),
+            WireError::VersionSkew { found } => write!(
+                f,
+                "version skew: peer speaks v{found}, this end speaks v{WIRE_VERSION}"
+            ),
+            WireError::Malformed { reason } => write!(f, "malformed message: {reason}"),
+            WireError::Backpressure { capacity } => {
+                write!(f, "backpressure: pipe full at {capacity} bytes")
+            }
+            WireError::Closed => write!(f, "connection closed by peer"),
+            WireError::Io { op, detail } => write!(f, "io error during {op}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Error codes carried in [`Msg::Err`] — the on-wire projection of
+/// the faults a peer reports back instead of silently dropping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Handshake rejected: incompatible protocol version.
+    VersionSkew,
+    /// Admission control refused the new session.
+    AdmissionDenied,
+    /// A `Frame` violated per-session invariants (seq gap, wrong
+    /// feature width).
+    BadFrame,
+    /// A protocol-level violation on an otherwise healthy connection.
+    Protocol,
+    /// The shard hosting the session was lost and no survivor could
+    /// take it over.
+    ShardLost,
+    /// The peer is shedding load.
+    Backpressure,
+}
+
+impl ErrCode {
+    /// Wire encoding of the code.
+    pub fn as_u16(self) -> u16 {
+        match self {
+            ErrCode::VersionSkew => 1,
+            ErrCode::AdmissionDenied => 2,
+            ErrCode::BadFrame => 3,
+            ErrCode::Protocol => 4,
+            ErrCode::ShardLost => 5,
+            ErrCode::Backpressure => 6,
+        }
+    }
+
+    /// Decode a wire code; `None` for values this version does not
+    /// know (the caller surfaces [`WireError::Malformed`]).
+    pub fn from_u16(v: u16) -> Option<ErrCode> {
+        Some(match v {
+            1 => ErrCode::VersionSkew,
+            2 => ErrCode::AdmissionDenied,
+            3 => ErrCode::BadFrame,
+            4 => ErrCode::Protocol,
+            5 => ErrCode::ShardLost,
+            6 => ErrCode::Backpressure,
+            _ => return None,
+        })
+    }
+
+    /// Stable lowercase name (used in reports and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrCode::VersionSkew => "version_skew",
+            ErrCode::AdmissionDenied => "admission_denied",
+            ErrCode::BadFrame => "bad_frame",
+            ErrCode::Protocol => "protocol",
+            ErrCode::ShardLost => "shard_lost",
+            ErrCode::Backpressure => "backpressure",
+        }
+    }
+}
+
+/// A fully-decoded `soi.wire.v1` message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Handshake, first message in each direction on every
+    /// connection. `version` is the *first* payload field so skew is
+    /// detectable regardless of what follows it.
+    Hello {
+        /// Protocol version ([`WIRE_VERSION`]).
+        version: u16,
+        /// Peer role (see [`role`]).
+        role: u8,
+        /// Feature width per frame (server fills this in its ack).
+        feat: u32,
+        /// Schedule period of the serving variant.
+        period: u32,
+        /// Warmup frames needed for a valid partial-history replay.
+        warmup: u32,
+    },
+    /// One input frame for a session.
+    Frame {
+        /// Session id.
+        session: u64,
+        /// Frame counter; must equal the session's next expected seq.
+        seq: u64,
+        /// True on the final frame of the stream.
+        last: bool,
+        /// Sample data, `feat` values.
+        samples: Vec<f32>,
+    },
+    /// One output frame for a session.
+    FrameOut {
+        /// Session id.
+        session: u64,
+        /// Seq of the input frame this output answers.
+        seq: u64,
+        /// Output sample data.
+        samples: Vec<f32>,
+    },
+    /// Warm-migrate a session onto the receiving shard: resume at
+    /// absolute frame counter `t` by replaying `history` through the
+    /// §9 path (`history.len() == t` or `>= warmup`).
+    Migrate {
+        /// Session id.
+        session: u64,
+        /// Absolute frame counter to resume at.
+        t: u64,
+        /// Feature width of each history frame.
+        feat: u32,
+        /// The most recent acked input frames, oldest first.
+        history: Vec<Vec<f32>>,
+    },
+    /// Retire one session (`session`) or, with [`DRAIN_ALL`], drain
+    /// the whole shard and shut it down.
+    Drain {
+        /// Session id, or [`DRAIN_ALL`].
+        session: u64,
+    },
+    /// A typed error report. `session` is 0 when the error is
+    /// connection-scoped rather than session-scoped.
+    Err {
+        /// What went wrong.
+        code: ErrCode,
+        /// The affected session, or 0.
+        session: u64,
+        /// Short human-readable detail.
+        detail: String,
+    },
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Cursor over a fully-received payload. All getters fail with
+/// [`WireError::Malformed`] on under-run, so decoders cannot read
+/// past the framed length.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Malformed {
+                reason: format!(
+                    "payload too short for {what}: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self, what: &str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u16(&mut self, what: &str) -> Result<u16, WireError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self, what: &str) -> Result<u32, WireError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        let b = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>, WireError> {
+        let b = self.take(n * 4, what)?;
+        let mut v = Vec::with_capacity(n);
+        for c in b.chunks_exact(4) {
+            v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(v)
+    }
+    fn done(&self, tag_name: &str) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed {
+                reason: format!(
+                    "{tag_name}: {} trailing bytes after payload",
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Msg {
+    /// Append the encoded message (prefix + tag + payload) to `out`.
+    /// Refuses to produce a frame larger than [`MAX_FRAME`] — the
+    /// encoder enforces the same ceiling the decoder does.
+    pub fn encode(&self, out: &mut Vec<u8>) -> Result<(), WireError> {
+        let start = out.len();
+        put_u32(out, 0); // length placeholder
+        match self {
+            Msg::Hello {
+                version,
+                role,
+                feat,
+                period,
+                warmup,
+            } => {
+                out.push(tag::HELLO);
+                put_u16(out, *version);
+                out.push(*role);
+                put_u32(out, *feat);
+                put_u32(out, *period);
+                put_u32(out, *warmup);
+            }
+            Msg::Frame {
+                session,
+                seq,
+                last,
+                samples,
+            } => {
+                out.push(tag::FRAME);
+                put_u64(out, *session);
+                put_u64(out, *seq);
+                out.push(u8::from(*last));
+                put_u32(out, samples.len() as u32);
+                put_f32s(out, samples);
+            }
+            Msg::FrameOut {
+                session,
+                seq,
+                samples,
+            } => {
+                out.push(tag::FRAME_OUT);
+                put_u64(out, *session);
+                put_u64(out, *seq);
+                put_u32(out, samples.len() as u32);
+                put_f32s(out, samples);
+            }
+            Msg::Migrate {
+                session,
+                t,
+                feat,
+                history,
+            } => {
+                out.push(tag::MIGRATE);
+                put_u64(out, *session);
+                put_u64(out, *t);
+                put_u32(out, history.len() as u32);
+                put_u32(out, *feat);
+                for frame in history {
+                    if frame.len() != *feat as usize {
+                        out.truncate(start);
+                        return Err(WireError::Malformed {
+                            reason: format!(
+                                "migrate history frame has {} samples, feat is {feat}",
+                                frame.len()
+                            ),
+                        });
+                    }
+                    put_f32s(out, frame);
+                }
+            }
+            Msg::Drain { session } => {
+                out.push(tag::DRAIN);
+                put_u64(out, *session);
+            }
+            Msg::Err {
+                code,
+                session,
+                detail,
+            } => {
+                out.push(tag::ERR);
+                put_u16(out, code.as_u16());
+                put_u64(out, *session);
+                let bytes = detail.as_bytes();
+                if bytes.len() > u16::MAX as usize {
+                    out.truncate(start);
+                    return Err(WireError::Malformed {
+                        reason: format!("err detail too long: {} bytes", bytes.len()),
+                    });
+                }
+                put_u16(out, bytes.len() as u16);
+                out.extend_from_slice(bytes);
+            }
+        }
+        let len = out.len() - start - 4;
+        if len > MAX_FRAME {
+            out.truncate(start);
+            return Err(WireError::Oversize {
+                len,
+                max: MAX_FRAME,
+            });
+        }
+        out[start..start + 4].copy_from_slice(&(len as u32).to_le_bytes());
+        Ok(())
+    }
+
+    /// Decode one message from a complete `tag + payload` body (the
+    /// length prefix already stripped and bounds-checked by
+    /// [`FrameReader`]). Validates everything before constructing the
+    /// message; on error nothing of the message escapes.
+    pub fn decode(body: &[u8]) -> Result<Msg, WireError> {
+        let mut c = Cur::new(body);
+        let t = c.u8("tag")?;
+        match t {
+            tag::HELLO => {
+                let version = c.u16("hello.version")?;
+                if version != WIRE_VERSION {
+                    return Err(WireError::VersionSkew { found: version });
+                }
+                let role = c.u8("hello.role")?;
+                if role > role::SHARD {
+                    return Err(WireError::Malformed {
+                        reason: format!("hello: unknown role {role}"),
+                    });
+                }
+                let feat = c.u32("hello.feat")?;
+                let period = c.u32("hello.period")?;
+                let warmup = c.u32("hello.warmup")?;
+                c.done("hello")?;
+                Ok(Msg::Hello {
+                    version,
+                    role,
+                    feat,
+                    period,
+                    warmup,
+                })
+            }
+            tag::FRAME => {
+                let session = c.u64("frame.session")?;
+                let seq = c.u64("frame.seq")?;
+                let last = c.u8("frame.last")?;
+                if last > 1 {
+                    return Err(WireError::Malformed {
+                        reason: format!("frame.last must be 0 or 1, got {last}"),
+                    });
+                }
+                let n = c.u32("frame.n")? as usize;
+                let samples = c.f32s(n, "frame.samples")?;
+                c.done("frame")?;
+                Ok(Msg::Frame {
+                    session,
+                    seq,
+                    last: last == 1,
+                    samples,
+                })
+            }
+            tag::FRAME_OUT => {
+                let session = c.u64("frame_out.session")?;
+                let seq = c.u64("frame_out.seq")?;
+                let n = c.u32("frame_out.n")? as usize;
+                let samples = c.f32s(n, "frame_out.samples")?;
+                c.done("frame_out")?;
+                Ok(Msg::FrameOut {
+                    session,
+                    seq,
+                    samples,
+                })
+            }
+            tag::MIGRATE => {
+                let session = c.u64("migrate.session")?;
+                let t_abs = c.u64("migrate.t")?;
+                let h = c.u32("migrate.h")? as usize;
+                let feat = c.u32("migrate.feat")?;
+                // Validate the framed length up front so a lying
+                // header cannot trigger h partial allocations.
+                let want = h
+                    .checked_mul(feat as usize)
+                    .and_then(|n| n.checked_mul(4))
+                    .ok_or_else(|| WireError::Malformed {
+                        reason: format!("migrate: h={h} x feat={feat} overflows"),
+                    })?;
+                if body.len() - c.pos != want {
+                    return Err(WireError::Malformed {
+                        reason: format!(
+                            "migrate: history needs {want} bytes, payload has {}",
+                            body.len() - c.pos
+                        ),
+                    });
+                }
+                let mut history = Vec::with_capacity(h);
+                for _ in 0..h {
+                    history.push(c.f32s(feat as usize, "migrate.history")?);
+                }
+                c.done("migrate")?;
+                Ok(Msg::Migrate {
+                    session,
+                    t: t_abs,
+                    feat,
+                    history,
+                })
+            }
+            tag::DRAIN => {
+                let session = c.u64("drain.session")?;
+                c.done("drain")?;
+                Ok(Msg::Drain { session })
+            }
+            tag::ERR => {
+                let raw = c.u16("err.code")?;
+                let code = ErrCode::from_u16(raw).ok_or_else(|| WireError::Malformed {
+                    reason: format!("err: unknown code {raw}"),
+                })?;
+                let session = c.u64("err.session")?;
+                let dlen = c.u16("err.detail_len")? as usize;
+                let bytes = c.take(dlen, "err.detail")?;
+                let detail =
+                    std::str::from_utf8(bytes).map_err(|_| WireError::Malformed {
+                        reason: "err: detail is not valid UTF-8".to_string(),
+                    })?;
+                c.done("err")?;
+                Ok(Msg::Err {
+                    code,
+                    session,
+                    detail: detail.to_string(),
+                })
+            }
+            other => Err(WireError::UnknownTag { tag: other }),
+        }
+    }
+
+    /// Stable lowercase name of the message kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::Frame { .. } => "frame",
+            Msg::FrameOut { .. } => "frame_out",
+            Msg::Migrate { .. } => "migrate",
+            Msg::Drain { .. } => "drain",
+            Msg::Err { .. } => "err",
+        }
+    }
+}
+
+use super::transport::{WireRead, WireWrite};
+
+/// Incremental reader: pulls bytes from a [`WireRead`] and yields
+/// complete, validated messages. EOF exactly on a message boundary is
+/// a clean close (`Ok(None)`); EOF anywhere else is the matching
+/// truncation error. An oversize prefix is rejected before any body
+/// byte is read.
+pub struct FrameReader<R> {
+    src: R,
+    buf: Vec<u8>,
+    /// Bytes of `buf` that are valid (carry-over between reads).
+    len: usize,
+}
+
+impl<R: WireRead> FrameReader<R> {
+    /// Wrap a transport read half.
+    pub fn new(src: R) -> Self {
+        FrameReader {
+            src,
+            buf: vec![0u8; 4096],
+            len: 0,
+        }
+    }
+
+    /// Ensure at least `need` buffered bytes, reading as required.
+    /// Returns the number of buffered bytes (< `need` iff EOF).
+    fn fill(&mut self, need: usize) -> Result<usize, WireError> {
+        if self.buf.len() < need {
+            self.buf.resize(need, 0);
+        }
+        while self.len < need {
+            let n = self.src.recv(&mut self.buf[self.len..])?;
+            if n == 0 {
+                break;
+            }
+            self.len += n;
+        }
+        Ok(self.len)
+    }
+
+    /// Drop `n` consumed bytes from the front of the buffer.
+    fn consume(&mut self, n: usize) {
+        self.buf.copy_within(n..self.len, 0);
+        self.len -= n;
+    }
+
+    /// Read the next message. `Ok(None)` on clean EOF at a message
+    /// boundary; typed [`WireError`] on any fault.
+    pub fn next_msg(&mut self) -> Result<Option<Msg>, WireError> {
+        let have = self.fill(4)?;
+        if have == 0 {
+            return Ok(None);
+        }
+        if have < 4 {
+            let got = have;
+            self.len = 0;
+            return Err(WireError::TruncatedHeader { got });
+        }
+        let len = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]])
+            as usize;
+        if len > MAX_FRAME {
+            self.len = 0;
+            return Err(WireError::Oversize {
+                len,
+                max: MAX_FRAME,
+            });
+        }
+        if len == 0 {
+            self.len = 0;
+            return Err(WireError::Malformed {
+                reason: "zero-length frame (no tag byte)".to_string(),
+            });
+        }
+        let have = self.fill(4 + len)?;
+        if have < 4 + len {
+            let got = have - 4;
+            self.len = 0;
+            return Err(WireError::TruncatedBody { want: len, got });
+        }
+        // The frame is well-delimited even if its body is invalid:
+        // consume it either way, so a typed decode error on one
+        // message leaves the reader positioned at the next one and
+        // the connection's other sessions can keep flowing.
+        let res = Msg::decode(&self.buf[4..4 + len]);
+        self.consume(4 + len);
+        Ok(Some(res?))
+    }
+}
+
+/// Encode and send one message over a transport write half.
+pub fn write_msg<W: WireWrite + ?Sized>(w: &mut W, msg: &Msg) -> Result<usize, WireError> {
+    let mut buf = Vec::with_capacity(64);
+    msg.encode(&mut buf)?;
+    w.send(&buf)?;
+    Ok(buf.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        m.encode(&mut buf).expect("encode");
+        let len =
+            u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        assert_eq!(len, buf.len() - 4, "prefix counts tag+payload");
+        Msg::decode(&buf[4..]).expect("decode")
+    }
+
+    #[test]
+    fn all_message_kinds_roundtrip() {
+        let msgs = vec![
+            Msg::Hello {
+                version: WIRE_VERSION,
+                role: role::SHARD,
+                feat: 4,
+                period: 8,
+                warmup: 3,
+            },
+            Msg::Frame {
+                session: 7,
+                seq: 42,
+                last: true,
+                samples: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE],
+            },
+            Msg::FrameOut {
+                session: 7,
+                seq: 42,
+                samples: vec![0.125; 6],
+            },
+            Msg::Migrate {
+                session: 9,
+                t: 16,
+                feat: 2,
+                history: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            },
+            Msg::Drain { session: DRAIN_ALL },
+            Msg::Err {
+                code: ErrCode::AdmissionDenied,
+                session: 3,
+                detail: "full".to_string(),
+            },
+        ];
+        for m in &msgs {
+            assert_eq!(&roundtrip(m), m, "{} roundtrip", m.kind());
+        }
+    }
+
+    #[test]
+    fn empty_frame_payload_roundtrips() {
+        let m = Msg::Frame {
+            session: 1,
+            seq: 0,
+            last: false,
+            samples: vec![],
+        };
+        assert_eq!(roundtrip(&m), m);
+    }
+
+    #[test]
+    fn encode_refuses_oversize() {
+        let m = Msg::Frame {
+            session: 1,
+            seq: 0,
+            last: false,
+            samples: vec![0.0; MAX_FRAME / 4],
+        };
+        let mut buf = Vec::new();
+        match m.encode(&mut buf) {
+            Err(WireError::Oversize { max, .. }) => assert_eq!(max, MAX_FRAME),
+            other => panic!("expected Oversize, got {other:?}"),
+        }
+        assert!(buf.is_empty(), "failed encode leaves no partial bytes");
+    }
+
+    #[test]
+    fn version_skew_detected_before_rest_of_hello() {
+        let m = Msg::Hello {
+            version: WIRE_VERSION,
+            role: role::CLIENT,
+            feat: 4,
+            period: 8,
+            warmup: 3,
+        };
+        let mut buf = Vec::new();
+        m.encode(&mut buf).unwrap();
+        // Flip the version field (first payload field after the tag)
+        // and truncate the rest: skew must still be the error.
+        buf[5] = 0x63;
+        match Msg::decode(&buf[4..7]) {
+            Err(WireError::VersionSkew { found }) => assert_eq!(found, 0x63),
+            other => panic!("expected VersionSkew, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_tag_is_typed() {
+        match Msg::decode(&[0xEE]) {
+            Err(WireError::UnknownTag { tag }) => assert_eq!(tag, 0xEE),
+            other => panic!("expected UnknownTag, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_malformed() {
+        let m = Msg::Drain { session: 5 };
+        let mut buf = Vec::new();
+        m.encode(&mut buf).unwrap();
+        buf.push(0);
+        match Msg::decode(&buf[4..]) {
+            Err(WireError::Malformed { reason }) => {
+                assert!(reason.contains("trailing"), "{reason}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn migrate_length_must_match_header() {
+        let m = Msg::Migrate {
+            session: 1,
+            t: 2,
+            feat: 2,
+            history: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+        };
+        let mut buf = Vec::new();
+        m.encode(&mut buf).unwrap();
+        // Claim 3 history frames while carrying 2.
+        let h_off = 4 + 1 + 8 + 8;
+        buf[h_off..h_off + 4].copy_from_slice(&3u32.to_le_bytes());
+        match Msg::decode(&buf[4..]) {
+            Err(WireError::Malformed { reason }) => {
+                assert!(reason.contains("history"), "{reason}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn err_code_names_roundtrip() {
+        for code in [
+            ErrCode::VersionSkew,
+            ErrCode::AdmissionDenied,
+            ErrCode::BadFrame,
+            ErrCode::Protocol,
+            ErrCode::ShardLost,
+            ErrCode::Backpressure,
+        ] {
+            assert_eq!(ErrCode::from_u16(code.as_u16()), Some(code));
+            assert!(!code.name().is_empty());
+        }
+        assert_eq!(ErrCode::from_u16(0), None);
+        assert_eq!(ErrCode::from_u16(999), None);
+    }
+}

@@ -200,6 +200,12 @@ fn event_record(seq: u64, worker: Option<usize>, ev: &Event) -> Json {
             ("streams", num(ev.c)),
             ("ns", num(ev.d)),
         ]),
+        EventKind::ShardMigrate => kv.extend([
+            ("session", num(ev.a)),
+            ("t", num(ev.b)),
+            ("replay_frames", num(ev.c)),
+            ("ns", num(ev.d)),
+        ]),
     }
     Json::obj(kv)
 }

@@ -43,11 +43,25 @@ pub enum Counter {
     CtlRecovers,
     /// Weight-generation hot reloads adopted by a worker (DESIGN.md §13).
     GenReloads,
+    /// Wire messages received (`soi.wire.v1`, DESIGN.md §14).
+    WireRxMsgs,
+    /// Wire messages sent.
+    WireTxMsgs,
+    /// Wire bytes received (prefix + tag + payload).
+    WireRxBytes,
+    /// Wire bytes sent.
+    WireTxBytes,
+    /// Typed wire faults observed (decode errors, backpressure, peer
+    /// loss — DESIGN.md §14 fault matrix).
+    WireErrs,
+    /// Sessions admitted mid-stream by cross-shard §9 replay
+    /// ([`crate::coordinator::StreamSession::resume`]).
+    ShardMigrates,
 }
 
 impl Counter {
     /// Number of counters (sizes the per-worker array).
-    pub const COUNT: usize = 10;
+    pub const COUNT: usize = 16;
 
     /// Every counter, in array-index order.
     pub const ALL: [Counter; Counter::COUNT] = [
@@ -61,6 +75,12 @@ impl Counter {
         Counter::CtlDegrades,
         Counter::CtlRecovers,
         Counter::GenReloads,
+        Counter::WireRxMsgs,
+        Counter::WireTxMsgs,
+        Counter::WireRxBytes,
+        Counter::WireTxBytes,
+        Counter::WireErrs,
+        Counter::ShardMigrates,
     ];
 
     /// Stable snake_case name used as the NDJSON object key.
@@ -76,6 +96,12 @@ impl Counter {
             Counter::CtlDegrades => "ctl_degrades",
             Counter::CtlRecovers => "ctl_recovers",
             Counter::GenReloads => "gen_reloads",
+            Counter::WireRxMsgs => "wire_rx_msgs",
+            Counter::WireTxMsgs => "wire_tx_msgs",
+            Counter::WireRxBytes => "wire_rx_bytes",
+            Counter::WireTxBytes => "wire_tx_bytes",
+            Counter::WireErrs => "wire_errs",
+            Counter::ShardMigrates => "shard_migrates",
         }
     }
 
@@ -101,11 +127,15 @@ pub enum Gauge {
     /// The weight generation the worker currently serves (0 when the
     /// server runs without hot reload — DESIGN.md §13).
     Generation,
+    /// The 1-based shard id of a `serve-shard` process (0 = this
+    /// process is not a network shard — DESIGN.md §14).  Lets a
+    /// cluster controller attribute a merged feed line to its shard.
+    ShardId,
 }
 
 impl Gauge {
     /// Number of gauges (sizes the per-worker array).
-    pub const COUNT: usize = 5;
+    pub const COUNT: usize = 6;
 
     /// Every gauge, in array-index order.
     pub const ALL: [Gauge; Gauge::COUNT] = [
@@ -114,6 +144,7 @@ impl Gauge {
         Gauge::TargetRung,
         Gauge::StreamsLive,
         Gauge::Generation,
+        Gauge::ShardId,
     ];
 
     /// Stable snake_case name used as the NDJSON object key.
@@ -124,6 +155,7 @@ impl Gauge {
             Gauge::TargetRung => "target_rung",
             Gauge::StreamsLive => "streams_live",
             Gauge::Generation => "generation",
+            Gauge::ShardId => "shard_id",
         }
     }
 
@@ -337,6 +369,24 @@ impl ObsHandle {
         });
     }
 
+    /// Record a session admitted mid-stream by cross-shard §9 replay
+    /// (a shard serving a `Migrate` message — DESIGN.md §14): bumps
+    /// [`Counter::ShardMigrates`] and emits a
+    /// [`EventKind::ShardMigrate`] event, one lock.
+    pub fn shard_migrate(&self, stream: u64, t: u64, replay_frames: usize, ns: u64) {
+        self.with(|w| {
+            w.count(Counter::ShardMigrates, 1);
+            w.push_event(
+                EventKind::ShardMigrate,
+                stream,
+                t,
+                replay_frames as u64,
+                ns,
+                0,
+            );
+        });
+    }
+
     /// Record a quantized-plan (re)pack.
     pub fn quant_repack(&self, panels: usize, bytes: usize, ns: u64) {
         self.with(|w| {
@@ -406,24 +456,35 @@ mod tests {
         h.migration(5, 0, 1, 12, 300);
         h.quant_repack(7, 4096, 400);
         h.gen_reload(3, 4, 6, 500);
+        h.shard_migrate(5, 32, 12, 600);
         h.with(|w| {
             assert_eq!(w.counter(Counter::FpPre), 1);
             assert_eq!(w.counter(Counter::FpRest), 1);
             assert_eq!(w.counter(Counter::Migrations), 1);
             assert_eq!(w.counter(Counter::QuantRepacks), 1);
             assert_eq!(w.counter(Counter::GenReloads), 1);
+            assert_eq!(w.counter(Counter::ShardMigrates), 1);
             assert_eq!(w.gauge(Gauge::Generation), 4);
             let mut evs = Vec::new();
             w.drain_events(&mut evs);
             let kinds: Vec<&str> = evs.iter().map(|e| e.kind.name()).collect();
             assert_eq!(
                 kinds,
-                vec!["fp_pre", "fp_rest", "migration", "quant_repack", "gen_reload"]
+                vec![
+                    "fp_pre",
+                    "fp_rest",
+                    "migration",
+                    "quant_repack",
+                    "gen_reload",
+                    "shard_migrate"
+                ]
             );
             let m = &evs[2];
             assert_eq!((m.a, m.b, m.c, m.d, m.e), (5, 0, 1, 12, 300));
             let g = &evs[4];
             assert_eq!((g.a, g.b, g.c, g.d, g.e), (3, 4, 6, 500, 0));
+            let s = &evs[5];
+            assert_eq!((s.a, s.b, s.c, s.d, s.e), (5, 32, 12, 600, 0));
         });
     }
 }

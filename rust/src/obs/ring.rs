@@ -48,6 +48,11 @@ pub enum EventKind {
     /// `a` = from generation, `b` = to generation, `c` = live streams on
     /// the worker at adoption, `d` = weight-upload wall time ns.
     GenReload,
+    /// Session admitted mid-stream by cross-shard §9 replay
+    /// (DESIGN.md §14): `a` = stream id, `b` = absolute frame counter
+    /// resumed at, `c` = history frames replayed, `d` = replay wall
+    /// time ns.
+    ShardMigrate,
 }
 
 impl EventKind {
@@ -63,6 +68,7 @@ impl EventKind {
             EventKind::QuantRepack => "quant_repack",
             EventKind::CtlDecision => "ctl_decision",
             EventKind::GenReload => "gen_reload",
+            EventKind::ShardMigrate => "shard_migrate",
         }
     }
 }

@@ -83,6 +83,7 @@ fn validate_event(v: &Json) -> Result<(), String> {
         "quant_repack" => &["panels", "bytes", "ns"],
         "ctl_decision" => &["from_rung", "to_rung", "backlog", "p99_us"], // + str 'trigger'
         "gen_reload" => &["from_gen", "to_gen", "streams", "ns"],
+        "shard_migrate" => &["session", "t", "replay_frames", "ns"],
         other => return Err(format!("unknown event kind '{other}'")),
     };
     for f in fields {

@@ -1,0 +1,461 @@
+//! Sharded serving end-to-end (DESIGN.md §14): a front-end over
+//! loopback shards must serve bit-identically to a single process.
+//!
+//! Covered here, all over the deterministic loopback transport:
+//! sharded output equality with [`Server::run`], planned cross-shard
+//! warm migration with zero dropped frames, shard-loss containment
+//! (orphans resume bit-identically on a survivor while siblings never
+//! notice; losing the *only* shard yields exactly
+//! `ErrCode::ShardLost`), typed admission denial that spares the
+//! admitted session, and an in-band version-skewed hello answered
+//! with a typed error on a connection that then recovers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+
+use soi::coordinator::Server;
+use soi::net::wire::{role, write_msg};
+use soi::net::{
+    run_shard, spawn_front, ErrCode, FrameReader, FrontHandle, FrontPolicy, FrontReport, Listener,
+    LoopbackHub, Msg, ShardConfig, ShardLink, ShardReport, Transport, WireClient, WireRead,
+    WireWrite, WIRE_VERSION,
+};
+use soi::runtime::{synth, CompiledVariant, ModelConfig, Runtime};
+use soi::util::rng::Rng;
+
+fn cfg(scc: Vec<usize>, shift_pos: Option<usize>) -> ModelConfig {
+    ModelConfig {
+        feat: 4,
+        channels: vec![5, 6, 7],
+        kernel: 3,
+        extrap: vec!["duplicate".into(); scc.len()],
+        scc,
+        shift_pos,
+        shift: 1,
+        interp: None,
+    }
+}
+
+fn variant(rt: &Arc<Runtime>, c: &ModelConfig, name: &str) -> Arc<CompiledVariant> {
+    let m = synth::manifest(c, name, 32);
+    let w = synth::he_weights(&m, 0xFEED);
+    Arc::new(CompiledVariant::with_weights(rt.clone(), m, w).expect("compile native variant"))
+}
+
+fn random_frames(feat: usize, t: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..t)
+        .map(|_| (0..feat).map(|_| rng.normal() as f32 * 0.3).collect())
+        .collect()
+}
+
+fn random_streams(feat: usize, n: usize, t: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    (0..n)
+        .map(|i| random_frames(feat, t, seed ^ (i as u64 + 1)))
+        .collect()
+}
+
+/// The exact outputs the fleet must reproduce: the same streams served
+/// by one in-process worker pool.
+fn reference_outputs(cv: &Arc<CompiledVariant>, streams: &[Vec<Vec<f32>>]) -> Vec<Vec<Vec<f32>>> {
+    let server = Server::new(cv.clone(), 2);
+    let report = server.run(streams).expect("reference serve");
+    (0..streams.len() as u64)
+        .map(|sid| report.outputs.get(&sid).cloned().unwrap_or_default())
+        .collect()
+}
+
+/// One real shard (worker pool + wire endpoint) on its own loopback
+/// hub, running until the front drains it.
+fn real_shard(
+    cv: &Arc<CompiledVariant>,
+    name: &str,
+    shard_id: u64,
+) -> (ShardLink, JoinHandle<ShardReport>) {
+    let hub = LoopbackHub::new();
+    let server = Server::new(cv.clone(), 2);
+    let shard_hub = hub.clone();
+    let join = thread::spawn(move || {
+        run_shard(&server, &shard_hub, ShardConfig { shard_id }).expect("shard serves")
+    });
+    (
+        ShardLink {
+            name: name.to_string(),
+            transport: Box::new(hub),
+        },
+        join,
+    )
+}
+
+/// A byte-copying man-in-the-middle between the front and a real
+/// shard.  Flipping the returned switch severs both directions at the
+/// next byte — the loopback equivalent of the shard process dying
+/// mid-stream.
+fn crashable_shard(
+    cv: &Arc<CompiledVariant>,
+    name: &str,
+    shard_id: u64,
+) -> (ShardLink, Arc<AtomicBool>, JoinHandle<ShardReport>) {
+    let inner = LoopbackHub::new();
+    let outer = LoopbackHub::new();
+    let server = Server::new(cv.clone(), 2);
+    let shard_hub = inner.clone();
+    let join = thread::spawn(move || {
+        run_shard(&server, &shard_hub, ShardConfig { shard_id }).expect("shard serves")
+    });
+    let kill = Arc::new(AtomicBool::new(false));
+    let proxy_kill = kill.clone();
+    let accept_hub = outer.clone();
+    thread::spawn(move || {
+        let Ok((mut from_front, mut to_front)) = accept_hub.accept() else {
+            return;
+        };
+        let Ok((mut from_shard, mut to_shard)) = inner.connect() else {
+            return;
+        };
+        let back = thread::spawn(move || {
+            let mut buf = [0u8; 4096];
+            loop {
+                match from_shard.recv(&mut buf) {
+                    Ok(0) | Err(_) => return,
+                    Ok(n) => {
+                        if to_front.send(&buf[..n]).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+        });
+        let mut buf = [0u8; 4096];
+        loop {
+            match from_front.recv(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    if proxy_kill.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if to_shard.send(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+        // Severing both pipe pairs here cascades: the shard sees EOF
+        // and drops its sessions; the front sees EOF and re-homes them.
+        drop(from_front);
+        drop(to_shard);
+        let _ = back.join();
+        inner.close();
+    });
+    (
+        ShardLink {
+            name: name.to_string(),
+            transport: Box::new(outer),
+        },
+        kill,
+        join,
+    )
+}
+
+struct Fleet {
+    front: FrontHandle,
+    hub: LoopbackHub,
+    shards: Vec<JoinHandle<ShardReport>>,
+}
+
+fn boot_front(links: Vec<ShardLink>, policy: FrontPolicy) -> (FrontHandle, LoopbackHub) {
+    let hub = LoopbackHub::new();
+    let front = spawn_front(Box::new(hub.clone()), links, policy).expect("front boots");
+    (front, hub)
+}
+
+fn boot_fleet(cv: &Arc<CompiledVariant>, n_shards: usize, policy: FrontPolicy) -> Fleet {
+    let mut links = Vec::new();
+    let mut shards = Vec::new();
+    for i in 0..n_shards {
+        let (link, join) = real_shard(cv, &format!("shard{i}"), i as u64 + 1);
+        links.push(link);
+        shards.push(join);
+    }
+    let (front, hub) = boot_front(links, policy);
+    Fleet { front, hub, shards }
+}
+
+impl Fleet {
+    /// Drain the fleet: the front sends whole-shard `Drain`s, so every
+    /// shard thread exits with its report.
+    fn stop(self) -> (FrontReport, Vec<ShardReport>) {
+        let report = self.front.stop().expect("front stops");
+        let shard_reports = self
+            .shards
+            .into_iter()
+            .map(|j| j.join().expect("shard joins"))
+            .collect();
+        (report, shard_reports)
+    }
+}
+
+fn send_frame(client: &mut WireClient, session: u64, seq: usize, last: bool, f: &[f32]) {
+    client
+        .send(&Msg::Frame {
+            session,
+            seq: seq as u64,
+            last,
+            samples: f.to_vec(),
+        })
+        .expect("send frame");
+}
+
+/// Send frames `from..to` of every stream, round-robin per round —
+/// the same interleaving single-process serving dispatches in.
+fn send_rr(client: &mut WireClient, streams: &[Vec<Vec<f32>>], from: usize, to: usize) {
+    for seq in from..to {
+        for (sid, frames) in streams.iter().enumerate() {
+            send_frame(client, sid as u64, seq, seq + 1 == frames.len(), &frames[seq]);
+        }
+    }
+}
+
+/// Receive `FrameOut`s until each session `i` holds `targets[i]`
+/// outputs; anything other than an output frame fails the test.
+fn collect_until(client: &mut WireClient, outs: &mut [Vec<Vec<f32>>], targets: &[usize]) {
+    while outs.iter().zip(targets).any(|(o, t)| o.len() < *t) {
+        match client.recv() {
+            Ok(Some(Msg::FrameOut {
+                session, samples, ..
+            })) => {
+                let sid = session as usize;
+                assert!(sid < outs.len(), "output for unknown session {session}");
+                outs[sid].push(samples);
+            }
+            other => panic!("expected FrameOut, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn sharded_serving_is_bit_identical_to_single_process() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2], None), "scc2");
+    let streams = random_streams(4, 4, 32, 0xD15C);
+    let reference = reference_outputs(&cv, &streams);
+
+    let fleet = boot_fleet(&cv, 2, FrontPolicy::default());
+    let mut client = WireClient::connect(&fleet.hub).expect("connect");
+    assert_eq!(client.feat(), 4, "handshake reports the model shape");
+    let outs = client.serve_streams(&streams).expect("sharded serve");
+    assert_eq!(outs, reference, "sharded outputs must be bit-identical");
+    client.shutdown();
+
+    let (front, shards) = fleet.stop();
+    assert_eq!(front.admitted, 4);
+    assert_eq!(front.denied, 0);
+    assert_eq!(front.migrations, 0);
+    assert_eq!(front.frames_out, 4 * 32, "every input produced one forwarded output");
+    for (i, s) in shards.iter().enumerate() {
+        assert!(s.frames_in > 0, "shard {i} served nothing — affinity never spread");
+    }
+    let total: u64 = shards.iter().map(|s| s.frames_in).sum();
+    assert_eq!(total, 4 * 32, "no frame was duplicated or lost across the fleet");
+}
+
+#[test]
+fn planned_migration_drops_nothing_and_is_bit_identical() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2], None), "scc2");
+    let total = 24usize;
+    let frames = random_frames(4, total, 0x316);
+    let reference = reference_outputs(&cv, std::slice::from_ref(&frames));
+
+    let fleet = boot_fleet(&cv, 2, FrontPolicy::default());
+    let mut client = WireClient::connect(&fleet.hub).expect("connect");
+    let half = total / 2;
+    for (i, f) in frames[..half].iter().enumerate() {
+        send_frame(&mut client, 0, i, false, f);
+    }
+    let mut outs = vec![Vec::new()];
+    collect_until(&mut client, &mut outs, &[half]);
+
+    // The session is quiet (everything acked) and deterministically
+    // homed on shard 0, so nominating shard 0 is ignored and shard 1
+    // is exactly one real warm move.
+    fleet.front.migrate(0, 0).expect("no-op nomination");
+    fleet.front.migrate(0, 1).expect("nominate shard 1");
+    for (i, f) in frames[half..].iter().enumerate() {
+        let seq = half + i;
+        send_frame(&mut client, 0, seq, seq + 1 == total, f);
+    }
+    collect_until(&mut client, &mut outs, &[total]);
+    assert_eq!(outs[0], reference[0], "migrated session must be bit-identical");
+    client.shutdown();
+
+    let (front, shards) = fleet.stop();
+    assert_eq!(front.migrations, 1, "exactly one real warm move");
+    assert_eq!(front.frames_out, total as u64, "zero dropped frames");
+    assert_eq!(shards[1].resumes, 1, "target admitted the replay");
+    assert_eq!(shards[0].drains, 1, "old home retired the session");
+    assert_eq!(
+        shards[0].frames_in + shards[1].frames_in,
+        total as u64,
+        "planned migration re-sends nothing"
+    );
+}
+
+#[test]
+fn shard_loss_is_contained_and_orphans_resume_bit_identically() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2], None), "scc2");
+    let total = 24usize;
+    let streams = random_streams(4, 2, total, 0xC4A5);
+    let reference = reference_outputs(&cv, &streams);
+
+    let (victim_link, kill, victim_join) = crashable_shard(&cv, "victim", 1);
+    let (survivor_link, survivor_join) = real_shard(&cv, "survivor", 2);
+    let (front, hub) = boot_front(vec![victim_link, survivor_link], FrontPolicy::default());
+    let mut client = WireClient::connect(&hub).expect("connect");
+
+    // Session 0 lands on the (crashable) shard 0, session 1 on shard 1.
+    let half = total / 2;
+    send_rr(&mut client, &streams, 0, half);
+    let mut outs = vec![Vec::new(), Vec::new()];
+    collect_until(&mut client, &mut outs, &[half, half]);
+
+    // Kill the shard hosting session 0: the next byte severs it, the
+    // front re-homes the orphan by §9 replay and re-sends the unacked
+    // tail.  The sibling on the survivor never notices.
+    kill.store(true, Ordering::SeqCst);
+    send_rr(&mut client, &streams, half, total);
+    collect_until(&mut client, &mut outs, &[total, total]);
+    assert_eq!(outs, reference, "orphan and sibling must both be bit-identical");
+    client.shutdown();
+
+    let report = front.stop().expect("front stops");
+    assert_eq!(report.shard_losses, 1);
+    assert!(report.migrations >= 1, "crash re-home is a warm migration");
+    assert_eq!(report.frames_out, 2 * total as u64, "zero dropped frames");
+    let victim = victim_join.join().expect("victim joins");
+    let survivor = survivor_join.join().expect("survivor joins");
+    assert_eq!(victim.conns, 1);
+    assert_eq!(victim.frames_in, half as u64, "victim saw nothing after the crash");
+    assert!(survivor.resumes >= 1, "survivor admitted the replay");
+}
+
+#[test]
+fn losing_the_only_shard_yields_exact_shard_lost_error() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2], None), "scc2");
+    let frames = random_frames(4, 4, 0x10E);
+
+    let (link, kill, victim_join) = crashable_shard(&cv, "only", 1);
+    let (front, hub) = boot_front(vec![link], FrontPolicy::default());
+    let mut client = WireClient::connect(&hub).expect("connect");
+    send_frame(&mut client, 0, 0, false, &frames[0]);
+    let mut outs = vec![Vec::new()];
+    collect_until(&mut client, &mut outs, &[1]);
+
+    kill.store(true, Ordering::SeqCst);
+    send_frame(&mut client, 0, 1, false, &frames[1]);
+    match client.recv() {
+        Ok(Some(Msg::Err { code, session, .. })) => {
+            assert_eq!(code, ErrCode::ShardLost, "exact typed error");
+            assert_eq!(session, 0, "error names the affected session");
+        }
+        other => panic!("expected ShardLost, got {other:?}"),
+    }
+    client.shutdown();
+
+    let report = front.stop().expect("front stops");
+    assert_eq!(report.shard_losses, 1);
+    assert_eq!(report.migrations, 0, "nowhere to re-home");
+    victim_join.join().expect("victim joins");
+}
+
+#[test]
+fn admission_denial_is_typed_and_spares_the_admitted_session() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2], None), "scc2");
+    let total = 12usize;
+    let frames = random_frames(4, total, 0xAD31);
+    let reference = reference_outputs(&cv, std::slice::from_ref(&frames));
+
+    let fleet = boot_fleet(&cv, 1, FrontPolicy { max_sessions: 1 });
+    let mut client = WireClient::connect(&fleet.hub).expect("connect");
+    send_frame(&mut client, 0, 0, false, &frames[0]);
+    send_frame(&mut client, 1, 0, false, &frames[0]);
+
+    // Exactly one denial for session 1; session 0's output arrives in
+    // either order relative to it.
+    let mut outs = vec![Vec::new()];
+    let mut denied = false;
+    while outs[0].is_empty() || !denied {
+        match client.recv() {
+            Ok(Some(Msg::FrameOut {
+                session: 0,
+                samples,
+                ..
+            })) => outs[0].push(samples),
+            Ok(Some(Msg::Err { code, session, .. })) => {
+                assert_eq!(code, ErrCode::AdmissionDenied, "exact typed error");
+                assert_eq!(session, 1, "denial names the refused session");
+                denied = true;
+            }
+            other => panic!("expected FrameOut or AdmissionDenied, got {other:?}"),
+        }
+    }
+    for (i, f) in frames[1..].iter().enumerate() {
+        let seq = i + 1;
+        send_frame(&mut client, 0, seq, seq + 1 == total, f);
+    }
+    collect_until(&mut client, &mut outs, &[total]);
+    assert_eq!(outs[0], reference[0], "admitted session is unharmed by the denial");
+    client.shutdown();
+
+    let (front, _) = fleet.stop();
+    assert_eq!(front.admitted, 1);
+    assert_eq!(front.denied, 1);
+}
+
+#[test]
+fn version_skewed_hello_gets_typed_reply_and_connection_recovers() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2], None), "scc2");
+    let fleet = boot_fleet(&cv, 1, FrontPolicy::default());
+
+    let (r, mut w) = fleet.hub.connect().expect("dial front");
+    let mut reader = FrameReader::new(r);
+    let skewed = Msg::Hello {
+        version: WIRE_VERSION + 1,
+        role: role::CLIENT,
+        feat: 0,
+        period: 0,
+        warmup: 0,
+    };
+    write_msg(&mut w, &skewed).expect("send skewed hello");
+    match reader.next_msg() {
+        Ok(Some(Msg::Err { code, session, .. })) => {
+            assert_eq!(code, ErrCode::VersionSkew, "exact typed error");
+            assert_eq!(session, 0, "no session was constructed");
+        }
+        other => panic!("expected VersionSkew err, got {other:?}"),
+    }
+    // The skew was in-band (a well-delimited frame), so the same
+    // connection may greet properly and is then served normally.
+    let hello = Msg::Hello {
+        version: WIRE_VERSION,
+        role: role::CLIENT,
+        feat: 0,
+        period: 0,
+        warmup: 0,
+    };
+    write_msg(&mut w, &hello).expect("send valid hello");
+    match reader.next_msg() {
+        Ok(Some(Msg::Hello { feat, .. })) => assert_eq!(feat, 4, "ack carries the model shape"),
+        other => panic!("expected hello ack, got {other:?}"),
+    }
+    w.shutdown();
+
+    let (front, _) = fleet.stop();
+    assert!(front.wire_errs >= 1, "the skew was counted");
+    assert_eq!(front.admitted, 0);
+}

@@ -1,0 +1,347 @@
+//! `soi.wire.v1` fault matrix over real transport pipes (DESIGN.md §14).
+//!
+//! Companion to the unit tests inside `net::wire`: these drive the
+//! `FrameReader` over the deterministic loopback pipes, scripting the
+//! byte-level faults the protocol must convert into exactly one typed
+//! `WireError` each — truncated header, truncated body, oversize
+//! prefix, unknown tag, mid-stream version skew, fail-fast
+//! backpressure — and asserting that a fault on one message never
+//! corrupts or drops its well-formed neighbours.
+
+use soi::net::loopback::pipe;
+use soi::net::wire::{role, write_msg};
+use soi::net::{ErrCode, FrameReader, Msg, WireError, WireWrite, MAX_FRAME, WIRE_VERSION};
+use soi::util::prop;
+use soi::util::rng::Rng;
+
+/// Largest sample count a `Frame` can carry: the body is
+/// tag(1) + session(8) + seq(8) + last(1) + n(4) + 4·n bytes and the
+/// prefix must not exceed [`MAX_FRAME`].
+const MAX_SAMPLES: usize = (MAX_FRAME - 22) / 4;
+
+const CODES: [ErrCode; 6] = [
+    ErrCode::VersionSkew,
+    ErrCode::AdmissionDenied,
+    ErrCode::BadFrame,
+    ErrCode::Protocol,
+    ErrCode::ShardLost,
+    ErrCode::Backpressure,
+];
+
+fn samples(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn random_msg(rng: &mut Rng) -> Msg {
+    match rng.below(6) {
+        0 => Msg::Hello {
+            version: WIRE_VERSION,
+            role: [role::CLIENT, role::FRONT, role::SHARD][rng.below(3)],
+            feat: rng.below(16) as u32,
+            period: 1u32 << rng.below(4),
+            warmup: rng.below(8) as u32,
+        },
+        1 => Msg::Frame {
+            session: rng.next_u64(),
+            seq: rng.next_u64() >> 1,
+            last: rng.chance(0.2),
+            // below(33) includes 0: the empty-payload edge case.
+            samples: samples(rng, rng.below(33)),
+        },
+        2 => Msg::FrameOut {
+            session: rng.next_u64(),
+            seq: rng.next_u64() >> 1,
+            samples: samples(rng, rng.below(33)),
+        },
+        3 => {
+            let feat = rng.below(6) + 1;
+            let h = rng.below(5);
+            Msg::Migrate {
+                session: rng.next_u64(),
+                t: rng.below(1000) as u64,
+                feat: feat as u32,
+                history: (0..h).map(|_| samples(rng, feat)).collect(),
+            }
+        }
+        4 => Msg::Drain {
+            session: rng.next_u64(),
+        },
+        _ => Msg::Err {
+            code: CODES[rng.below(CODES.len())],
+            session: rng.next_u64(),
+            detail: "d".repeat(rng.below(24)),
+        },
+    }
+}
+
+#[test]
+fn random_messages_roundtrip_bit_exact() {
+    prop::check("wire roundtrip", 200, 0x31BE, |rng, _| {
+        let m = random_msg(rng);
+        let mut buf = Vec::new();
+        m.encode(&mut buf).map_err(|e| e.to_string())?;
+        let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        if len != buf.len() - 4 {
+            return Err(format!("prefix {len} but body is {} bytes", buf.len() - 4));
+        }
+        let back = Msg::decode(&buf[4..]).map_err(|e| e.to_string())?;
+        if back != m {
+            return Err(format!("{} did not roundtrip", m.kind()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn max_frame_boundary_roundtrips_and_one_more_is_oversize() {
+    let mut rng = Rng::new(0xB16);
+    let m = Msg::Frame {
+        session: 1,
+        seq: 0,
+        last: false,
+        samples: samples(&mut rng, MAX_SAMPLES),
+    };
+    let mut buf = Vec::new();
+    m.encode(&mut buf).expect("max-size frame encodes");
+    assert_eq!(buf.len() - 4, MAX_FRAME - 2, "2 spare bytes below the ceiling");
+
+    // The largest legal frame crosses a real pipe in one piece.
+    let (r, mut w) = pipe(buf.len(), false);
+    w.send(&buf).expect("send");
+    w.shutdown();
+    let mut reader = FrameReader::new(r);
+    assert_eq!(reader.next_msg().expect("read"), Some(m.clone()));
+    assert_eq!(reader.next_msg().expect("eof"), None);
+
+    // One more sample pushes the body past MAX_FRAME: typed refusal,
+    // no partial bytes.
+    let over = match m {
+        Msg::Frame {
+            session,
+            seq,
+            last,
+            mut samples,
+        } => {
+            samples.push(0.0);
+            Msg::Frame {
+                session,
+                seq,
+                last,
+                samples,
+            }
+        }
+        _ => unreachable!(),
+    };
+    let mut buf = Vec::new();
+    match over.encode(&mut buf) {
+        Err(WireError::Oversize { len, max }) => {
+            assert_eq!(len, MAX_FRAME + 2);
+            assert_eq!(max, MAX_FRAME);
+        }
+        other => panic!("expected Oversize, got {other:?}"),
+    }
+    assert!(buf.is_empty(), "refused encode leaves nothing behind");
+}
+
+#[test]
+fn reader_streams_batches_then_clean_eof() {
+    let mut rng = Rng::new(0x5EED);
+    let msgs: Vec<Msg> = (0..16).map(|_| random_msg(&mut rng)).collect();
+    let (r, mut w) = pipe(1 << 16, false);
+    for m in &msgs {
+        write_msg(&mut w, m).expect("send");
+    }
+    w.shutdown();
+    let mut reader = FrameReader::new(r);
+    for (i, want) in msgs.iter().enumerate() {
+        let got = reader.next_msg().expect("read").expect("message present");
+        assert_eq!(&got, want, "message {i}");
+    }
+    assert_eq!(reader.next_msg().expect("eof"), None);
+    assert_eq!(reader.next_msg().expect("eof"), None, "EOF is sticky");
+}
+
+#[test]
+fn eof_mid_header_is_truncated_header() {
+    for cut in 1..4usize {
+        let (r, mut w) = pipe(64, false);
+        w.send(&[0x11, 0x22, 0x33][..cut]).expect("send");
+        w.shutdown();
+        let mut reader = FrameReader::new(r);
+        match reader.next_msg() {
+            Err(WireError::TruncatedHeader { got }) => assert_eq!(got, cut),
+            other => panic!("cut {cut}: expected TruncatedHeader, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn disconnect_mid_body_is_truncated_body() {
+    let m = Msg::Drain { session: 5 };
+    let mut bytes = Vec::new();
+    m.encode(&mut bytes).unwrap();
+    let body = bytes.len() - 4;
+    for cut in 0..body {
+        let (r, mut w) = pipe(64, false);
+        w.send(&bytes[..4 + cut]).expect("send");
+        // Dropping the writer (peer vanishes) is equivalent to a clean
+        // shutdown of the write half: drain, then EOF mid-body.
+        drop(w);
+        let mut reader = FrameReader::new(r);
+        match reader.next_msg() {
+            Err(WireError::TruncatedBody { want, got }) => {
+                assert_eq!(want, body, "cut {cut}");
+                assert_eq!(got, cut, "cut {cut}");
+            }
+            other => panic!("cut {cut}: expected TruncatedBody, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn oversize_prefix_is_rejected_from_the_prefix_alone() {
+    let (r, mut w) = pipe(64, false);
+    w.send(&((MAX_FRAME + 1) as u32).to_le_bytes()).expect("send");
+    w.shutdown();
+    let mut reader = FrameReader::new(r);
+    match reader.next_msg() {
+        // Oversize, not TruncatedBody: the claimed body was never read.
+        Err(WireError::Oversize { len, max }) => {
+            assert_eq!(len, MAX_FRAME + 1);
+            assert_eq!(max, MAX_FRAME);
+        }
+        other => panic!("expected Oversize, got {other:?}"),
+    }
+}
+
+#[test]
+fn zero_length_frame_is_malformed() {
+    let (r, mut w) = pipe(64, false);
+    w.send(&[0, 0, 0, 0]).expect("send");
+    w.shutdown();
+    let mut reader = FrameReader::new(r);
+    match reader.next_msg() {
+        Err(WireError::Malformed { reason }) => assert!(reason.contains("zero"), "{reason}"),
+        other => panic!("expected Malformed, got {other:?}"),
+    }
+}
+
+#[test]
+fn invalid_frame_is_consumed_and_the_stream_continues() {
+    // A well-delimited frame with garbage inside must cost exactly one
+    // typed error; the next message on the connection still decodes, so
+    // sibling sessions multiplexed on the same duplex are unharmed.
+    let sibling = Msg::Drain { session: 7 };
+    let (r, mut w) = pipe(256, false);
+    w.send(&[1, 0, 0, 0, 0xEE]).expect("send bad frame");
+    write_msg(&mut w, &sibling).expect("send sibling");
+    w.shutdown();
+    let mut reader = FrameReader::new(r);
+    match reader.next_msg() {
+        Err(WireError::UnknownTag { tag }) => assert_eq!(tag, 0xEE),
+        other => panic!("expected UnknownTag, got {other:?}"),
+    }
+    assert_eq!(reader.next_msg().expect("read"), Some(sibling));
+    assert_eq!(reader.next_msg().expect("eof"), None);
+}
+
+#[test]
+fn version_skew_mid_stream_is_typed_and_non_fatal() {
+    let skewed = Msg::Hello {
+        version: WIRE_VERSION + 98,
+        role: role::CLIENT,
+        feat: 4,
+        period: 2,
+        warmup: 1,
+    };
+    let sibling = Msg::FrameOut {
+        session: 3,
+        seq: 9,
+        samples: vec![0.5, -0.5],
+    };
+    let (r, mut w) = pipe(256, false);
+    write_msg(&mut w, &skewed).expect("send skewed hello");
+    write_msg(&mut w, &sibling).expect("send sibling");
+    w.shutdown();
+    let mut reader = FrameReader::new(r);
+    match reader.next_msg() {
+        Err(WireError::VersionSkew { found }) => assert_eq!(found, WIRE_VERSION + 98),
+        other => panic!("expected VersionSkew, got {other:?}"),
+    }
+    assert_eq!(reader.next_msg().expect("read"), Some(sibling));
+}
+
+#[test]
+fn backpressure_fails_whole_messages_never_partial() {
+    let (r, mut w) = pipe(64, true);
+    let first = Msg::Drain { session: 1 };
+    write_msg(&mut w, &first).expect("first fits");
+    let big = Msg::Frame {
+        session: 2,
+        seq: 0,
+        last: false,
+        samples: vec![0.0; 32],
+    };
+    match write_msg(&mut w, &big) {
+        Err(WireError::Backpressure { capacity }) => assert_eq!(capacity, 64),
+        other => panic!("expected Backpressure, got {other:?}"),
+    }
+    // All-or-nothing: the stream carries no fragment of the refused
+    // message, so later messages still parse.
+    let second = Msg::Drain { session: 3 };
+    write_msg(&mut w, &second).expect("second fits");
+    w.shutdown();
+    let mut reader = FrameReader::new(r);
+    assert_eq!(reader.next_msg().expect("read"), Some(first));
+    assert_eq!(reader.next_msg().expect("read"), Some(second));
+    assert_eq!(reader.next_msg().expect("eof"), None);
+}
+
+#[test]
+fn truncation_at_any_byte_yields_one_exact_typed_error() {
+    prop::check("truncate anywhere", 80, 0x71C0, |rng, _| {
+        let msgs: Vec<Msg> = (0..rng.below(4) + 1).map(|_| random_msg(rng)).collect();
+        let mut bytes = Vec::new();
+        let mut bounds = vec![0usize];
+        for m in &msgs {
+            m.encode(&mut bytes).map_err(|e| e.to_string())?;
+            bounds.push(bytes.len());
+        }
+        let cut = rng.below(bytes.len() + 1);
+        let (r, mut w) = pipe(bytes.len() + 8, false);
+        w.send(&bytes[..cut]).map_err(|e| e.to_string())?;
+        w.shutdown();
+        let mut reader = FrameReader::new(r);
+        let mut idx = 0usize;
+        loop {
+            match reader.next_msg() {
+                Ok(Some(m)) => {
+                    if m != msgs[idx] {
+                        return Err(format!("message {idx} corrupted: {:?}", m.kind()));
+                    }
+                    idx += 1;
+                }
+                Ok(None) => {
+                    // Clean EOF is only legal exactly on a boundary.
+                    if bounds[idx] != cut {
+                        return Err(format!("EOF at {cut}, boundary is {}", bounds[idx]));
+                    }
+                    return Ok(());
+                }
+                Err(e) => {
+                    let into = cut - bounds[idx];
+                    let want = bounds[idx + 1] - bounds[idx] - 4;
+                    return match e {
+                        WireError::TruncatedHeader { got } if into < 4 && got == into => Ok(()),
+                        WireError::TruncatedBody { want: tw, got }
+                            if into >= 4 && tw == want && got == into - 4 =>
+                        {
+                            Ok(())
+                        }
+                        other => Err(format!("cut {into} bytes into message {idx}: {other:?}")),
+                    };
+                }
+            }
+        }
+    });
+}
