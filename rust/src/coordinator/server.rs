@@ -42,7 +42,7 @@ use anyhow::{anyhow, Result};
 use super::controller::{AdaptivePolicy, LoadController};
 use super::metrics::StreamMetrics;
 use super::stream::StreamSession;
-use crate::obs::{Counter, EventKind, Gauge, ObsHandle, Telemetry};
+use crate::obs::{Counter, EventKind, Gauge, ObsHandle, SpanKind, Telemetry, TraceCtx};
 use crate::runtime::{
     artifact, Artifact, CompiledVariant, DeviceWeights, Runtime, VariantLadder,
 };
@@ -56,6 +56,10 @@ pub struct FrameJob {
     pub frame: Arc<[f32]>,
     /// Marks the last frame of the stream (flush + report).
     pub last: bool,
+    /// Cross-shard trace context when this frame is sampled
+    /// (DESIGN.md §15); `None` — the overwhelmingly common case — adds
+    /// no work to the serving path beyond one `Option` branch.
+    pub trace: Option<TraceCtx>,
 }
 
 /// One command for a live worker (DESIGN.md §14).  Batch-mode runs
@@ -79,6 +83,9 @@ pub enum LiveCmd {
         /// Recent input frames, oldest first (`len == t` or
         /// `>= warmup`).
         history: Vec<Vec<f32>>,
+        /// Trace context of the migration that carried this resume
+        /// (`migrate_front` span), if the migration was traced.
+        trace: Option<TraceCtx>,
     },
     /// Drop a session immediately (it migrated away or its client
     /// vanished); pending frames are discarded.
@@ -101,6 +108,9 @@ pub enum LiveEvent {
         seq: u64,
         /// Output samples.
         frame: Vec<f32>,
+        /// Trace context to echo back on the wire (`phase_exec` span)
+        /// when the input frame was traced.
+        trace: Option<TraceCtx>,
     },
     /// A session retired (last frame served, or [`LiveCmd::Forget`]).
     Retired {
@@ -479,6 +489,7 @@ impl Server {
                         stream_id: sid as u64,
                         frame: frames[t].clone(),
                         last: t + 1 == frames.len(),
+                        trace: None,
                     };
                     senders[sid % self.workers]
                         .send(LiveCmd::Frame(job))
@@ -707,6 +718,41 @@ fn report_err(
     }
 }
 
+/// Record the worker-side spans of one traced frame (DESIGN.md §15):
+/// `worker_round` (the round serving it, duration = round-so-far ns)
+/// under the incoming context, then `phase_exec` (the dispatch group's
+/// backend execution) under it.  One registry lock for both.
+#[allow(clippy::too_many_arguments)]
+fn record_serve_spans(
+    obs: &ObsHandle,
+    ctx: TraceCtx,
+    session: u64,
+    rung: usize,
+    phase: usize,
+    width: u64,
+    round_ns: u64,
+    exec_ns: u64,
+) {
+    obs.with(|w| {
+        w.span(
+            ctx.trace_id,
+            SpanKind::WorkerRound,
+            ctx.kind,
+            session,
+            width,
+            round_ns,
+        );
+        w.span(
+            ctx.trace_id,
+            SpanKind::PhaseExec,
+            SpanKind::WorkerRound as u8,
+            ((rung as u64) << 16) | phase as u64,
+            width,
+            exec_ns,
+        );
+    });
+}
+
 /// Per-stream serving state owned by one worker.
 struct Slot {
     sess: StreamSession,
@@ -719,8 +765,9 @@ struct Slot {
     gen: u64,
     outs: Vec<Vec<f32>>,
     /// Frames received but not yet served (at most one is served per
-    /// round so batches never reorder a stream against itself).
-    pending: VecDeque<Arc<[f32]>>,
+    /// round so batches never reorder a stream against itself), each
+    /// with its trace context (`None` for unsampled frames).
+    pending: VecDeque<(Arc<[f32]>, Option<TraceCtx>)>,
     /// The stream's final frame has been enqueued.
     closing: bool,
 }
@@ -808,6 +855,7 @@ fn worker_loop(
     let mut keyed: Vec<(u64, usize, usize, usize)> = Vec::new();
     let mut group: Vec<usize> = Vec::new();
     let mut group_frames: Vec<Arc<[f32]>> = Vec::new();
+    let mut group_traces: Vec<Option<TraceCtx>> = Vec::new();
     let mut outs_buf: Vec<Vec<f32>> = Vec::new();
 
     // `ladder`/`weights`/`gen_seq` are passed per call (not captured):
@@ -840,7 +888,7 @@ fn worker_loop(
                     });
                     slots.len() - 1
                 });
-                slots[i].pending.push_back(job.frame);
+                slots[i].pending.push_back((job.frame, job.trace));
                 slots[i].closing |= job.last;
                 *pending_total += 1;
             }
@@ -848,6 +896,7 @@ fn worker_loop(
                 stream_id,
                 t,
                 history,
+                trace,
             } => {
                 // §9 replay admission (DESIGN.md §14): everything is
                 // validated inside `StreamSession::resume` before any
@@ -875,12 +924,20 @@ fn worker_loop(
                         sess.set_history_cap(history_cap);
                         sess.set_obs(obs.clone());
                         if let Some(obs) = &obs {
-                            obs.shard_migrate(
-                                stream_id,
-                                t,
-                                replay,
-                                t_mig.elapsed().as_nanos() as u64,
-                            );
+                            let replay_ns = t_mig.elapsed().as_nanos() as u64;
+                            obs.shard_migrate(stream_id, t, replay, replay_ns);
+                            if let Some(ctx) = trace {
+                                // leaf of the migration trace: the
+                                // destination shard's replay
+                                obs.span(
+                                    ctx.trace_id,
+                                    SpanKind::MigrateReplay,
+                                    ctx.kind,
+                                    stream_id,
+                                    t,
+                                    replay_ns,
+                                );
+                            }
                         }
                         index.insert(stream_id, slots.len());
                         slots.push(Slot {
@@ -1154,9 +1211,12 @@ fn worker_loop(
                 }
                 group.clear();
                 group_frames.clear();
+                group_traces.clear();
                 for &(_, _, _, i) in &keyed[g0..g1] {
                     group.push(i);
-                    group_frames.push(slots[i].pending.pop_front().unwrap());
+                    let (frame, trace) = slots[i].pending.pop_front().unwrap();
+                    group_frames.push(frame);
+                    group_traces.push(trace);
                     pending_total -= 1;
                 }
                 let frame_refs: Vec<&[f32]> = group_frames.iter().map(|f| &f[..]).collect();
@@ -1179,12 +1239,35 @@ fn worker_loop(
                             obs.exec(rung, phase, group.len(), ns);
                         }
                         served += group.len() as u64;
-                        for (&i, out) in group.iter().zip(outs_buf.drain(..)) {
+                        for (k, (&i, out)) in
+                            group.iter().zip(outs_buf.drain(..)).enumerate()
+                        {
+                            // traced frame: record worker_round +
+                            // phase_exec spans and echo the leaf
+                            // context on the output (DESIGN.md §15).
+                            // Untraced frames take the `None` branch —
+                            // no lock, no allocation.
+                            let out_trace = group_traces[k].map(|ctx| {
+                                if let Some(obs) = &obs {
+                                    record_serve_spans(
+                                        obs,
+                                        ctx,
+                                        slots[i].sess.id,
+                                        rung,
+                                        phase,
+                                        group.len() as u64,
+                                        t_round.elapsed().as_nanos() as u64,
+                                        ns,
+                                    );
+                                }
+                                ctx.child(SpanKind::WorkerRound).child(SpanKind::PhaseExec)
+                            });
                             if let Some(tx) = &live {
                                 let _ = tx.send(LiveEvent::Out {
                                     id: slots[i].sess.id,
                                     seq: slots[i].sess.frames_seen() - 1,
                                     frame: out,
+                                    trace: out_trace,
                                 });
                             } else {
                                 slots[i].outs.push(out);
@@ -1200,7 +1283,7 @@ fn worker_loop(
             }
         } else {
             for slot in slots.iter_mut() {
-                if let Some(frame) = slot.pending.pop_front() {
+                if let Some((frame, trace)) = slot.pending.pop_front() {
                     pending_total -= 1;
                     let phase = slot.sess.next_plan().phase;
                     let t_exec = Instant::now();
@@ -1214,11 +1297,27 @@ fn worker_loop(
                                 obs.exec(slot.rung, phase, 1, ns);
                             }
                             served += 1;
+                            let out_trace = trace.map(|ctx| {
+                                if let Some(obs) = &obs {
+                                    record_serve_spans(
+                                        obs,
+                                        ctx,
+                                        slot.sess.id,
+                                        slot.rung,
+                                        phase,
+                                        1,
+                                        t_round.elapsed().as_nanos() as u64,
+                                        ns,
+                                    );
+                                }
+                                ctx.child(SpanKind::WorkerRound).child(SpanKind::PhaseExec)
+                            });
                             if let Some(tx) = &live {
                                 let _ = tx.send(LiveEvent::Out {
                                     id: slot.sess.id,
                                     seq: slot.sess.frames_seen() - 1,
                                     frame: out,
+                                    trace: out_trace,
                                 });
                             } else {
                                 slot.outs.push(out);

@@ -106,6 +106,11 @@ impl StreamSession {
     /// stream's full past (`h == t`) or at least the variant's
     /// [`warmup_frames`].  The replayed frames are retained as the
     /// new session's history, so the stream can move again later.
+    ///
+    /// Tracing (DESIGN.md §15): when the carrying `Migrate` was
+    /// sampled, the worker records the `migrate_replay` leaf span
+    /// *after* this constructor succeeds — a rejected resume
+    /// constructs nothing and therefore traces nothing.
     pub fn resume(
         id: u64,
         engine: Arc<CompiledVariant>,

@@ -12,6 +12,8 @@
 //!   serve-shard <variant>        run one backend shard over TCP (soi.wire.v1)
 //!   serve-front --shards a,b     run the front-end over a shard fleet
 //!   wire-smoke [variant]         front + 2 loopback shards vs single-process serve
+//!   aggregate-feeds --feeds a,b  merge soi.obs.v1 feeds into one soi.cluster.v1
+//!   top --feeds a,b              live cluster console over health feeds
 //!
 //! Common options: --artifacts DIR (default ./artifacts), --results DIR
 //! (default ./results), --n-eval N (default 6), --seed S, --streams N,
@@ -32,7 +34,7 @@ use soi::coordinator::{AdaptivePolicy, GenerationWatcher, Server, StreamSession}
 use soi::dsp::{frames, metrics, siggen};
 use soi::experiments::{self, Ctx};
 use soi::net::{
-    health_from_feed, run_shard, spawn_front, ClusterController, ClusterPolicy, FrontPolicy,
+    health_from_feed, run_shard, spawn_front_with, ClusterController, ClusterPolicy, FrontPolicy,
     LoopbackHub, Msg, ShardConfig, ShardHealth, ShardLink, TcpConnector, TcpPort, WireClient,
 };
 use soi::obs::{self, Exporter, ObsConfig, Telemetry};
@@ -193,16 +195,58 @@ fn run(argv: &[String]) -> Result<()> {
                 .context("validate-feed needs the path of an NDJSON health feed")?;
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading feed {path}"))?;
-            let s = obs::schema::validate_feed(&text).map_err(anyhow::Error::msg)?;
-            println!(
-                "{path}: valid {} feed — {} lines ({} snapshots, {} hists, {} events)",
-                obs::FEED_SCHEMA,
-                s.lines,
-                s.snapshots,
-                s.hists,
-                s.events
-            );
+            // Per-process and aggregated cluster feeds share the
+            // command; the schema field of the first line decides.
+            match obs::schema::detect_schema(&text) {
+                Some(s) if s == obs::CLUSTER_SCHEMA => {
+                    let s = obs::schema::validate_cluster_feed(&text).map_err(anyhow::Error::msg)?;
+                    println!(
+                        "{path}: valid {} feed — {} lines ({} cluster, {} shards, {} hists, {} spans)",
+                        obs::CLUSTER_SCHEMA,
+                        s.lines,
+                        s.clusters,
+                        s.shards,
+                        s.hists,
+                        s.spans
+                    );
+                }
+                _ => {
+                    let s = obs::schema::validate_feed(&text).map_err(anyhow::Error::msg)?;
+                    println!(
+                        "{path}: valid {} feed — {} lines ({} snapshots, {} hists, {} events)",
+                        obs::FEED_SCHEMA,
+                        s.lines,
+                        s.snapshots,
+                        s.hists,
+                        s.events
+                    );
+                }
+            }
             Ok(())
+        }
+        "aggregate-feeds" => {
+            let feeds = feed_list(&args, "aggregate-feeds")?;
+            let summary = obs::aggregate(&feeds).map_err(anyhow::Error::msg)?;
+            let mut out = String::new();
+            summary.render_ndjson(&mut out);
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &out)
+                        .with_context(|| format!("writing cluster feed {path}"))?;
+                    eprintln!(
+                        "aggregated {} shard feeds -> {path} ({} spans)",
+                        summary.shards.len(),
+                        summary.spans().count()
+                    );
+                }
+                None => print!("{out}"),
+            }
+            Ok(())
+        }
+        "top" => {
+            let interval = args.u64_or("interval-ms", 1000).map_err(anyhow::Error::msg)?;
+            let iterations = args.u64_or("iterations", 0).map_err(anyhow::Error::msg)?;
+            cmd_top(&args, interval, iterations)
         }
         "serve-shard" => {
             let name = args
@@ -245,6 +289,15 @@ fn run(argv: &[String]) -> Result<()> {
                 listen: args.str_or("listen", "127.0.0.1:7070"),
                 max_sessions: args.usize_or("max-sessions", 64).map_err(anyhow::Error::msg)?,
                 balance_ms: args.u64_or("balance-ms", 500).map_err(anyhow::Error::msg)?,
+                trace_sample_n: args.u64_or("trace-sample-n", 0).map_err(anyhow::Error::msg)?,
+                telemetry: args.get("telemetry").map(|v| {
+                    if v == "true" {
+                        "soi-front-feed.ndjson".to_string()
+                    } else {
+                        v.to_string()
+                    }
+                }),
+                snapshot_ms: args.u64_or("snapshot-ms", 200).map_err(anyhow::Error::msg)?,
             };
             serve_front(shards, feeds, opts)
         }
@@ -267,6 +320,8 @@ fn run(argv: &[String]) -> Result<()> {
                 workers: args.usize_or("workers", 2).map_err(anyhow::Error::msg)?,
                 seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
                 snapshot_ms: args.u64_or("snapshot-ms", 50).map_err(anyhow::Error::msg)?,
+                trace_sample_n: args.u64_or("trace-sample-n", 0).map_err(anyhow::Error::msg)?,
+                front_feed: args.get("front-feed").map(|s| s.to_string()),
                 feeds,
             };
             wire_smoke(&artifacts, &variant, opts)
@@ -831,6 +886,77 @@ fn serve_shard(artifacts: &std::path::Path, spec: &str, opts: ShardOpts) -> Resu
     Ok(())
 }
 
+/// Read `--feeds a,b,c` into named `(name, contents)` pairs for the
+/// aggregator; a feed is named by its file stem (`shard-a` from
+/// `/tmp/shard-a.ndjson`), falling back to the full path on a clash.
+fn feed_list(args: &Args, cmd: &str) -> Result<Vec<(String, String)>> {
+    let paths = feed_paths(args);
+    if paths.is_empty() {
+        bail!("{cmd} needs --feeds a.ndjson,b.ndjson[,..]");
+    }
+    let mut out: Vec<(String, String)> = Vec::with_capacity(paths.len());
+    for path in &paths {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading feed {path}"))?;
+        out.push((feed_name(&out, path), text));
+    }
+    Ok(out)
+}
+
+fn feed_paths(args: &Args) -> Vec<String> {
+    args.str_or("feeds", "")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn feed_name(taken: &[(String, String)], path: &str) -> String {
+    let stem = std::path::Path::new(path)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or(path)
+        .to_string();
+    if taken.iter().any(|(n, _)| *n == stem) {
+        path.to_string()
+    } else {
+        stem
+    }
+}
+
+/// The `top` subcommand: a live cluster console over `--feeds`.
+/// Each refresh re-reads and re-aggregates every feed; one that is
+/// briefly unreadable (exporter not started yet) is skipped for that
+/// frame.  Plain ANSI clear-and-home — no terminal library.
+fn cmd_top(args: &Args, interval_ms: u64, iterations: u64) -> Result<()> {
+    use std::io::Write as _;
+    let paths = feed_paths(args);
+    if paths.is_empty() {
+        bail!("top needs --feeds a.ndjson,b.ndjson[,..]");
+    }
+    let mut done = 0u64;
+    loop {
+        let mut feeds: Vec<(String, String)> = Vec::with_capacity(paths.len());
+        for path in &paths {
+            if let Ok(text) = std::fs::read_to_string(path) {
+                feeds.push((feed_name(&feeds, path), text));
+            }
+        }
+        let mut frame = String::new();
+        match obs::aggregate(&feeds) {
+            Ok(summary) => summary.render_top(&mut frame),
+            Err(e) => frame = format!("soi top: waiting for feeds ({e})\n"),
+        }
+        print!("\x1b[2J\x1b[H{frame}");
+        std::io::stdout().flush().ok();
+        done += 1;
+        if iterations != 0 && done >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms));
+    }
+}
+
 /// Options of the `serve-front` subcommand.
 struct FrontOpts {
     /// TCP listen address (`--listen`, default `127.0.0.1:7070`).
@@ -839,6 +965,12 @@ struct FrontOpts {
     max_sessions: usize,
     /// Health-feed poll interval, ms (`--balance-ms`).
     balance_ms: u64,
+    /// Trace every nth forwarded frame (`--trace-sample-n`, 0 = off).
+    trace_sample_n: u64,
+    /// The front's own `soi.obs.v1` feed path (`--telemetry[=PATH]`).
+    telemetry: Option<String>,
+    /// Snapshot cadence for that feed, ms (`--snapshot-ms`).
+    snapshot_ms: u64,
 }
 
 /// Run the TCP front-end over an already-running shard fleet.  With
@@ -855,13 +987,33 @@ fn serve_front(shards: Vec<String>, feeds: Vec<String>, opts: FrontOpts) -> Resu
         .collect();
     let port = TcpPort::bind(&opts.listen).map_err(|e| anyhow!("bind {}: {e}", opts.listen))?;
     let addr = port.local_addr().map_err(|e| anyhow!("local_addr: {e}"))?;
-    let policy = FrontPolicy { max_sessions: opts.max_sessions };
-    let handle = spawn_front(Box::new(port), links, policy)?;
+    let policy = FrontPolicy {
+        max_sessions: opts.max_sessions,
+        trace_sample_n: opts.trace_sample_n,
+    };
+    // The front exports the same soi.obs.v1 feed a shard does; the
+    // exporter runs for the life of the process (serve-front never
+    // returns), so the handle is just kept alive.
+    let mut telemetry = None;
+    let _exporter = match &opts.telemetry {
+        Some(path) => {
+            let tel = Telemetry::new(ObsConfig::default());
+            let exporter = Exporter::start(tel.clone(), &PathBuf::from(path), opts.snapshot_ms)
+                .with_context(|| format!("creating health feed {path}"))?;
+            telemetry = Some(tel);
+            Some(exporter)
+        }
+        None => None,
+    };
+    let handle = spawn_front_with(Box::new(port), links, policy, telemetry)?;
     println!(
         "front on {addr}: {} shards {shards:?}, max {} sessions (ctrl-c to stop)",
         shards.len(),
         opts.max_sessions
     );
+    if opts.trace_sample_n > 0 {
+        println!("tracing every {}th forwarded frame (DESIGN.md \u{a7}15)", opts.trace_sample_n);
+    }
     if feeds.is_empty() {
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -904,6 +1056,10 @@ struct SmokeOpts {
     workers: usize,
     seed: u64,
     snapshot_ms: u64,
+    /// Trace every nth forwarded frame (`--trace-sample-n`, 0 = off).
+    trace_sample_n: u64,
+    /// The front's own health-feed path (`--front-feed`; optional).
+    front_feed: Option<String>,
     /// Per-shard NDJSON health-feed paths (`--feeds a,b`; optional).
     feeds: Vec<String>,
 }
@@ -995,8 +1151,22 @@ fn wire_smoke(artifacts: &std::path::Path, spec: &str, opts: SmokeOpts) -> Resul
         })
         .collect();
     let front_hub = LoopbackHub::new();
-    let policy = FrontPolicy { max_sessions: opts.streams + 1 };
-    let handle = spawn_front(Box::new(front_hub.clone()), links, policy)?;
+    let policy = FrontPolicy {
+        max_sessions: opts.streams + 1,
+        trace_sample_n: opts.trace_sample_n,
+    };
+    // With --front-feed the front exports its own soi.obs.v1 feed, so
+    // the smoke exercises the whole cluster-observability path:
+    // shard feeds + front feed -> `soi aggregate-feeds`.
+    let mut front_tel = None;
+    if let Some(path) = &opts.front_feed {
+        let tel = Telemetry::new(ObsConfig::default());
+        let exporter = Exporter::start(tel.clone(), &PathBuf::from(path), opts.snapshot_ms)
+            .with_context(|| format!("creating health feed {path}"))?;
+        front_tel = Some(tel);
+        exporters.push(exporter);
+    }
+    let handle = spawn_front_with(Box::new(front_hub.clone()), links, policy, front_tel)?;
 
     let mut client = WireClient::connect(&front_hub)?;
     if client.feat() != feat {
@@ -1028,6 +1198,7 @@ fn wire_smoke(artifacts: &std::path::Path, spec: &str, opts: SmokeOpts) -> Resul
             seq: i as u64,
             last: false,
             samples: samples.clone(),
+            trace: None,
         };
         client.send(&msg).map_err(|e| anyhow!("send: {e}"))?;
     }
@@ -1041,6 +1212,7 @@ fn wire_smoke(artifacts: &std::path::Path, spec: &str, opts: SmokeOpts) -> Resul
             seq: i as u64,
             last: i + 1 == mig.len(),
             samples: samples.clone(),
+            trace: None,
         };
         client.send(&msg).map_err(|e| anyhow!("send: {e}"))?;
     }
@@ -1125,7 +1297,24 @@ usage: soi <command> [options]
                   summary reports the final `generation`
   validate-feed <path>
                   schema-check a health feed (every record, event payloads
-                  by kind, snapshot seq monotonicity) — what CI runs
+                  by kind, snapshot seq monotonicity) — what CI runs.
+                  Detects the schema from the first line, so it accepts
+                  both per-process soi.obs.v1 feeds and aggregated
+                  soi.cluster.v1 feeds
+  aggregate-feeds --feeds P1,P2[,..] [--out PATH]
+                  losslessly merge per-process soi.obs.v1 feeds (shards
+                  and front) into one versioned soi.cluster.v1 summary:
+                  cluster + per-shard counters, bucket-exact merged
+                  latency histograms, wire byte/msg rates, migration and
+                  reload totals, drop accounting, and every trace span
+                  re-tagged with its shard (DESIGN.md s15); NDJSON to
+                  stdout or --out
+  top --feeds P1,P2[,..] [--interval-ms N] [--iterations N]
+                  live cluster console: re-aggregates the feeds every
+                  interval (default 1000 ms) and redraws a per-shard
+                  table, cluster p50/p99 per (rung x phase), and the
+                  latest traced frame's hop chain; --iterations N exits
+                  after N frames (0 = run until interrupted)
   export-artifact <spec> [--out DIR] [--generation N] [--seed S]
                   save <spec>'s weights as a versioned soi.artifact.v1
                   directory: artifact.json (per-tensor sha-256 digests)
@@ -1143,18 +1332,27 @@ usage: soi <command> [options]
                   Drain from the front stops it gracefully
   serve-front --shards HOST:PORT[,HOST:PORT..] [--listen HOST:PORT]
                   [--max-sessions N] [--feeds P1,P2..] [--balance-ms N]
+                  [--telemetry[=PATH]] [--snapshot-ms N] [--trace-sample-n N]
                   run the front-end: admission control, session->shard
                   affinity, zero-drop warm cross-shard migration, and
                   shard-loss recovery by s9 replay.  With --feeds, polls
                   each shard's soi.obs.v1 health feed and rebalances
-                  sessions off hot shards (cluster controller)
+                  sessions off hot shards (cluster controller).  With
+                  --telemetry the front exports its own soi.obs.v1 feed
+                  (default PATH soi-front-feed.ndjson); --trace-sample-n N
+                  traces every Nth forwarded frame end to end across the
+                  fleet (DESIGN.md s15, default 0 = off)
   wire-smoke [variant] [--streams N] [--frames N] [--workers N] [--seed S]
-                  [--feeds P1,P2] [--snapshot-ms N]
+                  [--feeds P1,P2] [--front-feed P] [--snapshot-ms N]
+                  [--trace-sample-n N]
                   in-process scale-out smoke (what CI runs): front + 2
                   loopback shards serve deterministic streams, one session
                   warm-migrates mid-stream, and every output must be
                   bit-identical to single-process serving; exits nonzero
-                  on any mismatch, dropped frame, or missed migration
+                  on any mismatch, dropped frame, or missed migration.
+                  --front-feed exports the front's own feed and
+                  --trace-sample-n N samples cross-shard traces, so the
+                  three feeds exercise `soi aggregate-feeds`
   denoise <variant> [--frames N] [--dtype f32|int8]
 options: --artifacts DIR  --results DIR  --n-eval N  --seed S
 serve/denoise accept preset specs (stmc, scc<p>, scc<p>_<q>, sscc<p>,

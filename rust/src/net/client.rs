@@ -123,6 +123,7 @@ impl WireClient {
                     seq: i as u64,
                     last: i + 1 == frames.len(),
                     samples: frames[i].clone(),
+                    trace: None,
                 };
                 if let Err(e) = write_msg(&mut self.writer, &msg) {
                     // Keep draining the reader: the server's reply

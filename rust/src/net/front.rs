@@ -30,6 +30,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::transport::{Listener, Transport, WireWrite};
 use super::wire::{role, write_msg, ErrCode, FrameReader, Msg, WireError, DRAIN_ALL, WIRE_VERSION};
+use crate::obs::{Counter, ObsHandle, SpanKind, Telemetry, TraceCtx, TraceSampler};
 
 /// One backend shard as the front-end sees it: a name for logs and a
 /// way to reach it.
@@ -46,11 +47,18 @@ pub struct FrontPolicy {
     /// Sessions admitted across the whole fleet; the next new session
     /// is refused with [`ErrCode::AdmissionDenied`].
     pub max_sessions: usize,
+    /// Trace every `n`th forwarded frame end to end (DESIGN.md §15);
+    /// 0 — the default — disables tracing entirely and keeps wire
+    /// encodings byte-identical to untraced `soi.wire.v1`.
+    pub trace_sample_n: u64,
 }
 
 impl Default for FrontPolicy {
     fn default() -> Self {
-        FrontPolicy { max_sessions: 64 }
+        FrontPolicy {
+            max_sessions: 64,
+            trace_sample_n: 0,
+        }
     }
 }
 
@@ -174,6 +182,19 @@ pub fn spawn_front(
     shards: Vec<ShardLink>,
     policy: FrontPolicy,
 ) -> Result<FrontHandle> {
+    spawn_front_with(listener, shards, policy, None)
+}
+
+/// [`spawn_front`] with telemetry: the router records its wire
+/// counters, admission spans, and migration spans through the root's
+/// shared handle, so a front-end exports the same `soi.obs.v1` feed a
+/// shard does and `soi aggregate-feeds` can merge both sides.
+pub fn spawn_front_with(
+    listener: Box<dyn Listener>,
+    shards: Vec<ShardLink>,
+    policy: FrontPolicy,
+    telemetry: Option<Arc<Telemetry>>,
+) -> Result<FrontHandle> {
     if shards.is_empty() {
         bail!("front needs at least one shard");
     }
@@ -266,8 +287,12 @@ pub fn spawn_front(
         }
     });
 
+    let fo = FrontObs {
+        obs: telemetry.map(|t| t.shared()),
+        sampler: TraceSampler::new(policy.trace_sample_n),
+    };
     let router =
-        thread::spawn(move || run_router(rx, shard_conns, policy, feat, period, warmup));
+        thread::spawn(move || run_router(rx, shard_conns, policy, fo, feat, period, warmup));
     Ok(FrontHandle {
         tx,
         router: Some(router),
@@ -302,23 +327,97 @@ fn is_fatal(item: &Result<Option<Msg>, WireError>) -> bool {
     }
 }
 
-fn send_to_shard(shards: &mut [ShardConn], idx: usize, msg: &Msg) -> bool {
+/// The router's observability state: one recording handle (when
+/// telemetry is on) plus the head-based trace sampler (DESIGN.md §15).
+/// Owned by the router thread; nothing here is shared or locked beyond
+/// the handle's own per-record mutex.
+struct FrontObs {
+    obs: Option<ObsHandle>,
+    sampler: TraceSampler,
+}
+
+impl FrontObs {
+    fn count(&self, c: Counter, n: u64) {
+        if let Some(h) = &self.obs {
+            h.count(c, n);
+        }
+    }
+
+    /// Head sampling: every `n`th forwarded frame opens a trace.  The
+    /// root `front_admit` span is recorded here; the returned context
+    /// rides the `Frame` to the owning shard.
+    fn sample_frame(&mut self, session: u64, seq: u64, shard: usize) -> Option<TraceCtx> {
+        let id = self.sampler.sample()?;
+        if let Some(h) = &self.obs {
+            h.span(id, SpanKind::FrontAdmit, 0, session, seq, shard as u64);
+        }
+        Some(TraceCtx::root(id, SpanKind::FrontAdmit))
+    }
+
+    /// Migrations are rare and exactly what an operator wants linked:
+    /// when sampling is on at all, every migration opens a trace.
+    fn trace_migration(&mut self, session: u64, from: usize, to: usize) -> Option<TraceCtx> {
+        if !self.sampler.enabled() {
+            return None;
+        }
+        let id = self.sampler.force();
+        if let Some(h) = &self.obs {
+            h.span(
+                id,
+                SpanKind::MigrateFront,
+                0,
+                session,
+                from as u64,
+                to as u64,
+            );
+        }
+        Some(TraceCtx::root(id, SpanKind::MigrateFront))
+    }
+}
+
+fn send_to_shard(shards: &mut [ShardConn], idx: usize, msg: &Msg, fo: &FrontObs) -> bool {
     let s = &mut shards[idx];
     if !s.reachable {
         return false;
     }
-    if write_msg(s.writer.as_mut(), msg).is_err() {
-        s.reachable = false;
-        return false;
+    match write_msg(s.writer.as_mut(), msg) {
+        Ok(n) => {
+            if let Some(h) = &fo.obs {
+                h.with(|o| {
+                    o.count(Counter::WireTxMsgs, 1);
+                    o.count(Counter::WireTxBytes, n as u64);
+                });
+            }
+            true
+        }
+        Err(_) => {
+            s.reachable = false;
+            false
+        }
     }
-    true
 }
 
-fn send_to_conn(conns: &mut HashMap<u64, ConnState>, id: u64, msg: &Msg) {
+fn send_to_conn(conns: &mut HashMap<u64, ConnState>, id: u64, msg: &Msg, fo: &FrontObs) {
+    // Typed errors sent to a client count under the total and their
+    // own per-code counter (DESIGN.md appendix A, additive change).
+    if let (Msg::Err { code, .. }, Some(h)) = (msg, &fo.obs) {
+        let code = *code;
+        h.with(|o| {
+            o.count(Counter::WireErrs, 1);
+            o.count(code.counter(), 1);
+        });
+    }
     if let Some(c) = conns.get_mut(&id) {
         // A failed client write surfaces as EOF on its reader; nothing
         // more to do here.
-        let _ = write_msg(c.writer.as_mut(), msg);
+        if let Ok(n) = write_msg(c.writer.as_mut(), msg) {
+            if let Some(h) = &fo.obs {
+                h.with(|o| {
+                    o.count(Counter::WireTxMsgs, 1);
+                    o.count(Counter::WireTxBytes, n as u64);
+                });
+            }
+        }
     }
 }
 
@@ -340,10 +439,12 @@ fn pick_shard(
         .map(|(i, _)| i)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_router(
     rx: Receiver<FrontEvent>,
     mut shards: Vec<ShardConn>,
     policy: FrontPolicy,
+    mut fo: FrontObs,
     feat: u32,
     period: u32,
     warmup: u32,
@@ -365,25 +466,32 @@ fn run_router(
                 );
             }
             FrontEvent::FromClient(conn, item) => match item {
-                Ok(Some(msg)) => handle_client_msg(
-                    conn,
-                    msg,
-                    &mut conns,
-                    &mut sessions,
-                    &mut shards,
-                    &policy,
-                    feat,
-                    period,
-                    warmup,
-                    &mut report,
-                ),
+                Ok(Some(msg)) => {
+                    fo.count(Counter::WireRxMsgs, 1);
+                    handle_client_msg(
+                        conn,
+                        msg,
+                        &mut conns,
+                        &mut sessions,
+                        &mut shards,
+                        &policy,
+                        &mut fo,
+                        feat,
+                        period,
+                        warmup,
+                        &mut report,
+                    );
+                }
                 Ok(None) => {
-                    drop_conn(conn, &mut conns, &mut sessions, &mut shards);
+                    drop_conn(conn, &mut conns, &mut sessions, &mut shards, &fo);
                 }
                 Err(e) => {
                     report.wire_errs += 1;
                     if is_fatal(&Err(e.clone())) {
-                        drop_conn(conn, &mut conns, &mut sessions, &mut shards);
+                        // No Err goes back out, so the fault is counted
+                        // here rather than by send_to_conn.
+                        fo.count(Counter::WireErrs, 1);
+                        drop_conn(conn, &mut conns, &mut sessions, &mut shards, &fo);
                     } else {
                         let code = if matches!(e, WireError::VersionSkew { .. }) {
                             ErrCode::VersionSkew
@@ -398,28 +506,50 @@ fn run_router(
                                 session: 0,
                                 detail: e.to_string(),
                             },
+                            &fo,
                         );
                     }
                 }
             },
             FrontEvent::FromShard(idx, item) => match item {
-                Ok(Some(msg)) => handle_shard_msg(
-                    idx,
-                    msg,
-                    &mut conns,
-                    &mut sessions,
-                    &mut shards,
-                    feat,
-                    warmup,
-                    &mut report,
-                ),
+                Ok(Some(msg)) => {
+                    fo.count(Counter::WireRxMsgs, 1);
+                    handle_shard_msg(
+                        idx,
+                        msg,
+                        &mut conns,
+                        &mut sessions,
+                        &mut shards,
+                        &mut fo,
+                        feat,
+                        warmup,
+                        &mut report,
+                    );
+                }
                 Ok(None) => {
-                    lose_shard(idx, &mut conns, &mut sessions, &mut shards, feat, &mut report);
+                    lose_shard(
+                        idx,
+                        &mut conns,
+                        &mut sessions,
+                        &mut shards,
+                        &mut fo,
+                        feat,
+                        &mut report,
+                    );
                 }
                 Err(e) => {
                     report.wire_errs += 1;
+                    fo.count(Counter::WireErrs, 1);
                     if is_fatal(&Err(e)) {
-                        lose_shard(idx, &mut conns, &mut sessions, &mut shards, feat, &mut report);
+                        lose_shard(
+                            idx,
+                            &mut conns,
+                            &mut sessions,
+                            &mut shards,
+                            &mut fo,
+                            feat,
+                            &mut report,
+                        );
                     }
                 }
             },
@@ -430,6 +560,7 @@ fn run_router(
                     &mut conns,
                     &mut sessions,
                     &mut shards,
+                    &mut fo,
                     feat,
                     &mut report,
                 );
@@ -449,6 +580,7 @@ fn run_router(
                         &mut conns,
                         &mut sessions,
                         &mut shards,
+                        &mut fo,
                         feat,
                         &mut report,
                     );
@@ -459,7 +591,7 @@ fn run_router(
     }
 
     for idx in 0..shards.len() {
-        send_to_shard(&mut shards, idx, &Msg::Drain { session: DRAIN_ALL });
+        send_to_shard(&mut shards, idx, &Msg::Drain { session: DRAIN_ALL }, &fo);
         shards[idx].writer.shutdown();
     }
     for c in conns.values_mut() {
@@ -476,6 +608,7 @@ fn handle_client_msg(
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
     policy: &FrontPolicy,
+    fo: &mut FrontObs,
     feat: u32,
     period: u32,
     warmup: u32,
@@ -494,6 +627,7 @@ fn handle_client_msg(
                         session: 0,
                         detail: "unexpected hello".into(),
                     },
+                    fo,
                 );
                 return;
             }
@@ -510,6 +644,7 @@ fn handle_client_msg(
                     period,
                     warmup,
                 },
+                fo,
             );
         }
         Msg::Frame {
@@ -517,6 +652,7 @@ fn handle_client_msg(
             seq,
             last,
             samples,
+            ..
         } => {
             if !greeted {
                 report.wire_errs += 1;
@@ -528,6 +664,7 @@ fn handle_client_msg(
                         session,
                         detail: "frame before hello".into(),
                     },
+                    fo,
                 );
                 return;
             }
@@ -542,6 +679,7 @@ fn handle_client_msg(
                         session,
                         detail,
                     },
+                    fo,
                 );
                 return;
             }
@@ -558,6 +696,7 @@ fn handle_client_msg(
                             session,
                             detail,
                         },
+                        fo,
                     );
                     return;
                 }
@@ -573,6 +712,7 @@ fn handle_client_msg(
                             session,
                             detail,
                         },
+                        fo,
                     );
                     return;
                 }
@@ -586,6 +726,7 @@ fn handle_client_msg(
                             session,
                             detail: "no reachable shard".into(),
                         },
+                        fo,
                     );
                     return;
                 };
@@ -616,6 +757,7 @@ fn handle_client_msg(
                         session,
                         detail: "session owned by another connection".into(),
                     },
+                    fo,
                 );
                 return;
             }
@@ -630,6 +772,7 @@ fn handle_client_msg(
                         session,
                         detail,
                     },
+                    fo,
                 );
                 return;
             }
@@ -642,14 +785,18 @@ fn handle_client_msg(
             let shard = sess.shard;
             sess.inflight.push_back((seq, last, samples.clone()));
             sess.sent += 1;
+            // Only directly-forwarded frames are sampled; held frames
+            // flushed after a migration replay ride untraced (the
+            // migration itself carries its own forced trace).
             let frame = Msg::Frame {
                 session,
                 seq,
                 last,
                 samples,
+                trace: fo.sample_frame(session, seq, shard),
             };
-            if !send_to_shard(shards, shard, &frame) {
-                lose_shard(shard, conns, sessions, shards, feat, report);
+            if !send_to_shard(shards, shard, &frame, fo) {
+                lose_shard(shard, conns, sessions, shards, fo, feat, report);
             }
         }
         Msg::Drain { session } => {
@@ -660,12 +807,12 @@ fn handle_client_msg(
                     .map(|(id, _)| *id)
                     .collect();
                 for sid in mine {
-                    retire_session(sid, sessions, shards);
+                    retire_session(sid, sessions, shards, fo);
                 }
                 return;
             }
             if sessions.get(&session).map(|s| s.conn) == Some(conn) {
-                retire_session(session, sessions, shards);
+                retire_session(session, sessions, shards, fo);
             }
         }
         Msg::Migrate { .. } | Msg::FrameOut { .. } | Msg::Err { .. } => {
@@ -678,6 +825,7 @@ fn handle_client_msg(
                     session: 0,
                     detail: "unexpected message".into(),
                 },
+                fo,
             );
         }
     }
@@ -690,6 +838,7 @@ fn handle_shard_msg(
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    fo: &mut FrontObs,
     feat: u32,
     warmup: u32,
     report: &mut FrontReport,
@@ -699,6 +848,7 @@ fn handle_shard_msg(
             session,
             seq,
             samples,
+            trace,
         } => {
             let Some(sess) = sessions.get_mut(&session) else {
                 return; // retired while the output was in flight
@@ -708,12 +858,14 @@ fn handle_shard_msg(
             }
             let Some((fseq, last, frame)) = sess.inflight.pop_front() else {
                 report.wire_errs += 1;
+                fo.count(Counter::WireErrs, 1);
                 return;
             };
             if fseq != seq {
                 // The shard's absolute counter disagrees with ours —
                 // a protocol bug, not a client fault.  Drop the pair.
                 report.wire_errs += 1;
+                fo.count(Counter::WireErrs, 1);
                 return;
             }
             sess.acked += 1;
@@ -725,6 +877,14 @@ fn handle_shard_msg(
             let finished = last;
             let move_now = sess.migrating_to.is_some() && sess.inflight.is_empty();
             report.frames_out += 1;
+            // Close the loop on a traced frame: record the reply hop
+            // and echo the extended context to the client.
+            let reply_trace = trace.map(|ctx| {
+                if let Some(h) = &fo.obs {
+                    h.span(ctx.trace_id, SpanKind::FrontReply, ctx.kind, session, seq, 0);
+                }
+                ctx.child(SpanKind::FrontReply)
+            });
             send_to_conn(
                 conns,
                 conn,
@@ -732,14 +892,16 @@ fn handle_shard_msg(
                     session,
                     seq,
                     samples,
+                    trace: reply_trace,
                 },
+                fo,
             );
             if finished {
                 sessions.remove(&session);
                 return;
             }
             if move_now {
-                complete_migration(session, conns, sessions, shards, feat, report);
+                complete_migration(session, conns, sessions, shards, fo, feat, report);
             }
         }
         Msg::Err {
@@ -747,7 +909,10 @@ fn handle_shard_msg(
             session,
             detail,
         } => {
+            // Observed on receipt; forwarding it below counts the send
+            // (total and per-code) in send_to_conn.
             report.wire_errs += 1;
+            fo.count(Counter::WireErrs, 1);
             if session != 0 {
                 if let Some(sess) = sessions.get(&session) {
                     let conn = sess.conn;
@@ -759,6 +924,7 @@ fn handle_shard_msg(
                             session,
                             detail,
                         },
+                        fo,
                     );
                 }
             }
@@ -766,18 +932,21 @@ fn handle_shard_msg(
         // Shards never originate anything else after the handshake.
         Msg::Hello { .. } | Msg::Frame { .. } | Msg::Migrate { .. } | Msg::Drain { .. } => {
             report.wire_errs += 1;
+            fo.count(Counter::WireErrs, 1);
         }
     }
 }
 
 /// Begin a planned migration; completes immediately when nothing is
 /// in flight, otherwise when the last outstanding output arrives.
+#[allow(clippy::too_many_arguments)]
 fn start_migration(
     session: u64,
     to: usize,
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
 ) {
@@ -789,7 +958,7 @@ fn start_migration(
     }
     sess.migrating_to = Some(to);
     if sess.inflight.is_empty() {
-        complete_migration(session, conns, sessions, shards, feat, report);
+        complete_migration(session, conns, sessions, shards, fo, feat, report);
     }
 }
 
@@ -800,6 +969,7 @@ fn complete_migration(
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
 ) {
@@ -811,18 +981,22 @@ fn complete_migration(
     };
     let from = sess.shard;
     debug_assert!(sess.inflight.is_empty());
-    send_to_shard(shards, from, &Msg::Drain { session });
+    send_to_shard(shards, from, &Msg::Drain { session }, fo);
+    let hist: Vec<Vec<f32>> = sess.history.iter().cloned().collect();
+    let t = sess.acked;
     let migrate = Msg::Migrate {
         session,
-        t: sess.acked,
+        t,
         feat,
-        history: sess.history.iter().cloned().collect(),
+        history: hist,
+        trace: fo.trace_migration(session, from, to),
     };
-    if !send_to_shard(shards, to, &migrate) {
+    let sess = sessions.get_mut(&session).expect("still live");
+    if !send_to_shard(shards, to, &migrate, fo) {
         // Target died at handoff.  The old shard already dropped the
         // session, so this is now a crash re-home, not a cancel.
         sess.shard = to;
-        rehome_session(session, conns, sessions, shards, feat, report);
+        rehome_session(session, conns, sessions, shards, fo, feat, report);
         return;
     }
     sess.shard = to;
@@ -837,11 +1011,12 @@ fn complete_migration(
             seq,
             last,
             samples,
+            trace: None,
         };
-        if !send_to_shard(shards, to, &frame) {
+        if !send_to_shard(shards, to, &frame, fo) {
             // The frame is recorded inflight; losing the shard now
             // re-homes the session and re-sends the tail.
-            lose_shard(to, conns, sessions, shards, feat, report);
+            lose_shard(to, conns, sessions, shards, fo, feat, report);
             return;
         }
     }
@@ -856,6 +1031,7 @@ fn lose_shard(
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
 ) {
@@ -872,7 +1048,7 @@ fn lose_shard(
         .map(|(id, _)| *id)
         .collect();
     for sid in nominated {
-        cancel_migration(sid, conns, sessions, shards, feat, report);
+        cancel_migration(sid, conns, sessions, shards, fo, feat, report);
     }
     let orphans: Vec<u64> = sessions
         .iter()
@@ -880,7 +1056,7 @@ fn lose_shard(
         .map(|(id, _)| *id)
         .collect();
     for sid in orphans {
-        rehome_session(sid, conns, sessions, shards, feat, report);
+        rehome_session(sid, conns, sessions, shards, fo, feat, report);
     }
 }
 
@@ -891,6 +1067,7 @@ fn cancel_migration(
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
 ) {
@@ -909,9 +1086,10 @@ fn cancel_migration(
             seq,
             last,
             samples,
+            trace: None,
         };
-        if !send_to_shard(shards, shard, &frame) {
-            lose_shard(shard, conns, sessions, shards, feat, report);
+        if !send_to_shard(shards, shard, &frame, fo) {
+            lose_shard(shard, conns, sessions, shards, fo, feat, report);
             return;
         }
     }
@@ -922,6 +1100,7 @@ fn rehome_session(
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
 ) {
@@ -941,17 +1120,20 @@ fn rehome_session(
                     session,
                     detail: "no reachable shard to resume on".into(),
                 },
+                fo,
             );
             return;
         };
         let sess = sessions.get_mut(&session).expect("still live");
+        let from = sess.shard;
         let migrate = Msg::Migrate {
             session,
             t: sess.acked,
             feat,
             history: sess.history.iter().cloned().collect(),
+            trace: fo.trace_migration(session, from, target),
         };
-        if !send_to_shard(shards, target, &migrate) {
+        if !send_to_shard(shards, target, &migrate, fo) {
             continue; // target just died too; try the next candidate
         }
         sess.shard = target;
@@ -972,8 +1154,9 @@ fn rehome_session(
                 seq,
                 last,
                 samples,
+                trace: None,
             };
-            if !send_to_shard(shards, target, &frame) {
+            if !send_to_shard(shards, target, &frame, fo) {
                 ok = false;
                 break;
             }
@@ -993,9 +1176,10 @@ fn retire_session(
     session: u64,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    fo: &FrontObs,
 ) {
     if let Some(sess) = sessions.remove(&session) {
-        send_to_shard(shards, sess.shard, &Msg::Drain { session });
+        send_to_shard(shards, sess.shard, &Msg::Drain { session }, fo);
     }
 }
 
@@ -1005,6 +1189,7 @@ fn drop_conn(
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    fo: &FrontObs,
 ) {
     if let Some(mut c) = conns.remove(&conn) {
         c.writer.shutdown();
@@ -1015,6 +1200,6 @@ fn drop_conn(
         .map(|(id, _)| *id)
         .collect();
     for sid in mine {
-        retire_session(sid, sessions, shards);
+        retire_session(sid, sessions, shards, fo);
     }
 }

@@ -44,7 +44,7 @@ pub mod wire;
 
 pub use balance::{health_from_feed, ClusterController, ClusterDecision, ClusterPolicy, ShardHealth};
 pub use client::WireClient;
-pub use front::{spawn_front, FrontHandle, FrontPolicy, FrontReport, ShardLink};
+pub use front::{spawn_front, spawn_front_with, FrontHandle, FrontPolicy, FrontReport, ShardLink};
 pub use loopback::LoopbackHub;
 pub use shard::{run_shard, ShardConfig, ShardReport};
 pub use tcp::{TcpConnector, TcpPort};

@@ -22,7 +22,7 @@ use anyhow::{anyhow, Result};
 use super::transport::{Duplex, Listener, WireWrite};
 use super::wire::{role, write_msg, ErrCode, FrameReader, Msg, WireError, DRAIN_ALL, WIRE_VERSION};
 use crate::coordinator::{FrameJob, LiveCmd, LiveEvent, Server};
-use crate::obs::{Counter, Gauge, ObsHandle};
+use crate::obs::{Counter, Gauge, ObsHandle, SpanKind};
 use crate::runtime::warmup_frames;
 
 /// Shard-process configuration.
@@ -153,7 +153,6 @@ fn serve_conn(
         }
         Ok(ConnEvent::Wire(Err(WireError::VersionSkew { found }))) => {
             report.wire_errs += 1;
-            count(obs, Counter::WireErrs, 1);
             let _ = send_err(
                 &mut w,
                 obs,
@@ -167,7 +166,6 @@ fn serve_conn(
         }
         _ => {
             report.wire_errs += 1;
-            count(obs, Counter::WireErrs, 1);
             let _ = send_err(&mut w, obs, ErrCode::Protocol, 0, "handshake failed");
             w.shutdown();
             let _ = reader_thread.join();
@@ -217,6 +215,7 @@ fn serve_conn(
                         seq,
                         last,
                         samples,
+                        trace,
                     } => {
                         if samples.len() != feat as usize {
                             report.wire_errs += 1;
@@ -238,10 +237,27 @@ fn serve_conn(
                         }
                         *want += 1;
                         report.frames_in += 1;
+                        // traced frame: open shard_dispatch under the
+                        // front's span, forward the child context to
+                        // the worker (DESIGN.md §15)
+                        let job_trace = trace.map(|ctx| {
+                            if let Some(h) = obs {
+                                h.span(
+                                    ctx.trace_id,
+                                    SpanKind::ShardDispatch,
+                                    ctx.kind,
+                                    session,
+                                    seq,
+                                    0,
+                                );
+                            }
+                            ctx.child(SpanKind::ShardDispatch)
+                        });
                         live.submit(LiveCmd::Frame(FrameJob {
                             stream_id: session,
                             frame: Arc::from(samples.as_slice()),
                             last,
+                            trace: job_trace,
                         }))?;
                     }
                     Msg::Migrate {
@@ -249,6 +265,7 @@ fn serve_conn(
                         t,
                         feat: mfeat,
                         history,
+                        trace,
                     } => {
                         if mfeat != feat {
                             report.wire_errs += 1;
@@ -260,10 +277,13 @@ fn serve_conn(
                         }
                         next_seq.insert(session, t);
                         report.resumes += 1;
+                        // the worker records the migrate_replay span
+                        // when (and only when) the replay succeeds
                         live.submit(LiveCmd::Resume {
                             stream_id: session,
                             t,
                             history,
+                            trace,
                         })?;
                     }
                     Msg::Drain { session } => {
@@ -300,12 +320,18 @@ fn serve_conn(
                     break; // framing lost — the connection is dead
                 }
             }
-            ConnEvent::Live(LiveEvent::Out { id, seq, frame }) => {
+            ConnEvent::Live(LiveEvent::Out {
+                id,
+                seq,
+                frame,
+                trace,
+            }) => {
                 report.frames_out += 1;
                 let out = Msg::FrameOut {
                     session: id,
                     seq,
                     samples: frame,
+                    trace,
                 };
                 if send_msg(&mut w, obs, &out).is_err() {
                     break;
@@ -358,6 +384,9 @@ fn send_msg(
     Ok(())
 }
 
+/// Send a typed error, counting it under both the [`Counter::WireErrs`]
+/// total and the code's own `wire_err_*` counter (additive schema
+/// change — DESIGN.md appendix A).
 fn send_err(
     w: &mut Box<dyn WireWrite>,
     obs: &Option<ObsHandle>,
@@ -365,7 +394,12 @@ fn send_err(
     session: u64,
     detail: &str,
 ) -> Result<(), WireError> {
-    count(obs, Counter::WireErrs, 1);
+    if let Some(h) = obs {
+        h.with(|o| {
+            o.count(Counter::WireErrs, 1);
+            o.count(code.counter(), 1);
+        });
+    }
     send_msg(
         w,
         obs,

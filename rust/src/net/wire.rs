@@ -13,8 +13,20 @@
 //! an oversize length prefix is rejected before any body bytes are
 //! read or buffered. The full grammar and the fault matrix live in
 //! DESIGN.md §14.
+//!
+//! **Trace context (DESIGN.md §15).** `Frame`, `FrameOut` and
+//! `Migrate` optionally carry a 10-byte [`TraceCtx`] as a trailing
+//! suffix after their v1 payload. The encoding is strictly additive:
+//! with tracing off (the default) nothing is appended and the bytes
+//! are identical to plain `soi.wire.v1`, so old peers interop
+//! untouched; a traced message reaching an old peer fails its strict
+//! length check with the existing typed `Malformed` error — in-band,
+//! per-message, never silent.
 
 use std::fmt;
+
+use crate::obs::trace::{TraceCtx, TRACE_CTX_BYTES};
+use crate::obs::Counter;
 
 /// Schema identifier for this protocol revision.
 pub const WIRE_SCHEMA: &str = "soi.wire.v1";
@@ -198,6 +210,21 @@ impl ErrCode {
             ErrCode::Backpressure => "backpressure",
         }
     }
+
+    /// The per-code telemetry counter (DESIGN.md appendix A): every
+    /// wire error a shard or the front *sends* is counted under both
+    /// the `wire_errs` total and this per-code breakdown, so a
+    /// `VersionSkew` storm is distinguishable from `BadFrame` noise.
+    pub fn counter(self) -> Counter {
+        match self {
+            ErrCode::VersionSkew => Counter::WireErrVersionSkew,
+            ErrCode::AdmissionDenied => Counter::WireErrAdmissionDenied,
+            ErrCode::BadFrame => Counter::WireErrBadFrame,
+            ErrCode::Protocol => Counter::WireErrProtocol,
+            ErrCode::ShardLost => Counter::WireErrShardLost,
+            ErrCode::Backpressure => Counter::WireErrBackpressure,
+        }
+    }
 }
 
 /// A fully-decoded `soi.wire.v1` message.
@@ -228,6 +255,9 @@ pub enum Msg {
         last: bool,
         /// Sample data, `feat` values.
         samples: Vec<f32>,
+        /// Optional trace context (DESIGN.md §15); `None` encodes
+        /// byte-identically to plain v1.
+        trace: Option<TraceCtx>,
     },
     /// One output frame for a session.
     FrameOut {
@@ -237,6 +267,8 @@ pub enum Msg {
         seq: u64,
         /// Output sample data.
         samples: Vec<f32>,
+        /// Optional trace context echoed back by the serving shard.
+        trace: Option<TraceCtx>,
     },
     /// Warm-migrate a session onto the receiving shard: resume at
     /// absolute frame counter `t` by replaying `history` through the
@@ -250,6 +282,9 @@ pub enum Msg {
         feat: u32,
         /// The most recent acked input frames, oldest first.
         history: Vec<Vec<f32>>,
+        /// Optional trace context linking the replay to the front's
+        /// migration span.
+        trace: Option<TraceCtx>,
     },
     /// Retire one session (`session`) or, with [`DRAIN_ALL`], drain
     /// the whole shard and shut it down.
@@ -281,6 +316,15 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
 fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
     for x in v {
         out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+/// Append the optional 10-byte trace suffix (DESIGN.md §15); with
+/// `None` this appends nothing, keeping the v1 bytes untouched.
+fn put_trace(out: &mut Vec<u8>, t: &Option<TraceCtx>) {
+    if let Some(t) = t {
+        put_u64(out, t.trace_id);
+        out.push(t.kind);
+        out.push(t.parent);
     }
 }
 
@@ -346,6 +390,34 @@ impl<'a> Cur<'a> {
         }
         Ok(())
     }
+    /// Consume the optional trailing trace suffix (DESIGN.md §15):
+    /// nothing left means untraced, exactly [`TRACE_CTX_BYTES`] left
+    /// decodes a [`TraceCtx`], anything else is the same trailing-
+    /// bytes violation an untraced v1 decoder reports.
+    fn trace(&mut self, tag_name: &str) -> Result<Option<TraceCtx>, WireError> {
+        let rem = self.buf.len() - self.pos;
+        if rem == 0 {
+            return Ok(None);
+        }
+        if rem != TRACE_CTX_BYTES {
+            return Err(WireError::Malformed {
+                reason: format!("{tag_name}: {rem} trailing bytes after payload"),
+            });
+        }
+        let trace_id = self.u64("trace.id")?;
+        let kind = self.u8("trace.kind")?;
+        let parent = self.u8("trace.parent")?;
+        if trace_id == 0 {
+            return Err(WireError::Malformed {
+                reason: format!("{tag_name}: trace_id must be nonzero"),
+            });
+        }
+        Ok(Some(TraceCtx {
+            trace_id,
+            kind,
+            parent,
+        }))
+    }
 }
 
 impl Msg {
@@ -375,6 +447,7 @@ impl Msg {
                 seq,
                 last,
                 samples,
+                trace,
             } => {
                 out.push(tag::FRAME);
                 put_u64(out, *session);
@@ -382,23 +455,27 @@ impl Msg {
                 out.push(u8::from(*last));
                 put_u32(out, samples.len() as u32);
                 put_f32s(out, samples);
+                put_trace(out, trace);
             }
             Msg::FrameOut {
                 session,
                 seq,
                 samples,
+                trace,
             } => {
                 out.push(tag::FRAME_OUT);
                 put_u64(out, *session);
                 put_u64(out, *seq);
                 put_u32(out, samples.len() as u32);
                 put_f32s(out, samples);
+                put_trace(out, trace);
             }
             Msg::Migrate {
                 session,
                 t,
                 feat,
                 history,
+                trace,
             } => {
                 out.push(tag::MIGRATE);
                 put_u64(out, *session);
@@ -417,6 +494,7 @@ impl Msg {
                     }
                     put_f32s(out, frame);
                 }
+                put_trace(out, trace);
             }
             Msg::Drain { session } => {
                 out.push(tag::DRAIN);
@@ -495,12 +573,13 @@ impl Msg {
                 }
                 let n = c.u32("frame.n")? as usize;
                 let samples = c.f32s(n, "frame.samples")?;
-                c.done("frame")?;
+                let trace = c.trace("frame")?;
                 Ok(Msg::Frame {
                     session,
                     seq,
                     last: last == 1,
                     samples,
+                    trace,
                 })
             }
             tag::FRAME_OUT => {
@@ -508,11 +587,12 @@ impl Msg {
                 let seq = c.u64("frame_out.seq")?;
                 let n = c.u32("frame_out.n")? as usize;
                 let samples = c.f32s(n, "frame_out.samples")?;
-                c.done("frame_out")?;
+                let trace = c.trace("frame_out")?;
                 Ok(Msg::FrameOut {
                     session,
                     seq,
                     samples,
+                    trace,
                 })
             }
             tag::MIGRATE => {
@@ -528,11 +608,11 @@ impl Msg {
                     .ok_or_else(|| WireError::Malformed {
                         reason: format!("migrate: h={h} x feat={feat} overflows"),
                     })?;
-                if body.len() - c.pos != want {
+                let rem = body.len() - c.pos;
+                if rem != want && rem != want + TRACE_CTX_BYTES {
                     return Err(WireError::Malformed {
                         reason: format!(
-                            "migrate: history needs {want} bytes, payload has {}",
-                            body.len() - c.pos
+                            "migrate: history needs {want} bytes, payload has {rem}"
                         ),
                     });
                 }
@@ -540,12 +620,13 @@ impl Msg {
                 for _ in 0..h {
                     history.push(c.f32s(feat as usize, "migrate.history")?);
                 }
-                c.done("migrate")?;
+                let trace = c.trace("migrate")?;
                 Ok(Msg::Migrate {
                     session,
                     t: t_abs,
                     feat,
                     history,
+                    trace,
                 })
             }
             tag::DRAIN => {
@@ -714,17 +795,20 @@ mod tests {
                 seq: 42,
                 last: true,
                 samples: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE],
+                trace: None,
             },
             Msg::FrameOut {
                 session: 7,
                 seq: 42,
                 samples: vec![0.125; 6],
+                trace: None,
             },
             Msg::Migrate {
                 session: 9,
                 t: 16,
                 feat: 2,
                 history: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+                trace: None,
             },
             Msg::Drain { session: DRAIN_ALL },
             Msg::Err {
@@ -745,6 +829,7 @@ mod tests {
             seq: 0,
             last: false,
             samples: vec![],
+            trace: None,
         };
         assert_eq!(roundtrip(&m), m);
     }
@@ -756,6 +841,7 @@ mod tests {
             seq: 0,
             last: false,
             samples: vec![0.0; MAX_FRAME / 4],
+            trace: None,
         };
         let mut buf = Vec::new();
         match m.encode(&mut buf) {
@@ -814,6 +900,7 @@ mod tests {
             t: 2,
             feat: 2,
             history: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            trace: None,
         };
         let mut buf = Vec::new();
         m.encode(&mut buf).unwrap();
@@ -825,6 +912,112 @@ mod tests {
                 assert!(reason.contains("history"), "{reason}")
             }
             other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_suffix_roundtrips_on_every_carrier() {
+        use crate::obs::trace::SpanKind;
+        let ctx = TraceCtx::root(0xABCD_EF01, SpanKind::FrontAdmit);
+        let msgs = vec![
+            Msg::Frame {
+                session: 3,
+                seq: 9,
+                last: false,
+                samples: vec![0.5, -0.5],
+                trace: Some(ctx),
+            },
+            Msg::FrameOut {
+                session: 3,
+                seq: 9,
+                samples: vec![1.5; 4],
+                trace: Some(ctx.child(SpanKind::ShardDispatch)),
+            },
+            Msg::Migrate {
+                session: 3,
+                t: 2,
+                feat: 2,
+                history: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+                trace: Some(TraceCtx::root(7, SpanKind::MigrateFront)),
+            },
+        ];
+        for m in &msgs {
+            assert_eq!(&roundtrip(m), m, "traced {} roundtrip", m.kind());
+        }
+    }
+
+    #[test]
+    fn untraced_encoding_is_byte_identical_to_v1() {
+        // The additive-suffix contract: `trace: None` must produce
+        // exactly the v1 bytes (old peers interop untouched), and the
+        // traced twin must differ only by the 10-byte suffix.
+        let plain = Msg::Frame {
+            session: 1,
+            seq: 2,
+            last: false,
+            samples: vec![1.0, 2.0],
+            trace: None,
+        };
+        let traced = Msg::Frame {
+            samples: vec![1.0, 2.0],
+            trace: Some(TraceCtx {
+                trace_id: 5,
+                kind: 1,
+                parent: 0,
+            }),
+            ..plain.clone()
+        };
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        plain.encode(&mut a).unwrap();
+        traced.encode(&mut b).unwrap();
+        assert_eq!(b.len(), a.len() + TRACE_CTX_BYTES);
+        // identical after the length prefix, up to the suffix
+        assert_eq!(a[4..], b[4..a.len()]);
+    }
+
+    #[test]
+    fn bad_trace_suffixes_are_malformed() {
+        let m = Msg::Frame {
+            session: 1,
+            seq: 0,
+            last: false,
+            samples: vec![1.0],
+            trace: None,
+        };
+        // wrong suffix length: neither absent nor TRACE_CTX_BYTES
+        let mut buf = Vec::new();
+        m.encode(&mut buf).unwrap();
+        buf.extend_from_slice(&[0u8; 3]);
+        match Msg::decode(&buf[4..]) {
+            Err(WireError::Malformed { reason }) => {
+                assert!(reason.contains("trailing"), "{reason}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        // a zero trace id is reserved (absent-trace sentinel)
+        let mut buf = Vec::new();
+        m.encode(&mut buf).unwrap();
+        buf.extend_from_slice(&[0u8; TRACE_CTX_BYTES]);
+        match Msg::decode(&buf[4..]) {
+            Err(WireError::Malformed { reason }) => {
+                assert!(reason.contains("nonzero"), "{reason}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn err_codes_map_to_distinct_counters() {
+        let mut seen = std::collections::HashSet::new();
+        for code in [
+            ErrCode::VersionSkew,
+            ErrCode::AdmissionDenied,
+            ErrCode::BadFrame,
+            ErrCode::Protocol,
+            ErrCode::ShardLost,
+            ErrCode::Backpressure,
+        ] {
+            assert!(seen.insert(code.counter().name()), "{:?} counter reused", code);
         }
     }
 

@@ -1,0 +1,659 @@
+//! Lossless feed aggregation: many per-process `soi.obs.v1` health
+//! feeds → one versioned `soi.cluster.v1` cluster summary
+//! (DESIGN.md §15; record schema in DESIGN.md appendix A).
+//!
+//! Each shard process (and the front-end) exports its own NDJSON feed.
+//! [`aggregate`] parses every feed with the same tolerant discipline as
+//! [`crate::net::balance::health_from_feed`] — skip lines that fail to
+//! parse (a live feed's last line may be mid-write), take counters and
+//! gauges from the **latest-seq snapshot** (they are cumulative), and
+//! re-ingest the latest-seq `exec_ns` histogram lines bucket by bucket
+//! ([`Histogram::add_bucket`]).  Because the feed exports the
+//! histogram's own log-linear buckets, the cluster-wide merge is
+//! **bucket-exact**: merging shard A's and shard B's exported buckets
+//! yields the identical histogram to merging their in-process
+//! registries.  Nothing is sampled away and nothing re-binned.
+//!
+//! Span events ([`crate::obs::ring::EventKind::Span`]) are collected
+//! from *every* drain interval (events are incremental, one snapshot
+//! each) and re-tagged with the shard they came from, so a sampled
+//! frame's causally-linked span tree — opened at the front-end,
+//! continued on whichever shard served it — reassembles from the
+//! merged feed by `trace_id` alone ([`ClusterSummary::trace_spans`]).
+//!
+//! The summary renders back to NDJSON under the `soi.cluster.v1`
+//! schema (one `cluster` head record, one `shard` record per feed,
+//! `hist` records at cluster and per-shard scope, one `span` record
+//! per collected span) and to a terminal dashboard for `soi top`
+//! ([`ClusterSummary::render_top`]).
+
+use super::registry::{Counter, Gauge};
+use super::trace::SpanKind;
+use crate::util::json::{self, Json};
+use crate::util::stats::Histogram;
+
+/// Schema tag stamped on every aggregated cluster record.
+pub const CLUSTER_SCHEMA: &str = "soi.cluster.v1";
+
+/// One span event lifted out of a shard feed, typed for tree
+/// reconstruction; the full original record rides along for lossless
+/// re-rendering.
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    /// Microseconds since the *originating process's* telemetry epoch
+    /// (orders spans within one process, not across processes).
+    pub t_us: u64,
+    /// The trace this span belongs to.
+    pub trace_id: u64,
+    /// The span itself.
+    pub span: SpanKind,
+    /// Its parent span (`None` at the root).
+    pub parent: Option<SpanKind>,
+    /// The original `soi.obs.v1` event record (all named payload
+    /// fields preserved).
+    raw: Json,
+}
+
+/// One feed's distilled state: latest cumulative counters/gauges, the
+/// latest bucket-exact exec histograms, and every span event the feed
+/// carried.
+#[derive(Debug)]
+pub struct ShardSummary {
+    /// Shard name (the CLI uses the feed file stem).
+    pub name: String,
+    /// `seq` of the snapshot the counters/gauges came from.
+    pub snapshot_seq: u64,
+    /// `t_ms` of that snapshot — the process's feed window length.
+    pub t_ms: u64,
+    /// Cumulative counters, index order = [`Counter::ALL`]; counters a
+    /// (older) feed lacks read as 0.
+    pub counters: [u64; Counter::COUNT],
+    /// Gauges from the same snapshot, index order = [`Gauge::ALL`].
+    pub gauges: [u64; Gauge::COUNT],
+    /// Exporter-side snapshot drops reported by that snapshot.
+    pub feed_drops: u64,
+    /// Per-(rung, phase) exec histograms from the latest seq that
+    /// rendered any, re-ingested bucket-exactly; ascending key order.
+    pub exec_ns: Vec<(usize, usize, Histogram)>,
+    /// Every span event in the feed, in feed order.
+    pub spans: Vec<SpanRec>,
+    /// Non-empty NDJSON lines seen (parse failures included).
+    pub lines: u64,
+}
+
+impl ShardSummary {
+    /// This shard's cumulative value of counter `c`.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[Counter::ALL.iter().position(|x| *x == c).unwrap_or(0)]
+    }
+
+    /// This shard's latest value of gauge `g`.
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[Gauge::ALL.iter().position(|x| *x == g).unwrap_or(0)]
+    }
+
+    /// Counter `c` as a per-second rate over this feed's window
+    /// (0 when the window is empty).
+    pub fn rate(&self, c: Counter) -> f64 {
+        if self.t_ms == 0 {
+            return 0.0;
+        }
+        self.counter(c) as f64 * 1000.0 / self.t_ms as f64
+    }
+}
+
+/// The merged cluster view over every aggregated feed.
+#[derive(Debug)]
+pub struct ClusterSummary {
+    /// One summary per input feed, in input order.
+    pub shards: Vec<ShardSummary>,
+}
+
+fn get_u64(v: &Json, key: &str) -> Option<u64> {
+    v.get(key).and_then(Json::as_f64).map(|f| f as u64)
+}
+
+/// Distill one `soi.obs.v1` feed.  Tolerant line-by-line (mid-write
+/// tails skip), but a feed without any snapshot is an error — there is
+/// nothing to aggregate.
+fn parse_feed(name: &str, text: &str) -> Result<ShardSummary, String> {
+    let mut s = ShardSummary {
+        name: name.to_string(),
+        snapshot_seq: 0,
+        t_ms: 0,
+        counters: [0; Counter::COUNT],
+        gauges: [0; Gauge::COUNT],
+        feed_drops: 0,
+        exec_ns: Vec::new(),
+        spans: Vec::new(),
+        lines: 0,
+    };
+    let mut saw_snapshot = false;
+    // (seq, rung, phase, bucket idx, count) of every exec_ns hist line
+    let mut hist_lines: Vec<(u64, usize, usize, usize, u64)> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        s.lines += 1;
+        let Ok(v) = json::parse(line) else { continue };
+        let Some(ty) = v.get("type").and_then(|t| t.as_str()) else {
+            continue;
+        };
+        let seq = get_u64(&v, "seq").unwrap_or(0);
+        match ty {
+            "snapshot" => {
+                if seq >= s.snapshot_seq || !saw_snapshot {
+                    saw_snapshot = true;
+                    s.snapshot_seq = seq;
+                    s.t_ms = get_u64(&v, "t_ms").unwrap_or(0);
+                    s.feed_drops = get_u64(&v, "feed_drops").unwrap_or(0);
+                    if let Some(c) = v.get("counters") {
+                        for (i, name) in Counter::ALL.iter().map(|c| c.name()).enumerate() {
+                            s.counters[i] = get_u64(c, name).unwrap_or(0);
+                        }
+                    }
+                    if let Some(g) = v.get("gauges") {
+                        for (i, name) in Gauge::ALL.iter().map(|g| g.name()).enumerate() {
+                            s.gauges[i] = get_u64(g, name).unwrap_or(0);
+                        }
+                    }
+                }
+            }
+            "hist" => {
+                if v.get("name").and_then(|n| n.as_str()) != Some("exec_ns") {
+                    continue;
+                }
+                let (Some(rung), Some(phase)) = (get_u64(&v, "rung"), get_u64(&v, "phase"))
+                else {
+                    continue;
+                };
+                if let Some(buckets) = v.get("buckets").and_then(Json::as_arr) {
+                    for b in buckets {
+                        let Some(pair) = b.as_arr() else { continue };
+                        if pair.len() == 2 {
+                            if let (Some(i), Some(c)) =
+                                (pair[0].as_usize(), pair[1].as_f64().map(|f| f as u64))
+                            {
+                                hist_lines.push((seq, rung as usize, phase as usize, i, c));
+                            }
+                        }
+                    }
+                }
+            }
+            "event" => {
+                if v.get("kind").and_then(|k| k.as_str()) != Some("span") {
+                    continue;
+                }
+                let (Some(t_us), Some(trace_id)) = (get_u64(&v, "t_us"), get_u64(&v, "trace_id"))
+                else {
+                    continue;
+                };
+                let Some(span) = v
+                    .get("span")
+                    .and_then(|x| x.as_str())
+                    .and_then(SpanKind::from_name)
+                else {
+                    continue;
+                };
+                let parent = v
+                    .get("parent")
+                    .and_then(|x| x.as_str())
+                    .and_then(SpanKind::from_name);
+                s.spans.push(SpanRec {
+                    t_us,
+                    trace_id,
+                    span,
+                    parent,
+                    raw: v,
+                });
+            }
+            _ => {}
+        }
+    }
+    if !saw_snapshot {
+        return Err(format!("feed '{name}': no snapshot record"));
+    }
+    // Feed histograms are cumulative; the newest seq that rendered any
+    // hist lines carries the totals (hists only render at seqs with
+    // exec activity, so that seq may trail the newest snapshot).
+    if let Some(hseq) = hist_lines.iter().map(|(s, ..)| *s).max() {
+        for &(seq, rung, phase, idx, count) in &hist_lines {
+            if seq != hseq {
+                continue;
+            }
+            match s
+                .exec_ns
+                .iter_mut()
+                .find(|(r, p, _)| (*r, *p) == (rung, phase))
+            {
+                Some((_, _, h)) => h.add_bucket(idx, count),
+                None => {
+                    let mut h = Histogram::new();
+                    h.add_bucket(idx, count);
+                    s.exec_ns.push((rung, phase, h));
+                }
+            }
+        }
+        s.exec_ns.sort_by_key(|(r, p, _)| (*r, *p));
+    }
+    Ok(s)
+}
+
+/// Merge `(name, feed text)` pairs into one [`ClusterSummary`].
+/// Errors if any feed has no snapshot (name it, don't silently thin
+/// the fleet) or if no feeds were given.
+pub fn aggregate(feeds: &[(String, String)]) -> Result<ClusterSummary, String> {
+    if feeds.is_empty() {
+        return Err("no feeds to aggregate".into());
+    }
+    let mut shards = Vec::with_capacity(feeds.len());
+    for (name, text) in feeds {
+        shards.push(parse_feed(name, text)?);
+    }
+    Ok(ClusterSummary { shards })
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+impl ClusterSummary {
+    /// Cluster-wide total of counter `c` (sum over shards — exact, the
+    /// feeds export cumulative counters).
+    pub fn counter_total(&self, c: Counter) -> u64 {
+        self.shards.iter().map(|s| s.counter(c)).sum()
+    }
+
+    /// Cluster-wide sum of gauge `g` (meaningful for capacity gauges
+    /// like streams / queue depth / drop totals).
+    pub fn gauge_total(&self, g: Gauge) -> u64 {
+        self.shards.iter().map(|s| s.gauge(g)).sum()
+    }
+
+    /// Cluster-wide per-second rate of counter `c`: the sum of each
+    /// shard's rate over its own feed window.
+    pub fn rate_total(&self, c: Counter) -> f64 {
+        self.shards.iter().map(|s| s.rate(c)).sum()
+    }
+
+    /// Per-(rung, phase) exec histograms merged across every shard,
+    /// ascending key order.  Bucket-exact: identical to merging the
+    /// in-process registries (see the module docs).
+    pub fn cluster_exec(&self) -> Vec<(usize, usize, Histogram)> {
+        let mut out: Vec<(usize, usize, Histogram)> = Vec::new();
+        for s in &self.shards {
+            for (rung, phase, h) in &s.exec_ns {
+                match out.iter_mut().find(|(r, p, _)| (*r, *p) == (*rung, *phase)) {
+                    Some((_, _, m)) => m.merge(h),
+                    None => out.push((*rung, *phase, h.clone())),
+                }
+            }
+        }
+        out.sort_by_key(|(r, p, _)| (*r, *p));
+        out
+    }
+
+    /// Every span in the cluster as `(shard name, span)`.
+    pub fn spans(&self) -> impl Iterator<Item = (&str, &SpanRec)> {
+        self.shards
+            .iter()
+            .flat_map(|s| s.spans.iter().map(move |r| (s.name.as_str(), r)))
+    }
+
+    /// All distinct trace ids seen, ascending.
+    pub fn trace_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.spans().map(|(_, r)| r.trace_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// One trace's spans from every shard, sorted by span discriminant
+    /// — which is causal order within a trace (DESIGN.md §15: the span
+    /// id *is* the hop position, so cross-process clock skew cannot
+    /// reorder the tree).
+    pub fn trace_spans(&self, trace_id: u64) -> Vec<(&str, &SpanRec)> {
+        let mut spans: Vec<(&str, &SpanRec)> = self
+            .spans()
+            .filter(|(_, r)| r.trace_id == trace_id)
+            .collect();
+        spans.sort_by_key(|(_, r)| r.span as u8);
+        spans
+    }
+
+    /// Serialize as `soi.cluster.v1` NDJSON: one `cluster` head
+    /// record, one `shard` record per feed, `hist` records at cluster
+    /// scope then per-shard scope, then every `span` record re-tagged
+    /// with its shard.
+    pub fn render_ndjson(&self, out: &mut String) {
+        let sum_counters = Json::Obj(
+            Counter::ALL
+                .iter()
+                .map(|c| (c.name().to_string(), num(self.counter_total(*c))))
+                .collect(),
+        );
+        let sum_gauges = Json::Obj(
+            Gauge::ALL
+                .iter()
+                .map(|g| (g.name().to_string(), num(self.gauge_total(*g))))
+                .collect(),
+        );
+        let wire = Json::obj(vec![
+            ("rx_msgs_per_s", Json::Num(self.rate_total(Counter::WireRxMsgs))),
+            ("tx_msgs_per_s", Json::Num(self.rate_total(Counter::WireTxMsgs))),
+            ("rx_bytes_per_s", Json::Num(self.rate_total(Counter::WireRxBytes))),
+            ("tx_bytes_per_s", Json::Num(self.rate_total(Counter::WireTxBytes))),
+        ]);
+        let dropped = Json::obj(vec![
+            ("snapshots", num(self.gauge_total(Gauge::ObsDroppedSnapshots))),
+            ("events", num(self.gauge_total(Gauge::ObsDroppedEvents))),
+            (
+                "feed_drops",
+                num(self.shards.iter().map(|s| s.feed_drops).sum()),
+            ),
+        ]);
+        let head = Json::obj(vec![
+            ("schema", Json::Str(CLUSTER_SCHEMA.into())),
+            ("type", Json::Str("cluster".into())),
+            ("shards", num(self.shards.len() as u64)),
+            (
+                "t_ms",
+                num(self.shards.iter().map(|s| s.t_ms).max().unwrap_or(0)),
+            ),
+            ("counters", sum_counters),
+            ("gauges", sum_gauges),
+            ("wire", wire),
+            ("migrations", num(self.counter_total(Counter::ShardMigrates))),
+            ("reloads", num(self.counter_total(Counter::GenReloads))),
+            ("dropped", dropped),
+            ("spans", num(self.spans().count() as u64)),
+        ]);
+        out.push_str(&head.to_string());
+        out.push('\n');
+        for s in &self.shards {
+            let counters = Json::Obj(
+                Counter::ALL
+                    .iter()
+                    .map(|c| (c.name().to_string(), num(s.counter(*c))))
+                    .collect(),
+            );
+            let gauges = Json::Obj(
+                Gauge::ALL
+                    .iter()
+                    .map(|g| (g.name().to_string(), num(s.gauge(*g))))
+                    .collect(),
+            );
+            let rec = Json::obj(vec![
+                ("schema", Json::Str(CLUSTER_SCHEMA.into())),
+                ("type", Json::Str("shard".into())),
+                ("shard", Json::Str(s.name.clone())),
+                ("snapshot_seq", num(s.snapshot_seq)),
+                ("t_ms", num(s.t_ms)),
+                ("counters", counters),
+                ("gauges", gauges),
+                ("feed_drops", num(s.feed_drops)),
+                ("spans", num(s.spans.len() as u64)),
+            ]);
+            out.push_str(&rec.to_string());
+            out.push('\n');
+        }
+        for (rung, phase, h) in &self.cluster_exec() {
+            push_hist(out, "cluster", *rung, *phase, h);
+        }
+        for s in &self.shards {
+            for (rung, phase, h) in &s.exec_ns {
+                push_hist(out, &s.name, *rung, *phase, h);
+            }
+        }
+        for s in &self.shards {
+            for r in &s.spans {
+                let mut kv: Vec<(String, Json)> = vec![
+                    ("schema".into(), Json::Str(CLUSTER_SCHEMA.into())),
+                    ("type".into(), Json::Str("span".into())),
+                    ("shard".into(), Json::Str(s.name.clone())),
+                ];
+                if let Some(fields) = r.raw.as_obj() {
+                    for (k, v) in fields {
+                        // identity lives in the new head fields; 'seq'
+                        // was the source feed's snapshot seq
+                        if matches!(k.as_str(), "schema" | "type" | "kind" | "seq") {
+                            continue;
+                        }
+                        kv.push((k.clone(), v.clone()));
+                    }
+                }
+                out.push_str(&Json::Obj(kv).to_string());
+                out.push('\n');
+            }
+        }
+    }
+
+    /// Render the `soi top` dashboard body: per-shard vitals, cluster
+    /// exec latency per (rung × phase), wire rates, drop accounting,
+    /// and the most recent trace's hop chain.  Plain text — the CLI
+    /// owns cursor control.
+    pub fn render_top(&self, out: &mut String) {
+        let t_ms = self.shards.iter().map(|s| s.t_ms).max().unwrap_or(0);
+        out.push_str(&format!(
+            "soi cluster — {} feed(s), window {:.1}s, {} span(s)\n",
+            self.shards.len(),
+            t_ms as f64 / 1000.0,
+            self.spans().count(),
+        ));
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>6} {:>10} {:>10} {:>10} {:>6} {:>6} {:>6}\n",
+            "shard", "streams", "queue", "frames", "rx/s", "tx/s", "errs", "migr", "drops"
+        ));
+        for s in &self.shards {
+            out.push_str(&format!(
+                "{:<12} {:>8} {:>6} {:>10} {:>10} {:>10} {:>6} {:>6} {:>6}\n",
+                s.name,
+                s.gauge(Gauge::StreamsLive),
+                s.gauge(Gauge::QueueDepth),
+                s.counter(Counter::Frames),
+                fmt_bytes(s.rate(Counter::WireRxBytes)),
+                fmt_bytes(s.rate(Counter::WireTxBytes)),
+                s.counter(Counter::WireErrs),
+                s.counter(Counter::ShardMigrates),
+                s.gauge(Gauge::ObsDroppedEvents) + s.gauge(Gauge::ObsDroppedSnapshots),
+            ));
+        }
+        let exec = self.cluster_exec();
+        if !exec.is_empty() {
+            out.push_str("cluster exec µs p50/p99 by rung.phase:");
+            for (rung, phase, h) in &exec {
+                out.push_str(&format!(
+                    "  r{rung}.p{phase} {}/{}",
+                    h.p50() / 1000,
+                    h.p99() / 1000
+                ));
+            }
+            out.push('\n');
+        }
+        let ids = self.trace_ids();
+        if let Some(last) = ids.last() {
+            let chain: Vec<String> = self
+                .trace_spans(*last)
+                .iter()
+                .map(|(shard, r)| format!("{}@{}", r.span.name(), shard))
+                .collect();
+            out.push_str(&format!(
+                "traces: {} seen; trace {last}: {}\n",
+                ids.len(),
+                chain.join(" -> ")
+            ));
+        }
+    }
+}
+
+fn push_hist(out: &mut String, scope: &str, rung: usize, phase: usize, h: &Histogram) {
+    if h.count() == 0 {
+        return;
+    }
+    let buckets: Vec<Json> = h
+        .nonzero()
+        .map(|(i, c)| Json::Arr(vec![num(i as u64), num(c)]))
+        .collect();
+    let rec = Json::obj(vec![
+        ("schema", Json::Str(CLUSTER_SCHEMA.into())),
+        ("type", Json::Str("hist".into())),
+        ("scope", Json::Str(scope.into())),
+        ("name", Json::Str("exec_ns".into())),
+        ("rung", num(rung as u64)),
+        ("phase", num(phase as u64)),
+        ("count", num(h.count())),
+        ("p50", num(h.p50())),
+        ("p95", num(h.p95())),
+        ("p99", num(h.p99())),
+        ("mean", Json::Num(h.mean())),
+        ("buckets", Json::Arr(buckets)),
+    ]);
+    out.push_str(&rec.to_string());
+    out.push('\n');
+}
+
+fn fmt_bytes(per_s: f64) -> String {
+    if per_s >= 1_048_576.0 {
+        format!("{:.1}MB", per_s / 1_048_576.0)
+    } else if per_s >= 1024.0 {
+        format!("{:.1}KB", per_s / 1024.0)
+    } else {
+        format!("{:.0}B", per_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{take_snapshot, ObsConfig, Telemetry};
+
+    /// Two fake processes with overlapping (rung, phase) activity and
+    /// spans; returns their rendered feeds.
+    fn two_feeds() -> Vec<(String, String)> {
+        let a = Telemetry::new(ObsConfig { ring_capacity: 64 });
+        let ha = a.worker(0);
+        for _ in 0..10 {
+            ha.exec(0, 1, 2, 1_000_000);
+        }
+        ha.exec(1, 0, 1, 50_000);
+        ha.with(|w| {
+            w.count(Counter::Frames, 10);
+            w.gauge_set(Gauge::StreamsLive, 3);
+            w.span(7, SpanKind::ShardDispatch, SpanKind::FrontAdmit as u8, 4, 0, 0);
+            w.span(7, SpanKind::PhaseExec, SpanKind::WorkerRound as u8, 1 << 16, 2, 900);
+        });
+        let mut fa = String::new();
+        take_snapshot(&a).render_ndjson(0, 0, &mut fa);
+
+        let b = Telemetry::new(ObsConfig { ring_capacity: 64 });
+        let hb = b.worker(0);
+        for _ in 0..5 {
+            hb.exec(0, 1, 1, 2_000_000);
+        }
+        hb.with(|w| {
+            w.count(Counter::Frames, 5);
+            w.gauge_set(Gauge::StreamsLive, 2);
+            w.span(7, SpanKind::FrontAdmit, 0, 4, 0, 1);
+            w.span(9, SpanKind::MigrateFront, 0, 4, 0, 1);
+        });
+        let mut fb = String::new();
+        take_snapshot(&b).render_ndjson(0, 0, &mut fb);
+        vec![("shard-a".into(), fa), ("front".into(), fb)]
+    }
+
+    #[test]
+    fn totals_sum_and_hists_merge_bucket_exactly() {
+        let cluster = aggregate(&two_feeds()).unwrap();
+        assert_eq!(cluster.counter_total(Counter::Frames), 15);
+        assert_eq!(cluster.gauge_total(Gauge::StreamsLive), 5);
+        let exec = cluster.cluster_exec();
+        let h01 = exec
+            .iter()
+            .find(|(r, p, _)| (*r, *p) == (0, 1))
+            .map(|(_, _, h)| h)
+            .expect("(0,1) merged");
+        assert_eq!(h01.count(), 15, "10 from shard-a + 5 from front");
+        // bucket-exact: the merged cluster hist equals a hand-merged
+        // registry histogram over the same recordings
+        let mut hand = Histogram::new();
+        for _ in 0..10 {
+            hand.record(1_000_000);
+        }
+        for _ in 0..5 {
+            hand.record(2_000_000);
+        }
+        let got: Vec<(usize, u64)> = h01.nonzero().collect();
+        let want: Vec<(usize, u64)> = hand.nonzero().collect();
+        assert_eq!(got, want, "no re-binning, no loss");
+        assert_eq!(h01.p99(), hand.p99());
+    }
+
+    #[test]
+    fn spans_reassemble_by_trace_with_shard_attribution() {
+        let cluster = aggregate(&two_feeds()).unwrap();
+        assert_eq!(cluster.trace_ids(), vec![7, 9]);
+        let t7 = cluster.trace_spans(7);
+        let hops: Vec<(&str, SpanKind, Option<SpanKind>)> = t7
+            .iter()
+            .map(|(shard, r)| (*shard, r.span, r.parent))
+            .collect();
+        assert_eq!(
+            hops,
+            vec![
+                ("front", SpanKind::FrontAdmit, None),
+                ("shard-a", SpanKind::ShardDispatch, Some(SpanKind::FrontAdmit)),
+                ("shard-a", SpanKind::PhaseExec, Some(SpanKind::WorkerRound)),
+            ],
+            "causal order from span discriminants, shards attributed"
+        );
+    }
+
+    #[test]
+    fn rendered_cluster_feed_is_versioned_and_parses() {
+        let cluster = aggregate(&two_feeds()).unwrap();
+        let mut out = String::new();
+        cluster.render_ndjson(&mut out);
+        let mut types = std::collections::BTreeMap::new();
+        for line in out.lines() {
+            let v = json::parse(line).expect("every cluster line parses");
+            assert_eq!(
+                v.get("schema").and_then(|s| s.as_str()),
+                Some(CLUSTER_SCHEMA)
+            );
+            *types
+                .entry(v.get("type").and_then(|t| t.as_str()).unwrap().to_string())
+                .or_insert(0u64) += 1;
+        }
+        assert_eq!(types.get("cluster"), Some(&1));
+        assert_eq!(types.get("shard"), Some(&2));
+        assert_eq!(types.get("span"), Some(&4));
+        assert!(types.get("hist").copied().unwrap_or(0) >= 3, "cluster + per-shard scopes");
+        // span records name their shard and keep payload fields
+        let span_line = out
+            .lines()
+            .find(|l| l.contains("\"type\":\"span\"") && l.contains("migrate_front"))
+            .unwrap();
+        let v = json::parse(span_line).unwrap();
+        assert_eq!(v.get("shard").and_then(|s| s.as_str()), Some("front"));
+        assert_eq!(v.get("trace_id").and_then(|n| n.as_f64()), Some(9.0));
+    }
+
+    #[test]
+    fn snapshotless_or_empty_input_errors() {
+        assert!(aggregate(&[]).is_err());
+        let feeds = vec![("bad".to_string(), "not json\n".to_string())];
+        assert!(aggregate(&feeds).unwrap_err().contains("bad"));
+    }
+
+    #[test]
+    fn top_dashboard_names_every_shard() {
+        let cluster = aggregate(&two_feeds()).unwrap();
+        let mut out = String::new();
+        cluster.render_top(&mut out);
+        assert!(out.contains("shard-a"));
+        assert!(out.contains("front"));
+        assert!(out.contains("trace 9"));
+    }
+}

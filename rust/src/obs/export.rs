@@ -26,6 +26,7 @@ use std::time::Duration;
 
 use super::registry::{Counter, Gauge, ObsHandle};
 use super::ring::{Event, EventKind};
+use super::trace::SpanKind;
 use super::Telemetry;
 use crate::util::json::Json;
 use crate::util::stats::Histogram;
@@ -103,6 +104,12 @@ pub fn take_snapshot(tel: &Telemetry) -> Snapshot {
 
 fn num(v: u64) -> Json {
     Json::Num(v as f64)
+}
+
+/// Overwrite one gauge slot on a merged snapshot (exporter-owned
+/// gauges: workers never set these, so the folded value is 0).
+fn set_gauge(snap: &mut Snapshot, g: Gauge, v: u64) {
+    snap.gauges[Gauge::ALL.iter().position(|x| *x == g).unwrap_or(0)] = v;
 }
 
 fn hist_record(
@@ -206,6 +213,53 @@ fn event_record(seq: u64, worker: Option<usize>, ev: &Event) -> Json {
             ("replay_frames", num(ev.c)),
             ("ns", num(ev.d)),
         ]),
+        EventKind::Span => {
+            let kind = SpanKind::from_u8((ev.b >> 8) as u8);
+            kv.push(("trace_id", num(ev.a)));
+            kv.push((
+                "span",
+                kind.map_or_else(|| num(ev.b >> 8), |k| Json::Str(k.name().into())),
+            ));
+            kv.push((
+                "parent",
+                SpanKind::from_u8((ev.b & 0xFF) as u8)
+                    .map_or(Json::Null, |p| Json::Str(p.name().into())),
+            ));
+            // `frame_seq` not `seq`: the record head already carries
+            // the snapshot seq
+            match kind {
+                Some(SpanKind::FrontAdmit) => kv.extend([
+                    ("session", num(ev.c)),
+                    ("frame_seq", num(ev.d)),
+                    ("shard", num(ev.e)),
+                ]),
+                Some(SpanKind::ShardDispatch | SpanKind::FrontReply) => {
+                    kv.extend([("session", num(ev.c)), ("frame_seq", num(ev.d))]);
+                }
+                Some(SpanKind::WorkerRound) => kv.extend([
+                    ("session", num(ev.c)),
+                    ("width", num(ev.d)),
+                    ("ns", num(ev.e)),
+                ]),
+                Some(SpanKind::PhaseExec) => kv.extend([
+                    ("rung", num(ev.c >> 16)),
+                    ("phase", num(ev.c & 0xFFFF)),
+                    ("width", num(ev.d)),
+                    ("ns", num(ev.e)),
+                ]),
+                Some(SpanKind::MigrateFront) => kv.extend([
+                    ("session", num(ev.c)),
+                    ("from_shard", num(ev.d)),
+                    ("to_shard", num(ev.e)),
+                ]),
+                Some(SpanKind::MigrateReplay) => kv.extend([
+                    ("stream", num(ev.c)),
+                    ("t", num(ev.d)),
+                    ("ns", num(ev.e)),
+                ]),
+                None => {}
+            }
+        }
     }
     Json::obj(kv)
 }
@@ -327,6 +381,9 @@ impl Exporter {
         let (stop2, drops2, snaps2) = (stop.clone(), drops.clone(), snapshots.clone());
         let sampler = std::thread::spawn(move || {
             let mut seq = 0u64;
+            // cumulative ring-overflow drops across drains: each
+            // snapshot's `ring_dropped` covers one interval only
+            let mut events_dropped = 0u64;
             loop {
                 // sleep in short steps so finish() returns promptly
                 let mut slept = Duration::ZERO;
@@ -336,7 +393,17 @@ impl Exporter {
                     slept += step;
                 }
                 let stopping = stop2.load(Ordering::Relaxed);
-                let snap = take_snapshot(&tel);
+                let mut snap = take_snapshot(&tel);
+                // self-observability (DESIGN.md §15): the exporter's own
+                // loss shows up as first-class gauges, so a merged feed
+                // can attribute drops per shard without side channels
+                events_dropped += snap.ring_dropped;
+                set_gauge(&mut snap, Gauge::ObsDroppedEvents, events_dropped);
+                set_gauge(
+                    &mut snap,
+                    Gauge::ObsDroppedSnapshots,
+                    drops2.load(Ordering::Relaxed),
+                );
                 let mut text = String::new();
                 snap.render_ndjson(seq, drops2.load(Ordering::Relaxed), &mut text);
                 seq += 1;
@@ -471,6 +538,51 @@ mod tests {
         assert!(text.lines().count() as u64 == stats.lines);
         let first = json::parse(text.lines().next().unwrap()).unwrap();
         assert_eq!(first.get("type").and_then(|t| t.as_str()), Some("snapshot"));
+        // exporter self-observability rides in the ordinary gauges
+        let gauges = first.get("gauges").expect("gauges object");
+        for g in ["obs_dropped_snapshots", "obs_dropped_events"] {
+            assert!(
+                gauges.get(g).and_then(|v| v.as_f64()).is_some(),
+                "gauge '{g}' missing from rendered snapshot"
+            );
+        }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn span_events_render_named_trace_fields() {
+        use crate::obs::trace::SpanKind;
+        let tel = Telemetry::new(ObsConfig::default());
+        let h = tel.worker(0);
+        h.span(
+            41,
+            SpanKind::PhaseExec,
+            SpanKind::WorkerRound as u8,
+            (2 << 16) | 3,
+            5,
+            12_000,
+        );
+        h.span(41, SpanKind::FrontAdmit, 0, 9, 4, 1);
+        let snap = take_snapshot(&tel);
+        let mut out = String::new();
+        snap.render_ndjson(0, 0, &mut out);
+        let exec_line = out
+            .lines()
+            .find(|l| l.contains("phase_exec"))
+            .expect("phase_exec span rendered");
+        let v = json::parse(exec_line).unwrap();
+        assert_eq!(v.get("kind").and_then(|s| s.as_str()), Some("span"));
+        assert_eq!(v.get("trace_id").and_then(|n| n.as_f64()), Some(41.0));
+        assert_eq!(v.get("parent").and_then(|s| s.as_str()), Some("worker_round"));
+        assert_eq!(v.get("rung").and_then(|n| n.as_f64()), Some(2.0));
+        assert_eq!(v.get("phase").and_then(|n| n.as_f64()), Some(3.0));
+        assert_eq!(v.get("ns").and_then(|n| n.as_f64()), Some(12_000.0));
+        let root_line = out
+            .lines()
+            .find(|l| l.contains("front_admit"))
+            .expect("front_admit span rendered");
+        let r = json::parse(root_line).unwrap();
+        assert!(r.get("parent").map(|p| p.is_null()).unwrap_or(false));
+        assert_eq!(r.get("frame_seq").and_then(|n| n.as_f64()), Some(4.0));
     }
 }

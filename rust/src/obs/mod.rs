@@ -25,17 +25,28 @@
 //! interpreter's plan repack) use the process-global hook
 //! ([`Telemetry::install_global`] / [`with_global`]): a `Weak` upgrade
 //! when telemetry is on, a single atomic-load no-op when off.
+//!
+//! The cluster layer (DESIGN.md §15) builds on the same primitives:
+//! [`trace`] defines the cross-shard trace context and span taxonomy
+//! (recorded through the rings as [`EventKind::Span`]), and
+//! [`aggregate`] merges many `soi.obs.v1` feeds into one versioned
+//! `soi.cluster.v1` summary — losslessly, because the bucket-exact
+//! histogram export round-trips.
 
+pub mod aggregate;
 pub mod export;
 pub mod hist;
 pub mod registry;
 pub mod ring;
 pub mod schema;
+pub mod trace;
 
+pub use aggregate::{aggregate, ClusterSummary, ShardSummary, CLUSTER_SCHEMA};
 pub use export::{take_snapshot, Exporter, FeedStats, Snapshot, FEED_SCHEMA};
 pub use hist::RollingHist;
 pub use registry::{Counter, Gauge, ObsHandle, WorkerObs};
 pub use ring::{Event, EventKind, EventRing};
+pub use trace::{SpanKind, TraceCtx, TraceSampler, TRACE_CTX_BYTES};
 
 use std::sync::{Arc, Mutex, OnceLock, Weak};
 use std::time::Instant;

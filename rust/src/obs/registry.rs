@@ -17,6 +17,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::ring::{Event, EventKind, EventRing};
+use super::trace::SpanKind;
 use crate::util::stats::Histogram;
 
 /// Monotone event counters, summed across workers at snapshot time.
@@ -52,16 +53,30 @@ pub enum Counter {
     /// Wire bytes sent.
     WireTxBytes,
     /// Typed wire faults observed (decode errors, backpressure, peer
-    /// loss — DESIGN.md §14 fault matrix).
+    /// loss — DESIGN.md §14 fault matrix).  Kept as the total across
+    /// codes; the `WireErr*` counters below break it out per
+    /// [`crate::net::wire::ErrCode`] (additive schema change).
     WireErrs,
     /// Sessions admitted mid-stream by cross-shard §9 replay
     /// ([`crate::coordinator::StreamSession::resume`]).
     ShardMigrates,
+    /// Wire errors sent with code `version_skew`.
+    WireErrVersionSkew,
+    /// Wire errors sent with code `admission_denied`.
+    WireErrAdmissionDenied,
+    /// Wire errors sent with code `bad_frame`.
+    WireErrBadFrame,
+    /// Wire errors sent with code `protocol`.
+    WireErrProtocol,
+    /// Wire errors sent with code `shard_lost`.
+    WireErrShardLost,
+    /// Wire errors sent with code `backpressure`.
+    WireErrBackpressure,
 }
 
 impl Counter {
     /// Number of counters (sizes the per-worker array).
-    pub const COUNT: usize = 16;
+    pub const COUNT: usize = 22;
 
     /// Every counter, in array-index order.
     pub const ALL: [Counter; Counter::COUNT] = [
@@ -81,6 +96,12 @@ impl Counter {
         Counter::WireTxBytes,
         Counter::WireErrs,
         Counter::ShardMigrates,
+        Counter::WireErrVersionSkew,
+        Counter::WireErrAdmissionDenied,
+        Counter::WireErrBadFrame,
+        Counter::WireErrProtocol,
+        Counter::WireErrShardLost,
+        Counter::WireErrBackpressure,
     ];
 
     /// Stable snake_case name used as the NDJSON object key.
@@ -102,6 +123,12 @@ impl Counter {
             Counter::WireTxBytes => "wire_tx_bytes",
             Counter::WireErrs => "wire_errs",
             Counter::ShardMigrates => "shard_migrates",
+            Counter::WireErrVersionSkew => "wire_err_version_skew",
+            Counter::WireErrAdmissionDenied => "wire_err_admission_denied",
+            Counter::WireErrBadFrame => "wire_err_bad_frame",
+            Counter::WireErrProtocol => "wire_err_protocol",
+            Counter::WireErrShardLost => "wire_err_shard_lost",
+            Counter::WireErrBackpressure => "wire_err_backpressure",
         }
     }
 
@@ -131,11 +158,18 @@ pub enum Gauge {
     /// process is not a network shard — DESIGN.md §14).  Lets a
     /// cluster controller attribute a merged feed line to its shard.
     ShardId,
+    /// Snapshots the exporter dropped since the feed opened (its
+    /// bounded queue was full — cumulative, set by the exporter so
+    /// feed gaps are distinguishable from idle periods).
+    ObsDroppedSnapshots,
+    /// Events the rings dropped on overflow since the feed opened
+    /// (cumulative across drains, set by the exporter).
+    ObsDroppedEvents,
 }
 
 impl Gauge {
     /// Number of gauges (sizes the per-worker array).
-    pub const COUNT: usize = 6;
+    pub const COUNT: usize = 8;
 
     /// Every gauge, in array-index order.
     pub const ALL: [Gauge; Gauge::COUNT] = [
@@ -145,6 +179,8 @@ impl Gauge {
         Gauge::StreamsLive,
         Gauge::Generation,
         Gauge::ShardId,
+        Gauge::ObsDroppedSnapshots,
+        Gauge::ObsDroppedEvents,
     ];
 
     /// Stable snake_case name used as the NDJSON object key.
@@ -156,6 +192,8 @@ impl Gauge {
             Gauge::StreamsLive => "streams_live",
             Gauge::Generation => "generation",
             Gauge::ShardId => "shard_id",
+            Gauge::ObsDroppedSnapshots => "obs_dropped_snapshots",
+            Gauge::ObsDroppedEvents => "obs_dropped_events",
         }
     }
 
@@ -276,6 +314,22 @@ impl WorkerObs {
         &self.batch_width
     }
 
+    /// Record one cross-shard trace span (DESIGN.md §15): the span
+    /// just opened is `kind`, `parent` is the discriminant of the
+    /// causal parent span (0 at a trace root), and `c`/`d`/`e` are the
+    /// kind-specific payload fields `obs::export` decodes to named
+    /// NDJSON fields.  One ring push, no allocation.
+    pub fn span(&mut self, trace_id: u64, kind: SpanKind, parent: u8, c: u64, d: u64, e: u64) {
+        self.push_event(
+            EventKind::Span,
+            trace_id,
+            ((kind as u64) << 8) | u64::from(parent),
+            c,
+            d,
+            e,
+        );
+    }
+
     /// Drain buffered events into `out`, returning the overflow-drop
     /// count since the last drain (exporter only).
     pub fn drain_events(&mut self, out: &mut Vec<Event>) -> u64 {
@@ -387,6 +441,11 @@ impl ObsHandle {
         });
     }
 
+    /// Record one cross-shard trace span (see [`WorkerObs::span`]).
+    pub fn span(&self, trace_id: u64, kind: SpanKind, parent: u8, c: u64, d: u64, e: u64) {
+        self.with(|w| w.span(trace_id, kind, parent, c, d, e));
+    }
+
     /// Record a quantized-plan (re)pack.
     pub fn quant_repack(&self, panels: usize, bytes: usize, ns: u64) {
         self.with(|w| {
@@ -445,6 +504,30 @@ mod tests {
             w.drain_events(&mut evs);
             assert_eq!(evs.len(), 3);
             assert!(evs.iter().all(|e| e.kind == EventKind::Exec));
+        });
+    }
+
+    #[test]
+    fn trace_span_packs_kind_and_parent() {
+        let h = ObsHandle::new(Instant::now(), 8);
+        h.span(
+            42,
+            SpanKind::ShardDispatch,
+            SpanKind::FrontAdmit as u8,
+            7,
+            9,
+            11,
+        );
+        h.with(|w| {
+            let mut evs = Vec::new();
+            w.drain_events(&mut evs);
+            assert_eq!(evs.len(), 1);
+            let e = &evs[0];
+            assert_eq!(e.kind, EventKind::Span);
+            assert_eq!(e.a, 42);
+            assert_eq!(e.b >> 8, SpanKind::ShardDispatch as u64);
+            assert_eq!(e.b & 0xFF, SpanKind::FrontAdmit as u64);
+            assert_eq!((e.c, e.d, e.e), (7, 9, 11));
         });
     }
 

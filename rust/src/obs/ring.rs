@@ -53,6 +53,12 @@ pub enum EventKind {
     /// resumed at, `c` = history frames replayed, `d` = replay wall
     /// time ns.
     ShardMigrate,
+    /// One cross-shard trace span (DESIGN.md §15): `a` = trace id,
+    /// `b` = `(span_kind << 8) | parent_kind` (the
+    /// [`crate::obs::trace::SpanKind`] discriminants), and `c`/`d`/`e`
+    /// are span-kind-specific (decoded to named fields by
+    /// `obs::export`).
+    Span,
 }
 
 impl EventKind {
@@ -69,6 +75,7 @@ impl EventKind {
             EventKind::CtlDecision => "ctl_decision",
             EventKind::GenReload => "gen_reload",
             EventKind::ShardMigrate => "shard_migrate",
+            EventKind::Span => "span",
         }
     }
 }

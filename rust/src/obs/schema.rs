@@ -5,11 +5,18 @@
 //! the same code everywhere and CI needs no external `jq`.  Validation
 //! is structural: required fields present with the right JSON types,
 //! event payloads matching their `kind`, per-type `seq` monotonicity.
+//!
+//! Two schemas share this module: the per-process `soi.obs.v1` feed
+//! ([`validate_feed`]) and the aggregated `soi.cluster.v1` summary
+//! ([`validate_cluster_feed`], DESIGN.md §15).  [`detect_schema`]
+//! sniffs which one a file is so the CLI needs no flag.
 
 use crate::util::json::{parse, Json};
 
+use super::aggregate::CLUSTER_SCHEMA;
 use super::export::FEED_SCHEMA;
 use super::registry::{Counter, Gauge};
+use super::trace::SpanKind;
 
 /// What one valid feed line turned out to be.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,6 +73,39 @@ fn want_counters(v: &Json, key: &str, names: &[&str]) -> Result<(), String> {
     Ok(())
 }
 
+/// Shared span-record body check: `trace_id`, a known `span` name, a
+/// null-or-known `parent`, and the span kind's payload fields.  Used
+/// by both the `soi.obs.v1` event path and `soi.cluster.v1` span
+/// records (which carry the same fields plus shard attribution).
+fn validate_span_fields(v: &Json) -> Result<(), String> {
+    want_u64(v, "trace_id")?;
+    let span = want_str(v, "span")?;
+    let Some(kind) = SpanKind::from_name(span) else {
+        return Err(format!("unknown span kind '{span}'"));
+    };
+    let parent = v.get("parent").ok_or("missing field 'parent'")?;
+    if !parent.is_null() {
+        let p = parent
+            .as_str()
+            .ok_or("field 'parent' is neither null nor a string")?;
+        if SpanKind::from_name(p).is_none() {
+            return Err(format!("unknown span parent '{p}'"));
+        }
+    }
+    let fields: &[&str] = match kind {
+        SpanKind::FrontAdmit => &["session", "frame_seq", "shard"],
+        SpanKind::ShardDispatch | SpanKind::FrontReply => &["session", "frame_seq"],
+        SpanKind::WorkerRound => &["session", "width", "ns"],
+        SpanKind::PhaseExec => &["rung", "phase", "width", "ns"],
+        SpanKind::MigrateFront => &["session", "from_shard", "to_shard"],
+        SpanKind::MigrateReplay => &["stream", "t", "ns"],
+    };
+    for f in fields {
+        want_u64(v, f)?;
+    }
+    Ok(())
+}
+
 fn validate_event(v: &Json) -> Result<(), String> {
     // worker may be null (the shared/global-hook handle)
     let w = v.get("worker").ok_or("missing field 'worker'")?;
@@ -84,6 +124,7 @@ fn validate_event(v: &Json) -> Result<(), String> {
         "ctl_decision" => &["from_rung", "to_rung", "backlog", "p99_us"], // + str 'trigger'
         "gen_reload" => &["from_gen", "to_gen", "streams", "ns"],
         "shard_migrate" => &["session", "t", "replay_frames", "ns"],
+        "span" => return validate_span_fields(v),
         other => return Err(format!("unknown event kind '{other}'")),
     };
     for f in fields {
@@ -208,6 +249,125 @@ pub fn validate_feed(text: &str) -> Result<FeedSummary, String> {
     Ok(summary)
 }
 
+/// Totals from a validated `soi.cluster.v1` feed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClusterFeedSummary {
+    /// Total NDJSON lines.
+    pub lines: u64,
+    /// `cluster` head records.
+    pub clusters: u64,
+    /// `shard` records.
+    pub shards: u64,
+    /// `hist` records.
+    pub hists: u64,
+    /// `span` records.
+    pub spans: u64,
+}
+
+fn validate_registry_objects(v: &Json) -> Result<(), String> {
+    let counter_names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+    want_counters(v, "counters", &counter_names)?;
+    let gauge_names: Vec<&str> = Gauge::ALL.iter().map(|g| g.name()).collect();
+    want_counters(v, "gauges", &gauge_names)
+}
+
+/// Validate one `soi.cluster.v1` line (DESIGN.md appendix A).
+pub fn validate_cluster_line(line: &str) -> Result<&'static str, String> {
+    let v = parse(line).map_err(|e| format!("not valid JSON: {e}"))?;
+    let schema = want_str(&v, "schema")?;
+    if schema != CLUSTER_SCHEMA {
+        return Err(format!(
+            "schema '{schema}' is not the expected '{CLUSTER_SCHEMA}'"
+        ));
+    }
+    match want_str(&v, "type")? {
+        "cluster" => {
+            want_u64(&v, "shards")?;
+            want_u64(&v, "t_ms")?;
+            validate_registry_objects(&v)?;
+            let wire = v.get("wire").ok_or("missing object field 'wire'")?;
+            for f in [
+                "rx_msgs_per_s",
+                "tx_msgs_per_s",
+                "rx_bytes_per_s",
+                "tx_bytes_per_s",
+            ] {
+                if wire.get(f).and_then(|n| n.as_f64()).is_none() {
+                    return Err(format!("'wire' missing numeric field '{f}'"));
+                }
+            }
+            want_u64(&v, "migrations")?;
+            want_u64(&v, "reloads")?;
+            let dropped = v.get("dropped").ok_or("missing object field 'dropped'")?;
+            for f in ["snapshots", "events", "feed_drops"] {
+                if dropped.get(f).and_then(|n| n.as_f64()).is_none() {
+                    return Err(format!("'dropped' missing numeric field '{f}'"));
+                }
+            }
+            want_u64(&v, "spans")?;
+            Ok("cluster")
+        }
+        "shard" => {
+            want_str(&v, "shard")?;
+            want_u64(&v, "snapshot_seq")?;
+            want_u64(&v, "t_ms")?;
+            validate_registry_objects(&v)?;
+            want_u64(&v, "feed_drops")?;
+            want_u64(&v, "spans")?;
+            Ok("shard")
+        }
+        "hist" => {
+            want_str(&v, "scope")?;
+            validate_hist(&v)?;
+            Ok("hist")
+        }
+        "span" => {
+            want_str(&v, "shard")?;
+            want_u64(&v, "t_us")?;
+            validate_span_fields(&v)?;
+            Ok("span")
+        }
+        other => Err(format!("unknown cluster record type '{other}'")),
+    }
+}
+
+/// Validate a whole aggregated feed: every line, and at least one
+/// `cluster` head record.
+pub fn validate_cluster_feed(text: &str) -> Result<ClusterFeedSummary, String> {
+    let mut summary = ClusterFeedSummary::default();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ty = validate_cluster_line(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        summary.lines += 1;
+        match ty {
+            "cluster" => summary.clusters += 1,
+            "shard" => summary.shards += 1,
+            "hist" => summary.hists += 1,
+            _ => summary.spans += 1,
+        }
+    }
+    if summary.clusters == 0 {
+        return Err("feed contains no cluster record".into());
+    }
+    Ok(summary)
+}
+
+/// Sniff which schema a feed file speaks from its first parseable
+/// line (`soi.obs.v1` or `soi.cluster.v1`); `None` when neither.
+pub fn detect_schema(text: &str) -> Option<&'static str> {
+    for line in text.lines() {
+        let Ok(v) = parse(line.trim()) else { continue };
+        return match v.get("schema").and_then(|s| s.as_str()) {
+            Some(s) if s == FEED_SCHEMA => Some(FEED_SCHEMA),
+            Some(s) if s == CLUSTER_SCHEMA => Some(CLUSTER_SCHEMA),
+            _ => None,
+        };
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,5 +421,53 @@ mod tests {
         assert!(validate_feed(&a).unwrap_err().contains("seq"));
         // empty feed has no snapshot
         assert!(validate_feed("").unwrap_err().contains("no snapshot"));
+    }
+
+    #[test]
+    fn span_events_validate_per_kind() {
+        use crate::obs::SpanKind;
+        let tel = Telemetry::new(ObsConfig::default());
+        let h = tel.worker(0);
+        h.span(3, SpanKind::FrontAdmit, 0, 1, 0, 0);
+        h.span(3, SpanKind::PhaseExec, SpanKind::WorkerRound as u8, 5 << 16, 2, 700);
+        let mut out = String::new();
+        take_snapshot(&tel).render_ndjson(0, 0, &mut out);
+        let summary = validate_feed(&out).expect("span events validate");
+        assert_eq!(summary.events, 2);
+        // a span with a bogus kind name is rejected
+        let bad = format!(
+            "{{\"schema\":\"{FEED_SCHEMA}\",\"seq\":0,\"type\":\"event\",\"worker\":0,\"t_us\":1,\"kind\":\"span\",\"trace_id\":1,\"span\":\"teleport\",\"parent\":null}}"
+        );
+        assert!(validate_line(&bad).unwrap_err().contains("teleport"));
+        // a phase_exec span missing its 'ns' payload is rejected
+        let short = format!(
+            "{{\"schema\":\"{FEED_SCHEMA}\",\"seq\":0,\"type\":\"event\",\"worker\":0,\"t_us\":1,\"kind\":\"span\",\"trace_id\":1,\"span\":\"phase_exec\",\"parent\":\"worker_round\",\"rung\":0,\"phase\":0,\"width\":1}}"
+        );
+        assert!(validate_line(&short).unwrap_err().contains("ns"));
+    }
+
+    #[test]
+    fn aggregated_cluster_feed_validates_and_is_detected() {
+        use crate::obs::{aggregate, SpanKind};
+        let tel = Telemetry::new(ObsConfig::default());
+        let h = tel.worker(0);
+        h.exec(0, 1, 2, 9_000);
+        h.span(1, SpanKind::MigrateReplay, SpanKind::MigrateFront as u8, 4, 7, 300);
+        let mut feed = String::new();
+        take_snapshot(&tel).render_ndjson(0, 0, &mut feed);
+        assert_eq!(detect_schema(&feed), Some(FEED_SCHEMA));
+        let cluster = aggregate(&[("s0".to_string(), feed)]).unwrap();
+        let mut out = String::new();
+        cluster.render_ndjson(&mut out);
+        assert_eq!(detect_schema(&out), Some(CLUSTER_SCHEMA));
+        let summary = validate_cluster_feed(&out).expect("cluster feed validates");
+        assert_eq!(summary.clusters, 1);
+        assert_eq!(summary.shards, 1);
+        assert_eq!(summary.spans, 1);
+        assert!(summary.hists >= 2, "cluster + shard scope");
+        // a cluster feed is not a valid obs feed and vice versa
+        assert!(validate_feed(&out).is_err());
+        assert!(validate_cluster_feed("").unwrap_err().contains("no cluster"));
+        assert_eq!(detect_schema("{\"schema\":\"x.v0\"}"), None);
     }
 }

@@ -1,0 +1,220 @@
+//! Cross-shard frame tracing (DESIGN.md §15).
+//!
+//! A sampled frame carries a compact [`TraceCtx`] — trace id, the
+//! span the sender just opened, and that span's parent — across the
+//! `soi.wire.v1` hops (`Frame`/`FrameOut`/`Migrate`), and every
+//! process on the path records its own span through the existing
+//! zero-allocation `obs` event rings ([`EventKind::Span`]).  One
+//! sampled frame therefore yields a causally-linked span tree that
+//! spans the front-end and every shard it touched:
+//!
+//! ```text
+//! front_admit (root)
+//! └─ shard_dispatch          (shard feed)
+//!    └─ worker_round         (shard feed)
+//!       └─ phase_exec        (shard feed)
+//!          └─ front_reply    (front feed)
+//! ```
+//!
+//! Span ids are the [`SpanKind`] discriminants: within one trace each
+//! hop happens exactly once (a trace follows a single frame, or a
+//! single migration), so the kind *is* a unique span id and the tree
+//! is reconstructible from `(trace_id, span, parent)` alone — no
+//! allocation, no per-trace tables.
+//!
+//! Sampling is head-based at the front-end (`--trace-sample-n N`
+//! traces every Nth admitted frame; 0 = off, the default).  When
+//! sampling is off nothing is stamped on the wire — traced-off
+//! encodings are byte-identical to plain `soi.wire.v1`, so old peers
+//! interop untouched — and the serving hot path only ever branches on
+//! an `Option` that is `None` (`tests/hot_path_alloc.rs` proves the
+//! steady state stays allocation-free with the plumbing compiled in).
+//!
+//! [`EventKind::Span`]: crate::obs::ring::EventKind::Span
+
+/// Bytes a [`TraceCtx`] occupies on the wire (`trace_id: u64` +
+/// `kind: u8` + `parent: u8`, little-endian).
+pub const TRACE_CTX_BYTES: usize = 10;
+
+/// The span taxonomy (DESIGN.md §15).  The discriminant doubles as
+/// the span id inside a trace — see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Front-end admitted + routed one sampled input frame (root).
+    FrontAdmit = 1,
+    /// A shard pulled the traced frame off the wire.
+    ShardDispatch = 2,
+    /// The owning worker served the traced frame inside a round.
+    WorkerRound = 3,
+    /// The per-(rung × phase) backend execution of the traced frame.
+    PhaseExec = 4,
+    /// The front-end forwarded the traced output back to the client.
+    FrontReply = 5,
+    /// The front-end initiated a warm cross-shard migration (root of
+    /// a migration trace; names both shards).
+    MigrateFront = 6,
+    /// The destination shard replayed the migrated session's history.
+    MigrateReplay = 7,
+}
+
+impl SpanKind {
+    /// Every kind, in discriminant order.
+    pub const ALL: [SpanKind; 7] = [
+        SpanKind::FrontAdmit,
+        SpanKind::ShardDispatch,
+        SpanKind::WorkerRound,
+        SpanKind::PhaseExec,
+        SpanKind::FrontReply,
+        SpanKind::MigrateFront,
+        SpanKind::MigrateReplay,
+    ];
+
+    /// Stable snake_case name (feed field `span`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::FrontAdmit => "front_admit",
+            SpanKind::ShardDispatch => "shard_dispatch",
+            SpanKind::WorkerRound => "worker_round",
+            SpanKind::PhaseExec => "phase_exec",
+            SpanKind::FrontReply => "front_reply",
+            SpanKind::MigrateFront => "migrate_front",
+            SpanKind::MigrateReplay => "migrate_replay",
+        }
+    }
+
+    /// Decode a wire/feed discriminant; `None` for unknown values.
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(v.wrapping_sub(1) as usize).copied()
+    }
+
+    /// Parse a feed `span` field back into the kind.
+    pub fn from_name(s: &str) -> Option<SpanKind> {
+        SpanKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// The compact trace context a sampled frame carries across the wire:
+/// which trace it belongs to, the span the *sender* just opened (the
+/// receiver's parent), and that span's own parent (carried so either
+/// end of a hop can be validated in isolation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Trace id, unique per sampled frame (or migration); nonzero.
+    pub trace_id: u64,
+    /// Discriminant of the sender's span ([`SpanKind`]).
+    pub kind: u8,
+    /// Discriminant of the sender's span's parent (0 at the root).
+    pub parent: u8,
+}
+
+impl TraceCtx {
+    /// The root context of a new trace: the opener's span is `kind`,
+    /// parented to nothing.
+    pub fn root(trace_id: u64, kind: SpanKind) -> TraceCtx {
+        TraceCtx {
+            trace_id,
+            kind: kind as u8,
+            parent: 0,
+        }
+    }
+
+    /// The context the *next* hop forwards after opening `kind` under
+    /// this context's span.
+    pub fn child(self, kind: SpanKind) -> TraceCtx {
+        TraceCtx {
+            trace_id: self.trace_id,
+            kind: kind as u8,
+            parent: self.kind,
+        }
+    }
+}
+
+/// Head-based sampler owned by the front-end router: every `n`th
+/// frame opens a trace (`n == 0` disables sampling entirely — the
+/// fast path is one integer compare, no state updates).
+#[derive(Debug)]
+pub struct TraceSampler {
+    n: u64,
+    seen: u64,
+    next_id: u64,
+}
+
+impl TraceSampler {
+    /// A sampler tracing every `n`th frame (0 = off).
+    pub fn new(n: u64) -> TraceSampler {
+        TraceSampler {
+            n,
+            seen: 0,
+            next_id: 1,
+        }
+    }
+
+    /// Whether sampling is enabled at all.
+    pub fn enabled(&self) -> bool {
+        self.n > 0
+    }
+
+    /// Account one frame; `Some(trace_id)` iff this frame is sampled.
+    pub fn sample(&mut self) -> Option<u64> {
+        if self.n == 0 {
+            return None;
+        }
+        self.seen += 1;
+        if self.seen % self.n != 0 {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(id)
+    }
+
+    /// Unconditionally allocate a trace id (used for migrations: when
+    /// sampling is enabled every migration is traced — they are rare
+    /// and each one is exactly the event an operator wants linked).
+    pub fn force(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_kind_names_and_discriminants_roundtrip() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::from_u8(k as u8), Some(k));
+            assert_eq!(SpanKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(SpanKind::from_u8(0), None);
+        assert_eq!(SpanKind::from_u8(8), None);
+        assert_eq!(SpanKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn child_links_to_parent() {
+        let root = TraceCtx::root(9, SpanKind::FrontAdmit);
+        assert_eq!(root.parent, 0);
+        let next = root.child(SpanKind::ShardDispatch);
+        assert_eq!(next.trace_id, 9);
+        assert_eq!(next.kind, SpanKind::ShardDispatch as u8);
+        assert_eq!(next.parent, SpanKind::FrontAdmit as u8);
+    }
+
+    #[test]
+    fn sampler_takes_every_nth_and_ids_are_unique() {
+        let mut s = TraceSampler::new(3);
+        let picks: Vec<Option<u64>> = (0..9).map(|_| s.sample()).collect();
+        assert_eq!(
+            picks,
+            vec![None, None, Some(1), None, None, Some(2), None, None, Some(3)]
+        );
+        assert_eq!(s.force(), 4);
+        let mut off = TraceSampler::new(0);
+        assert!(!off.enabled());
+        assert!((0..100).all(|_| off.sample().is_none()));
+    }
+}

@@ -1,0 +1,369 @@
+//! Cluster observability end-to-end (DESIGN.md §15): a traced frame
+//! served by a real two-shard fleet must reassemble into a causally
+//! complete span tree from the aggregated `soi.cluster.v1` feed, the
+//! cluster-wide exec histograms must merge bucket-exactly, and the
+//! merged drop accounting must equal the per-shard exporter gauges —
+//! a property held under randomized ring overflow.
+
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+
+use soi::coordinator::Server;
+use soi::net::{
+    run_shard, spawn_front_with, FrontPolicy, LoopbackHub, Msg, ShardConfig, ShardLink,
+    ShardReport, WireClient,
+};
+use soi::obs::{
+    aggregate, schema, take_snapshot, Counter, Exporter, Gauge, ObsConfig, SpanKind, Telemetry,
+};
+use soi::runtime::{synth, CompiledVariant, ModelConfig, Runtime};
+use soi::util::json;
+use soi::util::prop;
+use soi::util::rng::Rng;
+use soi::util::stats::Histogram;
+
+fn cfg(scc: Vec<usize>) -> ModelConfig {
+    ModelConfig {
+        feat: 4,
+        channels: vec![5, 6, 7],
+        kernel: 3,
+        extrap: vec!["duplicate".into(); scc.len()],
+        scc,
+        shift_pos: None,
+        shift: 1,
+        interp: None,
+    }
+}
+
+fn variant(rt: &Arc<Runtime>, c: &ModelConfig, name: &str) -> Arc<CompiledVariant> {
+    let m = synth::manifest(c, name, 32);
+    let w = synth::he_weights(&m, 0xFEED);
+    Arc::new(CompiledVariant::with_weights(rt.clone(), m, w).expect("compile native variant"))
+}
+
+fn random_frames(feat: usize, t: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..t)
+        .map(|_| (0..feat).map(|_| rng.normal() as f32 * 0.3).collect())
+        .collect()
+}
+
+/// One real shard with its own [`Telemetry`] root, so its feed can be
+/// aggregated with the front's after the fleet drains.
+fn obs_shard(
+    cv: &Arc<CompiledVariant>,
+    name: &str,
+    shard_id: u64,
+    tel: Arc<Telemetry>,
+) -> (ShardLink, JoinHandle<ShardReport>) {
+    let hub = LoopbackHub::new();
+    let mut server = Server::new(cv.clone(), 2);
+    server.telemetry = Some(tel);
+    let shard_hub = hub.clone();
+    let join = thread::spawn(move || {
+        run_shard(&server, &shard_hub, ShardConfig { shard_id }).expect("shard serves")
+    });
+    (
+        ShardLink {
+            name: name.to_string(),
+            transport: Box::new(hub),
+        },
+        join,
+    )
+}
+
+fn send_frame(client: &mut WireClient, session: u64, seq: usize, last: bool, f: &[f32]) {
+    client
+        .send(&Msg::Frame {
+            session,
+            seq: seq as u64,
+            last,
+            samples: f.to_vec(),
+            trace: None,
+        })
+        .expect("send frame");
+}
+
+fn collect_n(client: &mut WireClient, n: usize) {
+    let mut got = 0;
+    while got < n {
+        match client.recv() {
+            Ok(Some(Msg::FrameOut { .. })) => got += 1,
+            other => panic!("expected FrameOut, got {other:?}"),
+        }
+    }
+}
+
+/// The frame-trace hop chain in causal order (DESIGN.md §15); span
+/// discriminants encode the order, so this is also ascending-id order.
+const FRAME_CHAIN: [SpanKind; 5] = [
+    SpanKind::FrontAdmit,
+    SpanKind::ShardDispatch,
+    SpanKind::WorkerRound,
+    SpanKind::PhaseExec,
+    SpanKind::FrontReply,
+];
+
+#[test]
+fn traced_frames_reassemble_causally_across_a_two_shard_fleet() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2]), "scc2");
+    let total = 24usize;
+    let frames = random_frames(4, total, 0x7_12ACE);
+    let half = total / 2;
+
+    let tel_front = Telemetry::new(ObsConfig::default());
+    let tel_a = Telemetry::new(ObsConfig::default());
+    let tel_b = Telemetry::new(ObsConfig::default());
+
+    let (link_a, join_a) = obs_shard(&cv, "shard-a", 1, tel_a.clone());
+    let (link_b, join_b) = obs_shard(&cv, "shard-b", 2, tel_b.clone());
+    let hub = LoopbackHub::new();
+    let front = spawn_front_with(
+        Box::new(hub.clone()),
+        vec![link_a, link_b],
+        FrontPolicy {
+            max_sessions: 8,
+            trace_sample_n: 1,
+        },
+        Some(tel_front.clone()),
+    )
+    .expect("front boots");
+
+    // Serve half the stream (homed on shard 0), warm-migrate to shard
+    // 1, serve the rest: frame traces land on both shards and the
+    // migration opens its own forced trace.
+    let mut client = WireClient::connect(&hub).expect("connect");
+    for (i, f) in frames[..half].iter().enumerate() {
+        send_frame(&mut client, 0, i, false, f);
+    }
+    collect_n(&mut client, half);
+    front.migrate(0, 1).expect("nominate shard 1");
+    for (i, f) in frames[half..].iter().enumerate() {
+        let seq = half + i;
+        send_frame(&mut client, 0, seq, seq + 1 == total, f);
+    }
+    collect_n(&mut client, half);
+    client.shutdown();
+    let report = front.stop().expect("front stops");
+    assert_eq!(report.migrations, 1);
+    join_a.join().expect("shard-a joins");
+    join_b.join().expect("shard-b joins");
+
+    // Render each process's own soi.obs.v1 feed and aggregate.
+    let snap_front = take_snapshot(&tel_front);
+    let snap_a = take_snapshot(&tel_a);
+    let snap_b = take_snapshot(&tel_b);
+    let mut feeds = Vec::new();
+    for (name, snap) in [
+        ("front", &snap_front),
+        ("shard-a", &snap_a),
+        ("shard-b", &snap_b),
+    ] {
+        let mut text = String::new();
+        snap.render_ndjson(0, 0, &mut text);
+        schema::validate_feed(&text).expect("per-process feed validates");
+        feeds.push((name.to_string(), text));
+    }
+    let cluster = aggregate(&feeds).expect("aggregate");
+
+    // Every directly-forwarded frame was sampled (n = 1); at least the
+    // pre-migration half must reassemble into the complete causal
+    // chain: admit and reply on the front, the serving hops all on one
+    // shard, each span parented by its predecessor.
+    let mut complete = 0usize;
+    let mut shards_seen: Vec<String> = Vec::new();
+    let mut migration_traces = 0usize;
+    for id in cluster.trace_ids() {
+        let spans = cluster.trace_spans(id);
+        let kinds: Vec<SpanKind> = spans.iter().map(|(_, r)| r.span).collect();
+        if kinds == FRAME_CHAIN {
+            for (i, (shard, r)) in spans.iter().enumerate() {
+                let want_parent = if i == 0 { None } else { Some(FRAME_CHAIN[i - 1]) };
+                assert_eq!(r.parent, want_parent, "span {:?} of trace {id}", r.span);
+                match r.span {
+                    SpanKind::FrontAdmit | SpanKind::FrontReply => {
+                        assert_eq!(*shard, "front", "trace {id}")
+                    }
+                    _ => assert_eq!(*shard, spans[1].0, "one shard serves trace {id}"),
+                }
+            }
+            shards_seen.push(spans[1].0.to_string());
+            complete += 1;
+        } else if kinds == [SpanKind::MigrateFront, SpanKind::MigrateReplay] {
+            assert_eq!(spans[0].0, "front");
+            assert_eq!(spans[1].0, "shard-b", "replay lands on the migration target");
+            assert_eq!(spans[1].1.parent, Some(SpanKind::MigrateFront));
+            migration_traces += 1;
+        }
+    }
+    assert!(
+        complete >= half,
+        "at least the pre-migration frames trace end to end (got {complete})"
+    );
+    assert_eq!(migration_traces, 1, "the warm move opened one forced trace");
+    assert!(
+        shards_seen.iter().any(|s| s == "shard-a") && shards_seen.iter().any(|s| s == "shard-b"),
+        "frame traces attribute to both homes across the migration: {shards_seen:?}"
+    );
+
+    // Bucket-exact aggregation: the cluster-wide exec histograms
+    // rebuilt from NDJSON must equal a hand-merge of the in-process
+    // registry snapshots — no re-binning, no loss.
+    let mut hand: Vec<(usize, usize, Histogram)> = Vec::new();
+    for snap in [&snap_front, &snap_a, &snap_b] {
+        for (rung, phase, h) in &snap.exec_ns {
+            match hand.iter_mut().find(|(r, p, _)| (*r, *p) == (*rung, *phase)) {
+                Some((_, _, m)) => m.merge(h),
+                None => hand.push((*rung, *phase, h.clone())),
+            }
+        }
+    }
+    hand.sort_by_key(|(r, p, _)| (*r, *p));
+    let got = cluster.cluster_exec();
+    assert!(!got.is_empty(), "the shards executed phases");
+    assert_eq!(got.len(), hand.len());
+    for ((gr, gp, gh), (hr, hp, hh)) in got.iter().zip(&hand) {
+        assert_eq!((gr, gp), (hr, hp));
+        let gb: Vec<(usize, u64)> = gh.nonzero().collect();
+        let hb: Vec<(usize, u64)> = hh.nonzero().collect();
+        assert_eq!(gb, hb, "buckets for rung {gr} phase {gp}");
+        assert_eq!(gh.p99(), hh.p99());
+    }
+
+    // The rendered summary is versioned, self-consistent, and the
+    // admit/dispatch/reply records of one trace agree on frame_seq.
+    let mut out = String::new();
+    cluster.render_ndjson(&mut out);
+    let summary = schema::validate_cluster_feed(&out).expect("cluster feed validates");
+    assert_eq!(summary.clusters, 1);
+    assert_eq!(summary.shards, 3);
+    assert_eq!(summary.spans, cluster.spans().count() as u64);
+    let probe = cluster
+        .trace_ids()
+        .into_iter()
+        .find(|id| {
+            cluster.trace_spans(*id)
+                .iter()
+                .map(|(_, r)| r.span)
+                .eq(FRAME_CHAIN)
+        })
+        .expect("a complete trace exists");
+    let mut seqs = Vec::new();
+    for line in out.lines() {
+        let Ok(v) = json::parse(line) else { continue };
+        if v.get("type").and_then(|t| t.as_str()) != Some("span") {
+            continue;
+        }
+        if v.get("trace_id").and_then(|n| n.as_f64()) != Some(probe as f64) {
+            continue;
+        }
+        if let Some(s) = v.get("frame_seq").and_then(|n| n.as_f64()) {
+            seqs.push(s as u64);
+        }
+    }
+    assert_eq!(seqs.len(), 3, "admit, dispatch and reply carry frame_seq");
+    assert!(
+        seqs.windows(2).all(|w| w[0] == w[1]),
+        "one trace names one frame: {seqs:?}"
+    );
+}
+
+#[test]
+fn merged_drop_accounting_is_exact_under_ring_overflow() {
+    // Satellite property (DESIGN.md §15): aggregating feeds whose
+    // rings overflowed yields exact counter identities — the cluster
+    // total of every counter is the sum of the per-shard feeds, the
+    // cluster's dropped.events equals the sum of each exporter's
+    // obs_dropped_events gauge, and each shard record attributes its
+    // own loss.  Deterministic despite real Exporter threads: the ring
+    // is drop-newest, so recording E events into capacity C drops
+    // exactly E - C, and `finish()` always emits one final snapshot.
+    const CAP: usize = 16;
+    prop::check("cluster drop accounting", 6, 0xD20B5EED, |rng, case| {
+        let n_shards = 2 + rng.below(2);
+        let mut feeds = Vec::new();
+        let mut want_drops = Vec::new();
+        let mut want_frames = 0u64;
+        let mut want_spans = 0u64;
+        let mut paths = Vec::new();
+        for s in 0..n_shards {
+            let tel = Telemetry::new(ObsConfig { ring_capacity: CAP });
+            let h = tel.worker(0);
+            let events = rng.below(3 * CAP + 1) as u64;
+            for i in 0..events {
+                h.span(i + 1, SpanKind::FrontAdmit, 0, 1, i, 0);
+            }
+            let frames = rng.below(1000) as u64;
+            h.count(Counter::Frames, frames);
+            want_frames += frames;
+            want_drops.push(events.saturating_sub(CAP as u64));
+            want_spans += events.min(CAP as u64);
+            let path = std::env::temp_dir().join(format!(
+                "soi-cluster-obs-{}-{case}-{s}.ndjson",
+                std::process::id()
+            ));
+            let exporter = Exporter::start(tel, &path, 3_600_000)
+                .map_err(|e| format!("exporter start: {e}"))?;
+            exporter.finish().map_err(|e| format!("exporter finish: {e}"))?;
+            let text = std::fs::read_to_string(&path).map_err(|e| format!("read feed: {e}"))?;
+            paths.push(path);
+            feeds.push((format!("shard-{s}"), text));
+        }
+        let cluster = aggregate(&feeds).map_err(|e| format!("aggregate: {e}"))?;
+        for p in paths {
+            let _ = std::fs::remove_file(p);
+        }
+
+        let total_drops: u64 = want_drops.iter().sum();
+        if cluster.counter_total(Counter::Frames) != want_frames {
+            return Err(format!(
+                "cluster frames {} != sum of shard feeds {want_frames}",
+                cluster.counter_total(Counter::Frames)
+            ));
+        }
+        if cluster.gauge_total(Gauge::ObsDroppedEvents) != total_drops {
+            return Err(format!(
+                "cluster dropped events {} != expected {total_drops}",
+                cluster.gauge_total(Gauge::ObsDroppedEvents)
+            ));
+        }
+        if cluster.spans().count() as u64 != want_spans {
+            return Err(format!(
+                "cluster spans {} != surviving events {want_spans}",
+                cluster.spans().count()
+            ));
+        }
+        for (shard, want) in cluster.shards.iter().zip(&want_drops) {
+            if shard.gauge(Gauge::ObsDroppedEvents) != *want {
+                return Err(format!(
+                    "shard '{}' attributes {} drops, expected {want}",
+                    shard.name,
+                    shard.gauge(Gauge::ObsDroppedEvents)
+                ));
+            }
+            if shard.gauge(Gauge::ObsDroppedSnapshots) != 0 {
+                return Err(format!(
+                    "shard '{}' reports snapshot drops on an idle exporter",
+                    shard.name
+                ));
+            }
+        }
+
+        // The rendered head record carries the same accounting.
+        let mut out = String::new();
+        cluster.render_ndjson(&mut out);
+        schema::validate_cluster_feed(&out).map_err(|e| format!("cluster feed: {e}"))?;
+        let head = json::parse(out.lines().next().unwrap_or(""))
+            .map_err(|e| format!("head parses: {e}"))?;
+        let dropped = head
+            .get("dropped")
+            .and_then(|d| d.get("events"))
+            .and_then(|n| n.as_f64())
+            .ok_or("head has dropped.events")? as u64;
+        if dropped != total_drops {
+            return Err(format!("rendered dropped.events {dropped} != {total_drops}"));
+        }
+        Ok(())
+    });
+}

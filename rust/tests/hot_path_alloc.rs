@@ -8,10 +8,12 @@
 //! every variant family at both execution precisions.
 //!
 //! A second leg re-proves the guarantee with **telemetry enabled**
-//! (DESIGN.md §12): exec spans, FP pre/rest spans, counters, gauges and
-//! round events recorded through a real `ObsHandle` — with a ring tiny
-//! enough that the overflow (drop-newest) path runs inside the measured
-//! window.
+//! (DESIGN.md §12): exec spans, FP pre/rest spans, counters, gauges,
+//! round events and cross-shard trace spans (DESIGN.md §15) recorded
+//! through a real `ObsHandle` — with a ring tiny enough that the
+//! overflow (drop-newest) path runs inside the measured window.  The
+//! first leg runs with the trace plumbing compiled in but telemetry
+//! off, pinning the zero-overhead-when-off claim.
 //!
 //! Everything lives in ONE `#[test]` on purpose: the counter is global,
 //! and the standard harness runs separate tests on separate threads —
@@ -125,7 +127,7 @@ fn drive_obs(
     rounds: usize,
     obs: &soi::obs::ObsHandle,
 ) {
-    use soi::obs::{Counter, EventKind, Gauge};
+    use soi::obs::{Counter, EventKind, Gauge, SpanKind, TraceCtx};
     use std::time::Instant;
     assert_eq!(frame.len(), feat);
     let fp = exec.has_fp_split();
@@ -165,6 +167,12 @@ fn drive_obs(
             exec.step_batch_into(t, &fr, &mut refs, dw, outs).unwrap();
         }
         obs.exec(0, phase, BATCH, t_exec.elapsed().as_nanos() as u64);
+        // cross-shard trace plumbing (DESIGN.md §15): treat every frame
+        // in the window as sampled — context derivation is pure stack
+        // math and span records ride the same preallocated ring, so
+        // tracing must add zero allocations too
+        let ctx = TraceCtx::root(t as u64 + 1, SpanKind::ShardDispatch);
+        let leaf = ctx.child(SpanKind::WorkerRound).child(SpanKind::PhaseExec);
         obs.with(|w| {
             w.count(Counter::Rounds, 1);
             w.push_event(
@@ -174,6 +182,22 @@ fn drive_obs(
                 1 + BATCH as u64,
                 t_round.elapsed().as_nanos() as u64,
                 0,
+            );
+            w.span(
+                ctx.trace_id,
+                SpanKind::WorkerRound,
+                ctx.kind,
+                0,
+                1 + BATCH as u64,
+                t_round.elapsed().as_nanos() as u64,
+            );
+            w.span(
+                leaf.trace_id,
+                SpanKind::PhaseExec,
+                leaf.parent,
+                phase as u64,
+                BATCH as u64,
+                t_round.elapsed().as_nanos() as u64,
             );
             w.gauge_set(Gauge::QueueDepth, 0);
             w.gauge_set(Gauge::StreamsLive, 1 + BATCH as u64);
@@ -339,5 +363,11 @@ fn zero_steady_state_allocations_for_all_families_and_dtypes() {
     let dropped = tel.worker(0).with(|w| w.drain_events(&mut drained));
     assert!(!drained.is_empty());
     assert!(dropped > 0, "the 8-slot ring should have overflowed");
+    assert!(
+        drained
+            .iter()
+            .any(|e| e.kind == soi::obs::EventKind::Span),
+        "trace spans reached the ring alongside round events"
+    );
     soi::obs::Telemetry::uninstall_global();
 }

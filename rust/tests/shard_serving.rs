@@ -203,6 +203,7 @@ fn send_frame(client: &mut WireClient, session: u64, seq: usize, last: bool, f: 
             seq: seq as u64,
             last,
             samples: f.to_vec(),
+            trace: None,
         })
         .expect("send frame");
 }
@@ -379,7 +380,14 @@ fn admission_denial_is_typed_and_spares_the_admitted_session() {
     let frames = random_frames(4, total, 0xAD31);
     let reference = reference_outputs(&cv, std::slice::from_ref(&frames));
 
-    let fleet = boot_fleet(&cv, 1, FrontPolicy { max_sessions: 1 });
+    let fleet = boot_fleet(
+        &cv,
+        1,
+        FrontPolicy {
+            max_sessions: 1,
+            ..FrontPolicy::default()
+        },
+    );
     let mut client = WireClient::connect(&fleet.hub).expect("connect");
     send_frame(&mut client, 0, 0, false, &frames[0]);
     send_frame(&mut client, 1, 0, false, &frames[0]);

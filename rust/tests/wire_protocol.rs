@@ -11,6 +11,7 @@
 use soi::net::loopback::pipe;
 use soi::net::wire::{role, write_msg};
 use soi::net::{ErrCode, FrameReader, Msg, WireError, WireWrite, MAX_FRAME, WIRE_VERSION};
+use soi::obs::{SpanKind, TraceCtx};
 use soi::util::prop;
 use soi::util::rng::Rng;
 
@@ -32,6 +33,21 @@ fn samples(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32).collect()
 }
 
+/// Half the time, a trace context with a random (valid) hop; traced
+/// and untraced encodings of every frame-bearing message both ride
+/// through the whole fault matrix below.
+fn random_trace(rng: &mut Rng) -> Option<TraceCtx> {
+    if rng.chance(0.5) {
+        return None;
+    }
+    let kind = SpanKind::ALL[rng.below(SpanKind::ALL.len())];
+    Some(TraceCtx {
+        trace_id: rng.next_u64() | 1, // nonzero by construction
+        kind: kind as u8,
+        parent: rng.below(8) as u8,
+    })
+}
+
 fn random_msg(rng: &mut Rng) -> Msg {
     match rng.below(6) {
         0 => Msg::Hello {
@@ -47,11 +63,13 @@ fn random_msg(rng: &mut Rng) -> Msg {
             last: rng.chance(0.2),
             // below(33) includes 0: the empty-payload edge case.
             samples: samples(rng, rng.below(33)),
+            trace: random_trace(rng),
         },
         2 => Msg::FrameOut {
             session: rng.next_u64(),
             seq: rng.next_u64() >> 1,
             samples: samples(rng, rng.below(33)),
+            trace: random_trace(rng),
         },
         3 => {
             let feat = rng.below(6) + 1;
@@ -61,6 +79,7 @@ fn random_msg(rng: &mut Rng) -> Msg {
                 t: rng.below(1000) as u64,
                 feat: feat as u32,
                 history: (0..h).map(|_| samples(rng, feat)).collect(),
+                trace: random_trace(rng),
             }
         }
         4 => Msg::Drain {
@@ -100,6 +119,7 @@ fn max_frame_boundary_roundtrips_and_one_more_is_oversize() {
         seq: 0,
         last: false,
         samples: samples(&mut rng, MAX_SAMPLES),
+        trace: None,
     };
     let mut buf = Vec::new();
     m.encode(&mut buf).expect("max-size frame encodes");
@@ -121,6 +141,7 @@ fn max_frame_boundary_roundtrips_and_one_more_is_oversize() {
             seq,
             last,
             mut samples,
+            ..
         } => {
             samples.push(0.0);
             Msg::Frame {
@@ -128,6 +149,7 @@ fn max_frame_boundary_roundtrips_and_one_more_is_oversize() {
                 seq,
                 last,
                 samples,
+                trace: None,
             }
         }
         _ => unreachable!(),
@@ -258,6 +280,7 @@ fn version_skew_mid_stream_is_typed_and_non_fatal() {
         session: 3,
         seq: 9,
         samples: vec![0.5, -0.5],
+        trace: None,
     };
     let (r, mut w) = pipe(256, false);
     write_msg(&mut w, &skewed).expect("send skewed hello");
@@ -281,6 +304,7 @@ fn backpressure_fails_whole_messages_never_partial() {
         seq: 0,
         last: false,
         samples: vec![0.0; 32],
+        trace: None,
     };
     match write_msg(&mut w, &big) {
         Err(WireError::Backpressure { capacity }) => assert_eq!(capacity, 64),
