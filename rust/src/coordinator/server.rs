@@ -372,6 +372,12 @@ pub struct Server {
     /// per round and migrates its streams onto newly published
     /// generations with §9 history-replay re-priming.
     pub reload: Option<ReloadHandle>,
+    /// How long an idle worker blocks on its job queue per poll step
+    /// (milliseconds) when hot reload is enabled — the latency bound
+    /// on an idle worker noticing a publish.  Smaller values adopt
+    /// generations faster at the cost of more wakeups; without
+    /// reload, idle workers block indefinitely and this is unused.
+    pub idle_poll_ms: u64,
 }
 
 impl Server {
@@ -393,6 +399,7 @@ impl Server {
             adaptive: None,
             telemetry: None,
             reload: None,
+            idle_poll_ms: 2,
         }
     }
 
@@ -468,6 +475,7 @@ impl Server {
                 obs: self.telemetry.as_ref().map(|t| t.worker(w)),
                 reload: self.reload.clone(),
                 live: None,
+                idle_poll_ms: self.idle_poll_ms,
             };
             handles.push(thread::spawn(move || {
                 worker_loop(ladder, rx, out_tx, cfg);
@@ -578,6 +586,7 @@ impl Server {
                 obs: self.telemetry.as_ref().map(|t| t.worker(w)),
                 reload: self.reload.clone(),
                 live: Some(ev_tx.clone()),
+                idle_poll_ms: self.idle_poll_ms,
             };
             handles.push(thread::spawn(move || {
                 worker_loop(ladder, rx, out_tx, cfg);
@@ -701,6 +710,9 @@ struct WorkerCfg {
     /// accumulating in the slot, and serving errors are reported as
     /// [`LiveEvent::Fatal`] instead of aborting a batch run.
     live: Option<Sender<LiveEvent>>,
+    /// Idle-poll step (ms) while hot reload is enabled
+    /// ([`Server::idle_poll_ms`]).
+    idle_poll_ms: u64,
 }
 
 /// Route a worker error to whichever channel the mode uses.
@@ -802,6 +814,7 @@ fn worker_loop(
         obs,
         reload,
         live,
+        idle_poll_ms,
     } = cfg;
     // With hot reload enabled, the handle's current generation is the
     // starting ladder (the server seeds it with its own ladder, so this
@@ -1066,7 +1079,7 @@ fn worker_loop(
             if reload.is_some() {
                 // block in short steps so a publish lands promptly even
                 // on a momentarily idle worker
-                match rx.recv_timeout(Duration::from_millis(2)) {
+                match rx.recv_timeout(Duration::from_millis(idle_poll_ms.max(1))) {
                     Ok(cmd) => handle_cmd(
                         &mut slots,
                         &mut index,

@@ -12,6 +12,7 @@
 //!   serve-shard <variant>        run one backend shard over TCP (soi.wire.v1)
 //!   serve-front --shards a,b     run the front-end over a shard fleet
 //!   wire-smoke [variant]         front + 2 loopback shards vs single-process serve
+//!   chaos-smoke [variant]        fleet survival under a seeded fault plan (DESIGN.md §16)
 //!   aggregate-feeds --feeds a,b  merge soi.obs.v1 feeds into one soi.cluster.v1
 //!   top --feeds a,b              live cluster console over health feeds
 //!
@@ -34,8 +35,9 @@ use soi::coordinator::{AdaptivePolicy, GenerationWatcher, Server, StreamSession}
 use soi::dsp::{frames, metrics, siggen};
 use soi::experiments::{self, Ctx};
 use soi::net::{
-    health_from_feed, run_shard, spawn_front_with, ClusterController, ClusterPolicy, FrontPolicy,
-    LoopbackHub, Msg, ShardConfig, ShardHealth, ShardLink, TcpConnector, TcpPort, WireClient,
+    health_from_feed, run_shard, spawn_front_with, ChaosFleet, ChaosPlan, ClusterController,
+    ClusterPolicy, ErrCode, Fault, FrontPolicy, LoopbackHub, Msg, ShardConfig, ShardHealth,
+    ShardLink, TcpConnector, TcpPort, Transport, WireClient,
 };
 use soi::obs::{self, Exporter, ObsConfig, Telemetry};
 use soi::runtime::{
@@ -163,6 +165,7 @@ fn run(argv: &[String]) -> Result<()> {
                 artifact_dir: args.get("artifact-dir").map(PathBuf::from),
                 watch: args.flag("watch-generations"),
                 watch_ms: args.u64_or("watch-ms", 200).map_err(anyhow::Error::msg)?,
+                idle_poll_ms: args.u64_or("idle-poll-ms", 2).map_err(anyhow::Error::msg)?,
             };
             if opts.watch && opts.artifact_dir.is_none() {
                 bail!("--watch-generations needs --artifact-dir DIR to watch");
@@ -266,6 +269,7 @@ fn run(argv: &[String]) -> Result<()> {
                     }
                 }),
                 snapshot_ms: args.u64_or("snapshot-ms", 200).map_err(anyhow::Error::msg)?,
+                idle_poll_ms: args.u64_or("idle-poll-ms", 2).map_err(anyhow::Error::msg)?,
             };
             serve_shard(&artifacts, &spec_with_dtype(name, dtype), opts)
         }
@@ -290,6 +294,12 @@ fn run(argv: &[String]) -> Result<()> {
                 max_sessions: args.usize_or("max-sessions", 64).map_err(anyhow::Error::msg)?,
                 balance_ms: args.u64_or("balance-ms", 500).map_err(anyhow::Error::msg)?,
                 trace_sample_n: args.u64_or("trace-sample-n", 0).map_err(anyhow::Error::msg)?,
+                heartbeat_ms: args.u64_or("heartbeat-ms", 0).map_err(anyhow::Error::msg)?,
+                miss_budget: args.u64_or("miss-budget", 3).map_err(anyhow::Error::msg)? as u32,
+                retry_budget: args.u64_or("retry-budget", 1024).map_err(anyhow::Error::msg)?,
+                min_live_shards: args
+                    .usize_or("min-live-shards", 1)
+                    .map_err(anyhow::Error::msg)?,
                 telemetry: args.get("telemetry").map(|v| {
                     if v == "true" {
                         "soi-front-feed.ndjson".to_string()
@@ -325,6 +335,29 @@ fn run(argv: &[String]) -> Result<()> {
                 feeds,
             };
             wire_smoke(&artifacts, &variant, opts)
+        }
+        "chaos-smoke" => {
+            let variant = args
+                .positional()
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("scc2")
+                .to_string();
+            let opts = ChaosSmokeOpts {
+                streams: args.usize_or("streams", 4).map_err(anyhow::Error::msg)?,
+                frames: args.usize_or("frames", 96).map_err(anyhow::Error::msg)?,
+                workers: args.usize_or("workers", 2).map_err(anyhow::Error::msg)?,
+                seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+                chaos_seed: args.u64_or("chaos-seed", 7).map_err(anyhow::Error::msg)?,
+                events: args.usize_or("events", 3).map_err(anyhow::Error::msg)?,
+                span: args.u64_or("span", 40).map_err(anyhow::Error::msg)?,
+                heartbeat_ms: args.u64_or("heartbeat-ms", 20).map_err(anyhow::Error::msg)?,
+                miss_budget: args.u64_or("miss-budget", 3).map_err(anyhow::Error::msg)? as u32,
+                retry_budget: args.u64_or("retry-budget", 4096).map_err(anyhow::Error::msg)?,
+                front_feed: args.get("front-feed").map(|s| s.to_string()),
+                snapshot_ms: args.u64_or("snapshot-ms", 50).map_err(anyhow::Error::msg)?,
+            };
+            chaos_smoke(&artifacts, &variant, opts)
         }
         "denoise" => {
             let name = args.positional().get(1).context("denoise needs a variant name")?;
@@ -463,6 +496,9 @@ struct ServeOpts {
     watch: bool,
     /// Generation poll interval, ms (`--watch-ms`).
     watch_ms: u64,
+    /// Idle-worker queue-poll step, ms (`--idle-poll-ms`; only used
+    /// while hot reload is enabled).
+    idle_poll_ms: u64,
 }
 
 /// Load the newest verified generation under `root` (serve boot,
@@ -606,6 +642,7 @@ fn serve_bench(artifacts: &std::path::Path, opts: ServeOpts) -> Result<()> {
     }
     server.idle_precompute = opts.idle_precompute;
     server.batching = opts.batching;
+    server.idle_poll_ms = opts.idle_poll_ms;
     // Hot reload (DESIGN.md §13): publish the boot generation and, when
     // watching, poll the artifact root for newer ones in the background —
     // workers adopt each publish at a phase-0 boundary with no stream
@@ -841,6 +878,9 @@ struct ShardOpts {
     /// NDJSON health-feed path (`--telemetry[=PATH]`).
     telemetry: Option<String>,
     snapshot_ms: u64,
+    /// Idle-worker queue-poll step, ms (`--idle-poll-ms`; only used
+    /// while hot reload is enabled).
+    idle_poll_ms: u64,
 }
 
 /// Run one backend shard over TCP until the front-end drains it
@@ -850,6 +890,7 @@ fn serve_shard(artifacts: &std::path::Path, spec: &str, opts: ShardOpts) -> Resu
     let rt = Arc::new(Runtime::cpu()?);
     let cv = Arc::new(load_variant(rt, artifacts, spec)?);
     let mut server = Server::new(cv, opts.workers);
+    server.idle_poll_ms = opts.idle_poll_ms;
     let exporter = match &opts.telemetry {
         Some(path) => {
             let tel = Telemetry::new(ObsConfig::default());
@@ -967,6 +1008,17 @@ struct FrontOpts {
     balance_ms: u64,
     /// Trace every nth forwarded frame (`--trace-sample-n`, 0 = off).
     trace_sample_n: u64,
+    /// Heartbeat tick interval, ms (`--heartbeat-ms`, 0 = off;
+    /// DESIGN.md §16).
+    heartbeat_ms: u64,
+    /// Silent ticks before a shard is declared suspect
+    /// (`--miss-budget`).
+    miss_budget: u32,
+    /// Per-session recovery resend cap (`--retry-budget`).
+    retry_budget: u64,
+    /// Reachable shards required to admit new sessions
+    /// (`--min-live-shards`).
+    min_live_shards: usize,
     /// The front's own `soi.obs.v1` feed path (`--telemetry[=PATH]`).
     telemetry: Option<String>,
     /// Snapshot cadence for that feed, ms (`--snapshot-ms`).
@@ -990,6 +1042,10 @@ fn serve_front(shards: Vec<String>, feeds: Vec<String>, opts: FrontOpts) -> Resu
     let policy = FrontPolicy {
         max_sessions: opts.max_sessions,
         trace_sample_n: opts.trace_sample_n,
+        heartbeat_ms: opts.heartbeat_ms,
+        miss_budget: opts.miss_budget,
+        retry_budget: opts.retry_budget,
+        min_live_shards: opts.min_live_shards,
     };
     // The front exports the same soi.obs.v1 feed a shard does; the
     // exporter runs for the life of the process (serve-front never
@@ -1013,6 +1069,13 @@ fn serve_front(shards: Vec<String>, feeds: Vec<String>, opts: FrontOpts) -> Resu
     );
     if opts.trace_sample_n > 0 {
         println!("tracing every {}th forwarded frame (DESIGN.md \u{a7}15)", opts.trace_sample_n);
+    }
+    if opts.heartbeat_ms > 0 {
+        println!(
+            "heartbeat every {} ms, suspect after {} misses, retry budget {} \
+             frames/session (DESIGN.md \u{a7}16)",
+            opts.heartbeat_ms, opts.miss_budget, opts.retry_budget
+        );
     }
     if feeds.is_empty() {
         loop {
@@ -1154,6 +1217,7 @@ fn wire_smoke(artifacts: &std::path::Path, spec: &str, opts: SmokeOpts) -> Resul
     let policy = FrontPolicy {
         max_sessions: opts.streams + 1,
         trace_sample_n: opts.trace_sample_n,
+        ..FrontPolicy::default()
     };
     // With --front-feed the front exports its own soi.obs.v1 feed, so
     // the smoke exercises the whole cluster-observability path:
@@ -1199,6 +1263,7 @@ fn wire_smoke(artifacts: &std::path::Path, spec: &str, opts: SmokeOpts) -> Resul
             last: false,
             samples: samples.clone(),
             trace: None,
+            deadline_us: None,
         };
         client.send(&msg).map_err(|e| anyhow!("send: {e}"))?;
     }
@@ -1213,6 +1278,7 @@ fn wire_smoke(artifacts: &std::path::Path, spec: &str, opts: SmokeOpts) -> Resul
             last: i + 1 == mig.len(),
             samples: samples.clone(),
             trace: None,
+            deadline_us: None,
         };
         client.send(&msg).map_err(|e| anyhow!("send: {e}"))?;
     }
@@ -1264,6 +1330,291 @@ fn wire_smoke(artifacts: &std::path::Path, spec: &str, opts: SmokeOpts) -> Resul
     Ok(())
 }
 
+/// Options of the `chaos-smoke` subcommand.
+struct ChaosSmokeOpts {
+    streams: usize,
+    frames: usize,
+    workers: usize,
+    seed: u64,
+    /// Seed of the fault plan (`--chaos-seed`) — independent of the
+    /// input seed so the same traffic can face different failures.
+    chaos_seed: u64,
+    /// Fault→heal episodes in the plan (`--events`).
+    events: usize,
+    /// Episode spread in ticks (`--span`).
+    span: u64,
+    /// Front heartbeat interval, ms (`--heartbeat-ms`).
+    heartbeat_ms: u64,
+    /// Silent ticks before suspect (`--miss-budget`).
+    miss_budget: u32,
+    /// Per-session recovery resend cap (`--retry-budget`).
+    retry_budget: u64,
+    /// The front's own health-feed path (`--front-feed`; optional).
+    front_feed: Option<String>,
+    snapshot_ms: u64,
+}
+
+/// Fleet-survival smoke (DESIGN.md §16, what CI runs): a front-end
+/// plus three loopback shards behind deterministic chaos proxies
+/// serve seeded streams while a seeded fault plan kills, stalls,
+/// partitions and corrupts shard links.  Every stream must either
+/// finish bit-identical to unfaulted single-process serving or end in
+/// a typed `Overloaded`/`ShardLost` error — a wrong, duplicated or
+/// reordered output, or a silently dropped accepted frame, exits
+/// nonzero.
+fn chaos_smoke(artifacts: &std::path::Path, spec: &str, opts: ChaosSmokeOpts) -> Result<()> {
+    const N_SHARDS: usize = 3;
+    let rt = Arc::new(Runtime::cpu()?);
+    let cv = Arc::new(load_variant(rt, artifacts, spec)?);
+    let feat = cv.manifest.config.feat;
+
+    let mut rng = Rng::new(opts.seed);
+    let mut inputs: Vec<Vec<Vec<f32>>> = Vec::with_capacity(opts.streams);
+    for _ in 0..opts.streams {
+        let (noisy, _) = siggen::denoise_pair(&mut rng, feat * opts.frames, siggen::FS);
+        let (cols, _) = frames(&noisy, feat);
+        inputs.push(cols);
+    }
+
+    // Unfaulted single-process reference: what every surviving stream
+    // must match bit for bit.
+    let reference = {
+        let server = Server::new(cv.clone(), opts.workers);
+        let report = server.run(&inputs)?;
+        let mut outs = Vec::with_capacity(inputs.len());
+        for sid in 0..inputs.len() as u64 {
+            outs.push(report.outputs.get(&sid).cloned().unwrap_or_default());
+        }
+        outs
+    };
+
+    // Real shards over loopback hubs, each with its own worker pool.
+    let mut shard_hubs = Vec::with_capacity(N_SHARDS);
+    let mut shard_threads = Vec::with_capacity(N_SHARDS);
+    for i in 0..N_SHARDS {
+        let hub = LoopbackHub::new();
+        let server = Server::new(cv.clone(), opts.workers);
+        let shard_hub = hub.clone();
+        let cfg = ShardConfig { shard_id: i as u64 + 1 };
+        shard_threads.push(std::thread::spawn(move || run_shard(&server, &shard_hub, cfg)));
+        shard_hubs.push(hub);
+    }
+
+    // Chaos proxies between the front and every shard, executing the
+    // seeded plan on the fleet-global tick clock.
+    let plan = ChaosPlan::seeded(opts.chaos_seed, N_SHARDS, opts.span, opts.events);
+    println!(
+        "chaos-smoke: plan seed {} — {} scheduled faults over {N_SHARDS} shards",
+        opts.chaos_seed,
+        plan.faults().len()
+    );
+    for f in plan.faults() {
+        println!("  tick {:>5}  shard {}  {:?}", f.tick, f.shard, f.fault);
+    }
+    let backends: Vec<Arc<dyn Transport>> = shard_hubs
+        .iter()
+        .map(|h| Arc::new(h.clone()) as Arc<dyn Transport>)
+        .collect();
+    let (proxy_hubs, fleet) = ChaosFleet::wrap(backends, &plan);
+
+    let links: Vec<ShardLink> = proxy_hubs
+        .iter()
+        .enumerate()
+        .map(|(i, hub)| ShardLink {
+            name: format!("shard{i}"),
+            transport: Box::new(hub.clone()),
+        })
+        .collect();
+    let front_hub = LoopbackHub::new();
+    let policy = FrontPolicy {
+        max_sessions: opts.streams,
+        heartbeat_ms: opts.heartbeat_ms,
+        miss_budget: opts.miss_budget,
+        retry_budget: opts.retry_budget,
+        ..FrontPolicy::default()
+    };
+    let mut front_tel = None;
+    let mut exporters = Vec::new();
+    if let Some(path) = &opts.front_feed {
+        let tel = Telemetry::new(ObsConfig::default());
+        let exporter = Exporter::start(tel.clone(), &PathBuf::from(path), opts.snapshot_ms)
+            .with_context(|| format!("creating health feed {path}"))?;
+        front_tel = Some(tel);
+        exporters.push(exporter);
+    }
+    let handle = spawn_front_with(Box::new(front_hub.clone()), links, policy, front_tel)?;
+
+    let mut client = WireClient::connect(&front_hub)?;
+    if client.feat() != feat {
+        bail!("fleet serves feat {}, variant has {feat}", client.feat());
+    }
+
+    // Drive every stream round-robin.  The front's reader drains the
+    // client pipe continuously, so sending everything up front cannot
+    // deadlock against the faults.
+    let max_len = inputs.iter().map(Vec::len).max().unwrap_or(0);
+    for t in 0..max_len {
+        for (sid, stream) in inputs.iter().enumerate() {
+            if t < stream.len() {
+                let msg = Msg::Frame {
+                    session: sid as u64,
+                    seq: t as u64,
+                    last: t + 1 == stream.len(),
+                    samples: stream[t].clone(),
+                    trace: None,
+                    deadline_us: None,
+                };
+                client.send(&msg).map_err(|e| anyhow!("send: {e}"))?;
+            }
+        }
+    }
+
+    // Collect until every stream has either finished or been shed with
+    // a typed error.  Sequence numbers are checked online, so a
+    // duplicated, reordered or post-shed output fails immediately.
+    let mut outs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); inputs.len()];
+    let mut lost: Vec<Option<String>> = vec![None; inputs.len()];
+    let mut pending = inputs.len();
+    while pending > 0 {
+        match client.recv() {
+            Ok(Some(Msg::FrameOut { session, seq, samples, .. })) => {
+                let sid = session as usize;
+                if sid >= outs.len() {
+                    bail!("chaos-smoke: output for unknown session {session}");
+                }
+                if lost[sid].is_some() {
+                    bail!("chaos-smoke: session {session} produced output after its typed error");
+                }
+                if seq != outs[sid].len() as u64 {
+                    bail!(
+                        "chaos-smoke: session {session} output seq {seq}, expected {} — \
+                         duplicated or reordered frame",
+                        outs[sid].len()
+                    );
+                }
+                outs[sid].push(samples);
+                if outs[sid].len() == reference[sid].len() {
+                    pending -= 1;
+                }
+            }
+            Ok(Some(Msg::Err { code, session, detail })) => {
+                let sid = session as usize;
+                if sid >= lost.len() {
+                    bail!(
+                        "chaos-smoke: stray {} error for session {session}: {detail}",
+                        code.name()
+                    );
+                }
+                if lost[sid].is_some() {
+                    // Frames already in flight when the session was
+                    // shed echo back as typed BadFrame refusals —
+                    // answered, not dropped.  Anything else is stray.
+                    if !matches!(code, ErrCode::BadFrame) {
+                        bail!(
+                            "chaos-smoke: stray {} error for shed session {session}: {detail}",
+                            code.name()
+                        );
+                    }
+                    continue;
+                }
+                if outs[sid].len() == reference[sid].len() {
+                    bail!("chaos-smoke: session {session} errored after completing: {detail}");
+                }
+                if !matches!(code, ErrCode::Overloaded | ErrCode::ShardLost) {
+                    bail!(
+                        "chaos-smoke: unexpected {} error for session {session}: {detail}",
+                        code.name()
+                    );
+                }
+                lost[sid] = Some(format!("{}: {detail}", code.name()));
+                pending -= 1;
+            }
+            Ok(Some(_)) => {}
+            Ok(None) => bail!("chaos-smoke: fleet closed with {pending} streams outstanding"),
+            Err(e) => bail!("recv: {e}"),
+        }
+    }
+
+    // Quiesce: heal every switch so the shutdown drain reaches the
+    // shards, then stop the front and unblock any shard still in
+    // accept by closing its hub.
+    for i in 0..N_SHARDS {
+        fleet.switch(i).apply(Fault::Heal);
+    }
+    client.shutdown();
+    let front = handle.stop()?;
+    fleet.close();
+    for hub in &shard_hubs {
+        hub.close();
+    }
+    let mut resumes = 0u64;
+    for (i, t) in shard_threads.into_iter().enumerate() {
+        let report = t.join().map_err(|_| anyhow!("shard {i} panicked"))??;
+        resumes += report.resumes;
+    }
+    for exporter in exporters {
+        let path = exporter.path().display().to_string();
+        let stats = exporter.finish().context("finishing the front health feed")?;
+        eprintln!("telemetry: {} snapshots, {} lines -> {path}", stats.snapshots, stats.lines);
+    }
+
+    let mut survivors = 0usize;
+    let mut mismatched = 0usize;
+    for sid in 0..inputs.len() {
+        match &lost[sid] {
+            Some(why) => eprintln!("chaos-smoke: session {sid} shed ({why})"),
+            None => {
+                survivors += 1;
+                if outs[sid] != reference[sid] {
+                    mismatched += 1;
+                    eprintln!("chaos-smoke: session {sid} diverged from unfaulted serving");
+                }
+            }
+        }
+    }
+    for (i, rep) in fleet.reports().iter().enumerate() {
+        println!(
+            "chaos-smoke: shard {i} — {} ticks, {} dropped, {} injected, {} bridges",
+            rep.ticks, rep.dropped, rep.injected, rep.bridges
+        );
+    }
+    println!(
+        "chaos-smoke: {} survivors / {} shed of {} streams — front: {} misses, \
+         {} suspects, {} rejoins, {} retried frames, {} shed, {} migrations, {} wire errors",
+        survivors,
+        inputs.len() - survivors,
+        inputs.len(),
+        front.heartbeat_misses,
+        front.shard_suspects,
+        front.shard_rejoins,
+        front.frames_retried,
+        front.shed,
+        front.migrations,
+        front.wire_errs
+    );
+    if resumes > 0 {
+        println!("chaos-smoke: {resumes} warm shard resumes replayed session history");
+    }
+    if mismatched > 0 {
+        bail!("{mismatched} surviving streams diverged from unfaulted serving");
+    }
+    if survivors == 0 {
+        bail!("every stream was shed — nothing survived to verify");
+    }
+    if front.shed != (inputs.len() - survivors) as u64 {
+        bail!(
+            "front shed accounting ({}) disagrees with client-observed shed streams ({})",
+            front.shed,
+            inputs.len() - survivors
+        );
+    }
+    println!(
+        "chaos-smoke: PASS — every surviving stream bit-identical under the fault plan, \
+         every shed stream typed"
+    );
+    Ok(())
+}
+
 const HELP: &str = "soi — Scattered Online Inference coordinator
 usage: soi <command> [options]
   list                          list built artifact variants
@@ -1286,7 +1637,7 @@ usage: soi <command> [options]
                   200 ms): per-(rung x phase) latency histograms, FP
                   pre/rest spans, migration + controller-decision events,
                   arena_peak_bytes (DESIGN.md s12 + appendix A)
-  serve ... --artifact-dir DIR [--watch-generations] [--watch-ms N]
+  serve ... --artifact-dir DIR [--watch-generations] [--watch-ms N] [--idle-poll-ms N]
                   serve rungs compiled over the newest soi.artifact.v1
                   generation under DIR (pinned: the positional spec;
                   adaptive: every --ladder entry).  With
@@ -1326,13 +1677,18 @@ usage: soi <command> [options]
                   typed error on any corruption — what CI runs
   serve-shard <variant> [--listen HOST:PORT] [--workers N] [--shard-id N]
                   [--telemetry[=PATH]] [--snapshot-ms N] [--dtype f32|int8]
+                  [--idle-poll-ms N]
                   run one backend shard over TCP (soi.wire.v1, DESIGN.md
                   s14): a coordinator worker pool behind a wire endpoint
                   with s9 warm resume of migrated sessions; a whole-shard
-                  Drain from the front stops it gracefully
+                  Drain from the front stops it gracefully.  --idle-poll-ms
+                  bounds how long an idle worker waits before re-checking
+                  for a hot-reload publish (default 2)
   serve-front --shards HOST:PORT[,HOST:PORT..] [--listen HOST:PORT]
                   [--max-sessions N] [--feeds P1,P2..] [--balance-ms N]
                   [--telemetry[=PATH]] [--snapshot-ms N] [--trace-sample-n N]
+                  [--heartbeat-ms N] [--miss-budget N] [--retry-budget N]
+                  [--min-live-shards N]
                   run the front-end: admission control, session->shard
                   affinity, zero-drop warm cross-shard migration, and
                   shard-loss recovery by s9 replay.  With --feeds, polls
@@ -1341,7 +1697,15 @@ usage: soi <command> [options]
                   --telemetry the front exports its own soi.obs.v1 feed
                   (default PATH soi-front-feed.ndjson); --trace-sample-n N
                   traces every Nth forwarded frame end to end across the
-                  fleet (DESIGN.md s15, default 0 = off)
+                  fleet (DESIGN.md s15, default 0 = off).  --heartbeat-ms N
+                  probes every shard with Ping each N ms (default 0 = off);
+                  after --miss-budget silent ticks (default 3) a stalled
+                  shard is declared suspect and its sessions migrate off,
+                  and a lost shard rejoins automatically when it returns.
+                  --retry-budget caps recovery resends per session
+                  (default 1024) and --min-live-shards (default 1) sheds
+                  new admissions with a typed Overloaded while the fleet
+                  is degraded (DESIGN.md s16)
   wire-smoke [variant] [--streams N] [--frames N] [--workers N] [--seed S]
                   [--feeds P1,P2] [--front-feed P] [--snapshot-ms N]
                   [--trace-sample-n N]
@@ -1353,6 +1717,20 @@ usage: soi <command> [options]
                   --front-feed exports the front's own feed and
                   --trace-sample-n N samples cross-shard traces, so the
                   three feeds exercise `soi aggregate-feeds`
+  chaos-smoke [variant] [--streams N] [--frames N] [--workers N] [--seed S]
+                  [--chaos-seed S] [--events N] [--span N] [--heartbeat-ms N]
+                  [--miss-budget N] [--retry-budget N] [--front-feed P]
+                  [--snapshot-ms N]
+                  fleet-survival smoke (DESIGN.md s16, what CI runs):
+                  front + 3 loopback shards behind deterministic chaos
+                  proxies; a seeded plan kills, stalls, partitions and
+                  corrupts shard links on frame-count ticks while seeded
+                  streams are served.  Every stream must finish
+                  bit-identical to unfaulted single-process serving or
+                  end in a typed Overloaded/ShardLost error; a wrong,
+                  duplicated or silently dropped frame exits nonzero.
+                  --chaos-seed picks the fault plan (default 7, --events
+                  episodes spread over --span ticks each)
   denoise <variant> [--frames N] [--dtype f32|int8]
 options: --artifacts DIR  --results DIR  --n-eval N  --seed S
 serve/denoise accept preset specs (stmc, scc<p>, scc<p>_<q>, sscc<p>,

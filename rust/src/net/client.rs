@@ -8,8 +8,17 @@
 //! streams through the fleet with the same round-robin interleaving as
 //! single-process [`crate::coordinator::Server::run`], so the two
 //! paths are bit-comparable.
+//!
+//! [`serve_streams_with_retry`] survives connection loss (DESIGN.md
+//! §16): it re-dials with exponential backoff and replays every
+//! unfinished stream from frame 0 — the server retires a connection's
+//! sessions with it, so resume is a cold replay — deduplicating the
+//! re-emitted prefix below each stream's high-water mark.
+//! Deterministic serving makes the merged outputs bit-identical to an
+//! unfaulted run.
 
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -124,6 +133,7 @@ impl WireClient {
                     last: i + 1 == frames.len(),
                     samples: frames[i].clone(),
                     trace: None,
+                    deadline_us: None,
                 };
                 if let Err(e) = write_msg(&mut self.writer, &msg) {
                     // Keep draining the reader: the server's reply
@@ -142,6 +152,132 @@ impl WireClient {
             Err(e) => Err(send_failure.unwrap_or(e)),
         }
     }
+
+    /// One recovery attempt for [`serve_streams_with_retry`]: replay
+    /// every unfinished stream from frame 0, fold freshly-delivered
+    /// outputs into `outs`, and report how the attempt ended.
+    fn resume_streams(
+        &mut self,
+        streams: &[Vec<Vec<f32>>],
+        outs: &mut [Vec<Vec<f32>>],
+        deadline_us: Option<u64>,
+    ) -> Result<Attempt> {
+        let n = streams.len();
+        // High-water marks: outputs below these are the replayed
+        // prefix re-emitting deterministically — expected duplicates.
+        let base: Vec<usize> = outs.iter().map(Vec::len).collect();
+        let todo: Vec<usize> = (0..n).filter(|&sid| base[sid] < streams[sid].len()).collect();
+        let expected_new: usize = todo.iter().map(|&sid| streams[sid].len() - base[sid]).sum();
+        if expected_new == 0 {
+            return Ok(Attempt::Done);
+        }
+
+        let reader = self.reader.take().expect("reader present");
+        let collector = {
+            let base = base.clone();
+            thread::spawn(move || collect_resumed(reader, base, expected_new))
+        };
+
+        let max_len = todo.iter().map(|&sid| streams[sid].len()).max().unwrap_or(0);
+        'send: for i in 0..max_len {
+            for &sid in &todo {
+                let frames = &streams[sid];
+                if i >= frames.len() {
+                    continue;
+                }
+                let msg = Msg::Frame {
+                    session: sid as u64,
+                    seq: i as u64,
+                    last: i + 1 == frames.len(),
+                    samples: frames[i].clone(),
+                    trace: None,
+                    deadline_us,
+                };
+                if write_msg(&mut self.writer, &msg).is_err() {
+                    // The collector explains the disconnect (or keeps
+                    // harvesting outputs the server already emitted).
+                    break 'send;
+                }
+            }
+        }
+
+        let (reader, fresh, outcome) = collector.join().map_err(|_| anyhow!("reader panicked"))?;
+        self.reader = Some(reader);
+        for (sid, mut new) in fresh.into_iter().enumerate() {
+            outs[sid].append(&mut new);
+        }
+        outcome
+    }
+}
+
+/// How one [`WireClient::resume_streams`] attempt ended.
+enum Attempt {
+    /// Every expected output is in.
+    Done,
+    /// The connection died mid-serve; retry with what was harvested.
+    Lost,
+}
+
+/// Reconnect policy for [`serve_streams_with_retry`].
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Dial attempts (including the first) before giving up.
+    pub max_attempts: u32,
+    /// First backoff in milliseconds; doubles per failed attempt.
+    pub backoff_ms: u64,
+    /// Optional recovery deadline declared to the front on every
+    /// frame, in microseconds since the session's last delivered
+    /// output (DESIGN.md §16).  `None` keeps encodings byte-identical
+    /// to plain `soi.wire.v1`.
+    pub deadline_us: Option<u64>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 5,
+            backoff_ms: 10,
+            deadline_us: None,
+        }
+    }
+}
+
+/// Serve `streams` like [`WireClient::serve_streams`], surviving
+/// connection loss: each failed dial or mid-serve disconnect backs
+/// off exponentially, re-dials, and replays every unfinished stream
+/// from frame 0, deduplicating the re-emitted prefix below each
+/// stream's high-water mark.  A typed server `Err` is a refusal, not
+/// a fault — it fails fast without retrying.
+pub fn serve_streams_with_retry(
+    transport: &dyn Transport,
+    streams: &[Vec<Vec<f32>>],
+    policy: RetryPolicy,
+) -> Result<Vec<Vec<Vec<f32>>>> {
+    let mut outs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); streams.len()];
+    let mut backoff = policy.backoff_ms.max(1);
+    let mut last_err = anyhow!("no dial attempted");
+    for attempt in 0..policy.max_attempts.max(1) {
+        if attempt > 0 {
+            thread::sleep(Duration::from_millis(backoff));
+            backoff = backoff.saturating_mul(2);
+        }
+        let mut client = match WireClient::connect(transport) {
+            Ok(c) => c,
+            Err(e) => {
+                last_err = e;
+                continue;
+            }
+        };
+        match client.resume_streams(streams, &mut outs, policy.deadline_us) {
+            Ok(Attempt::Done) => return Ok(outs),
+            Ok(Attempt::Lost) => last_err = anyhow!("connection lost mid-serve"),
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last_err.context(format!(
+        "gave up after {} attempts",
+        policy.max_attempts.max(1)
+    )))
 }
 
 type TakenReader = FrameReader<Box<dyn WireRead>>;
@@ -186,4 +322,74 @@ fn collect_outputs(
         }
     }
     (reader, Ok(outs))
+}
+
+/// Collect outputs for a resumed serve until `expected_new` fresh
+/// ones arrive: outputs below a session's high-water mark are the
+/// deterministic replay of the already-delivered prefix (dropped),
+/// the output at the mark is fresh (kept), and any other seq is a
+/// protocol violation.  A disconnect ends the attempt retryably with
+/// whatever was harvested; a typed server `Err` fails it for good.
+fn collect_resumed(
+    mut reader: TakenReader,
+    base: Vec<usize>,
+    expected_new: usize,
+) -> (TakenReader, Vec<Vec<Vec<f32>>>, Result<Attempt>) {
+    let n = base.len();
+    let mut fresh: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+    let mut got = 0usize;
+    while got < expected_new {
+        match reader.next_msg() {
+            Ok(Some(Msg::FrameOut {
+                session,
+                seq,
+                samples,
+                ..
+            })) => {
+                let sid = session as usize;
+                if sid >= n {
+                    let e = anyhow!("output for unknown session {session}");
+                    return (reader, fresh, Err(e));
+                }
+                let s = seq as usize;
+                if s < base[sid] {
+                    continue; // replayed prefix re-emitting
+                }
+                let have = base[sid] + fresh[sid].len();
+                if s != have {
+                    let e = anyhow!("session {session} output seq {seq}, expected {have}");
+                    return (reader, fresh, Err(e));
+                }
+                fresh[sid].push(samples);
+                got += 1;
+            }
+            Ok(Some(Msg::Err {
+                code,
+                session,
+                detail,
+            })) => {
+                let e = anyhow!("server error {} on session {session}: {detail}", code.name());
+                return (reader, fresh, Err(e));
+            }
+            Ok(Some(other)) => {
+                let e = anyhow!("unexpected {} mid-serve", other.kind());
+                return (reader, fresh, Err(e));
+            }
+            Ok(None) => return (reader, fresh, Ok(Attempt::Lost)),
+            Err(e)
+                if matches!(
+                    e,
+                    WireError::UnknownTag { .. }
+                        | WireError::Malformed { .. }
+                        | WireError::VersionSkew { .. }
+                ) =>
+            {
+                // In-band, well-delimited junk: the reader already
+                // resynchronized past it; keep collecting.
+                continue;
+            }
+            Err(_) => return (reader, fresh, Ok(Attempt::Lost)),
+        }
+    }
+    (reader, fresh, Ok(Attempt::Done))
 }

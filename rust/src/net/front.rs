@@ -20,15 +20,31 @@
 //! Faults on one connection — truncated frames, version skew, a
 //! mid-stream disconnect — answer with one typed `Err` (or just drop
 //! that connection) and never touch sibling sessions.
+//!
+//! Liveness and survival (DESIGN.md §16): with
+//! [`FrontPolicy::heartbeat_ms`] on, a ticker probes every shard with
+//! `Ping` each tick; a shard that stays silent for
+//! [`FrontPolicy::miss_budget`] consecutive ticks is declared
+//! *suspect* and its sessions migrate off while the socket is still
+//! open.  Lost or suspect shards are re-dialed with exponential
+//! backoff; a successful re-`Hello` re-admits the shard into
+//! placement (`shard_rejoin`) and the cluster controller rebalances
+//! streams back.  Recovery replays are budgeted: each session may
+//! carry an optional client-declared deadline and is bounded by
+//! [`FrontPolicy::retry_budget`] resent frames — past either, the
+//! session is shed with a typed [`ErrCode::Overloaded`] instead of
+//! replayed, and when fewer than [`FrontPolicy::min_live_shards`]
+//! shards are reachable new admissions shed the same way.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::transport::{Listener, Transport, WireWrite};
+use super::transport::{Listener, Transport, WireRead, WireWrite};
 use super::wire::{role, write_msg, ErrCode, FrameReader, Msg, WireError, DRAIN_ALL, WIRE_VERSION};
 use crate::obs::{Counter, ObsHandle, SpanKind, Telemetry, TraceCtx, TraceSampler};
 
@@ -51,6 +67,20 @@ pub struct FrontPolicy {
     /// 0 — the default — disables tracing entirely and keeps wire
     /// encodings byte-identical to untraced `soi.wire.v1`.
     pub trace_sample_n: u64,
+    /// Heartbeat tick interval in milliseconds; 0 — the default —
+    /// disables liveness probing entirely (no `Ping` ever hits the
+    /// wire, encodings stay plain `soi.wire.v1`).
+    pub heartbeat_ms: u64,
+    /// Consecutive silent ticks before a still-connected shard is
+    /// declared suspect and its sessions migrate off (DESIGN.md §16).
+    pub miss_budget: u32,
+    /// Frames one session may have re-sent across recovery replays
+    /// before it is shed with [`ErrCode::Overloaded`].
+    pub retry_budget: u64,
+    /// Reachable shards required to admit new sessions; below this
+    /// the front runs degraded and sheds admissions with
+    /// [`ErrCode::Overloaded`].
+    pub min_live_shards: usize,
 }
 
 impl Default for FrontPolicy {
@@ -58,6 +88,10 @@ impl Default for FrontPolicy {
         FrontPolicy {
             max_sessions: 64,
             trace_sample_n: 0,
+            heartbeat_ms: 0,
+            miss_budget: 3,
+            retry_budget: 1024,
+            min_live_shards: 1,
         }
     }
 }
@@ -81,7 +115,21 @@ pub struct FrontReport {
     pub shard_losses: u64,
     /// Typed wire faults observed on either side.
     pub wire_errs: u64,
+    /// Heartbeat ticks where a shard had an unanswered `Ping`.
+    pub heartbeat_misses: u64,
+    /// Shards declared suspect after exhausting the miss budget.
+    pub shard_suspects: u64,
+    /// Shards re-admitted into placement after a reconnect.
+    pub shard_rejoins: u64,
+    /// Frames re-sent by recovery replays.
+    pub frames_retried: u64,
+    /// Sessions/admissions shed with [`ErrCode::Overloaded`].
+    pub shed: u64,
 }
+
+/// A freshly handshaken shard connection: buffered reader, write
+/// half, and the `(feat, period, warmup)` shape the shard announced.
+type ShardDuplex = (FrameReader<Box<dyn WireRead>>, Box<dyn WireWrite>, (u32, u32, u32));
 
 /// Everything the router can be woken by.
 enum FrontEvent {
@@ -89,8 +137,15 @@ enum FrontEvent {
     NewConn(u64, Box<dyn WireWrite>),
     /// A client connection's reader produced a message (or died).
     FromClient(u64, Result<Option<Msg>, WireError>),
-    /// A shard connection's reader produced a message (or died).
-    FromShard(usize, Result<Option<Msg>, WireError>),
+    /// A shard connection's reader produced a message (or died).  The
+    /// epoch stamps which connection generation the reader belongs
+    /// to; events from a connection that predates a rejoin are stale
+    /// and dropped.
+    FromShard(usize, u64, Result<Option<Msg>, WireError>),
+    /// Heartbeat tick: probe liveness, judge suspects, drive rejoins.
+    Tick,
+    /// A rejoin attempt finished (`None`: dial or handshake failed).
+    Rejoined(usize, Option<ShardDuplex>),
     /// Operator command: move `session` to shard `to`.
     Migrate { session: u64, to: usize },
     /// Operator command: move one session off shard `from` onto `to`
@@ -104,11 +159,28 @@ enum FrontEvent {
 struct ShardConn {
     name: String,
     writer: Box<dyn WireWrite>,
+    /// Retained so a lost shard can be re-dialed for rejoin.
+    transport: Arc<dyn Transport>,
     /// Cleared on the first failed write; its reader soon reports too.
     reachable: bool,
     /// Set once [`lose_shard`] has re-homed the orphans, whichever of
     /// the write or read side noticed the death first.
     lost: bool,
+    /// Connection generation; bumped on every rejoin so reader events
+    /// from a dead connection cannot be misattributed to the new one.
+    epoch: u64,
+    /// `Ping`s sent since the last `Pong` (consecutive silent ticks).
+    pending_pings: u32,
+    /// Next `Ping` seq.
+    next_ping: u64,
+    /// Ticks to wait before the next rejoin attempt.
+    rejoin_wait: u64,
+    /// Current backoff width in ticks; doubles per failed attempt.
+    rejoin_backoff: u64,
+    /// Rejoin attempts since the shard was first lost.
+    rejoin_attempts: u64,
+    /// A rejoin dial/handshake is running on a helper thread.
+    rejoin_inflight: bool,
 }
 
 struct ConnState {
@@ -134,6 +206,15 @@ struct SessionState {
     held: VecDeque<(u64, bool, Vec<f32>)>,
     /// Planned migration target, if one is pending.
     migrating_to: Option<usize>,
+    /// Frames re-sent by recovery replays, counted against
+    /// [`FrontPolicy::retry_budget`].
+    retries: u64,
+    /// Client-declared recovery deadline (µs since last progress);
+    /// the latest frame's declaration wins.
+    deadline_us: Option<u64>,
+    /// Last time an output was delivered (admission time initially) —
+    /// the reference point for the deadline.
+    last_progress: Instant,
 }
 
 /// A running front-end.  Dropping the handle abandons the router;
@@ -204,8 +285,8 @@ pub fn spawn_front_with(
     let mut shard_conns = Vec::with_capacity(shards.len());
     let mut shape: Option<(u32, u32, u32)> = None;
     for (idx, link) in shards.into_iter().enumerate() {
-        let (r, mut w) = link
-            .transport
+        let transport: Arc<dyn Transport> = Arc::from(link.transport);
+        let (r, mut w) = transport
             .connect()
             .map_err(|e| anyhow!("shard '{}' unreachable: {e}", link.name))?;
         let hello = Msg::Hello {
@@ -245,18 +326,20 @@ pub fn spawn_front_with(
             Some(_) => {}
         }
         // Reader thread keeps the (already buffered) FrameReader.
-        let shard_tx = tx.clone();
-        thread::spawn(move || {
-            pump_reader(reader, move |item| {
-                let fatal = is_fatal(&item);
-                shard_tx.send(FrontEvent::FromShard(idx, item)).is_err() || fatal
-            })
-        });
+        spawn_shard_reader(idx, 0, reader, tx.clone());
         shard_conns.push(ShardConn {
             name: link.name,
             writer: w,
+            transport,
             reachable: true,
             lost: false,
+            epoch: 0,
+            pending_pings: 0,
+            next_ping: 0,
+            rejoin_wait: 0,
+            rejoin_backoff: 1,
+            rejoin_attempts: 0,
+            rejoin_inflight: false,
         });
     }
     let (feat, period, warmup) = shape.expect("nonempty fleet");
@@ -287,17 +370,77 @@ pub fn spawn_front_with(
         }
     });
 
+    // Heartbeat ticker: wakes the router to probe shard liveness and
+    // drive rejoins.  Exits once the router drops its receiver.
+    if policy.heartbeat_ms > 0 {
+        let tick_tx = tx.clone();
+        let ms = policy.heartbeat_ms;
+        thread::spawn(move || loop {
+            thread::sleep(Duration::from_millis(ms));
+            if tick_tx.send(FrontEvent::Tick).is_err() {
+                return;
+            }
+        });
+    }
+
     let fo = FrontObs {
         obs: telemetry.map(|t| t.shared()),
         sampler: TraceSampler::new(policy.trace_sample_n),
     };
-    let router =
-        thread::spawn(move || run_router(rx, shard_conns, policy, fo, feat, period, warmup));
+    let router_tx = tx.clone();
+    let router = thread::spawn(move || {
+        run_router(rx, router_tx, shard_conns, policy, fo, feat, period, warmup)
+    });
     Ok(FrontHandle {
         tx,
         router: Some(router),
         listener,
     })
+}
+
+/// Spawn the reader thread for shard `idx`'s connection generation
+/// `epoch`; shared by the initial handshake and every rejoin.
+fn spawn_shard_reader(
+    idx: usize,
+    epoch: u64,
+    reader: FrameReader<Box<dyn WireRead>>,
+    tx: Sender<FrontEvent>,
+) {
+    thread::spawn(move || {
+        pump_reader(reader, move |item| {
+            let fatal = is_fatal(&item);
+            tx.send(FrontEvent::FromShard(idx, epoch, item)).is_err() || fatal
+        })
+    });
+}
+
+/// Dial + handshake one shard for rejoin: the front speaks first, the
+/// shard must ack as [`role::SHARD`].  Runs on a helper thread so a
+/// half-up endpoint never blocks the router.
+fn connect_shard(transport: &dyn Transport) -> Result<ShardDuplex, WireError> {
+    let (r, mut w) = transport.connect()?;
+    let hello = Msg::Hello {
+        version: WIRE_VERSION,
+        role: role::FRONT,
+        feat: 0,
+        period: 0,
+        warmup: 0,
+    };
+    write_msg(&mut w, &hello)?;
+    let mut reader = FrameReader::new(r);
+    let ack = reader.next_msg()?.ok_or(WireError::Closed)?;
+    match ack {
+        Msg::Hello {
+            role: r_role,
+            feat,
+            period,
+            warmup,
+            ..
+        } if r_role == role::SHARD => Ok((reader, w, (feat, period, warmup))),
+        other => Err(WireError::Malformed {
+            reason: format!("rejoin handshake: shard greeted with {}", other.kind()),
+        }),
+    }
 }
 
 /// Drive a [`FrameReader`] until `deliver` says stop (it returns true
@@ -373,6 +516,31 @@ impl FrontObs {
         }
         Some(TraceCtx::root(id, SpanKind::MigrateFront))
     }
+
+    /// Recovery replays are rare and always worth linking: when
+    /// sampling is on at all, every re-home records a `front_retry`
+    /// root span naming the session, tail size, and new home.
+    fn trace_retry(&mut self, session: u64, resent: u64, shard: usize) {
+        if !self.sampler.enabled() {
+            return;
+        }
+        let id = self.sampler.force();
+        if let Some(h) = &self.obs {
+            h.span(id, SpanKind::FrontRetry, 0, session, resent, shard as u64);
+        }
+    }
+
+    /// Every re-admission records a `shard_rejoin` root span naming
+    /// the shard and how many dials it took.
+    fn trace_rejoin(&mut self, shard: usize, attempts: u64) {
+        if !self.sampler.enabled() {
+            return;
+        }
+        let id = self.sampler.force();
+        if let Some(h) = &self.obs {
+            h.span(id, SpanKind::ShardRejoin, 0, shard as u64, attempts, 0);
+        }
+    }
 }
 
 fn send_to_shard(shards: &mut [ShardConn], idx: usize, msg: &Msg, fo: &FrontObs) -> bool {
@@ -442,6 +610,7 @@ fn pick_shard(
 #[allow(clippy::too_many_arguments)]
 fn run_router(
     rx: Receiver<FrontEvent>,
+    tx: Sender<FrontEvent>,
     mut shards: Vec<ShardConn>,
     policy: FrontPolicy,
     mut fo: FrontObs,
@@ -511,48 +680,81 @@ fn run_router(
                     }
                 }
             },
-            FrontEvent::FromShard(idx, item) => match item {
-                Ok(Some(msg)) => {
-                    fo.count(Counter::WireRxMsgs, 1);
-                    handle_shard_msg(
-                        idx,
-                        msg,
-                        &mut conns,
-                        &mut sessions,
-                        &mut shards,
-                        &mut fo,
-                        feat,
-                        warmup,
-                        &mut report,
-                    );
+            FrontEvent::FromShard(idx, epoch, item) => {
+                if epoch != shards[idx].epoch {
+                    // Stale reader event from a connection generation
+                    // that predates a rejoin; drop it.
+                    continue;
                 }
-                Ok(None) => {
-                    lose_shard(
-                        idx,
-                        &mut conns,
-                        &mut sessions,
-                        &mut shards,
-                        &mut fo,
-                        feat,
-                        &mut report,
-                    );
-                }
-                Err(e) => {
-                    report.wire_errs += 1;
-                    fo.count(Counter::WireErrs, 1);
-                    if is_fatal(&Err(e)) {
+                match item {
+                    Ok(Some(msg)) => {
+                        fo.count(Counter::WireRxMsgs, 1);
+                        handle_shard_msg(
+                            idx,
+                            msg,
+                            &mut conns,
+                            &mut sessions,
+                            &mut shards,
+                            &policy,
+                            &mut fo,
+                            feat,
+                            warmup,
+                            &mut report,
+                        );
+                    }
+                    Ok(None) => {
                         lose_shard(
                             idx,
                             &mut conns,
                             &mut sessions,
                             &mut shards,
+                            &policy,
                             &mut fo,
                             feat,
                             &mut report,
                         );
                     }
+                    Err(e) => {
+                        report.wire_errs += 1;
+                        fo.count(Counter::WireErrs, 1);
+                        if is_fatal(&Err(e)) {
+                            lose_shard(
+                                idx,
+                                &mut conns,
+                                &mut sessions,
+                                &mut shards,
+                                &policy,
+                                &mut fo,
+                                feat,
+                                &mut report,
+                            );
+                        }
+                    }
                 }
-            },
+            }
+            FrontEvent::Tick => {
+                heartbeat_tick(
+                    &tx,
+                    &mut conns,
+                    &mut sessions,
+                    &mut shards,
+                    &policy,
+                    &mut fo,
+                    feat,
+                    &mut report,
+                );
+            }
+            FrontEvent::Rejoined(idx, conn) => {
+                finish_rejoin(
+                    idx,
+                    conn,
+                    &tx,
+                    &mut shards,
+                    &mut fo,
+                    (feat, period, warmup),
+                    &mut report,
+                );
+            }
             FrontEvent::Migrate { session, to } => {
                 start_migration(
                     session,
@@ -560,6 +762,7 @@ fn run_router(
                     &mut conns,
                     &mut sessions,
                     &mut shards,
+                    &policy,
                     &mut fo,
                     feat,
                     &mut report,
@@ -580,6 +783,7 @@ fn run_router(
                         &mut conns,
                         &mut sessions,
                         &mut shards,
+                        &policy,
                         &mut fo,
                         feat,
                         &mut report,
@@ -598,6 +802,116 @@ fn run_router(
         c.writer.shutdown();
     }
     report
+}
+
+/// Longest rejoin backoff, in heartbeat ticks.
+const MAX_REJOIN_BACKOFF: u64 = 32;
+
+/// One heartbeat tick (DESIGN.md §16): probe live shards with `Ping`,
+/// declare those past the miss budget suspect and migrate their
+/// sessions off while the socket is still open, and drive
+/// backoff-gated rejoin attempts for lost shards.
+#[allow(clippy::too_many_arguments)]
+fn heartbeat_tick(
+    tx: &Sender<FrontEvent>,
+    conns: &mut HashMap<u64, ConnState>,
+    sessions: &mut HashMap<u64, SessionState>,
+    shards: &mut [ShardConn],
+    policy: &FrontPolicy,
+    fo: &mut FrontObs,
+    feat: u32,
+    report: &mut FrontReport,
+) {
+    for idx in 0..shards.len() {
+        if shards[idx].lost {
+            maybe_rejoin(idx, tx, shards);
+            continue;
+        }
+        if !shards[idx].reachable {
+            continue; // write side died; the reader reports shortly
+        }
+        if shards[idx].pending_pings > 0 {
+            report.heartbeat_misses += 1;
+            fo.count(Counter::HeartbeatMiss, 1);
+        }
+        if shards[idx].pending_pings >= policy.miss_budget {
+            // Stalled but still connected: declare it suspect and move
+            // the sessions off before the socket dies on its own.
+            report.shard_suspects += 1;
+            fo.count(Counter::ShardSuspect, 1);
+            lose_shard(idx, conns, sessions, shards, policy, fo, feat, report);
+            continue;
+        }
+        let seq = shards[idx].next_ping;
+        shards[idx].next_ping += 1;
+        shards[idx].pending_pings += 1;
+        if !send_to_shard(shards, idx, &Msg::Ping { seq }, fo) {
+            lose_shard(idx, conns, sessions, shards, policy, fo, feat, report);
+        }
+    }
+}
+
+/// Start one rejoin attempt for a lost shard if its backoff window
+/// has elapsed and no attempt is already running.  The dial +
+/// handshake run on a helper thread and answer with
+/// [`FrontEvent::Rejoined`] so a half-up endpoint never blocks the
+/// router.
+fn maybe_rejoin(idx: usize, tx: &Sender<FrontEvent>, shards: &mut [ShardConn]) {
+    let s = &mut shards[idx];
+    if s.rejoin_inflight {
+        return;
+    }
+    if s.rejoin_wait > 0 {
+        s.rejoin_wait -= 1;
+        return;
+    }
+    s.rejoin_inflight = true;
+    s.rejoin_attempts += 1;
+    let transport = Arc::clone(&s.transport);
+    let tx = tx.clone();
+    thread::spawn(move || {
+        let conn = connect_shard(transport.as_ref()).ok();
+        let _ = tx.send(FrontEvent::Rejoined(idx, conn));
+    });
+}
+
+/// A rejoin attempt came back: on success (and a matching model
+/// shape) re-admit the shard into placement under a new connection
+/// epoch; on failure widen the backoff.
+fn finish_rejoin(
+    idx: usize,
+    conn: Option<ShardDuplex>,
+    tx: &Sender<FrontEvent>,
+    shards: &mut [ShardConn],
+    fo: &mut FrontObs,
+    fleet_shape: (u32, u32, u32),
+    report: &mut FrontReport,
+) {
+    shards[idx].rejoin_inflight = false;
+    let shape_ok = matches!(&conn, Some((_, _, shape)) if *shape == fleet_shape);
+    let Some((reader, writer, _)) = conn.filter(|_| shape_ok) else {
+        // Dial failed, handshake failed, or the endpoint now serves a
+        // different model: back off and retry later.
+        let s = &mut shards[idx];
+        s.rejoin_wait = s.rejoin_backoff;
+        s.rejoin_backoff = (s.rejoin_backoff * 2).min(MAX_REJOIN_BACKOFF);
+        return;
+    };
+    let s = &mut shards[idx];
+    s.epoch += 1;
+    let epoch = s.epoch;
+    s.writer = writer;
+    s.reachable = true;
+    s.lost = false;
+    s.pending_pings = 0;
+    s.rejoin_wait = 0;
+    s.rejoin_backoff = 1;
+    let attempts = s.rejoin_attempts;
+    s.rejoin_attempts = 0;
+    report.shard_rejoins += 1;
+    fo.count(Counter::ShardRejoin, 1);
+    fo.trace_rejoin(idx, attempts);
+    spawn_shard_reader(idx, epoch, reader, tx.clone());
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -652,6 +966,7 @@ fn handle_client_msg(
             seq,
             last,
             samples,
+            deadline_us,
             ..
         } => {
             if !greeted {
@@ -716,6 +1031,28 @@ fn handle_client_msg(
                     );
                     return;
                 }
+                // Degraded mode: with fewer reachable shards than
+                // policy demands, shed new admissions instead of
+                // overloading the survivors (DESIGN.md §16).
+                let live = shards.iter().filter(|s| s.reachable).count();
+                if live < policy.min_live_shards {
+                    report.shed += 1;
+                    report.wire_errs += 1;
+                    fo.count(Counter::AdmissionShed, 1);
+                    let detail =
+                        format!("fleet degraded: {live} of {} shards live", shards.len());
+                    send_to_conn(
+                        conns,
+                        conn,
+                        &Msg::Err {
+                            code: ErrCode::Overloaded,
+                            session,
+                            detail,
+                        },
+                        fo,
+                    );
+                    return;
+                }
                 let Some(target) = pick_shard(shards, sessions, None) else {
                     report.wire_errs += 1;
                     send_to_conn(
@@ -743,6 +1080,9 @@ fn handle_client_msg(
                         inflight: VecDeque::new(),
                         held: VecDeque::new(),
                         migrating_to: None,
+                        retries: 0,
+                        deadline_us: None,
+                        last_progress: Instant::now(),
                     },
                 );
             }
@@ -778,6 +1118,11 @@ fn handle_client_msg(
             }
             sess.next_seq += 1;
             report.frames_in += 1;
+            // The deadline is a front-side recovery contract: the
+            // latest declaration wins, and shards never see it.
+            if deadline_us.is_some() {
+                sess.deadline_us = deadline_us;
+            }
             if sess.migrating_to.is_some() {
                 sess.held.push_back((seq, last, samples));
                 return;
@@ -794,9 +1139,10 @@ fn handle_client_msg(
                 last,
                 samples,
                 trace: fo.sample_frame(session, seq, shard),
+                deadline_us: None,
             };
             if !send_to_shard(shards, shard, &frame, fo) {
-                lose_shard(shard, conns, sessions, shards, fo, feat, report);
+                lose_shard(shard, conns, sessions, shards, policy, fo, feat, report);
             }
         }
         Msg::Drain { session } => {
@@ -814,6 +1160,13 @@ fn handle_client_msg(
             if sessions.get(&session).map(|s| s.conn) == Some(conn) {
                 retire_session(session, sessions, shards, fo);
             }
+        }
+        Msg::Ping { seq } => {
+            // Client-side liveness probe; answer even before hello.
+            send_to_conn(conns, conn, &Msg::Pong { seq }, fo);
+        }
+        Msg::Pong { .. } => {
+            // Late reply to nothing the front asked; ignore.
         }
         Msg::Migrate { .. } | Msg::FrameOut { .. } | Msg::Err { .. } => {
             report.wire_errs += 1;
@@ -838,6 +1191,7 @@ fn handle_shard_msg(
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    policy: &FrontPolicy,
     fo: &mut FrontObs,
     feat: u32,
     warmup: u32,
@@ -869,6 +1223,7 @@ fn handle_shard_msg(
                 return;
             }
             sess.acked += 1;
+            sess.last_progress = Instant::now();
             sess.history.push_back(frame);
             while sess.history.len() > warmup as usize {
                 sess.history.pop_front();
@@ -901,7 +1256,7 @@ fn handle_shard_msg(
                 return;
             }
             if move_now {
-                complete_migration(session, conns, sessions, shards, fo, feat, report);
+                complete_migration(session, conns, sessions, shards, policy, fo, feat, report);
             }
         }
         Msg::Err {
@@ -929,8 +1284,16 @@ fn handle_shard_msg(
                 }
             }
         }
+        Msg::Pong { .. } => {
+            // Liveness reply: the shard answered everything we asked.
+            shards[idx].pending_pings = 0;
+        }
         // Shards never originate anything else after the handshake.
-        Msg::Hello { .. } | Msg::Frame { .. } | Msg::Migrate { .. } | Msg::Drain { .. } => {
+        Msg::Hello { .. }
+        | Msg::Frame { .. }
+        | Msg::Migrate { .. }
+        | Msg::Drain { .. }
+        | Msg::Ping { .. } => {
             report.wire_errs += 1;
             fo.count(Counter::WireErrs, 1);
         }
@@ -946,6 +1309,7 @@ fn start_migration(
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    policy: &FrontPolicy,
     fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
@@ -958,17 +1322,19 @@ fn start_migration(
     }
     sess.migrating_to = Some(to);
     if sess.inflight.is_empty() {
-        complete_migration(session, conns, sessions, shards, fo, feat, report);
+        complete_migration(session, conns, sessions, shards, policy, fo, feat, report);
     }
 }
 
 /// The inflight window is empty: retire the session on the old shard,
 /// re-create it on the target by §9 replay, and flush held frames.
+#[allow(clippy::too_many_arguments)]
 fn complete_migration(
     session: u64,
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    policy: &FrontPolicy,
     fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
@@ -996,27 +1362,34 @@ fn complete_migration(
         // Target died at handoff.  The old shard already dropped the
         // session, so this is now a crash re-home, not a cancel.
         sess.shard = to;
-        rehome_session(session, conns, sessions, shards, fo, feat, report);
+        rehome_session(session, conns, sessions, shards, policy, fo, feat, report);
         return;
     }
     sess.shard = to;
     report.migrations += 1;
+    // Stage every held frame as inflight *before* the first send: if
+    // the target dies mid-flush, lose_shard re-homes the whole tail
+    // instead of dropping whatever a local buffer still held (the
+    // drain-vs-migration race — the old shard has already been sent
+    // its Drain, so these frames exist nowhere else).
     let held: Vec<(u64, bool, Vec<f32>)> = sess.held.drain(..).collect();
+    for (seq, last, samples) in &held {
+        sess.inflight.push_back((*seq, *last, samples.clone()));
+    }
+    sess.sent += held.len() as u64;
     for (seq, last, samples) in held {
-        let sess = sessions.get_mut(&session).expect("still live");
-        sess.inflight.push_back((seq, last, samples.clone()));
-        sess.sent += 1;
         let frame = Msg::Frame {
             session,
             seq,
             last,
             samples,
             trace: None,
+            deadline_us: None,
         };
         if !send_to_shard(shards, to, &frame, fo) {
-            // The frame is recorded inflight; losing the shard now
-            // re-homes the session and re-sends the tail.
-            lose_shard(to, conns, sessions, shards, fo, feat, report);
+            // Every held frame is recorded inflight; losing the shard
+            // now re-homes the session and re-sends the full tail.
+            lose_shard(to, conns, sessions, shards, policy, fo, feat, report);
             return;
         }
     }
@@ -1026,11 +1399,13 @@ fn complete_migration(
 /// and re-home every session *homed* on it by §9 replay — including a
 /// re-send of the unacked tail, whose outputs the dead shard will
 /// never deliver.
+#[allow(clippy::too_many_arguments)]
 fn lose_shard(
     idx: usize,
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    policy: &FrontPolicy,
     fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
@@ -1041,6 +1416,7 @@ fn lose_shard(
     shards[idx].lost = true;
     shards[idx].reachable = false;
     shards[idx].writer.shutdown();
+    shards[idx].pending_pings = 0;
     report.shard_losses += 1;
     let nominated: Vec<u64> = sessions
         .iter()
@@ -1048,7 +1424,7 @@ fn lose_shard(
         .map(|(id, _)| *id)
         .collect();
     for sid in nominated {
-        cancel_migration(sid, conns, sessions, shards, fo, feat, report);
+        cancel_migration(sid, conns, sessions, shards, policy, fo, feat, report);
     }
     let orphans: Vec<u64> = sessions
         .iter()
@@ -1056,17 +1432,19 @@ fn lose_shard(
         .map(|(id, _)| *id)
         .collect();
     for sid in orphans {
-        rehome_session(sid, conns, sessions, shards, fo, feat, report);
+        rehome_session(sid, conns, sessions, shards, policy, fo, feat, report);
     }
 }
 
 /// A planned migration's target died before the handoff: forget the
 /// nomination and flush held frames to the still-live current shard.
+#[allow(clippy::too_many_arguments)]
 fn cancel_migration(
     session: u64,
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    policy: &FrontPolicy,
     fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
@@ -1076,30 +1454,37 @@ fn cancel_migration(
     };
     sess.migrating_to = None;
     let shard = sess.shard;
+    // Stage-then-send, exactly as complete_migration: if the current
+    // shard dies mid-flush, the whole held tail is already inflight
+    // and the re-home replays it — nothing is dropped.
     let held: Vec<(u64, bool, Vec<f32>)> = sess.held.drain(..).collect();
+    for (seq, last, samples) in &held {
+        sess.inflight.push_back((*seq, *last, samples.clone()));
+    }
+    sess.sent += held.len() as u64;
     for (seq, last, samples) in held {
-        let sess = sessions.get_mut(&session).expect("still live");
-        sess.inflight.push_back((seq, last, samples.clone()));
-        sess.sent += 1;
         let frame = Msg::Frame {
             session,
             seq,
             last,
             samples,
             trace: None,
+            deadline_us: None,
         };
         if !send_to_shard(shards, shard, &frame, fo) {
-            lose_shard(shard, conns, sessions, shards, fo, feat, report);
+            lose_shard(shard, conns, sessions, shards, policy, fo, feat, report);
             return;
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn rehome_session(
     session: u64,
     conns: &mut HashMap<u64, ConnState>,
     sessions: &mut HashMap<u64, SessionState>,
     shards: &mut [ShardConn],
+    policy: &FrontPolicy,
     fo: &mut FrontObs,
     feat: u32,
     report: &mut FrontReport,
@@ -1109,6 +1494,38 @@ fn rehome_session(
             return;
         };
         sess.migrating_to = None;
+        // Budgeted recovery (DESIGN.md §16): a session whose replay
+        // would blow its retry budget, or whose client-declared
+        // deadline has already passed since the last delivered
+        // output, is shed with a typed `Overloaded` instead of
+        // replayed — bounded work under cascading failures.
+        let resend_n = (sess.inflight.len() + sess.held.len()) as u64;
+        let over_deadline = sess
+            .deadline_us
+            .map_or(false, |d| sess.last_progress.elapsed().as_micros() as u64 > d);
+        if over_deadline || sess.retries + resend_n > policy.retry_budget {
+            let conn = sess.conn;
+            let detail = if over_deadline {
+                format!("recovery deadline exceeded after {} retried frames", sess.retries)
+            } else {
+                format!("retry budget {} exhausted", policy.retry_budget)
+            };
+            sessions.remove(&session);
+            report.shed += 1;
+            report.wire_errs += 1;
+            fo.count(Counter::AdmissionShed, 1);
+            send_to_conn(
+                conns,
+                conn,
+                &Msg::Err {
+                    code: ErrCode::Overloaded,
+                    session,
+                    detail,
+                },
+                fo,
+            );
+            return;
+        }
         let Some(target) = pick_shard(shards, sessions, Some(sessions[&session].shard)) else {
             let conn = sessions[&session].conn;
             sessions.remove(&session);
@@ -1145,16 +1562,25 @@ fn rehome_session(
             .chain(sess.held.drain(..))
             .collect();
         sess.inflight.clear();
+        for (seq, last, samples) in &resend {
+            sess.inflight.push_back((*seq, *last, samples.clone()));
+        }
+        // Every replay attempt counts against the retry budget, even
+        // one cut short by the target dying mid-replay — that bounds
+        // total recovery work, not just successful recoveries.
+        sess.retries += resend.len() as u64;
+        report.frames_retried += resend.len() as u64;
+        fo.count(Counter::FramesRetried, resend.len() as u64);
+        fo.trace_retry(session, resend.len() as u64, target);
         let mut ok = true;
         for (seq, last, samples) in resend {
-            let sess = sessions.get_mut(&session).expect("still live");
-            sess.inflight.push_back((seq, last, samples.clone()));
             let frame = Msg::Frame {
                 session,
                 seq,
                 last,
                 samples,
                 trace: None,
+                deadline_us: None,
             };
             if !send_to_shard(shards, target, &frame, fo) {
                 ok = false;

@@ -28,12 +28,19 @@
 //!   `coordinator::LoadController`: pure rebalancing decisions from
 //!   per-shard `soi.obs.v1` health feeds.
 //! * [`client`] — a minimal blocking client used by the smoke
-//!   subcommand and the integration tests.
+//!   subcommand and the integration tests, with deadline-budgeted
+//!   reconnect-and-replay recovery ([`serve_streams_with_retry`]).
+//! * [`chaos`] — a deterministic fault-injection proxy: seeded
+//!   kill/stall/partition/corrupt plans executed on frame-boundary
+//!   ticks, with exact drop accounting, driving the survival tests
+//!   and the `chaos-smoke` subcommand.
 //!
 //! DESIGN.md §14 documents the frame grammar, the shard lifecycle and
-//! the fault-matrix semantics.
+//! the fault-matrix semantics; §16 covers liveness, rejoin and the
+//! chaos-plan format.
 
 pub mod balance;
+pub mod chaos;
 pub mod client;
 pub mod front;
 pub mod loopback;
@@ -43,7 +50,8 @@ pub mod transport;
 pub mod wire;
 
 pub use balance::{health_from_feed, ClusterController, ClusterDecision, ClusterPolicy, ShardHealth};
-pub use client::WireClient;
+pub use chaos::{chaos_wrap, ChaosFleet, ChaosPlan, ChaosReport, ChaosSwitch, Fault, PlannedFault};
+pub use client::{serve_streams_with_retry, RetryPolicy, WireClient};
 pub use front::{spawn_front, spawn_front_with, FrontHandle, FrontPolicy, FrontReport, ShardLink};
 pub use loopback::LoopbackHub;
 pub use shard::{run_shard, ShardConfig, ShardReport};

@@ -80,7 +80,11 @@ fn count(obs: &Option<ObsHandle>, c: Counter, n: u64) {
 /// `server` supplies the worker pool configuration (ladder, batching,
 /// adaptive policy, telemetry, reload) exactly as single-process
 /// serving does.
-pub fn run_shard(server: &Server, listener: &dyn Listener, cfg: ShardConfig) -> Result<ShardReport> {
+pub fn run_shard(
+    server: &Server,
+    listener: &dyn Listener,
+    cfg: ShardConfig,
+) -> Result<ShardReport> {
     let obs = server.telemetry.as_ref().map(|t| t.shared());
     if let Some(h) = &obs {
         h.with(|w| w.gauge_set(Gauge::ShardId, cfg.shard_id));
@@ -216,6 +220,9 @@ fn serve_conn(
                         last,
                         samples,
                         trace,
+                        // The deadline is the front's recovery
+                        // contract; a shard ignores it.
+                        deadline_us: _,
                     } => {
                         if samples.len() != feat as usize {
                             report.wire_errs += 1;
@@ -294,6 +301,17 @@ fn serve_conn(
                         next_seq.remove(&session);
                         report.drains += 1;
                         live.submit(LiveCmd::Forget { stream_id: session })?;
+                    }
+                    Msg::Ping { seq } => {
+                        // Liveness probe (DESIGN.md §16): answer in
+                        // arrival order so a pong proves the shard's
+                        // wire loop is still draining.
+                        if send_msg(&mut w, obs, &Msg::Pong { seq }).is_err() {
+                            break;
+                        }
+                    }
+                    Msg::Pong { .. } => {
+                        // Shards never probe; a stray pong is noise.
                     }
                     Msg::Hello { .. } | Msg::FrameOut { .. } => {
                         report.wire_errs += 1;

@@ -46,8 +46,10 @@ impl WireWrite for Box<dyn WireWrite> {
 /// A connected duplex: independently-owned read and write halves.
 pub type Duplex = (Box<dyn WireRead>, Box<dyn WireWrite>);
 
-/// Client side of a transport: dial an endpoint.
-pub trait Transport: Send {
+/// Client side of a transport: dial an endpoint.  `Sync` because a
+/// front-end retains the transport to re-dial lost shards from
+/// rejoin helper threads while the router still owns the handle.
+pub trait Transport: Send + Sync {
     /// Establish a new duplex to the endpoint.
     fn connect(&self) -> Result<Duplex, WireError>;
 }

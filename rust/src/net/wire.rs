@@ -22,6 +22,18 @@
 //! untouched; a traced message reaching an old peer fails its strict
 //! length check with the existing typed `Malformed` error — in-band,
 //! per-message, never silent.
+//!
+//! **Liveness + deadlines (DESIGN.md §16).** `Ping`/`Pong` are
+//! additive message tags used by the front's heartbeat failure
+//! detector; a fleet with heartbeats off never puts them on the wire,
+//! so its traffic stays byte-identical to plain v1. `Frame`
+//! additionally accepts an optional 8-byte deadline suffix
+//! (microseconds of end-to-end recovery budget, nonzero) that
+//! composes with the trace suffix: the suffix region after the v1
+//! payload is 0, [`DEADLINE_BYTES`], [`TRACE_CTX_BYTES`] or
+//! `TRACE_CTX_BYTES + DEADLINE_BYTES` bytes long — all four lengths
+//! are distinct, so the decoder discriminates without any flag byte
+//! and an absent feature costs zero bytes.
 
 use std::fmt;
 
@@ -55,6 +67,11 @@ pub mod role {
 /// Sentinel session id in [`Msg::Drain`] meaning "the whole shard".
 pub const DRAIN_ALL: u64 = u64::MAX;
 
+/// Size of the optional deadline suffix on [`Msg::Frame`]: one `u64`
+/// LE microsecond budget. Chosen so every suffix-region length
+/// (0, 8, 10, 18) is distinct from every other.
+pub const DEADLINE_BYTES: usize = 8;
+
 mod tag {
     pub const HELLO: u8 = 1;
     pub const FRAME: u8 = 2;
@@ -62,6 +79,8 @@ mod tag {
     pub const MIGRATE: u8 = 4;
     pub const DRAIN: u8 = 5;
     pub const ERR: u8 = 6;
+    pub const PING: u8 = 7;
+    pub const PONG: u8 = 8;
 }
 
 /// Typed decode/transport failure. Mirrors `ArtifactError` (§13):
@@ -170,6 +189,10 @@ pub enum ErrCode {
     ShardLost,
     /// The peer is shedding load.
     Backpressure,
+    /// Degraded-mode shedding: surviving capacity dropped below
+    /// policy, or a session exhausted its retry/deadline budget
+    /// during recovery (DESIGN.md §16).
+    Overloaded,
 }
 
 impl ErrCode {
@@ -182,6 +205,7 @@ impl ErrCode {
             ErrCode::Protocol => 4,
             ErrCode::ShardLost => 5,
             ErrCode::Backpressure => 6,
+            ErrCode::Overloaded => 7,
         }
     }
 
@@ -195,6 +219,7 @@ impl ErrCode {
             4 => ErrCode::Protocol,
             5 => ErrCode::ShardLost,
             6 => ErrCode::Backpressure,
+            7 => ErrCode::Overloaded,
             _ => return None,
         })
     }
@@ -208,6 +233,7 @@ impl ErrCode {
             ErrCode::Protocol => "protocol",
             ErrCode::ShardLost => "shard_lost",
             ErrCode::Backpressure => "backpressure",
+            ErrCode::Overloaded => "overloaded",
         }
     }
 
@@ -223,6 +249,7 @@ impl ErrCode {
             ErrCode::Protocol => Counter::WireErrProtocol,
             ErrCode::ShardLost => Counter::WireErrShardLost,
             ErrCode::Backpressure => Counter::WireErrBackpressure,
+            ErrCode::Overloaded => Counter::WireErrOverloaded,
         }
     }
 }
@@ -258,6 +285,9 @@ pub enum Msg {
         /// Optional trace context (DESIGN.md §15); `None` encodes
         /// byte-identically to plain v1.
         trace: Option<TraceCtx>,
+        /// Optional end-to-end recovery budget in microseconds
+        /// (DESIGN.md §16, nonzero); `None` appends nothing.
+        deadline_us: Option<u64>,
     },
     /// One output frame for a session.
     FrameOut {
@@ -301,6 +331,19 @@ pub enum Msg {
         session: u64,
         /// Short human-readable detail.
         detail: String,
+    },
+    /// Liveness probe (DESIGN.md §16). The front sends one per
+    /// heartbeat tick; a shard that stops answering within the miss
+    /// budget is declared suspect while its socket is still open.
+    Ping {
+        /// Monotonic probe counter, echoed back in the [`Msg::Pong`].
+        seq: u64,
+    },
+    /// Liveness probe answer: echoes the probe's `seq` so the sender
+    /// can match answers to ticks.
+    Pong {
+        /// The `seq` of the [`Msg::Ping`] this answers.
+        seq: u64,
     },
 }
 
@@ -404,6 +447,11 @@ impl<'a> Cur<'a> {
                 reason: format!("{tag_name}: {rem} trailing bytes after payload"),
             });
         }
+        self.trace_fields(tag_name).map(Some)
+    }
+
+    /// Decode exactly one [`TraceCtx`] starting at the cursor.
+    fn trace_fields(&mut self, tag_name: &str) -> Result<TraceCtx, WireError> {
         let trace_id = self.u64("trace.id")?;
         let kind = self.u8("trace.kind")?;
         let parent = self.u8("trace.parent")?;
@@ -412,11 +460,44 @@ impl<'a> Cur<'a> {
                 reason: format!("{tag_name}: trace_id must be nonzero"),
             });
         }
-        Ok(Some(TraceCtx {
+        Ok(TraceCtx {
             trace_id,
             kind,
             parent,
-        }))
+        })
+    }
+
+    /// Consume `Frame`'s composed optional suffixes (DESIGN.md §16):
+    /// the region after the v1 payload is empty, a deadline
+    /// ([`DEADLINE_BYTES`]), a trace ([`TRACE_CTX_BYTES`]), or a
+    /// trace followed by a deadline — four pairwise-distinct lengths,
+    /// so no flag byte is needed and anything else is the same
+    /// trailing-bytes violation a v1 decoder reports.
+    fn frame_suffix(
+        &mut self,
+        tag_name: &str,
+    ) -> Result<(Option<TraceCtx>, Option<u64>), WireError> {
+        let rem = self.buf.len() - self.pos;
+        let (trace, deadline) = match rem {
+            0 => (None, None),
+            DEADLINE_BYTES => (None, Some(self.u64("frame.deadline")?)),
+            TRACE_CTX_BYTES => (Some(self.trace_fields(tag_name)?), None),
+            r if r == TRACE_CTX_BYTES + DEADLINE_BYTES => {
+                let t = self.trace_fields(tag_name)?;
+                (Some(t), Some(self.u64("frame.deadline")?))
+            }
+            _ => {
+                return Err(WireError::Malformed {
+                    reason: format!("{tag_name}: {rem} trailing bytes after payload"),
+                })
+            }
+        };
+        if deadline == Some(0) {
+            return Err(WireError::Malformed {
+                reason: format!("{tag_name}: deadline_us must be nonzero"),
+            });
+        }
+        Ok((trace, deadline))
     }
 }
 
@@ -448,6 +529,7 @@ impl Msg {
                 last,
                 samples,
                 trace,
+                deadline_us,
             } => {
                 out.push(tag::FRAME);
                 put_u64(out, *session);
@@ -456,6 +538,15 @@ impl Msg {
                 put_u32(out, samples.len() as u32);
                 put_f32s(out, samples);
                 put_trace(out, trace);
+                if let Some(d) = deadline_us {
+                    if *d == 0 {
+                        out.truncate(start);
+                        return Err(WireError::Malformed {
+                            reason: "frame: deadline_us must be nonzero".to_string(),
+                        });
+                    }
+                    put_u64(out, *d);
+                }
             }
             Msg::FrameOut {
                 session,
@@ -518,6 +609,14 @@ impl Msg {
                 put_u16(out, bytes.len() as u16);
                 out.extend_from_slice(bytes);
             }
+            Msg::Ping { seq } => {
+                out.push(tag::PING);
+                put_u64(out, *seq);
+            }
+            Msg::Pong { seq } => {
+                out.push(tag::PONG);
+                put_u64(out, *seq);
+            }
         }
         let len = out.len() - start - 4;
         if len > MAX_FRAME {
@@ -573,13 +672,14 @@ impl Msg {
                 }
                 let n = c.u32("frame.n")? as usize;
                 let samples = c.f32s(n, "frame.samples")?;
-                let trace = c.trace("frame")?;
+                let (trace, deadline_us) = c.frame_suffix("frame")?;
                 Ok(Msg::Frame {
                     session,
                     seq,
                     last: last == 1,
                     samples,
                     trace,
+                    deadline_us,
                 })
             }
             tag::FRAME_OUT => {
@@ -653,6 +753,16 @@ impl Msg {
                     detail: detail.to_string(),
                 })
             }
+            tag::PING => {
+                let seq = c.u64("ping.seq")?;
+                c.done("ping")?;
+                Ok(Msg::Ping { seq })
+            }
+            tag::PONG => {
+                let seq = c.u64("pong.seq")?;
+                c.done("pong")?;
+                Ok(Msg::Pong { seq })
+            }
             other => Err(WireError::UnknownTag { tag: other }),
         }
     }
@@ -666,6 +776,8 @@ impl Msg {
             Msg::Migrate { .. } => "migrate",
             Msg::Drain { .. } => "drain",
             Msg::Err { .. } => "err",
+            Msg::Ping { .. } => "ping",
+            Msg::Pong { .. } => "pong",
         }
     }
 }
@@ -796,6 +908,15 @@ mod tests {
                 last: true,
                 samples: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE],
                 trace: None,
+                deadline_us: None,
+            },
+            Msg::Frame {
+                session: 8,
+                seq: 1,
+                last: false,
+                samples: vec![0.25; 3],
+                trace: None,
+                deadline_us: Some(250_000),
             },
             Msg::FrameOut {
                 session: 7,
@@ -816,6 +937,13 @@ mod tests {
                 session: 3,
                 detail: "full".to_string(),
             },
+            Msg::Err {
+                code: ErrCode::Overloaded,
+                session: 4,
+                detail: "degraded".to_string(),
+            },
+            Msg::Ping { seq: 17 },
+            Msg::Pong { seq: 17 },
         ];
         for m in &msgs {
             assert_eq!(&roundtrip(m), m, "{} roundtrip", m.kind());
@@ -830,6 +958,7 @@ mod tests {
             last: false,
             samples: vec![],
             trace: None,
+            deadline_us: None,
         };
         assert_eq!(roundtrip(&m), m);
     }
@@ -842,6 +971,7 @@ mod tests {
             last: false,
             samples: vec![0.0; MAX_FRAME / 4],
             trace: None,
+            deadline_us: None,
         };
         let mut buf = Vec::new();
         match m.encode(&mut buf) {
@@ -926,6 +1056,15 @@ mod tests {
                 last: false,
                 samples: vec![0.5, -0.5],
                 trace: Some(ctx),
+                deadline_us: None,
+            },
+            Msg::Frame {
+                session: 3,
+                seq: 10,
+                last: false,
+                samples: vec![0.5, -0.5],
+                trace: Some(ctx),
+                deadline_us: Some(1_000_000),
             },
             Msg::FrameOut {
                 session: 3,
@@ -957,15 +1096,19 @@ mod tests {
             last: false,
             samples: vec![1.0, 2.0],
             trace: None,
+            deadline_us: None,
         };
         let traced = Msg::Frame {
+            session: 1,
+            seq: 2,
+            last: false,
             samples: vec![1.0, 2.0],
             trace: Some(TraceCtx {
                 trace_id: 5,
                 kind: 1,
                 parent: 0,
             }),
-            ..plain.clone()
+            deadline_us: None,
         };
         let (mut a, mut b) = (Vec::new(), Vec::new());
         plain.encode(&mut a).unwrap();
@@ -976,6 +1119,116 @@ mod tests {
     }
 
     #[test]
+    fn deadline_off_encoding_is_byte_identical_to_v1() {
+        // Same additive contract as the trace suffix (DESIGN.md §16):
+        // no deadline appends nothing; a deadline-only frame differs
+        // by exactly DEADLINE_BYTES; a trace+deadline frame by
+        // exactly TRACE_CTX_BYTES + DEADLINE_BYTES.
+        let plain = Msg::Frame {
+            session: 1,
+            seq: 2,
+            last: false,
+            samples: vec![1.0, 2.0],
+            trace: None,
+            deadline_us: None,
+        };
+        let budgeted = Msg::Frame {
+            session: 1,
+            seq: 2,
+            last: false,
+            samples: vec![1.0, 2.0],
+            trace: None,
+            deadline_us: Some(500_000),
+        };
+        let both = Msg::Frame {
+            session: 1,
+            seq: 2,
+            last: false,
+            samples: vec![1.0, 2.0],
+            trace: Some(TraceCtx {
+                trace_id: 5,
+                kind: 1,
+                parent: 0,
+            }),
+            deadline_us: Some(500_000),
+        };
+        let (mut a, mut b, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        plain.encode(&mut a).unwrap();
+        budgeted.encode(&mut b).unwrap();
+        both.encode(&mut c).unwrap();
+        assert_eq!(b.len(), a.len() + DEADLINE_BYTES);
+        assert_eq!(c.len(), a.len() + TRACE_CTX_BYTES + DEADLINE_BYTES);
+        assert_eq!(a[4..], b[4..a.len()], "v1 prefix of the budgeted frame");
+        assert_eq!(a[4..], c[4..a.len()], "v1 prefix of the traced+budgeted frame");
+        assert_eq!(roundtrip(&budgeted), budgeted);
+        assert_eq!(roundtrip(&both), both);
+    }
+
+    #[test]
+    fn bad_deadline_suffixes_are_malformed() {
+        let m = Msg::Frame {
+            session: 1,
+            seq: 0,
+            last: false,
+            samples: vec![1.0],
+            trace: None,
+            deadline_us: None,
+        };
+        // A zero deadline is reserved (absent-deadline sentinel) —
+        // rejected symmetrically by encoder and decoder.
+        let bad = Msg::Frame {
+            session: 1,
+            seq: 0,
+            last: false,
+            samples: vec![1.0],
+            trace: None,
+            deadline_us: Some(0),
+        };
+        let mut buf = Vec::new();
+        match bad.encode(&mut buf) {
+            Err(WireError::Malformed { reason }) => {
+                assert!(reason.contains("nonzero"), "{reason}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        assert!(buf.is_empty(), "failed encode leaves no partial bytes");
+        let mut buf = Vec::new();
+        m.encode(&mut buf).unwrap();
+        buf.extend_from_slice(&[0u8; DEADLINE_BYTES]);
+        match Msg::decode(&buf[4..]) {
+            Err(WireError::Malformed { reason }) => {
+                assert!(reason.contains("nonzero"), "{reason}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        // A suffix region matching none of the four lengths is the
+        // v1 trailing-bytes violation (here: 10 + 8 + 1 = 19 bytes).
+        let mut buf = Vec::new();
+        m.encode(&mut buf).unwrap();
+        buf.extend_from_slice(&[1u8; TRACE_CTX_BYTES + DEADLINE_BYTES + 1]);
+        match Msg::decode(&buf[4..]) {
+            Err(WireError::Malformed { reason }) => {
+                assert!(reason.contains("trailing"), "{reason}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ping_pong_are_fixed_size_and_trailing_checked() {
+        let mut buf = Vec::new();
+        Msg::Ping { seq: 3 }.encode(&mut buf).unwrap();
+        assert_eq!(buf.len(), 4 + 1 + 8, "ping is prefix + tag + seq");
+        buf.push(0);
+        match Msg::decode(&buf[4..]) {
+            Err(WireError::Malformed { reason }) => {
+                assert!(reason.contains("trailing"), "{reason}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn bad_trace_suffixes_are_malformed() {
         let m = Msg::Frame {
             session: 1,
@@ -983,8 +1236,10 @@ mod tests {
             last: false,
             samples: vec![1.0],
             trace: None,
+            deadline_us: None,
         };
-        // wrong suffix length: neither absent nor TRACE_CTX_BYTES
+        // wrong suffix length: not absent, not a deadline, not a
+        // trace, not both
         let mut buf = Vec::new();
         m.encode(&mut buf).unwrap();
         buf.extend_from_slice(&[0u8; 3]);
@@ -1016,6 +1271,7 @@ mod tests {
             ErrCode::Protocol,
             ErrCode::ShardLost,
             ErrCode::Backpressure,
+            ErrCode::Overloaded,
         ] {
             assert!(seen.insert(code.counter().name()), "{:?} counter reused", code);
         }
@@ -1030,6 +1286,7 @@ mod tests {
             ErrCode::Protocol,
             ErrCode::ShardLost,
             ErrCode::Backpressure,
+            ErrCode::Overloaded,
         ] {
             assert_eq!(ErrCode::from_u16(code.as_u16()), Some(code));
             assert!(!code.name().is_empty());

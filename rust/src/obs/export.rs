@@ -257,6 +257,15 @@ fn event_record(seq: u64, worker: Option<usize>, ev: &Event) -> Json {
                     ("t", num(ev.d)),
                     ("ns", num(ev.e)),
                 ]),
+                Some(SpanKind::FrontRetry) => kv.extend([
+                    ("session", num(ev.c)),
+                    ("resent", num(ev.d)),
+                    ("shard", num(ev.e)),
+                ]),
+                Some(SpanKind::ShardRejoin) => kv.extend([
+                    ("shard", num(ev.c)),
+                    ("attempts", num(ev.d)),
+                ]),
                 None => {}
             }
         }

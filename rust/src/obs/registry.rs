@@ -72,11 +72,29 @@ pub enum Counter {
     WireErrShardLost,
     /// Wire errors sent with code `backpressure`.
     WireErrBackpressure,
+    /// Wire errors sent with code `overloaded` (DESIGN.md §16).
+    WireErrOverloaded,
+    /// Heartbeat ticks where at least one shard had an unanswered
+    /// `Ping` outstanding (DESIGN.md §16).
+    HeartbeatMiss,
+    /// Shards declared suspect by the miss-budget detector (sessions
+    /// migrated off while the socket was still open).
+    ShardSuspect,
+    /// Lost or suspect shards re-admitted after a successful
+    /// reconnect + re-`Hello`.
+    ShardRejoin,
+    /// Frames re-sent to a new home during session recovery (the
+    /// unacked tail replayed by a re-home).
+    FramesRetried,
+    /// Admissions or recoveries shed with a typed `Overloaded` reply
+    /// because surviving capacity or a session's retry/deadline
+    /// budget was exhausted.
+    AdmissionShed,
 }
 
 impl Counter {
     /// Number of counters (sizes the per-worker array).
-    pub const COUNT: usize = 22;
+    pub const COUNT: usize = 28;
 
     /// Every counter, in array-index order.
     pub const ALL: [Counter; Counter::COUNT] = [
@@ -102,6 +120,12 @@ impl Counter {
         Counter::WireErrProtocol,
         Counter::WireErrShardLost,
         Counter::WireErrBackpressure,
+        Counter::WireErrOverloaded,
+        Counter::HeartbeatMiss,
+        Counter::ShardSuspect,
+        Counter::ShardRejoin,
+        Counter::FramesRetried,
+        Counter::AdmissionShed,
     ];
 
     /// Stable snake_case name used as the NDJSON object key.
@@ -129,6 +153,12 @@ impl Counter {
             Counter::WireErrProtocol => "wire_err_protocol",
             Counter::WireErrShardLost => "wire_err_shard_lost",
             Counter::WireErrBackpressure => "wire_err_backpressure",
+            Counter::WireErrOverloaded => "wire_err_overloaded",
+            Counter::HeartbeatMiss => "heartbeat_miss",
+            Counter::ShardSuspect => "shard_suspect",
+            Counter::ShardRejoin => "shard_rejoin",
+            Counter::FramesRetried => "frames_retried",
+            Counter::AdmissionShed => "admission_shed",
         }
     }
 

@@ -99,6 +99,8 @@ fn validate_span_fields(v: &Json) -> Result<(), String> {
         SpanKind::PhaseExec => &["rung", "phase", "width", "ns"],
         SpanKind::MigrateFront => &["session", "from_shard", "to_shard"],
         SpanKind::MigrateReplay => &["stream", "t", "ns"],
+        SpanKind::FrontRetry => &["session", "resent", "shard"],
+        SpanKind::ShardRejoin => &["shard", "attempts"],
     };
     for f in fields {
         want_u64(v, f)?;

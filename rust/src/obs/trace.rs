@@ -56,11 +56,18 @@ pub enum SpanKind {
     MigrateFront = 6,
     /// The destination shard replayed the migrated session's history.
     MigrateReplay = 7,
+    /// The front re-homed a session after a loss/suspect verdict and
+    /// replayed its unacked tail (root of a retry trace; DESIGN.md
+    /// §16).
+    FrontRetry = 8,
+    /// The front re-admitted a recovered shard into placement after a
+    /// successful reconnect + re-`Hello` (DESIGN.md §16).
+    ShardRejoin = 9,
 }
 
 impl SpanKind {
     /// Every kind, in discriminant order.
-    pub const ALL: [SpanKind; 7] = [
+    pub const ALL: [SpanKind; 9] = [
         SpanKind::FrontAdmit,
         SpanKind::ShardDispatch,
         SpanKind::WorkerRound,
@@ -68,6 +75,8 @@ impl SpanKind {
         SpanKind::FrontReply,
         SpanKind::MigrateFront,
         SpanKind::MigrateReplay,
+        SpanKind::FrontRetry,
+        SpanKind::ShardRejoin,
     ];
 
     /// Stable snake_case name (feed field `span`).
@@ -80,6 +89,8 @@ impl SpanKind {
             SpanKind::FrontReply => "front_reply",
             SpanKind::MigrateFront => "migrate_front",
             SpanKind::MigrateReplay => "migrate_replay",
+            SpanKind::FrontRetry => "front_retry",
+            SpanKind::ShardRejoin => "shard_rejoin",
         }
     }
 
@@ -190,7 +201,7 @@ mod tests {
             assert_eq!(SpanKind::from_name(k.name()), Some(k));
         }
         assert_eq!(SpanKind::from_u8(0), None);
-        assert_eq!(SpanKind::from_u8(8), None);
+        assert_eq!(SpanKind::from_u8(SpanKind::ALL.len() as u8 + 1), None);
         assert_eq!(SpanKind::from_name("nope"), None);
     }
 

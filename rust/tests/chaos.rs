@@ -1,0 +1,509 @@
+//! Fleet survival under deterministic chaos (DESIGN.md §16): a
+//! front-end whose shards fail by plan — killed, stalled, partitioned,
+//! corrupted — must keep every accepted stream bit-identical to a
+//! single-process serve, answer everything it sheds with the exact
+//! typed error, re-admit recovered shards, and account for all of it
+//! exactly in the `soi.obs.v1` → `soi.cluster.v1` feed chain.
+//!
+//! The faults ride the [`ChaosPlan`] tick clock (one tick per
+//! front→shard frame fleet-wide) or are applied by script at points
+//! the test controls; either way the same run always sees the same
+//! fault sequence at the same protocol step.
+
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use soi::coordinator::Server;
+use soi::net::{
+    run_shard, spawn_front_with, ChaosFleet, ChaosPlan, ErrCode, Fault, FrontHandle, FrontPolicy,
+    FrontReport, LoopbackHub, Msg, ShardConfig, ShardLink, ShardReport, Transport, WireClient,
+};
+use soi::obs::{aggregate, schema, take_snapshot, Counter, ObsConfig, Telemetry};
+use soi::runtime::{synth, CompiledVariant, ModelConfig, Runtime};
+use soi::util::rng::Rng;
+
+fn cfg(scc: Vec<usize>) -> ModelConfig {
+    ModelConfig {
+        feat: 4,
+        channels: vec![5, 6, 7],
+        kernel: 3,
+        extrap: vec!["duplicate".into(); scc.len()],
+        scc,
+        shift_pos: None,
+        shift: 1,
+        interp: None,
+    }
+}
+
+fn variant(rt: &Arc<Runtime>, c: &ModelConfig, name: &str) -> Arc<CompiledVariant> {
+    let m = synth::manifest(c, name, 32);
+    let w = synth::he_weights(&m, 0xFEED);
+    Arc::new(CompiledVariant::with_weights(rt.clone(), m, w).expect("compile native variant"))
+}
+
+fn random_frames(feat: usize, t: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..t)
+        .map(|_| (0..feat).map(|_| rng.normal() as f32 * 0.3).collect())
+        .collect()
+}
+
+fn random_streams(feat: usize, n: usize, t: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    (0..n)
+        .map(|i| random_frames(feat, t, seed ^ (i as u64 + 1)))
+        .collect()
+}
+
+/// The exact outputs the chaos fleet must reproduce: the same streams
+/// served by one in-process worker pool.
+fn reference_outputs(cv: &Arc<CompiledVariant>, streams: &[Vec<Vec<f32>>]) -> Vec<Vec<Vec<f32>>> {
+    let server = Server::new(cv.clone(), 2);
+    let report = server.run(streams).expect("reference serve");
+    (0..streams.len() as u64)
+        .map(|sid| report.outputs.get(&sid).cloned().unwrap_or_default())
+        .collect()
+}
+
+/// A front over N real shards, every shard behind its own chaos
+/// switch, and a [`Telemetry`] root per process for feed assertions.
+struct ChaosTestFleet {
+    front: FrontHandle,
+    hub: LoopbackHub,
+    fleet: ChaosFleet,
+    shard_hubs: Vec<LoopbackHub>,
+    shards: Vec<JoinHandle<ShardReport>>,
+    tel_front: Arc<Telemetry>,
+    tels: Vec<Arc<Telemetry>>,
+}
+
+fn boot(
+    cv: &Arc<CompiledVariant>,
+    n_shards: usize,
+    plan: &ChaosPlan,
+    policy: FrontPolicy,
+) -> ChaosTestFleet {
+    let mut shard_hubs = Vec::new();
+    let mut shards = Vec::new();
+    let mut tels = Vec::new();
+    for i in 0..n_shards {
+        let hub = LoopbackHub::new();
+        let tel = Telemetry::new(ObsConfig::default());
+        let mut server = Server::new(cv.clone(), 2);
+        server.telemetry = Some(tel.clone());
+        let shard_hub = hub.clone();
+        let shard_id = i as u64 + 1;
+        shards.push(thread::spawn(move || {
+            run_shard(&server, &shard_hub, ShardConfig { shard_id }).expect("shard serves")
+        }));
+        shard_hubs.push(hub);
+        tels.push(tel);
+    }
+    let backends: Vec<Arc<dyn Transport>> = shard_hubs
+        .iter()
+        .map(|h| Arc::new(h.clone()) as Arc<dyn Transport>)
+        .collect();
+    let (proxy_hubs, fleet) = ChaosFleet::wrap(backends, plan);
+    let links = proxy_hubs
+        .into_iter()
+        .enumerate()
+        .map(|(i, h)| ShardLink {
+            name: format!("shard-{i}"),
+            transport: Box::new(h),
+        })
+        .collect();
+    let hub = LoopbackHub::new();
+    let tel_front = Telemetry::new(ObsConfig::default());
+    let front = spawn_front_with(Box::new(hub.clone()), links, policy, Some(tel_front.clone()))
+        .expect("front boots");
+    ChaosTestFleet {
+        front,
+        hub,
+        fleet,
+        shard_hubs,
+        shards,
+        tel_front,
+        tels,
+    }
+}
+
+impl ChaosTestFleet {
+    /// Quiesce and tear down in the one order that cannot hang: heal
+    /// every switch (so the front's shutdown `Drain`s pass), stop the
+    /// front, sever the proxies, close the shard hubs (their accept
+    /// loops return), then join the shard threads.
+    fn stop(self) -> (FrontReport, Vec<ShardReport>) {
+        for i in 0..self.shard_hubs.len() {
+            self.fleet.switch(i).apply(Fault::Heal);
+        }
+        let report = self.front.stop().expect("front stops");
+        self.fleet.close();
+        for h in &self.shard_hubs {
+            h.close();
+        }
+        let shard_reports = self
+            .shards
+            .into_iter()
+            .map(|j| j.join().expect("shard joins"))
+            .collect();
+        (report, shard_reports)
+    }
+}
+
+fn send_frame(client: &mut WireClient, session: u64, seq: usize, last: bool, f: &[f32]) {
+    client
+        .send(&Msg::Frame {
+            session,
+            seq: seq as u64,
+            last,
+            samples: f.to_vec(),
+            trace: None,
+            deadline_us: None,
+        })
+        .expect("send frame");
+}
+
+/// Send frames `from..to` of every stream, round-robin per round —
+/// the same interleaving single-process serving dispatches in.
+fn send_rr(client: &mut WireClient, streams: &[Vec<Vec<f32>>], from: usize, to: usize) {
+    for seq in from..to {
+        for (sid, frames) in streams.iter().enumerate() {
+            send_frame(client, sid as u64, seq, seq + 1 == frames.len(), &frames[seq]);
+        }
+    }
+}
+
+/// Receive `FrameOut`s until each session `i` holds `targets[i]`
+/// outputs; anything other than an output frame fails the test.
+fn collect_until(client: &mut WireClient, outs: &mut [Vec<Vec<f32>>], targets: &[usize]) {
+    while outs.iter().zip(targets).any(|(o, t)| o.len() < *t) {
+        match client.recv() {
+            Ok(Some(Msg::FrameOut {
+                session, samples, ..
+            })) => {
+                let sid = session as usize;
+                assert!(sid < outs.len(), "output for unknown session {session}");
+                outs[sid].push(samples);
+            }
+            other => panic!("expected FrameOut, got {other:?}"),
+        }
+    }
+}
+
+fn counter(tel: &Telemetry, c: Counter) -> u64 {
+    let snap = take_snapshot(tel);
+    snap.counters[Counter::ALL.iter().position(|x| *x == c).expect("known counter")]
+}
+
+/// Poll the front's live registry until `c` reaches `want`.  The
+/// heartbeat loop keeps pinging in the background — each ping is a
+/// chaos tick, so the plan's tail keeps firing even with no client
+/// traffic — and the deadline only trips if recovery truly wedged.
+fn await_counter(tel: &Telemetry, c: Counter, want: u64, secs: u64) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while counter(tel, c) < want {
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for {} >= {want}",
+            c.name()
+        );
+        thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn fleet_survives_scripted_stall_kill_and_partition_bit_identically() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2]), "scc2");
+    let total = 24usize;
+    let streams = random_streams(4, 4, total, 0xFA117);
+    let reference = reference_outputs(&cv, &streams);
+
+    // One scripted episode per failure mode, each applied at a point
+    // the test controls so detection is deterministic: the stall hits
+    // while its shard holds live traffic (guaranteeing an unacked
+    // tail to retry), the kill hits a quiet shard (EOF-detected, pure
+    // replay re-home), and the partition hits an idle fleet
+    // (detectable only by the miss budget).  Tick-driven plans are
+    // exercised by the seeded test below.
+    // A generous miss budget (~16 ms of silence) keeps detection
+    // deterministic under scheduler noise: the stalled traffic of
+    // phase 2 is guaranteed to be in flight before the verdict fires.
+    let fleet = boot(
+        &cv,
+        3,
+        &ChaosPlan::default(),
+        FrontPolicy {
+            max_sessions: 8,
+            heartbeat_ms: 2,
+            miss_budget: 8,
+            ..FrontPolicy::default()
+        },
+    );
+    let mut client = WireClient::connect(&fleet.hub).expect("connect");
+    let mut outs = vec![Vec::new(); streams.len()];
+
+    // Phase 1: a clean third of the traffic, fully acked, so the
+    // stall's trapped window is exactly what phase 2 sends.
+    send_rr(&mut client, &streams, 0, 8);
+    collect_until(&mut client, &mut outs, &[8; 4]);
+
+    // Phase 2: stall shard 1 mid-stream.  Its session's frames keep
+    // being forwarded but every ack is withheld, so the miss budget —
+    // not EOF — must declare it suspect and re-home the session with
+    // its unacked tail re-sent; collection only completes if it does.
+    fleet.fleet.switch(1).apply(Fault::Stall);
+    send_rr(&mut client, &streams, 8, 16);
+    collect_until(&mut client, &mut outs, &[16; 4]);
+    fleet.fleet.switch(1).apply(Fault::Heal);
+    // The heal flushes the stale trapped frames; the rejoin handshake
+    // swallows them on a cleanly failed first attempt and retries.
+    await_counter(&fleet.tel_front, Counter::ShardRejoin, 1, 60);
+
+    // Phase 3: kill shard 2 (quiet: all inflight acked), then finish
+    // the streams.  EOF re-homes its sessions by §9 history replay.
+    fleet.fleet.switch(2).apply(Fault::Kill);
+    send_rr(&mut client, &streams, 16, total);
+    collect_until(&mut client, &mut outs, &[total; 4]);
+    assert_eq!(outs, reference, "surviving streams must be bit-identical");
+    fleet.fleet.switch(2).apply(Fault::Heal);
+    await_counter(&fleet.tel_front, Counter::ShardRejoin, 2, 60);
+
+    // Phase 4: partition shard 0 with every session retired — nothing
+    // but the heartbeat can notice the silence.  Hold the partition
+    // until the suspect verdict lands (healing earlier would mask the
+    // fault), then heal and wait for the held rejoin dial to land.
+    fleet.fleet.switch(0).apply(Fault::Partition);
+    await_counter(&fleet.tel_front, Counter::ShardSuspect, 2, 60);
+    fleet.fleet.switch(0).apply(Fault::Heal);
+    await_counter(&fleet.tel_front, Counter::ShardRejoin, 3, 60);
+    client.shutdown();
+    let tel_front = fleet.tel_front.clone();
+    let tels = fleet.tels.clone();
+    let (front, shard_reports) = fleet.stop();
+
+    assert_eq!(front.shed, 0, "nothing was shed");
+    assert_eq!(
+        front.frames_out,
+        (streams.len() * total) as u64,
+        "every accepted frame was answered exactly once"
+    );
+    assert!(front.shard_losses >= 3, "each episode lost its shard once");
+    assert!(
+        front.shard_suspects >= 2,
+        "stall and partition were caught by the miss budget, not by EOF"
+    );
+    assert!(front.heartbeat_misses >= 1);
+    assert!(front.shard_rejoins >= 3, "every faulted shard was re-admitted");
+    assert!(front.migrations >= 1, "recovery re-homes are warm migrations");
+    assert!(front.frames_retried >= 1, "the unacked tail was re-sent");
+    let served: u64 = shard_reports.iter().map(|s| s.frames_in).sum();
+    assert!(
+        served >= (streams.len() * total) as u64,
+        "every answered frame was executed at least once"
+    );
+
+    // The same story through the feed chain: each process's
+    // soi.obs.v1 feed validates, they aggregate, and the cluster
+    // totals of the survival counters equal the front's report — the
+    // exact-accounting contract of DESIGN.md §16.
+    let mut feeds = Vec::new();
+    let mut text = String::new();
+    take_snapshot(&tel_front).render_ndjson(0, 0, &mut text);
+    schema::validate_feed(&text).expect("front feed validates");
+    feeds.push(("front".to_string(), text));
+    for (i, tel) in tels.iter().enumerate() {
+        let mut text = String::new();
+        take_snapshot(tel).render_ndjson(0, 0, &mut text);
+        schema::validate_feed(&text).expect("shard feed validates");
+        feeds.push((format!("shard-{i}"), text));
+    }
+    let cluster = aggregate(&feeds).expect("aggregate");
+    assert_eq!(cluster.counter_total(Counter::ShardRejoin), front.shard_rejoins);
+    assert_eq!(cluster.counter_total(Counter::ShardSuspect), front.shard_suspects);
+    assert_eq!(cluster.counter_total(Counter::HeartbeatMiss), front.heartbeat_misses);
+    assert_eq!(cluster.counter_total(Counter::FramesRetried), front.frames_retried);
+    assert_eq!(cluster.counter_total(Counter::AdmissionShed), 0);
+    let mut out = String::new();
+    cluster.render_ndjson(&mut out);
+    schema::validate_cluster_feed(&out).expect("cluster feed validates");
+}
+
+#[test]
+fn seeded_chaos_plan_preserves_every_accepted_stream() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2]), "scc2");
+    let total = 24usize;
+    let streams = random_streams(4, 3, total, 0x5EED5);
+    let reference = reference_outputs(&cv, &streams);
+
+    // Non-overlapping seeded episodes (kill/stall/partition/corrupt):
+    // at most one shard is down at a time, so nothing is ever shed
+    // and the outputs must be exactly the single-process serve.
+    let plan = ChaosPlan::seeded(0xC4A05, 3, 30, 4);
+    let fleet = boot(
+        &cv,
+        3,
+        &plan,
+        FrontPolicy {
+            max_sessions: 8,
+            heartbeat_ms: 2,
+            miss_budget: 2,
+            ..FrontPolicy::default()
+        },
+    );
+    let mut client = WireClient::connect(&fleet.hub).expect("connect");
+    send_rr(&mut client, &streams, 0, total);
+    let mut outs = vec![Vec::new(); streams.len()];
+    collect_until(&mut client, &mut outs, &[total; 3]);
+    assert_eq!(outs, reference, "streams must survive the seeded plan bit-identically");
+
+    // Heartbeat pings keep the clock moving, so the whole plan fires
+    // even after client traffic ends — including the final heals.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while fleet.fleet.unfired() > 0 {
+        assert!(Instant::now() < deadline, "plan stopped firing");
+        thread::sleep(Duration::from_millis(2));
+    }
+    client.shutdown();
+    let reports = fleet.fleet.reports();
+    let (front, _) = fleet.stop();
+    assert_eq!(front.shed, 0, "non-overlapping episodes never degrade the fleet");
+    assert_eq!(front.frames_out, (streams.len() * total) as u64);
+    let switch_ticks: u64 = reports.iter().map(|r| r.ticks).sum();
+    assert!(switch_ticks > 0, "the plan's clock was driven by real traffic");
+}
+
+#[test]
+fn degraded_fleet_sheds_with_typed_overloaded_until_rejoin() {
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2]), "scc2");
+    let frames = random_frames(4, 1, 0xDE6);
+
+    // Two shards, and policy demands both for new admissions.
+    let fleet = boot(
+        &cv,
+        2,
+        &ChaosPlan::default(),
+        FrontPolicy {
+            max_sessions: 1024,
+            heartbeat_ms: 2,
+            miss_budget: 2,
+            min_live_shards: 2,
+            ..FrontPolicy::default()
+        },
+    );
+    let mut client = WireClient::connect(&fleet.hub).expect("connect");
+
+    // Healthy fleet admits and serves a one-frame session.
+    send_frame(&mut client, 0, 0, true, &frames[0]);
+    match client.recv() {
+        Ok(Some(Msg::FrameOut { session: 0, .. })) => {}
+        other => panic!("expected FrameOut for session 0, got {other:?}"),
+    }
+
+    // Kill one shard: the front sees EOF, the live count drops below
+    // the floor, and the next new session is shed with the exact
+    // typed error.  A first attempt may race the loss event and be
+    // admitted — that session is served normally, never half-served.
+    fleet.fleet.switch(1).apply(Fault::Kill);
+    let mut sid = 1u64;
+    let mut shed = false;
+    for _ in 0..1000 {
+        send_frame(&mut client, sid, 0, true, &frames[0]);
+        match client.recv() {
+            Ok(Some(Msg::FrameOut { session, .. })) => {
+                assert_eq!(session, sid, "raced admission still serves exactly once");
+                sid += 1;
+            }
+            Ok(Some(Msg::Err {
+                code,
+                session,
+                detail,
+            })) => {
+                assert_eq!(code, ErrCode::Overloaded, "exact typed error ({detail})");
+                assert_eq!(session, sid, "the shed names the refused session");
+                shed = true;
+                break;
+            }
+            other => panic!("expected FrameOut or Overloaded, got {other:?}"),
+        }
+    }
+    assert!(shed, "the degraded fleet never shed an admission");
+
+    // Heal: the rejoin loop re-dials (the held dial completes now),
+    // the shard is re-admitted, and new sessions are served again.
+    fleet.fleet.switch(1).apply(Fault::Heal);
+    sid += 1;
+    let mut admitted = false;
+    for _ in 0..5000 {
+        send_frame(&mut client, sid, 0, true, &frames[0]);
+        match client.recv() {
+            Ok(Some(Msg::FrameOut { session, .. })) => {
+                assert_eq!(session, sid);
+                admitted = true;
+                break;
+            }
+            Ok(Some(Msg::Err { code, .. })) => {
+                assert_eq!(code, ErrCode::Overloaded, "still degraded while rejoining");
+                sid += 1;
+                thread::sleep(Duration::from_millis(1));
+            }
+            other => panic!("expected FrameOut or Overloaded, got {other:?}"),
+        }
+    }
+    assert!(admitted, "the fleet never recovered after heal");
+    client.shutdown();
+    let (front, _) = fleet.stop();
+    assert!(front.shed >= 1, "sheds were counted");
+    assert!(front.shard_rejoins >= 1, "the healed shard rejoined");
+    assert_eq!(front.denied, 0, "shedding is not admission denial");
+}
+
+#[test]
+fn target_death_during_pending_migration_drops_nothing() {
+    // Regression for the drain-vs-migration race: frames held behind
+    // a pending migration exist nowhere else once the old home is
+    // drained.  If the target dies around the handoff, every held and
+    // in-flight frame must still be answered — the front stages the
+    // full tail as in-flight before flushing, so shard loss re-homes
+    // it instead of dropping whatever a local buffer still held.
+    let rt = Arc::new(Runtime::native());
+    let cv = variant(&rt, &cfg(vec![2]), "scc2");
+    let total = 24usize;
+    let frames = random_frames(4, total, 0x9A3E);
+    let reference = reference_outputs(&cv, std::slice::from_ref(&frames));
+
+    let fleet = boot(&cv, 2, &ChaosPlan::default(), FrontPolicy::default());
+    let mut client = WireClient::connect(&fleet.hub).expect("connect");
+    let half = total / 2;
+    for (i, f) in frames[..half].iter().enumerate() {
+        send_frame(&mut client, 0, i, false, f);
+    }
+    let mut outs = vec![Vec::new()];
+    collect_until(&mut client, &mut outs, &[half]);
+
+    // One unacked frame keeps the nomination pending; the frames sent
+    // behind it are held by the front.
+    send_frame(&mut client, 0, half, false, &frames[half]);
+    fleet.front.migrate(0, 1).expect("nominate shard 1");
+    for (i, f) in frames[half + 1..half + 5].iter().enumerate() {
+        send_frame(&mut client, 0, half + 1 + i, false, f);
+    }
+    // The target dies around the handoff — before it, at it, or just
+    // after, depending on scheduling; all three orderings must be
+    // zero-drop.
+    fleet.fleet.switch(1).apply(Fault::Kill);
+    for (i, f) in frames[half + 5..].iter().enumerate() {
+        let seq = half + 5 + i;
+        send_frame(&mut client, 0, seq, seq + 1 == total, f);
+    }
+    collect_until(&mut client, &mut outs, &[total]);
+    assert_eq!(outs[0], reference[0], "the full stream is bit-identical");
+    client.shutdown();
+
+    let (front, _) = fleet.stop();
+    assert_eq!(front.frames_out, total as u64, "zero dropped frames");
+    assert!(front.shard_losses >= 1, "the dead target was noticed");
+    assert_eq!(front.shed, 0, "recovery needed no shedding");
+}

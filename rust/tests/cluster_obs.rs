@@ -80,6 +80,7 @@ fn send_frame(client: &mut WireClient, session: u64, seq: usize, last: bool, f: 
             last,
             samples: f.to_vec(),
             trace: None,
+            deadline_us: None,
         })
         .expect("send frame");
 }
@@ -125,6 +126,7 @@ fn traced_frames_reassemble_causally_across_a_two_shard_fleet() {
         FrontPolicy {
             max_sessions: 8,
             trace_sample_n: 1,
+            ..FrontPolicy::default()
         },
         Some(tel_front.clone()),
     )

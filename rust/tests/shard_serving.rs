@@ -204,6 +204,7 @@ fn send_frame(client: &mut WireClient, session: u64, seq: usize, last: bool, f: 
             last,
             samples: f.to_vec(),
             trace: None,
+            deadline_us: None,
         })
         .expect("send frame");
 }

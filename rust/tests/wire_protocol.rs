@@ -20,13 +20,14 @@ use soi::util::rng::Rng;
 /// prefix must not exceed [`MAX_FRAME`].
 const MAX_SAMPLES: usize = (MAX_FRAME - 22) / 4;
 
-const CODES: [ErrCode; 6] = [
+const CODES: [ErrCode; 7] = [
     ErrCode::VersionSkew,
     ErrCode::AdmissionDenied,
     ErrCode::BadFrame,
     ErrCode::Protocol,
     ErrCode::ShardLost,
     ErrCode::Backpressure,
+    ErrCode::Overloaded,
 ];
 
 fn samples(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -48,8 +49,14 @@ fn random_trace(rng: &mut Rng) -> Option<TraceCtx> {
     })
 }
 
+/// Half the time, a recovery deadline (DESIGN.md §16); nonzero by
+/// construction — a zero deadline is Malformed on the wire.
+fn random_deadline(rng: &mut Rng) -> Option<u64> {
+    rng.chance(0.5).then(|| rng.next_u64() | 1)
+}
+
 fn random_msg(rng: &mut Rng) -> Msg {
-    match rng.below(6) {
+    match rng.below(8) {
         0 => Msg::Hello {
             version: WIRE_VERSION,
             role: [role::CLIENT, role::FRONT, role::SHARD][rng.below(3)],
@@ -64,6 +71,7 @@ fn random_msg(rng: &mut Rng) -> Msg {
             // below(33) includes 0: the empty-payload edge case.
             samples: samples(rng, rng.below(33)),
             trace: random_trace(rng),
+            deadline_us: random_deadline(rng),
         },
         2 => Msg::FrameOut {
             session: rng.next_u64(),
@@ -85,11 +93,13 @@ fn random_msg(rng: &mut Rng) -> Msg {
         4 => Msg::Drain {
             session: rng.next_u64(),
         },
-        _ => Msg::Err {
+        5 => Msg::Err {
             code: CODES[rng.below(CODES.len())],
             session: rng.next_u64(),
             detail: "d".repeat(rng.below(24)),
         },
+        6 => Msg::Ping { seq: rng.next_u64() },
+        _ => Msg::Pong { seq: rng.next_u64() },
     }
 }
 
@@ -120,6 +130,7 @@ fn max_frame_boundary_roundtrips_and_one_more_is_oversize() {
         last: false,
         samples: samples(&mut rng, MAX_SAMPLES),
         trace: None,
+        deadline_us: None,
     };
     let mut buf = Vec::new();
     m.encode(&mut buf).expect("max-size frame encodes");
@@ -150,6 +161,7 @@ fn max_frame_boundary_roundtrips_and_one_more_is_oversize() {
                 last,
                 samples,
                 trace: None,
+                deadline_us: None,
             }
         }
         _ => unreachable!(),
@@ -305,6 +317,7 @@ fn backpressure_fails_whole_messages_never_partial() {
         last: false,
         samples: vec![0.0; 32],
         trace: None,
+        deadline_us: None,
     };
     match write_msg(&mut w, &big) {
         Err(WireError::Backpressure { capacity }) => assert_eq!(capacity, 64),
@@ -319,6 +332,183 @@ fn backpressure_fails_whole_messages_never_partial() {
     assert_eq!(reader.next_msg().expect("read"), Some(first));
     assert_eq!(reader.next_msg().expect("read"), Some(second));
     assert_eq!(reader.next_msg().expect("eof"), None);
+}
+
+#[test]
+fn survival_extensions_off_are_byte_identical_to_v1() {
+    // DESIGN.md §16's additive-encoding contract, checked at the byte
+    // level against a hand-rolled v1 frame: with heartbeats and
+    // deadlines off, a Frame encodes the exact v1 layout
+    // [len u32][tag=2][session u64][seq u64][last u8][n u32][f32·n],
+    // and each optional suffix appends after those bytes without
+    // disturbing one of them.
+    let m = Msg::Frame {
+        session: 0x0123_4567_89AB_CDEF,
+        seq: 42,
+        last: true,
+        samples: vec![1.5, -2.0],
+        trace: None,
+        deadline_us: None,
+    };
+    let mut got = Vec::new();
+    m.encode(&mut got).unwrap();
+
+    let mut v1 = vec![30u8, 0, 0, 0, 2];
+    v1.extend_from_slice(&0x0123_4567_89AB_CDEFu64.to_le_bytes());
+    v1.extend_from_slice(&42u64.to_le_bytes());
+    v1.push(1);
+    v1.extend_from_slice(&2u32.to_le_bytes());
+    v1.extend_from_slice(&1.5f32.to_le_bytes());
+    v1.extend_from_slice(&(-2.0f32).to_le_bytes());
+    assert_eq!(got, v1, "feature-off Frame is exactly the v1 encoding");
+
+    // Deadline on: the same v1 bytes, one 8-byte suffix, prefix +8.
+    let budgeted = Msg::Frame {
+        session: 0x0123_4567_89AB_CDEF,
+        seq: 42,
+        last: true,
+        samples: vec![1.5, -2.0],
+        trace: None,
+        deadline_us: Some(500),
+    };
+    let mut got_b = Vec::new();
+    budgeted.encode(&mut got_b).unwrap();
+    assert_eq!(got_b[..4], 38u32.to_le_bytes());
+    assert_eq!(got_b[4..34], v1[4..], "v1 bytes undisturbed by deadline");
+    assert_eq!(got_b[34..], 500u64.to_le_bytes());
+
+    // Trace + deadline: v1 bytes, 10-byte trace, then the deadline —
+    // suffix order is fixed so the region length is unambiguous.
+    let both = Msg::Frame {
+        session: 0x0123_4567_89AB_CDEF,
+        seq: 42,
+        last: true,
+        samples: vec![1.5, -2.0],
+        trace: Some(TraceCtx {
+            trace_id: 0x5EED,
+            kind: SpanKind::ALL[0] as u8,
+            parent: 3,
+        }),
+        deadline_us: Some(500),
+    };
+    let mut got_t = Vec::new();
+    both.encode(&mut got_t).unwrap();
+    assert_eq!(got_t[..4], 48u32.to_le_bytes());
+    assert_eq!(got_t[4..34], v1[4..], "v1 bytes undisturbed by both suffixes");
+    assert_eq!(got_t[34..42], 0x5EEDu64.to_le_bytes());
+    assert_eq!(got_t[42], SpanKind::ALL[0] as u8);
+    assert_eq!(got_t[43], 3);
+    assert_eq!(got_t[44..], 500u64.to_le_bytes());
+}
+
+#[test]
+fn ping_pong_are_fixed_nine_byte_frames_and_roundtrip() {
+    // Heartbeat probes (DESIGN.md §16) are the smallest frames on the
+    // wire: tag + echoed u64, nothing else. Pin the layout so a v1
+    // peer that never sends them also never has to parse them.
+    let ping = Msg::Ping { seq: 0xFEED };
+    let mut buf = Vec::new();
+    ping.encode(&mut buf).unwrap();
+    let mut want = vec![9u8, 0, 0, 0, 7];
+    want.extend_from_slice(&0xFEEDu64.to_le_bytes());
+    assert_eq!(buf, want);
+
+    let pong = Msg::Pong { seq: 0xFEED };
+    let mut buf = Vec::new();
+    pong.encode(&mut buf).unwrap();
+    assert_eq!(buf[..5], [9, 0, 0, 0, 8]);
+    assert_eq!(buf[5..], 0xFEEDu64.to_le_bytes());
+
+    // A heartbeat exchange crosses a real pipe intact between frames.
+    let frame = Msg::Frame {
+        session: 1,
+        seq: 0,
+        last: false,
+        samples: vec![0.25],
+        trace: None,
+        deadline_us: None,
+    };
+    let (r, mut w) = pipe(256, false);
+    write_msg(&mut w, &ping).expect("send ping");
+    write_msg(&mut w, &frame).expect("send frame");
+    write_msg(&mut w, &pong).expect("send pong");
+    w.shutdown();
+    let mut reader = FrameReader::new(r);
+    assert_eq!(reader.next_msg().expect("read"), Some(ping));
+    assert_eq!(reader.next_msg().expect("read"), Some(frame));
+    assert_eq!(reader.next_msg().expect("read"), Some(pong));
+    assert_eq!(reader.next_msg().expect("eof"), None);
+}
+
+#[test]
+fn reader_resynchronizes_across_interleaved_junk_frames() {
+    // A reader fed a random interleaving of well-formed messages
+    // (traced and untraced, with and without deadlines) and
+    // well-delimited junk frames must charge exactly one survivable
+    // typed error per junk frame and deliver every good message
+    // intact and in order — resynchronization is what lets a front
+    // keep a connection alive through one peer's bad frame.
+    enum Item {
+        Good(Msg),
+        UnknownTag(u8),
+        Skewed(u16),
+    }
+    prop::check("reader resync", 120, 0x2E57, |rng, _| {
+        let n = rng.below(10) + 2;
+        let mut bytes = Vec::new();
+        let mut script = Vec::new();
+        for _ in 0..n {
+            match rng.below(4) {
+                0 => {
+                    // Unknown-tag frame: correctly delimited, garbage
+                    // inside. 0xE0.. is far above any assigned tag.
+                    let tag = 0xE0 + rng.below(16) as u8;
+                    let pad = rng.below(8);
+                    bytes.extend_from_slice(&((1 + pad) as u32).to_le_bytes());
+                    bytes.push(tag);
+                    bytes.extend(std::iter::repeat(0u8).take(pad));
+                    script.push(Item::UnknownTag(tag));
+                }
+                1 => {
+                    let found = WIRE_VERSION + 1 + rng.below(100) as u16;
+                    let skewed = Msg::Hello {
+                        version: found,
+                        role: role::CLIENT,
+                        feat: 1,
+                        period: 1,
+                        warmup: 0,
+                    };
+                    skewed.encode(&mut bytes).map_err(|e| e.to_string())?;
+                    script.push(Item::Skewed(found));
+                }
+                _ => {
+                    let m = random_msg(rng);
+                    m.encode(&mut bytes).map_err(|e| e.to_string())?;
+                    script.push(Item::Good(m));
+                }
+            }
+        }
+        let (r, mut w) = pipe(bytes.len() + 8, false);
+        w.send(&bytes).map_err(|e| e.to_string())?;
+        w.shutdown();
+        let mut reader = FrameReader::new(r);
+        for (i, item) in script.iter().enumerate() {
+            match (item, reader.next_msg()) {
+                (Item::Good(want), Ok(Some(got))) => {
+                    if &got != want {
+                        return Err(format!("item {i}: {} corrupted", want.kind()));
+                    }
+                }
+                (Item::UnknownTag(t), Err(WireError::UnknownTag { tag })) if tag == *t => {}
+                (Item::Skewed(v), Err(WireError::VersionSkew { found })) if found == *v => {}
+                (_, other) => return Err(format!("item {i}: unexpected result {other:?}")),
+            }
+        }
+        match reader.next_msg() {
+            Ok(None) => Ok(()),
+            other => Err(format!("expected clean EOF after script, got {other:?}")),
+        }
+    });
 }
 
 #[test]
